@@ -1,0 +1,51 @@
+//! Quickstart: assemble the paper's Listing 1, run it on the conventional
+//! CPU and on the EMPA processor in all three modes, and print the
+//! resulting Table-1 row for N=4.
+//!
+//! ```sh
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use empa::empa::{EmpaConfig, EmpaProcessor};
+use empa::emu::Cpu;
+use empa::isa::assemble;
+use empa::metrics::{alpha_eff, s_over_k, speedup};
+use empa::workload::sumup::{self, Mode};
+
+fn main() -> anyhow::Result<()> {
+    // The paper's vector from Listing 1.
+    let values = sumup::paper_vector();
+    println!("vector: {values:?}  (sum = 0x{:x})\n", values.iter().sum::<i32>());
+
+    // 1. Conventional single-processor baseline (Listing 1 verbatim).
+    let (src, expected) = sumup::no_mode_program(&values);
+    let prog = assemble(&src)?;
+    let mut cpu = Cpu::with_image(&prog.image);
+    cpu.run(1_000_000);
+    println!("conventional CPU : sum={} clocks={}", cpu.regs.file[0], cpu.clock);
+    assert_eq!(cpu.regs.file[0], expected);
+    let t_base = cpu.clock;
+
+    // 2. The same workload on the EMPA processor, in each mode.
+    println!("\n{:>6} {:>8} {:>4} {:>9} {:>6} {:>7}", "mode", "clocks", "k", "speedup", "S/k", "α_eff");
+    for mode in [Mode::No, Mode::For, Mode::Sumup] {
+        let (src, _) = sumup::program(mode, &values);
+        let prog = assemble(&src)?;
+        let report = EmpaProcessor::new(&prog.image, &EmpaConfig::default()).run();
+        assert_eq!(report.fault, None);
+        assert_eq!(report.eax(), expected, "every mode computes the same sum");
+        let s = speedup(t_base, report.clocks);
+        let k = report.max_occupied as f64;
+        println!(
+            "{:>6} {:>8} {:>4} {:>9.2} {:>6.2} {:>7.2}",
+            mode.name(),
+            report.clocks,
+            report.max_occupied,
+            s,
+            s_over_k(k, s),
+            alpha_eff(k, s),
+        );
+    }
+    println!("\n(compare the paper's Table 1, N=4 rows: 142/64/36 clocks, k=1/2/5)");
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Regenerate every evaluation artifact of the paper (Table 1 and the
+//! data series behind Figs. 4–6) and write plot-ready JSON next to the
+//! console tables.
+//!
+//! ```sh
+//! cargo run --release --offline --example sumup_modes [out_dir]
+//! ```
+
+use empa::empa::EmpaConfig;
+use empa::metrics::{fig4_series, fig5_series, fig6_series, table, table1};
+use empa::util::json;
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::env::args().nth(1).unwrap_or_else(|| "target/figures".to_string());
+    std::fs::create_dir_all(&out_dir)?;
+    let cfg = EmpaConfig::default();
+
+    // ---- Table 1 -------------------------------------------------------
+    let rows = table1(&cfg);
+    println!("== Table 1 ==");
+    print!("{}", table::render_table1(&rows));
+    let json_rows: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            let mut w = json::JsonWriter::new();
+            w.object(&[
+                ("n", r.n.to_string()),
+                ("mode", json::str_val(r.mode.name())),
+                ("clocks", r.clocks.to_string()),
+                ("k", r.k.to_string()),
+                ("speedup", json::num(r.speedup)),
+                ("s_over_k", json::num(r.s_over_k)),
+                ("alpha_eff", json::num(r.alpha_eff)),
+            ]);
+            w.finish()
+        })
+        .collect();
+    let mut w = json::JsonWriter::new();
+    w.array(&json_rows);
+    std::fs::write(format!("{out_dir}/table1.json"), w.finish())?;
+
+    // ---- Figures 4–6 ----------------------------------------------------
+    let ns: Vec<usize> = (1..=30).chain([31, 35, 40, 50, 70, 100, 150, 220, 330, 500, 750, 1000]).collect();
+    let fig4 = fig4_series(&ns, &cfg);
+    let fig5 = fig5_series(&ns, &cfg);
+    let fig6 = fig6_series(&ns, &cfg);
+
+    println!("\n== Fig 4 (speedup) / Fig 5 (S/k), selected points ==");
+    println!("{:>6} {:>10} {:>10} {:>10} {:>10}", "N", "S(FOR)", "S(SUMUP)", "S/k(FOR)", "S/k(SUM)");
+    for (p4, p5) in fig4.iter().zip(&fig5) {
+        if [1, 2, 4, 6, 10, 20, 30, 100, 1000].contains(&p4.n) {
+            println!(
+                "{:>6} {:>10.3} {:>10.3} {:>10.3} {:>10.3}",
+                p4.n, p4.for_value, p4.sumup_value, p5.for_value, p5.sumup_value
+            );
+        }
+    }
+    println!("asymptotes: FOR → 30/11 = {:.3}, SUMUP → 30 (paper §6.1)", 30.0 / 11.0);
+
+    println!("\n== Fig 6 (SUMUP: S/k and α_eff), selected points ==");
+    for p in &fig6 {
+        if [1, 4, 10, 20, 30, 31, 50, 100, 1000].contains(&p.n) {
+            println!("N={:>5} k={:>3} S={:>7.3} S/k={:>6.3} α_eff={:>6.3}", p.n, p.k, p.speedup, p.s_over_k, p.alpha_eff);
+        }
+    }
+
+    for (name, pts) in [("fig4", &fig4), ("fig5", &fig5)] {
+        let rows: Vec<String> = pts
+            .iter()
+            .map(|p| {
+                let mut w = json::JsonWriter::new();
+                w.object(&[
+                    ("n", p.n.to_string()),
+                    ("for", json::num(p.for_value)),
+                    ("sumup", json::num(p.sumup_value)),
+                ]);
+                w.finish()
+            })
+            .collect();
+        let mut w = json::JsonWriter::new();
+        w.array(&rows);
+        std::fs::write(format!("{out_dir}/{name}.json"), w.finish())?;
+    }
+    let rows: Vec<String> = fig6
+        .iter()
+        .map(|p| {
+            let mut w = json::JsonWriter::new();
+            w.object(&[
+                ("n", p.n.to_string()),
+                ("k", p.k.to_string()),
+                ("speedup", json::num(p.speedup)),
+                ("s_over_k", json::num(p.s_over_k)),
+                ("alpha_eff", json::num(p.alpha_eff)),
+            ]);
+            w.finish()
+        })
+        .collect();
+    let mut w = json::JsonWriter::new();
+    w.array(&rows);
+    std::fs::write(format!("{out_dir}/fig6.json"), w.finish())?;
+
+    println!("\nwrote {out_dir}/{{table1,fig4,fig5,fig6}}.json");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+"""AOT lowering: jax → HLO text artifacts for the rust PJRT runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax≥0.5 protos with 64-bit instruction
+ids; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<entry>_b<B>_l<L>.hlo.txt`` per (entry, bucket) pair plus a
+``manifest.tsv`` (tab-separated: name, entry, B, L, arity, out_arity) the
+rust runtime reads to know what it loaded. Python runs ONCE, at build
+time; the rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a jitted function's StableHLO to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(entry: str, bucket: tuple[int, int]) -> str:
+    fn, args_of = model.ENTRIES[entry]
+    example_args = args_of(bucket)
+    lowered = jax.jit(fn).lower(*example_args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--entries",
+        default=",".join(model.ENTRIES),
+        help="comma-separated entry names (default: all)",
+    )
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest_rows = []
+    for entry in args.entries.split(","):
+        if entry not in model.ENTRIES:
+            raise SystemExit(f"unknown entry {entry!r}; have {sorted(model.ENTRIES)}")
+        fn, args_of = model.ENTRIES[entry]
+        for bucket in model.BUCKETS:
+            name = model.artifact_name(entry, bucket)
+            text = lower_entry(entry, bucket)
+            path = out_dir / f"{name}.hlo.txt"
+            path.write_text(text)
+            arity = len(args_of(bucket))
+            out_arity = _out_arity(fn, args_of(bucket))
+            manifest_rows.append((name, entry, bucket[0], bucket[1], arity, out_arity))
+            print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = out_dir / "manifest.tsv"
+    with manifest.open("w") as f:
+        f.write("# name\tentry\tB\tL\tarity\tout_arity\n")
+        for row in manifest_rows:
+            f.write("\t".join(str(x) for x in row) + "\n")
+    print(f"wrote {manifest} ({len(manifest_rows)} artifacts)")
+
+
+def _out_arity(fn, example_args) -> int:
+    """Number of outputs, from the abstract evaluation."""
+    shapes = jax.eval_shape(fn, *example_args)
+    return len(shapes) if isinstance(shapes, (tuple, list)) else 1
+
+
+if __name__ == "__main__":
+    main()

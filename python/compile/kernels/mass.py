@@ -1,0 +1,202 @@
+"""Layer-1 Pallas kernels: the EMPA mass-processing accelerator (§3.8).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's SUMUP
+mode — children streaming summands into the parent-side adder, one per
+clock — maps on TPU to a reduction pipelined through VMEM. Each grid step
+moves one ``(block_b, block_l)`` tile HBM→VMEM (the "child" fetching its
+element) and accumulates into a VMEM accumulator (the "parent adder"); the
+sequential grid dimension plays the supervisor's role of staggering the
+children. FOR mode — SV-driven loop with per-element child work — maps to
+an elementwise VPU kernel over tiles, the loop control being free (grid)
+exactly as FOR eliminates the control instructions.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and the AOT artifact must be loadable by the rust
+runtime. Structure (BlockSpecs, accumulator layout) is what we optimise;
+see DESIGN.md §Perf for the VMEM/MXU estimates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes. The lane dimension (last axis) matches the TPU VPU lane
+# count; the sublane dimension is kept small so a (8, 128) f32 tile is one
+# native VREG tile. VMEM footprint per grid step (see DESIGN.md §Perf):
+# in-tile + accumulator = (8*128 + 8) * 4 B ≈ 4.1 KiB, far below the
+# ~16 MiB VMEM budget, leaving room for double-buffering the HBM stream.
+BLOCK_B = 8
+BLOCK_L = 128
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad2d(x: jax.Array) -> jax.Array:
+    """Zero-pad a (B, L) array up to the tile grid.
+
+    Out-of-bounds block regions are undefined in interpret mode (NaN
+    poison), and zero is the identity of the sum/dot reductions, so the
+    kernels always see fully-defined tiles and the wrappers slice the
+    payload back out.
+    """
+    b, l = x.shape
+    pb = _ceil_div(max(b, 1), BLOCK_B) * BLOCK_B - b
+    pl_ = _ceil_div(max(l, 1), BLOCK_L) * BLOCK_L - l
+    if pb or pl_:
+        x = jnp.pad(x, ((0, pb), (0, pl_)))
+    return x
+
+
+# ----------------------------------------------------------------------
+# SUMUP: batched vector sum — out[b] = sum_l x[b, l]
+# ----------------------------------------------------------------------
+
+def _sumup_kernel(x_ref, o_ref):
+    """Parent-adder accumulation over the L (grid) dimension."""
+    l_idx = pl.program_id(1)
+
+    @pl.when(l_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # One tile of "children" delivers its summands; the adder consumes
+    # them in one vectorised step (the silicon version consumes 1/clock).
+    o_ref[...] += jnp.sum(x_ref[...], axis=1)
+
+
+def mass_sumup(x: jax.Array) -> jax.Array:
+    """Sum each row of a (B, L) batch: the SUMUP mode of §5.2."""
+    b, _ = x.shape
+    xp = _pad2d(x)
+    pb, pl_len = xp.shape
+    grid = (pb // BLOCK_B, pl_len // BLOCK_L)
+    out = pl.pallas_call(
+        _sumup_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK_B, BLOCK_L), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((BLOCK_B,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pb,), x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:b]
+
+
+# ----------------------------------------------------------------------
+# FOR: elementwise child work — out[b, l] = scale * x[b, l] + bias
+# ----------------------------------------------------------------------
+
+def _axpb_kernel(x_ref, s_ref, o_ref):
+    """The FOR-mode child body: pure payload, zero control overhead."""
+    scale = s_ref[0]
+    bias = s_ref[1]
+    o_ref[...] = x_ref[...] * scale + bias
+
+
+def mass_for(x: jax.Array, scale_bias: jax.Array) -> jax.Array:
+    """Apply ``scale*x + bias`` elementwise over a (B, L) batch (§5.1).
+
+    ``scale_bias`` is a (2,) array latched once — the paper's `ForChild`
+    latch contents, cloned to every child.
+    """
+    b, l = x.shape
+    xp = _pad2d(x)
+    pb, pl_len = xp.shape
+    grid = (pb // BLOCK_B, pl_len // BLOCK_L)
+    out = pl.pallas_call(
+        _axpb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, BLOCK_L), lambda i, j: (i, j)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, BLOCK_L), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pb, pl_len), x.dtype),
+        interpret=True,
+    )(xp, scale_bias)
+    return out[:b, :l]
+
+
+# ----------------------------------------------------------------------
+# DOT: per-row dot product — out[b] = sum_l a[b, l] * b[b, l]
+# ----------------------------------------------------------------------
+
+def _dot_kernel(a_ref, b_ref, o_ref):
+    """Mass operating mode over two operand streams (§3.7: summing
+    products "in frame of a machine instruction")."""
+    l_idx = pl.program_id(1)
+
+    @pl.when(l_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(a_ref[...] * b_ref[...], axis=1)
+
+
+def mass_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Row-wise dot product of two (B, L) batches."""
+    bb, _ = a.shape
+    ap = _pad2d(a)
+    bp = _pad2d(b)
+    pb, pl_len = ap.shape
+    grid = (pb // BLOCK_B, pl_len // BLOCK_L)
+    spec2d = pl.BlockSpec((BLOCK_B, BLOCK_L), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        _dot_kernel,
+        grid=grid,
+        in_specs=[spec2d, spec2d],
+        out_specs=pl.BlockSpec((BLOCK_B,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pb,), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:bb]
+
+
+# ----------------------------------------------------------------------
+# PREFIX: running partial sums — out[b, l] = sum_{l' <= l} x[b, l']
+# (the FOR-mode "partial sum cloned back each iteration" made visible)
+# ----------------------------------------------------------------------
+
+def mass_prefix(x: jax.Array) -> jax.Array:
+    """Row-wise prefix (cumulative) sums over a (B, L) batch.
+
+    A single-L-block Pallas kernel composed with a jnp carry across
+    blocks: the cross-block carry is exactly the FOR-mode partial sum the
+    parent clones into each next child (§5.1).
+    """
+    b, l = x.shape
+    xp = _pad2d(x)
+    pb, pl_len = xp.shape
+    num_blocks = pl_len // BLOCK_L
+
+    def one_block(x_blk: jax.Array) -> jax.Array:
+        return pl.pallas_call(
+            lambda x_ref, o_ref: o_ref.__setitem__(Ellipsis, jnp.cumsum(x_ref[...], axis=1)),
+            grid=(pb // BLOCK_B,),
+            in_specs=[pl.BlockSpec((BLOCK_B, BLOCK_L), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((BLOCK_B, BLOCK_L), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((pb, BLOCK_L), x.dtype),
+            interpret=True,
+        )(x_blk)
+
+    blocks = xp.reshape(pb, num_blocks, BLOCK_L).transpose(1, 0, 2)
+
+    def scan_step(carry, blk):
+        pref = one_block(blk) + carry[:, None]
+        return pref[:, -1], pref
+
+    _, prefs = jax.lax.scan(scan_step, jnp.zeros((pb,), x.dtype), blocks)
+    out = prefs.transpose(1, 0, 2).reshape(pb, pl_len)
+    return out[:b, :l]
+
+
+@functools.lru_cache(maxsize=None)
+def kernel_names() -> tuple[str, ...]:
+    """Names of the exported mass operations (must match the L2 model and
+    the rust runtime's artifact manifest)."""
+    return ("sumup", "mass_for", "dot", "prefix")

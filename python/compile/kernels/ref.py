@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the L1 mass-processing kernels.
+
+The correctness contract of the build: every Pallas kernel in
+``mass.py`` must match its oracle here to float tolerance across the
+shape/dtype sweep in ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sumup(x: jax.Array) -> jax.Array:
+    """out[b] = sum_l x[b, l]."""
+    return jnp.sum(x, axis=-1)
+
+
+def mass_for(x: jax.Array, scale_bias: jax.Array) -> jax.Array:
+    """out = scale * x + bias with scale_bias = [scale, bias]."""
+    return x * scale_bias[0] + scale_bias[1]
+
+
+def dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """out[b] = sum_l a[b, l] * b[b, l]."""
+    return jnp.sum(a * b, axis=-1)
+
+
+def prefix(x: jax.Array) -> jax.Array:
+    """out[b, l] = sum_{l' <= l} x[b, l']."""
+    return jnp.cumsum(x, axis=-1)

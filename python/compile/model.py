@@ -1,0 +1,92 @@
+"""Layer-2 accelerator model: the compute graph the rust fabric executes.
+
+Each entry point is a jax function over fixed *bucket* shapes (the fabric
+batcher pads requests into buckets), calling the L1 Pallas kernels so they
+lower into the same HLO module. ``aot.py`` lowers every (entry, bucket)
+pair to an HLO text artifact the rust runtime loads at startup.
+
+The fused ``sumup_stats`` entry is the fabric's workhorse: one pass
+producing per-row sum, mean and L2 norm (the norm reuses the dot kernel on
+x·x), demonstrating that mass operations compose inside a single lowered
+module — the accelerator-side analogue of nested QTs.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mass
+
+# (B, L) buckets the fabric batcher pads into (smallest-fit selection on
+# the rust side). §Perf: the 2-bucket grid padded a (32, 256) batch to
+# (32, 1024) — 4x wasted elements; the 4-bucket grid caps padding waste
+# at <2x for any request within range.
+BUCKETS: tuple[tuple[int, int], ...] = ((8, 256), (8, 1024), (32, 256), (32, 1024))
+
+
+def sumup(x: jax.Array) -> tuple[jax.Array]:
+    """Batched SUMUP (§5.2): per-row sums of a (B, L) batch."""
+    return (mass.mass_sumup(x),)
+
+
+def mass_for(x: jax.Array, scale_bias: jax.Array) -> tuple[jax.Array]:
+    """Batched FOR (§5.1): elementwise scale*x + bias."""
+    return (mass.mass_for(x, scale_bias),)
+
+
+def dot(a: jax.Array, b: jax.Array) -> tuple[jax.Array]:
+    """Batched row-wise dot product (§3.7 mass operating mode)."""
+    return (mass.mass_dot(a, b),)
+
+
+def prefix(x: jax.Array) -> tuple[jax.Array]:
+    """Batched prefix sums (FOR-mode partial sums, §5.1)."""
+    return (mass.mass_prefix(x),)
+
+
+def sumup_stats(x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused statistics: (sum, mean, l2norm) per row in one module."""
+    s = mass.mass_sumup(x)
+    n = x.shape[-1]
+    mean = s / jnp.asarray(n, x.dtype)
+    sq = mass.mass_dot(x, x)
+    return (s, mean, jnp.sqrt(sq))
+
+
+#: entry name -> (function, example-args builder over a bucket)
+ENTRIES: dict[str, tuple[Callable, Callable[[tuple[int, int]], tuple]] ] = {
+    "sumup": (
+        sumup,
+        lambda bl: (jax.ShapeDtypeStruct(bl, jnp.float32),),
+    ),
+    "mass_for": (
+        mass_for,
+        lambda bl: (
+            jax.ShapeDtypeStruct(bl, jnp.float32),
+            jax.ShapeDtypeStruct((2,), jnp.float32),
+        ),
+    ),
+    "dot": (
+        dot,
+        lambda bl: (
+            jax.ShapeDtypeStruct(bl, jnp.float32),
+            jax.ShapeDtypeStruct(bl, jnp.float32),
+        ),
+    ),
+    "prefix": (
+        prefix,
+        lambda bl: (jax.ShapeDtypeStruct(bl, jnp.float32),),
+    ),
+    "sumup_stats": (
+        sumup_stats,
+        lambda bl: (jax.ShapeDtypeStruct(bl, jnp.float32),),
+    ),
+}
+
+
+def artifact_name(entry: str, bucket: tuple[int, int]) -> str:
+    """Canonical artifact file stem for an (entry, bucket) pair."""
+    return f"{entry}_b{bucket[0]}_l{bucket[1]}"

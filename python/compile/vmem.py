@@ -1,0 +1,112 @@
+"""L1 performance model: VMEM footprint and roofline estimates per kernel.
+
+``interpret=True`` gives CPU-numpy timings only, so TPU performance is
+*estimated structurally* from the BlockSpecs (DESIGN.md §Perf): per grid
+step we know exactly how many bytes move HBM→VMEM and how many FLOPs the
+VPU/MXU performs, which places each kernel on the roofline.
+
+Usage::
+
+    python -m compile.vmem            # print the report
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .kernels.mass import BLOCK_B, BLOCK_L
+
+# TPU-v4-ish single-core budget (order-of-magnitude machine model; the
+# ratios, not the absolutes, matter for the §Perf targets).
+VMEM_BYTES = 16 * 2**20          # ~16 MiB VMEM
+HBM_BW = 1.2e12                  # ~1.2 TB/s
+VPU_FLOPS = 2.0e12               # ~2 TFLOP/s f32 vector
+MXU_FLOPS = 137.5e12             # bf16 matmul (unused by these kernels)
+DTYPE_BYTES = 4                  # f32
+
+
+@dataclass
+class KernelEstimate:
+    """Structural performance estimate for one kernel."""
+
+    name: str
+    #: VMEM resident bytes per grid step (tiles + accumulators).
+    vmem_bytes: int
+    #: bytes moved from HBM per element of the (B, L) input.
+    bytes_per_elem: float
+    #: FLOPs per element.
+    flops_per_elem: float
+
+    @property
+    def vmem_fraction(self) -> float:
+        return self.vmem_bytes / VMEM_BYTES
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """FLOPs per HBM byte."""
+        return self.flops_per_elem / self.bytes_per_elem
+
+    @property
+    def bound(self) -> str:
+        """Memory- or compute-bound on the model machine."""
+        ridge = VPU_FLOPS / HBM_BW  # FLOP/byte at the roofline ridge
+        return "memory" if self.arithmetic_intensity < ridge else "compute"
+
+    @property
+    def attainable_flops(self) -> float:
+        return min(VPU_FLOPS, self.arithmetic_intensity * HBM_BW)
+
+    @property
+    def efficiency_vs_peak(self) -> float:
+        """Attainable / VPU peak — the paper-style efficiency ratio."""
+        return self.attainable_flops / VPU_FLOPS
+
+    @property
+    def streaming_throughput_geps(self) -> float:
+        """Elements/second (x1e9) when running at the roofline."""
+        return HBM_BW / self.bytes_per_elem / 1e9
+
+
+def estimates() -> list[KernelEstimate]:
+    """Estimates for every L1 kernel, derived from their BlockSpecs."""
+    tile = BLOCK_B * BLOCK_L * DTYPE_BYTES
+    acc = BLOCK_B * DTYPE_BYTES
+    # double-buffered input stream: 2 tiles resident
+    return [
+        # sumup: read 1 elem, 1 add
+        KernelEstimate("sumup", 2 * tile + acc, DTYPE_BYTES, 1.0),
+        # mass_for: read 1, write 1, fma (2 flops)
+        KernelEstimate("mass_for", 2 * tile + 2 * tile, 2 * DTYPE_BYTES, 2.0),
+        # dot: read 2 elems, mul+add
+        KernelEstimate("dot", 2 * 2 * tile + acc, 2 * DTYPE_BYTES, 2.0),
+        # prefix: read 1, write 1, add (+carry, amortised)
+        KernelEstimate("prefix", 2 * tile + 2 * tile + acc, 2 * DTYPE_BYTES, 1.0),
+        # sumup_stats: read 1, sum + square-accumulate (3 flops)
+        KernelEstimate("sumup_stats", 2 * tile + 3 * acc, DTYPE_BYTES, 3.0),
+    ]
+
+
+def report() -> str:
+    lines = [
+        "L1 kernel roofline estimates (structural, from BlockSpecs; see DESIGN.md §Perf)",
+        f"machine model: VMEM {VMEM_BYTES >> 20} MiB, HBM {HBM_BW / 1e12:.1f} TB/s, VPU {VPU_FLOPS / 1e12:.1f} TF/s",
+        f"{'kernel':>12} {'VMEM/step':>10} {'%VMEM':>7} {'AI F/B':>7} {'bound':>8} {'GF/s att.':>10} {'eff':>6} {'Gelem/s':>8}",
+    ]
+    for e in estimates():
+        lines.append(
+            f"{e.name:>12} {e.vmem_bytes:>9}B {100 * e.vmem_fraction:>6.2f}% "
+            f"{e.arithmetic_intensity:>7.2f} {e.bound:>8} {e.attainable_flops / 1e9:>10.0f} "
+            f"{e.efficiency_vs_peak:>6.1%} {e.streaming_throughput_geps:>8.1f}"
+        )
+    lines.append(
+        "all kernels are HBM-streaming reductions → memory-bound by design; the"
+    )
+    lines.append(
+        "optimisation target is VMEM residency ≪ budget (double-buffer headroom),"
+    )
+    lines.append("matching the paper's SUMUP insight: 1 element/clock into the adder.")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

@@ -1,0 +1,127 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+This is the CORE correctness signal of the python side of the build —
+the AOT artifacts embed these kernels, and the rust runtime trusts them.
+A hand-rolled shape sweep stands in for hypothesis (offline image).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import mass, ref
+
+# Shape sweep: aligned, unaligned in B, unaligned in L, tiny, large.
+SHAPES = [
+    (1, 1),
+    (1, 128),
+    (3, 7),
+    (8, 128),
+    (8, 256),
+    (5, 130),
+    (9, 127),
+    (16, 384),
+    (32, 1024),
+    (2, 2048),
+]
+
+DTYPES = [jnp.float32, jnp.int32]
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    if dtype == jnp.int32:
+        return jnp.asarray(rng.integers(-1000, 1000, size=shape), dtype=dtype)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+def _tol(dtype, l):
+    if dtype == jnp.int32:
+        return dict(atol=0, rtol=0)
+    # fp32 reduction error grows ~sqrt(L)
+    return dict(atol=1e-4 * max(1.0, l) ** 0.5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sumup_matches_ref(shape, dtype):
+    x = _rand(shape, dtype, 1)
+    got = mass.mass_sumup(x)
+    want = ref.sumup(x)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype, shape[1]))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_mass_for_matches_ref(shape):
+    x = _rand(shape, jnp.float32, 2)
+    sb = jnp.asarray([1.5, -0.25], jnp.float32)
+    got = mass.mass_for(x, sb)
+    want = ref.mass_for(x, sb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dot_matches_ref(shape, dtype):
+    a = _rand(shape, dtype, 3)
+    b = _rand(shape, dtype, 4)
+    got = mass.mass_dot(a, b)
+    want = ref.dot(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype, shape[1]))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_prefix_matches_ref(shape):
+    x = _rand(shape, jnp.float32, 5)
+    got = mass.mass_prefix(x)
+    want = ref.prefix(x)
+    assert got.shape == x.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_sumup_zero_length_rows():
+    # degenerate but legal: B rows, L=0 → zeros. (The EMPA engine's N=0
+    # case on the rust side mirrors this.)
+    x = jnp.zeros((4, 0), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(ref.sumup(x)), np.zeros(4, np.float32))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_sumup_randomised_property(seed):
+    """Property: permuting elements within a row never changes the sum
+    (int32: exact, mirroring the EMPA SUMUP order-independence)."""
+    rng = np.random.default_rng(seed)
+    b = int(rng.integers(1, 12))
+    l = int(rng.integers(1, 400))
+    x = rng.integers(-10_000, 10_000, size=(b, l)).astype(np.int32)
+    perm = rng.permutation(l)
+    a = np.asarray(mass.mass_sumup(jnp.asarray(x)))
+    p = np.asarray(mass.mass_sumup(jnp.asarray(x[:, perm])))
+    np.testing.assert_array_equal(a, p)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_dot_linearity_property(seed):
+    """Property: dot(a, b+c) == dot(a, b) + dot(a, c) (int32 exact)."""
+    rng = np.random.default_rng(100 + seed)
+    b = int(rng.integers(1, 10))
+    l = int(rng.integers(1, 300))
+    a = jnp.asarray(rng.integers(-100, 100, size=(b, l)), jnp.int32)
+    u = rng.integers(-100, 100, size=(b, l)).astype(np.int32)
+    v = rng.integers(-100, 100, size=(b, l)).astype(np.int32)
+    lhs = np.asarray(mass.mass_dot(a, jnp.asarray(u + v)))
+    rhs = np.asarray(mass.mass_dot(a, jnp.asarray(u))) + np.asarray(mass.mass_dot(a, jnp.asarray(v)))
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+def test_prefix_last_column_equals_sumup():
+    """Cross-kernel invariant: prefix[:, -1] == sumup (the final partial
+    sum is the total — §5.2's 'the partial sum is never used, we are only
+    interested in the final sum')."""
+    x = _rand((6, 515), jnp.float32, 9)
+    pref = np.asarray(mass.mass_prefix(x))
+    s = np.asarray(mass.mass_sumup(x))
+    np.testing.assert_allclose(pref[:, -1], s, rtol=1e-4, atol=1e-3)

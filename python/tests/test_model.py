@@ -1,0 +1,72 @@
+"""L2 model: entry-point shapes, fused stats, and AOT lowering sanity."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_buckets_are_tile_aligned():
+    from compile.kernels.mass import BLOCK_B, BLOCK_L
+
+    for b, l in model.BUCKETS:
+        assert b % BLOCK_B == 0, f"bucket B={b} not a multiple of {BLOCK_B}"
+        assert l % BLOCK_L == 0, f"bucket L={l} not a multiple of {BLOCK_L}"
+
+
+@pytest.mark.parametrize("bucket", model.BUCKETS)
+def test_entry_output_shapes(bucket):
+    b, l = bucket
+    for name, (fn, args_of) in model.ENTRIES.items():
+        shapes = jax.eval_shape(fn, *args_of(bucket))
+        assert isinstance(shapes, tuple), name
+        for s in shapes:
+            assert s.shape in [(b,), (b, l)], f"{name}: unexpected {s.shape}"
+
+
+def test_sumup_stats_consistency():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
+    s, mean, norm = model.sumup_stats(x)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ref.sumup(x)), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(s) / 256.0, rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(norm), np.linalg.norm(np.asarray(x), axis=1), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("entry", sorted(model.ENTRIES))
+def test_aot_lowering_produces_hlo_text(entry):
+    text = aot.lower_entry(entry, model.BUCKETS[0])
+    assert "HloModule" in text, "not HLO text"
+    assert "ROOT" in text
+    # return_tuple=True: the module root is a tuple
+    assert "tuple(" in text or "(f32[" in text
+
+
+def test_artifact_names_are_unique_and_stable():
+    names = [model.artifact_name(e, b) for e in model.ENTRIES for b in model.BUCKETS]
+    assert len(names) == len(set(names))
+    assert model.artifact_name("sumup", (8, 256)) == "sumup_b8_l256"
+
+
+def test_aot_main_writes_artifacts(tmp_path):
+    import sys
+    from unittest import mock
+
+    argv = ["aot", "--out-dir", str(tmp_path), "--entries", "sumup"]
+    with mock.patch.object(sys, "argv", argv):
+        aot.main()
+    files = sorted(p.name for p in tmp_path.iterdir())
+    assert "manifest.tsv" in files
+    for b, l in model.BUCKETS:
+        assert f"sumup_b{b}_l{l}.hlo.txt" in files
+    manifest = (tmp_path / "manifest.tsv").read_text().strip().splitlines()
+    assert manifest[0].startswith("#")
+    rows = [line.split("\t") for line in manifest[1:]]
+    assert all(row[1] == "sumup" and row[4] == "1" and row[5] == "1" for row in rows)

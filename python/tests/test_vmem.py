@@ -1,0 +1,37 @@
+"""Structural performance-model sanity: the L1 kernels must remain
+VMEM-light, memory-bound streaming kernels — if a BlockSpec change makes a
+kernel blow the VMEM budget or flip to compute-bound, these tests flag it
+(the structural regression test for the §Perf deliverable)."""
+
+from __future__ import annotations
+
+from compile import vmem
+
+
+def test_every_kernel_is_estimated():
+    names = {e.name for e in vmem.estimates()}
+    assert names == {"sumup", "mass_for", "dot", "prefix", "sumup_stats"}
+
+
+def test_vmem_footprint_leaves_double_buffer_headroom():
+    for e in vmem.estimates():
+        assert e.vmem_fraction < 0.05, f"{e.name}: {e.vmem_fraction:.1%} of VMEM"
+
+
+def test_streaming_kernels_are_memory_bound():
+    for e in vmem.estimates():
+        assert e.bound == "memory", f"{e.name} flipped to compute-bound"
+        # attainable throughput is the bandwidth roofline
+        assert abs(e.attainable_flops - e.arithmetic_intensity * vmem.HBM_BW) < 1e-6
+
+
+def test_dot_moves_twice_the_bytes_of_sumup():
+    by = {e.name: e for e in vmem.estimates()}
+    assert by["dot"].bytes_per_elem == 2 * by["sumup"].bytes_per_elem
+    # so its element throughput is half
+    assert abs(by["dot"].streaming_throughput_geps - by["sumup"].streaming_throughput_geps / 2) < 1e-9
+
+
+def test_report_renders():
+    r = vmem.report()
+    assert "sumup_stats" in r and "memory" in r and "%" in r

@@ -1,0 +1,59 @@
+//! Bench E8 — §3.8 accelerator link: per-batch latency of the XLA/Pallas
+//! accelerator vs the native baseline across batch shapes and ops, and
+//! the offload crossover. Requires `make artifacts`.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, section};
+use empa::accel::{Accelerator, MassOp, MassRequest, NativeAccel, XlaAccel};
+use empa::runtime::Runtime;
+use empa::util::Rng;
+
+fn main() {
+    let Ok(rt) = Runtime::load_dir("artifacts") else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    let xla = XlaAccel::new(rt);
+    let native = NativeAccel;
+    let mut rng = Rng::seed_from_u64(8);
+
+    let mk_rows = |rng: &mut Rng, b: usize, l: usize| -> Vec<Vec<f32>> {
+        (0..b).map(|_| (0..l).map(|_| rng.range_f32(-1.0, 1.0)).collect()).collect()
+    };
+
+    section("E8: per-batch latency, sumup (ns)");
+    println!("{:>5} {:>6} {:>14} {:>14} {:>10}", "B", "L", "native", "xla", "ratio");
+    for &(b, l) in &[(1usize, 64usize), (8, 256), (32, 256), (8, 1024), (32, 1024)] {
+        let req = MassRequest::sumup(mk_rows(&mut rng, b, l));
+        let rn = bench(3, 30, || native.execute(&req).unwrap());
+        let rx = bench(3, 30, || xla.execute(&req).unwrap());
+        println!(
+            "{:>5} {:>6} {:>14.0} {:>14.0} {:>10.2}",
+            b, l, rn.median_ns, rx.median_ns, rx.median_ns / rn.median_ns
+        );
+    }
+
+    section("E8: per-batch latency by op (32x1024, ns)");
+    for op in [MassOp::Sumup, MassOp::Dot, MassOp::For, MassOp::Prefix, MassOp::SumupStats] {
+        let rows = mk_rows(&mut rng, 32, 1024);
+        let rows2 = mk_rows(&mut rng, 32, 1024);
+        let req = MassRequest { op, rows, rows2, scale_bias: [1.5, -0.5] };
+        let rn = bench(2, 15, || native.execute(&req).unwrap());
+        let rx = bench(2, 15, || xla.execute(&req).unwrap());
+        println!(
+            "{:>12}: native {:>12.0}  xla {:>12.0}  ratio {:>6.2}",
+            format!("{op:?}"),
+            rn.median_ns,
+            rx.median_ns,
+            rx.median_ns / rn.median_ns
+        );
+    }
+
+    section("E8: link overhead (fixed-cost floor of one accelerator call)");
+    let tiny = MassRequest::sumup(mk_rows(&mut rng, 1, 1));
+    let r = bench(3, 30, || xla.execute(&tiny).unwrap());
+    println!("1x1 sumup via xla: {r}");
+    println!("(everything below this cost belongs inline — the router's threshold, §2.4)");
+}

@@ -1,0 +1,49 @@
+//! Minimal benchmarking harness (criterion is not available offline):
+//! warms up, runs N timed iterations, reports median/mean/min ns per op.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub iters: u32,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {:>12.0} ns  mean {:>12.0} ns  min {:>12.0} ns  ({} iters)",
+            self.median_ns, self.mean_ns, self.min_ns, self.iters
+        )
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then `iters` timed runs.
+pub fn bench<T>(warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed().as_nanos() as f64
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        iters,
+        median_ns: samples[samples.len() / 2],
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        min_ns: samples[0],
+    }
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,56 @@
+//! Bench E2–E4 — Figures 4, 5 and 6: regenerate the series, check the
+//! paper's qualitative shape (saturations, crossings), and time the
+//! sweep.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, section};
+use empa::empa::EmpaConfig;
+use empa::metrics::{fig4_series, fig5_series, fig6_series};
+
+fn main() {
+    let cfg = EmpaConfig::default();
+    let ns: Vec<usize> = (1..=30).chain([31, 40, 60, 100, 200, 500, 1000]).collect();
+
+    section("E2: Fig 4 — speedup vs vector length");
+    let f4 = fig4_series(&ns, &cfg);
+    println!("{:>6} {:>10} {:>10}", "N", "FOR", "SUMUP");
+    for p in f4.iter().filter(|p| [1, 2, 4, 6, 10, 30, 100, 1000].contains(&p.n)) {
+        println!("{:>6} {:>10.3} {:>10.3}", p.n, p.for_value, p.sumup_value);
+    }
+    let last = f4.last().unwrap();
+    println!(
+        "saturation: FOR {:.3} (paper 30/11 = {:.3}), SUMUP {:.2} (paper 30)",
+        last.for_value,
+        30.0 / 11.0,
+        last.sumup_value
+    );
+
+    section("E3: Fig 5 — S/k vs vector length");
+    let f5 = fig5_series(&ns, &cfg);
+    println!("{:>6} {:>10} {:>10}", "N", "FOR", "SUMUP");
+    for p in f5.iter().filter(|p| [1, 2, 4, 6, 10, 30, 100, 1000].contains(&p.n)) {
+        println!("{:>6} {:>10.3} {:>10.3}", p.n, p.for_value, p.sumup_value);
+    }
+    println!("paper: FOR S/k exceeds 1 (clever cycle organisation); SUMUP stays below 1 for short vectors");
+
+    section("E4: Fig 6 — SUMUP S/k and α_eff; k saturates at 31");
+    let f6 = fig6_series(&ns, &cfg);
+    println!("{:>6} {:>4} {:>9} {:>8} {:>9}", "N", "k", "S", "S/k", "α_eff");
+    for p in f6.iter().filter(|p| [1, 4, 10, 30, 31, 100, 1000].contains(&p.n)) {
+        println!("{:>6} {:>4} {:>9.3} {:>8.3} {:>9.3}", p.n, p.k, p.speedup, p.s_over_k, p.alpha_eff);
+    }
+    let turn = f6.iter().position(|p| p.k == 31).unwrap();
+    println!(
+        "S/k turns back at N={} (k=31) and α_eff→{:.3} (paper: both saturate towards 1, α much faster)",
+        f6[turn].n,
+        f6.last().unwrap().alpha_eff
+    );
+
+    section("sweep timing (all three figures, N up to 1000)");
+    let r = bench(1, 5, || {
+        (fig4_series(&ns, &cfg).len(), fig6_series(&ns, &cfg).len())
+    });
+    println!("full figure sweep: {r}");
+}

@@ -1,0 +1,49 @@
+//! Bench E7 — §4.1.4 memory-subsystem ablation: SUMUP's concurrent
+//! children vs the number of independent memory ports. The paper argues
+//! EMPA "can make good use of multiple memory access devices"; with one
+//! shared bus the children serialise, with enough ports the Table-1
+//! timing is recovered.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, section};
+use empa::empa::EmpaConfig;
+use empa::mem::MemConfig;
+use empa::metrics::table::run_sumup;
+use empa::workload::sumup::Mode;
+
+fn main() {
+    section("E7: SUMUP vs memory ports (N=64)");
+    let ideal = run_sumup(Mode::Sumup, 64, &EmpaConfig { mem: MemConfig::ideal(), ..Default::default() });
+    println!(
+        "{:>8} {:>8} {:>10} {:>12} {:>10}",
+        "ports", "clocks", "slowdown", "stalls", "stall clks"
+    );
+    for ports in [1usize, 2, 3, 4, 8, 16] {
+        let cfg = EmpaConfig { mem: MemConfig::buses(ports), ..Default::default() };
+        let r = run_sumup(Mode::Sumup, 64, &cfg);
+        println!(
+            "{:>8} {:>8} {:>9.2}x {:>12} {:>10}",
+            ports,
+            r.clocks,
+            r.clocks as f64 / ideal.clocks as f64,
+            r.bus.stalled_accesses,
+            r.bus.stall_cycles
+        );
+    }
+    println!("{:>8} {:>8} {:>9.2}x", "ideal", ideal.clocks, 1.0);
+    println!("(SUMUP staggers one child/clock; each read holds a port 4 clocks → 4 ports suffice)");
+
+    section("E7b: NO mode is insensitive to ports (single stream)");
+    for ports in [1usize, 4] {
+        let cfg = EmpaConfig { mem: MemConfig::buses(ports), ..Default::default() };
+        let r = run_sumup(Mode::No, 64, &cfg);
+        println!("ports={ports}: {} clocks, {} stall cycles", r.clocks, r.bus.stall_cycles);
+    }
+
+    section("contention-model throughput");
+    let cfg = EmpaConfig { mem: MemConfig::single_bus(), ..Default::default() };
+    let r = bench(2, 15, || run_sumup(Mode::Sumup, 256, &cfg).clocks);
+    println!("SUMUP N=256 on 1 port: {r}");
+}

@@ -1,0 +1,46 @@
+//! Bench E5/E6 — the OS-interaction claims of §3.6 and §5.3: interrupt
+//! latency gain ("several hundreds") and kernel-service gain (~30 on the
+//! service path, more once the context change is eliminated).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, section};
+use empa::os::services::op_stream;
+use empa::os::{InterruptModel, IrqCosts, ServiceCosts, ServiceModel};
+
+fn main() {
+    section("E5: interrupt servicing (§3.6)");
+    let mut m = InterruptModel::new(IrqCosts::default(), 1);
+    let conv = m.conventional(100_000);
+    let empa = m.empa(100_000);
+    println!("{:>14} {:>10} {:>8} {:>8} {:>8}", "policy", "mean", "p50", "p99", "worst");
+    println!("{:>14} {:>10.1} {:>8} {:>8} {:>8}", "conventional", conv.mean, conv.p50, conv.p99, conv.worst);
+    println!("{:>14} {:>10.1} {:>8} {:>8} {:>8}", "EMPA", empa.mean, empa.p50, empa.p99, empa.worst);
+    println!("gain {:.0}x (paper: several hundreds); EMPA jitter {} clocks", conv.mean / empa.mean, empa.worst - empa.p50);
+
+    section("E6: semaphore service (§5.3)");
+    let model = ServiceModel::new(ServiceCosts::default());
+    let ops = op_stream(100_000);
+    let (conv_s, _) = model.conventional(&ops);
+    let (soft_s, _) = model.soft(&ops);
+    let (empa_s, _) = model.empa(&ops);
+    println!("{:>14} {:>10}", "policy", "clk/op");
+    for (name, s) in [("conventional", conv_s), ("soft [20]", soft_s), ("EMPA", empa_s)] {
+        println!("{:>14} {:>10.1}", name, s.per_op);
+    }
+    let c = ServiceCosts::default();
+    let path_gain = (c.trap + c.os_service_path + c.payload_op) as f64
+        / (c.trap + c.soft_service_path + c.payload_op) as f64;
+    let (soft_gain, empa_gain) = model.gains(&ops);
+    println!("path gain {path_gain:.1}x (paper ~30); full gains: soft {soft_gain:.1}x, EMPA {empa_gain:.1}x");
+
+    section("model-evaluation throughput");
+    let r = bench(1, 10, || {
+        let mut m = InterruptModel::new(IrqCosts::default(), 2);
+        m.conventional(100_000).mean
+    });
+    println!("100k conventional interrupts: {r}");
+    let r = bench(1, 10, || model.conventional(&ops).0.total_cycles);
+    println!("100k semaphore ops:           {r}");
+}

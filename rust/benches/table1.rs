@@ -1,0 +1,43 @@
+//! Bench E1 — Table 1: regenerates the paper's table from the simulator
+//! and measures the simulator's own performance (simulated clocks per
+//! wall-second), the quantity the §Perf pass optimises.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{bench, section};
+use empa::empa::EmpaConfig;
+use empa::isa::assemble;
+use empa::metrics::{table, table1};
+use empa::workload::sumup::{self, Mode};
+
+fn main() {
+    section("E1: Table 1 (regenerated — compare against the paper)");
+    let rows = table1(&EmpaConfig::default());
+    print!("{}", table::render_table1(&rows));
+    println!("paper:  NO 52/82/142/202, FOR 31/42/64/86 (k=2), SUMUP 33/34/36/38 (k=N+1)");
+
+    section("simulator throughput (per full sumup run)");
+    let cfg = EmpaConfig::default();
+    for (mode, n) in [(Mode::No, 6usize), (Mode::For, 6), (Mode::Sumup, 6), (Mode::Sumup, 1000)] {
+        let values = sumup::synth_vector(n, 1);
+        let (src, _) = sumup::program(mode, &values);
+        let prog = assemble(&src).unwrap();
+        let clocks = empa::empa::EmpaProcessor::new(&prog.image, &cfg).run().clocks;
+        let r = bench(3, 25, || empa::empa::EmpaProcessor::new(&prog.image, &cfg).run().clocks);
+        let mclk_per_s = clocks as f64 / (r.median_ns / 1e9) / 1e6;
+        println!(
+            "{:>6} N={:<5} {:>8} simclocks   {}   → {:>8.2} Msimclock/s",
+            mode.name(),
+            n,
+            clocks,
+            r,
+            mclk_per_s
+        );
+    }
+
+    section("assembler throughput");
+    let (src, _) = sumup::no_mode_program(&sumup::synth_vector(100, 2));
+    let r = bench(3, 50, || assemble(&src).unwrap().image.len());
+    println!("assemble 100-element sumup: {r}");
+}

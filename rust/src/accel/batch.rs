@@ -1,0 +1,158 @@
+//! Dynamic batcher: groups per-request vectors into bucket-shaped
+//! batches for the accelerator, bounded by batch size and a deadline
+//! window — the serving-side analogue of the SV collecting child QTs for
+//! mass processing before triggering the engine.
+
+use std::time::{Duration, Instant};
+
+/// Batcher policy.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Flush when this many rows are pending (use the largest bucket B).
+    pub max_rows: usize,
+    /// Flush when the oldest pending row has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_rows: 32, max_wait: Duration::from_micros(500) }
+    }
+}
+
+/// A pending row with its owner request id.
+#[derive(Debug, Clone)]
+pub struct PendingRow<T> {
+    pub tag: T,
+    pub row: Vec<f32>,
+    pub row2: Option<Vec<f32>>,
+    pub enqueued: Instant,
+}
+
+/// Rows grouped per operation, flushed as one accelerator call.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    pending: Vec<PendingRow<T>>,
+    /// Completed flush statistics.
+    pub flushes: u64,
+    pub flushed_rows: u64,
+    pub deadline_flushes: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher { cfg, pending: Vec::new(), flushes: 0, flushed_rows: 0, deadline_flushes: 0 }
+    }
+
+    /// Queue a row; returns a full batch when the size trigger fires.
+    pub fn push(&mut self, tag: T, row: Vec<f32>, row2: Option<Vec<f32>>, now: Instant) -> Option<Vec<PendingRow<T>>> {
+        self.pending.push(PendingRow { tag, row, row2, enqueued: now });
+        if self.pending.len() >= self.cfg.max_rows {
+            self.flushes += 1;
+            self.flushed_rows += self.pending.len() as u64;
+            Some(std::mem::take(&mut self.pending))
+        } else {
+            None
+        }
+    }
+
+    /// Deadline check: flush when the oldest row exceeded `max_wait`.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<PendingRow<T>>> {
+        let oldest = self.pending.first()?;
+        if now.duration_since(oldest.enqueued) >= self.cfg.max_wait {
+            self.flushes += 1;
+            self.deadline_flushes += 1;
+            self.flushed_rows += self.pending.len() as u64;
+            Some(std::mem::take(&mut self.pending))
+        } else {
+            None
+        }
+    }
+
+    /// Force out whatever is pending (shutdown path).
+    pub fn drain(&mut self) -> Option<Vec<PendingRow<T>>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            self.flushes += 1;
+            self.flushed_rows += self.pending.len() as u64;
+            Some(std::mem::take(&mut self.pending))
+        }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Next deadline, for scheduling the poll.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.pending.first().map(|p| p.enqueued + self.cfg.max_wait)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(rows: usize, wait_us: u64) -> BatcherConfig {
+        BatcherConfig { max_rows: rows, max_wait: Duration::from_micros(wait_us) }
+    }
+
+    #[test]
+    fn size_trigger_flushes_exactly_at_max() {
+        let mut b: Batcher<u64> = Batcher::new(cfg(3, 1_000_000));
+        let t = Instant::now();
+        assert!(b.push(1, vec![1.0], None, t).is_none());
+        assert!(b.push(2, vec![2.0], None, t).is_none());
+        let batch = b.push(3, vec![3.0], None, t).expect("flush at 3");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.flushes, 1);
+        assert_eq!(b.deadline_flushes, 0);
+    }
+
+    #[test]
+    fn deadline_trigger() {
+        let mut b: Batcher<u64> = Batcher::new(cfg(100, 0));
+        let t = Instant::now();
+        assert!(b.push(1, vec![1.0], None, t).is_none());
+        let batch = b.poll(t + Duration::from_micros(1)).expect("deadline flush");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(b.deadline_flushes, 1);
+    }
+
+    #[test]
+    fn poll_before_deadline_keeps_pending() {
+        let mut b: Batcher<u64> = Batcher::new(cfg(100, 1_000_000));
+        let t = Instant::now();
+        b.push(1, vec![1.0], None, t);
+        assert!(b.poll(t).is_none());
+        assert_eq!(b.pending_len(), 1);
+        assert!(b.next_deadline().is_some());
+    }
+
+    #[test]
+    fn drain_flushes_remainder() {
+        let mut b: Batcher<u64> = Batcher::new(cfg(100, 1_000_000));
+        assert!(b.drain().is_none());
+        b.push(1, vec![1.0], None, Instant::now());
+        b.push(2, vec![2.0], Some(vec![3.0]), Instant::now());
+        let batch = b.drain().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(batch[1].row2.is_some());
+        assert_eq!(b.flushed_rows, 2);
+    }
+
+    #[test]
+    fn order_preserved_within_batch() {
+        let mut b: Batcher<u64> = Batcher::new(cfg(4, 1_000_000));
+        let t = Instant::now();
+        for i in 0..3 {
+            b.push(i, vec![i as f32], None, t);
+        }
+        let batch = b.push(3, vec![3.0], None, t).unwrap();
+        let tags: Vec<u64> = batch.iter().map(|p| p.tag).collect();
+        assert_eq!(tags, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,328 @@
+//! Accelerator link (§3.8).
+//!
+//! "For the SV a core is represented as a source and destination of
+//! signals and data ... EMPA provides an extremely simple interface for
+//! linking any kind of external accelerator." The [`Accelerator`] trait is
+//! exactly that interface: a mass operation request goes in (data +
+//! operation signal), results come back; the SV never sees the
+//! accelerator's internals.
+//!
+//! Two implementations:
+//! - [`NativeAccel`] — straightforward rust loops (the "conventional
+//!   core" doing the mass op; baseline for the E8 crossover bench);
+//! - [`XlaAccel`] — the L2/L1 JAX+Pallas graph via the PJRT [`Runtime`]
+//!   (the "special accelerator" the paper envisions linking).
+
+use crate::runtime::{Runtime, Tensor};
+use anyhow::{anyhow, Result};
+
+pub mod batch;
+
+pub use batch::{Batcher, BatcherConfig};
+
+/// A mass operation the fabric can route to an accelerator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MassOp {
+    /// Per-row sum (§5.2 SUMUP).
+    Sumup,
+    /// Elementwise scale*x + bias (§5.1 FOR).
+    For,
+    /// Per-row dot product (§3.7 mass operating mode).
+    Dot,
+    /// Per-row prefix sums.
+    Prefix,
+    /// Fused per-row (sum, mean, l2norm).
+    SumupStats,
+}
+
+impl MassOp {
+    /// L2 entry-point name (must match `python/compile/model.py`).
+    pub fn entry(self) -> &'static str {
+        match self {
+            MassOp::Sumup => "sumup",
+            MassOp::For => "mass_for",
+            MassOp::Dot => "dot",
+            MassOp::Prefix => "prefix",
+            MassOp::SumupStats => "sumup_stats",
+        }
+    }
+
+    /// Number of (B, L) operands.
+    pub fn arity(self) -> usize {
+        match self {
+            MassOp::Dot => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// One mass-operation request: `rows` vectors of equal length, plus the
+/// scalar latch values (FOR's scale/bias) where the op needs them.
+#[derive(Debug, Clone)]
+pub struct MassRequest {
+    pub op: MassOp,
+    /// First operand rows (each of length `l`).
+    pub rows: Vec<Vec<f32>>,
+    /// Second operand rows (Dot only).
+    pub rows2: Vec<Vec<f32>>,
+    /// FOR: [scale, bias] latch.
+    pub scale_bias: [f32; 2],
+}
+
+impl MassRequest {
+    pub fn sumup(rows: Vec<Vec<f32>>) -> Self {
+        MassRequest { op: MassOp::Sumup, rows, rows2: Vec::new(), scale_bias: [0.0; 2] }
+    }
+
+    pub fn dot(rows: Vec<Vec<f32>>, rows2: Vec<Vec<f32>>) -> Self {
+        MassRequest { op: MassOp::Dot, rows, rows2, scale_bias: [0.0; 2] }
+    }
+
+    pub fn for_op(rows: Vec<Vec<f32>>, scale: f32, bias: f32) -> Self {
+        MassRequest { op: MassOp::For, rows, rows2: Vec::new(), scale_bias: [scale, bias] }
+    }
+}
+
+/// Per-row results: scalar ops give one value per row; FOR/Prefix give a
+/// full row back; SumupStats gives three scalars per row.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MassResult {
+    Scalars(Vec<f32>),
+    Rows(Vec<Vec<f32>>),
+    Stats { sum: Vec<f32>, mean: Vec<f32>, l2: Vec<f32> },
+}
+
+/// §3.8's interface: "any circuit, being able to handle data and signals
+/// shown in Fig. 2, can be linked to an EMPA processor with ease."
+///
+/// Implementations need not be `Send`: the fabric constructs the
+/// accelerator *on* its dedicated worker thread (PJRT executables hold
+/// thread-affine raw handles), mirroring the paper's point that the SV
+/// sees only signals and data — never the accelerator's internals.
+pub trait Accelerator {
+    /// Human-readable identity (metrics, logs).
+    fn name(&self) -> &str;
+    /// Execute one mass request synchronously.
+    fn execute(&self, req: &MassRequest) -> Result<MassResult>;
+}
+
+/// Factory handed to the fabric; invoked once on the accel worker thread.
+pub type AccelFactory = Box<dyn FnOnce() -> Result<Box<dyn Accelerator>> + Send>;
+
+// ----------------------------------------------------------------------
+// Native baseline
+// ----------------------------------------------------------------------
+
+/// Plain-rust mass ops: what a conventional core would do, and the
+/// numerical oracle for [`XlaAccel`] parity tests.
+pub struct NativeAccel;
+
+impl Accelerator for NativeAccel {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn execute(&self, req: &MassRequest) -> Result<MassResult> {
+        match req.op {
+            MassOp::Sumup => Ok(MassResult::Scalars(
+                req.rows.iter().map(|r| r.iter().sum()).collect(),
+            )),
+            MassOp::Dot => {
+                if req.rows.len() != req.rows2.len() {
+                    return Err(anyhow!("dot: operand row counts differ"));
+                }
+                Ok(MassResult::Scalars(
+                    req.rows
+                        .iter()
+                        .zip(&req.rows2)
+                        .map(|(a, b)| a.iter().zip(b).map(|(x, y)| x * y).sum())
+                        .collect(),
+                ))
+            }
+            MassOp::For => {
+                let [s, c] = req.scale_bias;
+                Ok(MassResult::Rows(
+                    req.rows.iter().map(|r| r.iter().map(|x| x * s + c).collect()).collect(),
+                ))
+            }
+            MassOp::Prefix => Ok(MassResult::Rows(
+                req.rows
+                    .iter()
+                    .map(|r| {
+                        let mut acc = 0.0f32;
+                        r.iter()
+                            .map(|x| {
+                                acc += x;
+                                acc
+                            })
+                            .collect()
+                    })
+                    .collect(),
+            )),
+            MassOp::SumupStats => {
+                let sum: Vec<f32> = req.rows.iter().map(|r| r.iter().sum()).collect();
+                let mean: Vec<f32> =
+                    req.rows.iter().zip(&sum).map(|(r, s)| s / r.len().max(1) as f32).collect();
+                let l2: Vec<f32> = req
+                    .rows
+                    .iter()
+                    .map(|r| r.iter().map(|x| x * x).sum::<f32>().sqrt())
+                    .collect();
+                Ok(MassResult::Stats { sum, mean, l2 })
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// XLA-backed accelerator
+// ----------------------------------------------------------------------
+
+/// The special accelerator of §3.8: the AOT-compiled JAX/Pallas graph.
+///
+/// Requests are padded into the smallest bucket that fits (zero padding —
+/// the identity of the reductions; FOR/Prefix results are sliced back).
+pub struct XlaAccel {
+    rt: Runtime,
+}
+
+impl XlaAccel {
+    pub fn new(rt: Runtime) -> Self {
+        XlaAccel { rt }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Pick the smallest bucket fitting (rows, len); errors when the
+    /// request exceeds every bucket (the batcher must split first).
+    fn pick_bucket(&self, entry: &str, rows: usize, len: usize) -> Result<(usize, usize)> {
+        self.rt
+            .buckets(entry)
+            .into_iter()
+            .find(|&(b, l)| rows <= b && len <= l)
+            .ok_or_else(|| anyhow!("{entry}: ({rows}, {len}) exceeds all buckets"))
+    }
+
+    fn pack(rows: &[Vec<f32>], b: usize, l: usize) -> Tensor {
+        let mut data = vec![0.0f32; b * l];
+        for (i, r) in rows.iter().enumerate() {
+            data[i * l..i * l + r.len()].copy_from_slice(r);
+        }
+        Tensor::matrix(b, l, data)
+    }
+}
+
+impl Accelerator for XlaAccel {
+    fn name(&self) -> &str {
+        "xla"
+    }
+
+    fn execute(&self, req: &MassRequest) -> Result<MassResult> {
+        let rows = req.rows.len();
+        let len = req.rows.iter().map(|r| r.len()).max().unwrap_or(0);
+        let (b, l) = self.pick_bucket(req.op.entry(), rows, len)?;
+        let name = self
+            .rt
+            .find(req.op.entry(), b, l)
+            .ok_or_else(|| anyhow!("missing artifact {} b{b} l{l}", req.op.entry()))?
+            .to_string();
+        let x = Self::pack(&req.rows, b, l);
+        let outs = match req.op {
+            MassOp::Dot => {
+                let y = Self::pack(&req.rows2, b, l);
+                self.rt.execute(&name, &[x, y])?
+            }
+            MassOp::For => {
+                let sb = Tensor::vector(vec![req.scale_bias[0], req.scale_bias[1]]);
+                self.rt.execute(&name, &[x, sb])?
+            }
+            _ => self.rt.execute(&name, &[x])?,
+        };
+        match req.op {
+            MassOp::Sumup | MassOp::Dot => Ok(MassResult::Scalars(outs[0].data[..rows].to_vec())),
+            MassOp::For | MassOp::Prefix => Ok(MassResult::Rows(
+                req.rows
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| outs[0].data[i * l..i * l + r.len()].to_vec())
+                    .collect(),
+            )),
+            MassOp::SumupStats => {
+                // mean over the padded bucket length must be rescaled to
+                // the true row length (padding contributed zeros).
+                let sum = outs[0].data[..rows].to_vec();
+                let mean = req
+                    .rows
+                    .iter()
+                    .zip(&sum)
+                    .map(|(r, s)| s / r.len().max(1) as f32)
+                    .collect();
+                let l2 = outs[2].data[..rows].to_vec();
+                Ok(MassResult::Stats { sum, mean, l2 })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_sumup_and_dot() {
+        let a = NativeAccel;
+        let r = a.execute(&MassRequest::sumup(vec![vec![1.0, 2.0, 3.0], vec![4.0]])).unwrap();
+        assert_eq!(r, MassResult::Scalars(vec![6.0, 4.0]));
+        let r = a
+            .execute(&MassRequest::dot(vec![vec![1.0, 2.0]], vec![vec![3.0, 4.0]]))
+            .unwrap();
+        assert_eq!(r, MassResult::Scalars(vec![11.0]));
+    }
+
+    #[test]
+    fn native_for_and_prefix() {
+        let a = NativeAccel;
+        let r = a.execute(&MassRequest::for_op(vec![vec![1.0, 2.0]], 2.0, 1.0)).unwrap();
+        assert_eq!(r, MassResult::Rows(vec![vec![3.0, 5.0]]));
+        let req = MassRequest {
+            op: MassOp::Prefix,
+            rows: vec![vec![1.0, 2.0, 3.0]],
+            rows2: vec![],
+            scale_bias: [0.0; 2],
+        };
+        assert_eq!(a.execute(&req).unwrap(), MassResult::Rows(vec![vec![1.0, 3.0, 6.0]]));
+    }
+
+    #[test]
+    fn native_stats() {
+        let a = NativeAccel;
+        let req = MassRequest {
+            op: MassOp::SumupStats,
+            rows: vec![vec![3.0, 4.0]],
+            rows2: vec![],
+            scale_bias: [0.0; 2],
+        };
+        let MassResult::Stats { sum, mean, l2 } = a.execute(&req).unwrap() else {
+            panic!("wrong variant")
+        };
+        assert_eq!(sum, vec![7.0]);
+        assert_eq!(mean, vec![3.5]);
+        assert!((l2[0] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dot_mismatched_rows_is_error() {
+        let a = NativeAccel;
+        assert!(a.execute(&MassRequest::dot(vec![vec![1.0]], vec![])).is_err());
+    }
+
+    #[test]
+    fn op_entry_names_match_model() {
+        assert_eq!(MassOp::Sumup.entry(), "sumup");
+        assert_eq!(MassOp::For.entry(), "mass_for");
+        assert_eq!(MassOp::Dot.arity(), 2);
+        assert_eq!(MassOp::Sumup.arity(), 1);
+    }
+}

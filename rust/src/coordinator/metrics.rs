@@ -1,0 +1,68 @@
+//! Fabric-level metrics (lock-free counters + latency summaries).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counters shared across the fabric threads.
+#[derive(Debug, Default)]
+pub struct FabricMetrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    pub routed_sim: AtomicU64,
+    pub routed_inline: AtomicU64,
+    pub routed_accel: AtomicU64,
+    pub accel_batches: AtomicU64,
+    pub accel_rows: AtomicU64,
+    pub deadline_flushes: AtomicU64,
+}
+
+impl FabricMetrics {
+    /// Mean rows per accelerator batch (batching effectiveness).
+    pub fn mean_batch_rows(&self) -> f64 {
+        let b = self.accel_batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.accel_rows.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Render a one-line summary.
+    pub fn render(&self) -> String {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        format!(
+            "submitted={} completed={} errors={} | sim={} inline={} accel={} | batches={} rows={} (mean {:.1}/batch, {} deadline)",
+            g(&self.submitted),
+            g(&self.completed),
+            g(&self.errors),
+            g(&self.routed_sim),
+            g(&self.routed_inline),
+            g(&self.routed_accel),
+            g(&self.accel_batches),
+            g(&self.accel_rows),
+            self.mean_batch_rows(),
+            g(&self.deadline_flushes),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_batch_rows_handles_zero() {
+        let m = FabricMetrics::default();
+        assert_eq!(m.mean_batch_rows(), 0.0);
+        m.accel_batches.store(2, Ordering::Relaxed);
+        m.accel_rows.store(10, Ordering::Relaxed);
+        assert_eq!(m.mean_batch_rows(), 5.0);
+    }
+
+    #[test]
+    fn render_contains_counters() {
+        let m = FabricMetrics::default();
+        m.submitted.store(7, Ordering::Relaxed);
+        assert!(m.render().contains("submitted=7"));
+    }
+}

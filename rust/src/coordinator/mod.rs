@@ -1,0 +1,498 @@
+//! The EMPA fabric coordinator — the paper's supervisor idea lifted to a
+//! service (L3): a leader routes incoming jobs either to a pool of
+//! simulated EMPA processors (scalar/control QTs) or — through the §3.8
+//! accelerator link — to the XLA mass-processing accelerator, with
+//! dynamic batching into bucket-shaped tiles and bounded-queue
+//! backpressure.
+//!
+//! Topology (all std threads; the binary is self-contained, Python never
+//! runs here):
+//!
+//! ```text
+//!  clients ── submit ──► router (leader)
+//!                          │ RunProgram            │ Mass*
+//!                          ▼                       ▼
+//!                 sim worker pool          per-op Batcher ──► accel worker
+//!                 (EmpaProcessor)          (size/deadline)    (dyn Accelerator)
+//! ```
+
+pub mod metrics;
+pub mod router;
+
+pub use metrics::FabricMetrics;
+pub use router::{RoutePolicy, Target};
+
+use crate::accel::{AccelFactory, Batcher, BatcherConfig, MassOp, MassRequest, MassResult};
+use crate::empa::{EmpaConfig, EmpaProcessor};
+use crate::isa::assemble;
+use crate::workload::{Request, RequestKind};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Fabric configuration.
+#[derive(Debug, Clone)]
+pub struct FabricConfig {
+    /// Simulation worker threads.
+    pub sim_workers: usize,
+    /// EMPA processor configuration used by the sim workers.
+    pub empa: EmpaConfig,
+    /// Dynamic batching policy for mass ops.
+    pub batcher: BatcherConfig,
+    /// Routing policy (accelerator threshold etc.).
+    pub route: RoutePolicy,
+    /// Bounded queue depth towards the sim pool (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            sim_workers: 4,
+            empa: EmpaConfig::default(),
+            batcher: BatcherConfig::default(),
+            route: RoutePolicy::default(),
+            queue_cap: 256,
+        }
+    }
+}
+
+/// Fabric reply for one request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Program simulated: final %eax, clocks, cores used.
+    Program { eax: i32, clocks: u64, cores: usize },
+    /// Mass op scalar result for this request's row(s).
+    Scalars(Vec<f32>),
+    /// Mass op row results.
+    Rows(Vec<Vec<f32>>),
+    /// Failure.
+    Error(String),
+}
+
+/// A submitted job awaiting its response.
+pub struct JobHandle {
+    pub id: u64,
+    rx: Receiver<(u64, Response, Instant)>,
+    submitted: Instant,
+}
+
+impl JobHandle {
+    /// Block until the response arrives; returns (response, latency).
+    pub fn wait(self) -> (Response, Duration) {
+        match self.rx.recv() {
+            Ok((_, resp, done)) => (resp, done.duration_since(self.submitted)),
+            Err(_) => (Response::Error("fabric shut down".into()), self.submitted.elapsed()),
+        }
+    }
+}
+
+enum Msg {
+    Job { id: u64, kind: RequestKind, reply: Sender<(u64, Response, Instant)> },
+    Shutdown,
+}
+
+enum SimMsg {
+    Run { id: u64, kind: RequestKind, reply: Sender<(u64, Response, Instant)> },
+    Stop,
+}
+
+struct MassJob {
+    id: u64,
+    reply: Sender<(u64, Response, Instant)>,
+}
+
+enum AccelMsg {
+    Batch { op: MassOp, rows: Vec<crate::accel::batch::PendingRow<MassJob>>, scale_bias: [f32; 2] },
+    Stop,
+}
+
+/// The running fabric.
+pub struct Fabric {
+    tx: SyncSender<Msg>,
+    next_id: Mutex<u64>,
+    pub metrics: Arc<FabricMetrics>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Fabric {
+    /// Start the fabric; `accel` is constructed on the accelerator worker
+    /// thread (PJRT handles are thread-affine) behind the §3.8 link.
+    pub fn start(cfg: FabricConfig, accel: AccelFactory) -> Arc<Fabric> {
+        let metrics = Arc::new(FabricMetrics::default());
+        let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap);
+        let mut threads = Vec::new();
+
+        // --- sim worker pool -------------------------------------------
+        let (sim_tx, sim_rx) = sync_channel::<SimMsg>(cfg.queue_cap);
+        let sim_rx = Arc::new(Mutex::new(sim_rx));
+        for w in 0..cfg.sim_workers.max(1) {
+            let rx = Arc::clone(&sim_rx);
+            let empa_cfg = cfg.empa.clone();
+            let m = Arc::clone(&metrics);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("empa-sim-{w}"))
+                    .spawn(move || sim_worker(rx, empa_cfg, m))
+                    .expect("spawn sim worker"),
+            );
+        }
+
+        // --- accelerator worker ----------------------------------------
+        let (acc_tx, acc_rx) = mpsc::channel::<AccelMsg>();
+        {
+            let m = Arc::clone(&metrics);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("accel".into())
+                    .spawn(move || accel_worker(acc_rx, accel, m))
+                    .expect("spawn accel worker"),
+            );
+        }
+
+        // --- router / leader -------------------------------------------
+        {
+            let m = Arc::clone(&metrics);
+            let cfg2 = cfg.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("fabric-router".into())
+                    .spawn(move || router_loop(rx, sim_tx, acc_tx, cfg2, m))
+                    .expect("spawn router"),
+            );
+        }
+
+        Arc::new(Fabric { tx, next_id: Mutex::new(0), metrics, threads: Mutex::new(threads) })
+    }
+
+    /// Submit a job; blocks when the fabric queue is full (backpressure).
+    pub fn submit(&self, kind: RequestKind) -> Result<JobHandle> {
+        let id = {
+            let mut g = self.next_id.lock().unwrap();
+            *g += 1;
+            *g
+        };
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let submitted = Instant::now();
+        self.metrics.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .send(Msg::Job { id, kind, reply: reply_tx })
+            .map_err(|_| anyhow!("fabric is shut down"))?;
+        Ok(JobHandle { id, rx: reply_rx, submitted })
+    }
+
+    /// Submit a full trace and wait for all responses; returns per-request
+    /// (request-id, response, latency).
+    pub fn run_trace(&self, trace: Vec<Request>) -> Vec<(u64, Response, Duration)> {
+        let handles: Vec<(u64, JobHandle)> = trace
+            .into_iter()
+            .map(|r| (r.id, self.submit(r.kind).expect("submit")))
+            .collect();
+        handles
+            .into_iter()
+            .map(|(rid, h)| {
+                let (resp, lat) = h.wait();
+                (rid, resp, lat)
+            })
+            .collect()
+    }
+
+    /// Stop all threads (idempotent; pending jobs are completed first).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        let mut g = self.threads.lock().unwrap();
+        for t in g.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// threads
+// ----------------------------------------------------------------------
+
+fn router_loop(
+    rx: Receiver<Msg>,
+    sim_tx: SyncSender<SimMsg>,
+    acc_tx: mpsc::Sender<AccelMsg>,
+    cfg: FabricConfig,
+    metrics: Arc<FabricMetrics>,
+) {
+    use std::sync::atomic::Ordering::Relaxed;
+    // One batcher per mass op kind (rows of one flush share an artifact).
+    let mut batchers: HashMap<MassOp, Batcher<MassJob>> = HashMap::new();
+    let flush = |op: MassOp, rows: Vec<crate::accel::batch::PendingRow<MassJob>>, acc_tx: &mpsc::Sender<AccelMsg>| {
+        let _ = acc_tx.send(AccelMsg::Batch { op, rows, scale_bias: [0.0; 2] });
+    };
+    loop {
+        // Wait bounded by the earliest batch deadline.
+        let deadline = batchers
+            .values()
+            .filter_map(|b| b.next_deadline())
+            .min();
+        let msg = match deadline {
+            Some(d) => {
+                let now = Instant::now();
+                let wait = d.saturating_duration_since(now);
+                match rx.recv_timeout(wait) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            },
+        };
+        // Deadline flushes first (they are due).
+        let now = Instant::now();
+        for (op, b) in batchers.iter_mut() {
+            if let Some(rows) = b.poll(now) {
+                metrics.deadline_flushes.fetch_add(1, Relaxed);
+                flush(*op, rows, &acc_tx);
+            }
+        }
+        let Some(msg) = msg else { continue };
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Job { id, kind, reply } => match router::route(&kind, &cfg.route) {
+                Target::Simulator => {
+                    metrics.routed_sim.fetch_add(1, Relaxed);
+                    let _ = sim_tx.send(SimMsg::Run { id, kind, reply });
+                }
+                Target::Inline => {
+                    // Small mass op: not worth the accelerator round trip
+                    // (the §2.4 offset-time argument); compute natively.
+                    metrics.routed_inline.fetch_add(1, Relaxed);
+                    let resp = inline_mass(&kind);
+                    let _ = reply.send((id, resp, Instant::now()));
+                }
+                Target::Accelerator => {
+                    metrics.routed_accel.fetch_add(1, Relaxed);
+                    let (op, row, row2) = match kind {
+                        RequestKind::MassSum { values } => (MassOp::Sumup, values, None),
+                        RequestKind::MassDot { a, b } => (MassOp::Dot, a, Some(b)),
+                        RequestKind::RunProgram { .. } => unreachable!("router"),
+                    };
+                    let b = batchers
+                        .entry(op)
+                        .or_insert_with(|| Batcher::new(cfg.batcher.clone()));
+                    if let Some(rows) = b.push(MassJob { id, reply }, row, row2, Instant::now()) {
+                        flush(op, rows, &acc_tx);
+                    }
+                }
+            },
+        }
+    }
+    // drain remaining batches, stop workers
+    for (op, mut b) in batchers {
+        if let Some(rows) = b.drain() {
+            flush(op, rows, &acc_tx);
+        }
+    }
+    for _ in 0..64 {
+        let _ = sim_tx.send(SimMsg::Stop);
+    }
+    let _ = acc_tx.send(AccelMsg::Stop);
+}
+
+fn inline_mass(kind: &RequestKind) -> Response {
+    match kind {
+        RequestKind::MassSum { values } => Response::Scalars(vec![values.iter().sum()]),
+        RequestKind::MassDot { a, b } => {
+            Response::Scalars(vec![a.iter().zip(b).map(|(x, y)| x * y).sum()])
+        }
+        RequestKind::RunProgram { .. } => Response::Error("program routed inline".into()),
+    }
+}
+
+fn sim_worker(rx: Arc<Mutex<Receiver<SimMsg>>>, cfg: EmpaConfig, metrics: Arc<FabricMetrics>) {
+    loop {
+        let msg = {
+            let g = rx.lock().unwrap();
+            g.recv()
+        };
+        match msg {
+            Ok(SimMsg::Run { id, kind, reply }) => {
+                let resp = match kind {
+                    RequestKind::RunProgram { mode, values } => {
+                        let (src, _) = crate::workload::sumup::program(mode, &values);
+                        match assemble(&src) {
+                            Ok(p) => {
+                                let r = EmpaProcessor::new(&p.image, &cfg).run();
+                                match r.fault {
+                                    None => Response::Program {
+                                        eax: r.eax(),
+                                        clocks: r.clocks,
+                                        cores: r.max_occupied,
+                                    },
+                                    Some(f) => Response::Error(f),
+                                }
+                            }
+                            Err(e) => Response::Error(e.to_string()),
+                        }
+                    }
+                    other => inline_mass(&other),
+                };
+                metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let _ = reply.send((id, resp, Instant::now()));
+            }
+            Ok(SimMsg::Stop) | Err(_) => break,
+        }
+    }
+}
+
+fn accel_worker(rx: Receiver<AccelMsg>, accel: AccelFactory, metrics: Arc<FabricMetrics>) {
+    use std::sync::atomic::Ordering::Relaxed;
+    let accel = match accel() {
+        Ok(a) => a,
+        Err(e) => {
+            // Answer every batch with the construction error.
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    AccelMsg::Stop => return,
+                    AccelMsg::Batch { rows, .. } => {
+                        for p in rows {
+                            metrics.errors.fetch_add(1, Relaxed);
+                            let _ = p.tag.reply.send((
+                                p.tag.id,
+                                Response::Error(format!("accelerator init: {e}")),
+                                Instant::now(),
+                            ));
+                        }
+                    }
+                }
+            }
+            return;
+        }
+    };
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            AccelMsg::Stop => break,
+            AccelMsg::Batch { op, rows, scale_bias } => {
+                metrics.accel_batches.fetch_add(1, Relaxed);
+                metrics.accel_rows.fetch_add(rows.len() as u64, Relaxed);
+                let req = MassRequest {
+                    op,
+                    rows: rows.iter().map(|p| p.row.clone()).collect(),
+                    rows2: rows.iter().filter_map(|p| p.row2.clone()).collect(),
+                    scale_bias,
+                };
+                let done = Instant::now();
+                match accel.execute(&req) {
+                    Ok(MassResult::Scalars(vals)) => {
+                        for (p, v) in rows.into_iter().zip(vals) {
+                            metrics.completed.fetch_add(1, Relaxed);
+                            let _ = p.tag.reply.send((p.tag.id, Response::Scalars(vec![v]), done));
+                        }
+                    }
+                    Ok(MassResult::Rows(out)) => {
+                        for (p, r) in rows.into_iter().zip(out) {
+                            metrics.completed.fetch_add(1, Relaxed);
+                            let _ = p.tag.reply.send((p.tag.id, Response::Rows(vec![r]), done));
+                        }
+                    }
+                    Ok(MassResult::Stats { sum, .. }) => {
+                        for (p, v) in rows.into_iter().zip(sum) {
+                            metrics.completed.fetch_add(1, Relaxed);
+                            let _ = p.tag.reply.send((p.tag.id, Response::Scalars(vec![v]), done));
+                        }
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        for p in rows {
+                            metrics.errors.fetch_add(1, Relaxed);
+                            let _ = p.tag.reply.send((p.tag.id, Response::Error(msg.clone()), done));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::NativeAccel;
+    use crate::workload::sumup::Mode;
+
+    fn small_fabric() -> Arc<Fabric> {
+        let cfg = FabricConfig {
+            sim_workers: 2,
+            batcher: BatcherConfig { max_rows: 4, max_wait: Duration::from_millis(2) },
+            ..Default::default()
+        };
+        Fabric::start(cfg, Box::new(|| Ok(Box::new(NativeAccel) as Box<dyn crate::accel::Accelerator>)))
+    }
+
+    #[test]
+    fn program_jobs_round_trip() {
+        let f = small_fabric();
+        let h = f
+            .submit(RequestKind::RunProgram { mode: Mode::Sumup, values: vec![1, 2, 3, 4] })
+            .unwrap();
+        let (resp, _lat) = h.wait();
+        assert_eq!(resp, Response::Program { eax: 10, clocks: 36, cores: 5 });
+        f.shutdown();
+    }
+
+    #[test]
+    fn mass_ops_batched_and_answered() {
+        let f = small_fabric();
+        let hs: Vec<JobHandle> = (0..8)
+            .map(|i| {
+                f.submit(RequestKind::MassSum { values: vec![i as f32; 200] }).unwrap()
+            })
+            .collect();
+        for (i, h) in hs.into_iter().enumerate() {
+            let (resp, _) = h.wait();
+            assert_eq!(resp, Response::Scalars(vec![(i * 200) as f32]));
+        }
+        assert!(f.metrics.accel_batches.load(std::sync::atomic::Ordering::Relaxed) >= 2);
+        f.shutdown();
+    }
+
+    #[test]
+    fn small_mass_ops_computed_inline() {
+        let f = small_fabric();
+        let h = f.submit(RequestKind::MassSum { values: vec![1.0, 2.0] }).unwrap();
+        let (resp, _) = h.wait();
+        assert_eq!(resp, Response::Scalars(vec![3.0]));
+        assert_eq!(f.metrics.routed_inline.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(f.metrics.routed_accel.load(std::sync::atomic::Ordering::Relaxed), 0);
+        f.shutdown();
+    }
+
+    #[test]
+    fn deadline_flush_completes_partial_batches() {
+        // 3 rows < max_rows=4: only the deadline can flush them.
+        let f = small_fabric();
+        let hs: Vec<JobHandle> = (0..3)
+            .map(|_| f.submit(RequestKind::MassSum { values: vec![1.0; 128] }).unwrap())
+            .collect();
+        for h in hs {
+            let (resp, _) = h.wait();
+            assert_eq!(resp, Response::Scalars(vec![128.0]));
+        }
+        f.shutdown();
+    }
+
+    #[test]
+    fn mixed_trace_all_complete() {
+        let f = small_fabric();
+        let trace = crate::workload::TraceGen::new(crate::workload::TraceConfig {
+            num_requests: 64,
+            ..Default::default()
+        })
+        .generate();
+        let results = f.run_trace(trace);
+        assert_eq!(results.len(), 64);
+        assert!(results.iter().all(|(_, r, _)| !matches!(r, Response::Error(_))));
+        f.shutdown();
+    }
+}

@@ -1,0 +1,187 @@
+//! An EMPA core (§4.1.2): "mostly similar to the present single-core
+//! processor, with some extra functionality" — the extra signals towards
+//! the supervisor (`Availability`, `Enabled`, `Waiting`, `Meta`), the
+//! identity/parent/children/preallocated bitmasks, the QT offset, and the
+//! four latch registers behind the pseudo-registers of §4.6.
+
+use crate::emu::CoreRegs;
+use crate::isa::Insn;
+
+/// Allocation state as seen by the supervisor's pool (§4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocState {
+    /// In the pool of sharable PUs, available for renting.
+    Free,
+    /// Reserved for a future QT of core `parent` (§5.1 preallocation).
+    PreAllocatedBy { parent: usize },
+    /// Rented, running (or blocked on) a QT.
+    Rented,
+}
+
+/// Why a rented core is not fetching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockReason {
+    /// `qwait` (or implicit wait at `qterm`/`halt`) until the children
+    /// bitmask clears (§4.3). `drain_to` receives the `FromChild` latch.
+    WaitChildren { drain_to: Option<crate::isa::Reg> },
+    /// Parent stalled while one of the SV mass-processing engines drives
+    /// its children (§5.1, §5.2: "the PC of the parent might stall at the
+    /// address where mass processing begins").
+    MassEngine,
+    /// `halt` fetched while children are outstanding — the SV "blocks the
+    /// termination of a parent QT until its children mask gets cleared".
+    HaltPending,
+    /// Reserved interrupt-service core parked "in power economy mode"
+    /// (§3.6), waiting for its interrupt line; woken by the SV on
+    /// [`raise_irq`](super::EmpaProcessor::raise_irq).
+    IrqWait,
+}
+
+/// Execution state of a core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunState {
+    /// Enabled, ready to fetch at `pc`.
+    Idle,
+    /// Executing `insn`; architectural effect applies at clock `apply_at`.
+    Exec { insn: Insn, apply_at: u64 },
+    /// Enabled but waiting on an SV condition.
+    Blocked(BlockReason),
+    /// `halt` retired (only meaningful for the root core).
+    Halted,
+    /// QT terminated; core being returned to the pool.
+    Terminated,
+}
+
+/// The latch registers of §4.6 / Fig. 2. `None` = latch empty.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Latches {
+    /// Written by the parent (via its `%pc` pseudo-register) before/at QT
+    /// creation; read by the child via `%pc`.
+    pub from_parent: Option<i32>,
+    /// Written by the child via `%pp`; transferred on termination to the
+    /// parent's `from_child`.
+    pub for_parent: Option<i32>,
+    /// Landing latch in the parent for a terminating child's data.
+    pub from_child: Option<i32>,
+    /// Staging latch in the parent for the next child's `from_parent`.
+    pub for_child: Option<i32>,
+}
+
+/// One EMPA core.
+#[derive(Debug, Clone)]
+pub struct Core {
+    /// Index; the paper's "one-hot bitmask" identity is `1 << id`.
+    pub id: usize,
+    pub alloc: AllocState,
+    pub run: RunState,
+    /// Architectural "glue": register file + condition codes (§3.2).
+    pub regs: CoreRegs,
+    pub pc: u32,
+    /// Identifying bit of the parent core, if any.
+    pub parent: Option<usize>,
+    /// ORed bitmasks of cores running child QTs of this core.
+    pub children: u64,
+    /// ORed bitmasks of cores preallocated for this core.
+    pub prealloc: u64,
+    /// Memory address of the QT this core runs (§4.1.2 "Offset").
+    pub offset: u32,
+    /// Latch registers (§4.6).
+    pub latch: Latches,
+    /// Emergency mode (§3.3): continuations pushed when this core lends
+    /// its own resources to a child QT executed inline.
+    pub borrow_stack: Vec<u32>,
+    /// Pool put-back administration completes at this clock; the core may
+    /// not be re-rented earlier (drives the §6.2 rent-period core cap).
+    pub available_at: u64,
+    /// Instructions retired by this core.
+    pub retired: u64,
+    /// Clocks this core spent rented (occupancy accounting).
+    pub busy_clocks: u64,
+}
+
+impl Core {
+    pub fn new(id: usize) -> Self {
+        Core {
+            id,
+            alloc: AllocState::Free,
+            run: RunState::Idle,
+            regs: CoreRegs::default(),
+            pc: 0,
+            parent: None,
+            children: 0,
+            prealloc: 0,
+            offset: 0,
+            latch: Latches::default(),
+            borrow_stack: Vec::new(),
+            available_at: 0,
+            retired: 0,
+            busy_clocks: 0,
+        }
+    }
+
+    /// The paper's one-hot identity mask.
+    pub fn mask(&self) -> u64 {
+        1u64 << self.id
+    }
+
+    /// `Availability` signal: in the pool, not preallocated, administration
+    /// finished (§4.1.2).
+    pub fn available(&self, now: u64) -> bool {
+        self.alloc == AllocState::Free && self.available_at <= now
+    }
+
+    /// Reset the QT-execution state when (re)rented; the glue is cloned in
+    /// by the SV separately.
+    pub fn reset_for_qt(&mut self, pc: u32) {
+        self.run = RunState::Idle;
+        self.pc = pc;
+        self.offset = pc;
+        self.children = 0;
+        self.latch = Latches::default();
+        self.borrow_stack.clear();
+    }
+
+    /// Whether this core is occupying a PU right now (rented or reserved)
+    /// — the quantity `k` of Table 1 counts the maximum of these.
+    pub fn occupied(&self) -> bool {
+        !matches!(self.alloc, AllocState::Free)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_hot_masks() {
+        assert_eq!(Core::new(0).mask(), 1);
+        assert_eq!(Core::new(5).mask(), 32);
+    }
+
+    #[test]
+    fn availability_honours_putback_admin() {
+        let mut c = Core::new(1);
+        assert!(c.available(0));
+        c.available_at = 10;
+        assert!(!c.available(9));
+        assert!(c.available(10));
+        c.alloc = AllocState::PreAllocatedBy { parent: 0 };
+        assert!(!c.available(10));
+        assert!(c.occupied());
+    }
+
+    #[test]
+    fn reset_clears_qt_state() {
+        let mut c = Core::new(2);
+        c.children = 0b111;
+        c.latch.for_parent = Some(9);
+        c.borrow_stack.push(0x40);
+        c.reset_for_qt(0x20);
+        assert_eq!(c.pc, 0x20);
+        assert_eq!(c.offset, 0x20);
+        assert_eq!(c.children, 0);
+        assert_eq!(c.latch, Latches::default());
+        assert!(c.borrow_stack.is_empty());
+        assert_eq!(c.run, RunState::Idle);
+    }
+}

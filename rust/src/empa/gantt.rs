@@ -1,0 +1,114 @@
+//! ASCII occupancy timeline ("Gantt") rendered from an event trace —
+//! visualises how the SV maps the processing graph onto the cores
+//! (Fig. 3's two-level operation, per clock).
+//!
+//! Legend: `█` running a QT, `▒` preallocated/parked, `·` in the pool.
+
+use super::trace::{Event, Trace};
+use std::fmt::Write;
+
+/// Per-core occupancy states over time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CellState {
+    Free,
+    Reserved,
+    Running,
+}
+
+/// Reconstruct per-core occupancy from the trace.
+///
+/// `until` bounds the timeline (usually the run's final clock).
+fn occupancy(trace: &Trace, cores: usize, until: u64) -> Vec<Vec<CellState>> {
+    let mut grid = vec![vec![CellState::Free; until as usize + 1]; cores];
+    // Sort-stable walk: apply each event from its clock onwards.
+    for e in &trace.entries {
+        let t = e.clock as usize;
+        if e.core >= cores || t >= grid[0].len() {
+            continue;
+        }
+        let paint = |grid: &mut Vec<Vec<CellState>>, core: usize, from: usize, s: CellState| {
+            for cell in grid[core][from..].iter_mut() {
+                *cell = s;
+            }
+        };
+        match e.event {
+            Event::Rent { .. } | Event::Launch { .. } | Event::Relaunch { .. } | Event::Unblock => {
+                paint(&mut grid, e.core, t, CellState::Running)
+            }
+            Event::PreAlloc { .. } | Event::Block { .. } => paint(&mut grid, e.core, t, CellState::Reserved),
+            Event::Term { .. } => paint(&mut grid, e.core, t, CellState::Reserved),
+            Event::Halt => paint(&mut grid, e.core, t, CellState::Free),
+            Event::Stream { .. } | Event::MassStart { .. } | Event::MassDone { .. } | Event::Borrow { .. } => {}
+        }
+    }
+    grid
+}
+
+/// Render the timeline; one row per core that was ever occupied.
+pub fn render(trace: &Trace, cores: usize, until: u64) -> String {
+    let grid = occupancy(trace, cores, until);
+    let mut out = String::new();
+    let _ = writeln!(out, "clock  0{:>width$}", until, width = until as usize);
+    for (id, row) in grid.iter().enumerate() {
+        if row.iter().all(|&c| c == CellState::Free) && id != 0 {
+            continue;
+        }
+        let line: String = row
+            .iter()
+            .map(|c| match c {
+                CellState::Free => '·',
+                CellState::Reserved => '▒',
+                CellState::Running => '█',
+            })
+            .collect();
+        let _ = writeln!(out, "core{id:>3} {line}");
+    }
+    out.push_str("legend: █ running QT   ▒ preallocated/blocked   · pool\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::empa::{EmpaConfig, EmpaProcessor};
+    use crate::isa::assemble;
+    use crate::workload::sumup;
+
+    fn traced_run(src: &str) -> (Trace, u64, usize) {
+        let p = assemble(src).unwrap();
+        let cfg = EmpaConfig { trace: true, ..Default::default() };
+        let n = cfg.num_cores;
+        let r = EmpaProcessor::new(&p.image, &cfg).run();
+        (r.trace, r.clocks, n)
+    }
+
+    #[test]
+    fn sumup_gantt_shows_the_staggered_children() {
+        let (trace, clocks, cores) = traced_run(&sumup::sumup_mode_program(&[1, 2, 3, 4]).0);
+        let g = render(&trace, cores, clocks);
+        // root row plus 4 child rows
+        assert!(g.contains("core  0"));
+        assert!(g.contains("core  4"));
+        assert!(!g.contains("core  9"), "only occupied cores are shown:\n{g}");
+        assert!(g.contains('█') && g.contains('▒'));
+    }
+
+    #[test]
+    fn no_mode_gantt_is_single_row() {
+        let (trace, clocks, cores) = traced_run(&sumup::no_mode_program(&[1, 2, 3, 4]).0);
+        let g = render(&trace, cores, clocks);
+        let rows = g.lines().filter(|l| l.starts_with("core")).count();
+        assert_eq!(rows, 1, "{g}");
+    }
+
+    #[test]
+    fn render_is_bounded_by_until() {
+        let (trace, clocks, cores) = traced_run(&sumup::sumup_mode_program(&[1, 2]).0);
+        let g = render(&trace, cores, clocks);
+        for l in g.lines().filter(|l| l.starts_with("core")) {
+            // prefix is `core{id:>3} ` = 8 chars
+            let cells = l.chars().skip(8).count();
+            assert_eq!(cells as u64, clocks + 1, "{l}");
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! In-simulator interrupt servicing tests (§3.6): a reserved core wakes
+//! on the line, runs its handler QT, re-parks — while the payload program
+//! runs to completion in exactly its undisturbed time.
+
+use super::{BlockReason, EmpaConfig, EmpaProcessor, RunState};
+use crate::isa::assemble;
+use crate::workload::sumup;
+
+/// Payload (sumup over 6 elements) + a handler QT that counts services
+/// into a mailbox word.
+fn program_with_handler() -> (crate::isa::Program, u32) {
+    let values = [1, 2, 3, 4, 5, 6];
+    let (mut src, _) = sumup::sumup_mode_program(&values);
+    src.push_str(
+        "\nHandler:\n    mrmovl (%ebp), %edi   # mailbox++\n    irmovl $1, %ebx\n    addl %ebx, %edi\n    rmmovl %edi, (%ebp)\n    qterm\n",
+    );
+    src.push_str("    .align 4\nmailbox:\n    .long 0\n");
+    let prog = assemble(&src).unwrap();
+    let mailbox = prog.symbol("mailbox").unwrap();
+    (prog, mailbox)
+}
+
+fn run_with_irqs(raise_at: &[u64]) -> (EmpaProcessor, u64, u32) {
+    let (prog, mailbox) = program_with_handler();
+    let handler = prog.symbol("Handler").unwrap();
+    let mut p = EmpaProcessor::new(&prog.image, &EmpaConfig::default());
+    let irq_core = p.reserve_irq_core(handler).expect("reserve");
+    // Handler uses %ebp as the mailbox pointer: preload the parked core.
+    p.cores[irq_core].regs.file[crate::isa::Reg::Ebp as usize] = mailbox as i32;
+    let mut raises = raise_at.to_vec();
+    let mut halt_clock = 0u64;
+    for _ in 0..100_000 {
+        if let Some(pos) = raises.iter().position(|&t| t == p.clock) {
+            raises.remove(pos);
+            assert!(p.raise_irq(irq_core), "line busy at {}", p.clock);
+            // re-arm %ebp for the next service (reset_for_qt clears latches
+            // but the register file persists — set it once more for safety)
+            p.cores[irq_core].regs.file[crate::isa::Reg::Ebp as usize] = mailbox as i32;
+        }
+        p.tick();
+        if matches!(p.cores[0].run, RunState::Halted) && halt_clock == 0 {
+            halt_clock = p.clock;
+        }
+        if halt_clock != 0 && raises.is_empty() && p.irq_log.len() >= raise_at.len() {
+            break;
+        }
+    }
+    (p, halt_clock, mailbox)
+}
+
+#[test]
+fn payload_time_is_untouched_by_interrupts() {
+    // sumup N=6 takes 38 clocks undisturbed (Table 1). Firing interrupts
+    // mid-run must not change that: "the processor need not be stolen
+    // from the running main process" (§7).
+    // handler service takes ~26 clocks, so space the raises past it
+    let (p, halt_clock, _) = run_with_irqs(&[5, 35]);
+    assert!(matches!(p.cores[0].run, RunState::Halted));
+    // sumup N=6 completes at 38 clocks (Table 1); the +1 is the tick in
+    // which the halt's retirement becomes observable to this driver.
+    assert!(halt_clock <= 39, "payload delayed: {halt_clock}");
+    assert_eq!(p.irq_log.len(), 2);
+    assert!(p.irq_inflight_empty());
+}
+
+#[test]
+fn handler_actually_runs_and_counts() {
+    let (p, _, mailbox) = run_with_irqs(&[5, 50, 90, 130]);
+    assert_eq!(p.mem.read_u32(mailbox).unwrap(), 4, "mailbox counted every service");
+    assert_eq!(p.irq_log.len(), 4);
+}
+
+#[test]
+fn service_latency_is_small_and_deterministic() {
+    let (p, _, _) = run_with_irqs(&[40, 80, 120]);
+    let lats: Vec<u64> = p.irq_log.iter().map(|(r, d)| d - r).collect();
+    assert_eq!(lats.len(), 3);
+    // identical latency every time — zero jitter (§7: predictable)
+    assert!(lats.windows(2).all(|w| w[0] == w[1]), "{lats:?}");
+    // handler: mrmovl(8)+irmovl(4)+addl(3)+rmmovl(8) + 1 tick wake = 24ish;
+    // vastly below the conventional context-change path (~12000).
+    assert!(lats[0] < 40, "latency {lats:?}");
+}
+
+#[test]
+fn busy_line_drops_the_raise() {
+    let (prog, _) = program_with_handler();
+    let handler = prog.symbol("Handler").unwrap();
+    let mut p = EmpaProcessor::new(&prog.image, &EmpaConfig::default());
+    let irq_core = p.reserve_irq_core(handler).unwrap();
+    assert!(p.raise_irq(irq_core));
+    // immediately raising again while the handler runs: edge lost
+    p.tick();
+    assert!(!p.raise_irq(irq_core));
+}
+
+#[test]
+fn reserved_core_is_not_available_to_the_pool() {
+    let (prog, _) = program_with_handler();
+    let handler = prog.symbol("Handler").unwrap();
+    let cfg = EmpaConfig { num_cores: 8, ..Default::default() };
+    let mut p = EmpaProcessor::new(&prog.image, &cfg);
+    let irq_core = p.reserve_irq_core(handler).unwrap();
+    assert!(matches!(p.cores[irq_core].run, RunState::Blocked(BlockReason::IrqWait)));
+    assert!(!p.cores[irq_core].available(0));
+    // a second reservation takes a *different* core
+    let second = p.reserve_irq_core(handler).unwrap();
+    assert_ne!(second, irq_core);
+}

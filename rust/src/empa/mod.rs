@@ -1,0 +1,250 @@
+//! The EMPA processor (§3–§5 of the paper): cores with outsourcing
+//! ability, the supervisor control layer, quasi-threads, mass-processing
+//! engines, pseudo-registers and the calibrated timing model.
+
+pub mod core;
+pub mod gantt;
+#[cfg(test)]
+mod irq_tests;
+pub mod processor;
+pub mod sv;
+pub mod timing;
+pub mod trace;
+
+pub use core::{AllocState, BlockReason, Core, Latches, RunState};
+pub use processor::{EmpaConfig, EmpaProcessor, RunReport};
+pub use sv::{MassEngine, MassMode, Supervisor};
+pub use timing::TimingConfig;
+pub use trace::{Event, Trace, TraceEntry};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assemble;
+    use crate::workload::sumup;
+
+    fn run(src: &str) -> RunReport {
+        let p = assemble(src).unwrap();
+        let cfg = EmpaConfig::default();
+        EmpaProcessor::new(&p.image, &cfg).run()
+    }
+
+    #[test]
+    fn no_mode_matches_conventional_timing() {
+        // Listing 1 (N=4) on the EMPA processor with no metainstructions
+        // behaves exactly like the conventional machine: 142 clocks, k=1.
+        let r = run(crate::isa::asm::LISTING1);
+        assert_eq!(r.status, crate::isa::Status::Hlt);
+        assert_eq!(r.eax(), 0xd + 0xc0 + 0xb00 + 0xa000);
+        assert_eq!(r.clocks, 142);
+        assert_eq!(r.max_occupied, 1);
+        assert_eq!(r.distinct_cores, 1);
+    }
+
+    #[test]
+    fn for_mode_n4_is_64_clocks_2_cores() {
+        let (src, expected) = sumup::for_mode_program(&[0xd, 0xc0, 0xb00, 0xa000]);
+        let r = run(&src);
+        assert_eq!(r.fault, None);
+        assert_eq!(r.eax(), expected);
+        assert_eq!(r.clocks, 64); // Table 1, N=4 FOR
+        assert_eq!(r.max_occupied, 2);
+    }
+
+    #[test]
+    fn sumup_mode_n4_is_36_clocks_5_cores() {
+        let (src, expected) = sumup::sumup_mode_program(&[0xd, 0xc0, 0xb00, 0xa000]);
+        let r = run(&src);
+        assert_eq!(r.fault, None);
+        assert_eq!(r.eax(), expected);
+        assert_eq!(r.clocks, 36); // Table 1, N=4 SUMUP
+        assert_eq!(r.max_occupied, 5);
+    }
+
+    #[test]
+    fn qcreate_qwait_roundtrip() {
+        // Parent creates an embedded QT that doubles %eax; waits for it.
+        let src = "\
+    irmovl $21, %eax
+    qcreate Cont
+    addl %eax, %eax    # child body (embedded in the flow)
+    qterm %eax
+Cont:
+    qwait %eax
+    halt
+";
+        let r = run(src);
+        assert_eq!(r.fault, None);
+        assert_eq!(r.eax(), 42);
+        assert_eq!(r.max_occupied, 2);
+    }
+
+    #[test]
+    fn qcall_subroutine_style() {
+        let src = "\
+    irmovl $5, %eax
+    qcall Triple
+    qwait %eax
+    halt
+Triple:
+    irmovl $3, %ebx
+    irmovl $0, %ecx
+Loop:
+    addl %eax, %ecx
+    irmovl $-1, %esi
+    addl %esi, %ebx
+    jne Loop
+    qterm %ecx
+";
+        let r = run(src);
+        assert_eq!(r.fault, None);
+        assert_eq!(r.eax(), 15);
+    }
+
+    #[test]
+    fn nested_qts_form_a_graph() {
+        // parent -> child -> grandchild, each adds 1 to the inherited %eax.
+        let src = "\
+    irmovl $1, %eax
+    qcall Child
+    qwait %eax
+    halt
+Child:
+    irmovl $1, %ebx
+    addl %ebx, %eax
+    qcall GrandChild
+    qwait %eax
+    qterm %eax
+GrandChild:
+    irmovl $1, %ebx
+    addl %ebx, %eax
+    qterm %eax
+";
+        let r = run(src);
+        assert_eq!(r.fault, None);
+        assert_eq!(r.eax(), 3);
+        assert_eq!(r.max_occupied, 3);
+    }
+
+    #[test]
+    fn emergency_borrowing_when_pool_exhausted() {
+        // Single-core processor: qcreate must fall back to inline
+        // execution (§3.3) and still compute the right value.
+        let src = "\
+    irmovl $21, %eax
+    qcreate Cont
+    addl %eax, %eax
+    qterm %eax
+Cont:
+    qwait %eax
+    halt
+";
+        let p = assemble(src).unwrap();
+        let cfg = EmpaConfig { num_cores: 1, ..Default::default() };
+        let r = EmpaProcessor::new(&p.image, &cfg).run();
+        assert_eq!(r.fault, None);
+        assert_eq!(r.eax(), 42);
+        assert_eq!(r.max_occupied, 1);
+        assert_eq!(r.trace.entries.len(), 0); // trace disabled by default
+    }
+
+    #[test]
+    fn pseudo_register_handoff_parent_to_child() {
+        // Parent stages a value in ForChild via %pc; child reads it via %pc.
+        let src = "\
+    irmovl $99, %pc     # stage ForChild
+    qcall Child
+    qwait %eax
+    halt
+Child:
+    rrmovl %pc, %eax    # read FromParent latch
+    qterm %eax
+";
+        let r = run(src);
+        assert_eq!(r.fault, None);
+        assert_eq!(r.eax(), 99);
+    }
+
+    #[test]
+    fn qcopy_forwards_through_a_qt_pipeline() {
+        // §4.6 forwarding: a middle QT copies its input latch to its
+        // output latch ("to forward data ... the core needs to use an
+        // explicit copying from the input pseudoregister to the output
+        // pseudoregister instruction"). parent → mid → leaf and back.
+        let src = "\
+    irmovl $7, %pc      # stage ForChild for the mid QT
+    qcall Mid
+    qwait %eax
+    halt
+Mid:
+    qcopy               # FromParent -> ForParent staging
+    rrmovl %pc, %ecx    # also read it architecturally
+    qcall Leaf
+    qwait %ebx          # collect leaf result
+    addl %ecx, %ebx     # 7 (forwarded) + 70 (leaf)
+    qterm %ebx
+Leaf:
+    irmovl $70, %esi
+    qterm %esi
+";
+        let r = run(src);
+        assert_eq!(r.fault, None);
+        assert_eq!(r.eax(), 77);
+    }
+
+    #[test]
+    fn prealloc_more_than_pool_is_not_fatal() {
+        let src = "\
+    irmovl $3, %edx
+    irmovl $0x300, %ecx
+    xorl %eax, %eax
+    qprealloc $500      # far more than exists
+    qmassfor Body
+    halt
+Body:
+    mrmovl (%ecx), %esi
+    addl %esi, %eax
+    qterm %eax
+";
+        let p = assemble(src).unwrap();
+        let cfg = EmpaConfig { num_cores: 4, ..Default::default() };
+        let mut proc = EmpaProcessor::new(&p.image, &cfg);
+        proc.mem.write_words(0x300, &[10, 20, 30]).unwrap();
+        let r = proc.run();
+        assert_eq!(r.fault, None);
+        assert_eq!(r.eax(), 60);
+        assert!(r.max_occupied <= 4);
+    }
+
+    #[test]
+    fn child_halt_is_a_fault() {
+        let src = "\
+    qcall Child
+    qwait
+    halt
+Child:
+    halt
+";
+        let r = run(src);
+        assert!(r.fault.is_some());
+    }
+
+    #[test]
+    fn runaway_guard() {
+        let p = assemble("Loop: jmp Loop\n").unwrap();
+        let cfg = EmpaConfig { max_clocks: 500, ..Default::default() };
+        let r = EmpaProcessor::new(&p.image, &cfg).run();
+        assert!(r.fault.unwrap().contains("runaway"));
+    }
+
+    #[test]
+    fn trace_records_mass_lifecycle() {
+        let (src, _) = sumup::sumup_mode_program(&[1, 2, 3]);
+        let p = assemble(&src).unwrap();
+        let cfg = EmpaConfig { trace: true, ..Default::default() };
+        let r = EmpaProcessor::new(&p.image, &cfg).run();
+        assert_eq!(r.trace.count(|e| matches!(e, Event::Launch { .. })), 3);
+        assert_eq!(r.trace.count(|e| matches!(e, Event::Stream { .. })), 3);
+        assert_eq!(r.trace.count(|e| matches!(e, Event::MassDone { .. })), 1);
+    }
+}

@@ -1,0 +1,821 @@
+//! The cycle-stepped EMPA processor: cores + supervisor + memory.
+//!
+//! Operation follows Fig. 3 of the paper: the SV "creates" the cores into
+//! a pool; one core is allocated and enabled as the root; cores run
+//! conventionally until the pre-fetch recognises a metainstruction (`Meta`
+//! signal), which the SV executes at the supervisor level — renting cores,
+//! cloning glue, administering terminations, driving the mass-processing
+//! engines and the latch-register transfers.
+//!
+//! Each tick runs four phases:
+//!  A. *apply*   — retire instructions whose latency elapsed (architectural
+//!                 effects become visible, including SV effects of metas);
+//!  B. *engines* — mass engines launch due child QTs (one allocation per
+//!                 SV tick) and finalise;
+//!  C. *unblock* — blocked cores whose condition cleared return to Idle;
+//!  D. *fetch*   — idle cores fetch, with engine-intercepted `qterm`s
+//!                 handled combinationally (§3.4: synchronisation "in one
+//!                 clock cycle ... no time is used when there is no need
+//!                 to wait").
+
+use super::core::{AllocState, BlockReason, Core, RunState};
+use super::sv::{MassEngine, MassMode, Supervisor};
+use super::timing::TimingConfig;
+use super::trace::{Event, Trace};
+use crate::emu::{execute, CoreRegs, ExecEffect, PseudoPort};
+use crate::isa::{Insn, MetaFn, Reg, Status};
+use crate::mem::{bus::MemoryBus, MemConfig, Memory};
+
+/// Processor configuration.
+#[derive(Debug, Clone)]
+pub struct EmpaConfig {
+    /// Number of physical cores (the paper's SUMUP saturation needs 31).
+    pub num_cores: usize,
+    pub timing: TimingConfig,
+    pub mem: MemConfig,
+    /// Record a full event trace (debugging / occupancy plots).
+    pub trace: bool,
+    /// Runaway guard.
+    pub max_clocks: u64,
+}
+
+impl Default for EmpaConfig {
+    fn default() -> Self {
+        EmpaConfig {
+            num_cores: 32,
+            timing: TimingConfig::paper(),
+            mem: MemConfig::ideal(),
+            trace: false,
+            max_clocks: 10_000_000,
+        }
+    }
+}
+
+/// Result of running one program to completion.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Total execution time in core clocks (time of the root `halt`).
+    pub clocks: u64,
+    pub status: Status,
+    /// Final architectural state of the root core.
+    pub regs: CoreRegs,
+    /// Maximum simultaneously occupied PUs — the `k` of Table 1
+    /// (rented + preallocated, §4.1.2 availability definition).
+    pub max_occupied: usize,
+    /// Number of distinct cores that were ever occupied.
+    pub distinct_cores: usize,
+    /// Instructions retired across all cores.
+    pub retired: u64,
+    /// Memory port contention statistics (E7).
+    pub bus: crate::mem::BusStats,
+    /// Supervisor operations performed.
+    pub sv_ops: u64,
+    /// Simulation-level fault (runaway, child halt, invalid meta use).
+    pub fault: Option<String>,
+    /// Event trace, when enabled.
+    pub trace: Trace,
+}
+
+impl RunReport {
+    /// Value of `%eax` — the sum in the paper's running example.
+    pub fn eax(&self) -> i32 {
+        self.regs.file[0]
+    }
+}
+
+/// The EMPA processor.
+pub struct EmpaProcessor {
+    pub cores: Vec<Core>,
+    pub sv: Supervisor,
+    pub mem: Memory,
+    pub bus: MemoryBus,
+    pub timing: TimingConfig,
+    pub clock: u64,
+    pub trace: Trace,
+    root: usize,
+    max_occupied: usize,
+    ever_occupied: u64,
+    /// Completed interrupt services: (raised_at, handler_done_at).
+    pub irq_log: Vec<(u64, u64)>,
+    /// Raise clock of the in-flight interrupt per reserved core.
+    irq_inflight: Vec<Option<u64>>,
+    /// Superset of currently-rented cores (refreshed each tick; rent
+    /// transitions set bits eagerly so same-tick launches are seen).
+    rented_mask: u64,
+    /// Reused phase-D worklist buffer (hot-loop allocation avoidance).
+    worklist_buf: Vec<usize>,
+    /// Direct-mapped decoded-instruction cache: `(tag, insn)` where
+    /// `tag = pc << 24 | mem.version & 0xFFFFFF`; invalidated implicitly
+    /// when memory is written (version bump). Loops re-fetch the same
+    /// handful of PCs — see EXPERIMENTS.md §Perf.
+    icache: Vec<(u64, Insn)>,
+    fault: Option<String>,
+    halted: bool,
+    /// Clock at which the root `halt` completed (the reported run time).
+    halt_at: u64,
+    max_clocks: u64,
+}
+
+impl EmpaProcessor {
+    /// Build a processor with the program image at address 0; the root
+    /// core is rented and enabled at the entry point.
+    pub fn new(image: &[u8], cfg: &EmpaConfig) -> Self {
+        assert!(cfg.num_cores >= 1 && cfg.num_cores <= 64, "1..=64 cores supported");
+        let mut cores: Vec<Core> = (0..cfg.num_cores).map(Core::new).collect();
+        cores[0].alloc = AllocState::Rented;
+        cores[0].reset_for_qt(0);
+        let mut p = EmpaProcessor {
+            cores,
+            sv: Supervisor::default(),
+            mem: Memory::with_image(cfg.mem.size, image),
+            bus: MemoryBus::new(&cfg.mem),
+            timing: cfg.timing.clone(),
+            clock: 0,
+            trace: Trace::new(cfg.trace),
+            root: 0,
+            max_occupied: 1,
+            ever_occupied: 1,
+            irq_log: Vec::new(),
+            irq_inflight: vec![None; cfg.num_cores],
+            rented_mask: 1,
+            worklist_buf: Vec::new(),
+            icache: vec![(u64::MAX, Insn::Nop); 128],
+            fault: None,
+            halted: false,
+            halt_at: 0,
+            max_clocks: cfg.max_clocks,
+        };
+        p.trace.push(0, 0, Event::Rent { parent: None });
+        p
+    }
+
+    /// Run to completion and report.
+    pub fn run(mut self) -> RunReport {
+        while !self.halted && self.fault.is_none() {
+            if self.clock >= self.max_clocks {
+                self.fault = Some(format!("runaway: exceeded {} clocks", self.max_clocks));
+                break;
+            }
+            self.tick();
+        }
+        let status = if self.fault.is_some() {
+            Status::Ins
+        } else {
+            Status::Hlt
+        };
+        let retired = self.cores.iter().map(|c| c.retired).sum();
+        RunReport {
+            clocks: if self.halted { self.halt_at } else { self.clock },
+            status,
+            regs: self.cores[self.root].regs.clone(),
+            max_occupied: self.max_occupied,
+            distinct_cores: self.ever_occupied.count_ones() as usize,
+            retired,
+            bus: self.bus.stats(),
+            sv_ops: self.sv.ops,
+            fault: self.fault,
+            trace: self.trace,
+        }
+    }
+
+    /// Reserve a core for interrupt servicing (§3.6): rent it from the
+    /// pool, point it at the handler QT and park it "in power economy
+    /// mode". The handler must end with `qterm`; the core then re-parks
+    /// itself, re-armed for the next interrupt.
+    pub fn reserve_irq_core(&mut self, handler: u32) -> Option<usize> {
+        let now = self.clock;
+        let id = (0..self.cores.len()).find(|&cid| cid != self.root && self.cores[cid].available(now))?;
+        self.rented_mask |= 1u64 << id;
+        let c = &mut self.cores[id];
+        c.alloc = AllocState::Rented;
+        c.reset_for_qt(handler);
+        c.run = RunState::Blocked(BlockReason::IrqWait);
+        self.trace.push(now, id, Event::Rent { parent: None });
+        Some(id)
+    }
+
+    /// Raise the interrupt line of a reserved core. The core wakes
+    /// immediately — "without any duty to save and restore" — and starts
+    /// fetching its handler on the next tick. Returns false when the core
+    /// is still busy with the previous interrupt (the raise is lost, as
+    /// on real edge-triggered lines).
+    pub fn raise_irq(&mut self, core: usize) -> bool {
+        let now = self.clock;
+        if self.cores[core].run != RunState::Blocked(BlockReason::IrqWait) {
+            return false;
+        }
+        self.cores[core].pc = self.cores[core].offset;
+        self.cores[core].run = RunState::Idle;
+        self.irq_inflight[core] = Some(now);
+        self.trace.push(now, core, Event::Unblock);
+        true
+    }
+
+    /// True when no interrupt is currently being serviced.
+    pub fn irq_inflight_empty(&self) -> bool {
+        self.irq_inflight.iter().all(|x| x.is_none())
+    }
+
+    /// One core clock.
+    ///
+    /// Hot loop: phases iterate only the bits of `rented_mask` (a
+    /// superset of rented cores, refreshed in the single end-of-tick
+    /// accounting pass) instead of scanning every core — see
+    /// EXPERIMENTS.md §Perf for the before/after.
+    pub fn tick(&mut self) {
+        let now = self.clock;
+        // ---- A: apply retiring instructions ---------------------------
+        let mut bits = self.rented_mask;
+        while bits != 0 {
+            let id = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            if let RunState::Exec { insn, apply_at } = self.cores[id].run {
+                if apply_at == now {
+                    self.apply(id, insn, now);
+                }
+            }
+        }
+        // ---- B: engines launch / finalise -----------------------------
+        if !self.sv.engines.is_empty() {
+            self.engines_tick(now);
+        }
+        // ---- C: unblock ------------------------------------------------
+        let mut bits = self.rented_mask;
+        while bits != 0 {
+            let id = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            if let RunState::Blocked(reason) = self.cores[id].run {
+                let clear = match reason {
+                    BlockReason::WaitChildren { .. } | BlockReason::HaltPending => {
+                        self.cores[id].children == 0 && !self.sv.parent_engine_active(id)
+                    }
+                    BlockReason::MassEngine => false, // engine finalise unblocks
+                    BlockReason::IrqWait => false,     // raise_irq wakes
+                };
+                if clear {
+                    self.cores[id].run = RunState::Idle;
+                    self.trace.push(now, id, Event::Unblock);
+                }
+            }
+        }
+        // ---- D: fetch ---------------------------------------------------
+        let mut worklist = std::mem::take(&mut self.worklist_buf);
+        worklist.clear();
+        let mut bits = self.rented_mask;
+        while bits != 0 {
+            let id = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            if self.cores[id].alloc == AllocState::Rented && self.cores[id].run == RunState::Idle {
+                worklist.push(id);
+            }
+        }
+        while let Some(id) = worklist.pop() {
+            if self.cores[id].alloc == AllocState::Rented && self.cores[id].run == RunState::Idle {
+                self.fetch(id, now, &mut worklist);
+            }
+        }
+        self.worklist_buf = worklist;
+        // ---- accounting (single pass) -----------------------------------
+        let mut occ = 0usize;
+        let mut rented = 0u64;
+        for c in &mut self.cores {
+            if c.occupied() {
+                occ += 1;
+                self.ever_occupied |= 1u64 << c.id;
+                if c.alloc == AllocState::Rented {
+                    rented |= 1u64 << c.id;
+                    c.busy_clocks += 1;
+                }
+            }
+        }
+        self.rented_mask = rented;
+        self.max_occupied = self.max_occupied.max(occ);
+        self.clock += 1;
+    }
+
+    // ------------------------------------------------------------------
+    // fetch (phase D)
+    // ------------------------------------------------------------------
+
+    fn fetch(&mut self, id: usize, now: u64, worklist: &mut Vec<usize>) {
+        // A core may pass through several combinational engine intercepts
+        // in one clock (qterm → relaunch → real fetch); bound the loop.
+        for _ in 0..8 {
+            let pc = self.cores[id].pc;
+            let insn = match self.decode_cached(pc) {
+                Some(i) => i,
+                None => {
+                    self.fault = Some(format!("core {id}: invalid instruction at {pc:#x}"));
+                    return;
+                }
+            };
+            match insn {
+                // -- engine-intercepted child termination (zero cost) ----
+                Insn::Meta { meta: MetaFn::QTerm, .. } if self.sv.engine_of_child(id).is_some() => {
+                    if self.for_engine_iter_done(id, now, worklist) {
+                        continue; // relaunched: fetch body insn this tick
+                    }
+                    return; // engine done or child released
+                }
+                Insn::Meta { meta: MetaFn::QTerm, .. }
+                    if self.cores[id].parent.is_some()
+                        && self.parent_engine_mode(id) == Some(MassMode::Sum) =>
+                {
+                    self.sum_child_release(id, now);
+                    return;
+                }
+                // -- halt: the SV blocks parent termination until the
+                //    children mask clears (§4.3) -------------------------
+                Insn::Halt => {
+                    if self.cores[id].children != 0 || self.sv.parent_engine_active(id) {
+                        self.cores[id].run = RunState::Blocked(BlockReason::HaltPending);
+                        self.trace.push(now, id, Event::Block { why: "halt/children" });
+                        return;
+                    }
+                }
+                // -- qwait blocks combinationally while children run -----
+                Insn::Meta { meta: MetaFn::QWait, ra, .. } => {
+                    if self.cores[id].children != 0 || self.sv.parent_engine_active(id) {
+                        self.cores[id].run =
+                            RunState::Blocked(BlockReason::WaitChildren { drain_to: (ra != Reg::None).then_some(ra) });
+                        self.trace.push(now, id, Event::Block { why: "qwait" });
+                        return;
+                    }
+                }
+                _ => {}
+            }
+            // -- ordinary issue: charge latency, apply later -------------
+            let cost = match insn {
+                Insn::Meta { meta, .. } => {
+                    self.sv.ops += 1;
+                    self.timing.meta_dispatch + self.timing.meta_cost(meta)
+                }
+                Insn::MrMov { .. } | Insn::RmMov { .. } => {
+                    self.timing.insn_cost(&insn) + self.bus.access(now)
+                }
+                _ => self.timing.insn_cost(&insn),
+            };
+            self.cores[id].run = RunState::Exec { insn, apply_at: now + cost };
+            return;
+        }
+        self.fault = Some(format!("core {id}: combinational intercept loop at {:#x}", self.cores[id].pc));
+    }
+
+    /// Decode through the direct-mapped cache.
+    #[inline]
+    fn decode_cached(&mut self, pc: u32) -> Option<Insn> {
+        let tag = ((pc as u64) << 24) | (self.mem.version() & 0xFF_FFFF);
+        let slot = (pc as usize) & (self.icache.len() - 1);
+        let (t, i) = self.icache[slot];
+        if t == tag {
+            return Some(i);
+        }
+        let (insn, _len) = Insn::decode(self.mem.fetch_window(pc))?;
+        self.icache[slot] = (tag, insn);
+        Some(insn)
+    }
+
+    fn parent_engine_mode(&mut self, child: usize) -> Option<MassMode> {
+        let parent = self.cores[child].parent?;
+        self.sv.engine_of_parent(parent).map(|e| e.mode)
+    }
+
+    // ------------------------------------------------------------------
+    // apply (phase A)
+    // ------------------------------------------------------------------
+
+    fn apply(&mut self, id: usize, insn: Insn, now: u64) {
+        self.cores[id].retired += 1;
+        if let Insn::Meta { meta, ra, value, .. } = insn {
+            self.apply_meta(id, meta, ra, value, now);
+            return;
+        }
+        // Execute through the shared Y86 semantics with this core's
+        // latch-backed pseudo-register port.
+        let mut streamed: Option<i32> = None;
+        let effect = {
+            let core = &mut self.cores[id];
+            let mut port = LatchPort { latch: &mut core.latch, streamed: &mut streamed };
+            execute(&insn, core.pc, &mut core.regs, &mut self.mem, &mut port)
+        };
+        // A `%pp` write by a SUMUP child streams into the parent adder
+        // (§5.2: "executing addl to a special pseudo register ... triggers
+        // transferring to FromChild in the parent").
+        if let Some(v) = streamed {
+            if let Some(parent) = self.cores[id].parent {
+                if let Some(e) = self.sv.engine_of_parent(parent) {
+                    if e.mode == MassMode::Sum && e.arrive(v) {
+                        e.done_at = Some(now + self.timing.sv_readout);
+                    }
+                    self.trace.push(now, id, Event::Stream { value: v });
+                    self.sv.ops += 1;
+                } else {
+                    // outside mass mode the latch write also lands in the
+                    // parent's FromChild on termination; nothing to do now
+                }
+            }
+        }
+        match effect {
+            ExecEffect::Continue { next_pc } => {
+                self.cores[id].pc = next_pc;
+                self.cores[id].run = RunState::Idle;
+            }
+            ExecEffect::Stop(Status::Hlt) => {
+                if id == self.root {
+                    self.cores[id].run = RunState::Halted;
+                    self.halted = true;
+                    self.halt_at = now;
+                    self.trace.push(now, id, Event::Halt);
+                } else {
+                    self.fault = Some(format!("core {id}: halt inside a QT (use qterm)"));
+                }
+            }
+            ExecEffect::Stop(s) => {
+                self.fault = Some(format!("core {id}: stopped with {s:?} at {:#x}", self.cores[id].pc));
+            }
+        }
+    }
+
+    fn apply_meta(&mut self, id: usize, meta: MetaFn, ra: Reg, value: u32, now: u64) {
+        let next_pc = self.cores[id].pc + Insn::Meta { meta, ra, rb: Reg::None, value }.len() as u32;
+        match meta {
+            MetaFn::QPreAlloc => {
+                let want = value as usize;
+                let mut got = 0;
+                for cid in 0..self.cores.len() {
+                    if got == want {
+                        break;
+                    }
+                    if cid != id && self.cores[cid].available(now) {
+                        self.cores[cid].alloc = AllocState::PreAllocatedBy { parent: id };
+                        let m = self.cores[cid].mask();
+                        self.cores[id].prealloc |= m;
+                        got += 1;
+                        self.trace.push(now, cid, Event::PreAlloc { parent: id });
+                    }
+                }
+                // Renting fewer than requested is not fatal: the engines
+                // fall back to pool renting / waiting.
+                self.cores[id].pc = next_pc;
+                self.cores[id].run = RunState::Idle;
+            }
+            MetaFn::QCreate | MetaFn::QCall => {
+                // qcreate Lcont: child body = next insn, parent resumes at Lcont.
+                // qcall  Lsub : child body = Lsub,     parent resumes at next.
+                let (body, cont) = if meta == MetaFn::QCreate { (next_pc, value) } else { (value, next_pc) };
+                match self.rent_for(id, now) {
+                    Some(child) => {
+                        self.launch_child(id, child, body, now);
+                        self.cores[id].pc = cont;
+                        self.cores[id].run = RunState::Idle;
+                    }
+                    None => {
+                        // Emergency mechanism (§3.3): "the cores can suspend
+                        // processing their own QTs, borrowing their own
+                        // resources to their child-QTs".
+                        self.cores[id].borrow_stack.push(cont);
+                        self.cores[id].pc = body;
+                        self.cores[id].run = RunState::Idle;
+                        self.trace.push(now, id, Event::Borrow { body });
+                    }
+                }
+            }
+            MetaFn::QTerm => {
+                if let Some(cont) = self.cores[id].borrow_stack.pop() {
+                    // End of an inlined (borrowed) QT: deliver own latch to
+                    // own FromChild, resume the suspended QT.
+                    if ra != Reg::None {
+                        let v = self.cores[id].regs.get(ra).unwrap_or(0);
+                        self.cores[id].latch.from_child = Some(v);
+                    } else if let Some(v) = self.cores[id].latch.for_parent.take() {
+                        self.cores[id].latch.from_child = Some(v);
+                    }
+                    self.cores[id].pc = cont;
+                    self.cores[id].run = RunState::Idle;
+                    return;
+                }
+                if id == self.root {
+                    self.fault = Some("root QT executed qterm (use halt)".to_string());
+                    return;
+                }
+                if self.cores[id].parent.is_none() {
+                    // Reserved interrupt core finished its handler: log the
+                    // service and re-park, re-armed (§3.6) — no state to
+                    // save or restore, the payload cores never noticed.
+                    if let Some(raised) = self.irq_inflight[id].take() {
+                        self.irq_log.push((raised, now));
+                    }
+                    let handler = self.cores[id].offset;
+                    self.cores[id].reset_for_qt(handler);
+                    self.cores[id].run = RunState::Blocked(BlockReason::IrqWait);
+                    self.trace.push(now, id, Event::Block { why: "irq re-arm" });
+                    return;
+                }
+                self.terminate_child(id, ra, now);
+            }
+            MetaFn::QWait => {
+                // children already clear (checked at fetch); drain latch.
+                if ra != Reg::None {
+                    if let Some(v) = self.cores[id].latch.from_child.take() {
+                        let _ = self.cores[id].regs.set(ra, v);
+                    }
+                }
+                self.cores[id].pc = next_pc;
+                self.cores[id].run = RunState::Idle;
+            }
+            MetaFn::QCopy => {
+                // Forwarding: input latch → output latch (§4.6).
+                let v = self.cores[id].latch.from_parent;
+                self.cores[id].latch.for_parent = v;
+                self.cores[id].pc = next_pc;
+                self.cores[id].run = RunState::Idle;
+            }
+            MetaFn::QMassFor | MetaFn::QMassSum => {
+                let mode = if meta == MetaFn::QMassFor { MassMode::For } else { MassMode::Sum };
+                let core = &self.cores[id];
+                let count = core.regs.file[Reg::Edx as usize].max(0) as u32;
+                let addr = core.regs.file[Reg::Ecx as usize];
+                let acc = core.regs.file[Reg::Eax as usize];
+                let mut engine = MassEngine::new(mode, id, value, addr, count, acc, now, self.timing.sv_stagger);
+                if mode == MassMode::Sum && count == 0 {
+                    // still pay the readout on finalise
+                }
+                if count == 0 {
+                    engine.done_at = Some(now + self.timing.sv_stagger + if mode == MassMode::Sum { self.timing.sv_readout } else { 0 });
+                }
+                self.sv.engines.push(engine);
+                self.sv.ops += 1;
+                self.cores[id].pc = next_pc;
+                self.cores[id].run = RunState::Blocked(BlockReason::MassEngine);
+                self.trace.push(now, id, Event::MassStart { mode, count });
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // child lifecycle
+    // ------------------------------------------------------------------
+
+    /// Rent a core for `parent`: preallocated cores first, then the pool.
+    fn rent_for(&mut self, parent: usize, now: u64) -> Option<usize> {
+        self.rent_prealloc(parent, now)
+            .or_else(|| (0..self.cores.len()).find(|&cid| cid != parent && self.cores[cid].available(now)))
+    }
+
+    /// A free core from `parent`'s preallocated set.
+    fn rent_prealloc(&mut self, parent: usize, now: u64) -> Option<usize> {
+        let prealloc = self.cores[parent].prealloc;
+        (0..self.cores.len()).find(|&cid| {
+            let c = &self.cores[cid];
+            c.available_at <= now
+                && match c.alloc {
+                    AllocState::PreAllocatedBy { parent: p } => p == parent && prealloc & c.mask() != 0,
+                    _ => false,
+                }
+        })
+    }
+
+    /// Rent for a mass engine: §5.1's preallocation guarantee is also the
+    /// compiler's cap (§6.2 — "it should not allocate more than that
+    /// number of cores"), so an engine whose parent preallocated cores
+    /// waits for one of *those* to free instead of raiding the pool. Only
+    /// a parent with no preallocation at all falls back to the pool.
+    fn rent_for_mass(&mut self, parent: usize, now: u64) -> Option<usize> {
+        if self.cores[parent].prealloc != 0 {
+            self.rent_prealloc(parent, now)
+        } else {
+            self.rent_for(parent, now)
+        }
+    }
+
+    /// Clone the parent's glue into `child` and enable it at `body`
+    /// (§4.4: "the child core commences its life after it received the
+    /// needed data").
+    fn launch_child(&mut self, parent: usize, child: usize, body: u32, now: u64) {
+        let glue = self.cores[parent].regs.clone();
+        let handoff = self.cores[parent].latch.for_child.take();
+        self.rented_mask |= 1u64 << child;
+        let c = &mut self.cores[child];
+        c.alloc = AllocState::Rented;
+        c.reset_for_qt(body);
+        c.regs = glue;
+        c.parent = Some(parent);
+        c.latch.from_parent = handoff;
+        let m = c.mask();
+        self.cores[parent].children |= m;
+        self.sv.ops += 1;
+        self.trace.push(now, child, Event::Launch { parent, body });
+    }
+
+    /// Ordinary (non-engine) child termination: clone-back, clear masks,
+    /// return the core to the pool.
+    fn terminate_child(&mut self, id: usize, link: Reg, now: u64) {
+        let parent = self.cores[id].parent.expect("child has parent");
+        // Clone-back: explicit link register wins, else a pending %pp write.
+        let value = if link != Reg::None {
+            self.cores[id].regs.get(link)
+        } else {
+            self.cores[id].latch.for_parent.take()
+        };
+        if let Some(v) = value {
+            self.cores[parent].latch.from_child = Some(v);
+        }
+        let m = self.cores[id].mask();
+        self.cores[parent].children &= !m;
+        self.cores[parent].prealloc &= !m;
+        let c = &mut self.cores[id];
+        c.alloc = AllocState::Free;
+        c.parent = None;
+        c.run = RunState::Terminated;
+        c.available_at = now;
+        self.sv.ops += 1;
+        self.trace.push(now, id, Event::Term { parent });
+    }
+
+    // ------------------------------------------------------------------
+    // mass engines
+    // ------------------------------------------------------------------
+
+    fn engines_tick(&mut self, now: u64) {
+        for eidx in 0..self.sv.engines.len() {
+            if self.sv.engines[eidx].finished {
+                continue;
+            }
+            let (mode, parent) = {
+                let e = &self.sv.engines[eidx];
+                (e.mode, e.parent)
+            };
+            // finalise?
+            if let Some(done_at) = self.sv.engines[eidx].done_at {
+                if done_at <= now {
+                    self.finalize_engine(eidx, now);
+                    continue;
+                }
+            }
+            match mode {
+                MassMode::Sum => {
+                    // Launch due children, one per SV tick (§4.1.3: the SV
+                    // is sequential — one allocation at a time).
+                    while self.sv.engines[eidx].remaining > 0 && self.sv.engines[eidx].next_launch_at <= now {
+                        let Some(child) = self.rent_for_mass(parent, now) else { break };
+                        let (body, addr) = {
+                            let e = &mut self.sv.engines[eidx];
+                            let a = e.addr;
+                            e.addr = e.addr.wrapping_add(4);
+                            e.remaining -= 1;
+                            e.next_launch_at = now + self.timing.sv_stagger;
+                            (e.body, a)
+                        };
+                        self.launch_child(parent, child, body, now);
+                        self.cores[child].regs.file[Reg::Ecx as usize] = addr;
+                        break; // one allocation per tick
+                    }
+                }
+                MassMode::For => {
+                    // First launch only; iterations relaunch combinationally
+                    // at the child's qterm.
+                    if self.sv.engines[eidx].child.is_none()
+                        && self.sv.engines[eidx].remaining > 0
+                        && self.sv.engines[eidx].next_launch_at <= now
+                    {
+                        let Some(child) = self.rent_for_mass(parent, now) else { continue };
+                        let (body, addr, acc) = {
+                            let e = &mut self.sv.engines[eidx];
+                            e.child = Some(child);
+                            (e.body, e.addr, e.acc)
+                        };
+                        self.launch_child(parent, child, body, now);
+                        self.cores[child].regs.file[Reg::Ecx as usize] = addr;
+                        self.cores[child].regs.file[Reg::Eax as usize] = acc;
+                    }
+                }
+            }
+        }
+        self.sv.reap();
+    }
+
+    /// FOR engine: one iteration finished (child fetched `qterm`).
+    /// Returns true when the child was relaunched (caller refetches).
+    fn for_engine_iter_done(&mut self, child: usize, now: u64, worklist: &mut Vec<usize>) -> bool {
+        let eidx = self
+            .sv
+            .engines
+            .iter()
+            .position(|e| e.child == Some(child) && !e.finished)
+            .expect("engine of child");
+        let parent = self.sv.engines[eidx].parent;
+        // Clone back the partial sum (§5.1: "the new partial sum is cloned
+        // back to the parent also in %eax").
+        let partial = self.cores[child].regs.file[Reg::Eax as usize];
+        {
+            let e = &mut self.sv.engines[eidx];
+            e.acc = partial;
+            e.remaining -= 1;
+            e.addr = e.addr.wrapping_add(4);
+        }
+        self.sv.ops += 1;
+        if self.sv.engines[eidx].remaining > 0 {
+            // Relaunch on the same rented child, same clock: the SV's
+            // combinational termination+restart (§3.4).
+            let (body, addr, acc) = {
+                let e = &self.sv.engines[eidx];
+                (e.body, e.addr, e.acc)
+            };
+            let glue = self.cores[parent].regs.clone();
+            let c = &mut self.cores[child];
+            c.regs = glue;
+            c.regs.file[Reg::Ecx as usize] = addr;
+            c.regs.file[Reg::Eax as usize] = acc;
+            c.pc = body;
+            c.run = RunState::Idle;
+            self.trace.push(now, child, Event::Relaunch { iteration_addr: addr });
+            true
+        } else {
+            // Engine complete: release the child back to preallocation,
+            // deliver results, unblock the parent this clock.
+            let m = self.cores[child].mask();
+            self.cores[parent].children &= !m;
+            let c = &mut self.cores[child];
+            c.alloc = AllocState::PreAllocatedBy { parent };
+            c.parent = None;
+            c.run = RunState::Terminated;
+            c.available_at = now;
+            self.sv.engines[eidx].child = None;
+            self.sv.engines[eidx].done_at = Some(now);
+            self.finalize_engine(eidx, now);
+            worklist.push(parent);
+            false
+        }
+    }
+
+    /// SUMUP child fetched its `qterm`: release the core back to the
+    /// parent's preallocated set; put-back administration keeps it
+    /// unavailable for `sumup_rent_overhead` clocks (the §6.2 rent period
+    /// that caps useful children at 30).
+    fn sum_child_release(&mut self, id: usize, now: u64) {
+        let parent = self.cores[id].parent.expect("sum child has parent");
+        let m = self.cores[id].mask();
+        self.cores[parent].children &= !m;
+        let c = &mut self.cores[id];
+        c.alloc = AllocState::PreAllocatedBy { parent };
+        c.parent = None;
+        c.run = RunState::Terminated;
+        c.available_at = now + self.timing.sumup_rent_overhead;
+        self.sv.ops += 1;
+        self.trace.push(now, id, Event::Term { parent });
+    }
+
+    /// Deliver engine results to the parent and unblock it.
+    fn finalize_engine(&mut self, eidx: usize, now: u64) {
+        let (parent, acc, addr, mode) = {
+            let e = &mut self.sv.engines[eidx];
+            e.finished = true;
+            (e.parent, e.acc, e.addr, e.mode)
+        };
+        let p = &mut self.cores[parent];
+        // Leave the architectural state as the conventional loop would:
+        // %eax = sum, %ecx = one past the vector, %edx = 0.
+        p.regs.file[Reg::Eax as usize] = acc;
+        p.regs.file[Reg::Ecx as usize] = addr;
+        p.regs.file[Reg::Edx as usize] = 0;
+        if p.run == RunState::Blocked(BlockReason::MassEngine) {
+            p.run = RunState::Idle;
+        }
+        self.sv.ops += 1;
+        self.trace.push(now, parent, Event::MassDone { mode, sum: acc });
+    }
+}
+
+/// Pseudo-register port backed by a core's latch registers (§4.6).
+///
+/// Context-dependent directions: reading `%pc` takes the `FromParent`
+/// latch; writing `%pc` stages `ForChild`. Reading `%pp` peeks
+/// `FromChild`; writing `%pp` latches `ForParent` (and, in SUMUP mode,
+/// streams to the parent adder — handled by the caller through
+/// `streamed`). Empty latches read as 0.
+struct LatchPort<'a> {
+    latch: &'a mut super::core::Latches,
+    streamed: &'a mut Option<i32>,
+}
+
+impl PseudoPort for LatchPort<'_> {
+    fn read(&mut self, r: Reg) -> Option<i32> {
+        Some(match r {
+            Reg::PseudoC => self.latch.from_parent.unwrap_or(0),
+            Reg::PseudoP => self.latch.from_child.unwrap_or(0),
+            _ => return None,
+        })
+    }
+
+    fn write(&mut self, r: Reg, v: i32) -> Option<()> {
+        match r {
+            Reg::PseudoC => self.latch.for_child = Some(v),
+            Reg::PseudoP => {
+                self.latch.for_parent = Some(v);
+                *self.streamed = Some(v);
+            }
+            _ => return None,
+        }
+        Some(())
+    }
+}

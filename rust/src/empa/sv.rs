@@ -1,0 +1,161 @@
+//! Supervisor-level state (§4.1.3).
+//!
+//! The SV is "a second, end-user configurable control layer ... above and
+//! between the PUs". Its bookkeeping (pool, bitmasks, latch transfers) is
+//! invoked synchronously from the processor tick — justified by §4.1.3:
+//! the SV's "simple combinational logic can be operated at a frequency ...
+//! much higher than the clock frequency needed for the cores". Only where
+//! the SV's *sequential* nature matters (one core allocation per control
+//! tick, §4.1.3) do we pace actions explicitly, via `sv_stagger`.
+//!
+//! The mass-processing engines (§5.1 FOR, §5.2 SUMUP) live here: one
+//! engine per parent core, configured by the `qmassfor` / `qmasssum`
+//! metainstructions.
+
+
+/// Which mass-processing mode an engine implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MassMode {
+    /// §5.1: SV takes over loop organisation; one preallocated child is
+    /// re-launched per iteration, partial sum cloned back each time.
+    For,
+    /// §5.2: staggered one-shot children stream summands through their
+    /// `ForParent` latch into the parent-side adder.
+    Sum,
+}
+
+/// One active mass-processing engine.
+#[derive(Debug, Clone)]
+pub struct MassEngine {
+    pub mode: MassMode,
+    /// The stalled parent core this engine works for.
+    pub parent: usize,
+    /// Address of the body QT.
+    pub body: u32,
+    /// Address of the next vector element ("the SV calculates the address
+    /// of the vector element for the next iteration", §5.1).
+    pub addr: i32,
+    /// Iterations not yet launched.
+    pub remaining: u32,
+    /// Total iterations.
+    pub total: u32,
+    /// SUMUP: summands received by the parent-side adder.
+    pub arrived: u32,
+    /// The accumulator (the "adder prepared in the parent", §5.2; the
+    /// cloned-back partial sum for FOR).
+    pub acc: i32,
+    /// Earliest clock for the next child launch (SV sequential pacing).
+    pub next_launch_at: u64,
+    /// FOR: the single reused child core.
+    pub child: Option<usize>,
+    /// Set when all iterations completed; engine finalises (readout to the
+    /// parent) once `clock >= done_at`.
+    pub done_at: Option<u64>,
+    /// Engine finalised; kept until the processor reaps it.
+    pub finished: bool,
+}
+
+impl MassEngine {
+    pub fn new(mode: MassMode, parent: usize, body: u32, addr: i32, count: u32, acc: i32, now: u64, stagger: u64) -> Self {
+        MassEngine {
+            mode,
+            parent,
+            body,
+            addr,
+            remaining: count,
+            total: count,
+            arrived: 0,
+            acc,
+            next_launch_at: now + stagger,
+            child: None,
+            done_at: if count == 0 { Some(now + stagger) } else { None },
+            finished: false,
+        }
+    }
+
+    /// Record a streamed summand (SUMUP arrival into the parent adder).
+    /// Returns true when this was the last awaited summand.
+    pub fn arrive(&mut self, value: i32) -> bool {
+        self.acc = self.acc.wrapping_add(value);
+        self.arrived += 1;
+        self.arrived == self.total
+    }
+}
+
+/// Supervisor state: the set of active mass engines.
+///
+/// (Pool and bitmask state lives on the cores themselves, mirroring the
+/// paper's Fig. 2 where the masks are per-core storage the SV reads and
+/// writes.)
+#[derive(Debug, Default)]
+pub struct Supervisor {
+    pub engines: Vec<MassEngine>,
+    /// Total SV-level operations performed (metrics: SV load, §4.1.3
+    /// bottleneck analysis).
+    pub ops: u64,
+}
+
+impl Supervisor {
+    /// Engine driven by `parent`, if any unfinished one exists.
+    pub fn engine_of_parent(&mut self, parent: usize) -> Option<&mut MassEngine> {
+        self.engines.iter_mut().find(|e| e.parent == parent && !e.finished)
+    }
+
+    /// Engine whose FOR child is `core`.
+    pub fn engine_of_child(&mut self, core: usize) -> Option<&mut MassEngine> {
+        self.engines.iter_mut().find(|e| e.child == Some(core) && !e.finished)
+    }
+
+    /// True when `parent` still has an unfinished engine (blocks `halt`).
+    pub fn parent_engine_active(&self, parent: usize) -> bool {
+        self.engines.iter().any(|e| e.parent == parent && !e.finished)
+    }
+
+    /// Drop finished engines.
+    pub fn reap(&mut self) {
+        self.engines.retain(|e| !e.finished);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_zero_count_completes_immediately() {
+        let e = MassEngine::new(MassMode::For, 0, 0x20, 0x100, 0, 0, 16, 1);
+        assert_eq!(e.done_at, Some(17));
+    }
+
+    #[test]
+    fn arrivals_accumulate_and_complete() {
+        let mut e = MassEngine::new(MassMode::Sum, 0, 0x20, 0x100, 3, 10, 17, 1);
+        assert!(!e.arrive(1));
+        assert!(!e.arrive(2));
+        assert!(e.arrive(3));
+        assert_eq!(e.acc, 16); // initial 10 + 1+2+3
+        assert_eq!(e.next_launch_at, 18);
+    }
+
+    #[test]
+    fn supervisor_lookup() {
+        let mut sv = Supervisor::default();
+        sv.engines.push(MassEngine::new(MassMode::For, 2, 0, 0, 1, 0, 0, 1));
+        sv.engines[0].child = Some(5);
+        assert!(sv.engine_of_parent(2).is_some());
+        assert!(sv.engine_of_parent(3).is_none());
+        assert!(sv.engine_of_child(5).is_some());
+        assert!(sv.parent_engine_active(2));
+        sv.engines[0].finished = true;
+        assert!(!sv.parent_engine_active(2));
+        sv.reap();
+        assert!(sv.engines.is_empty());
+    }
+
+    #[test]
+    fn acc_wraps_like_hardware() {
+        let mut e = MassEngine::new(MassMode::Sum, 0, 0, 0, 1, i32::MAX, 0, 1);
+        e.arrive(1);
+        assert_eq!(e.acc, i32::MIN);
+    }
+}

@@ -1,0 +1,179 @@
+//! Instruction and supervisor timing model.
+//!
+//! The paper's simulator "uses arbitrary, but reasonable execution times,
+//! expressed in units of the control clock driving the SV" (§6). The
+//! defaults below are calibrated so that the cycle-stepped simulation
+//! reproduces **Table 1 exactly**:
+//!
+//! - NO mode:    `T(N) = 22 + 30·N`  → 52 / 82 / 142 / 202 for N=1,2,4,6
+//! - FOR mode:   `T(N) = 20 + 11·N`  → 31 / 42 /  64 /  86
+//! - SUMUP mode: `T(N) = 32 +    N`  → 33 / 34 /  36 /  38
+//!
+//! Derivation (checked by `rust/tests/table1.rs`): the Listing-1 loop body
+//! `mrmovl+addl+irmovl+addl+irmovl+addl+jne` must cost 30 clocks and the
+//! prologue+halt 22; the FOR-mode child body `mrmovl+addl` costs 11. All
+//! constants are plain fields so benches can sweep them (the paper notes
+//! "the actual values might change when an electronic version allows to
+//! provide more accurate data").
+
+use crate::isa::{Insn, MetaFn};
+
+/// Per-instruction-class and supervisor-operation costs, in core clocks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimingConfig {
+    // ---- core instruction classes -------------------------------------
+    /// `halt`
+    pub halt: u64,
+    /// `nop`
+    pub nop: u64,
+    /// `rrmovl`/`cmovXX`
+    pub cmov: u64,
+    /// `irmovl`
+    pub irmov: u64,
+    /// `rmmovl` (includes the memory write)
+    pub rmmov: u64,
+    /// `mrmovl` (includes the memory read)
+    pub mrmov: u64,
+    /// `addl`/`subl`/`andl`/`xorl`
+    pub alu: u64,
+    /// `mull` (the EMPAthY86 multiply extension; multi-cycle ALU op)
+    pub mul: u64,
+    /// `jXX`
+    pub jump: u64,
+    /// `call`
+    pub call: u64,
+    /// `ret`
+    pub ret: u64,
+    /// `pushl`/`popl`
+    pub stack: u64,
+    // ---- supervisor-level costs (charged on the issuing core's clock) --
+    /// Recognising + PC-advance for any metainstruction during pre-fetch
+    /// (§4.5: the SV takes over; one control clock).
+    pub meta_dispatch: u64,
+    /// `qprealloc` administration.
+    pub sv_prealloc: u64,
+    /// Renting a core + cloning the parent's "glue" (register file, flags,
+    /// PC) over the dedicated wiring (§4.4: "can take somewhat longer time
+    /// than the other SV operations").
+    pub sv_create: u64,
+    /// Entering FOR mass-processing mode (configuring the SV loop engine).
+    pub sv_mass_setup_for: u64,
+    /// Entering SUMUP mass-processing mode: loop engine plus the
+    /// parent-side adder of §5.2 ("an adder is prepared in the parent").
+    pub sv_mass_setup_sum: u64,
+    /// Terminating a QT: latch clone-back + bitmask administration.
+    pub sv_term: u64,
+    /// Draining a latched value into a parent register on wait/readout.
+    pub sv_readout: u64,
+    /// SUMUP stagger: clocks between successive child QT launches (the SV
+    /// is sequential — one allocation per control clock, §4.1.3).
+    pub sv_stagger: u64,
+    /// Clocks a SUMUP child core stays rented beyond its payload work
+    /// (creation + termination administration as seen by the pool). §6.2
+    /// sizes the pool from this rent period.
+    pub sumup_rent_overhead: u64,
+}
+
+impl Default for TimingConfig {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+impl TimingConfig {
+    /// The calibrated paper defaults (see module docs).
+    pub fn paper() -> Self {
+        TimingConfig {
+            halt: 3,
+            nop: 1,
+            cmov: 3,
+            irmov: 4,
+            rmmov: 8,
+            mrmov: 8,
+            alu: 3,
+            mul: 6,
+            jump: 5,
+            call: 5,
+            ret: 5,
+            stack: 6,
+            meta_dispatch: 1,
+            sv_prealloc: 1,
+            sv_create: 3,
+            sv_mass_setup_for: 2,
+            sv_mass_setup_sum: 3,
+            sv_term: 1,
+            sv_readout: 1,
+            sv_stagger: 1,
+            sumup_rent_overhead: 19,
+        }
+    }
+
+    /// Cost of a conventional (non-meta) instruction.
+    pub fn insn_cost(&self, i: &Insn) -> u64 {
+        match i {
+            Insn::Halt => self.halt,
+            Insn::Nop => self.nop,
+            Insn::CMov { .. } => self.cmov,
+            Insn::IrMov { .. } => self.irmov,
+            Insn::RmMov { .. } => self.rmmov,
+            Insn::MrMov { .. } => self.mrmov,
+            Insn::Op { op: crate::isa::OpFn::Mul, .. } => self.mul,
+            Insn::Op { .. } => self.alu,
+            Insn::Jump { .. } => self.jump,
+            Insn::Call { .. } => self.call,
+            Insn::Ret => self.ret,
+            Insn::Push { .. } | Insn::Pop { .. } => self.stack,
+            Insn::Meta { .. } => self.meta_dispatch,
+        }
+    }
+
+    /// SV-level cost charged for a metainstruction (on top of dispatch).
+    pub fn meta_cost(&self, m: MetaFn) -> u64 {
+        match m {
+            MetaFn::QCreate | MetaFn::QCall => self.sv_create,
+            MetaFn::QTerm => self.sv_term,
+            MetaFn::QWait => self.sv_readout,
+            MetaFn::QPreAlloc => self.sv_prealloc,
+            MetaFn::QMassFor => self.sv_mass_setup_for,
+            MetaFn::QMassSum => self.sv_mass_setup_sum,
+            MetaFn::QCopy => self.sv_readout,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{CondFn, OpFn, Reg};
+
+    /// The closed-form cross-check from the module docs: the Listing-1
+    /// instruction mix must produce the paper's linear time laws.
+    #[test]
+    fn paper_costs_reproduce_closed_forms() {
+        let t = TimingConfig::paper();
+        // NO-mode prologue: irmovl+irmovl+xorl+andl+je, epilogue halt.
+        let prologue = t.irmov + t.irmov + t.alu + t.alu + t.jump;
+        let epilogue = t.halt;
+        assert_eq!(prologue + epilogue, 22);
+        // NO-mode loop body: mrmovl,addl,irmovl,addl,irmovl,addl,jne.
+        let body = t.mrmov + t.alu + t.irmov + t.alu + t.irmov + t.alu + t.jump;
+        assert_eq!(body, 30);
+        // FOR-mode child payload: mrmovl+addl.
+        assert_eq!(t.mrmov + t.alu, 11);
+    }
+
+    #[test]
+    fn insn_cost_dispatch() {
+        let t = TimingConfig::paper();
+        assert_eq!(t.insn_cost(&Insn::Halt), 3);
+        assert_eq!(t.insn_cost(&Insn::IrMov { imm: 0, rb: Reg::Eax }), 4);
+        assert_eq!(t.insn_cost(&Insn::MrMov { ra: Reg::Esi, rb: Reg::Ecx, disp: 0 }), 8);
+        assert_eq!(t.insn_cost(&Insn::Op { op: OpFn::Add, ra: Reg::Eax, rb: Reg::Eax }), 3);
+        assert_eq!(t.insn_cost(&Insn::Jump { cond: CondFn::Ne, dest: 0 }), 5);
+    }
+
+    #[test]
+    fn default_is_paper() {
+        assert_eq!(TimingConfig::default(), TimingConfig::paper());
+    }
+}

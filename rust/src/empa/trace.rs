@@ -1,0 +1,102 @@
+//! Event trace for debugging, tests and the occupancy plots.
+
+use super::sv::MassMode;
+
+/// Supervisor/core-level events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// Core rented from the pool.
+    Rent { parent: Option<usize> },
+    /// Core preallocated for `parent` (§5.1).
+    PreAlloc { parent: usize },
+    /// Child QT launched at `body` (glue cloned in).
+    Launch { parent: usize, body: u32 },
+    /// FOR engine relaunched the child for the next iteration.
+    Relaunch { iteration_addr: i32 },
+    /// QT terminated; core returned towards the pool.
+    Term { parent: usize },
+    /// Core blocked by the SV.
+    Block { why: &'static str },
+    /// Blocked condition cleared.
+    Unblock,
+    /// Emergency inline execution of a child QT (§3.3).
+    Borrow { body: u32 },
+    /// SUMUP child streamed a summand into the parent adder.
+    Stream { value: i32 },
+    /// Mass engine configured.
+    MassStart { mode: MassMode, count: u32 },
+    /// Mass engine finalised.
+    MassDone { mode: MassMode, sum: i32 },
+    /// Root core halted.
+    Halt,
+}
+
+/// A recorded `(clock, core, event)` triple.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEntry {
+    pub clock: u64,
+    pub core: usize,
+    pub event: Event,
+}
+
+/// Bounded event recorder; disabled by default for speed.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    enabled: bool,
+    pub entries: Vec<TraceEntry>,
+}
+
+impl Trace {
+    pub fn new(enabled: bool) -> Self {
+        Trace { enabled, entries: Vec::new() }
+    }
+
+    #[inline]
+    pub fn push(&mut self, clock: u64, core: usize, event: Event) {
+        if self.enabled {
+            self.entries.push(TraceEntry { clock, core, event });
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Events of one kind, for assertions in tests.
+    pub fn count(&self, pred: impl Fn(&Event) -> bool) -> usize {
+        self.entries.iter().filter(|e| pred(&e.event)).count()
+    }
+
+    /// Render a human-readable log.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        for e in &self.entries {
+            let _ = writeln!(s, "[{:>6}] core {:>2}: {:?}", e.clock, e.core, e.event);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::new(false);
+        t.push(1, 0, Event::Halt);
+        assert!(t.entries.is_empty());
+        assert!(!t.is_enabled());
+    }
+
+    #[test]
+    fn enabled_trace_records_and_counts() {
+        let mut t = Trace::new(true);
+        t.push(1, 0, Event::Halt);
+        t.push(2, 1, Event::Unblock);
+        assert_eq!(t.entries.len(), 2);
+        assert_eq!(t.count(|e| matches!(e, Event::Halt)), 1);
+        assert!(t.render().contains("core  1"));
+    }
+}

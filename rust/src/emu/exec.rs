@@ -1,0 +1,268 @@
+//! Shared Y86 instruction semantics.
+//!
+//! [`execute`] implements the architectural effect of one non-meta
+//! instruction. Pseudo-register traffic (§4.6) is delegated to a
+//! [`PseudoPort`], so the same function drives both the conventional CPU
+//! (which denies pseudo-registers) and the EMPA cores (which map them to
+//! their latch registers).
+
+use crate::isa::{CondCodes, Insn, Reg, Status};
+#[cfg(test)]
+use crate::isa::OpFn;
+use crate::mem::Memory;
+
+/// Architectural register file + condition codes ("glue" in the paper's
+/// terminology — the state cloned to a child on QT creation, §3.2).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CoreRegs {
+    pub file: [i32; 8],
+    pub cc: CondCodes,
+}
+
+impl CoreRegs {
+    /// Read an architectural register (not a pseudo-register).
+    pub fn get(&self, r: Reg) -> Option<i32> {
+        r.file_index().map(|i| self.file[i])
+    }
+
+    /// Write an architectural register.
+    pub fn set(&mut self, r: Reg, v: i32) -> Option<()> {
+        r.file_index().map(|i| self.file[i] = v)
+    }
+}
+
+/// Where pseudo-register reads/writes go. The conventional CPU denies
+/// them; an EMPA core wires them to its latch registers under SV control.
+pub trait PseudoPort {
+    /// Read the latch behind pseudo-register `r`; `None` = architectural
+    /// fault (conventional CPU) — EMPA cores may instead *block*, which is
+    /// handled above this layer.
+    fn read(&mut self, r: Reg) -> Option<i32>;
+    /// Write the latch behind pseudo-register `r`.
+    fn write(&mut self, r: Reg, v: i32) -> Option<()>;
+}
+
+/// [`PseudoPort`] for the conventional machine: any pseudo access faults.
+pub struct DenyPseudo;
+
+impl PseudoPort for DenyPseudo {
+    fn read(&mut self, _r: Reg) -> Option<i32> {
+        None
+    }
+    fn write(&mut self, _r: Reg, _v: i32) -> Option<()> {
+        None
+    }
+}
+
+/// Result of executing one instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecEffect {
+    /// Keep running from `next_pc`.
+    Continue { next_pc: u32 },
+    /// Machine stopped with the given status.
+    Stop(Status),
+}
+
+fn read_any(r: Reg, regs: &CoreRegs, pseudo: &mut dyn PseudoPort) -> Option<i32> {
+    if r.is_pseudo() {
+        pseudo.read(r)
+    } else {
+        regs.get(r)
+    }
+}
+
+fn write_any(r: Reg, v: i32, regs: &mut CoreRegs, pseudo: &mut dyn PseudoPort) -> Option<()> {
+    if r.is_pseudo() {
+        pseudo.write(r, v)
+    } else {
+        regs.set(r, v)
+    }
+}
+
+/// Execute one non-meta instruction at `pc`.
+///
+/// Metainstructions must be intercepted by the caller (the core's
+/// pre-fetch raises `Meta` and the SV executes them, §4.5); passing one
+/// here returns `Stop(Ins)` like any invalid opcode would on a
+/// conventional machine.
+pub fn execute(
+    insn: &Insn,
+    pc: u32,
+    regs: &mut CoreRegs,
+    mem: &mut Memory,
+    pseudo: &mut dyn PseudoPort,
+) -> ExecEffect {
+    let next = pc + insn.len() as u32;
+    let cont = ExecEffect::Continue { next_pc: next };
+    let fault = |s: Status| ExecEffect::Stop(s);
+    match *insn {
+        Insn::Halt => fault(Status::Hlt),
+        Insn::Nop => cont,
+        Insn::CMov { cond, ra, rb } => {
+            let Some(v) = read_any(ra, regs, pseudo) else { return fault(Status::Ins) };
+            if regs.cc.eval(cond) {
+                if write_any(rb, v, regs, pseudo).is_none() {
+                    return fault(Status::Ins);
+                }
+            }
+            cont
+        }
+        Insn::IrMov { imm, rb } => {
+            if write_any(rb, imm, regs, pseudo).is_none() {
+                return fault(Status::Ins);
+            }
+            cont
+        }
+        Insn::RmMov { ra, rb, disp } => {
+            let (Some(v), Some(base)) = (read_any(ra, regs, pseudo), read_any(rb, regs, pseudo)) else {
+                return fault(Status::Ins);
+            };
+            let addr = base.wrapping_add(disp) as u32;
+            match mem.write_u32(addr, v as u32) {
+                Ok(()) => cont,
+                Err(_) => fault(Status::Adr),
+            }
+        }
+        Insn::MrMov { ra, rb, disp } => {
+            let Some(base) = read_any(rb, regs, pseudo) else { return fault(Status::Ins) };
+            let addr = base.wrapping_add(disp) as u32;
+            match mem.read_u32(addr) {
+                Ok(v) => {
+                    if write_any(ra, v as i32, regs, pseudo).is_none() {
+                        return fault(Status::Ins);
+                    }
+                    cont
+                }
+                Err(_) => fault(Status::Adr),
+            }
+        }
+        Insn::Op { op, ra, rb } => {
+            let (Some(a), Some(b)) = (read_any(ra, regs, pseudo), read_any(rb, regs, pseudo)) else {
+                return fault(Status::Ins);
+            };
+            let (r, of) = op.apply(a, b);
+            regs.cc = CondCodes { zf: r == 0, sf: r < 0, of };
+            if write_any(rb, r, regs, pseudo).is_none() {
+                return fault(Status::Ins);
+            }
+            cont
+        }
+        Insn::Jump { cond, dest } => {
+            if regs.cc.eval(cond) {
+                ExecEffect::Continue { next_pc: dest }
+            } else {
+                cont
+            }
+        }
+        Insn::Call { dest } => {
+            let sp = regs.file[Reg::Esp as usize].wrapping_sub(4);
+            if mem.write_u32(sp as u32, next).is_err() {
+                return fault(Status::Adr);
+            }
+            regs.file[Reg::Esp as usize] = sp;
+            ExecEffect::Continue { next_pc: dest }
+        }
+        Insn::Ret => {
+            let sp = regs.file[Reg::Esp as usize];
+            match mem.read_u32(sp as u32) {
+                Ok(ra) => {
+                    regs.file[Reg::Esp as usize] = sp.wrapping_add(4);
+                    ExecEffect::Continue { next_pc: ra }
+                }
+                Err(_) => fault(Status::Adr),
+            }
+        }
+        Insn::Push { ra } => {
+            let Some(v) = read_any(ra, regs, pseudo) else { return fault(Status::Ins) };
+            let sp = regs.file[Reg::Esp as usize].wrapping_sub(4);
+            if mem.write_u32(sp as u32, v as u32).is_err() {
+                return fault(Status::Adr);
+            }
+            regs.file[Reg::Esp as usize] = sp;
+            cont
+        }
+        Insn::Pop { ra } => {
+            let sp = regs.file[Reg::Esp as usize];
+            match mem.read_u32(sp as u32) {
+                Ok(v) => {
+                    // Y86: increment before write so `popl %esp` gets the value.
+                    regs.file[Reg::Esp as usize] = sp.wrapping_add(4);
+                    if write_any(ra, v as i32, regs, pseudo).is_none() {
+                        return fault(Status::Ins);
+                    }
+                    cont
+                }
+                Err(_) => fault(Status::Adr),
+            }
+        }
+        Insn::Meta { .. } => fault(Status::Ins),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::CondFn;
+
+    fn setup() -> (CoreRegs, Memory, DenyPseudo) {
+        (CoreRegs::default(), Memory::new(256), DenyPseudo)
+    }
+
+    #[test]
+    fn alu_sets_flags() {
+        let (mut regs, mut mem, mut p) = setup();
+        regs.file[0] = 5;
+        regs.file[3] = 5;
+        let i = Insn::Op { op: OpFn::Sub, ra: Reg::Eax, rb: Reg::Ebx };
+        execute(&i, 0, &mut regs, &mut mem, &mut p);
+        assert_eq!(regs.file[3], 0);
+        assert!(regs.cc.zf && !regs.cc.sf && !regs.cc.of);
+    }
+
+    #[test]
+    fn sub_overflow_flag() {
+        let (mut regs, mut mem, mut p) = setup();
+        regs.file[0] = 1;
+        regs.file[3] = i32::MIN;
+        let i = Insn::Op { op: OpFn::Sub, ra: Reg::Eax, rb: Reg::Ebx };
+        execute(&i, 0, &mut regs, &mut mem, &mut p);
+        assert_eq!(regs.file[3], i32::MAX);
+        assert!(regs.cc.of);
+    }
+
+    #[test]
+    fn jump_taken_and_not() {
+        let (mut regs, mut mem, mut p) = setup();
+        regs.cc.zf = true;
+        let i = Insn::Jump { cond: CondFn::E, dest: 0x40 };
+        assert_eq!(execute(&i, 0, &mut regs, &mut mem, &mut p), ExecEffect::Continue { next_pc: 0x40 });
+        regs.cc.zf = false;
+        assert_eq!(execute(&i, 0, &mut regs, &mut mem, &mut p), ExecEffect::Continue { next_pc: 5 });
+    }
+
+    #[test]
+    fn mem_roundtrip_through_insns() {
+        let (mut regs, mut mem, mut p) = setup();
+        regs.file[1] = 0x20; // %ecx
+        regs.file[6] = 1234; // %esi
+        execute(&Insn::RmMov { ra: Reg::Esi, rb: Reg::Ecx, disp: 4 }, 0, &mut regs, &mut mem, &mut p);
+        execute(&Insn::MrMov { ra: Reg::Edi, rb: Reg::Ecx, disp: 4 }, 0, &mut regs, &mut mem, &mut p);
+        assert_eq!(regs.file[7], 1234);
+    }
+
+    #[test]
+    fn pseudo_denied_faults() {
+        let (mut regs, mut mem, mut p) = setup();
+        let i = Insn::Op { op: OpFn::Add, ra: Reg::Eax, rb: Reg::PseudoP };
+        assert_eq!(execute(&i, 0, &mut regs, &mut mem, &mut p), ExecEffect::Stop(Status::Ins));
+    }
+
+    #[test]
+    fn pop_esp_semantics() {
+        let (mut regs, mut mem, mut p) = setup();
+        regs.file[4] = 0x10;
+        mem.write_u32(0x10, 0x77).unwrap();
+        execute(&Insn::Pop { ra: Reg::Esp }, 0, &mut regs, &mut mem, &mut p);
+        assert_eq!(regs.file[4], 0x77); // popped value wins over increment
+    }
+}

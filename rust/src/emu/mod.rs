@@ -1,0 +1,202 @@
+//! Sequential Y86 emulator — the conventional single-processor baseline
+//! ("NO EMPA acceleration" rows of Table 1).
+//!
+//! The instruction semantics live in [`exec`] and are shared with the EMPA
+//! cores (which differ only in the handling of pseudo-registers and
+//! metainstructions — §4.1.2: "the cores in an EMPA processor are mostly
+//! similar to the present single-core processor, with some extra
+//! functionality").
+
+pub mod exec;
+
+pub use exec::{execute, CoreRegs, DenyPseudo, ExecEffect, PseudoPort};
+
+use crate::empa::timing::TimingConfig;
+use crate::isa::{Insn, Status};
+use crate::mem::{bus::MemoryBus, MemConfig, Memory};
+
+/// A conventional sequential Y86 machine with cycle accounting.
+pub struct Cpu {
+    pub regs: CoreRegs,
+    pub pc: u32,
+    pub status: Status,
+    pub mem: Memory,
+    pub bus: MemoryBus,
+    pub timing: TimingConfig,
+    /// Total clocks elapsed.
+    pub clock: u64,
+    /// Instructions retired.
+    pub retired: u64,
+}
+
+impl Cpu {
+    /// Build a CPU with the program image loaded at address 0.
+    pub fn new(image: &[u8], timing: TimingConfig, mem_cfg: &MemConfig) -> Self {
+        Cpu {
+            regs: CoreRegs::default(),
+            pc: 0,
+            status: Status::Aok,
+            mem: Memory::with_image(mem_cfg.size, image),
+            bus: MemoryBus::new(mem_cfg),
+            timing,
+            clock: 0,
+            retired: 0,
+        }
+    }
+
+    /// Convenience constructor with paper timing and ideal memory.
+    pub fn with_image(image: &[u8]) -> Self {
+        Cpu::new(image, TimingConfig::paper(), &MemConfig::ideal())
+    }
+
+    /// Execute one instruction; returns false when the machine stopped.
+    pub fn step(&mut self) -> bool {
+        if !self.status.running() {
+            return false;
+        }
+        let Some((insn, _len)) = Insn::decode(self.mem.fetch_window(self.pc)) else {
+            self.status = Status::Ins;
+            return false;
+        };
+        // The conventional processor has no supervisor: a metainstruction
+        // is an invalid opcode here.
+        if insn.is_meta() {
+            self.status = Status::Ins;
+            return false;
+        }
+        let base = self.timing.insn_cost(&insn);
+        // Memory instructions contend for the bus.
+        let stall = if matches!(insn, Insn::MrMov { .. } | Insn::RmMov { .. }) {
+            self.bus.access(self.clock)
+        } else {
+            0
+        };
+        let mut deny = DenyPseudo;
+        let effect = execute(&insn, self.pc, &mut self.regs, &mut self.mem, &mut deny);
+        self.clock += base + stall;
+        self.retired += 1;
+        match effect {
+            ExecEffect::Continue { next_pc } => {
+                self.pc = next_pc;
+                true
+            }
+            ExecEffect::Stop(status) => {
+                self.status = status;
+                false
+            }
+        }
+    }
+
+    /// Run to completion (or until `max_steps` instructions, a runaway
+    /// guard for tests). Returns the final status.
+    pub fn run(&mut self, max_steps: u64) -> Status {
+        let mut steps = 0;
+        while self.step() {
+            steps += 1;
+            if steps >= max_steps {
+                break;
+            }
+        }
+        self.status
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assemble;
+
+    fn run_src(src: &str) -> Cpu {
+        let p = assemble(src).unwrap();
+        let mut cpu = Cpu::with_image(&p.image);
+        cpu.run(100_000);
+        cpu
+    }
+
+    #[test]
+    fn listing1_sums_the_paper_vector_in_52_plus_90_clocks() {
+        // Listing 1 with N=4: expected time 142 clocks (Table 1 row N=4 NO).
+        let cpu = run_src(crate::isa::asm::LISTING1);
+        assert_eq!(cpu.status, Status::Hlt);
+        assert_eq!(cpu.regs.file[0], 0xd + 0xc0 + 0xb00 + 0xa000); // %eax
+        assert_eq!(cpu.clock, 142);
+    }
+
+    #[test]
+    fn zero_length_vector_skips_loop() {
+        let src = "\
+    irmovl $0, %edx
+    irmovl $64, %ecx
+    xorl %eax, %eax
+    andl %edx, %edx
+    je End
+Loop:
+    mrmovl (%ecx), %esi
+    addl %esi, %eax
+    jne Loop
+End:
+    halt
+";
+        let cpu = run_src(src);
+        assert_eq!(cpu.status, Status::Hlt);
+        assert_eq!(cpu.regs.file[0], 0);
+        // prologue (19) + halt (3)
+        assert_eq!(cpu.clock, 22);
+    }
+
+    #[test]
+    fn call_ret_push_pop() {
+        let src = "\
+    irmovl $256, %esp
+    irmovl $7, %eax
+    call Double
+    halt
+Double:
+    pushl %eax
+    addl %eax, %eax
+    popl %ebx
+    ret
+";
+        let cpu = run_src(src);
+        assert_eq!(cpu.status, Status::Hlt);
+        assert_eq!(cpu.regs.file[0], 14); // %eax doubled
+        assert_eq!(cpu.regs.file[3], 7); // %ebx = pushed copy
+        assert_eq!(cpu.regs.file[4], 256); // %esp balanced
+    }
+
+    #[test]
+    fn meta_is_invalid_on_conventional_cpu() {
+        let cpu = run_src("qterm\n");
+        assert_eq!(cpu.status, Status::Ins);
+    }
+
+    #[test]
+    fn bad_address_sets_adr() {
+        let cpu = run_src("irmovl $0xFFFFF0, %ecx\nmrmovl (%ecx), %eax\nhalt\n");
+        assert_eq!(cpu.status, Status::Adr);
+    }
+
+    #[test]
+    fn cmov_variants() {
+        let src = "\
+    irmovl $5, %eax
+    irmovl $3, %ebx
+    subl %ebx, %eax     # eax = 2, positive
+    irmovl $111, %ecx
+    cmovg %ecx, %edx    # taken
+    cmovl %ecx, %esi    # not taken
+    halt
+";
+        let cpu = run_src(src);
+        assert_eq!(cpu.regs.file[2], 111);
+        assert_eq!(cpu.regs.file[6], 0);
+    }
+
+    #[test]
+    fn runaway_guard_stops() {
+        let mut cpu = Cpu::with_image(&assemble("Loop: jmp Loop\n").unwrap().image);
+        cpu.run(10);
+        assert_eq!(cpu.status, Status::Aok); // still running, guard tripped
+        assert!(cpu.retired >= 10);
+    }
+}

@@ -1,0 +1,503 @@
+//! Two-pass Y86/EMPA assembler.
+//!
+//! Accepts the dialect of the paper's Listing 1 (CS:APP `yas` syntax):
+//! labels, `.pos`/`.align`/`.long` directives, `#` comments, `$imm`
+//! immediates (decimal or `0x` hex, label names allowed), `D(%reg)` memory
+//! operands — plus the EMPA metainstruction mnemonics (`qcreate`, `qcall`,
+//! `qterm`, `qwait`, `qprealloc`, `qmassfor`, `qmasssum`, `qcopy`).
+
+use super::insn::{CondFn, Insn, MetaFn, OpFn, Reg};
+use std::collections::HashMap;
+use thiserror::Error;
+
+/// Assembler errors, with 1-based source line numbers.
+#[derive(Debug, Error)]
+pub enum AsmError {
+    #[error("line {line}: unknown mnemonic `{mnemonic}`")]
+    UnknownMnemonic { line: usize, mnemonic: String },
+    #[error("line {line}: bad operand `{operand}`: {reason}")]
+    BadOperand { line: usize, operand: String, reason: String },
+    #[error("line {line}: wrong operand count for `{mnemonic}` (got {got}, want {want})")]
+    OperandCount { line: usize, mnemonic: String, got: usize, want: usize },
+    #[error("line {line}: undefined label `{label}`")]
+    UndefinedLabel { line: usize, label: String },
+    #[error("line {line}: duplicate label `{label}`")]
+    DuplicateLabel { line: usize, label: String },
+    #[error("line {line}: bad directive: {reason}")]
+    BadDirective { line: usize, reason: String },
+}
+
+/// An assembled program: a flat image plus symbol and line metadata.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    /// Memory image, starting at address 0.
+    pub image: Vec<u8>,
+    /// Label → address.
+    pub symbols: HashMap<String, u32>,
+    /// (address, source line, source text) for listing/disassembly.
+    pub lines: Vec<(u32, usize, String)>,
+    /// Entry point (address of the first emitted instruction; 0 unless a
+    /// `.pos` moved it).
+    pub entry: u32,
+}
+
+impl Program {
+    /// Look up a symbol's address.
+    pub fn symbol(&self, name: &str) -> Option<u32> {
+        self.symbols.get(name).copied()
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Item {
+    Insn { insn: PendingInsn, line: usize },
+    Long { value: PendingValue, line: usize },
+}
+
+/// An instruction whose immediate operands may still reference labels.
+#[derive(Debug, Clone)]
+enum PendingInsn {
+    Ready(Insn),
+    IrMov { value: PendingValue, rb: Reg },
+    Jump { cond: CondFn, dest: PendingValue },
+    Call { dest: PendingValue },
+    Meta { meta: MetaFn, ra: Reg, rb: Reg, value: PendingValue },
+}
+
+#[derive(Debug, Clone)]
+enum PendingValue {
+    Lit(i64),
+    Label(String),
+}
+
+impl PendingValue {
+    fn resolve(&self, symbols: &HashMap<String, u32>, line: usize) -> Result<i64, AsmError> {
+        match self {
+            PendingValue::Lit(v) => Ok(*v),
+            PendingValue::Label(l) => symbols
+                .get(l)
+                .map(|&a| a as i64)
+                .ok_or_else(|| AsmError::UndefinedLabel { line, label: l.clone() }),
+        }
+    }
+}
+
+fn pending_len(p: &PendingInsn) -> usize {
+    match p {
+        PendingInsn::Ready(i) => i.len(),
+        PendingInsn::IrMov { .. } => 6,
+        PendingInsn::Jump { .. } | PendingInsn::Call { .. } => 5,
+        PendingInsn::Meta { meta, .. } => {
+            if meta.has_value() {
+                6
+            } else {
+                2
+            }
+        }
+    }
+}
+
+/// Assemble Y86/EMPA source into a [`Program`].
+pub fn assemble(src: &str) -> Result<Program, AsmError> {
+    let mut symbols: HashMap<String, u32> = HashMap::new();
+    let mut items: Vec<(u32, Item)> = Vec::new();
+    let mut lines_meta: Vec<(u32, usize, String)> = Vec::new();
+    let mut addr: u32 = 0;
+    let mut entry: Option<u32> = None;
+
+    // ---- pass 1: lexing, layout, symbol table -------------------------
+    for (lineno0, raw) in src.lines().enumerate() {
+        let line = lineno0 + 1;
+        let mut text = raw;
+        if let Some(pos) = text.find('#') {
+            text = &text[..pos];
+        }
+        let mut text = text.trim();
+        // labels (possibly several on one line)
+        while let Some(colon) = text.find(':') {
+            let (label, rest) = text.split_at(colon);
+            let label = label.trim();
+            if label.is_empty() || !label.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                break; // not a label, e.g. stray `:` — let operand parsing complain
+            }
+            if symbols.insert(label.to_string(), addr).is_some() {
+                return Err(AsmError::DuplicateLabel { line, label: label.to_string() });
+            }
+            text = rest[1..].trim();
+        }
+        if text.is_empty() {
+            continue;
+        }
+        let (mnemonic, rest) = match text.find(char::is_whitespace) {
+            Some(i) => (&text[..i], text[i..].trim()),
+            None => (text, ""),
+        };
+        let operands: Vec<String> = if rest.is_empty() {
+            Vec::new()
+        } else {
+            rest.split(',').map(|s| s.trim().to_string()).collect()
+        };
+
+        if let Some(directive) = mnemonic.strip_prefix('.') {
+            match directive {
+                "pos" => {
+                    let v = parse_int(rest, line)?;
+                    if v < addr as i64 {
+                        return Err(AsmError::BadDirective {
+                            line,
+                            reason: format!(".pos {v} moves backwards (at {addr})"),
+                        });
+                    }
+                    addr = v as u32;
+                }
+                "align" => {
+                    let v = parse_int(rest, line)?;
+                    if v <= 0 || (v & (v - 1)) != 0 {
+                        return Err(AsmError::BadDirective { line, reason: format!(".align {v}: not a power of two") });
+                    }
+                    let a = v as u32;
+                    addr = (addr + a - 1) & !(a - 1);
+                }
+                "long" => {
+                    let value = parse_value(rest, line)?;
+                    items.push((addr, Item::Long { value, line }));
+                    lines_meta.push((addr, line, raw.trim().to_string()));
+                    addr += 4;
+                }
+                other => {
+                    return Err(AsmError::BadDirective { line, reason: format!("unknown directive .{other}") });
+                }
+            }
+            continue;
+        }
+
+        let pending = parse_insn(mnemonic, &operands, line)?;
+        if entry.is_none() {
+            entry = Some(addr);
+        }
+        let len = pending_len(&pending) as u32;
+        items.push((addr, Item::Insn { insn: pending, line }));
+        lines_meta.push((addr, line, raw.trim().to_string()));
+        addr += len;
+    }
+
+    // ---- pass 2: resolve labels, emit image ---------------------------
+    let mut image = vec![0u8; addr as usize];
+    let mut buf = Vec::with_capacity(8);
+    for (at, item) in &items {
+        buf.clear();
+        match item {
+            Item::Long { value, line } => {
+                let v = value.resolve(&symbols, *line)? as i32;
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            Item::Insn { insn, line } => {
+                let ready = match insn {
+                    PendingInsn::Ready(i) => *i,
+                    PendingInsn::IrMov { value, rb } => {
+                        Insn::IrMov { imm: value.resolve(&symbols, *line)? as i32, rb: *rb }
+                    }
+                    PendingInsn::Jump { cond, dest } => {
+                        Insn::Jump { cond: *cond, dest: dest.resolve(&symbols, *line)? as u32 }
+                    }
+                    PendingInsn::Call { dest } => {
+                        Insn::Call { dest: dest.resolve(&symbols, *line)? as u32 }
+                    }
+                    PendingInsn::Meta { meta, ra, rb, value } => Insn::Meta {
+                        meta: *meta,
+                        ra: *ra,
+                        rb: *rb,
+                        value: value.resolve(&symbols, *line)? as u32,
+                    },
+                };
+                ready.encode(&mut buf);
+            }
+        }
+        image[*at as usize..*at as usize + buf.len()].copy_from_slice(&buf);
+    }
+
+    Ok(Program { image, symbols, lines: lines_meta, entry: entry.unwrap_or(0) })
+}
+
+fn parse_int(s: &str, line: usize) -> Result<i64, AsmError> {
+    let s = s.trim();
+    let (neg, body) = match s.strip_prefix('-') {
+        Some(b) => (true, b),
+        None => (false, s),
+    };
+    let v = if let Some(hex) = body.strip_prefix("0x").or_else(|| body.strip_prefix("0X")) {
+        i64::from_str_radix(hex, 16)
+    } else {
+        body.parse::<i64>()
+    }
+    .map_err(|e| AsmError::BadOperand { line, operand: s.to_string(), reason: e.to_string() })?;
+    Ok(if neg { -v } else { v })
+}
+
+fn parse_value(s: &str, line: usize) -> Result<PendingValue, AsmError> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err(AsmError::BadOperand { line, operand: s.to_string(), reason: "empty value".into() });
+    }
+    let body = s.strip_prefix('$').unwrap_or(s);
+    if body.starts_with(|c: char| c.is_ascii_alphabetic() || c == '_') {
+        Ok(PendingValue::Label(body.to_string()))
+    } else {
+        Ok(PendingValue::Lit(parse_int(body, line)?))
+    }
+}
+
+fn parse_reg(s: &str, line: usize) -> Result<Reg, AsmError> {
+    match s.trim() {
+        "%eax" => Ok(Reg::Eax),
+        "%ecx" => Ok(Reg::Ecx),
+        "%edx" => Ok(Reg::Edx),
+        "%ebx" => Ok(Reg::Ebx),
+        "%esp" => Ok(Reg::Esp),
+        "%ebp" => Ok(Reg::Ebp),
+        "%esi" => Ok(Reg::Esi),
+        "%edi" => Ok(Reg::Edi),
+        "%pp" => Ok(Reg::PseudoP),
+        "%pc" => Ok(Reg::PseudoC),
+        other => Err(AsmError::BadOperand { line, operand: other.to_string(), reason: "not a register".into() }),
+    }
+}
+
+/// Parse a `D(%reg)` or `(%reg)` memory operand.
+fn parse_mem(s: &str, line: usize) -> Result<(i32, Reg), AsmError> {
+    let s = s.trim();
+    let open = s.find('(').ok_or_else(|| AsmError::BadOperand {
+        line,
+        operand: s.to_string(),
+        reason: "expected D(%reg)".into(),
+    })?;
+    if !s.ends_with(')') {
+        return Err(AsmError::BadOperand { line, operand: s.to_string(), reason: "missing `)`".into() });
+    }
+    let disp = if open == 0 { 0 } else { parse_int(&s[..open], line)? as i32 };
+    let reg = parse_reg(&s[open + 1..s.len() - 1], line)?;
+    Ok((disp, reg))
+}
+
+fn expect_count(mn: &str, ops: &[String], want: usize, line: usize) -> Result<(), AsmError> {
+    if ops.len() != want {
+        Err(AsmError::OperandCount { line, mnemonic: mn.to_string(), got: ops.len(), want })
+    } else {
+        Ok(())
+    }
+}
+
+fn parse_insn(mn: &str, ops: &[String], line: usize) -> Result<PendingInsn, AsmError> {
+    let cmov = |cond: CondFn| -> Result<PendingInsn, AsmError> {
+        expect_count(mn, ops, 2, line)?;
+        Ok(PendingInsn::Ready(Insn::CMov { cond, ra: parse_reg(&ops[0], line)?, rb: parse_reg(&ops[1], line)? }))
+    };
+    let jump = |cond: CondFn| -> Result<PendingInsn, AsmError> {
+        expect_count(mn, ops, 1, line)?;
+        Ok(PendingInsn::Jump { cond, dest: parse_value(&ops[0], line)? })
+    };
+    let alu = |op: OpFn| -> Result<PendingInsn, AsmError> {
+        expect_count(mn, ops, 2, line)?;
+        Ok(PendingInsn::Ready(Insn::Op { op, ra: parse_reg(&ops[0], line)?, rb: parse_reg(&ops[1], line)? }))
+    };
+    match mn {
+        "halt" => Ok(PendingInsn::Ready(Insn::Halt)),
+        "nop" => Ok(PendingInsn::Ready(Insn::Nop)),
+        "ret" => Ok(PendingInsn::Ready(Insn::Ret)),
+        "rrmovl" => cmov(CondFn::Always),
+        "cmovle" => cmov(CondFn::Le),
+        "cmovl" => cmov(CondFn::L),
+        "cmove" => cmov(CondFn::E),
+        "cmovne" => cmov(CondFn::Ne),
+        "cmovge" => cmov(CondFn::Ge),
+        "cmovg" => cmov(CondFn::G),
+        "irmovl" => {
+            expect_count(mn, ops, 2, line)?;
+            Ok(PendingInsn::IrMov { value: parse_value(&ops[0], line)?, rb: parse_reg(&ops[1], line)? })
+        }
+        "rmmovl" => {
+            expect_count(mn, ops, 2, line)?;
+            let ra = parse_reg(&ops[0], line)?;
+            let (disp, rb) = parse_mem(&ops[1], line)?;
+            Ok(PendingInsn::Ready(Insn::RmMov { ra, rb, disp }))
+        }
+        "mrmovl" => {
+            expect_count(mn, ops, 2, line)?;
+            let (disp, rb) = parse_mem(&ops[0], line)?;
+            let ra = parse_reg(&ops[1], line)?;
+            Ok(PendingInsn::Ready(Insn::MrMov { ra, rb, disp }))
+        }
+        "addl" => alu(OpFn::Add),
+        "subl" => alu(OpFn::Sub),
+        "andl" => alu(OpFn::And),
+        "xorl" => alu(OpFn::Xor),
+        "mull" => alu(OpFn::Mul),
+        "jmp" => jump(CondFn::Always),
+        "jle" => jump(CondFn::Le),
+        "jl" => jump(CondFn::L),
+        "je" => jump(CondFn::E),
+        "jne" => jump(CondFn::Ne),
+        "jge" => jump(CondFn::Ge),
+        "jg" => jump(CondFn::G),
+        "call" => {
+            expect_count(mn, ops, 1, line)?;
+            Ok(PendingInsn::Call { dest: parse_value(&ops[0], line)? })
+        }
+        "pushl" => {
+            expect_count(mn, ops, 1, line)?;
+            Ok(PendingInsn::Ready(Insn::Push { ra: parse_reg(&ops[0], line)? }))
+        }
+        "popl" => {
+            expect_count(mn, ops, 1, line)?;
+            Ok(PendingInsn::Ready(Insn::Pop { ra: parse_reg(&ops[0], line)? }))
+        }
+        // ---- EMPA metainstructions ------------------------------------
+        "qcreate" | "qcall" | "qmassfor" | "qmasssum" => {
+            expect_count(mn, ops, 1, line)?;
+            let meta = match mn {
+                "qcreate" => MetaFn::QCreate,
+                "qcall" => MetaFn::QCall,
+                "qmassfor" => MetaFn::QMassFor,
+                _ => MetaFn::QMassSum,
+            };
+            Ok(PendingInsn::Meta { meta, ra: Reg::None, rb: Reg::None, value: parse_value(&ops[0], line)? })
+        }
+        "qprealloc" => {
+            expect_count(mn, ops, 1, line)?;
+            Ok(PendingInsn::Meta {
+                meta: MetaFn::QPreAlloc,
+                ra: Reg::None,
+                rb: Reg::None,
+                value: parse_value(&ops[0], line)?,
+            })
+        }
+        "qterm" => {
+            // optional link register: `qterm %eax` clones %eax back (§3.5)
+            let ra = if ops.is_empty() { Reg::None } else { parse_reg(&ops[0], line)? };
+            Ok(PendingInsn::Meta { meta: MetaFn::QTerm, ra, rb: Reg::None, value: PendingValue::Lit(0) })
+        }
+        "qwait" => {
+            // optional destination register: `qwait %eax` drains FromChild
+            let ra = if ops.is_empty() { Reg::None } else { parse_reg(&ops[0], line)? };
+            Ok(PendingInsn::Meta { meta: MetaFn::QWait, ra, rb: Reg::None, value: PendingValue::Lit(0) })
+        }
+        "qcopy" => Ok(PendingInsn::Meta { meta: MetaFn::QCopy, ra: Reg::None, rb: Reg::None, value: PendingValue::Lit(0) }),
+        other => Err(AsmError::UnknownMnemonic { line, mnemonic: other.to_string() }),
+    }
+}
+
+/// Listing 1 of the paper, verbatim layout (used by tests across the
+/// crate as the canonical N=4 conventional program).
+pub const LISTING1: &str = r#"
+# This is summing up elements of vector
+    .pos 0
+    irmovl $4, %edx      # No of items to sum
+    irmovl array, %ecx   # Array address
+    xorl %eax, %eax      # sum = 0
+    andl %edx, %edx      # Set condition codes
+    je End
+Loop:
+    mrmovl (%ecx), %esi  # get *Start
+    addl %esi, %eax      # add to sum
+    irmovl $4, %ebx
+    addl %ebx, %ecx      # Start++
+    irmovl $-1, %ebx
+    addl %ebx, %edx      # Count--
+    jne Loop             # Stop when 0
+End:
+    halt
+    .align 4
+array:
+    .long 0xd
+    .long 0xc0
+    .long 0x0b00
+    .long 0xa000
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listing1_layout_matches_paper_addresses() {
+        let p = assemble(LISTING1).unwrap();
+        // Addresses printed in Listing 1.
+        assert_eq!(p.symbol("Loop"), Some(0x015));
+        assert_eq!(p.symbol("End"), Some(0x032));
+        assert_eq!(p.symbol("array"), Some(0x034));
+        assert_eq!(p.entry, 0);
+        // Byte-exact encodings from the listing.
+        assert_eq!(&p.image[0x000..0x006], &[0x30, 0xF2, 0x04, 0, 0, 0]);
+        assert_eq!(&p.image[0x006..0x00c], &[0x30, 0xF1, 0x34, 0, 0, 0]);
+        assert_eq!(&p.image[0x00c..0x00e], &[0x63, 0x00]);
+        assert_eq!(&p.image[0x00e..0x010], &[0x62, 0x22]);
+        assert_eq!(&p.image[0x010..0x015], &[0x73, 0x32, 0, 0, 0]);
+        assert_eq!(&p.image[0x015..0x01b], &[0x50, 0x61, 0, 0, 0, 0]);
+        assert_eq!(p.image[0x032], 0x00); // halt
+        assert_eq!(&p.image[0x034..0x038], &0x0d_i32.to_le_bytes());
+        assert_eq!(&p.image[0x040..0x044], &0xa000_i32.to_le_bytes());
+    }
+
+    #[test]
+    fn empa_mnemonics_assemble() {
+        let src = r#"
+    qprealloc $1
+    qmassfor Body
+    halt
+Body:
+    mrmovl (%ecx), %esi
+    addl %esi, %eax
+    qterm %eax
+"#;
+        let p = assemble(src).unwrap();
+        let body = p.symbol("Body").unwrap();
+        // qprealloc: E4 FF + value 1
+        assert_eq!(&p.image[0..2], &[0xE4, 0xFF]);
+        assert_eq!(&p.image[2..6], &1u32.to_le_bytes());
+        // qmassfor: E5 FF + Body addr
+        assert_eq!(p.image[6], 0xE5);
+        assert_eq!(&p.image[8..12], &body.to_le_bytes());
+        // qterm %eax: E2 0F
+        let qterm_at = body as usize + 6 + 2;
+        assert_eq!(&p.image[qterm_at..qterm_at + 2], &[0xE2, 0x0F]);
+    }
+
+    #[test]
+    fn pseudo_register_operands() {
+        let p = assemble("addl %esi, %pp\n").unwrap();
+        assert_eq!(&p.image[..2], &[0x60, 0x68]);
+        let p = assemble("rrmovl %pc, %eax\n").unwrap();
+        assert_eq!(&p.image[..2], &[0x20, 0x90]);
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(matches!(
+            assemble("bogus %eax\n").unwrap_err(),
+            AsmError::UnknownMnemonic { line: 1, .. }
+        ));
+        assert!(matches!(
+            assemble("\n jmp Nowhere\n").unwrap_err(),
+            AsmError::UndefinedLabel { line: 2, .. }
+        ));
+        assert!(matches!(
+            assemble("a:\na:\n").unwrap_err(),
+            AsmError::DuplicateLabel { line: 2, .. }
+        ));
+        assert!(matches!(
+            assemble(".pos 8\n.pos 4\n").unwrap_err(),
+            AsmError::BadDirective { line: 2, .. }
+        ));
+        assert!(matches!(
+            assemble("addl %eax\n").unwrap_err(),
+            AsmError::OperandCount { line: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn align_and_pos() {
+        let p = assemble(".pos 3\n.align 4\nx: .long 7\n").unwrap();
+        assert_eq!(p.symbol("x"), Some(4));
+        assert_eq!(&p.image[4..8], &7i32.to_le_bytes());
+    }
+}

@@ -1,0 +1,546 @@
+//! Y86 + EMPA instruction encoding and decoding.
+//!
+//! Standard Y86 encoding: one `icode:ifun` byte, optionally a `rA:rB`
+//! register byte, optionally a 4-byte little-endian immediate/displacement.
+//! EMPA metainstructions occupy the otherwise-unused icode `0xE` — during
+//! pre-fetch a core recognises the icode, raises its `Meta` signal and the
+//! supervisor "executes" the instruction at the supervisor level (§4.5).
+
+use std::fmt;
+
+/// Sentinel returned by the fetch stage for undecodable bytes.
+pub const DECODE_ERROR: &str = "invalid instruction";
+
+/// Y86 architectural registers (32-bit flavour), plus the EMPA
+/// pseudo-registers of §4.6. The pseudo-registers have ordinary register
+/// *addresses* (0x8/0x9) but are mapped to the core's latch registers; the
+/// value 0xF means "no register" as in standard Y86.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Reg {
+    Eax = 0x0,
+    Ecx = 0x1,
+    Edx = 0x2,
+    Ebx = 0x3,
+    Esp = 0x4,
+    Ebp = 0x5,
+    Esi = 0x6,
+    Edi = 0x7,
+    /// Pseudo-register towards the *parent* side of the link: written by a
+    /// child it lands in its `ForParent` latch; read by a parent it drains
+    /// the `FromChild` latch (§4.6, §5.2).
+    PseudoP = 0x8,
+    /// Pseudo-register towards the *child* side of the link: written by a
+    /// parent it lands in `ForChild`; read by a child it reads the
+    /// `FromParent` latch (§4.6, §5.1).
+    PseudoC = 0x9,
+    /// "No register" marker (0xF in the encoding).
+    None = 0xF,
+}
+
+impl Reg {
+    /// Decode a register nibble.
+    pub fn from_nibble(n: u8) -> Option<Reg> {
+        Some(match n {
+            0x0 => Reg::Eax,
+            0x1 => Reg::Ecx,
+            0x2 => Reg::Edx,
+            0x3 => Reg::Ebx,
+            0x4 => Reg::Esp,
+            0x5 => Reg::Ebp,
+            0x6 => Reg::Esi,
+            0x7 => Reg::Edi,
+            0x8 => Reg::PseudoP,
+            0x9 => Reg::PseudoC,
+            0xF => Reg::None,
+            _ => return None,
+        })
+    }
+
+    /// Index into an architectural register file; pseudo-registers and
+    /// `None` are not backed by the file.
+    pub fn file_index(self) -> Option<usize> {
+        let n = self as u8;
+        (n < 8).then_some(n as usize)
+    }
+
+    /// True for the EMPA latch-backed pseudo-registers.
+    pub fn is_pseudo(self) -> bool {
+        matches!(self, Reg::PseudoP | Reg::PseudoC)
+    }
+
+    /// Assembly spelling (`%eax` ... / `%pp` / `%pc`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Reg::Eax => "%eax",
+            Reg::Ecx => "%ecx",
+            Reg::Edx => "%edx",
+            Reg::Ebx => "%ebx",
+            Reg::Esp => "%esp",
+            Reg::Ebp => "%ebp",
+            Reg::Esi => "%esi",
+            Reg::Edi => "%edi",
+            Reg::PseudoP => "%pp",
+            Reg::PseudoC => "%pc",
+            Reg::None => "%none",
+        }
+    }
+}
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// ALU operations (icode 0x6).
+///
+/// `Mul` (ifun 0x4) is the EMPAthY86 extension beyond CS:APP Y86 — the
+/// dot-product workloads of §3.7's "mass operating mode" need it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum OpFn {
+    Add = 0x0,
+    Sub = 0x1,
+    And = 0x2,
+    Xor = 0x3,
+    Mul = 0x4,
+}
+
+impl OpFn {
+    pub fn from_nibble(n: u8) -> Option<OpFn> {
+        Some(match n {
+            0x0 => OpFn::Add,
+            0x1 => OpFn::Sub,
+            0x2 => OpFn::And,
+            0x3 => OpFn::Xor,
+            0x4 => OpFn::Mul,
+            _ => return None,
+        })
+    }
+
+    /// Apply the operation, returning (result, overflow).
+    pub fn apply(self, a: i32, b: i32) -> (i32, bool) {
+        match self {
+            OpFn::Add => {
+                let (r, of) = b.overflowing_add(a);
+                (r, of)
+            }
+            OpFn::Sub => {
+                let (r, of) = b.overflowing_sub(a);
+                (r, of)
+            }
+            OpFn::And => (b & a, false),
+            OpFn::Xor => (b ^ a, false),
+            OpFn::Mul => {
+                let (r, of) = b.overflowing_mul(a);
+                (r, of)
+            }
+        }
+    }
+
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            OpFn::Add => "addl",
+            OpFn::Sub => "subl",
+            OpFn::And => "andl",
+            OpFn::Xor => "xorl",
+            OpFn::Mul => "mull",
+        }
+    }
+}
+
+/// Condition functions shared by `jXX` and `cmovXX` (ifun nibble).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum CondFn {
+    Always = 0x0,
+    Le = 0x1,
+    L = 0x2,
+    E = 0x3,
+    Ne = 0x4,
+    Ge = 0x5,
+    G = 0x6,
+}
+
+impl CondFn {
+    pub fn from_nibble(n: u8) -> Option<CondFn> {
+        Some(match n {
+            0x0 => CondFn::Always,
+            0x1 => CondFn::Le,
+            0x2 => CondFn::L,
+            0x3 => CondFn::E,
+            0x4 => CondFn::Ne,
+            0x5 => CondFn::Ge,
+            0x6 => CondFn::G,
+            _ => return None,
+        })
+    }
+
+    pub fn jump_mnemonic(self) -> &'static str {
+        match self {
+            CondFn::Always => "jmp",
+            CondFn::Le => "jle",
+            CondFn::L => "jl",
+            CondFn::E => "je",
+            CondFn::Ne => "jne",
+            CondFn::Ge => "jge",
+            CondFn::G => "jg",
+        }
+    }
+
+    pub fn move_mnemonic(self) -> &'static str {
+        match self {
+            CondFn::Always => "rrmovl",
+            CondFn::Le => "cmovle",
+            CondFn::L => "cmovl",
+            CondFn::E => "cmove",
+            CondFn::Ne => "cmovne",
+            CondFn::Ge => "cmovge",
+            CondFn::G => "cmovg",
+        }
+    }
+}
+
+/// EMPA metainstruction functions (icode 0xE, §4.5, §5).
+///
+/// Metainstructions are *executed by the supervisor*: the core raises its
+/// `Meta` signal during pre-fetch, the SV advances the core's PC and
+/// performs the operation at the supervisor level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum MetaFn {
+    /// `qcreate Lcont` — rent a core, clone the glue, the child starts at
+    /// the next address (the QT body is embedded in the calling flow),
+    /// the parent continues at `Lcont` (§3.6).
+    QCreate = 0x0,
+    /// `qcall Lsub` — subroutine-style QT: the child starts at `Lsub`,
+    /// the parent continues at the next address (§3.6).
+    QCall = 0x1,
+    /// `qterm` — terminate the running QT; clone-back the link register,
+    /// return the core to the pool (§4.3).
+    QTerm = 0x2,
+    /// `qwait` — block until all child QTs of this core terminated; drains
+    /// the `FromChild` latch into the designated register (§4.4).
+    QWait = 0x3,
+    /// `qprealloc $n` — preallocate `n` cores for this core, guaranteeing
+    /// availability for the coming iterations (§5.1).
+    QPreAlloc = 0x4,
+    /// `qmassfor Lbody` — enter FOR mass-processing mode: the SV takes
+    /// over loop organisation (address advancing, counting, jumping) and
+    /// repeatedly runs the body QT on a preallocated child (§5.1).
+    QMassFor = 0x5,
+    /// `qmasssum Lbody` — enter SUMUP mass-processing mode: staggered
+    /// child QTs stream their summands through the `ForParent` latch into
+    /// the parent-side adder (§5.2).
+    QMassSum = 0x6,
+    /// `qcopy` — explicit copy from the input pseudo-register latch to the
+    /// output pseudo-register latch (data forwarding, §4.6).
+    QCopy = 0x7,
+}
+
+impl MetaFn {
+    pub fn from_nibble(n: u8) -> Option<MetaFn> {
+        Some(match n {
+            0x0 => MetaFn::QCreate,
+            0x1 => MetaFn::QCall,
+            0x2 => MetaFn::QTerm,
+            0x3 => MetaFn::QWait,
+            0x4 => MetaFn::QPreAlloc,
+            0x5 => MetaFn::QMassFor,
+            0x6 => MetaFn::QMassSum,
+            0x7 => MetaFn::QCopy,
+            _ => return None,
+        })
+    }
+
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            MetaFn::QCreate => "qcreate",
+            MetaFn::QCall => "qcall",
+            MetaFn::QTerm => "qterm",
+            MetaFn::QWait => "qwait",
+            MetaFn::QPreAlloc => "qprealloc",
+            MetaFn::QMassFor => "qmassfor",
+            MetaFn::QMassSum => "qmasssum",
+            MetaFn::QCopy => "qcopy",
+        }
+    }
+
+    /// True when the encoding carries a 4-byte address/immediate.
+    pub fn has_value(self) -> bool {
+        matches!(
+            self,
+            MetaFn::QCreate | MetaFn::QCall | MetaFn::QPreAlloc | MetaFn::QMassFor | MetaFn::QMassSum
+        )
+    }
+}
+
+/// A decoded Y86/EMPA instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Insn {
+    /// `halt` (icode 0x0)
+    Halt,
+    /// `nop` (icode 0x1)
+    Nop,
+    /// `rrmovl`/`cmovXX rA, rB` (icode 0x2)
+    CMov { cond: CondFn, ra: Reg, rb: Reg },
+    /// `irmovl $V, rB` (icode 0x3)
+    IrMov { imm: i32, rb: Reg },
+    /// `rmmovl rA, D(rB)` (icode 0x4)
+    RmMov { ra: Reg, rb: Reg, disp: i32 },
+    /// `mrmovl D(rB), rA` (icode 0x5)
+    MrMov { ra: Reg, rb: Reg, disp: i32 },
+    /// `OPl rA, rB` (icode 0x6)
+    Op { op: OpFn, ra: Reg, rb: Reg },
+    /// `jXX Dest` (icode 0x7)
+    Jump { cond: CondFn, dest: u32 },
+    /// `call Dest` (icode 0x8)
+    Call { dest: u32 },
+    /// `ret` (icode 0x9)
+    Ret,
+    /// `pushl rA` (icode 0xA)
+    Push { ra: Reg },
+    /// `popl rA` (icode 0xB)
+    Pop { ra: Reg },
+    /// EMPA metainstruction (icode 0xE)
+    Meta { meta: MetaFn, ra: Reg, rb: Reg, value: u32 },
+}
+
+impl Insn {
+    /// Encoded byte length of the instruction.
+    pub fn len(&self) -> usize {
+        match self {
+            Insn::Halt | Insn::Nop | Insn::Ret => 1,
+            Insn::CMov { .. } | Insn::Op { .. } | Insn::Push { .. } | Insn::Pop { .. } => 2,
+            Insn::Jump { .. } | Insn::Call { .. } => 5,
+            Insn::IrMov { .. } | Insn::RmMov { .. } | Insn::MrMov { .. } => 6,
+            Insn::Meta { meta, .. } => {
+                if meta.has_value() {
+                    6
+                } else {
+                    2
+                }
+            }
+        }
+    }
+
+    /// True when the instruction, at the architecture level, is recognised
+    /// by the core's pre-fetch as a metainstruction and handed to the SV.
+    pub fn is_meta(&self) -> bool {
+        matches!(self, Insn::Meta { .. })
+    }
+
+    /// Encode into bytes (inverse of [`Insn::decode`]).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match *self {
+            Insn::Halt => out.push(0x00),
+            Insn::Nop => out.push(0x10),
+            Insn::CMov { cond, ra, rb } => {
+                out.push(0x20 | cond as u8);
+                out.push(((ra as u8) << 4) | rb as u8);
+            }
+            Insn::IrMov { imm, rb } => {
+                out.push(0x30);
+                out.push(0xF0 | rb as u8);
+                out.extend_from_slice(&imm.to_le_bytes());
+            }
+            Insn::RmMov { ra, rb, disp } => {
+                out.push(0x40);
+                out.push(((ra as u8) << 4) | rb as u8);
+                out.extend_from_slice(&disp.to_le_bytes());
+            }
+            Insn::MrMov { ra, rb, disp } => {
+                out.push(0x50);
+                out.push(((ra as u8) << 4) | rb as u8);
+                out.extend_from_slice(&disp.to_le_bytes());
+            }
+            Insn::Op { op, ra, rb } => {
+                out.push(0x60 | op as u8);
+                out.push(((ra as u8) << 4) | rb as u8);
+            }
+            Insn::Jump { cond, dest } => {
+                out.push(0x70 | cond as u8);
+                out.extend_from_slice(&dest.to_le_bytes());
+            }
+            Insn::Call { dest } => {
+                out.push(0x80);
+                out.extend_from_slice(&dest.to_le_bytes());
+            }
+            Insn::Ret => out.push(0x90),
+            Insn::Push { ra } => {
+                out.push(0xA0);
+                out.push(((ra as u8) << 4) | 0x0F);
+            }
+            Insn::Pop { ra } => {
+                out.push(0xB0);
+                out.push(((ra as u8) << 4) | 0x0F);
+            }
+            Insn::Meta { meta, ra, rb, value } => {
+                out.push(0xE0 | meta as u8);
+                out.push(((ra as u8) << 4) | rb as u8);
+                if meta.has_value() {
+                    out.extend_from_slice(&value.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Decode the instruction at `bytes[0..]`. Returns the instruction and
+    /// its length, or `None` on an invalid encoding / truncated fetch.
+    pub fn decode(bytes: &[u8]) -> Option<(Insn, usize)> {
+        let b0 = *bytes.first()?;
+        let icode = b0 >> 4;
+        let ifun = b0 & 0x0F;
+        let regs = |i: usize| -> Option<(Reg, Reg)> {
+            let b = *bytes.get(i)?;
+            Some((Reg::from_nibble(b >> 4)?, Reg::from_nibble(b & 0x0F)?))
+        };
+        let word = |i: usize| -> Option<u32> {
+            let w = bytes.get(i..i + 4)?;
+            Some(u32::from_le_bytes([w[0], w[1], w[2], w[3]]))
+        };
+        let insn = match icode {
+            0x0 if ifun == 0 => (Insn::Halt, 1),
+            0x1 if ifun == 0 => (Insn::Nop, 1),
+            0x2 => {
+                let cond = CondFn::from_nibble(ifun)?;
+                let (ra, rb) = regs(1)?;
+                (Insn::CMov { cond, ra, rb }, 2)
+            }
+            0x3 if ifun == 0 => {
+                let (ra, rb) = regs(1)?;
+                if ra != Reg::None {
+                    return None;
+                }
+                (Insn::IrMov { imm: word(2)? as i32, rb }, 6)
+            }
+            0x4 if ifun == 0 => {
+                let (ra, rb) = regs(1)?;
+                (Insn::RmMov { ra, rb, disp: word(2)? as i32 }, 6)
+            }
+            0x5 if ifun == 0 => {
+                let (ra, rb) = regs(1)?;
+                (Insn::MrMov { ra, rb, disp: word(2)? as i32 }, 6)
+            }
+            0x6 => {
+                let op = OpFn::from_nibble(ifun)?;
+                let (ra, rb) = regs(1)?;
+                (Insn::Op { op, ra, rb }, 2)
+            }
+            0x7 => {
+                let cond = CondFn::from_nibble(ifun)?;
+                (Insn::Jump { cond, dest: word(1)? }, 5)
+            }
+            0x8 if ifun == 0 => (Insn::Call { dest: word(1)? }, 5),
+            0x9 if ifun == 0 => (Insn::Ret, 1),
+            0xA if ifun == 0 => {
+                let (ra, rb) = regs(1)?;
+                if rb != Reg::None {
+                    return None;
+                }
+                (Insn::Push { ra }, 2)
+            }
+            0xB if ifun == 0 => {
+                let (ra, rb) = regs(1)?;
+                if rb != Reg::None {
+                    return None;
+                }
+                (Insn::Pop { ra }, 2)
+            }
+            0xE => {
+                let meta = MetaFn::from_nibble(ifun)?;
+                let (ra, rb) = regs(1)?;
+                if meta.has_value() {
+                    (Insn::Meta { meta, ra, rb, value: word(2)? }, 6)
+                } else {
+                    (Insn::Meta { meta, ra, rb, value: 0 }, 2)
+                }
+            }
+            _ => return None,
+        };
+        Some(insn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(i: Insn) {
+        let mut buf = Vec::new();
+        i.encode(&mut buf);
+        assert_eq!(buf.len(), i.len(), "length mismatch for {i:?}");
+        let (d, n) = Insn::decode(&buf).expect("decode");
+        assert_eq!(d, i);
+        assert_eq!(n, buf.len());
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_forms() {
+        roundtrip(Insn::Halt);
+        roundtrip(Insn::Nop);
+        roundtrip(Insn::Ret);
+        roundtrip(Insn::CMov { cond: CondFn::Ne, ra: Reg::Eax, rb: Reg::Ebx });
+        roundtrip(Insn::IrMov { imm: -4, rb: Reg::Edx });
+        roundtrip(Insn::RmMov { ra: Reg::Esi, rb: Reg::Ecx, disp: 0x40 });
+        roundtrip(Insn::MrMov { ra: Reg::Esi, rb: Reg::Ecx, disp: 0 });
+        roundtrip(Insn::Op { op: OpFn::Xor, ra: Reg::Eax, rb: Reg::Eax });
+        roundtrip(Insn::Jump { cond: CondFn::E, dest: 0x32 });
+        roundtrip(Insn::Call { dest: 0x100 });
+        roundtrip(Insn::Push { ra: Reg::Ebp });
+        roundtrip(Insn::Pop { ra: Reg::Ebp });
+        for meta in [
+            MetaFn::QCreate,
+            MetaFn::QCall,
+            MetaFn::QTerm,
+            MetaFn::QWait,
+            MetaFn::QPreAlloc,
+            MetaFn::QMassFor,
+            MetaFn::QMassSum,
+            MetaFn::QCopy,
+        ] {
+            roundtrip(Insn::Meta { meta, ra: Reg::PseudoP, rb: Reg::Eax, value: if meta.has_value() { 42 } else { 0 } });
+        }
+    }
+
+    #[test]
+    fn listing1_opcode_bytes_match_paper() {
+        // Listing 1 of the paper shows the exact encodings; spot-check a few.
+        let mut buf = Vec::new();
+        Insn::IrMov { imm: 4, rb: Reg::Edx }.encode(&mut buf);
+        assert_eq!(buf, [0x30, 0xF2, 0x04, 0x00, 0x00, 0x00]); // 30f204000000
+        buf.clear();
+        Insn::Op { op: OpFn::Xor, ra: Reg::Eax, rb: Reg::Eax }.encode(&mut buf);
+        assert_eq!(buf, [0x63, 0x00]); // 6300
+        buf.clear();
+        Insn::MrMov { ra: Reg::Esi, rb: Reg::Ecx, disp: 0 }.encode(&mut buf);
+        assert_eq!(buf, [0x50, 0x61, 0x00, 0x00, 0x00, 0x00]); // 506100000000
+        buf.clear();
+        Insn::Jump { cond: CondFn::Ne, dest: 0x15 }.encode(&mut buf);
+        assert_eq!(buf, [0x74, 0x15, 0x00, 0x00, 0x00, 0x00][..5]); // 7415000000
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Insn::decode(&[0xFF]).is_none());
+        assert!(Insn::decode(&[0xC0]).is_none());
+        assert!(Insn::decode(&[]).is_none());
+        // truncated irmovl
+        assert!(Insn::decode(&[0x30, 0xF0, 0x01]).is_none());
+        // irmovl with rA != none
+        assert!(Insn::decode(&[0x30, 0x10, 0, 0, 0, 0]).is_none());
+        // bad register nibble
+        assert!(Insn::decode(&[0x60, 0xA0]).is_none());
+    }
+
+    #[test]
+    fn pseudo_registers_have_no_file_slot() {
+        assert_eq!(Reg::PseudoP.file_index(), None);
+        assert_eq!(Reg::PseudoC.file_index(), None);
+        assert_eq!(Reg::None.file_index(), None);
+        assert_eq!(Reg::Esi.file_index(), Some(6));
+        assert!(Reg::PseudoP.is_pseudo() && Reg::PseudoC.is_pseudo());
+        assert!(!Reg::Eax.is_pseudo());
+    }
+}

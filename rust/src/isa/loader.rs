@@ -1,0 +1,98 @@
+//! `.yo` object-file reader/writer (the CS:APP listing format the paper's
+//! Listing 1 is printed in: `0xADDR: BYTES | source`).
+
+use super::asm::Program;
+use std::fmt::Write as _;
+
+/// Serialise a [`Program`] into `.yo` listing text.
+pub fn to_yo(p: &Program) -> String {
+    let mut out = String::new();
+    for (addr, _line, text) in &p.lines {
+        // find extent: bytes until next line's address (or image end)
+        let next = p
+            .lines
+            .iter()
+            .map(|(a, _, _)| *a)
+            .filter(|a| a > addr)
+            .min()
+            .unwrap_or(p.image.len() as u32);
+        let bytes = &p.image[*addr as usize..(next as usize).min(p.image.len())];
+        let hex: String = bytes.iter().fold(String::new(), |mut s, b| {
+            let _ = write!(s, "{b:02x}");
+            s
+        });
+        let _ = writeln!(out, "0x{addr:03x}: {hex:<14} | {text}");
+    }
+    out
+}
+
+/// Parse `.yo` listing text back into a memory image.
+///
+/// Lines look like `0x015: 506100000000 | mrmovl (%ecx), %esi`; lines
+/// without a `0xADDR:` prefix are ignored (comments, blank separator rows).
+pub fn from_yo(text: &str) -> Result<Vec<u8>, String> {
+    let mut image = Vec::new();
+    for (lineno0, line) in text.lines().enumerate() {
+        let line = line.trim();
+        let Some(rest) = line.strip_prefix("0x") else { continue };
+        let Some(colon) = rest.find(':') else { continue };
+        let addr = u32::from_str_radix(&rest[..colon], 16)
+            .map_err(|e| format!("line {}: bad address: {e}", lineno0 + 1))?;
+        let bytes_part = rest[colon + 1..].split('|').next().unwrap_or("").trim();
+        if bytes_part.is_empty() {
+            continue;
+        }
+        if bytes_part.len() % 2 != 0 {
+            return Err(format!("line {}: odd hex digit count", lineno0 + 1));
+        }
+        let end = addr as usize + bytes_part.len() / 2;
+        if image.len() < end {
+            image.resize(end, 0);
+        }
+        for (i, chunk) in bytes_part.as_bytes().chunks(2).enumerate() {
+            let s = std::str::from_utf8(chunk).unwrap();
+            let b = u8::from_str_radix(s, 16).map_err(|e| format!("line {}: bad hex: {e}", lineno0 + 1))?;
+            image[addr as usize + i] = b;
+        }
+    }
+    Ok(image)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assemble;
+
+    #[test]
+    fn yo_roundtrip() {
+        let src = "\
+    irmovl $4, %edx
+    irmovl array, %ecx
+    xorl %eax, %eax
+    halt
+    .align 4
+array:
+    .long 0xd
+    .long 0xc0
+";
+        let p = assemble(src).unwrap();
+        let yo = to_yo(&p);
+        let image = from_yo(&yo).unwrap();
+        assert_eq!(image.len(), p.image.len());
+        assert_eq!(image, p.image);
+    }
+
+    #[test]
+    fn from_yo_ignores_prose_lines() {
+        let text = "# a comment\n\n0x000: 10 | nop\nnot a record\n0x001: 00 | halt\n";
+        let image = from_yo(text).unwrap();
+        assert_eq!(image, vec![0x10, 0x00]);
+    }
+
+    #[test]
+    fn from_yo_rejects_bad_hex() {
+        assert!(from_yo("0x000: 1g | nop\n").is_err());
+        assert!(from_yo("0x000: 123 | nop\n").is_err());
+        assert!(from_yo("0xzz: 10 | nop\n").is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Y86 instruction-set substrate, extended with EMPA metainstructions.
+//!
+//! The paper's toolchain (ref [31]/[32], "EMPAthY86") extends the Y86
+//! educational ISA (Bryant & O'Hallaron, *CS:APP*) with metainstructions
+//! that carry the compiler's parallelization suggestions to the supervisor.
+//! This module provides the full substrate: register/condition-code model,
+//! instruction encode/decode ([`insn`]), a two-pass assembler with labels
+//! and directives ([`asm`]), a disassembler ([`disasm`]), and a `.yo`
+//! object-file loader ([`loader`]).
+
+pub mod asm;
+pub mod disasm;
+pub mod insn;
+pub mod loader;
+
+pub use asm::{assemble, AsmError, Program};
+pub use disasm::disassemble;
+pub use insn::{CondFn, Insn, MetaFn, OpFn, Reg, DECODE_ERROR};
+
+/// Y86 program-visible register file: 8 architectural registers plus the
+/// EMPA pseudo-registers (§4.6) which have register *addresses* but
+/// context-dependent latch semantics.
+pub const NUM_ARCH_REGS: usize = 8;
+
+/// Machine status, mirroring Y86's `STAT` plus EMPA-specific states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Normal operation.
+    Aok,
+    /// `halt` executed.
+    Hlt,
+    /// Invalid memory address touched.
+    Adr,
+    /// Invalid instruction byte fetched.
+    Ins,
+    /// EMPA: QT terminated via `qterm` (core returns to the pool).
+    Qtrm,
+}
+
+impl Status {
+    /// True while the machine may continue stepping.
+    pub fn running(self) -> bool {
+        self == Status::Aok
+    }
+}
+
+/// Condition codes produced by the arithmetic/logic instructions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CondCodes {
+    pub zf: bool,
+    pub sf: bool,
+    pub of: bool,
+}
+
+impl CondCodes {
+    /// Evaluate a Y86 condition function against the current codes.
+    pub fn eval(&self, cond: CondFn) -> bool {
+        let CondCodes { zf, sf, of } = *self;
+        match cond {
+            CondFn::Always => true,
+            CondFn::Le => (sf ^ of) || zf,
+            CondFn::L => sf ^ of,
+            CondFn::E => zf,
+            CondFn::Ne => !zf,
+            CondFn::Ge => !(sf ^ of),
+            CondFn::G => !(sf ^ of) && !zf,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cond_eval_matrix() {
+        let mk = |zf, sf, of| CondCodes { zf, sf, of };
+        // zero result
+        assert!(mk(true, false, false).eval(CondFn::E));
+        assert!(mk(true, false, false).eval(CondFn::Le));
+        assert!(mk(true, false, false).eval(CondFn::Ge));
+        assert!(!mk(true, false, false).eval(CondFn::Ne));
+        assert!(!mk(true, false, false).eval(CondFn::L));
+        assert!(!mk(true, false, false).eval(CondFn::G));
+        // negative result, no overflow
+        assert!(mk(false, true, false).eval(CondFn::L));
+        assert!(mk(false, true, false).eval(CondFn::Le));
+        assert!(!mk(false, true, false).eval(CondFn::Ge));
+        // negative flag + overflow => logically non-negative
+        assert!(mk(false, true, true).eval(CondFn::Ge));
+        assert!(mk(false, true, true).eval(CondFn::G));
+        // Always
+        assert!(mk(false, false, false).eval(CondFn::Always));
+    }
+
+    #[test]
+    fn status_running() {
+        assert!(Status::Aok.running());
+        for s in [Status::Hlt, Status::Adr, Status::Ins, Status::Qtrm] {
+            assert!(!s.running());
+        }
+    }
+}

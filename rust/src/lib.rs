@@ -1,0 +1,35 @@
+//! # EMPA — the Explicitly Many-Processor Approach
+//!
+//! Reproduction of Végh (2016), *"A configurable accelerator for manycores:
+//! the Explicitly Many-Processor Approach"*.
+//!
+//! The crate is organised as a three-layer system:
+//!
+//! - **Layer 3 (this crate)** — the paper's contribution: a cycle-stepped
+//!   EMPA manycore simulator ([`empa`]) built on a Y86 toolchain substrate
+//!   ([`isa`], [`emu`]), plus the *EMPA fabric* service ([`coordinator`])
+//!   that routes work between simulated EMPA processors and an external
+//!   accelerator linked through the paper's §3.8 signal/data interface
+//!   ([`accel`]).
+//! - **Layer 2/1 (build-time Python)** — a JAX/Pallas mass-processing
+//!   accelerator, AOT-lowered to HLO text under `artifacts/`, loaded and
+//!   executed from Rust via PJRT ([`runtime`]). Python never runs on the
+//!   request path.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every table and figure of the paper to a module and bench.
+
+pub mod accel;
+pub mod coordinator;
+pub mod emu;
+pub mod empa;
+pub mod isa;
+pub mod mem;
+pub mod metrics;
+pub mod os;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,304 @@
+//! `empa` — CLI for the EMPA reproduction.
+//!
+//! Verbs (hand-rolled parsing; the offline image has no clap):
+//!
+//! ```text
+//! empa table1                      # regenerate Table 1
+//! empa fig 4|5|6 [--json]          # regenerate a figure's data series
+//! empa run <mode> <n...>           # simulate sumup (mode: no|for|sumup)
+//! empa asm <file.ys> [--dis]       # assemble (optionally disassemble)
+//! empa interrupts                  # E5: interrupt latency model
+//! empa services                    # E6: OS-service gain model
+//! empa membw                       # E7: memory-bus ablation
+//! empa serve [--trace N]           # E9: fabric over a synthetic trace
+//! empa artifacts                   # list loaded AOT artifacts
+//! ```
+
+use empa::coordinator::{Fabric, FabricConfig, Response};
+use empa::empa::EmpaConfig;
+use empa::isa::{assemble, disassemble, loader};
+use empa::metrics::{fig4_series, fig5_series, fig6_series, table, table1};
+use empa::os::{InterruptModel, IrqCosts, ServiceCosts, ServiceModel};
+use empa::runtime::Runtime;
+use empa::util::json;
+use empa::workload::sumup::Mode;
+use empa::workload::{TraceConfig, TraceGen};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let verb = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let result = match verb {
+        "table1" => cmd_table1(),
+        "fig" => cmd_fig(rest),
+        "run" => cmd_run(rest),
+        "asm" => cmd_asm(rest),
+        "interrupts" => cmd_interrupts(),
+        "services" => cmd_services(),
+        "membw" => cmd_membw(),
+        "serve" => cmd_serve(rest),
+        "gantt" => cmd_gantt(rest),
+        "artifacts" => cmd_artifacts(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown verb `{other}`; try `empa help`")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("empa: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const HELP: &str = "\
+empa — Explicitly Many-Processor Approach (Végh 2016) reproduction
+
+USAGE: empa <verb> [args]
+
+  table1                regenerate the paper's Table 1
+  fig 4|5|6 [--json]    regenerate a figure's data series
+  run <mode> <n...>     simulate sumup at vector length(s) n
+  asm <file.ys> [--dis] assemble a Y86/EMPA source (emit .yo)
+  interrupts            E5: interrupt servicing, conventional vs EMPA
+  services              E6: OS-service gain (semaphores)
+  membw                 E7: memory-bus ablation for SUMUP
+  serve [--trace N]     E9: fabric coordinator over a synthetic trace
+  gantt <mode> <n>      ASCII core-occupancy timeline of a sumup run
+  artifacts             list AOT artifacts loadable by the runtime
+";
+
+fn cmd_table1() -> anyhow::Result<()> {
+    let rows = table1(&EmpaConfig::default());
+    print!("{}", table::render_table1(&rows));
+    Ok(())
+}
+
+fn parse_mode(s: &str) -> anyhow::Result<Mode> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "no" => Mode::No,
+        "for" => Mode::For,
+        "sumup" => Mode::Sumup,
+        other => anyhow::bail!("unknown mode `{other}` (no|for|sumup)"),
+    })
+}
+
+fn cmd_fig(rest: &[String]) -> anyhow::Result<()> {
+    let which: u32 = rest
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: empa fig 4|5|6"))?
+        .parse()?;
+    let as_json = rest.iter().any(|a| a == "--json");
+    let cfg = EmpaConfig::default();
+    let ns: Vec<usize> = (1..=10).chain([12, 16, 20, 25, 30, 31, 40, 60, 100, 200, 500, 1000]).collect();
+    match which {
+        4 | 5 => {
+            let pts = if which == 4 { fig4_series(&ns, &cfg) } else { fig5_series(&ns, &cfg) };
+            let label = if which == 4 { "speedup" } else { "S/k" };
+            if as_json {
+                let rows: Vec<String> = pts
+                    .iter()
+                    .map(|p| {
+                        let mut w = json::JsonWriter::new();
+                        w.object(&[
+                            ("n", p.n.to_string()),
+                            ("for", json::num(p.for_value)),
+                            ("sumup", json::num(p.sumup_value)),
+                        ]);
+                        w.finish()
+                    })
+                    .collect();
+                let mut w = json::JsonWriter::new();
+                w.array(&rows);
+                println!("{}", w.finish());
+            } else {
+                println!("{:>6} {:>10} {:>10}   # fig {which}: {label} vs vector length", "N", "FOR", "SUMUP");
+                for p in pts {
+                    println!("{:>6} {:>10.3} {:>10.3}", p.n, p.for_value, p.sumup_value);
+                }
+            }
+        }
+        6 => {
+            let pts = fig6_series(&ns, &cfg);
+            if as_json {
+                let rows: Vec<String> = pts
+                    .iter()
+                    .map(|p| {
+                        let mut w = json::JsonWriter::new();
+                        w.object(&[
+                            ("n", p.n.to_string()),
+                            ("k", p.k.to_string()),
+                            ("speedup", json::num(p.speedup)),
+                            ("s_over_k", json::num(p.s_over_k)),
+                            ("alpha_eff", json::num(p.alpha_eff)),
+                        ]);
+                        w.finish()
+                    })
+                    .collect();
+                let mut w = json::JsonWriter::new();
+                w.array(&rows);
+                println!("{}", w.finish());
+            } else {
+                println!("{:>6} {:>4} {:>9} {:>8} {:>9}   # fig 6: SUMUP mode", "N", "k", "S", "S/k", "α_eff");
+                for p in pts {
+                    println!("{:>6} {:>4} {:>9.3} {:>8.3} {:>9.3}", p.n, p.k, p.speedup, p.s_over_k, p.alpha_eff);
+                }
+            }
+        }
+        other => anyhow::bail!("no figure {other} in the paper's evaluation (4, 5 or 6)"),
+    }
+    Ok(())
+}
+
+fn cmd_run(rest: &[String]) -> anyhow::Result<()> {
+    let mode = parse_mode(rest.first().ok_or_else(|| anyhow::anyhow!("usage: empa run <mode> <n...>"))?)?;
+    let ns: Vec<usize> = rest[1..]
+        .iter()
+        .map(|s| s.parse::<usize>())
+        .collect::<Result<_, _>>()
+        .map_err(|e| anyhow::anyhow!("bad vector length: {e}"))?;
+    let ns = if ns.is_empty() { vec![4] } else { ns };
+    let cfg = EmpaConfig::default();
+    println!("{:>6} {:>6} {:>8} {:>6} {:>12} {:>10}", "N", "mode", "clocks", "k", "sum(%eax)", "retired");
+    for n in ns {
+        let r = table::run_sumup(mode, n, &cfg);
+        println!("{:>6} {:>6} {:>8} {:>6} {:>12} {:>10}", n, mode.name(), r.clocks, r.max_occupied, r.eax(), r.retired);
+    }
+    Ok(())
+}
+
+fn cmd_asm(rest: &[String]) -> anyhow::Result<()> {
+    let path = rest.first().ok_or_else(|| anyhow::anyhow!("usage: empa asm <file.ys> [--dis]"))?;
+    let src = std::fs::read_to_string(path)?;
+    let prog = assemble(&src)?;
+    print!("{}", loader::to_yo(&prog));
+    if rest.iter().any(|a| a == "--dis") {
+        eprintln!("--- disassembly ---");
+        for (addr, _len, text) in disassemble(&prog.image, prog.entry) {
+            eprintln!("0x{addr:03x}: {text}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_interrupts() -> anyhow::Result<()> {
+    let mut m = InterruptModel::new(IrqCosts::default(), 1);
+    let conv = m.conventional(100_000);
+    let empa = m.empa(100_000);
+    println!("interrupt servicing latency (clocks), n=100000   [E5, §3.6]");
+    println!("{:>14} {:>10} {:>8} {:>8} {:>8} {:>14}", "policy", "mean", "p50", "p99", "worst", "stolen/irq");
+    println!(
+        "{:>14} {:>10.1} {:>8} {:>8} {:>8} {:>14.1}",
+        "conventional", conv.mean, conv.p50, conv.p99, conv.worst,
+        conv.stolen_from_payload as f64 / conv.n as f64
+    );
+    println!(
+        "{:>14} {:>10.1} {:>8} {:>8} {:>8} {:>14.1}",
+        "EMPA", empa.mean, empa.p50, empa.p99, empa.worst, 0.0
+    );
+    println!("latency gain: {:.0}x (paper: \"several hundreds\")", conv.mean / empa.mean);
+    Ok(())
+}
+
+fn cmd_services() -> anyhow::Result<()> {
+    let m = ServiceModel::new(ServiceCosts::default());
+    let ops = empa::os::services::op_stream(100_000);
+    let (conv, _) = m.conventional(&ops);
+    let (soft, _) = m.soft(&ops);
+    let (emp, _) = m.empa(&ops);
+    println!("semaphore service cost (clocks/op), n=100000   [E6, §5.3]");
+    println!("{:>14} {:>12} {:>16}", "policy", "per-op", "user-blocked/op");
+    for (name, s) in [("conventional", conv), ("soft [20]", soft), ("EMPA", emp)] {
+        println!("{:>14} {:>12.1} {:>16.1}", name, s.per_op, s.user_blocked as f64 / s.ops as f64);
+    }
+    let (soft_gain, empa_gain) = m.gains(&ops);
+    let c = ServiceCosts::default();
+    let path_gain = (c.trap + c.os_service_path + c.payload_op) as f64
+        / (c.trap + c.soft_service_path + c.payload_op) as f64;
+    println!("service-path gain (as measured in [20], no context change): {path_gain:.1}x (paper: ~30)");
+    println!("full gain vs conventional syscall: soft {soft_gain:.1}x, EMPA {empa_gain:.1}x (paper: \"will surely be increased\")");
+    Ok(())
+}
+
+fn cmd_membw() -> anyhow::Result<()> {
+    use empa::mem::MemConfig;
+    println!("SUMUP N=64 under memory-port contention   [E7, §4.1.4]");
+    println!("{:>10} {:>8} {:>10} {:>12}", "ports", "clocks", "slowdown", "stall cycles");
+    let ideal = {
+        let cfg = EmpaConfig { mem: MemConfig::ideal(), ..Default::default() };
+        table::run_sumup(Mode::Sumup, 64, &cfg).clocks
+    };
+    for ports in [1usize, 2, 4, 8, 16, 32] {
+        let cfg = EmpaConfig { mem: MemConfig::buses(ports), ..Default::default() };
+        let r = table::run_sumup(Mode::Sumup, 64, &cfg);
+        println!(
+            "{:>10} {:>8} {:>9.2}x {:>12}",
+            ports,
+            r.clocks,
+            r.clocks as f64 / ideal as f64,
+            r.bus.stall_cycles
+        );
+    }
+    println!("{:>10} {:>8} {:>9.2}x {:>12}", "ideal", ideal, 1.0, 0);
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
+    let n: usize = rest
+        .iter()
+        .position(|a| a == "--trace")
+        .and_then(|i| rest.get(i + 1))
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(256);
+    let trace = TraceGen::new(TraceConfig { num_requests: n, ..Default::default() }).generate();
+    let fabric = Fabric::start(
+        FabricConfig::default(),
+        Box::new(|| {
+            let rt = Runtime::load_dir("artifacts")?;
+            Ok(Box::new(empa::accel::XlaAccel::new(rt)) as Box<dyn empa::accel::Accelerator>)
+        }),
+    );
+    let t0 = std::time::Instant::now();
+    let results = fabric.run_trace(trace);
+    let wall = t0.elapsed();
+    let lat: Vec<f64> = results.iter().map(|(_, _, l)| l.as_secs_f64() * 1e6).collect();
+    let errors = results.iter().filter(|(_, r, _)| matches!(r, Response::Error(_))).count();
+    let s = empa::util::Summary::of(&lat);
+    println!("fabric served {} requests in {:.1} ms ({:.0} req/s), {errors} errors  [E9]", results.len(), wall.as_secs_f64() * 1e3, results.len() as f64 / wall.as_secs_f64());
+    println!("latency (us): {s}");
+    println!("{}", fabric.metrics.render());
+    fabric.shutdown();
+    if errors > 0 {
+        anyhow::bail!("{errors} requests failed");
+    }
+    Ok(())
+}
+
+fn cmd_gantt(rest: &[String]) -> anyhow::Result<()> {
+    let mode = parse_mode(rest.first().ok_or_else(|| anyhow::anyhow!("usage: empa gantt <mode> <n>"))?)?;
+    let n: usize = rest.get(1).map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let values = empa::workload::sumup::synth_vector(n, 1);
+    let (src, _) = empa::workload::sumup::program(mode, &values);
+    let prog = assemble(&src)?;
+    let cfg = EmpaConfig { trace: true, ..Default::default() };
+    let cores = cfg.num_cores;
+    let r = empa::empa::EmpaProcessor::new(&prog.image, &cfg).run();
+    println!("{} N={n}: {} clocks, k={}", mode.name(), r.clocks, r.max_occupied);
+    print!("{}", empa::empa::gantt::render(&r.trace, cores, r.clocks));
+    Ok(())
+}
+
+fn cmd_artifacts() -> anyhow::Result<()> {
+    let rt = Runtime::load_dir("artifacts")?;
+    println!("{:>24} {:>12} {:>5} {:>6} {:>6} {:>10}", "artifact", "entry", "B", "L", "in", "out");
+    for name in rt.names() {
+        let m = rt.meta(name).unwrap();
+        println!("{:>24} {:>12} {:>5} {:>6} {:>6} {:>10}", m.name, m.entry, m.b, m.l, m.arity, m.out_arity);
+    }
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Memory subsystem model (§4.1.4).
+//!
+//! The paper argues EMPA "can make good use of multiple memory access
+//! devices": multi-bus, multiplexed buses, multiport decoders. We model a
+//! flat word-addressable memory fronted by a configurable set of **ports**
+//! (buses): every data access occupies a port for `access_cycles` clocks;
+//! when all ports are busy the access queues (the contention the paper's
+//! multiport proposal removes). `MemConfig::ideal()` reproduces the
+//! paper's Table 1 assumption (coordinated accesses, no conflicts, cost
+//! folded into the instruction timing); finite configurations drive the E7
+//! bandwidth ablation.
+
+
+pub mod bus;
+
+pub use bus::{BusStats, MemoryBus};
+
+/// Memory configuration.
+#[derive(Debug, Clone)]
+pub struct MemConfig {
+    /// Size of the address space in bytes.
+    pub size: usize,
+    /// Number of independent ports/buses (`None` = ideal multiport memory:
+    /// unlimited concurrent accesses, the paper's default assumption).
+    pub ports: Option<usize>,
+    /// Clocks a single word access occupies a port.
+    pub access_cycles: u64,
+}
+
+impl Default for MemConfig {
+    fn default() -> Self {
+        Self::ideal()
+    }
+}
+
+impl MemConfig {
+    /// Ideal multiport memory — §4.1.4's "coordinated operation excludes
+    /// simultaneous access", no port contention modelled.
+    pub fn ideal() -> Self {
+        MemConfig { size: 1 << 16, ports: None, access_cycles: 4 }
+    }
+
+    /// Single shared bus (the conventional SPA layout: "one processor
+    /// linked through one bus to one memory decoder").
+    pub fn single_bus() -> Self {
+        MemConfig { size: 1 << 16, ports: Some(1), access_cycles: 4 }
+    }
+
+    /// `n` independent buses/decoders over the same address space.
+    pub fn buses(n: usize) -> Self {
+        MemConfig { size: 1 << 16, ports: Some(n.max(1)), access_cycles: 4 }
+    }
+}
+
+/// Flat little-endian memory with bounds-checked word access.
+///
+/// `version` increments on every write; the simulator's decode cache
+/// uses it to invalidate stale entries (self-modifying code stays
+/// correct without per-write cache walks).
+#[derive(Debug, Clone)]
+pub struct Memory {
+    bytes: Vec<u8>,
+    version: u64,
+}
+
+/// Error for out-of-range accesses (maps to Y86 `ADR` status).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AddrError(pub u32);
+
+impl Memory {
+    pub fn new(size: usize) -> Self {
+        Memory { bytes: vec![0; size], version: 0 }
+    }
+
+    /// Write-generation counter (decode-cache invalidation).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Build a memory preloaded with a program image at address 0.
+    pub fn with_image(size: usize, image: &[u8]) -> Self {
+        let mut m = Memory::new(size.max(image.len()));
+        m.bytes[..image.len()].copy_from_slice(image);
+        m
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Raw byte slice for fetch (decoding reads up to 6 bytes).
+    pub fn fetch_window(&self, pc: u32) -> &[u8] {
+        let start = (pc as usize).min(self.bytes.len());
+        &self.bytes[start..]
+    }
+
+    pub fn read_u8(&self, addr: u32) -> Result<u8, AddrError> {
+        self.bytes.get(addr as usize).copied().ok_or(AddrError(addr))
+    }
+
+    pub fn read_u32(&self, addr: u32) -> Result<u32, AddrError> {
+        let a = addr as usize;
+        let w = self.bytes.get(a..a + 4).ok_or(AddrError(addr))?;
+        Ok(u32::from_le_bytes([w[0], w[1], w[2], w[3]]))
+    }
+
+    pub fn write_u32(&mut self, addr: u32, value: u32) -> Result<(), AddrError> {
+        let a = addr as usize;
+        let w = self.bytes.get_mut(a..a + 4).ok_or(AddrError(addr))?;
+        w.copy_from_slice(&value.to_le_bytes());
+        self.version += 1;
+        Ok(())
+    }
+
+    /// Write a slice of 32-bit words starting at `addr` (workload setup).
+    pub fn write_words(&mut self, addr: u32, words: &[i32]) -> Result<(), AddrError> {
+        for (i, w) in words.iter().enumerate() {
+            self.write_u32(addr + 4 * i as u32, *w as u32)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_roundtrip_and_bounds() {
+        let mut m = Memory::new(16);
+        m.write_u32(4, 0xDEADBEEF).unwrap();
+        assert_eq!(m.read_u32(4).unwrap(), 0xDEADBEEF);
+        assert_eq!(m.read_u8(4).unwrap(), 0xEF); // little-endian
+        assert_eq!(m.read_u32(13), Err(AddrError(13)));
+        assert_eq!(m.write_u32(16, 0), Err(AddrError(16)));
+    }
+
+    #[test]
+    fn with_image_preloads() {
+        let m = Memory::with_image(8, &[1, 2, 3, 4]);
+        assert_eq!(m.read_u32(0).unwrap(), 0x04030201);
+        // image larger than requested size grows the memory
+        let m = Memory::with_image(2, &[0; 10]);
+        assert_eq!(m.len(), 10);
+    }
+
+    #[test]
+    fn write_words_lays_out_vector() {
+        let mut m = Memory::new(64);
+        m.write_words(8, &[0xd, 0xc0, -1]).unwrap();
+        assert_eq!(m.read_u32(8).unwrap(), 0xd);
+        assert_eq!(m.read_u32(12).unwrap(), 0xc0);
+        assert_eq!(m.read_u32(16).unwrap(), 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn config_presets() {
+        assert_eq!(MemConfig::ideal().ports, None);
+        assert_eq!(MemConfig::single_bus().ports, Some(1));
+        assert_eq!(MemConfig::buses(4).ports, Some(4));
+        assert_eq!(MemConfig::buses(0).ports, Some(1)); // clamped
+    }
+}

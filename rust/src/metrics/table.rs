@@ -1,0 +1,180 @@
+//! Experiment drivers regenerating the paper's Table 1 and Figs. 4–6.
+//!
+//! Every row/point is produced by *running the cycle-stepped simulator*,
+//! not by evaluating closed forms; the closed forms from the paper are the
+//! assertions in `rust/tests/table1.rs`.
+
+use crate::empa::{EmpaConfig, EmpaProcessor, RunReport};
+use crate::isa::assemble;
+use crate::workload::sumup::{self, Mode};
+
+/// One row of Table 1.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub n: usize,
+    pub mode: Mode,
+    pub clocks: u64,
+    pub k: usize,
+    pub speedup: f64,
+    pub s_over_k: f64,
+    pub alpha_eff: f64,
+}
+
+/// A point of Fig. 4 / Fig. 5 (two series over the vector length).
+#[derive(Debug, Clone)]
+pub struct FigPoint {
+    pub n: usize,
+    pub for_value: f64,
+    pub sumup_value: f64,
+}
+
+/// A point of Fig. 6 (S/k and α_eff for SUMUP).
+#[derive(Debug, Clone)]
+pub struct Fig6Point {
+    pub n: usize,
+    pub k: usize,
+    pub speedup: f64,
+    pub s_over_k: f64,
+    pub alpha_eff: f64,
+}
+
+/// Run one sumup workload and report. Values are timing-irrelevant
+/// (instruction costs are data-independent), so a synthetic vector is used.
+pub fn run_sumup(mode: Mode, n: usize, cfg: &EmpaConfig) -> RunReport {
+    let values = sumup::synth_vector(n, 0xE117);
+    let (src, expected) = sumup::program(mode, &values);
+    let prog = assemble(&src).expect("generated program assembles");
+    let report = EmpaProcessor::new(&prog.image, cfg).run();
+    assert_eq!(report.fault, None, "{mode:?} N={n}: {:?}", report.fault);
+    assert_eq!(report.eax(), expected, "{mode:?} N={n}: wrong sum");
+    report
+}
+
+/// Regenerate Table 1 (vector lengths 1, 2, 4, 6; all three modes).
+pub fn table1(cfg: &EmpaConfig) -> Vec<Table1Row> {
+    let mut rows = Vec::new();
+    for n in [1usize, 2, 4, 6] {
+        let base = run_sumup(Mode::No, n, cfg);
+        for mode in [Mode::No, Mode::For, Mode::Sumup] {
+            let r = if mode == Mode::No { base.clone() } else { run_sumup(mode, n, cfg) };
+            let k = r.max_occupied;
+            let s = super::speedup(base.clocks, r.clocks);
+            rows.push(Table1Row {
+                n,
+                mode,
+                clocks: r.clocks,
+                k,
+                speedup: s,
+                s_over_k: super::s_over_k(k as f64, s),
+                alpha_eff: super::alpha_eff(k as f64, s),
+            });
+        }
+    }
+    rows
+}
+
+/// Fig. 4: measurable speedup vs vector length, FOR and SUMUP series.
+pub fn fig4_series(ns: &[usize], cfg: &EmpaConfig) -> Vec<FigPoint> {
+    ns.iter()
+        .map(|&n| {
+            let t0 = run_sumup(Mode::No, n, cfg).clocks;
+            let tf = run_sumup(Mode::For, n, cfg).clocks;
+            let ts = run_sumup(Mode::Sumup, n, cfg).clocks;
+            FigPoint { n, for_value: super::speedup(t0, tf), sumup_value: super::speedup(t0, ts) }
+        })
+        .collect()
+}
+
+/// Fig. 5: core utilization efficiency `S/k` vs vector length.
+pub fn fig5_series(ns: &[usize], cfg: &EmpaConfig) -> Vec<FigPoint> {
+    ns.iter()
+        .map(|&n| {
+            let t0 = run_sumup(Mode::No, n, cfg).clocks;
+            let rf = run_sumup(Mode::For, n, cfg);
+            let rs = run_sumup(Mode::Sumup, n, cfg);
+            FigPoint {
+                n,
+                for_value: super::s_over_k(rf.max_occupied as f64, super::speedup(t0, rf.clocks)),
+                sumup_value: super::s_over_k(rs.max_occupied as f64, super::speedup(t0, rs.clocks)),
+            }
+        })
+        .collect()
+}
+
+/// Fig. 6: `S/k` and `α_eff` for SUMUP mode; the core count saturates at
+/// 31 (1 parent + 30 children) through the rent-period mechanism of §6.2.
+pub fn fig6_series(ns: &[usize], cfg: &EmpaConfig) -> Vec<Fig6Point> {
+    ns.iter()
+        .map(|&n| {
+            let t0 = run_sumup(Mode::No, n, cfg).clocks;
+            let rs = run_sumup(Mode::Sumup, n, cfg);
+            let k = rs.max_occupied;
+            let s = super::speedup(t0, rs.clocks);
+            Fig6Point {
+                n,
+                k,
+                speedup: s,
+                s_over_k: super::s_over_k(k as f64, s),
+                alpha_eff: super::alpha_eff(k as f64, s),
+            }
+        })
+        .collect()
+}
+
+/// Render Table 1 in the paper's layout.
+pub fn render_table1(rows: &[Table1Row]) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "{:>6} {:>6} {:>8} {:>6} {:>8} {:>6} {:>7}",
+        "N", "Mode", "Time", "k", "Speedup", "S/k", "α_eff"
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{:>6} {:>6} {:>8} {:>6} {:>8.2} {:>6.2} {:>7.2}",
+            r.n,
+            r.mode.name(),
+            r.clocks,
+            r.k,
+            r.speedup,
+            r.s_over_k,
+            r.alpha_eff
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_12_rows_in_paper_order() {
+        let rows = table1(&EmpaConfig::default());
+        assert_eq!(rows.len(), 12);
+        assert_eq!((rows[0].n, rows[0].mode), (1, Mode::No));
+        assert_eq!((rows[11].n, rows[11].mode), (6, Mode::Sumup));
+        // NO rows are the baseline: S = S/k = α = 1, k = 1.
+        for r in rows.iter().filter(|r| r.mode == Mode::No) {
+            assert_eq!(r.k, 1);
+            assert_eq!(r.speedup, 1.0);
+            assert_eq!(r.alpha_eff, 1.0);
+        }
+    }
+
+    #[test]
+    fn fig4_speedups_increase_with_n() {
+        let pts = fig4_series(&[1, 4, 16, 64], &EmpaConfig::default());
+        assert!(pts.windows(2).all(|w| w[1].for_value >= w[0].for_value));
+        assert!(pts.windows(2).all(|w| w[1].sumup_value >= w[0].sumup_value));
+    }
+
+    #[test]
+    fn render_contains_modes() {
+        let rows = table1(&EmpaConfig::default());
+        let s = render_table1(&rows);
+        assert!(s.contains("SUMUP") && s.contains("FOR") && s.contains("NO"));
+    }
+}

@@ -1,0 +1,161 @@
+//! Interrupt-servicing model (§3.6, E5).
+//!
+//! Conventional path: the processor is "stolen from the running process" —
+//! pipeline drain, state save, (for user-mode work) a kernel context
+//! change costing "dozens of thousands of clock periods" [13], the
+//! handler, state restore, and a context change back. Scheduling noise
+//! makes latency jittery.
+//!
+//! EMPA path (§3.6): "a core can be reserved for interrupt servicing. It
+//! can be prepared (even in kernel mode) and waiting for the interrupt...
+//! it immediately starts its servicing, without any duty to save and
+//! restore" — latency = wake from power-economy wait + handler; zero
+//! jitter, since the running program is never preempted.
+
+use crate::util::Rng;
+
+/// Per-step costs in clock cycles.
+#[derive(Debug, Clone)]
+pub struct IrqCosts {
+    /// Pipeline drain + microarchitectural state flush.
+    pub pipeline_drain: u64,
+    /// Architectural state save (registers, flags) to memory.
+    pub state_save: u64,
+    /// User→kernel context change (the "extremely expensive" mode switch
+    /// of §2.4; [13] puts it at dozens of thousands of clocks).
+    pub context_change: u64,
+    /// The handler body itself.
+    pub handler: u64,
+    /// State restore + kernel→user change back.
+    pub state_restore: u64,
+    /// Scheduler-induced jitter bound (uniform 0..=jitter, conventional
+    /// path only: "the hardware scheduling makes the software operation
+    /// non predictable", §2.4).
+    pub sched_jitter: u64,
+    /// EMPA: waking the reserved core from power-economy wait.
+    pub empa_wakeup: u64,
+}
+
+impl Default for IrqCosts {
+    fn default() -> Self {
+        IrqCosts {
+            pipeline_drain: 40,
+            state_save: 160,
+            context_change: 12_000, // "dozens of thousands" [13]
+            handler: 30,            // short device-ack handler
+            state_restore: 160,
+            sched_jitter: 400,
+            empa_wakeup: 2,
+        }
+    }
+}
+
+/// Latency distribution summary for one policy.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InterruptStats {
+    pub n: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p99: u64,
+    pub worst: u64,
+    /// Clocks stolen from the interrupted (payload) program.
+    pub stolen_from_payload: u64,
+}
+
+fn summarize(mut lat: Vec<u64>, stolen: u64) -> InterruptStats {
+    lat.sort_unstable();
+    let n = lat.len() as u64;
+    let mean = lat.iter().sum::<u64>() as f64 / n.max(1) as f64;
+    let pick = |q: f64| lat[(((lat.len() - 1) as f64) * q) as usize];
+    InterruptStats {
+        n,
+        mean,
+        p50: pick(0.50),
+        p99: pick(0.99),
+        worst: *lat.last().unwrap_or(&0),
+        stolen_from_payload: stolen,
+    }
+}
+
+/// The interrupt-latency experiment.
+pub struct InterruptModel {
+    pub costs: IrqCosts,
+    rng: Rng,
+}
+
+impl InterruptModel {
+    pub fn new(costs: IrqCosts, seed: u64) -> Self {
+        InterruptModel { costs, rng: Rng::seed_from_u64(seed) }
+    }
+
+    /// Conventional servicing of `n` interrupts.
+    pub fn conventional(&mut self, n: usize) -> InterruptStats {
+        let c = &self.costs;
+        let mut lats = Vec::with_capacity(n);
+        let mut stolen = 0u64;
+        for _ in 0..n {
+            let jitter = if c.sched_jitter > 0 { self.rng.range_u64(0, c.sched_jitter) } else { 0 };
+            // latency to *handler completion* as seen by the device
+            let lat = jitter + c.pipeline_drain + c.state_save + c.context_change + c.handler;
+            // everything except the handler is stolen from the payload,
+            // plus the restore path after the handler
+            stolen += jitter + c.pipeline_drain + c.state_save + 2 * c.context_change + c.handler + c.state_restore;
+            lats.push(lat);
+        }
+        summarize(lats, stolen)
+    }
+
+    /// EMPA servicing: a reserved core, already in kernel mode, wakes and
+    /// runs the handler; the payload program is never touched.
+    pub fn empa(&mut self, n: usize) -> InterruptStats {
+        let c = &self.costs;
+        let lats = vec![c.empa_wakeup + c.handler; n];
+        summarize(lats, 0)
+    }
+
+    /// The headline gain: mean conventional latency / mean EMPA latency.
+    pub fn latency_gain(&mut self, n: usize) -> f64 {
+        let conv = self.conventional(n);
+        let empa = self.empa(n);
+        conv.mean / empa.mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empa_gain_is_several_hundred() {
+        // §3.6: "resulting in several hundreds of performance gain
+        // relative to the conventional handling".
+        let mut m = InterruptModel::new(IrqCosts::default(), 1);
+        let gain = m.latency_gain(10_000);
+        assert!(gain > 200.0 && gain < 800.0, "gain {gain}");
+    }
+
+    #[test]
+    fn empa_is_jitter_free() {
+        let mut m = InterruptModel::new(IrqCosts::default(), 2);
+        let s = m.empa(1000);
+        assert_eq!(s.p50, s.worst, "deterministic latency");
+        assert_eq!(s.stolen_from_payload, 0);
+    }
+
+    #[test]
+    fn conventional_jitter_shows_in_percentiles() {
+        let mut m = InterruptModel::new(IrqCosts::default(), 3);
+        let s = m.conventional(10_000);
+        assert!(s.p99 > s.p50);
+        assert!(s.worst <= s.p50 + m.costs.sched_jitter);
+        assert!(s.stolen_from_payload > 0);
+    }
+
+    #[test]
+    fn zero_jitter_costs_are_deterministic() {
+        let costs = IrqCosts { sched_jitter: 0, ..Default::default() };
+        let mut m = InterruptModel::new(costs, 4);
+        let s = m.conventional(100);
+        assert_eq!(s.p50, s.worst);
+    }
+}

@@ -1,0 +1,15 @@
+//! Operating-system interaction substrates (§2.4, §3.6, §5.3).
+//!
+//! The paper's quantitative OS claims are cost-model comparisons:
+//! interrupt servicing with a reserved EMPA core vs conventional
+//! save/restore + context change ([`interrupt`]), and kernel services
+//! (semaphores) on a dedicated kernel core vs the conventional syscall
+//! path ([`services`]). Both models are discrete-event simulations over
+//! calibrated per-step costs, reproducing the claimed *ratios* (several
+//! hundred for interrupts, ≈30 for services) rather than absolute times.
+
+pub mod interrupt;
+pub mod services;
+
+pub use interrupt::{InterruptModel, InterruptStats, IrqCosts};
+pub use services::{ServiceCosts, ServiceModel, ServiceStats};

@@ -1,0 +1,117 @@
+//! Minimal JSON emission (no serde offline): enough to dump figure series
+//! and run reports for plotting.
+
+use std::fmt::Write;
+
+/// Incremental JSON writer for flat objects and arrays of objects.
+#[derive(Debug, Default)]
+pub struct JsonWriter {
+    buf: String,
+}
+
+impl JsonWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn finish(self) -> String {
+        self.buf
+    }
+
+    pub fn raw(&mut self, s: &str) -> &mut Self {
+        self.buf.push_str(s);
+        self
+    }
+
+    /// Serialise a string with escaping.
+    pub fn string(&mut self, s: &str) -> &mut Self {
+        self.buf.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => self.buf.push_str("\\\""),
+                '\\' => self.buf.push_str("\\\\"),
+                '\n' => self.buf.push_str("\\n"),
+                '\t' => self.buf.push_str("\\t"),
+                '\r' => self.buf.push_str("\\r"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(self.buf, "\\u{:04x}", c as u32);
+                }
+                c => self.buf.push(c),
+            }
+        }
+        self.buf.push('"');
+        self
+    }
+
+    /// Write an object from `(key, rendered-value)` pairs.
+    pub fn object(&mut self, fields: &[(&str, String)]) -> &mut Self {
+        self.buf.push('{');
+        for (i, (k, v)) in fields.iter().enumerate() {
+            if i > 0 {
+                self.buf.push(',');
+            }
+            self.string(k);
+            self.buf.push(':');
+            self.buf.push_str(v);
+        }
+        self.buf.push('}');
+        self
+    }
+
+    /// Write an array of pre-rendered values.
+    pub fn array(&mut self, values: &[String]) -> &mut Self {
+        self.buf.push('[');
+        for (i, v) in values.iter().enumerate() {
+            if i > 0 {
+                self.buf.push(',');
+            }
+            self.buf.push_str(v);
+        }
+        self.buf.push(']');
+        self
+    }
+}
+
+/// Render a number (JSON has no NaN/Inf; clamp to null).
+pub fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Render a string value.
+pub fn str_val(s: &str) -> String {
+    let mut w = JsonWriter::new();
+    w.string(s);
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn object_and_array() {
+        let mut w = JsonWriter::new();
+        w.object(&[("n", "4".into()), ("mode", str_val("SUMUP")), ("s", num(3.94))]);
+        assert_eq!(w.finish(), r#"{"n":4,"mode":"SUMUP","s":3.94}"#);
+        let mut w = JsonWriter::new();
+        w.array(&["1".into(), "2".into()]);
+        assert_eq!(w.finish(), "[1,2]");
+    }
+
+    #[test]
+    fn escaping() {
+        assert_eq!(str_val("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(str_val("\u{1}"), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn non_finite_is_null() {
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(f64::INFINITY), "null");
+        assert_eq!(num(1.5), "1.5");
+    }
+}

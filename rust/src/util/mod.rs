@@ -1,0 +1,10 @@
+//! Small zero-dependency utilities (the build is fully offline; only
+//! `xla`, `anyhow` and `thiserror` are vendored).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::JsonWriter;
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,82 @@
+//! Latency/throughput summary statistics for the bench harness and the
+//! coordinator metrics.
+
+/// Summary of a sample of values (latencies in ns/cycles, etc.).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute from a sample; empty samples yield zeros.
+    pub fn of(values: &[f64]) -> Summary {
+        if values.is_empty() {
+            return Summary { n: 0, mean: 0.0, min: 0.0, p50: 0.0, p90: 0.0, p99: 0.0, max: 0.0 };
+        }
+        let mut v: Vec<f64> = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| v[(((v.len() - 1) as f64) * p).round() as usize];
+        Summary {
+            n: v.len(),
+            mean: v.iter().sum::<f64>() / v.len() as f64,
+            min: v[0],
+            p50: q(0.50),
+            p90: q(0.90),
+            p99: q(0.99),
+            max: *v.last().unwrap(),
+        }
+    }
+
+    /// Compute from integer samples.
+    pub fn of_u64(values: &[u64]) -> Summary {
+        let v: Vec<f64> = values.iter().map(|&x| x as f64).collect();
+        Summary::of(&v)
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.1} min={:.0} p50={:.0} p90={:.0} p99={:.0} max={:.0}",
+            self.n, self.mean, self.min, self.p50, self.p90, self.p99, self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zeroed() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.max, 0.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let vals: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let s = Summary::of(&vals);
+        assert_eq!(s.n, 1000);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 1000.0);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99);
+        assert!((s.mean - 500.5).abs() < 1e-9);
+        assert!((s.p50 - 500.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn of_u64_matches() {
+        let a = Summary::of_u64(&[1, 2, 3]);
+        let b = Summary::of(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,204 @@
+//! Dot-product workload family: `sum_i a[i]*b[i]` — §3.7's "mass
+//! operating mode" over *two* operand streams (the paper's parent "can
+//! sum up summands provided by its children, in frame of a machine
+//! instruction"; here each child provides a product).
+//!
+//! Both arrays are laid out back to back, so the child body reaches the
+//! second operand at a fixed displacement from `%ecx` — the same
+//! single-address-register discipline the SV's FOR/SUMUP engines advance.
+
+use super::sumup::{Mode, SUMUP_MAX_CHILDREN};
+use std::fmt::Write;
+
+fn emit_arrays(src: &mut String, a: &[i32], b: &[i32]) {
+    src.push_str("    .align 4\narrayA:\n");
+    for v in a {
+        let _ = writeln!(src, "    .long {v}");
+    }
+    if a.is_empty() {
+        src.push_str("    .long 0\n");
+    }
+    src.push_str("arrayB:\n");
+    for v in b {
+        let _ = writeln!(src, "    .long {v}");
+    }
+    if b.is_empty() {
+        src.push_str("    .long 0\n");
+    }
+}
+
+fn expected(a: &[i32], b: &[i32]) -> i32 {
+    a.iter().zip(b).fold(0i32, |s, (&x, &y)| s.wrapping_add(x.wrapping_mul(y)))
+}
+
+/// Displacement from an `arrayA` element to its `arrayB` partner.
+fn offset(n: usize) -> usize {
+    4 * n.max(1)
+}
+
+/// Conventional loop (baseline).
+pub fn no_mode(a: &[i32], b: &[i32]) -> (String, i32) {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let off = offset(n);
+    let mut s = String::new();
+    let _ = writeln!(s, "# adotprod, conventional coding, N={n}");
+    s.push_str("    .pos 0\n");
+    let _ = writeln!(s, "    irmovl ${n}, %edx");
+    s.push_str("    irmovl arrayA, %ecx\n");
+    s.push_str("    xorl %eax, %eax\n");
+    s.push_str("    andl %edx, %edx\n");
+    s.push_str("    je End\n");
+    s.push_str("Loop:\n");
+    s.push_str("    mrmovl (%ecx), %esi   # a[i]\n");
+    let _ = writeln!(s, "    mrmovl {off}(%ecx), %edi # b[i]");
+    s.push_str("    mull %edi, %esi       # a[i]*b[i]\n");
+    s.push_str("    addl %esi, %eax\n");
+    s.push_str("    irmovl $4, %ebx\n");
+    s.push_str("    addl %ebx, %ecx\n");
+    s.push_str("    irmovl $-1, %ebx\n");
+    s.push_str("    addl %ebx, %edx\n");
+    s.push_str("    jne Loop\n");
+    s.push_str("End:\n    halt\n");
+    emit_arrays(&mut s, a, b);
+    (s, expected(a, b))
+}
+
+/// FOR mode: the product+accumulate kernel as a re-launched child QT.
+pub fn for_mode(a: &[i32], b: &[i32]) -> (String, i32) {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let off = offset(n);
+    let mut s = String::new();
+    let _ = writeln!(s, "# adotprod, EMPA FOR mode, N={n}");
+    s.push_str("    .pos 0\n");
+    let _ = writeln!(s, "    irmovl ${n}, %edx");
+    s.push_str("    irmovl arrayA, %ecx\n");
+    s.push_str("    xorl %eax, %eax\n");
+    s.push_str("    qprealloc $1\n");
+    s.push_str("    qmassfor Body\n");
+    s.push_str("    halt\n");
+    s.push_str("Body:\n");
+    s.push_str("    mrmovl (%ecx), %esi\n");
+    let _ = writeln!(s, "    mrmovl {off}(%ecx), %edi");
+    s.push_str("    mull %edi, %esi\n");
+    s.push_str("    addl %esi, %eax\n");
+    s.push_str("    qterm %eax\n");
+    emit_arrays(&mut s, a, b);
+    (s, expected(a, b))
+}
+
+/// SUMUP mode: each child streams one product into the parent adder.
+pub fn sumup_mode(a: &[i32], b: &[i32]) -> (String, i32) {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let off = offset(n);
+    let prealloc = (n as u32).min(SUMUP_MAX_CHILDREN);
+    let mut s = String::new();
+    let _ = writeln!(s, "# adotprod, EMPA SUMUP mode, N={n}");
+    s.push_str("    .pos 0\n");
+    let _ = writeln!(s, "    irmovl ${n}, %edx");
+    s.push_str("    irmovl arrayA, %ecx\n");
+    s.push_str("    xorl %eax, %eax\n");
+    let _ = writeln!(s, "    qprealloc ${prealloc}");
+    s.push_str("    qmasssum Body\n");
+    s.push_str("    halt\n");
+    s.push_str("Body:\n");
+    s.push_str("    mrmovl (%ecx), %esi\n");
+    let _ = writeln!(s, "    mrmovl {off}(%ecx), %edi");
+    s.push_str("    mull %edi, %esi\n");
+    s.push_str("    addl %esi, %pp       # stream the product\n");
+    s.push_str("    qterm\n");
+    emit_arrays(&mut s, a, b);
+    (s, expected(a, b))
+}
+
+/// Program source for (mode, a, b).
+pub fn program(mode: Mode, a: &[i32], b: &[i32]) -> (String, i32) {
+    match mode {
+        Mode::No => no_mode(a, b),
+        Mode::For => for_mode(a, b),
+        Mode::Sumup => sumup_mode(a, b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::empa::{EmpaConfig, EmpaProcessor, TimingConfig};
+    use crate::isa::assemble;
+    use crate::workload::sumup::synth_vector;
+
+    fn run(src: &str) -> crate::empa::RunReport {
+        let p = assemble(src).unwrap();
+        EmpaProcessor::new(&p.image, &EmpaConfig::default()).run()
+    }
+
+    #[test]
+    fn all_modes_compute_the_dot_product() {
+        for n in [0usize, 1, 2, 5, 17, 40] {
+            let a = synth_vector(n, 11).iter().map(|v| v % 1000).collect::<Vec<_>>();
+            let b = synth_vector(n, 22).iter().map(|v| v % 1000).collect::<Vec<_>>();
+            for mode in [Mode::No, Mode::For, Mode::Sumup] {
+                let (src, want) = program(mode, &a, &b);
+                let r = run(&src);
+                assert_eq!(r.fault, None, "{mode:?} N={n}");
+                assert_eq!(r.eax(), want, "{mode:?} N={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn timings_follow_the_instruction_cost_laws() {
+        // Closed forms derived from TimingConfig (not hardcoded): the same
+        // derivation style as Table 1, with the heavier loop kernel.
+        let t = TimingConfig::paper();
+        let body_no = 2 * t.mrmov + t.mul + t.alu // payload
+            + t.irmov + t.alu + t.irmov + t.alu + t.jump; // loop control
+        let body_child = 2 * t.mrmov + t.mul + t.alu;
+        for n in [1usize, 3, 8, 20] {
+            let a = synth_vector(n, 1);
+            let b = synth_vector(n, 2);
+            let (src, _) = no_mode(&a, &b);
+            let r = run(&src);
+            let prologue = 2 * t.irmov + 2 * t.alu + t.jump + t.halt;
+            assert_eq!(r.clocks, prologue + body_no * n as u64, "NO N={n}");
+            let (src, _) = for_mode(&a, &b);
+            let r = run(&src);
+            // setup(11) + qprealloc(2) + qmassfor(3) + first-launch stagger
+            // + N*child + halt(3)
+            let setup = 2 * t.irmov + t.alu
+                + t.meta_dispatch + t.sv_prealloc
+                + t.meta_dispatch + t.sv_mass_setup_for
+                + t.sv_stagger
+                + t.halt;
+            assert_eq!(r.clocks, setup + body_child * n as u64, "FOR N={n}");
+        }
+    }
+
+    #[test]
+    fn sumup_dot_still_one_element_per_clock() {
+        // The adder consumes 1 product/clock regardless of the heavier
+        // child body — the pipe is just longer (same §5.2 argument).
+        let mk = |n: usize| {
+            let a = synth_vector(n, 5);
+            let b = synth_vector(n, 6);
+            run(&sumup_mode(&a, &b).0).clocks
+        };
+        let t10 = mk(10);
+        let t20 = mk(20);
+        assert_eq!(t20 - t10, 10, "1 clock per extra element");
+    }
+
+    #[test]
+    fn sumup_dot_uses_more_children_than_plain_sumup() {
+        // Child rent = work(25) + overhead(19) = 44 clocks at 1/clock
+        // stagger, so concurrency saturates at min(N, 30 prealloc'd).
+        let n = 60;
+        let a = synth_vector(n, 7);
+        let b = synth_vector(n, 8);
+        let r = run(&sumup_mode(&a, &b).0);
+        assert_eq!(r.fault, None);
+        assert_eq!(r.max_occupied, 31, "prealloc cap still rules");
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload generators: the paper's `asumup` program family (§5) in all
+//! three modes, plus synthetic request traces for the fabric coordinator.
+
+pub mod dotprod;
+pub mod scale;
+pub mod sumup;
+pub mod traces;
+
+pub use sumup::{for_mode_program, no_mode_program, sumup_mode_program, Mode};
+pub use traces::{Request, RequestKind, TraceConfig, TraceGen};

@@ -1,0 +1,184 @@
+//! The `asumup` program family (§5): summing up elements of a vector,
+//! generated for an arbitrary vector in each of the three operating modes
+//! of Table 1.
+//!
+//! The EMPA variants follow §5.1/§5.2: the compiler (here: this
+//! generator) cuts the loop kernel `mrmovl + addl` into a QT, preallocates
+//! cores — `min(N, 30)` in SUMUP mode, per §6.2's compiler rule: "it
+//! should not allocate more than that number of cores" — and emits the
+//! mass-processing metainstructions.
+
+use std::fmt::Write;
+
+/// Table 1 operating modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// Conventional programming, no EMPA acceleration (Listing 1).
+    No,
+    /// §5.1: control instructions replaced by SV activity.
+    For,
+    /// §5.2: obsolete read/write-back stages also eliminated.
+    Sumup,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::No => "NO",
+            Mode::For => "FOR",
+            Mode::Sumup => "SUMUP",
+        }
+    }
+}
+
+/// Maximum useful SUMUP children (§6.2: the 30-clock rent period).
+pub const SUMUP_MAX_CHILDREN: u32 = 30;
+
+fn emit_vector(src: &mut String, values: &[i32]) {
+    src.push_str("    .align 4\narray:\n");
+    for v in values {
+        let _ = writeln!(src, "    .long {v}");
+    }
+    if values.is_empty() {
+        // keep the label addressable
+        src.push_str("    .long 0\n");
+    }
+}
+
+fn checked_sum(values: &[i32]) -> i32 {
+    values.iter().fold(0i32, |a, &b| a.wrapping_add(b))
+}
+
+/// Listing 1, generalised to an arbitrary vector. Returns the source and
+/// the expected sum.
+pub fn no_mode_program(values: &[i32]) -> (String, i32) {
+    let n = values.len();
+    let mut s = String::new();
+    let _ = writeln!(s, "# asumup, conventional coding (Listing 1), N={n}");
+    s.push_str("    .pos 0\n");
+    let _ = writeln!(s, "    irmovl ${n}, %edx      # No of items to sum");
+    s.push_str("    irmovl array, %ecx   # Array address\n");
+    s.push_str("    xorl %eax, %eax      # sum = 0\n");
+    s.push_str("    andl %edx, %edx      # Set condition codes\n");
+    s.push_str("    je End\n");
+    s.push_str("Loop:\n");
+    s.push_str("    mrmovl (%ecx), %esi  # get *Start\n");
+    s.push_str("    addl %esi, %eax      # add to sum\n");
+    s.push_str("    irmovl $4, %ebx\n");
+    s.push_str("    addl %ebx, %ecx      # Start++\n");
+    s.push_str("    irmovl $-1, %ebx\n");
+    s.push_str("    addl %ebx, %edx      # Count--\n");
+    s.push_str("    jne Loop             # Stop when 0\n");
+    s.push_str("End:\n");
+    s.push_str("    halt\n");
+    emit_vector(&mut s, values);
+    (s, checked_sum(values))
+}
+
+/// §5.1 FOR mode: lines 9–10 of Listing 1 become a QT executed by one
+/// preallocated child; the SV takes over loop organisation.
+pub fn for_mode_program(values: &[i32]) -> (String, i32) {
+    let n = values.len();
+    let mut s = String::new();
+    let _ = writeln!(s, "# asumup, EMPA FOR mode (§5.1), N={n}");
+    s.push_str("    .pos 0\n");
+    let _ = writeln!(s, "    irmovl ${n}, %edx      # No of items to sum");
+    s.push_str("    irmovl array, %ecx   # Array address\n");
+    s.push_str("    xorl %eax, %eax      # sum = 0\n");
+    s.push_str("    qprealloc $1         # guarantee a helper core\n");
+    s.push_str("    qmassfor Body        # SV drives the loop\n");
+    s.push_str("    halt\n");
+    s.push_str("Body:\n");
+    s.push_str("    mrmovl (%ecx), %esi  # get *Start (payload)\n");
+    s.push_str("    addl %esi, %eax      # add to sum (payload)\n");
+    s.push_str("    qterm %eax           # clone the partial sum back\n");
+    emit_vector(&mut s, values);
+    (s, checked_sum(values))
+}
+
+/// §5.2 SUMUP mode: staggered children stream summands through `%pp`
+/// into the parent-side adder.
+pub fn sumup_mode_program(values: &[i32]) -> (String, i32) {
+    let n = values.len();
+    let prealloc = (n as u32).min(SUMUP_MAX_CHILDREN);
+    let mut s = String::new();
+    let _ = writeln!(s, "# asumup, EMPA SUMUP mode (§5.2), N={n}");
+    s.push_str("    .pos 0\n");
+    let _ = writeln!(s, "    irmovl ${n}, %edx      # No of items to sum");
+    s.push_str("    irmovl array, %ecx   # Array address\n");
+    s.push_str("    xorl %eax, %eax      # sum = 0\n");
+    let _ = writeln!(s, "    qprealloc ${prealloc}       # compiler rule: min(N, 30)");
+    s.push_str("    qmasssum Body        # SV engine + parent adder\n");
+    s.push_str("    halt\n");
+    s.push_str("Body:\n");
+    s.push_str("    mrmovl (%ecx), %esi  # get my element\n");
+    s.push_str("    addl %esi, %pp       # stream summand to parent adder\n");
+    s.push_str("    qterm                # one-shot QT\n");
+    emit_vector(&mut s, values);
+    (s, checked_sum(values))
+}
+
+/// Program source for (mode, vector).
+pub fn program(mode: Mode, values: &[i32]) -> (String, i32) {
+    match mode {
+        Mode::No => no_mode_program(values),
+        Mode::For => for_mode_program(values),
+        Mode::Sumup => sumup_mode_program(values),
+    }
+}
+
+/// The paper's example vector from Listing 1.
+pub fn paper_vector() -> Vec<i32> {
+    vec![0xd, 0xc0, 0xb00, 0xa000]
+}
+
+/// A deterministic pseudo-random vector of length `n` (tests, sweeps).
+pub fn synth_vector(n: usize, seed: u64) -> Vec<i32> {
+    // xorshift64*, truncated: deterministic across platforms.
+    let mut state = seed.wrapping_mul(2685821657736338717).max(1);
+    (0..n)
+        .map(|_| {
+            state ^= state >> 12;
+            state ^= state << 25;
+            state ^= state >> 27;
+            (state.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as i32 - (1 << 23)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assemble;
+
+    #[test]
+    fn generated_sources_assemble() {
+        for mode in [Mode::No, Mode::For, Mode::Sumup] {
+            for n in [0usize, 1, 2, 4, 6, 31, 100] {
+                let v = synth_vector(n, 7);
+                let (src, _) = program(mode, &v);
+                assemble(&src).unwrap_or_else(|e| panic!("{mode:?} N={n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn expected_sum_wraps() {
+        let (_, sum) = no_mode_program(&[i32::MAX, 1]);
+        assert_eq!(sum, i32::MIN);
+    }
+
+    #[test]
+    fn prealloc_respects_compiler_cap() {
+        let (src, _) = sumup_mode_program(&synth_vector(100, 1));
+        assert!(src.contains("qprealloc $30"));
+        let (src, _) = sumup_mode_program(&synth_vector(7, 1));
+        assert!(src.contains("qprealloc $7"));
+    }
+
+    #[test]
+    fn synth_vector_is_deterministic() {
+        assert_eq!(synth_vector(16, 3), synth_vector(16, 3));
+        assert_ne!(synth_vector(16, 3), synth_vector(16, 4));
+    }
+}

@@ -1,0 +1,151 @@
+//! Synthetic request traces for the EMPA fabric coordinator (E9).
+//!
+//! A trace mixes scalar QT jobs (run a sumup program on a simulated EMPA
+//! processor) with mass operations (batched vector reductions eligible for
+//! the §3.8 accelerator link), with exponential arrivals.
+
+use super::sumup::{self, Mode};
+use crate::util::Rng;
+
+/// What a fabric request asks for.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestKind {
+    /// Simulate a sumup program in the given mode.
+    RunProgram { mode: Mode, values: Vec<i32> },
+    /// Mass operation over a vector (accelerator-eligible).
+    MassSum { values: Vec<f32> },
+    /// Mass dot product (accelerator-eligible, exercises the MXU path).
+    MassDot { a: Vec<f32>, b: Vec<f32> },
+}
+
+/// One request with its arrival offset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time offset from trace start, microseconds.
+    pub arrival_us: u64,
+    pub kind: RequestKind,
+}
+
+/// Trace generator parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub seed: u64,
+    pub num_requests: usize,
+    /// Mean inter-arrival gap in microseconds.
+    pub mean_gap_us: u64,
+    /// Fraction of requests that are mass ops (0..=1).
+    pub mass_fraction: f64,
+    /// Vector length range for mass ops.
+    pub mass_len: (usize, usize),
+    /// Vector length range for program runs.
+    pub program_len: (usize, usize),
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            seed: 42,
+            num_requests: 256,
+            mean_gap_us: 200,
+            mass_fraction: 0.6,
+            mass_len: (64, 1024),
+            program_len: (1, 32),
+        }
+    }
+}
+
+/// Deterministic trace generator.
+pub struct TraceGen {
+    rng: Rng,
+    cfg: TraceConfig,
+}
+
+impl TraceGen {
+    pub fn new(cfg: TraceConfig) -> Self {
+        TraceGen { rng: Rng::seed_from_u64(cfg.seed), cfg }
+    }
+
+    /// Generate the full trace, sorted by arrival.
+    pub fn generate(&mut self) -> Vec<Request> {
+        let mut t = 0u64;
+        let mut out = Vec::with_capacity(self.cfg.num_requests);
+        for id in 0..self.cfg.num_requests as u64 {
+            t += self.rng.exp(self.cfg.mean_gap_us as f64) as u64;
+            let kind = if self.rng.bool(self.cfg.mass_fraction) {
+                let len = self.rng.range_usize(self.cfg.mass_len.0, self.cfg.mass_len.1);
+                if self.rng.bool(0.5) {
+                    RequestKind::MassSum { values: (0..len).map(|_| self.rng.range_f32(-1.0, 1.0)).collect() }
+                } else {
+                    RequestKind::MassDot {
+                        a: (0..len).map(|_| self.rng.range_f32(-1.0, 1.0)).collect(),
+                        b: (0..len).map(|_| self.rng.range_f32(-1.0, 1.0)).collect(),
+                    }
+                }
+            } else {
+                let len = self.rng.range_usize(self.cfg.program_len.0, self.cfg.program_len.1);
+                let mode = match self.rng.below(3) {
+                    0 => Mode::No,
+                    1 => Mode::For,
+                    _ => Mode::Sumup,
+                };
+                RequestKind::RunProgram { mode, values: sumup::synth_vector(len, self.cfg.seed ^ id) }
+            };
+            out.push(Request { id, arrival_us: t, kind });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_and_sorted() {
+        let cfg = TraceConfig::default();
+        let a = TraceGen::new(cfg.clone()).generate();
+        let b = TraceGen::new(cfg).generate();
+        assert_eq!(a.len(), 256);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+    }
+
+    #[test]
+    fn mass_fraction_respected_roughly() {
+        let cfg = TraceConfig { num_requests: 1000, mass_fraction: 0.8, ..Default::default() };
+        let t = TraceGen::new(cfg).generate();
+        let mass = t
+            .iter()
+            .filter(|r| matches!(r.kind, RequestKind::MassSum { .. } | RequestKind::MassDot { .. }))
+            .count();
+        assert!((700..900).contains(&mass), "mass count {mass}");
+    }
+
+    #[test]
+    fn mass_lengths_within_bounds() {
+        let cfg = TraceConfig { num_requests: 200, mass_len: (16, 32), ..Default::default() };
+        for r in TraceGen::new(cfg).generate() {
+            if let RequestKind::MassSum { values } = &r.kind {
+                assert!((16..=32).contains(&values.len()));
+            }
+        }
+    }
+
+    #[test]
+    fn program_requests_use_all_modes() {
+        let cfg = TraceConfig { num_requests: 600, mass_fraction: 0.0, ..Default::default() };
+        let t = TraceGen::new(cfg).generate();
+        let mut seen = [false; 3];
+        for r in &t {
+            if let RequestKind::RunProgram { mode, .. } = &r.kind {
+                seen[match mode {
+                    Mode::No => 0,
+                    Mode::For => 1,
+                    Mode::Sumup => 2,
+                }] = true;
+            }
+        }
+        assert_eq!(seen, [true; 3]);
+    }
+}

@@ -1,0 +1,187 @@
+//! Fabric coordinator integration: routing, batching, ordering,
+//! backpressure and failure behaviour with the native accelerator (the
+//! XLA path is covered in `runtime_accel.rs`).
+
+use empa::accel::{Accelerator, BatcherConfig, MassRequest, MassResult, NativeAccel};
+use empa::coordinator::{Fabric, FabricConfig, Response};
+use empa::util::Rng;
+use empa::workload::sumup::Mode;
+use empa::workload::{RequestKind, TraceConfig, TraceGen};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn native_factory() -> empa::accel::AccelFactory {
+    Box::new(|| Ok(Box::new(NativeAccel) as Box<dyn Accelerator>))
+}
+
+fn fabric(cfg: FabricConfig) -> Arc<Fabric> {
+    Fabric::start(cfg, native_factory())
+}
+
+#[test]
+fn trace_results_match_direct_computation() {
+    let f = fabric(FabricConfig::default());
+    let trace = TraceGen::new(TraceConfig { num_requests: 128, seed: 9, ..Default::default() }).generate();
+    let expected: Vec<Option<f32>> = trace
+        .iter()
+        .map(|r| match &r.kind {
+            RequestKind::MassSum { values } => Some(values.iter().sum()),
+            RequestKind::MassDot { a, b } => Some(a.iter().zip(b).map(|(x, y)| x * y).sum()),
+            RequestKind::RunProgram { .. } => None,
+        })
+        .collect();
+    let results = f.run_trace(trace);
+    for ((_, resp, _), want) in results.iter().zip(expected) {
+        match (resp, want) {
+            (Response::Scalars(got), Some(w)) => {
+                assert!((got[0] - w).abs() < 1e-2 * (1.0 + w.abs()), "{got:?} vs {w}")
+            }
+            (Response::Program { .. }, None) => {}
+            other => panic!("unexpected pairing: {other:?}"),
+        }
+    }
+    f.shutdown();
+}
+
+#[test]
+fn program_responses_carry_table1_numbers() {
+    let f = fabric(FabricConfig::default());
+    let cases = [(Mode::No, 142u64, 1usize), (Mode::For, 64, 2), (Mode::Sumup, 36, 5)];
+    for (mode, clocks, cores) in cases {
+        let h = f
+            .submit(RequestKind::RunProgram { mode, values: vec![0xd, 0xc0, 0xb00, 0xa000] })
+            .unwrap();
+        let (resp, _) = h.wait();
+        assert_eq!(resp, Response::Program { eax: 0xd + 0xc0 + 0xb00 + 0xa000, clocks, cores });
+    }
+    f.shutdown();
+}
+
+#[test]
+fn batching_aggregates_under_load() {
+    let cfg = FabricConfig {
+        batcher: BatcherConfig { max_rows: 8, max_wait: Duration::from_millis(5) },
+        ..Default::default()
+    };
+    let f = fabric(cfg);
+    let handles: Vec<_> = (0..64)
+        .map(|i| f.submit(RequestKind::MassSum { values: vec![1.0; 100 + i] }).unwrap())
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let (resp, _) = h.wait();
+        assert_eq!(resp, Response::Scalars(vec![(100 + i) as f32]));
+    }
+    let batches = f.metrics.accel_batches.load(Ordering::Relaxed);
+    assert!(batches >= 8, "64 rows / max 8 per batch: {batches}");
+    assert!(f.metrics.mean_batch_rows() > 1.0, "batching actually aggregates");
+    f.shutdown();
+}
+
+#[test]
+fn responses_route_back_to_the_right_requester() {
+    // Interleave many concurrent clients, each verifying its own answer.
+    let f = fabric(FabricConfig::default());
+    let errors = Arc::new(AtomicU64::new(0));
+    std::thread::scope(|s| {
+        for t in 0..8 {
+            let f = Arc::clone(&f);
+            let errors = Arc::clone(&errors);
+            s.spawn(move || {
+                let mut rng = Rng::seed_from_u64(t);
+                for _ in 0..50 {
+                    let len = rng.range_usize(64, 512);
+                    let vals: Vec<f32> = (0..len).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                    let want: f32 = vals.iter().sum();
+                    let h = f.submit(RequestKind::MassSum { values: vals }).unwrap();
+                    let (resp, _) = h.wait();
+                    match resp {
+                        Response::Scalars(got) if (got[0] - want).abs() < 1e-3 * (1.0 + want.abs()) => {}
+                        _ => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(errors.load(Ordering::Relaxed), 0);
+    f.shutdown();
+}
+
+#[test]
+fn accelerator_failure_reports_errors_not_hangs() {
+    struct Broken;
+    impl Accelerator for Broken {
+        fn name(&self) -> &str {
+            "broken"
+        }
+        fn execute(&self, _req: &MassRequest) -> anyhow::Result<MassResult> {
+            anyhow::bail!("simulated accelerator failure")
+        }
+    }
+    let f = Fabric::start(
+        FabricConfig::default(),
+        Box::new(|| Ok(Box::new(Broken) as Box<dyn Accelerator>)),
+    );
+    let h = f.submit(RequestKind::MassSum { values: vec![1.0; 512] }).unwrap();
+    let (resp, _) = h.wait();
+    assert!(matches!(resp, Response::Error(e) if e.contains("simulated")));
+    assert_eq!(f.metrics.errors.load(Ordering::Relaxed), 1);
+    // subsequent small (inline) requests still work
+    let h = f.submit(RequestKind::MassSum { values: vec![2.0, 3.0] }).unwrap();
+    assert_eq!(h.wait().0, Response::Scalars(vec![5.0]));
+    f.shutdown();
+}
+
+#[test]
+fn accelerator_init_failure_degrades_gracefully() {
+    let f = Fabric::start(FabricConfig::default(), Box::new(|| anyhow::bail!("no device")));
+    let h = f.submit(RequestKind::MassSum { values: vec![1.0; 512] }).unwrap();
+    let (resp, _) = h.wait();
+    assert!(matches!(resp, Response::Error(e) if e.contains("accelerator init")));
+    f.shutdown();
+}
+
+#[test]
+fn shutdown_completes_inflight_work() {
+    let cfg = FabricConfig {
+        batcher: BatcherConfig { max_rows: 1000, max_wait: Duration::from_secs(10) },
+        ..Default::default()
+    };
+    let f = fabric(cfg);
+    // These can only flush via the shutdown drain path.
+    let hs: Vec<_> = (0..5)
+        .map(|_| f.submit(RequestKind::MassSum { values: vec![1.0; 256] }).unwrap())
+        .collect();
+    std::thread::sleep(Duration::from_millis(20));
+    f.shutdown();
+    for h in hs {
+        let (resp, _) = h.wait();
+        assert_eq!(resp, Response::Scalars(vec![256.0]));
+    }
+}
+
+#[test]
+fn throughput_scales_with_sim_workers() {
+    // Not a benchmark — a sanity check that the pool actually runs jobs
+    // in parallel (4 workers must not be slower than 1).
+    let run = |workers: usize| {
+        let f = fabric(FabricConfig { sim_workers: workers, ..Default::default() });
+        let trace: Vec<RequestKind> = (0..64)
+            .map(|_| RequestKind::RunProgram { mode: Mode::No, values: (0..400).collect() })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let hs: Vec<_> = trace.into_iter().map(|k| f.submit(k).unwrap()).collect();
+        for h in hs {
+            let (resp, _) = h.wait();
+            assert!(matches!(resp, Response::Program { .. }));
+        }
+        let dt = t0.elapsed();
+        f.shutdown();
+        dt
+    };
+    let t1 = run(1);
+    let t4 = run(4);
+    assert!(t4 < t1 * 2, "4 workers ({t4:?}) should not be much slower than 1 ({t1:?})");
+}

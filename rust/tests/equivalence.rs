@@ -1,0 +1,149 @@
+//! Equivalence of the two execution substrates: a program without
+//! metainstructions must behave *identically* (state and clock count) on
+//! the conventional CPU ([`empa::emu::Cpu`]) and on an EMPA processor
+//! (§4.1.1: "For the outside world, the processor is nearly unchanged").
+//!
+//! Randomised straight-line programs stand in for proptest (offline
+//! image): generate, run on both, compare final register file, flags,
+//! memory effects, status and clocks.
+
+use empa::emu::Cpu;
+use empa::empa::{EmpaConfig, EmpaProcessor};
+use empa::isa::{assemble, Status};
+use empa::util::Rng;
+use std::fmt::Write;
+
+/// Generate a random straight-line program (no control flow, so it always
+/// terminates) over registers %eax..%edi and a 64-byte scratch buffer.
+fn random_program(rng: &mut Rng, len: usize) -> String {
+    const REGS: [&str; 6] = ["%eax", "%ecx", "%edx", "%ebx", "%esi", "%edi"];
+    let mut s = String::new();
+    // scratch pointer in %ebp, stack in %esp
+    s.push_str("    irmovl buf, %ebp\n    irmovl $0x4000, %esp\n");
+    for _ in 0..len {
+        let r1 = REGS[rng.range_usize(0, REGS.len() - 1)];
+        let r2 = REGS[rng.range_usize(0, REGS.len() - 1)];
+        let imm = rng.i32() % 1000;
+        let disp = 4 * rng.range_usize(0, 15);
+        match rng.below(8) {
+            0 => { let _ = writeln!(s, "    irmovl ${imm}, {r1}"); }
+            1 => { let _ = writeln!(s, "    addl {r1}, {r2}"); }
+            2 => { let _ = writeln!(s, "    subl {r1}, {r2}"); }
+            3 => { let _ = writeln!(s, "    andl {r1}, {r2}"); }
+            4 => { let _ = writeln!(s, "    xorl {r1}, {r2}"); }
+            5 => { let _ = writeln!(s, "    rmmovl {r1}, {disp}(%ebp)"); }
+            6 => { let _ = writeln!(s, "    mrmovl {disp}(%ebp), {r1}"); }
+            _ => { let _ = writeln!(s, "    rrmovl {r1}, {r2}"); }
+        }
+    }
+    s.push_str("    halt\n    .pos 0x200\nbuf:\n");
+    for _ in 0..16 {
+        let _ = writeln!(s, "    .long {}", rng.i32() % 100000);
+    }
+    s
+}
+
+#[test]
+fn random_straightline_programs_agree_on_both_substrates() {
+    let mut rng = Rng::seed_from_u64(0xE117A);
+    for case in 0..200 {
+        let src = random_program(&mut rng, 30);
+        let prog = assemble(&src).expect("assembles");
+
+        let mut cpu = Cpu::with_image(&prog.image);
+        cpu.run(1_000_000);
+
+        let report = EmpaProcessor::new(&prog.image, &EmpaConfig::default()).run();
+
+        assert_eq!(cpu.status, Status::Hlt, "case {case}: cpu status");
+        assert_eq!(report.status, Status::Hlt, "case {case}: empa status");
+        assert_eq!(cpu.regs.file, report.regs.file, "case {case}: registers\n{src}");
+        assert_eq!(cpu.regs.cc, report.regs.cc, "case {case}: flags");
+        assert_eq!(cpu.clock, report.clocks, "case {case}: clock count");
+        assert_eq!(report.max_occupied, 1, "case {case}: no extra cores");
+    }
+}
+
+#[test]
+fn random_programs_with_branches_agree() {
+    // Branchy but guaranteed-terminating: a countdown loop around a random
+    // straight-line body.
+    let mut rng = Rng::seed_from_u64(0xB0DE);
+    for case in 0..100 {
+        // body over registers that exclude the %edi loop counter and the
+        // %ebx decrement scratch
+        const BODY_REGS: [&str; 4] = ["%eax", "%ecx", "%edx", "%esi"];
+        let mut body_insns = String::from("    irmovl buf, %ebp\n");
+        for _ in 0..10 {
+            let r1 = BODY_REGS[rng.range_usize(0, BODY_REGS.len() - 1)];
+            let r2 = BODY_REGS[rng.range_usize(0, BODY_REGS.len() - 1)];
+            let imm = rng.i32() % 1000;
+            let disp = 4 * rng.range_usize(0, 15);
+            match rng.below(7) {
+                0 => { let _ = writeln!(body_insns, "    irmovl ${imm}, {r1}"); }
+                1 => { let _ = writeln!(body_insns, "    addl {r1}, {r2}"); }
+                2 => { let _ = writeln!(body_insns, "    subl {r1}, {r2}"); }
+                3 => { let _ = writeln!(body_insns, "    xorl {r1}, {r2}"); }
+                4 => { let _ = writeln!(body_insns, "    rmmovl {r1}, {disp}(%ebp)"); }
+                5 => { let _ = writeln!(body_insns, "    mrmovl {disp}(%ebp), {r1}"); }
+                _ => { let _ = writeln!(body_insns, "    rrmovl {r1}, {r2}"); }
+            }
+        }
+        let iters = rng.range_u64(1, 5);
+        let src = format!(
+            "    irmovl ${iters}, %edi\nLoop:\n{body_insns}\n    irmovl $-1, %ebx\n    addl %ebx, %edi\n    jne Loop\n    halt\n    .pos 0x200\nbuf:\n    .long 1\n    .long 2\n    .long 3\n    .long 4\n    .long 5\n    .long 6\n    .long 7\n    .long 8\n    .long 9\n    .long 10\n    .long 11\n    .long 12\n    .long 13\n    .long 14\n    .long 15\n    .long 16\n"
+        );
+        let prog = assemble(&src).expect("assembles");
+        let mut cpu = Cpu::with_image(&prog.image);
+        cpu.run(1_000_000);
+        let report = EmpaProcessor::new(&prog.image, &EmpaConfig::default()).run();
+        assert_eq!(cpu.status, Status::Hlt, "case {case}");
+        assert_eq!(cpu.regs.file, report.regs.file, "case {case}:\n{src}");
+        assert_eq!(cpu.clock, report.clocks, "case {case}: clocks");
+    }
+}
+
+#[test]
+fn empa_modes_agree_with_cpu_on_random_vectors() {
+    // The cross-substrate version of Table 1's correctness premise: for
+    // random vectors and lengths, FOR and SUMUP compute exactly the
+    // conventional CPU's sum.
+    let mut rng = Rng::seed_from_u64(7);
+    for _ in 0..60 {
+        let n = rng.range_usize(0, 80);
+        let values: Vec<i32> = (0..n).map(|_| rng.i32() % 1_000_000).collect();
+        let (no_src, expected) = empa::workload::sumup::no_mode_program(&values);
+        let mut cpu = Cpu::with_image(&assemble(&no_src).unwrap().image);
+        cpu.run(1_000_000);
+        assert_eq!(cpu.regs.file[0], expected);
+        for mode in [empa::workload::sumup::Mode::For, empa::workload::sumup::Mode::Sumup] {
+            let (src, _) = empa::workload::sumup::program(mode, &values);
+            let r = EmpaProcessor::new(&assemble(&src).unwrap().image, &EmpaConfig::default()).run();
+            assert_eq!(r.fault, None, "{mode:?} N={n}");
+            assert_eq!(r.eax(), expected, "{mode:?} N={n}");
+        }
+    }
+}
+
+#[test]
+fn timing_sweep_preserves_equivalence() {
+    // Equivalence is architectural, not a timing accident: double every
+    // instruction cost and both substrates still agree clock-for-clock.
+    use empa::empa::TimingConfig;
+    let mut t = TimingConfig::paper();
+    t.irmov *= 2;
+    t.alu *= 2;
+    t.mrmov += 5;
+    t.jump = 1;
+    let mut rng = Rng::seed_from_u64(99);
+    for _ in 0..40 {
+        let src = random_program(&mut rng, 20);
+        let prog = assemble(&src).unwrap();
+        let mut cpu = Cpu::new(&prog.image, t.clone(), &empa::mem::MemConfig::ideal());
+        cpu.run(1_000_000);
+        let cfg = EmpaConfig { timing: t.clone(), ..Default::default() };
+        let r = EmpaProcessor::new(&prog.image, &cfg).run();
+        assert_eq!(cpu.regs.file, r.regs.file);
+        assert_eq!(cpu.clock, r.clocks);
+    }
+}

@@ -1,0 +1,158 @@
+//! Robustness fuzzing (proptest-style, in-crate PRNG): the decoder,
+//! assembler and simulator must never panic on hostile input, and the
+//! architectural results must be invariant under timing perturbations.
+
+use empa::empa::{EmpaConfig, EmpaProcessor, TimingConfig};
+use empa::isa::{assemble, disassemble, Insn};
+use empa::util::Rng;
+use empa::workload::sumup::{self, Mode};
+
+#[test]
+fn decoder_never_panics_on_random_bytes() {
+    let mut rng = Rng::seed_from_u64(0xF022);
+    for _ in 0..20_000 {
+        let len = rng.range_usize(0, 8);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        if let Some((insn, n)) = Insn::decode(&bytes) {
+            assert!(n >= 1 && n <= 6 && n <= bytes.len());
+            // decoded instructions re-encode to the same prefix
+            let mut buf = Vec::new();
+            insn.encode(&mut buf);
+            assert_eq!(&bytes[..n], &buf[..], "{insn:?}");
+        }
+    }
+}
+
+#[test]
+fn decode_encode_roundtrip_for_every_two_byte_prefix() {
+    // Exhaustive over the first two bytes (covers every icode:ifun and
+    // register-pair combination), with a fixed constant tail.
+    for b0 in 0..=255u8 {
+        for b1 in 0..=255u8 {
+            let bytes = [b0, b1, 0x44, 0x33, 0x22, 0x11];
+            if let Some((insn, n)) = Insn::decode(&bytes) {
+                let mut buf = Vec::new();
+                insn.encode(&mut buf);
+                assert_eq!(&bytes[..n], &buf[..], "{b0:02x}{b1:02x}");
+            }
+        }
+    }
+}
+
+#[test]
+fn assembler_never_panics_on_random_text() {
+    let mut rng = Rng::seed_from_u64(0xA53);
+    let fragments = [
+        "irmovl", "$4", "%eax", ",", "(", ")", ":", "Loop", ".pos", ".long", "0x", "-", "qmassfor",
+        "qterm", "halt", "#", "mrmovl", "8(%ecx)", "%pp", ".align", "999999999999",
+    ];
+    for _ in 0..3_000 {
+        let mut src = String::new();
+        for _ in 0..rng.range_usize(1, 30) {
+            src.push_str(fragments[rng.range_usize(0, fragments.len() - 1)]);
+            src.push(if rng.bool(0.3) { '\n' } else { ' ' });
+        }
+        let _ = assemble(&src); // must return Ok or Err, never panic
+    }
+}
+
+#[test]
+fn disassembler_never_panics_on_random_images() {
+    let mut rng = Rng::seed_from_u64(0xD15);
+    for _ in 0..2_000 {
+        let len = rng.range_usize(0, 64);
+        let image: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let listing = disassemble(&image, 0);
+        // listing lengths are consistent
+        let mut pc = 0u32;
+        for (addr, n, _) in listing {
+            assert_eq!(addr, pc);
+            pc += n as u32;
+        }
+    }
+}
+
+#[test]
+fn simulator_never_panics_on_random_images() {
+    // Random bytes as a program: the machine must stop with a fault or
+    // halt within the guard, never panic.
+    let mut rng = Rng::seed_from_u64(0x51A1);
+    for _ in 0..300 {
+        let len = rng.range_usize(1, 128);
+        let image: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let cfg = EmpaConfig { max_clocks: 20_000, ..Default::default() };
+        let _ = EmpaProcessor::new(&image, &cfg).run();
+    }
+}
+
+/// Random (sane) timing configurations: the *results* of all three modes
+/// must not depend on the cost model, only the clock counts may.
+#[test]
+fn results_invariant_under_timing_sweeps() {
+    let mut rng = Rng::seed_from_u64(0x71E5);
+    for case in 0..40 {
+        let mut t = TimingConfig::paper();
+        t.irmov = rng.range_u64(1, 12);
+        t.alu = rng.range_u64(1, 12);
+        t.mrmov = rng.range_u64(1, 16);
+        t.jump = rng.range_u64(1, 10);
+        t.halt = rng.range_u64(1, 6);
+        t.sv_create = rng.range_u64(1, 8);
+        t.sv_stagger = rng.range_u64(1, 4);
+        t.sumup_rent_overhead = rng.range_u64(0, 40);
+        let cfg = EmpaConfig { timing: t, ..Default::default() };
+        let n = rng.range_usize(1, 40);
+        let values = sumup::synth_vector(n, case);
+        let expect: i32 = values.iter().fold(0i32, |a, &b| a.wrapping_add(b));
+        for mode in [Mode::No, Mode::For, Mode::Sumup] {
+            let (src, _) = sumup::program(mode, &values);
+            let prog = assemble(&src).unwrap();
+            let r = EmpaProcessor::new(&prog.image, &cfg).run();
+            assert_eq!(r.fault, None, "case {case} {mode:?} N={n}");
+            assert_eq!(r.eax(), expect, "case {case} {mode:?} N={n}");
+        }
+    }
+}
+
+/// SUMUP's 1-clock-per-extra-element law holds for any stagger=1 timing:
+/// the adder consumption rate is the stagger, not the child body length.
+#[test]
+fn sumup_marginal_cost_equals_stagger() {
+    let mut rng = Rng::seed_from_u64(0x57A6);
+    for _ in 0..15 {
+        let mut t = TimingConfig::paper();
+        t.mrmov = rng.range_u64(2, 20);
+        t.alu = rng.range_u64(1, 10);
+        let stagger = rng.range_u64(1, 3);
+        t.sv_stagger = stagger;
+        let cfg = EmpaConfig { timing: t, ..Default::default() };
+        let clocks = |n: usize| {
+            let (src, _) = sumup::sumup_mode_program(&sumup::synth_vector(n, 9));
+            let prog = assemble(&src).unwrap();
+            EmpaProcessor::new(&prog.image, &cfg).run().clocks
+        };
+        // marginal cost beyond the pipeline-fill region
+        let a = clocks(12);
+        let b = clocks(18);
+        assert_eq!(b - a, 6 * stagger, "stagger {stagger}");
+    }
+}
+
+/// The FOR-mode marginal cost is the child body length, for any timing.
+#[test]
+fn for_marginal_cost_equals_child_body() {
+    let mut rng = Rng::seed_from_u64(0xF0A);
+    for _ in 0..15 {
+        let mut t = TimingConfig::paper();
+        t.mrmov = rng.range_u64(2, 20);
+        t.alu = rng.range_u64(1, 10);
+        let body = t.mrmov + t.alu;
+        let cfg = EmpaConfig { timing: t, ..Default::default() };
+        let clocks = |n: usize| {
+            let (src, _) = sumup::for_mode_program(&sumup::synth_vector(n, 4));
+            let prog = assemble(&src).unwrap();
+            EmpaProcessor::new(&prog.image, &cfg).run().clocks
+        };
+        assert_eq!(clocks(9) - clocks(5), 4 * body);
+    }
+}

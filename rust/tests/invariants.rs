@@ -1,0 +1,206 @@
+//! Supervisor-state invariants over randomised QT-graph programs — the
+//! proptest-style suite for the coordinator's bookkeeping (bitmasks, pool,
+//! latches). After *every* run (and for SUMUP, at every clock via the
+//! trace) the supervisor's view of the machine must be consistent.
+
+use empa::empa::{AllocState, EmpaConfig, EmpaProcessor, Event, RunState};
+use empa::isa::assemble;
+use empa::util::Rng;
+use empa::workload::sumup;
+use std::fmt::Write;
+
+/// Build a random nested QT-graph program: a tree of qcall QTs of random
+/// arity/depth, every leaf doing arithmetic on the inherited %eax and
+/// cloning it back; parents qwait and add the children's results.
+///
+/// Returns (source, expected %eax) — expected computed by mirroring the
+/// tree walk.
+fn random_qt_tree(rng: &mut Rng, max_depth: usize) -> (String, i32) {
+    let mut src = String::new();
+    let mut bodies = String::new();
+    let mut label = 0usize;
+
+    // The value function: each node adds `imm` to the inherited value and
+    // returns inherited + imm + sum(children deltas). We build nodes
+    // recursively and compute expected deltas alongside.
+    fn gen_node(
+        rng: &mut Rng,
+        depth: usize,
+        max_depth: usize,
+        label: &mut usize,
+        bodies: &mut String,
+    ) -> (String, i32) {
+        let my = *label;
+        *label += 1;
+        let imm = rng.i32() % 100;
+        let n_children = if depth >= max_depth { 0 } else { rng.range_usize(0, 2) };
+        let mut child_labels = Vec::new();
+        let mut delta = imm;
+        for _ in 0..n_children {
+            let (cl, cd) = gen_node(rng, depth + 1, max_depth, label, bodies);
+            delta += cd;
+            child_labels.push(cl);
+        }
+        let name = format!("QT{my}");
+        let mut b = String::new();
+        let _ = writeln!(b, "{name}:");
+        let _ = writeln!(b, "    irmovl ${imm}, %ebx");
+        let _ = writeln!(b, "    addl %ebx, %eax");
+        for cl in &child_labels {
+            let _ = writeln!(b, "    qcall {cl}");
+            let _ = writeln!(b, "    qwait %eax");
+        }
+        let _ = writeln!(b, "    qterm %eax");
+        bodies.push_str(&b);
+        (name, delta)
+    }
+
+    let start = rng.i32() % 1000;
+    let (root_label, delta) = gen_node(rng, 0, max_depth, &mut label, &mut bodies);
+    let _ = writeln!(src, "    irmovl ${start}, %eax");
+    let _ = writeln!(src, "    qcall {root_label}");
+    let _ = writeln!(src, "    qwait %eax");
+    let _ = writeln!(src, "    halt");
+    src.push_str(&bodies);
+    (src, start.wrapping_add(delta))
+}
+
+#[test]
+fn random_qt_trees_compute_correctly_with_plenty_of_cores() {
+    let mut rng = Rng::seed_from_u64(0x71EE);
+    for case in 0..120 {
+        let (src, expected) = random_qt_tree(&mut rng, 3);
+        let prog = assemble(&src).unwrap_or_else(|e| panic!("case {case}: {e}\n{src}"));
+        let r = EmpaProcessor::new(&prog.image, &EmpaConfig::default()).run();
+        assert_eq!(r.fault, None, "case {case}:\n{src}");
+        assert_eq!(r.eax(), expected, "case {case}:\n{src}");
+    }
+}
+
+#[test]
+fn qt_trees_survive_core_starvation_via_borrowing() {
+    // With very few cores the emergency mechanism (§3.3) must keep the
+    // computation correct (children executed inline on the parent).
+    let mut rng = Rng::seed_from_u64(0x5AAD);
+    for cores in [1usize, 2, 3] {
+        for case in 0..40 {
+            let (src, expected) = random_qt_tree(&mut rng, 3);
+            let prog = assemble(&src).unwrap();
+            let cfg = EmpaConfig { num_cores: cores, ..Default::default() };
+            let r = EmpaProcessor::new(&prog.image, &cfg).run();
+            assert_eq!(r.fault, None, "cores={cores} case {case}:\n{src}");
+            assert_eq!(r.eax(), expected, "cores={cores} case {case}:\n{src}");
+            assert!(r.max_occupied <= cores, "cores={cores}: occupied {}", r.max_occupied);
+        }
+    }
+}
+
+/// Replay a trace and check supervisor bookkeeping invariants hold at
+/// every event: a core is never double-rented, every launch has a parent
+/// that is rented, every termination matches a prior launch.
+#[test]
+fn trace_level_pool_invariants_for_sumup() {
+    for n in [1usize, 4, 17, 30, 31, 64, 200] {
+        let values: Vec<i32> = (0..n as i32).collect();
+        let (src, _) = sumup::sumup_mode_program(&values);
+        let prog = assemble(&src).unwrap();
+        let cfg = EmpaConfig { trace: true, ..Default::default() };
+        let r = EmpaProcessor::new(&prog.image, &cfg).run();
+        assert_eq!(r.fault, None);
+
+        let mut live: std::collections::HashSet<usize> = std::collections::HashSet::new();
+        let mut launches = 0u32;
+        let mut terms = 0u32;
+        for e in &r.trace.entries {
+            match e.event {
+                Event::Launch { parent, .. } => {
+                    assert!(!live.contains(&e.core), "N={n}: core {} double-launched", e.core);
+                    assert_ne!(parent, e.core, "N={n}: self-parenting");
+                    live.insert(e.core);
+                    launches += 1;
+                }
+                Event::Term { .. } => {
+                    assert!(live.remove(&e.core), "N={n}: core {} terminated but not live", e.core);
+                    terms += 1;
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(launches, n as u32, "N={n}: one launch per element");
+        assert_eq!(terms, n as u32, "N={n}: one termination per element");
+        assert!(live.is_empty(), "N={n}: cores leaked: {live:?}");
+    }
+}
+
+#[test]
+fn final_state_pool_is_clean_after_every_mode() {
+    // After a run every non-root core must be back in the pool with no
+    // parent/children bits set (checked through the processor's public
+    // state by re-running step-by-step to completion).
+    for mode in [sumup::Mode::No, sumup::Mode::For, sumup::Mode::Sumup] {
+        let (src, _) = sumup::program(mode, &[5, 6, 7, 8, 9]);
+        let prog = assemble(&src).unwrap();
+        let mut p = EmpaProcessor::new(&prog.image, &EmpaConfig::default());
+        for _ in 0..100_000 {
+            p.tick();
+            if matches!(p.cores[0].run, RunState::Halted) {
+                break;
+            }
+        }
+        assert!(matches!(p.cores[0].run, RunState::Halted), "{mode:?} halted");
+        assert_eq!(p.cores[0].children, 0, "{mode:?}: root children mask clear");
+        for c in &p.cores[1..] {
+            assert_ne!(c.alloc, AllocState::Rented, "{mode:?}: core {} still rented", c.id);
+            assert_eq!(c.children, 0, "{mode:?}: core {} children", c.id);
+            assert!(c.parent.is_none(), "{mode:?}: core {} parent", c.id);
+        }
+        // Preallocated cores may remain reserved to the root (FOR/SUMUP
+        // prealloc survives the program; the OS would reclaim on exit) —
+        // but each reservation must be mirrored in the root's mask.
+        for c in &p.cores[1..] {
+            if let AllocState::PreAllocatedBy { parent } = c.alloc {
+                assert_eq!(parent, 0);
+                assert_ne!(p.cores[0].prealloc & c.mask(), 0, "prealloc mask mirrors");
+            }
+        }
+    }
+}
+
+#[test]
+fn occupancy_never_exceeds_prealloc_plus_parent_in_sumup() {
+    for n in [4usize, 30, 64, 500] {
+        let values: Vec<i32> = (0..n as i32).collect();
+        let (src, _) = sumup::sumup_mode_program(&values);
+        let prog = assemble(&src).unwrap();
+        let r = EmpaProcessor::new(&prog.image, &EmpaConfig::default()).run();
+        assert_eq!(r.fault, None);
+        assert!(r.max_occupied <= n.min(30) + 1, "N={n}: {}", r.max_occupied);
+        assert_eq!(r.distinct_cores, n.min(30) + 1, "N={n}");
+    }
+}
+
+#[test]
+fn deep_nesting_exhausts_gracefully() {
+    // A pathological 40-deep chain of QTs on a 32-core processor must
+    // finish via borrowing, not deadlock or fault.
+    let mut src = String::new();
+    let _ = writeln!(src, "    irmovl $0, %eax");
+    let _ = writeln!(src, "    qcall QT0");
+    let _ = writeln!(src, "    qwait %eax");
+    let _ = writeln!(src, "    halt");
+    let depth = 40;
+    for d in 0..depth {
+        let _ = writeln!(src, "QT{d}:");
+        let _ = writeln!(src, "    irmovl $1, %ebx");
+        let _ = writeln!(src, "    addl %ebx, %eax");
+        if d + 1 < depth {
+            let _ = writeln!(src, "    qcall QT{}", d + 1);
+            let _ = writeln!(src, "    qwait %eax");
+        }
+        let _ = writeln!(src, "    qterm %eax");
+    }
+    let prog = assemble(&src).unwrap();
+    let r = EmpaProcessor::new(&prog.image, &EmpaConfig::default()).run();
+    assert_eq!(r.fault, None);
+    assert_eq!(r.eax(), depth as i32);
+}

@@ -1,0 +1,171 @@
+//! E8 substrate check: the PJRT runtime loads every AOT artifact, and the
+//! XLA accelerator agrees numerically with the native oracle on every
+//! mass operation — the rust-side half of the L1-vs-ref contract.
+//!
+//! Requires `make artifacts` (skips, loudly, when artifacts are absent so
+//! `cargo test` works in a fresh checkout).
+
+use empa::accel::{Accelerator, MassOp, MassRequest, MassResult, NativeAccel, XlaAccel};
+use empa::runtime::{Runtime, Tensor};
+use empa::util::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let d = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    d.join("manifest.tsv").exists().then_some(d)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+fn rows(rng: &mut Rng, n: usize, l: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| (0..l).map(|_| rng.range_f32(-1.0, 1.0)).collect()).collect()
+}
+
+fn assert_scalars_close(a: &MassResult, b: &MassResult, tol: f32) {
+    let (MassResult::Scalars(x), MassResult::Scalars(y)) = (a, b) else {
+        panic!("expected scalars: {a:?} vs {b:?}")
+    };
+    assert_eq!(x.len(), y.len());
+    for (i, (u, v)) in x.iter().zip(y).enumerate() {
+        assert!((u - v).abs() <= tol * (1.0 + v.abs()), "row {i}: {u} vs {v}");
+    }
+}
+
+#[test]
+fn runtime_loads_all_manifest_artifacts() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load_dir(&dir).expect("load artifacts");
+    let names = rt.names();
+    assert_eq!(names.len(), 20, "5 entries x 4 buckets: {names:?}");
+    for entry in ["sumup", "mass_for", "dot", "prefix", "sumup_stats"] {
+        assert_eq!(rt.buckets(entry), vec![(8, 256), (8, 1024), (32, 256), (32, 1024)], "{entry}");
+    }
+    let meta = rt.meta("dot_b8_l256").unwrap();
+    assert_eq!((meta.arity, meta.out_arity), (2, 1));
+}
+
+#[test]
+fn runtime_executes_sumup_exactly() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load_dir(&dir).expect("load");
+    // constant rows: sums are exact in f32
+    let data: Vec<f32> = (0..8 * 256).map(|i| ((i / 256) + 1) as f32).collect();
+    let out = rt.execute("sumup_b8_l256", &[Tensor::matrix(8, 256, data)]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].dims, vec![8]);
+    let want: Vec<f32> = (1..=8).map(|r| (r * 256) as f32).collect();
+    assert_eq!(out[0].data, want);
+}
+
+#[test]
+fn runtime_rejects_wrong_arity_and_unknown_names() {
+    let dir = require_artifacts!();
+    let rt = Runtime::load_dir(&dir).expect("load");
+    assert!(rt.execute("nope", &[]).is_err());
+    assert!(rt
+        .execute("sumup_b8_l256", &[Tensor::vector(vec![0.0]), Tensor::vector(vec![0.0])])
+        .is_err());
+}
+
+#[test]
+fn xla_accel_matches_native_on_all_ops() {
+    let dir = require_artifacts!();
+    let xla = XlaAccel::new(Runtime::load_dir(&dir).expect("load"));
+    let native = NativeAccel;
+    let mut rng = Rng::seed_from_u64(42);
+
+    // Sumup / Dot across row counts and (unaligned) lengths.
+    for &(n, l) in &[(1usize, 1usize), (3, 100), (8, 256), (20, 700), (32, 1024)] {
+        let a = rows(&mut rng, n, l);
+        let b = rows(&mut rng, n, l);
+        let req = MassRequest::sumup(a.clone());
+        assert_scalars_close(&xla.execute(&req).unwrap(), &native.execute(&req).unwrap(), 1e-4);
+        let req = MassRequest::dot(a, b);
+        assert_scalars_close(&xla.execute(&req).unwrap(), &native.execute(&req).unwrap(), 1e-4);
+    }
+
+    // FOR: row results sliced back from the padded bucket.
+    let a = rows(&mut rng, 5, 130);
+    let req = MassRequest::for_op(a.clone(), 1.5, -0.25);
+    let (MassResult::Rows(x), MassResult::Rows(y)) =
+        (xla.execute(&req).unwrap(), native.execute(&req).unwrap())
+    else {
+        panic!("rows expected")
+    };
+    assert_eq!(x.len(), 5);
+    for (rx, ry) in x.iter().zip(&y) {
+        assert_eq!(rx.len(), 130);
+        for (u, v) in rx.iter().zip(ry) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    // Prefix.
+    let a = rows(&mut rng, 4, 300);
+    let req = MassRequest { op: MassOp::Prefix, rows: a, rows2: vec![], scale_bias: [0.0; 2] };
+    let (MassResult::Rows(x), MassResult::Rows(y)) =
+        (xla.execute(&req).unwrap(), native.execute(&req).unwrap())
+    else {
+        panic!("rows expected")
+    };
+    for (rx, ry) in x.iter().zip(&y) {
+        for (u, v) in rx.iter().zip(ry) {
+            assert!((u - v).abs() < 1e-3 * (1.0 + v.abs()), "{u} vs {v}");
+        }
+    }
+
+    // Fused stats.
+    let a = rows(&mut rng, 6, 200);
+    let req = MassRequest { op: MassOp::SumupStats, rows: a, rows2: vec![], scale_bias: [0.0; 2] };
+    let (MassResult::Stats { sum: s1, mean: m1, l2: l1 }, MassResult::Stats { sum: s2, mean: m2, l2: l2b }) =
+        (xla.execute(&req).unwrap(), native.execute(&req).unwrap())
+    else {
+        panic!("stats expected")
+    };
+    for i in 0..6 {
+        assert!((s1[i] - s2[i]).abs() < 1e-3);
+        assert!((m1[i] - m2[i]).abs() < 1e-5);
+        assert!((l1[i] - l2b[i]).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn oversized_requests_are_rejected_not_truncated() {
+    let dir = require_artifacts!();
+    let xla = XlaAccel::new(Runtime::load_dir(&dir).expect("load"));
+    let mut rng = Rng::seed_from_u64(1);
+    // longer than the largest bucket (L=1024)
+    let req = MassRequest::sumup(rows(&mut rng, 1, 2000));
+    assert!(xla.execute(&req).is_err());
+    // more rows than the largest bucket (B=32)
+    let req = MassRequest::sumup(rows(&mut rng, 40, 8));
+    assert!(xla.execute(&req).is_err());
+}
+
+#[test]
+fn fabric_with_xla_accelerator_end_to_end() {
+    let dir = require_artifacts!();
+    use empa::coordinator::{Fabric, FabricConfig};
+    use empa::workload::RequestKind;
+    let fabric = Fabric::start(
+        FabricConfig::default(),
+        Box::new(move || Ok(Box::new(XlaAccel::new(Runtime::load_dir(&dir)?)) as Box<dyn Accelerator>)),
+    );
+    let mut rng = Rng::seed_from_u64(3);
+    let vals: Vec<f32> = (0..512).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let want: f32 = vals.iter().sum();
+    let h = fabric.submit(RequestKind::MassSum { values: vals }).unwrap();
+    let (resp, _) = h.wait();
+    let empa::coordinator::Response::Scalars(got) = resp else { panic!("{resp:?}") };
+    assert!((got[0] - want).abs() < 1e-3);
+    fabric.shutdown();
+}

@@ -1,0 +1,145 @@
+//! E1–E4: exact reproduction of the paper's Table 1 and the asymptotic
+//! behaviour of Figs. 4–6, end-to-end through the assembler + simulator.
+
+use empa::empa::EmpaConfig;
+use empa::metrics::{fig4_series, fig5_series, fig6_series, table1};
+use empa::workload::sumup::Mode;
+
+/// Table 1 of the paper, verbatim.
+/// (N, mode, time_clocks, k, speedup, S/k, alpha_eff)
+const PAPER_TABLE1: &[(usize, Mode, u64, usize, f64, f64, f64)] = &[
+    (1, Mode::No, 52, 1, 1.0, 1.0, 1.0),
+    (1, Mode::For, 31, 2, 1.68, 0.84, 0.81),
+    (1, Mode::Sumup, 33, 2, 1.58, 0.79, 0.73),
+    (2, Mode::No, 82, 1, 1.0, 1.0, 1.0),
+    (2, Mode::For, 42, 2, 1.95, 0.98, 0.97),
+    (2, Mode::Sumup, 34, 3, 2.41, 0.80, 0.87),
+    (4, Mode::No, 142, 1, 1.0, 1.0, 1.0),
+    (4, Mode::For, 64, 2, 2.22, 1.11, 1.10),
+    (4, Mode::Sumup, 36, 5, 3.94, 0.79, 0.93),
+    (6, Mode::No, 202, 1, 1.0, 1.0, 1.0),
+    (6, Mode::For, 86, 2, 2.34, 1.17, 1.15),
+    (6, Mode::Sumup, 38, 7, 5.31, 0.76, 0.95),
+];
+
+#[test]
+fn table1_clock_counts_and_core_counts_are_exact() {
+    let rows = table1(&EmpaConfig::default());
+    assert_eq!(rows.len(), PAPER_TABLE1.len());
+    for (row, &(n, mode, t, k, _, _, _)) in rows.iter().zip(PAPER_TABLE1) {
+        assert_eq!(row.n, n);
+        assert_eq!(row.mode, mode);
+        assert_eq!(row.clocks, t, "N={n} {mode:?}: clocks");
+        assert_eq!(row.k, k, "N={n} {mode:?}: cores");
+    }
+}
+
+#[test]
+fn table1_derived_metrics_match_to_printed_precision() {
+    // The paper prints two decimals (speedup, S/k, α_eff) with truncation
+    // in places; allow one unit in the last printed digit.
+    let rows = table1(&EmpaConfig::default());
+    for (row, &(n, mode, _, _, s, sk, a)) in rows.iter().zip(PAPER_TABLE1) {
+        assert!((row.speedup - s).abs() < 0.011, "N={n} {mode:?}: S {} vs {s}", row.speedup);
+        assert!((row.s_over_k - sk).abs() < 0.011, "N={n} {mode:?}: S/k {} vs {sk}", row.s_over_k);
+        assert!((row.alpha_eff - a).abs() < 0.011, "N={n} {mode:?}: α {} vs {a}", row.alpha_eff);
+    }
+}
+
+#[test]
+fn closed_form_time_laws_hold_for_all_lengths() {
+    // §6.1: both conventional and EMPA times increase linearly; the
+    // derived laws are T_NO = 22+30N, T_FOR = 20+11N, T_SUMUP = 32+N.
+    let cfg = EmpaConfig::default();
+    for n in [1usize, 3, 5, 8, 13, 21, 30, 31, 47, 64, 100] {
+        let t0 = empa::metrics::table::run_sumup(Mode::No, n, &cfg).clocks;
+        let tf = empa::metrics::table::run_sumup(Mode::For, n, &cfg).clocks;
+        let ts = empa::metrics::table::run_sumup(Mode::Sumup, n, &cfg).clocks;
+        assert_eq!(t0, 22 + 30 * n as u64, "NO N={n}");
+        assert_eq!(tf, 20 + 11 * n as u64, "FOR N={n}");
+        assert_eq!(ts, 32 + n as u64, "SUMUP N={n}");
+    }
+}
+
+#[test]
+fn fig4_speedups_saturate_at_30_over_11_and_30() {
+    // §6.1: "The two speedup values will saturate for high vector lengths
+    // at values 30/11 and 30, respectively."
+    let cfg = EmpaConfig::default();
+    let pts = fig4_series(&[1, 2, 4, 6, 10, 30, 100, 300, 1000, 3000], &cfg);
+    let last = pts.last().unwrap();
+    assert!((last.for_value - 30.0 / 11.0).abs() < 0.01, "FOR → 30/11, got {}", last.for_value);
+    assert!((last.sumup_value - 30.0).abs() < 0.35, "SUMUP → 30, got {}", last.sumup_value);
+    // monotone increase towards the asymptote
+    assert!(pts.windows(2).all(|w| w[1].for_value >= w[0].for_value));
+    assert!(pts.windows(2).all(|w| w[1].sumup_value >= w[0].sumup_value));
+    // ... and never beyond it
+    assert!(pts.iter().all(|p| p.for_value < 30.0 / 11.0 && p.sumup_value < 30.0));
+}
+
+#[test]
+fn fig5_for_efficiency_exceeds_unity_sumup_stays_below() {
+    // §6.2: "the S/k values can even be *above* unity" for FOR (clever
+    // cycle organisation, not higher PU performance); SUMUP's helper cores
+    // are used briefly, so its S/k stays below 1 for short vectors.
+    let cfg = EmpaConfig::default();
+    let pts = fig5_series(&[1, 2, 4, 6, 10, 20], &cfg);
+    assert!(pts.iter().any(|p| p.for_value > 1.0));
+    assert!(pts.iter().take(4).all(|p| p.sumup_value < 1.0));
+}
+
+#[test]
+fn fig6_core_count_saturates_at_31_and_alpha_approaches_one() {
+    // §6.2 / Fig. 6: 1 parent + max 30 children; beyond N=30 the pool
+    // recycles cores ("when the parent needs the 31st core, the 1st core
+    // is available again"); α_eff → 1, S/k turns back and decays slowly.
+    let cfg = EmpaConfig::default();
+    let pts = fig6_series(&[1, 2, 4, 8, 16, 30, 31, 40, 64, 128, 512, 2048], &cfg);
+    for p in &pts {
+        assert_eq!(p.k, p.n.min(30) + 1, "N={}: k", p.n);
+    }
+    let last = pts.last().unwrap();
+    assert!(last.alpha_eff > 0.99, "α_eff → 1, got {}", last.alpha_eff);
+    // "S/k starts to decrease with increasing the number of the cores, and
+    // after reaching 30 cores ... the dependence turns back and saturates
+    // also at value 1, but approaches it much more slowly" (§6.2).
+    let sk: Vec<f64> = pts.iter().map(|p| p.s_over_k).collect();
+    let k31 = pts.iter().position(|p| p.k == 31).unwrap();
+    assert!(sk[1..=k31].windows(2).all(|w| w[1] <= w[0] + 1e-12), "S/k decreases up to saturation: {sk:?}");
+    assert!(sk[k31..].windows(2).all(|w| w[1] >= w[0] - 1e-12), "S/k turns back after saturation: {sk:?}");
+    assert!(last.s_over_k > 0.9 && last.s_over_k < 1.0, "S/k → ~30/31, got {}", last.s_over_k);
+    // α_eff approaches 1 much faster than S/k (Fig. 6's contrast).
+    let alphas: Vec<f64> = pts.iter().map(|p| p.alpha_eff).collect();
+    assert!(alphas.windows(2).skip(1).all(|w| w[1] >= w[0] - 1e-9));
+    let n30 = pts.iter().position(|p| p.n == 30).unwrap();
+    assert!(alphas[n30] > 0.9 && sk[n30] < 0.6, "α_eff high while S/k low at N=30");
+}
+
+#[test]
+fn distinct_cores_bounded_by_31_for_huge_vectors() {
+    // Core *reuse* (not just accounting): even a 2048-element vector only
+    // ever touches 31 distinct cores.
+    let cfg = EmpaConfig::default();
+    let r = empa::metrics::table::run_sumup(Mode::Sumup, 2048, &cfg);
+    assert_eq!(r.distinct_cores, 31);
+    assert_eq!(r.max_occupied, 31);
+}
+
+#[test]
+fn results_are_mode_independent() {
+    // All three modes compute the same architectural result (%eax, %ecx,
+    // %edx) for the same vector.
+    let cfg = EmpaConfig::default();
+    for n in [1usize, 2, 4, 6, 17, 33] {
+        let r0 = empa::metrics::table::run_sumup(Mode::No, n, &cfg);
+        let rf = empa::metrics::table::run_sumup(Mode::For, n, &cfg);
+        let rs = empa::metrics::table::run_sumup(Mode::Sumup, n, &cfg);
+        assert_eq!(r0.eax(), rf.eax(), "N={n} FOR sum");
+        assert_eq!(r0.eax(), rs.eax(), "N={n} SUMUP sum");
+        // %edx (count) ends consumed in every mode. (%ecx is program-
+        // relative: the array lives at a different address per program.)
+        assert_eq!(r0.regs.file[2], 0, "N={n} NO %edx consumed");
+        assert_eq!(rf.regs.file[2], 0, "N={n} FOR %edx consumed");
+        assert_eq!(rs.regs.file[2], 0, "N={n} SUMUP %edx consumed");
+    }
+}
