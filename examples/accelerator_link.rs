@@ -10,6 +10,7 @@
 //! ```
 
 use empa::accel::{Accelerator, MassRequest, NativeAccel, XlaAccel};
+use empa::coordinator::{AccelBackend, Backend, BackendJob, BackendReply};
 use empa::empa::{EmpaConfig, EmpaProcessor};
 use empa::isa::assemble;
 use empa::runtime::Runtime;
@@ -75,6 +76,17 @@ fn main() -> anyhow::Result<()> {
     };
     let max_err = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
     println!("\nnative vs xla max |err| over 8x256: {max_err:e}");
+
+    // The same call through the fabric's Backend trait (what the mass
+    // worker actually drives): identical numbers, typed errors.
+    let as_backend = AccelBackend::new("native", Box::new(NativeAccel));
+    let BackendReply::Mass(empa::accel::MassResult::Scalars(via_backend)) =
+        as_backend.execute(BackendJob::Mass(&req))?
+    else {
+        anyhow::bail!("unexpected backend reply kind")
+    };
+    assert_eq!(via_backend, a, "Backend adapter is a transparent wrapper");
+    println!("Backend-trait adapter (`{}`) agrees with the direct call ✓", as_backend.name());
     println!(
         "takeaway: the accelerator pays off once the batch is large enough to amortise\n\
          the link overhead — exactly the paper's §2.4 offset-time argument; with EMPA's\n\

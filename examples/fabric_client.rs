@@ -1,0 +1,104 @@
+//! E10 — the typed service API, end to end: cloneable clients,
+//! non-blocking job handles, priorities, deadlines, cancellation,
+//! admission control, and multi-backend failover — the fabric as a
+//! *service* rather than a function call.
+//!
+//! Runs entirely on the local backends (`sim` + a deliberately failing
+//! `xla` entry that degrades to `native`), so it needs no artifacts.
+//!
+//! ```sh
+//! cargo run --release --offline --example fabric_client
+//! ```
+
+use empa::accel::{Accelerator, NativeAccel};
+use empa::api::{FabricError, JobRequest, Priority, RequestKind};
+use empa::coordinator::{Backend, BackendClass, BackendRegistry, Fabric, FabricConfig, SimBackend};
+use empa::workload::sumup::Mode;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // A registry with a broken preferred accelerator: init fails over to
+    // native, visibly, while every job still completes.
+    let cfg = FabricConfig::default();
+    let empa_cfg = cfg.empa.clone();
+    let registry = BackendRegistry::new()
+        .register(
+            "sim",
+            BackendClass::Program,
+            Box::new(move || Ok(Box::new(SimBackend::new(empa_cfg.clone())) as Box<dyn Backend>)),
+        )
+        .register_accel("xla", || anyhow::bail!("PJRT runtime not vendored in this build"))
+        .register_accel("native", || Ok(Box::new(NativeAccel) as Box<dyn Accelerator>));
+    let fabric = Fabric::start(cfg, registry);
+
+    // --- 1. typed requests through a tagged, cloneable client ----------
+    let client = fabric.client().tagged("demo");
+    let job = client.submit(
+        JobRequest::new(RequestKind::RunProgram { mode: Mode::Sumup, values: vec![1, 2, 3, 4] })
+            .with_priority(Priority::High),
+    )?;
+    let c = job.wait()?;
+    println!("program job     : {:?} via `{}` ({:?})", c.output, c.backend, c.route);
+
+    // --- 2. non-blocking handles ---------------------------------------
+    let mut job = client.submit(RequestKind::MassSum { values: vec![1.0; 4096] })?;
+    let mut polls = 0u32;
+    let done = loop {
+        match job.try_wait() {
+            Some(res) => break res?,
+            None => {
+                polls += 1;
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+    };
+    println!(
+        "mass job        : sum={:?} after {polls} polls, batch of {} via `{}` (failover from xla)",
+        done.output.scalar(),
+        done.batch_rows,
+        done.backend
+    );
+
+    // --- 3. vectorized submission --------------------------------------
+    let reqs: Vec<JobRequest> = (1..=32)
+        .map(|i| JobRequest::new(RequestKind::MassSum { values: vec![1.0; 64 * i] }))
+        .collect();
+    let jobs = client.submit_batch(reqs)?;
+    let mut ok = 0;
+    for j in jobs {
+        if j.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    println!("submit_batch    : {ok}/32 completed");
+
+    // --- 4. deadlines and cancellation ---------------------------------
+    let j = client.submit(
+        JobRequest::new(RequestKind::MassSum { values: vec![1.0; 128] })
+            .with_deadline(Duration::from_nanos(1)),
+    )?;
+    println!("deadline        : {:?}", j.wait().unwrap_err());
+    assert!(matches!(
+        client
+            .submit(
+                JobRequest::new(RequestKind::MassSum { values: vec![1.0; 128] })
+                    .with_deadline(Duration::from_nanos(1))
+            )?
+            .wait(),
+        Err(FabricError::DeadlineExceeded)
+    ));
+    let j = client.submit(RequestKind::RunProgram { mode: Mode::No, values: (0..500).collect() })?;
+    j.cancel();
+    match j.wait() {
+        Err(FabricError::Cancelled) => {
+            println!("cancel          : resolved Cancelled before dispatch")
+        }
+        Ok(c) => println!("cancel          : raced dispatch, completed via `{}`", c.backend),
+        Err(e) => println!("cancel          : {e}"),
+    }
+
+    // --- 5. the service view -------------------------------------------
+    println!("\nmetrics:\n{}", fabric.metrics.render());
+    fabric.shutdown();
+    Ok(())
+}

@@ -1,35 +1,43 @@
 //! E9 — the end-to-end driver: the full three-layer system serving a
-//! real mixed workload.
+//! real mixed workload through the typed service API.
 //!
 //! Layer 3 (this binary): the EMPA fabric coordinator routes a synthetic
 //! trace of scalar-program jobs and mass operations; program jobs run on
-//! the simulated EMPA processors, large mass ops are dynamically batched
-//! into bucket tiles and executed by the Layer-2/1 JAX+Pallas graph
-//! through PJRT (`artifacts/*.hlo.txt`). Python is not running anywhere.
+//! the simulated EMPA processors (`sim` backend), large mass ops are
+//! dynamically batched into bucket tiles and executed by the mass-backend
+//! chain — `xla` (the Layer-2/1 JAX+Pallas graph through PJRT) with
+//! `native` as the registry failover. Python is not running anywhere.
 //!
 //! Reports throughput and latency percentiles, verifies every mass result
-//! against the native oracle, and prints the routing/batching metrics.
+//! against the native oracle, and prints the routing/batching/per-backend
+//! metrics.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --offline --example fabric_serve [requests]
 //! ```
 
-use empa::accel::{Accelerator, MassRequest, NativeAccel, XlaAccel};
-use empa::coordinator::{Fabric, FabricConfig, Response};
-use empa::runtime::Runtime;
+use empa::accel::{Accelerator, MassRequest, NativeAccel};
+use empa::api::{Output, RequestKind};
+use empa::coordinator::{BackendRegistry, Fabric, FabricConfig};
 use empa::util::Summary;
-use empa::workload::{RequestKind, TraceConfig, TraceGen};
+use empa::workload::{TraceConfig, TraceGen};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
 
     // Build the trace up front (deterministic).
-    let trace = TraceGen::new(TraceConfig { num_requests: n, seed: 7, ..Default::default() }).generate();
+    let trace = TraceGen::new(TraceConfig {
+        num_requests: n,
+        seed: 7,
+        client: Some("serve-example"),
+        ..Default::default()
+    })
+    .generate();
     let oracle = NativeAccel;
     let expected: Vec<Option<f32>> = trace
         .iter()
-        .map(|r| match &r.kind {
+        .map(|r| match &r.job.kind {
             RequestKind::MassSum { values } => {
                 let empa::accel::MassResult::Scalars(v) =
                     oracle.execute(&MassRequest::sumup(vec![values.clone()])).unwrap()
@@ -50,46 +58,58 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
-    let fabric = Fabric::start(
-        FabricConfig::default(),
-        Box::new(|| {
-            let rt = Runtime::load_dir("artifacts")?;
-            Ok(Box::new(XlaAccel::new(rt)) as Box<dyn Accelerator>)
-        }),
-    );
+    // Registry order is failover order: prefer xla, degrade to native.
+    let cfg = FabricConfig::default();
+    let fabric = Fabric::start(cfg.clone(), BackendRegistry::with_xla(cfg.empa, "artifacts"));
 
-    // Warm-up: let the accel worker compile the artifacts before timing.
+    // Warm-up: let the mass worker initialise its backend before timing.
     let h = fabric.submit(RequestKind::MassSum { values: vec![1.0; 512] })?;
-    let (resp, warm) = h.wait();
-    assert!(matches!(resp, Response::Scalars(_)), "warmup failed: {resp:?}");
-    println!("accelerator warm-up (artifact load + first batch): {:.0} ms", warm.as_secs_f64() * 1e3);
+    let warm = h.wait()?;
+    println!(
+        "mass backend warm-up (init + first batch): {:.0} ms via `{}`",
+        warm.latency.as_secs_f64() * 1e3,
+        warm.backend
+    );
 
     // Serve the trace.
     let t0 = Instant::now();
-    let results = fabric.run_trace(trace);
+    let results = fabric.run_trace(trace)?;
     let wall = t0.elapsed();
 
     // Verify and summarise.
     let mut errors = 0usize;
     let mut mass_lat = Vec::new();
     let mut prog_lat = Vec::new();
-    for ((_, resp, lat), want) in results.iter().zip(&expected) {
-        match (resp, want) {
-            (Response::Scalars(got), Some(w)) => {
-                if (got[0] - w).abs() > 1e-2 * (1.0 + w.abs()) {
-                    errors += 1;
+    let mut queue_lat = Vec::new();
+    for ((_, res), want) in results.iter().zip(&expected) {
+        match res {
+            Ok(c) => {
+                queue_lat.push(c.queue_latency.as_secs_f64() * 1e6);
+                match (&c.output, want) {
+                    (Output::Scalars(got), Some(w)) => {
+                        if (got[0] - w).abs() > 1e-2 * (1.0 + w.abs()) {
+                            errors += 1;
+                        }
+                        mass_lat.push(c.latency.as_secs_f64() * 1e6);
+                    }
+                    (Output::Program { .. }, None) => prog_lat.push(c.latency.as_secs_f64() * 1e6),
+                    _ => errors += 1,
                 }
-                mass_lat.push(lat.as_secs_f64() * 1e6);
             }
-            (Response::Program { .. }, None) => prog_lat.push(lat.as_secs_f64() * 1e6),
-            _ => errors += 1,
+            Err(_) => errors += 1,
         }
     }
 
     let thru = results.len() as f64 / wall.as_secs_f64();
-    println!("\nserved {} requests in {:.1} ms  →  {:.0} req/s, {errors} wrong answers", results.len(), wall.as_secs_f64() * 1e3, thru);
+    println!(
+        "\nserved {} requests in {:.1} ms  →  {:.0} req/s, {errors} wrong answers",
+        results.len(),
+        wall.as_secs_f64() * 1e3,
+        thru
+    );
     println!("mass-op latency  (us): {}", Summary::of(&mass_lat));
     println!("program latency  (us): {}", Summary::of(&prog_lat));
+    println!("queue latency    (us): {}", Summary::of(&queue_lat));
     println!("routing/batching     : {}", fabric.metrics.render());
     fabric.shutdown();
     anyhow::ensure!(errors == 0, "{errors} mismatches against the native oracle");

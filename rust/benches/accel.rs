@@ -56,4 +56,14 @@ fn main() {
     let r = bench(3, 30, || xla.execute(&tiny).unwrap());
     println!("1x1 sumup via xla: {r}");
     println!("(everything below this cost belongs inline — the router's threshold, §2.4)");
+
+    section("E8: Backend-trait dispatch overhead (fabric mass-worker path)");
+    use empa::coordinator::{AccelBackend, Backend, BackendJob};
+    let native_backend = AccelBackend::new("native", Box::new(NativeAccel));
+    let req = MassRequest::sumup(mk_rows(&mut rng, 32, 1024));
+    let rd = bench(3, 30, || native.execute(&req).unwrap());
+    let rb = bench(3, 30, || native_backend.execute(BackendJob::Mass(&req)).unwrap());
+    println!("direct Accelerator: {rd}");
+    println!("via Backend trait : {rb}");
+    println!("(the typed-API adapter must cost nothing measurable per batch)");
 }

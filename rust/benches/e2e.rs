@@ -1,40 +1,40 @@
 //! Bench E9 — end-to-end fabric throughput/latency over the mixed trace,
 //! with ablations over the design choices DESIGN.md calls out: sim-pool
-//! width, batch size, and accelerator choice (native vs XLA).
+//! width, batch size, and mass-backend choice (native vs the xla→native
+//! failover chain).
 
 #[path = "bench_util.rs"]
 mod bench_util;
 
 use bench_util::section;
-use empa::accel::{Accelerator, BatcherConfig, NativeAccel, XlaAccel};
-use empa::coordinator::{Fabric, FabricConfig, Response};
-use empa::runtime::Runtime;
+use empa::accel::BatcherConfig;
+use empa::api::RequestKind;
+use empa::coordinator::{BackendRegistry, Fabric, FabricConfig};
 use empa::util::Summary;
-use empa::workload::{RequestKind, TraceConfig, TraceGen};
+use empa::workload::{TraceConfig, TraceGen};
 use std::time::{Duration, Instant};
 
 fn run_once(cfg: FabricConfig, xla: bool, n: usize) -> (f64, Summary, u64, f64) {
-    let fabric = if xla {
-        Fabric::start(
-            cfg,
-            Box::new(|| {
-                let rt = Runtime::load_dir("artifacts")?;
-                Ok(Box::new(XlaAccel::new(rt)) as Box<dyn Accelerator>)
-            }),
-        )
+    let registry = if xla {
+        BackendRegistry::with_xla(cfg.empa.clone(), "artifacts")
     } else {
-        Fabric::start(cfg, Box::new(|| Ok(Box::new(NativeAccel) as Box<dyn Accelerator>)))
+        BackendRegistry::local(cfg.empa.clone())
     };
-    // warm-up (accelerator compile happens here, untimed)
+    let fabric = Fabric::start(cfg, registry);
+    // warm-up (backend init happens here, untimed)
     let h = fabric.submit(RequestKind::MassSum { values: vec![1.0; 512] }).unwrap();
     let _ = h.wait();
 
-    let trace = TraceGen::new(TraceConfig { num_requests: n, seed: 3, ..Default::default() }).generate();
+    let trace =
+        TraceGen::new(TraceConfig { num_requests: n, seed: 3, ..Default::default() }).generate();
     let t0 = Instant::now();
-    let results = fabric.run_trace(trace);
+    let results = fabric.run_trace(trace).expect("fabric accepts the whole trace");
     let wall = t0.elapsed();
-    assert!(results.iter().all(|(_, r, _)| !matches!(r, Response::Error(_))));
-    let lat: Vec<f64> = results.iter().map(|(_, _, l)| l.as_secs_f64() * 1e6).collect();
+    assert!(results.iter().all(|(_, r)| r.is_ok()));
+    let lat: Vec<f64> = results
+        .iter()
+        .filter_map(|(_, r)| r.as_ref().ok().map(|c| c.latency.as_secs_f64() * 1e6))
+        .collect();
     let thru = results.len() as f64 / wall.as_secs_f64();
     let batches = fabric.metrics.accel_batches.load(std::sync::atomic::Ordering::Relaxed);
     let mean_rows = fabric.metrics.mean_batch_rows();
@@ -46,29 +46,39 @@ fn main() {
     let has_artifacts = std::path::Path::new("artifacts/manifest.tsv").exists();
     let n = 384;
 
-    section("E9: fabric end-to-end (mixed trace, native accelerator)");
-    println!("{:>8} {:>10} {:>10} {:>10} {:>10}", "workers", "req/s", "p50 us", "p99 us", "rows/batch");
+    section("E9: fabric end-to-end (mixed trace, native mass backend)");
+    let hdr = ["workers", "req/s", "p50 us", "p99 us", "rows/batch"];
+    println!("{:>8} {:>10} {:>10} {:>10} {:>10}", hdr[0], hdr[1], hdr[2], hdr[3], hdr[4]);
     for workers in [1usize, 2, 4, 8] {
         let cfg = FabricConfig { sim_workers: workers, ..Default::default() };
         let (thru, lat, _b, rows) = run_once(cfg, false, n);
-        println!("{:>8} {:>10.0} {:>10.0} {:>10.0} {:>10.1}", workers, thru, lat.p50, lat.p99, rows);
+        println!(
+            "{:>8} {:>10.0} {:>10.0} {:>10.0} {:>10.1}",
+            workers, thru, lat.p50, lat.p99, rows
+        );
     }
 
-    section("E9 ablation: batch-size policy (native accelerator, 4 workers)");
-    println!("{:>9} {:>10} {:>10} {:>10} {:>11}", "max_rows", "req/s", "p50 us", "p99 us", "rows/batch");
+    section("E9 ablation: batch-size policy (native mass backend, 4 workers)");
+    println!("{:>9} {:>10} {:>10} {:>10} {:>11}", "max_rows", hdr[1], hdr[2], hdr[3], hdr[4]);
     for max_rows in [1usize, 4, 8, 16, 32] {
         let cfg = FabricConfig {
             batcher: BatcherConfig { max_rows, max_wait: Duration::from_micros(500) },
             ..Default::default()
         };
         let (thru, lat, _b, rows) = run_once(cfg, false, n);
-        println!("{:>9} {:>10.0} {:>10.0} {:>10.0} {:>11.1}", max_rows, thru, lat.p50, lat.p99, rows);
+        println!(
+            "{:>9} {:>10.0} {:>10.0} {:>10.0} {:>11.1}",
+            max_rows, thru, lat.p50, lat.p99, rows
+        );
     }
 
     if has_artifacts {
-        section("E9: XLA accelerator behind the §3.8 link (4 workers)");
+        section("E9: xla→native backend chain behind the §3.8 link (4 workers)");
         let (thru, lat, batches, rows) = run_once(FabricConfig::default(), true, n);
-        println!("req/s {:.0}; latency us {}; {} batches, {:.1} rows/batch", thru, lat, batches, rows);
+        println!(
+            "req/s {:.0}; latency us {}; {} batches, {:.1} rows/batch",
+            thru, lat, batches, rows
+        );
     } else {
         println!("\nSKIP XLA arm: artifacts/ missing — run `make artifacts`");
     }

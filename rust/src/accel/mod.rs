@@ -106,8 +106,11 @@ pub trait Accelerator {
     fn execute(&self, req: &MassRequest) -> Result<MassResult>;
 }
 
-/// Factory handed to the fabric; invoked once on the accel worker thread.
-pub type AccelFactory = Box<dyn FnOnce() -> Result<Box<dyn Accelerator>> + Send>;
+/// Factory for a mass-op accelerator; invoked on the worker thread that
+/// will own the instance. Register one as a named fabric backend via
+/// `coordinator::BackendRegistry::register_accel` (the fabric may call it
+/// once per failover attempt, hence `Fn`, not `FnOnce`).
+pub type AccelFactory = Box<dyn Fn() -> Result<Box<dyn Accelerator>> + Send + Sync>;
 
 // ----------------------------------------------------------------------
 // Native baseline

@@ -1,0 +1,362 @@
+//! The fabric service API — the typed public surface of the EMPA
+//! coordinator.
+//!
+//! The paper's supervisor exposes accelerators through an "extremely
+//! simple interface" of signals and data (§3.8); this module is the
+//! host-side analogue for the fabric *service*: a caller builds a
+//! [`JobRequest`] (what to run, how urgent, by when), submits it through a
+//! [`FabricClient`], and holds a [`Job`] — a non-blocking handle that
+//! resolves to either a [`Completion`] (the output plus routing/batching
+//! metadata) or a structured [`FabricError`].
+//!
+//! Layering: `api` owns the request/response vocabulary and depends on
+//! nothing above `workload::sumup`; the `coordinator` implements the
+//! service behind it; `workload::traces` *generates* `JobRequest`s rather
+//! than defining them.
+
+use crate::workload::sumup::Mode;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+pub use crate::coordinator::client::FabricClient;
+
+// ----------------------------------------------------------------------
+// requests
+// ----------------------------------------------------------------------
+
+/// What a fabric request asks for (the job payload).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestKind {
+    /// Simulate a sumup program in the given mode.
+    RunProgram { mode: Mode, values: Vec<i32> },
+    /// Mass operation over a vector (accelerator-eligible).
+    MassSum { values: Vec<f32> },
+    /// Mass dot product (accelerator-eligible, exercises the MXU path).
+    MassDot { a: Vec<f32>, b: Vec<f32> },
+}
+
+/// Scheduling priority of a job. `High` mass jobs flush their batch
+/// immediately; `High` program jobs overtake queued `Normal`/`Low` ones
+/// in the router's staging queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Low,
+    Normal,
+    High,
+}
+
+impl Default for Priority {
+    fn default() -> Self {
+        Priority::Normal
+    }
+}
+
+/// A fully-specified unit of work for the fabric: the payload plus the
+/// service-level contract (priority, deadline, client attribution).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRequest {
+    pub kind: RequestKind,
+    pub priority: Priority,
+    /// Relative deadline from submission; jobs not *dispatched* by then
+    /// fail with [`FabricError::DeadlineExceeded`] instead of occupying a
+    /// backend.
+    pub deadline: Option<Duration>,
+    /// Client tag for per-client accounting in the fabric metrics.
+    pub client: Option<Arc<str>>,
+}
+
+impl JobRequest {
+    pub fn new(kind: RequestKind) -> Self {
+        JobRequest { kind, priority: Priority::Normal, deadline: None, client: None }
+    }
+
+    pub fn with_priority(mut self, p: Priority) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+
+    pub fn with_client(mut self, tag: impl Into<Arc<str>>) -> Self {
+        self.client = Some(tag.into());
+        self
+    }
+}
+
+impl From<RequestKind> for JobRequest {
+    fn from(kind: RequestKind) -> Self {
+        JobRequest::new(kind)
+    }
+}
+
+// ----------------------------------------------------------------------
+// errors
+// ----------------------------------------------------------------------
+
+/// Structured failure taxonomy of the fabric service. Every failure path
+/// in the coordinator and its backends resolves to one of these — callers
+/// match on variants, never on message strings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FabricError {
+    /// Admission control: the fabric ingress queue is full (try again or
+    /// shed load).
+    QueueFull,
+    /// The job's deadline passed before a backend dispatched it.
+    DeadlineExceeded,
+    /// The job was cancelled via [`Job::cancel`] before dispatch.
+    Cancelled,
+    /// The guest program faulted (or failed to assemble) on the simulated
+    /// EMPA processor.
+    GuestFault(String),
+    /// A named backend failed to initialise or to execute the job.
+    Backend { name: String, msg: String },
+    /// The fabric is shut down.
+    Shutdown,
+}
+
+impl std::fmt::Display for FabricError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FabricError::QueueFull => write!(f, "fabric queue full (admission control)"),
+            FabricError::DeadlineExceeded => write!(f, "deadline exceeded before dispatch"),
+            FabricError::Cancelled => write!(f, "job cancelled before dispatch"),
+            FabricError::GuestFault(m) => write!(f, "guest fault: {m}"),
+            FabricError::Backend { name, msg } => write!(f, "backend `{name}`: {msg}"),
+            FabricError::Shutdown => write!(f, "fabric is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for FabricError {}
+
+// ----------------------------------------------------------------------
+// completions
+// ----------------------------------------------------------------------
+
+/// Which execution lane served a job (the router's decision).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// EMPA processor simulation pool.
+    Simulator,
+    /// Computed by the router itself (below the accelerator threshold).
+    Inline,
+    /// A mass-op backend behind the §3.8 link.
+    Accelerator,
+}
+
+/// Successful job output.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Output {
+    /// Program simulated: final %eax, clocks, cores used.
+    Program { eax: i32, clocks: u64, cores: usize },
+    /// Mass op scalar result for this request's row(s).
+    Scalars(Vec<f32>),
+    /// Mass op row results.
+    Rows(Vec<Vec<f32>>),
+}
+
+impl Output {
+    /// The first scalar, when the output is scalar-shaped (convenience
+    /// for the common one-row mass ops).
+    pub fn scalar(&self) -> Option<f32> {
+        match self {
+            Output::Scalars(v) => v.first().copied(),
+            _ => None,
+        }
+    }
+}
+
+/// A completed job: the output plus per-job service metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    pub output: Output,
+    /// Which lane served the job.
+    pub route: Route,
+    /// Name of the backend that produced the output (`sim`, `inline`,
+    /// `native`, `xla`, ...).
+    pub backend: String,
+    /// Rows in the accelerator batch this job rode in (1 off the batch
+    /// path).
+    pub batch_rows: usize,
+    /// Submission → dispatch-to-backend.
+    pub queue_latency: Duration,
+    /// Submission → completion.
+    pub latency: Duration,
+}
+
+/// What a [`Job`] resolves to.
+pub type JobResult = Result<Completion, FabricError>;
+
+// ----------------------------------------------------------------------
+// the job handle
+// ----------------------------------------------------------------------
+
+/// A submitted job. The handle is non-blocking by default: poll with
+/// [`Job::try_wait`], bound the wait with [`Job::wait_timeout`], block
+/// with [`Job::wait`], or abandon with [`Job::cancel`].
+#[derive(Debug)]
+pub struct Job {
+    id: u64,
+    submitted: Instant,
+    cancel: Arc<AtomicBool>,
+    rx: Receiver<JobResult>,
+    settled: Option<JobResult>,
+}
+
+impl Job {
+    pub(crate) fn new(
+        id: u64,
+        submitted: Instant,
+        cancel: Arc<AtomicBool>,
+        rx: Receiver<JobResult>,
+    ) -> Self {
+        Job { id, submitted, cancel, rx, settled: None }
+    }
+
+    /// Fabric-assigned job id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// When the job was accepted by the fabric.
+    pub fn submitted(&self) -> Instant {
+        self.submitted
+    }
+
+    /// Request cancellation. Best-effort: a job already dispatched to a
+    /// backend completes normally; one still queued (or parked in a
+    /// batcher) resolves to [`FabricError::Cancelled`].
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Release);
+    }
+
+    /// Whether [`Job::cancel`] has been requested.
+    pub fn cancel_requested(&self) -> bool {
+        self.cancel.load(Ordering::Acquire)
+    }
+
+    /// Block until the job resolves.
+    pub fn wait(mut self) -> JobResult {
+        if let Some(r) = self.settled.take() {
+            return r;
+        }
+        self.rx.recv().unwrap_or(Err(FabricError::Shutdown))
+    }
+
+    /// Non-blocking poll: `None` while the job is still in flight.
+    pub fn try_wait(&mut self) -> Option<JobResult> {
+        if self.settled.is_none() {
+            match self.rx.try_recv() {
+                Ok(r) => self.settled = Some(r),
+                Err(TryRecvError::Empty) => return None,
+                Err(TryRecvError::Disconnected) => self.settled = Some(Err(FabricError::Shutdown)),
+            }
+        }
+        self.settled.clone()
+    }
+
+    /// Wait up to `timeout`: `None` if the job is still in flight when it
+    /// expires (the job keeps running; poll again or cancel).
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<JobResult> {
+        if self.settled.is_none() {
+            match self.rx.recv_timeout(timeout) {
+                Ok(r) => self.settled = Some(r),
+                Err(RecvTimeoutError::Timeout) => return None,
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.settled = Some(Err(FabricError::Shutdown))
+                }
+            }
+        }
+        self.settled.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn job_pair() -> (mpsc::Sender<JobResult>, Job) {
+        let (tx, rx) = mpsc::channel();
+        (tx, Job::new(1, Instant::now(), Arc::new(AtomicBool::new(false)), rx))
+    }
+
+    fn completion() -> Completion {
+        Completion {
+            output: Output::Scalars(vec![3.0]),
+            route: Route::Inline,
+            backend: "inline".into(),
+            batch_rows: 1,
+            queue_latency: Duration::ZERO,
+            latency: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn builder_sets_contract_fields() {
+        let r = JobRequest::new(RequestKind::MassSum { values: vec![1.0] })
+            .with_priority(Priority::High)
+            .with_deadline(Duration::from_millis(5))
+            .with_client("tenant-a");
+        assert_eq!(r.priority, Priority::High);
+        assert_eq!(r.deadline, Some(Duration::from_millis(5)));
+        assert_eq!(r.client.as_deref(), Some("tenant-a"));
+    }
+
+    #[test]
+    fn try_wait_polls_then_settles() {
+        let (tx, mut job) = job_pair();
+        assert!(job.try_wait().is_none());
+        tx.send(Ok(completion())).unwrap();
+        let r = job.try_wait().expect("settled");
+        assert_eq!(r.unwrap().output.scalar(), Some(3.0));
+        // settled result is sticky
+        assert!(job.try_wait().is_some());
+        assert!(job.wait().is_ok());
+    }
+
+    #[test]
+    fn wait_timeout_expires_without_consuming() {
+        let (tx, mut job) = job_pair();
+        assert!(job.wait_timeout(Duration::from_millis(1)).is_none());
+        tx.send(Err(FabricError::DeadlineExceeded)).unwrap();
+        assert_eq!(
+            job.wait_timeout(Duration::from_secs(1)),
+            Some(Err(FabricError::DeadlineExceeded))
+        );
+    }
+
+    #[test]
+    fn dropped_fabric_resolves_to_shutdown() {
+        let (tx, mut job) = job_pair();
+        drop(tx);
+        assert_eq!(job.try_wait(), Some(Err(FabricError::Shutdown)));
+    }
+
+    #[test]
+    fn cancel_flag_is_shared() {
+        let (_tx, job) = job_pair();
+        assert!(!job.cancel_requested());
+        job.cancel();
+        assert!(job.cancel_requested());
+    }
+
+    #[test]
+    fn errors_render_for_humans() {
+        let e = FabricError::Backend { name: "xla".into(), msg: "no device".into() };
+        assert!(e.to_string().contains("xla"));
+        assert!(FabricError::QueueFull.to_string().contains("queue full"));
+    }
+
+    #[test]
+    fn priority_orders_high_above_normal() {
+        assert!(Priority::High > Priority::Normal);
+        assert!(Priority::Normal > Priority::Low);
+        assert_eq!(Priority::default(), Priority::Normal);
+    }
+}

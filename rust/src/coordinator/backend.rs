@@ -1,0 +1,332 @@
+//! Execution backends and the multi-backend registry.
+//!
+//! The §3.8 link makes any compute substrate that speaks "signals and
+//! data" attachable to an EMPA processor; the [`Backend`] trait is the
+//! fabric-side generalisation: the simulated EMPA pool (`sim`), the
+//! native mass-op loops (`native`), and the XLA/Pallas accelerator
+//! (`xla`) all implement one interface and register by name in a
+//! [`BackendRegistry`].
+//!
+//! Registration order is failover order within a class: when a factory
+//! fails to initialise (e.g. the XLA runtime is absent), the worker
+//! degrades to the next entry instead of erroring every batch, and the
+//! failure is visible in the per-backend metrics.
+
+use crate::accel::{Accelerator, MassRequest, MassResult, NativeAccel};
+use crate::api::{FabricError, RequestKind};
+use crate::empa::{EmpaConfig, EmpaProcessor};
+use crate::isa::assemble;
+use crate::workload::sumup::{self, Mode};
+use std::sync::Arc;
+
+/// Which job class a backend serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendClass {
+    /// Scalar program jobs (`RequestKind::RunProgram`).
+    Program,
+    /// Batched mass operations (`MassSum` / `MassDot`).
+    Mass,
+}
+
+/// One unit of work handed to a backend.
+pub enum BackendJob<'a> {
+    Program { mode: Mode, values: &'a [i32] },
+    Mass(&'a MassRequest),
+}
+
+/// What a backend hands back.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BackendReply {
+    Program { eax: i32, clocks: u64, cores: usize },
+    Mass(MassResult),
+}
+
+/// A named execution substrate. Implementations need not be `Send`: the
+/// fabric invokes the *factory* on the worker thread that will own the
+/// backend (PJRT handles are thread-affine), mirroring the paper's point
+/// that the SV sees only signals and data, never internals.
+pub trait Backend {
+    /// Registry name (`sim`, `native`, `xla`, ...).
+    fn name(&self) -> &str;
+    /// Execute one job synchronously.
+    fn execute(&self, job: BackendJob) -> Result<BackendReply, FabricError>;
+}
+
+/// Constructs a backend on the owning worker thread. Invoked once per
+/// worker (the sim pool builds one instance per worker).
+pub type BackendFactory = Box<dyn Fn() -> anyhow::Result<Box<dyn Backend>> + Send + Sync>;
+
+/// One registry row.
+pub struct BackendEntry {
+    pub name: String,
+    pub class: BackendClass,
+    factory: BackendFactory,
+}
+
+impl BackendEntry {
+    /// Run the factory (on the calling thread).
+    pub fn instantiate(&self) -> anyhow::Result<Box<dyn Backend>> {
+        (self.factory)()
+    }
+}
+
+impl std::fmt::Debug for BackendEntry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BackendEntry")
+            .field("name", &self.name)
+            .field("class", &self.class)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Named, ordered collection of backend factories the fabric boots from.
+#[derive(Debug, Default)]
+pub struct BackendRegistry {
+    entries: Vec<Arc<BackendEntry>>,
+}
+
+impl BackendRegistry {
+    pub fn new() -> Self {
+        BackendRegistry { entries: Vec::new() }
+    }
+
+    /// Register a backend; order within a class is failover preference.
+    pub fn register(
+        mut self,
+        name: impl Into<String>,
+        class: BackendClass,
+        factory: BackendFactory,
+    ) -> Self {
+        self.entries.push(Arc::new(BackendEntry { name: name.into(), class, factory }));
+        self
+    }
+
+    /// Register a mass backend from a plain [`Accelerator`] factory (the
+    /// pre-registry `AccelFactory` shape becomes a registry entry).
+    pub fn register_accel<F>(self, name: impl Into<String>, factory: F) -> Self
+    where
+        F: Fn() -> anyhow::Result<Box<dyn Accelerator>> + Send + Sync + 'static,
+    {
+        let name = name.into();
+        let entry_name = name.clone();
+        self.register(
+            name,
+            BackendClass::Mass,
+            Box::new(move || {
+                let accel = factory()?;
+                Ok(Box::new(AccelBackend { name: entry_name.clone(), inner: accel })
+                    as Box<dyn Backend>)
+            }),
+        )
+    }
+
+    /// The default local registry: simulated EMPA pool + native mass ops.
+    pub fn local(empa: EmpaConfig) -> Self {
+        BackendRegistry::new()
+            .register(
+                "sim",
+                BackendClass::Program,
+                Box::new(move || Ok(Box::new(SimBackend::new(empa.clone())) as Box<dyn Backend>)),
+            )
+            .register_accel("native", || Ok(Box::new(NativeAccel) as Box<dyn Accelerator>))
+    }
+
+    /// The production shape: `sim` for programs; `xla` preferred for mass
+    /// ops with `native` as the failover when the XLA runtime is absent.
+    pub fn with_xla(empa: EmpaConfig, artifact_dir: impl Into<String>) -> Self {
+        let dir = artifact_dir.into();
+        BackendRegistry::new()
+            .register(
+                "sim",
+                BackendClass::Program,
+                Box::new(move || Ok(Box::new(SimBackend::new(empa.clone())) as Box<dyn Backend>)),
+            )
+            .register_accel("xla", move || {
+                let rt = crate::runtime::Runtime::load_dir(&dir)?;
+                Ok(Box::new(crate::accel::XlaAccel::new(rt)) as Box<dyn Accelerator>)
+            })
+            .register_accel("native", || Ok(Box::new(NativeAccel) as Box<dyn Accelerator>))
+    }
+
+    /// Entries of one class, in registration (= failover) order.
+    pub fn chain(&self, class: BackendClass) -> Vec<Arc<BackendEntry>> {
+        self.entries.iter().filter(|e| e.class == class).cloned().collect()
+    }
+
+    /// All registered names, in order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Map a request kind to the backend class that can serve it.
+pub fn class_of(kind: &RequestKind) -> BackendClass {
+    match kind {
+        RequestKind::RunProgram { .. } => BackendClass::Program,
+        RequestKind::MassSum { .. } | RequestKind::MassDot { .. } => BackendClass::Mass,
+    }
+}
+
+// ----------------------------------------------------------------------
+// the simulated EMPA pool as a backend
+// ----------------------------------------------------------------------
+
+/// One simulated EMPA processor slot: assembles the sumup program for the
+/// requested mode and runs it cycle-stepped.
+pub struct SimBackend {
+    cfg: EmpaConfig,
+}
+
+impl SimBackend {
+    pub fn new(cfg: EmpaConfig) -> Self {
+        SimBackend { cfg }
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &str {
+        "sim"
+    }
+
+    fn execute(&self, job: BackendJob) -> Result<BackendReply, FabricError> {
+        match job {
+            BackendJob::Program { mode, values } => {
+                let (src, _) = sumup::program(mode, values);
+                let prog = assemble(&src).map_err(|e| FabricError::GuestFault(e.to_string()))?;
+                let r = EmpaProcessor::new(&prog.image, &self.cfg).run();
+                match r.fault {
+                    None => Ok(BackendReply::Program {
+                        eax: r.eax(),
+                        clocks: r.clocks,
+                        cores: r.max_occupied,
+                    }),
+                    Some(f) => Err(FabricError::GuestFault(f)),
+                }
+            }
+            // Mass work never routes here; serve it with the native loops
+            // rather than erroring (a sim core is a conventional core too).
+            BackendJob::Mass(req) => NativeAccel
+                .execute(req)
+                .map(BackendReply::Mass)
+                .map_err(|e| FabricError::Backend { name: "sim".into(), msg: e.to_string() }),
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// accelerators as backends
+// ----------------------------------------------------------------------
+
+/// Adapter: any [`Accelerator`] (the §3.8 link trait) is a mass-class
+/// backend under its registry name.
+pub struct AccelBackend {
+    name: String,
+    inner: Box<dyn Accelerator>,
+}
+
+impl AccelBackend {
+    pub fn new(name: impl Into<String>, inner: Box<dyn Accelerator>) -> Self {
+        AccelBackend { name: name.into(), inner }
+    }
+}
+
+impl Backend for AccelBackend {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn execute(&self, job: BackendJob) -> Result<BackendReply, FabricError> {
+        match job {
+            BackendJob::Mass(req) => self
+                .inner
+                .execute(req)
+                .map(BackendReply::Mass)
+                .map_err(|e| FabricError::Backend { name: self.name.clone(), msg: e.to_string() }),
+            BackendJob::Program { .. } => Err(FabricError::Backend {
+                name: self.name.clone(),
+                msg: "program jobs are not servable by a mass backend".into(),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_registry_has_sim_and_native() {
+        let reg = BackendRegistry::local(EmpaConfig::default());
+        assert_eq!(reg.names(), vec!["sim", "native"]);
+        assert_eq!(reg.chain(BackendClass::Program).len(), 1);
+        assert_eq!(reg.chain(BackendClass::Mass).len(), 1);
+    }
+
+    #[test]
+    fn registration_order_is_failover_order() {
+        let reg = BackendRegistry::new()
+            .register_accel("xla", || anyhow::bail!("no device"))
+            .register_accel("native", || Ok(Box::new(NativeAccel) as Box<dyn Accelerator>));
+        let chain = reg.chain(BackendClass::Mass);
+        assert_eq!(chain[0].name, "xla");
+        assert_eq!(chain[1].name, "native");
+        assert!(chain[0].instantiate().is_err());
+        assert!(chain[1].instantiate().is_ok());
+    }
+
+    #[test]
+    fn sim_backend_runs_programs_and_reports_guest_faults() {
+        let b = SimBackend::new(EmpaConfig::default());
+        let r = b
+            .execute(BackendJob::Program { mode: Mode::Sumup, values: &[1, 2, 3, 4] })
+            .unwrap();
+        assert_eq!(r, BackendReply::Program { eax: 10, clocks: 36, cores: 5 });
+    }
+
+    #[test]
+    fn accel_backend_maps_errors_to_named_backend_variant() {
+        struct Broken;
+        impl Accelerator for Broken {
+            fn name(&self) -> &str {
+                "broken"
+            }
+            fn execute(&self, _req: &MassRequest) -> anyhow::Result<MassResult> {
+                anyhow::bail!("simulated failure")
+            }
+        }
+        let b = AccelBackend::new("broken", Box::new(Broken));
+        let req = MassRequest::sumup(vec![vec![1.0]]);
+        match b.execute(BackendJob::Mass(&req)) {
+            Err(FabricError::Backend { name, msg }) => {
+                assert_eq!(name, "broken");
+                assert!(msg.contains("simulated"));
+            }
+            other => panic!("want Backend error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn native_backend_answers_mass_jobs() {
+        let b = AccelBackend::new("native", Box::new(NativeAccel));
+        let req = MassRequest::sumup(vec![vec![1.0, 2.0, 3.0]]);
+        let BackendReply::Mass(MassResult::Scalars(v)) = b.execute(BackendJob::Mass(&req)).unwrap()
+        else {
+            panic!("scalars expected")
+        };
+        assert_eq!(v, vec![6.0]);
+    }
+
+    #[test]
+    fn class_of_partitions_request_kinds() {
+        assert_eq!(
+            class_of(&RequestKind::RunProgram { mode: Mode::No, values: vec![] }),
+            BackendClass::Program
+        );
+        assert_eq!(class_of(&RequestKind::MassSum { values: vec![] }), BackendClass::Mass);
+        assert_eq!(class_of(&RequestKind::MassDot { a: vec![], b: vec![] }), BackendClass::Mass);
+    }
+}

@@ -1,0 +1,117 @@
+//! The fabric client: a cheaply-cloneable submission handle.
+//!
+//! A [`FabricClient`] is the caller-facing half of the service API: it
+//! turns a [`JobRequest`] into a queued job and a [`Job`] handle. Clones
+//! share the fabric's bounded ingress queue (an `Arc` bump plus a channel
+//! clone), so every request thread, connection handler, or load generator
+//! can hold its own.
+
+use super::{JobCtx, Msg};
+use crate::api::{FabricError, Job, JobRequest};
+use crate::coordinator::FabricMetrics;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Cloneable submission handle onto a running fabric.
+#[derive(Clone)]
+pub struct FabricClient {
+    tx: SyncSender<Msg>,
+    next_id: Arc<AtomicU64>,
+    metrics: Arc<FabricMetrics>,
+    /// Default client tag stamped onto requests that carry none.
+    tag: Option<Arc<str>>,
+}
+
+impl FabricClient {
+    pub(crate) fn new(tx: SyncSender<Msg>, metrics: Arc<FabricMetrics>) -> Self {
+        FabricClient { tx, next_id: Arc::new(AtomicU64::new(0)), metrics, tag: None }
+    }
+
+    /// A clone that stamps `tag` onto untagged requests (per-client
+    /// accounting in [`FabricMetrics`]).
+    pub fn tagged(&self, tag: impl Into<Arc<str>>) -> FabricClient {
+        FabricClient { tag: Some(tag.into()), ..self.clone() }
+    }
+
+    /// Shared fabric metrics.
+    pub fn metrics(&self) -> &FabricMetrics {
+        &self.metrics
+    }
+
+    /// Submit a job; blocks while the ingress queue is full
+    /// (backpressure the caller can feel).
+    pub fn submit(&self, req: impl Into<JobRequest>) -> Result<Job, FabricError> {
+        let (msg, job, tag) = self.prepare(req.into());
+        self.tx.send(msg).map_err(|_| FabricError::Shutdown)?;
+        self.account(tag.as_deref());
+        Ok(job)
+    }
+
+    /// Non-blocking submit (admission control): a full ingress queue is a
+    /// [`FabricError::QueueFull`] the caller observes immediately instead
+    /// of a stalled thread.
+    pub fn try_submit(&self, req: impl Into<JobRequest>) -> Result<Job, FabricError> {
+        let (msg, job, tag) = self.prepare(req.into());
+        match self.tx.try_send(msg) {
+            Ok(()) => {
+                self.account(tag.as_deref());
+                Ok(job)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(FabricError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(FabricError::Shutdown),
+        }
+    }
+
+    /// Vectorized submit: one call, one handle per request, in order.
+    /// Blocks on backpressure like [`FabricClient::submit`]; on shutdown
+    /// mid-batch the already-queued prefix still completes (their handles
+    /// are dropped with the error).
+    pub fn submit_batch(
+        &self,
+        reqs: impl IntoIterator<Item = JobRequest>,
+    ) -> Result<Vec<Job>, FabricError> {
+        let mut jobs = Vec::new();
+        for req in reqs {
+            jobs.push(self.submit(req)?);
+        }
+        Ok(jobs)
+    }
+
+    /// Ask the router to stop (used by `Fabric::shutdown`).
+    pub(crate) fn shutdown_signal(&self) -> Result<(), FabricError> {
+        self.tx.send(Msg::Shutdown).map_err(|_| FabricError::Shutdown)
+    }
+
+    fn account(&self, tag: Option<&str>) {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = tag {
+            self.metrics.client(t).fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn prepare(&self, mut req: JobRequest) -> (Msg, Job, Option<Arc<str>>) {
+        if req.client.is_none() {
+            req.client = self.tag.clone();
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let submitted = Instant::now();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let tag = req.client.clone();
+        let ctx = JobCtx {
+            id,
+            priority: req.priority,
+            deadline: req.deadline,
+            submitted,
+            cancel: Arc::clone(&cancel),
+            reply: reply_tx,
+        };
+        let job = Job::new(id, submitted, cancel, reply_rx);
+        (Msg::Job { kind: req.kind, ctx }, job, tag)
+    }
+}

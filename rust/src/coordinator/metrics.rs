@@ -1,6 +1,26 @@
-//! Fabric-level metrics (lock-free counters + latency summaries).
+//! Fabric-level metrics: lock-free global counters, per-backend counters,
+//! and per-client accounting.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Counters for one named backend (`sim`, `native`, `xla`, ...).
+#[derive(Debug, Default)]
+pub struct BackendStats {
+    /// Successful factory initialisations (sim pool: one per worker).
+    pub init_ok: AtomicU64,
+    /// Factory failures (each one is a failover to the next entry).
+    pub init_failures: AtomicU64,
+    /// Jobs answered by this backend.
+    pub jobs: AtomicU64,
+    /// Accelerator batches executed (mass backends).
+    pub batches: AtomicU64,
+    /// Rows across those batches.
+    pub rows: AtomicU64,
+    /// Jobs failed by this backend.
+    pub errors: AtomicU64,
+}
 
 /// Counters shared across the fabric threads.
 #[derive(Debug, Default)]
@@ -8,15 +28,47 @@ pub struct FabricMetrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub errors: AtomicU64,
+    /// `try_submit` rejections (admission control).
+    pub rejected: AtomicU64,
+    /// Jobs resolved `Cancelled` before dispatch.
+    pub cancelled: AtomicU64,
+    /// Jobs resolved `DeadlineExceeded` before dispatch.
+    pub deadline_missed: AtomicU64,
+    /// Backend initialisation failovers (registry degraded to a later entry).
+    pub failovers: AtomicU64,
     pub routed_sim: AtomicU64,
     pub routed_inline: AtomicU64,
     pub routed_accel: AtomicU64,
     pub accel_batches: AtomicU64,
     pub accel_rows: AtomicU64,
     pub deadline_flushes: AtomicU64,
+    /// High-priority mass jobs that forced an immediate batch flush.
+    pub priority_flushes: AtomicU64,
+    backends: Mutex<HashMap<String, Arc<BackendStats>>>,
+    clients: Mutex<HashMap<String, Arc<AtomicU64>>>,
 }
 
 impl FabricMetrics {
+    /// Per-backend counters, created on first touch.
+    pub fn backend(&self, name: &str) -> Arc<BackendStats> {
+        let mut g = self.backends.lock().unwrap();
+        Arc::clone(g.entry(name.to_string()).or_default())
+    }
+
+    /// Names of all backends that have reported, sorted.
+    pub fn backend_names(&self) -> Vec<String> {
+        let g = self.backends.lock().unwrap();
+        let mut v: Vec<String> = g.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Per-client submission counter, created on first touch.
+    pub fn client(&self, tag: &str) -> Arc<AtomicU64> {
+        let mut g = self.clients.lock().unwrap();
+        Arc::clone(g.entry(tag.to_string()).or_default())
+    }
+
     /// Mean rows per accelerator batch (batching effectiveness).
     pub fn mean_batch_rows(&self) -> f64 {
         let b = self.accel_batches.load(Ordering::Relaxed);
@@ -27,14 +79,17 @@ impl FabricMetrics {
         }
     }
 
-    /// Render a one-line summary.
+    /// Render a summary: one global line plus one line per backend.
     pub fn render(&self) -> String {
         let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
-        format!(
-            "submitted={} completed={} errors={} | sim={} inline={} accel={} | batches={} rows={} (mean {:.1}/batch, {} deadline)",
+        let mut out = format!(
+            "submitted={} completed={} errors={} rejected={} cancelled={} deadline_missed={} | sim={} inline={} accel={} | batches={} rows={} (mean {:.1}/batch, {} deadline, {} priority) failovers={}",
             g(&self.submitted),
             g(&self.completed),
             g(&self.errors),
+            g(&self.rejected),
+            g(&self.cancelled),
+            g(&self.deadline_missed),
             g(&self.routed_sim),
             g(&self.routed_inline),
             g(&self.routed_accel),
@@ -42,7 +97,31 @@ impl FabricMetrics {
             g(&self.accel_rows),
             self.mean_batch_rows(),
             g(&self.deadline_flushes),
-        )
+            g(&self.priority_flushes),
+            g(&self.failovers),
+        );
+        for name in self.backend_names() {
+            let b = self.backend(&name);
+            out.push_str(&format!(
+                "\n  backend {name}: init_ok={} init_failures={} jobs={} batches={} rows={} errors={}",
+                g(&b.init_ok),
+                g(&b.init_failures),
+                g(&b.jobs),
+                g(&b.batches),
+                g(&b.rows),
+                g(&b.errors),
+            ));
+        }
+        let clients = self.clients.lock().unwrap();
+        if !clients.is_empty() {
+            let mut tags: Vec<&String> = clients.keys().collect();
+            tags.sort();
+            out.push_str("\n  clients:");
+            for t in tags {
+                out.push_str(&format!(" {t}={}", clients[t].load(Ordering::Relaxed)));
+            }
+        }
+        out
     }
 }
 
@@ -64,5 +143,27 @@ mod tests {
         let m = FabricMetrics::default();
         m.submitted.store(7, Ordering::Relaxed);
         assert!(m.render().contains("submitted=7"));
+    }
+
+    #[test]
+    fn backend_stats_are_shared_and_rendered() {
+        let m = FabricMetrics::default();
+        m.backend("native").batches.fetch_add(3, Ordering::Relaxed);
+        m.backend("native").batches.fetch_add(1, Ordering::Relaxed);
+        m.backend("xla").init_failures.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(m.backend("native").batches.load(Ordering::Relaxed), 4);
+        assert_eq!(m.backend_names(), vec!["native".to_string(), "xla".to_string()]);
+        let r = m.render();
+        assert!(r.contains("backend native"));
+        assert!(r.contains("init_failures=1"));
+    }
+
+    #[test]
+    fn client_counters_accumulate() {
+        let m = FabricMetrics::default();
+        m.client("tenant-a").fetch_add(2, Ordering::Relaxed);
+        m.client("tenant-a").fetch_add(1, Ordering::Relaxed);
+        assert_eq!(m.client("tenant-a").load(Ordering::Relaxed), 3);
+        assert!(m.render().contains("tenant-a=3"));
     }
 }

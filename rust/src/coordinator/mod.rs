@@ -1,35 +1,58 @@
 //! The EMPA fabric coordinator — the paper's supervisor idea lifted to a
 //! service (L3): a leader routes incoming jobs either to a pool of
 //! simulated EMPA processors (scalar/control QTs) or — through the §3.8
-//! accelerator link — to the XLA mass-processing accelerator, with
-//! dynamic batching into bucket-shaped tiles and bounded-queue
-//! backpressure.
+//! accelerator link — to a chain of mass-processing backends, with
+//! dynamic batching into bucket-shaped tiles, priority staging,
+//! per-job deadlines/cancellation, and bounded-queue backpressure.
 //!
 //! Topology (all std threads; the binary is self-contained, Python never
 //! runs here):
 //!
 //! ```text
-//!  clients ── submit ──► router (leader)
-//!                          │ RunProgram            │ Mass*
-//!                          ▼                       ▼
-//!                 sim worker pool          per-op Batcher ──► accel worker
-//!                 (EmpaProcessor)          (size/deadline)    (dyn Accelerator)
+//!  FabricClient ── submit / try_submit / submit_batch ──► router (leader)
+//!   (cloneable)        bounded ingress queue               │
+//!                                                          ├ RunProgram: priority-staged
+//!                                                          │      ▼
+//!                                                 sim worker pool ("sim" backends,
+//!                                                   one instance per worker)
+//!                                                          │
+//!                                                          ├ small mass op: inline
+//!                                                          │
+//!                                                          └ Mass*: per-op Batcher
+//!                                                                 ▼ (size/deadline/priority)
+//!                                                          mass worker — backend chain
+//!                                                          ("xla" → "native" failover)
 //! ```
+//!
+//! The public vocabulary (requests, errors, handles, completions) lives
+//! in [`crate::api`]; backends and their registry in [`backend`]; this
+//! module owns the threads and queues between them.
 
+pub mod backend;
+pub mod client;
 pub mod metrics;
 pub mod router;
 
-pub use metrics::FabricMetrics;
-pub use router::{RoutePolicy, Target};
+pub use crate::api::{
+    Completion, FabricError, Job, JobRequest, JobResult, Output, Priority, RequestKind, Route,
+};
+pub use backend::{
+    AccelBackend, Backend, BackendClass, BackendEntry, BackendFactory, BackendJob, BackendReply,
+    BackendRegistry, SimBackend,
+};
+pub use client::FabricClient;
+pub use metrics::{BackendStats, FabricMetrics};
+pub use router::RoutePolicy;
 
-use crate::accel::{AccelFactory, Batcher, BatcherConfig, MassOp, MassRequest, MassResult};
-use crate::empa::{EmpaConfig, EmpaProcessor};
-use crate::isa::assemble;
-use crate::workload::{Request, RequestKind};
-use anyhow::{anyhow, Result};
-use std::collections::HashMap;
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::sync::{mpsc, Arc, Mutex};
+use crate::accel::{batch::PendingRow, Batcher, BatcherConfig, MassOp, MassRequest, MassResult};
+use crate::empa::EmpaConfig;
+use crate::workload::Request;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::mpsc::{
+    self, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -44,7 +67,7 @@ pub struct FabricConfig {
     pub batcher: BatcherConfig,
     /// Routing policy (accelerator threshold etc.).
     pub route: RoutePolicy,
-    /// Bounded queue depth towards the sim pool (backpressure).
+    /// Bounded queue depth (ingress and sim pool — backpressure).
     pub queue_cap: usize,
 }
 
@@ -60,96 +83,202 @@ impl Default for FabricConfig {
     }
 }
 
-/// Fabric reply for one request.
+// ----------------------------------------------------------------------
+// deprecated compatibility shim
+// ----------------------------------------------------------------------
+
+/// Pre-registry reply enum, kept only so downstream code migrating to the
+/// typed API can convert at the boundary. New code matches on
+/// [`Output`] / [`FabricError`] instead.
+#[deprecated(note = "match on `api::Output` and `api::FabricError` via `Job::wait`")]
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
-    /// Program simulated: final %eax, clocks, cores used.
     Program { eax: i32, clocks: u64, cores: usize },
-    /// Mass op scalar result for this request's row(s).
     Scalars(Vec<f32>),
-    /// Mass op row results.
     Rows(Vec<Vec<f32>>),
-    /// Failure.
     Error(String),
 }
 
-/// A submitted job awaiting its response.
-pub struct JobHandle {
-    pub id: u64,
-    rx: Receiver<(u64, Response, Instant)>,
-    submitted: Instant,
-}
-
-impl JobHandle {
-    /// Block until the response arrives; returns (response, latency).
-    pub fn wait(self) -> (Response, Duration) {
-        match self.rx.recv() {
-            Ok((_, resp, done)) => (resp, done.duration_since(self.submitted)),
-            Err(_) => (Response::Error("fabric shut down".into()), self.submitted.elapsed()),
+#[allow(deprecated)]
+impl Response {
+    /// Flatten a typed job result into the legacy shape.
+    pub fn from_result(res: &JobResult) -> Response {
+        match res {
+            Ok(c) => match &c.output {
+                Output::Program { eax, clocks, cores } => {
+                    Response::Program { eax: *eax, clocks: *clocks, cores: *cores }
+                }
+                Output::Scalars(v) => Response::Scalars(v.clone()),
+                Output::Rows(r) => Response::Rows(r.clone()),
+            },
+            Err(e) => Response::Error(e.to_string()),
         }
     }
 }
 
-enum Msg {
-    Job { id: u64, kind: RequestKind, reply: Sender<(u64, Response, Instant)> },
+// ----------------------------------------------------------------------
+// internal wire types
+// ----------------------------------------------------------------------
+
+/// Per-job context carried through queues to whichever thread resolves
+/// the job. Replies flow through `reply`; latencies are derived from
+/// `submitted`.
+pub(crate) struct JobCtx {
+    #[allow(dead_code)] // diagnostic identity; replies ride the per-job channel
+    pub id: u64,
+    pub priority: Priority,
+    pub deadline: Option<Duration>,
+    pub submitted: Instant,
+    pub cancel: Arc<AtomicBool>,
+    pub reply: Sender<JobResult>,
+}
+
+impl JobCtx {
+    fn cancelled(&self) -> bool {
+        self.cancel.load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now.saturating_duration_since(self.submitted) > d)
+    }
+
+    /// Pre-dispatch gate: resolves the job if it was cancelled or its
+    /// deadline passed; returns whether it should still run.
+    fn admit(&self, metrics: &FabricMetrics) -> bool {
+        if self.cancelled() {
+            self.fail(metrics, FabricError::Cancelled);
+            return false;
+        }
+        if self.expired(Instant::now()) {
+            self.fail(metrics, FabricError::DeadlineExceeded);
+            return false;
+        }
+        true
+    }
+
+    fn complete(
+        &self,
+        metrics: &FabricMetrics,
+        output: Output,
+        route: Route,
+        backend: &str,
+        batch_rows: usize,
+        dispatched: Instant,
+    ) {
+        metrics.completed.fetch_add(1, Relaxed);
+        let now = Instant::now();
+        let _ = self.reply.send(Ok(Completion {
+            output,
+            route,
+            backend: backend.to_string(),
+            batch_rows,
+            queue_latency: dispatched.saturating_duration_since(self.submitted),
+            latency: now.saturating_duration_since(self.submitted),
+        }));
+    }
+
+    fn fail(&self, metrics: &FabricMetrics, err: FabricError) {
+        match err {
+            FabricError::Cancelled => metrics.cancelled.fetch_add(1, Relaxed),
+            FabricError::DeadlineExceeded => metrics.deadline_missed.fetch_add(1, Relaxed),
+            _ => metrics.errors.fetch_add(1, Relaxed),
+        };
+        let _ = self.reply.send(Err(err));
+    }
+}
+
+pub(crate) enum Msg {
+    Job { kind: RequestKind, ctx: JobCtx },
     Shutdown,
 }
 
 enum SimMsg {
-    Run { id: u64, kind: RequestKind, reply: Sender<(u64, Response, Instant)> },
-    Stop,
+    Run { kind: RequestKind, ctx: JobCtx },
 }
 
 struct MassJob {
-    id: u64,
-    reply: Sender<(u64, Response, Instant)>,
+    ctx: JobCtx,
 }
 
 enum AccelMsg {
-    Batch { op: MassOp, rows: Vec<crate::accel::batch::PendingRow<MassJob>>, scale_bias: [f32; 2] },
-    Stop,
+    Batch { op: MassOp, rows: Vec<PendingRow<MassJob>>, scale_bias: [f32; 2] },
 }
+
+/// Program job parked in the router, ordered by (priority, FIFO).
+struct Staged {
+    priority: Priority,
+    seq: u64,
+    kind: RequestKind,
+    ctx: JobCtx,
+}
+
+impl PartialEq for Staged {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl Eq for Staged {}
+impl PartialOrd for Staged {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Staged {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // max-heap: higher priority first, then earlier submission
+        self.priority.cmp(&other.priority).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+// ----------------------------------------------------------------------
+// the fabric
+// ----------------------------------------------------------------------
 
 /// The running fabric.
 pub struct Fabric {
-    tx: SyncSender<Msg>,
-    next_id: Mutex<u64>,
+    client: FabricClient,
     pub metrics: Arc<FabricMetrics>,
     threads: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Fabric {
-    /// Start the fabric; `accel` is constructed on the accelerator worker
-    /// thread (PJRT handles are thread-affine) behind the §3.8 link.
-    pub fn start(cfg: FabricConfig, accel: AccelFactory) -> Arc<Fabric> {
+    /// Start the fabric over a backend registry. Backends are constructed
+    /// *on* their worker threads (PJRT handles are thread-affine) in
+    /// registration order, failing over to later entries of the same
+    /// class.
+    pub fn start(cfg: FabricConfig, registry: BackendRegistry) -> Arc<Fabric> {
         let metrics = Arc::new(FabricMetrics::default());
         let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap);
         let mut threads = Vec::new();
+        let program_chain = registry.chain(BackendClass::Program);
+        let mass_chain = registry.chain(BackendClass::Mass);
 
         // --- sim worker pool -------------------------------------------
-        let (sim_tx, sim_rx) = sync_channel::<SimMsg>(cfg.queue_cap);
+        // Shallow channel: the backlog lives in the router's priority
+        // heap, so High jobs overtake instead of queueing FIFO.
+        let (sim_tx, sim_rx) = sync_channel::<SimMsg>(cfg.sim_workers.max(1) * 2);
         let sim_rx = Arc::new(Mutex::new(sim_rx));
         for w in 0..cfg.sim_workers.max(1) {
             let rx = Arc::clone(&sim_rx);
-            let empa_cfg = cfg.empa.clone();
+            let chain = program_chain.clone();
             let m = Arc::clone(&metrics);
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("empa-sim-{w}"))
-                    .spawn(move || sim_worker(rx, empa_cfg, m))
+                    .spawn(move || sim_worker(rx, chain, m))
                     .expect("spawn sim worker"),
             );
         }
 
-        // --- accelerator worker ----------------------------------------
+        // --- mass worker (accelerator chain) ---------------------------
         let (acc_tx, acc_rx) = mpsc::channel::<AccelMsg>();
         {
             let m = Arc::clone(&metrics);
             threads.push(
                 std::thread::Builder::new()
-                    .name("accel".into())
-                    .spawn(move || accel_worker(acc_rx, accel, m))
-                    .expect("spawn accel worker"),
+                    .name("fabric-mass".into())
+                    .spawn(move || mass_worker(acc_rx, mass_chain, m))
+                    .expect("spawn mass worker"),
             );
         }
 
@@ -165,44 +294,45 @@ impl Fabric {
             );
         }
 
-        Arc::new(Fabric { tx, next_id: Mutex::new(0), metrics, threads: Mutex::new(threads) })
+        let client = FabricClient::new(tx, Arc::clone(&metrics));
+        Arc::new(Fabric { client, metrics, threads: Mutex::new(threads) })
     }
 
-    /// Submit a job; blocks when the fabric queue is full (backpressure).
-    pub fn submit(&self, kind: RequestKind) -> Result<JobHandle> {
-        let id = {
-            let mut g = self.next_id.lock().unwrap();
-            *g += 1;
-            *g
-        };
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let submitted = Instant::now();
-        self.metrics.submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.tx
-            .send(Msg::Job { id, kind, reply: reply_tx })
-            .map_err(|_| anyhow!("fabric is shut down"))?;
-        Ok(JobHandle { id, rx: reply_rx, submitted })
+    /// Start with the default local registry (`sim` + `native`).
+    pub fn start_local(cfg: FabricConfig) -> Arc<Fabric> {
+        let registry = BackendRegistry::local(cfg.empa.clone());
+        Fabric::start(cfg, registry)
+    }
+
+    /// A new cheaply-cloneable client onto this fabric.
+    pub fn client(&self) -> FabricClient {
+        self.client.clone()
+    }
+
+    /// Submit a job; blocks when the ingress queue is full (backpressure).
+    pub fn submit(&self, req: impl Into<JobRequest>) -> Result<Job, FabricError> {
+        self.client.submit(req)
+    }
+
+    /// Non-blocking submit; see [`FabricClient::try_submit`].
+    pub fn try_submit(&self, req: impl Into<JobRequest>) -> Result<Job, FabricError> {
+        self.client.try_submit(req)
     }
 
     /// Submit a full trace and wait for all responses; returns per-request
-    /// (request-id, response, latency).
-    pub fn run_trace(&self, trace: Vec<Request>) -> Vec<(u64, Response, Duration)> {
-        let handles: Vec<(u64, JobHandle)> = trace
-            .into_iter()
-            .map(|r| (r.id, self.submit(r.kind).expect("submit")))
-            .collect();
-        handles
-            .into_iter()
-            .map(|(rid, h)| {
-                let (resp, lat) = h.wait();
-                (rid, resp, lat)
-            })
-            .collect()
+    /// (request-id, result). Submission failure (e.g. shutdown mid-trace)
+    /// propagates instead of panicking.
+    pub fn run_trace(&self, trace: Vec<Request>) -> Result<Vec<(u64, JobResult)>, FabricError> {
+        let mut jobs = Vec::with_capacity(trace.len());
+        for r in trace {
+            jobs.push((r.id, self.submit(r.job)?));
+        }
+        Ok(jobs.into_iter().map(|(rid, j)| (rid, j.wait())).collect())
     }
 
     /// Stop all threads (idempotent; pending jobs are completed first).
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        let _ = self.client.shutdown_signal();
         let mut g = self.threads.lock().unwrap();
         for t in g.drain(..) {
             let _ = t.join();
@@ -214,6 +344,10 @@ impl Fabric {
 // threads
 // ----------------------------------------------------------------------
 
+/// How long the router waits for new work while program jobs are staged
+/// for a full sim pool (it retries the pool on every wake-up).
+const STAGED_RETRY: Duration = Duration::from_micros(200);
+
 fn router_loop(
     rx: Receiver<Msg>,
     sim_tx: SyncSender<SimMsg>,
@@ -221,32 +355,70 @@ fn router_loop(
     cfg: FabricConfig,
     metrics: Arc<FabricMetrics>,
 ) {
-    use std::sync::atomic::Ordering::Relaxed;
     // One batcher per mass op kind (rows of one flush share an artifact).
     let mut batchers: HashMap<MassOp, Batcher<MassJob>> = HashMap::new();
-    let flush = |op: MassOp, rows: Vec<crate::accel::batch::PendingRow<MassJob>>, acc_tx: &mpsc::Sender<AccelMsg>| {
+    // Program jobs waiting for a sim pool slot, highest priority first.
+    // Bounded: past this the router stops ingesting, making the ingress
+    // queue the caller-visible backpressure signal.
+    let mut staged: BinaryHeap<Staged> = BinaryHeap::new();
+    let staged_cap = cfg.queue_cap.max(1);
+    let mut seq = 0u64;
+    let inline_stats = metrics.backend("inline");
+    let flush = |op: MassOp, rows: Vec<PendingRow<MassJob>>, acc_tx: &mpsc::Sender<AccelMsg>| {
         let _ = acc_tx.send(AccelMsg::Batch { op, rows, scale_bias: [0.0; 2] });
     };
     loop {
-        // Wait bounded by the earliest batch deadline.
-        let deadline = batchers
-            .values()
-            .filter_map(|b| b.next_deadline())
-            .min();
-        let msg = match deadline {
-            Some(d) => {
-                let now = Instant::now();
-                let wait = d.saturating_duration_since(now);
-                match rx.recv_timeout(wait) {
-                    Ok(m) => Some(m),
-                    Err(RecvTimeoutError::Timeout) => None,
-                    Err(RecvTimeoutError::Disconnected) => break,
+        // Drain staged program jobs into the pool without blocking.
+        while let Some(s) = staged.pop() {
+            if !s.ctx.admit(&metrics) {
+                continue;
+            }
+            let (pr, sq) = (s.priority, s.seq);
+            match sim_tx.try_send(SimMsg::Run { kind: s.kind, ctx: s.ctx }) {
+                Ok(()) => {}
+                Err(TrySendError::Full(SimMsg::Run { kind, ctx })) => {
+                    staged.push(Staged { priority: pr, seq: sq, kind, ctx });
+                    break;
+                }
+                Err(TrySendError::Disconnected(SimMsg::Run { ctx, .. })) => {
+                    ctx.fail(&metrics, FabricError::Shutdown);
                 }
             }
-            None => match rx.recv() {
-                Ok(m) => Some(m),
-                Err(_) => break,
-            },
+        }
+
+        // Wait bounded by the earliest batch deadline / staged backlog.
+        let batch_deadline = batchers.values().filter_map(|b| b.next_deadline()).min();
+        let staged_retry =
+            if staged.is_empty() { None } else { Some(Instant::now() + STAGED_RETRY) };
+        let wake = match (batch_deadline, staged_retry) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        let msg = if staged.len() >= staged_cap {
+            // Backpressure: the program backlog is at capacity, so stop
+            // ingesting and let the bounded ingress queue fill — that is
+            // what `try_submit` observes as QueueFull. Wake soon to retry
+            // the pool and honour batch deadlines.
+            let until = wake.unwrap_or_else(|| Instant::now() + STAGED_RETRY);
+            std::thread::sleep(
+                until.saturating_duration_since(Instant::now()).min(STAGED_RETRY),
+            );
+            None
+        } else {
+            match wake {
+                Some(d) => {
+                    let wait = d.saturating_duration_since(Instant::now());
+                    match rx.recv_timeout(wait) {
+                        Ok(m) => Some(m),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                None => match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => break,
+                },
+            }
         };
         // Deadline flushes first (they are due).
         let now = Instant::now();
@@ -259,156 +431,381 @@ fn router_loop(
         let Some(msg) = msg else { continue };
         match msg {
             Msg::Shutdown => break,
-            Msg::Job { id, kind, reply } => match router::route(&kind, &cfg.route) {
-                Target::Simulator => {
-                    metrics.routed_sim.fetch_add(1, Relaxed);
-                    let _ = sim_tx.send(SimMsg::Run { id, kind, reply });
+            Msg::Job { kind, ctx } => {
+                if !ctx.admit(&metrics) {
+                    continue;
                 }
-                Target::Inline => {
-                    // Small mass op: not worth the accelerator round trip
-                    // (the §2.4 offset-time argument); compute natively.
-                    metrics.routed_inline.fetch_add(1, Relaxed);
-                    let resp = inline_mass(&kind);
-                    let _ = reply.send((id, resp, Instant::now()));
-                }
-                Target::Accelerator => {
-                    metrics.routed_accel.fetch_add(1, Relaxed);
-                    let (op, row, row2) = match kind {
-                        RequestKind::MassSum { values } => (MassOp::Sumup, values, None),
-                        RequestKind::MassDot { a, b } => (MassOp::Dot, a, Some(b)),
-                        RequestKind::RunProgram { .. } => unreachable!("router"),
-                    };
-                    let b = batchers
-                        .entry(op)
-                        .or_insert_with(|| Batcher::new(cfg.batcher.clone()));
-                    if let Some(rows) = b.push(MassJob { id, reply }, row, row2, Instant::now()) {
-                        flush(op, rows, &acc_tx);
+                match router::route(&kind, &cfg.route) {
+                    Route::Simulator => {
+                        metrics.routed_sim.fetch_add(1, Relaxed);
+                        seq += 1;
+                        staged.push(Staged { priority: ctx.priority, seq, kind, ctx });
+                    }
+                    Route::Inline => {
+                        // Small mass op: not worth the accelerator round
+                        // trip (the §2.4 offset-time argument).
+                        metrics.routed_inline.fetch_add(1, Relaxed);
+                        let dispatched = Instant::now();
+                        match inline_mass(&kind) {
+                            Ok(out) => {
+                                inline_stats.jobs.fetch_add(1, Relaxed);
+                                ctx.complete(&metrics, out, Route::Inline, "inline", 1, dispatched);
+                            }
+                            Err(e) => {
+                                inline_stats.errors.fetch_add(1, Relaxed);
+                                ctx.fail(&metrics, e);
+                            }
+                        }
+                    }
+                    Route::Accelerator => {
+                        metrics.routed_accel.fetch_add(1, Relaxed);
+                        let high = ctx.priority == Priority::High;
+                        let (op, row, row2) = match kind {
+                            RequestKind::MassSum { values } => (MassOp::Sumup, values, None),
+                            RequestKind::MassDot { a, b } => (MassOp::Dot, a, Some(b)),
+                            RequestKind::RunProgram { .. } => unreachable!("router"),
+                        };
+                        let b = batchers
+                            .entry(op)
+                            .or_insert_with(|| Batcher::new(cfg.batcher.clone()));
+                        if let Some(rows) = b.push(MassJob { ctx }, row, row2, Instant::now()) {
+                            flush(op, rows, &acc_tx);
+                        } else if high {
+                            // High priority refuses to wait out the batch
+                            // window: take whatever is pending now.
+                            if let Some(rows) = b.drain() {
+                                metrics.priority_flushes.fetch_add(1, Relaxed);
+                                flush(op, rows, &acc_tx);
+                            }
+                        }
                     }
                 }
-            },
+            }
         }
     }
-    // drain remaining batches, stop workers
+    // Shutdown drain: staged programs to the pool (blocking — workers are
+    // still up), pending batches to the mass worker.
+    while let Some(s) = staged.pop() {
+        if !s.ctx.admit(&metrics) {
+            continue;
+        }
+        if let Err(mpsc::SendError(SimMsg::Run { ctx, .. })) =
+            sim_tx.send(SimMsg::Run { kind: s.kind, ctx: s.ctx })
+        {
+            ctx.fail(&metrics, FabricError::Shutdown);
+        }
+    }
     for (op, mut b) in batchers {
         if let Some(rows) = b.drain() {
             flush(op, rows, &acc_tx);
         }
     }
-    for _ in 0..64 {
-        let _ = sim_tx.send(SimMsg::Stop);
-    }
-    let _ = acc_tx.send(AccelMsg::Stop);
+    // Per-worker stop: dropping the senders disconnects each worker's
+    // recv loop once it has drained the queue — no counted Stop
+    // broadcast, so any pool size shuts down cleanly.
+    drop(sim_tx);
+    drop(acc_tx);
 }
 
-fn inline_mass(kind: &RequestKind) -> Response {
+fn inline_mass(kind: &RequestKind) -> Result<Output, FabricError> {
     match kind {
-        RequestKind::MassSum { values } => Response::Scalars(vec![values.iter().sum()]),
+        RequestKind::MassSum { values } => Ok(Output::Scalars(vec![values.iter().sum()])),
         RequestKind::MassDot { a, b } => {
-            Response::Scalars(vec![a.iter().zip(b).map(|(x, y)| x * y).sum()])
+            Ok(Output::Scalars(vec![a.iter().zip(b).map(|(x, y)| x * y).sum()]))
         }
-        RequestKind::RunProgram { .. } => Response::Error("program routed inline".into()),
+        RequestKind::RunProgram { .. } => Err(FabricError::Backend {
+            name: "inline".into(),
+            msg: "program routed inline".into(),
+        }),
     }
 }
 
-fn sim_worker(rx: Arc<Mutex<Receiver<SimMsg>>>, cfg: EmpaConfig, metrics: Arc<FabricMetrics>) {
+/// Instantiate the first healthy backend of a chain on this thread,
+/// recording init successes/failures per backend.
+fn instantiate_chain(
+    chain: &[Arc<BackendEntry>],
+    metrics: &FabricMetrics,
+) -> Result<Box<dyn Backend>, FabricError> {
+    let mut last: Option<FabricError> = None;
+    for (i, entry) in chain.iter().enumerate() {
+        match entry.instantiate() {
+            Ok(b) => {
+                metrics.backend(&entry.name).init_ok.fetch_add(1, Relaxed);
+                return Ok(b);
+            }
+            Err(e) => {
+                metrics.backend(&entry.name).init_failures.fetch_add(1, Relaxed);
+                if i + 1 < chain.len() {
+                    metrics.failovers.fetch_add(1, Relaxed);
+                }
+                last = Some(FabricError::Backend {
+                    name: entry.name.clone(),
+                    msg: format!("init: {e:#}"),
+                });
+            }
+        }
+    }
+    Err(last.unwrap_or(FabricError::Backend {
+        name: "registry".into(),
+        msg: "no backend registered for this class".into(),
+    }))
+}
+
+fn single_row_output(res: MassResult) -> Output {
+    match res {
+        MassResult::Scalars(v) => Output::Scalars(v),
+        MassResult::Rows(r) => Output::Rows(r),
+        MassResult::Stats { sum, .. } => Output::Scalars(sum),
+    }
+}
+
+fn sim_worker(
+    rx: Arc<Mutex<Receiver<SimMsg>>>,
+    chain: Vec<Arc<BackendEntry>>,
+    metrics: Arc<FabricMetrics>,
+) {
+    let active = instantiate_chain(&chain, &metrics);
+    let stats = active.as_ref().ok().map(|b| metrics.backend(b.name()));
     loop {
         let msg = {
             let g = rx.lock().unwrap();
             g.recv()
         };
-        match msg {
-            Ok(SimMsg::Run { id, kind, reply }) => {
-                let resp = match kind {
-                    RequestKind::RunProgram { mode, values } => {
-                        let (src, _) = crate::workload::sumup::program(mode, &values);
-                        match assemble(&src) {
-                            Ok(p) => {
-                                let r = EmpaProcessor::new(&p.image, &cfg).run();
-                                match r.fault {
-                                    None => Response::Program {
-                                        eax: r.eax(),
-                                        clocks: r.clocks,
-                                        cores: r.max_occupied,
-                                    },
-                                    Some(f) => Response::Error(f),
-                                }
-                            }
-                            Err(e) => Response::Error(e.to_string()),
-                        }
-                    }
-                    other => inline_mass(&other),
-                };
-                metrics.completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                let _ = reply.send((id, resp, Instant::now()));
+        let Ok(SimMsg::Run { kind, ctx }) = msg else { break };
+        if !ctx.admit(&metrics) {
+            continue;
+        }
+        let dispatched = Instant::now();
+        let backend = match &active {
+            Ok(b) => b,
+            Err(e) => {
+                ctx.fail(&metrics, e.clone());
+                continue;
             }
-            Ok(SimMsg::Stop) | Err(_) => break,
+        };
+        let stats = stats.as_ref().expect("stats exist when backend does");
+        let reply = match &kind {
+            RequestKind::RunProgram { mode, values } => {
+                backend.execute(BackendJob::Program { mode: *mode, values })
+            }
+            // Mass jobs are not routed here, but a sim slot can still
+            // serve one (a conventional core doing the mass op).
+            RequestKind::MassSum { values } => {
+                let req = MassRequest::sumup(vec![values.clone()]);
+                backend.execute(BackendJob::Mass(&req))
+            }
+            RequestKind::MassDot { a, b } => {
+                let req = MassRequest::dot(vec![a.clone()], vec![b.clone()]);
+                backend.execute(BackendJob::Mass(&req))
+            }
+        };
+        match reply {
+            Ok(BackendReply::Program { eax, clocks, cores }) => {
+                stats.jobs.fetch_add(1, Relaxed);
+                ctx.complete(
+                    &metrics,
+                    Output::Program { eax, clocks, cores },
+                    Route::Simulator,
+                    backend.name(),
+                    1,
+                    dispatched,
+                );
+            }
+            Ok(BackendReply::Mass(res)) => {
+                stats.jobs.fetch_add(1, Relaxed);
+                ctx.complete(
+                    &metrics,
+                    single_row_output(res),
+                    Route::Simulator,
+                    backend.name(),
+                    1,
+                    dispatched,
+                );
+            }
+            Err(e) => {
+                stats.errors.fetch_add(1, Relaxed);
+                ctx.fail(&metrics, e);
+            }
         }
     }
 }
 
-fn accel_worker(rx: Receiver<AccelMsg>, accel: AccelFactory, metrics: Arc<FabricMetrics>) {
-    use std::sync::atomic::Ordering::Relaxed;
-    let accel = match accel() {
-        Ok(a) => a,
-        Err(e) => {
-            // Answer every batch with the construction error.
-            while let Ok(msg) = rx.recv() {
-                match msg {
-                    AccelMsg::Stop => return,
-                    AccelMsg::Batch { rows, .. } => {
-                        for p in rows {
-                            metrics.errors.fetch_add(1, Relaxed);
-                            let _ = p.tag.reply.send((
-                                p.tag.id,
-                                Response::Error(format!("accelerator init: {e}")),
-                                Instant::now(),
-                            ));
+/// One mass-chain slot: the entry's backend, instantiated on first use.
+enum Slot {
+    Untried,
+    /// Initialisation failed — permanently skipped (init failure is a
+    /// backend-level fact, unlike a per-batch execute error).
+    Dead,
+    Ready(Box<dyn Backend>, Arc<BackendStats>),
+}
+
+/// The mass-backend chain with per-batch failover: each batch tries the
+/// entries in registration order, so an execute error on the preferred
+/// backend (which may be specific to that one request, e.g. an oversized
+/// bucket) degrades only that batch — the preferred backend stays first
+/// in line for the next one. Init failures mark the slot dead for good.
+struct MassChain {
+    entries: Vec<Arc<BackendEntry>>,
+    slots: Vec<Slot>,
+}
+
+impl MassChain {
+    fn new(entries: Vec<Arc<BackendEntry>>) -> Self {
+        let slots = entries.iter().map(|_| Slot::Untried).collect();
+        MassChain { entries, slots }
+    }
+
+    /// Execute one batch, walking the chain until a backend answers.
+    fn run(
+        &mut self,
+        req: &MassRequest,
+        metrics: &FabricMetrics,
+    ) -> Result<(MassResult, String), FabricError> {
+        let rows = req.rows.len() as u64;
+        let mut last_err: Option<FabricError> = None;
+        let n = self.entries.len();
+        for i in 0..n {
+            if matches!(self.slots[i], Slot::Untried) {
+                let entry = &self.entries[i];
+                match entry.instantiate() {
+                    Ok(b) => {
+                        let stats = metrics.backend(&entry.name);
+                        stats.init_ok.fetch_add(1, Relaxed);
+                        self.slots[i] = Slot::Ready(b, stats);
+                    }
+                    Err(e) => {
+                        metrics.backend(&entry.name).init_failures.fetch_add(1, Relaxed);
+                        if i + 1 < n {
+                            metrics.failovers.fetch_add(1, Relaxed);
+                        }
+                        self.slots[i] = Slot::Dead;
+                        last_err = Some(FabricError::Backend {
+                            name: entry.name.clone(),
+                            msg: format!("init: {e:#}"),
+                        });
+                    }
+                }
+            }
+            let Slot::Ready(backend, stats) = &self.slots[i] else { continue };
+            match backend.execute(BackendJob::Mass(req)) {
+                Ok(BackendReply::Mass(res)) => {
+                    stats.jobs.fetch_add(rows, Relaxed);
+                    stats.batches.fetch_add(1, Relaxed);
+                    stats.rows.fetch_add(rows, Relaxed);
+                    return Ok((res, backend.name().to_string()));
+                }
+                Ok(BackendReply::Program { .. }) => {
+                    stats.errors.fetch_add(rows, Relaxed);
+                    last_err = Some(FabricError::Backend {
+                        name: backend.name().to_string(),
+                        msg: "mass request answered with a program reply".into(),
+                    });
+                }
+                Err(e) => {
+                    stats.errors.fetch_add(rows, Relaxed);
+                    last_err = Some(e);
+                }
+            }
+            // Falling through to a later entry is a (per-batch) failover.
+            if i + 1 < n {
+                metrics.failovers.fetch_add(1, Relaxed);
+            }
+        }
+        Err(last_err.unwrap_or(FabricError::Backend {
+            name: "registry".into(),
+            msg: "no mass backend registered".into(),
+        }))
+    }
+}
+
+fn mass_worker(rx: Receiver<AccelMsg>, chain: Vec<Arc<BackendEntry>>, metrics: Arc<FabricMetrics>) {
+    let mut exec = MassChain::new(chain);
+    while let Ok(AccelMsg::Batch { op, rows, scale_bias }) = rx.recv() {
+        // Admission per row: cancelled/expired jobs resolve here instead
+        // of padding the accelerator batch. Rows move into the request
+        // (no copies on the hot path); contexts stay behind for replies.
+        let mut ctxs = Vec::with_capacity(rows.len());
+        let mut batch_rows = Vec::with_capacity(rows.len());
+        let mut batch_rows2 = Vec::new();
+        for p in rows {
+            if !p.tag.ctx.admit(&metrics) {
+                continue;
+            }
+            batch_rows.push(p.row);
+            if let Some(r2) = p.row2 {
+                batch_rows2.push(r2);
+            }
+            ctxs.push(p.tag.ctx);
+        }
+        if ctxs.is_empty() {
+            continue;
+        }
+        let req = MassRequest { op, rows: batch_rows, rows2: batch_rows2, scale_bias };
+        let dispatched = Instant::now();
+        let n = ctxs.len();
+        match exec.run(&req, &metrics) {
+            Ok((result, name)) => {
+                let got = match &result {
+                    MassResult::Scalars(v) => v.len(),
+                    MassResult::Rows(r) => r.len(),
+                    MassResult::Stats { sum, .. } => sum.len(),
+                };
+                if got < n {
+                    // A short answer must not silently drop the tail
+                    // (dropped reply senders would read as Shutdown).
+                    let err = FabricError::Backend {
+                        name: name.clone(),
+                        msg: format!("returned {got} results for {n} rows"),
+                    };
+                    for ctx in ctxs {
+                        ctx.fail(&metrics, err.clone());
+                    }
+                    continue;
+                }
+                metrics.accel_batches.fetch_add(1, Relaxed);
+                metrics.accel_rows.fetch_add(n as u64, Relaxed);
+                match result {
+                    MassResult::Scalars(vals) => {
+                        for (ctx, v) in ctxs.into_iter().zip(vals) {
+                            ctx.complete(
+                                &metrics,
+                                Output::Scalars(vec![v]),
+                                Route::Accelerator,
+                                &name,
+                                n,
+                                dispatched,
+                            );
+                        }
+                    }
+                    MassResult::Rows(out) => {
+                        for (ctx, r) in ctxs.into_iter().zip(out) {
+                            ctx.complete(
+                                &metrics,
+                                Output::Rows(vec![r]),
+                                Route::Accelerator,
+                                &name,
+                                n,
+                                dispatched,
+                            );
+                        }
+                    }
+                    MassResult::Stats { sum, .. } => {
+                        for (ctx, v) in ctxs.into_iter().zip(sum) {
+                            ctx.complete(
+                                &metrics,
+                                Output::Scalars(vec![v]),
+                                Route::Accelerator,
+                                &name,
+                                n,
+                                dispatched,
+                            );
                         }
                     }
                 }
             }
-            return;
-        }
-    };
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            AccelMsg::Stop => break,
-            AccelMsg::Batch { op, rows, scale_bias } => {
-                metrics.accel_batches.fetch_add(1, Relaxed);
-                metrics.accel_rows.fetch_add(rows.len() as u64, Relaxed);
-                let req = MassRequest {
-                    op,
-                    rows: rows.iter().map(|p| p.row.clone()).collect(),
-                    rows2: rows.iter().filter_map(|p| p.row2.clone()).collect(),
-                    scale_bias,
-                };
-                let done = Instant::now();
-                match accel.execute(&req) {
-                    Ok(MassResult::Scalars(vals)) => {
-                        for (p, v) in rows.into_iter().zip(vals) {
-                            metrics.completed.fetch_add(1, Relaxed);
-                            let _ = p.tag.reply.send((p.tag.id, Response::Scalars(vec![v]), done));
-                        }
-                    }
-                    Ok(MassResult::Rows(out)) => {
-                        for (p, r) in rows.into_iter().zip(out) {
-                            metrics.completed.fetch_add(1, Relaxed);
-                            let _ = p.tag.reply.send((p.tag.id, Response::Rows(vec![r]), done));
-                        }
-                    }
-                    Ok(MassResult::Stats { sum, .. }) => {
-                        for (p, v) in rows.into_iter().zip(sum) {
-                            metrics.completed.fetch_add(1, Relaxed);
-                            let _ = p.tag.reply.send((p.tag.id, Response::Scalars(vec![v]), done));
-                        }
-                    }
-                    Err(e) => {
-                        let msg = e.to_string();
-                        for p in rows {
-                            metrics.errors.fetch_add(1, Relaxed);
-                            let _ = p.tag.reply.send((p.tag.id, Response::Error(msg.clone()), done));
-                        }
-                    }
+            Err(e) => {
+                for ctx in ctxs {
+                    ctx.fail(&metrics, e.clone());
                 }
             }
         }
@@ -418,7 +815,6 @@ fn accel_worker(rx: Receiver<AccelMsg>, accel: AccelFactory, metrics: Arc<Fabric
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::accel::NativeAccel;
     use crate::workload::sumup::Mode;
 
     fn small_fabric() -> Arc<Fabric> {
@@ -427,7 +823,7 @@ mod tests {
             batcher: BatcherConfig { max_rows: 4, max_wait: Duration::from_millis(2) },
             ..Default::default()
         };
-        Fabric::start(cfg, Box::new(|| Ok(Box::new(NativeAccel) as Box<dyn crate::accel::Accelerator>)))
+        Fabric::start_local(cfg)
     }
 
     #[test]
@@ -436,24 +832,28 @@ mod tests {
         let h = f
             .submit(RequestKind::RunProgram { mode: Mode::Sumup, values: vec![1, 2, 3, 4] })
             .unwrap();
-        let (resp, _lat) = h.wait();
-        assert_eq!(resp, Response::Program { eax: 10, clocks: 36, cores: 5 });
+        let c = h.wait().unwrap();
+        assert_eq!(c.output, Output::Program { eax: 10, clocks: 36, cores: 5 });
+        assert_eq!(c.route, Route::Simulator);
+        assert_eq!(c.backend, "sim");
+        assert!(c.queue_latency <= c.latency);
         f.shutdown();
     }
 
     #[test]
     fn mass_ops_batched_and_answered() {
         let f = small_fabric();
-        let hs: Vec<JobHandle> = (0..8)
-            .map(|i| {
-                f.submit(RequestKind::MassSum { values: vec![i as f32; 200] }).unwrap()
-            })
+        let hs: Vec<Job> = (0..8)
+            .map(|i| f.submit(RequestKind::MassSum { values: vec![i as f32; 200] }).unwrap())
             .collect();
         for (i, h) in hs.into_iter().enumerate() {
-            let (resp, _) = h.wait();
-            assert_eq!(resp, Response::Scalars(vec![(i * 200) as f32]));
+            let c = h.wait().unwrap();
+            assert_eq!(c.output, Output::Scalars(vec![(i * 200) as f32]));
+            assert_eq!(c.route, Route::Accelerator);
+            assert_eq!(c.backend, "native");
+            assert!(c.batch_rows >= 1);
         }
-        assert!(f.metrics.accel_batches.load(std::sync::atomic::Ordering::Relaxed) >= 2);
+        assert!(f.metrics.accel_batches.load(Relaxed) >= 2);
         f.shutdown();
     }
 
@@ -461,10 +861,11 @@ mod tests {
     fn small_mass_ops_computed_inline() {
         let f = small_fabric();
         let h = f.submit(RequestKind::MassSum { values: vec![1.0, 2.0] }).unwrap();
-        let (resp, _) = h.wait();
-        assert_eq!(resp, Response::Scalars(vec![3.0]));
-        assert_eq!(f.metrics.routed_inline.load(std::sync::atomic::Ordering::Relaxed), 1);
-        assert_eq!(f.metrics.routed_accel.load(std::sync::atomic::Ordering::Relaxed), 0);
+        let c = h.wait().unwrap();
+        assert_eq!(c.output, Output::Scalars(vec![3.0]));
+        assert_eq!((c.route, c.backend.as_str(), c.batch_rows), (Route::Inline, "inline", 1));
+        assert_eq!(f.metrics.routed_inline.load(Relaxed), 1);
+        assert_eq!(f.metrics.routed_accel.load(Relaxed), 0);
         f.shutdown();
     }
 
@@ -472,12 +873,11 @@ mod tests {
     fn deadline_flush_completes_partial_batches() {
         // 3 rows < max_rows=4: only the deadline can flush them.
         let f = small_fabric();
-        let hs: Vec<JobHandle> = (0..3)
+        let hs: Vec<Job> = (0..3)
             .map(|_| f.submit(RequestKind::MassSum { values: vec![1.0; 128] }).unwrap())
             .collect();
         for h in hs {
-            let (resp, _) = h.wait();
-            assert_eq!(resp, Response::Scalars(vec![128.0]));
+            assert_eq!(h.wait().unwrap().output, Output::Scalars(vec![128.0]));
         }
         f.shutdown();
     }
@@ -490,9 +890,63 @@ mod tests {
             ..Default::default()
         })
         .generate();
-        let results = f.run_trace(trace);
+        let results = f.run_trace(trace).unwrap();
         assert_eq!(results.len(), 64);
-        assert!(results.iter().all(|(_, r, _)| !matches!(r, Response::Error(_))));
+        assert!(results.iter().all(|(_, r)| r.is_ok()));
         f.shutdown();
+    }
+
+    #[test]
+    fn high_priority_mass_jobs_flush_immediately() {
+        let cfg = FabricConfig {
+            sim_workers: 1,
+            // Size/deadline triggers effectively disabled: only priority
+            // (or shutdown) can flush.
+            batcher: BatcherConfig { max_rows: 1000, max_wait: Duration::from_secs(30) },
+            ..Default::default()
+        };
+        let f = Fabric::start_local(cfg);
+        let req = JobRequest::new(RequestKind::MassSum { values: vec![2.0; 128] })
+            .with_priority(Priority::High);
+        let h = f.submit(req).unwrap();
+        let c = h.wait().unwrap();
+        assert_eq!(c.output, Output::Scalars(vec![256.0]));
+        assert_eq!(f.metrics.priority_flushes.load(Relaxed), 1);
+        f.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_a_typed_error() {
+        let f = small_fabric();
+        f.shutdown();
+        let err = f.submit(RequestKind::MassSum { values: vec![1.0] }).unwrap_err();
+        assert_eq!(err, FabricError::Shutdown);
+        // run_trace propagates instead of panicking
+        let trace = crate::workload::TraceGen::new(crate::workload::TraceConfig {
+            num_requests: 4,
+            ..Default::default()
+        })
+        .generate();
+        assert_eq!(f.run_trace(trace).unwrap_err(), FabricError::Shutdown);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_response_shim_flattens_results() {
+        let ok: JobResult = Ok(Completion {
+            output: Output::Scalars(vec![1.0]),
+            route: Route::Inline,
+            backend: "inline".into(),
+            batch_rows: 1,
+            queue_latency: Duration::ZERO,
+            latency: Duration::ZERO,
+        });
+        assert_eq!(Response::from_result(&ok), Response::Scalars(vec![1.0]));
+        let err: JobResult = Err(FabricError::QueueFull);
+        let flat = Response::from_result(&err);
+        assert!(
+            !matches!(flat, Response::Scalars(_) | Response::Rows(_) | Response::Program { .. }),
+            "errors flatten to the legacy error variant: {flat:?}"
+        );
     }
 }

@@ -1,23 +1,13 @@
-//! Routing policy: which execution target serves a request.
+//! Routing policy: which execution lane serves a request.
 //!
 //! The policy encodes the paper's §2.4 offset-time argument: connecting
 //! work to an external accelerator is "only worth it for activities long
 //! enough to be not disproportional with that offset time". Short mass
 //! ops are computed inline by the leader; long ones go through the §3.8
-//! link; program jobs always go to the simulated EMPA processors.
+//! link to the mass-backend chain; program jobs always go to the
+//! program-class backends (the simulated EMPA pool).
 
-use crate::workload::RequestKind;
-
-/// Where a request is executed.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Target {
-    /// EMPA processor simulation pool.
-    Simulator,
-    /// Computed by the leader itself (below the accelerator threshold).
-    Inline,
-    /// The external accelerator behind the §3.8 link.
-    Accelerator,
-}
+use crate::api::{RequestKind, Route};
 
 /// Routing policy knobs.
 #[derive(Debug, Clone)]
@@ -33,21 +23,21 @@ impl Default for RoutePolicy {
 }
 
 /// Route one request.
-pub fn route(kind: &RequestKind, policy: &RoutePolicy) -> Target {
+pub fn route(kind: &RequestKind, policy: &RoutePolicy) -> Route {
     match kind {
-        RequestKind::RunProgram { .. } => Target::Simulator,
+        RequestKind::RunProgram { .. } => Route::Simulator,
         RequestKind::MassSum { values } => {
             if values.len() >= policy.accel_min_len {
-                Target::Accelerator
+                Route::Accelerator
             } else {
-                Target::Inline
+                Route::Inline
             }
         }
         RequestKind::MassDot { a, .. } => {
             if a.len() >= policy.accel_min_len {
-                Target::Accelerator
+                Route::Accelerator
             } else {
-                Target::Inline
+                Route::Inline
             }
         }
     }
@@ -62,21 +52,21 @@ mod tests {
     fn programs_always_simulate() {
         let p = RoutePolicy::default();
         let k = RequestKind::RunProgram { mode: Mode::No, values: vec![1] };
-        assert_eq!(route(&k, &p), Target::Simulator);
+        assert_eq!(route(&k, &p), Route::Simulator);
     }
 
     #[test]
     fn threshold_splits_mass_ops() {
         let p = RoutePolicy { accel_min_len: 10 };
-        assert_eq!(route(&RequestKind::MassSum { values: vec![0.0; 9] }, &p), Target::Inline);
-        assert_eq!(route(&RequestKind::MassSum { values: vec![0.0; 10] }, &p), Target::Accelerator);
+        assert_eq!(route(&RequestKind::MassSum { values: vec![0.0; 9] }, &p), Route::Inline);
+        assert_eq!(route(&RequestKind::MassSum { values: vec![0.0; 10] }, &p), Route::Accelerator);
         assert_eq!(
             route(&RequestKind::MassDot { a: vec![0.0; 10], b: vec![0.0; 10] }, &p),
-            Target::Accelerator
+            Route::Accelerator
         );
         assert_eq!(
             route(&RequestKind::MassDot { a: vec![0.0; 2], b: vec![0.0; 2] }, &p),
-            Target::Inline
+            Route::Inline
         );
     }
 }

@@ -7,19 +7,24 @@
 //!
 //! - **Layer 3 (this crate)** — the paper's contribution: a cycle-stepped
 //!   EMPA manycore simulator ([`empa`]) built on a Y86 toolchain substrate
-//!   ([`isa`], [`emu`]), plus the *EMPA fabric* service ([`coordinator`])
-//!   that routes work between simulated EMPA processors and an external
-//!   accelerator linked through the paper's §3.8 signal/data interface
-//!   ([`accel`]).
+//!   ([`isa`], [`emu`]), plus the *EMPA fabric* service: a typed service
+//!   API ([`api`]: requests, job handles, error taxonomy) over a
+//!   coordinator ([`coordinator`]) that routes work across a named
+//!   registry of backends — the simulated EMPA pool (`sim`), native mass
+//!   ops (`native`), and an external accelerator (`xla`) linked through
+//!   the paper's §3.8 signal/data interface ([`accel`]).
 //! - **Layer 2/1 (build-time Python)** — a JAX/Pallas mass-processing
 //!   accelerator, AOT-lowered to HLO text under `artifacts/`, loaded and
-//!   executed from Rust via PJRT ([`runtime`]). Python never runs on the
-//!   request path.
+//!   executed from Rust via PJRT ([`runtime`]; gated behind the
+//!   `xla-runtime` feature so the crate builds without the PJRT
+//!   bindings — the fabric then fails over from `xla` to `native`).
+//!   Python never runs on the request path.
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every table and figure of the paper to a module and bench.
 
 pub mod accel;
+pub mod api;
 pub mod coordinator;
 pub mod emu;
 pub mod empa;

@@ -14,7 +14,7 @@
 //! empa artifacts                   # list loaded AOT artifacts
 //! ```
 
-use empa::coordinator::{Fabric, FabricConfig, Response};
+use empa::coordinator::{BackendRegistry, Fabric, FabricConfig};
 use empa::empa::EmpaConfig;
 use empa::isa::{assemble, disassemble, loader};
 use empa::metrics::{fig4_series, fig5_series, fig6_series, table, table1};
@@ -255,19 +255,24 @@ fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(256);
-    let trace = TraceGen::new(TraceConfig { num_requests: n, ..Default::default() }).generate();
-    let fabric = Fabric::start(
-        FabricConfig::default(),
-        Box::new(|| {
-            let rt = Runtime::load_dir("artifacts")?;
-            Ok(Box::new(empa::accel::XlaAccel::new(rt)) as Box<dyn empa::accel::Accelerator>)
-        }),
-    );
+    let trace = TraceGen::new(TraceConfig {
+        num_requests: n,
+        client: Some("serve"),
+        ..Default::default()
+    })
+    .generate();
+    // Registry order is failover order: prefer the XLA accelerator, and
+    // degrade to the native loops when its runtime is unavailable.
+    let cfg = FabricConfig::default();
+    let fabric = Fabric::start(cfg.clone(), BackendRegistry::with_xla(cfg.empa, "artifacts"));
     let t0 = std::time::Instant::now();
-    let results = fabric.run_trace(trace);
+    let results = fabric.run_trace(trace)?;
     let wall = t0.elapsed();
-    let lat: Vec<f64> = results.iter().map(|(_, _, l)| l.as_secs_f64() * 1e6).collect();
-    let errors = results.iter().filter(|(_, r, _)| matches!(r, Response::Error(_))).count();
+    let lat: Vec<f64> = results
+        .iter()
+        .filter_map(|(_, r)| r.as_ref().ok().map(|c| c.latency.as_secs_f64() * 1e6))
+        .collect();
+    let errors = results.iter().filter(|(_, r)| r.is_err()).count();
     let s = empa::util::Summary::of(&lat);
     println!("fabric served {} requests in {:.1} ms ({:.0} req/s), {errors} errors  [E9]", results.len(), wall.as_secs_f64() * 1e3, results.len() as f64 / wall.as_secs_f64());
     println!("latency (us): {s}");

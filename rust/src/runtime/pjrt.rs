@@ -1,0 +1,119 @@
+//! The real PJRT-backed runtime (`--features xla-runtime`): compiles the
+//! HLO-text artifacts with the vendored `xla` crate and executes them on
+//! the CPU PJRT client.
+
+use super::{parse_manifest, ArtifactMeta, Tensor};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled executable plus its metadata.
+pub struct LoadedExec {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&t.data).reshape(&t.dims)?)
+}
+
+/// The PJRT runtime: one CPU client, one compiled executable per artifact.
+pub struct Runtime {
+    #[allow(dead_code)] // owns the PJRT client the executables run on
+    client: xla::PjRtClient,
+    execs: HashMap<String, LoadedExec>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `<dir>/manifest.tsv` and compile it.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let metas = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        let mut execs = HashMap::new();
+        for meta in metas {
+            let path = dir.join(format!("{}.hlo.txt", meta.name));
+            let exe = Self::compile_file(&client, &path)?;
+            execs.insert(meta.name.clone(), LoadedExec { meta, exe });
+        }
+        Ok(Runtime { client, execs, dir })
+    }
+
+    fn compile_file(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(|e| anyhow!("compiling {path:?}: {e}"))
+    }
+
+    /// Artifact directory this runtime was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Names of all loaded artifacts.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.execs.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Metadata of one artifact.
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.execs.get(name).map(|e| &e.meta)
+    }
+
+    /// Look up the artifact for (entry, bucket).
+    pub fn find(&self, entry: &str, b: usize, l: usize) -> Option<&str> {
+        self.execs
+            .values()
+            .find(|e| e.meta.entry == entry && e.meta.b == b && e.meta.l == l)
+            .map(|e| e.meta.name.as_str())
+    }
+
+    /// Buckets available for an entry, sorted ascending by (B, L).
+    pub fn buckets(&self, entry: &str) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .execs
+            .values()
+            .filter(|e| e.meta.entry == entry)
+            .map(|e| (e.meta.b, e.meta.l))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Execute one artifact on f32 inputs; returns the output tensors
+    /// (the module root is a tuple of `out_arity` arrays).
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let le = self.execs.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        if inputs.len() != le.meta.arity {
+            bail!("{name}: want {} inputs, got {}", le.meta.arity, inputs.len());
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = le
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let root = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch: {e}"))?;
+        let parts = root.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        if parts.len() != le.meta.out_arity {
+            bail!("{name}: manifest says {} outputs, got {}", le.meta.out_arity, parts.len());
+        }
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e}"))?;
+                let dims: Vec<i64> = shape.dims().to_vec();
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+                Ok(Tensor { dims, data })
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,51 @@
+//! Stub runtime compiled when the `xla-runtime` feature is off: the PJRT
+//! bindings are absent, so loading artifacts is impossible by
+//! construction. [`Runtime`] is uninhabited — every method other than
+//! [`Runtime::load_dir`] is statically unreachable — which lets all
+//! PJRT-consuming code (e.g. `accel::XlaAccel`) typecheck unchanged while
+//! the fabric's `xla` backend fails initialisation and the registry fails
+//! over to `native`.
+
+use super::{ArtifactMeta, Tensor};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Uninhabited placeholder for the PJRT runtime.
+pub enum Runtime {}
+
+impl Runtime {
+    /// Always errors: the crate was built without the `xla-runtime`
+    /// feature, so there is nothing to load artifacts with.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
+        Err(anyhow!(
+            "PJRT runtime unavailable: built without the `xla-runtime` feature \
+             (artifacts at {:?} cannot be loaded; vendor the `xla` crate and \
+             rebuild with `--features xla-runtime`)",
+            dir.as_ref()
+        ))
+    }
+
+    pub fn dir(&self) -> &Path {
+        match *self {}
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        match *self {}
+    }
+
+    pub fn meta(&self, _name: &str) -> Option<&ArtifactMeta> {
+        match *self {}
+    }
+
+    pub fn find(&self, _entry: &str, _b: usize, _l: usize) -> Option<&str> {
+        match *self {}
+    }
+
+    pub fn buckets(&self, _entry: &str) -> Vec<(usize, usize)> {
+        match *self {}
+    }
+
+    pub fn execute(&self, _name: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match *self {}
+    }
+}

@@ -1,10 +1,15 @@
 //! Workload generators: the paper's `asumup` program family (§5) in all
 //! three modes, plus synthetic request traces for the fabric coordinator.
+//!
+//! Workloads *generate* [`crate::api::JobRequest`]s; the request and
+//! response vocabulary itself belongs to the `api` module
+//! (`RequestKind` is re-exported here for convenience).
 
 pub mod dotprod;
 pub mod scale;
 pub mod sumup;
 pub mod traces;
 
+pub use crate::api::RequestKind;
 pub use sumup::{for_mode_program, no_mode_program, sumup_mode_program, Mode};
-pub use traces::{Request, RequestKind, TraceConfig, TraceGen};
+pub use traces::{Request, TraceConfig, TraceGen};

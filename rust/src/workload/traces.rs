@@ -2,29 +2,23 @@
 //!
 //! A trace mixes scalar QT jobs (run a sumup program on a simulated EMPA
 //! processor) with mass operations (batched vector reductions eligible for
-//! the §3.8 accelerator link), with exponential arrivals.
+//! the §3.8 accelerator link), with exponential arrivals. The request
+//! *types* live in [`crate::api`]; this module only generates them — a
+//! workload is a producer of [`JobRequest`]s, not a definer of the
+//! service vocabulary.
 
 use super::sumup::{self, Mode};
+use crate::api::{JobRequest, Priority, RequestKind};
 use crate::util::Rng;
+use std::time::Duration;
 
-/// What a fabric request asks for.
-#[derive(Debug, Clone, PartialEq)]
-pub enum RequestKind {
-    /// Simulate a sumup program in the given mode.
-    RunProgram { mode: Mode, values: Vec<i32> },
-    /// Mass operation over a vector (accelerator-eligible).
-    MassSum { values: Vec<f32> },
-    /// Mass dot product (accelerator-eligible, exercises the MXU path).
-    MassDot { a: Vec<f32>, b: Vec<f32> },
-}
-
-/// One request with its arrival offset.
+/// One generated request with its arrival offset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub id: u64,
     /// Arrival time offset from trace start, microseconds.
     pub arrival_us: u64,
-    pub kind: RequestKind,
+    pub job: JobRequest,
 }
 
 /// Trace generator parameters.
@@ -40,6 +34,12 @@ pub struct TraceConfig {
     pub mass_len: (usize, usize),
     /// Vector length range for program runs.
     pub program_len: (usize, usize),
+    /// Fraction of requests submitted at `Priority::High` (0..=1).
+    pub high_priority_fraction: f64,
+    /// Relative deadline stamped on every request (None: no deadlines).
+    pub deadline: Option<Duration>,
+    /// Client tag stamped on every request (per-client accounting).
+    pub client: Option<&'static str>,
 }
 
 impl Default for TraceConfig {
@@ -51,6 +51,9 @@ impl Default for TraceConfig {
             mass_fraction: 0.6,
             mass_len: (64, 1024),
             program_len: (1, 32),
+            high_priority_fraction: 0.0,
+            deadline: None,
+            client: None,
         }
     }
 }
@@ -75,7 +78,9 @@ impl TraceGen {
             let kind = if self.rng.bool(self.cfg.mass_fraction) {
                 let len = self.rng.range_usize(self.cfg.mass_len.0, self.cfg.mass_len.1);
                 if self.rng.bool(0.5) {
-                    RequestKind::MassSum { values: (0..len).map(|_| self.rng.range_f32(-1.0, 1.0)).collect() }
+                    RequestKind::MassSum {
+                        values: (0..len).map(|_| self.rng.range_f32(-1.0, 1.0)).collect(),
+                    }
                 } else {
                     RequestKind::MassDot {
                         a: (0..len).map(|_| self.rng.range_f32(-1.0, 1.0)).collect(),
@@ -89,9 +94,22 @@ impl TraceGen {
                     1 => Mode::For,
                     _ => Mode::Sumup,
                 };
-                RequestKind::RunProgram { mode, values: sumup::synth_vector(len, self.cfg.seed ^ id) }
+                RequestKind::RunProgram {
+                    mode,
+                    values: sumup::synth_vector(len, self.cfg.seed ^ id),
+                }
             };
-            out.push(Request { id, arrival_us: t, kind });
+            let mut job = JobRequest::new(kind);
+            if self.rng.bool(self.cfg.high_priority_fraction) {
+                job = job.with_priority(Priority::High);
+            }
+            if let Some(d) = self.cfg.deadline {
+                job = job.with_deadline(d);
+            }
+            if let Some(c) = self.cfg.client {
+                job = job.with_client(c);
+            }
+            out.push(Request { id, arrival_us: t, job });
         }
         out
     }
@@ -117,7 +135,9 @@ mod tests {
         let t = TraceGen::new(cfg).generate();
         let mass = t
             .iter()
-            .filter(|r| matches!(r.kind, RequestKind::MassSum { .. } | RequestKind::MassDot { .. }))
+            .filter(|r| {
+                matches!(r.job.kind, RequestKind::MassSum { .. } | RequestKind::MassDot { .. })
+            })
             .count();
         assert!((700..900).contains(&mass), "mass count {mass}");
     }
@@ -126,7 +146,7 @@ mod tests {
     fn mass_lengths_within_bounds() {
         let cfg = TraceConfig { num_requests: 200, mass_len: (16, 32), ..Default::default() };
         for r in TraceGen::new(cfg).generate() {
-            if let RequestKind::MassSum { values } = &r.kind {
+            if let RequestKind::MassSum { values } = &r.job.kind {
                 assert!((16..=32).contains(&values.len()));
             }
         }
@@ -138,7 +158,7 @@ mod tests {
         let t = TraceGen::new(cfg).generate();
         let mut seen = [false; 3];
         for r in &t {
-            if let RequestKind::RunProgram { mode, .. } = &r.kind {
+            if let RequestKind::RunProgram { mode, .. } = &r.job.kind {
                 seen[match mode {
                     Mode::No => 0,
                     Mode::For => 1,
@@ -147,5 +167,30 @@ mod tests {
             }
         }
         assert_eq!(seen, [true; 3]);
+    }
+
+    #[test]
+    fn contract_fields_stamped_when_configured() {
+        let cfg = TraceConfig {
+            num_requests: 100,
+            high_priority_fraction: 1.0,
+            deadline: Some(Duration::from_millis(50)),
+            client: Some("trace"),
+            ..Default::default()
+        };
+        for r in TraceGen::new(cfg).generate() {
+            assert_eq!(r.job.priority, Priority::High);
+            assert_eq!(r.job.deadline, Some(Duration::from_millis(50)));
+            assert_eq!(r.job.client.as_deref(), Some("trace"));
+        }
+    }
+
+    #[test]
+    fn defaults_leave_contract_neutral() {
+        for r in TraceGen::new(TraceConfig { num_requests: 20, ..Default::default() }).generate() {
+            assert_eq!(r.job.priority, Priority::Normal);
+            assert_eq!(r.job.deadline, None);
+            assert_eq!(r.job.client, None);
+        }
     }
 }

@@ -1,43 +1,55 @@
 //! Fabric coordinator integration: routing, batching, ordering,
-//! backpressure and failure behaviour with the native accelerator (the
-//! XLA path is covered in `runtime_accel.rs`).
+//! backpressure, deadlines, cancellation, and backend failover with the
+//! native accelerator (the XLA path is covered in `runtime_accel.rs`).
+//!
+//! Failures are asserted on `FabricError` *variants* — the typed taxonomy
+//! is the contract, not message strings.
 
 use empa::accel::{Accelerator, BatcherConfig, MassRequest, MassResult, NativeAccel};
-use empa::coordinator::{Fabric, FabricConfig, Response};
+use empa::api::{FabricError, Job, JobRequest, Output, Priority, RequestKind, Route};
+use empa::coordinator::{Backend, BackendClass, BackendRegistry, Fabric, FabricConfig, SimBackend};
+use empa::empa::EmpaConfig;
 use empa::util::Rng;
 use empa::workload::sumup::Mode;
-use empa::workload::{RequestKind, TraceConfig, TraceGen};
+use empa::workload::{TraceConfig, TraceGen};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-fn native_factory() -> empa::accel::AccelFactory {
-    Box::new(|| Ok(Box::new(NativeAccel) as Box<dyn Accelerator>))
+fn fabric(cfg: FabricConfig) -> Arc<Fabric> {
+    Fabric::start_local(cfg)
 }
 
-fn fabric(cfg: FabricConfig) -> Arc<Fabric> {
-    Fabric::start(cfg, native_factory())
+/// A registry with only the sim pool; tests append their own mass chain.
+fn sim_registry(empa_cfg: EmpaConfig) -> BackendRegistry {
+    BackendRegistry::new().register(
+        "sim",
+        BackendClass::Program,
+        Box::new(move || Ok(Box::new(SimBackend::new(empa_cfg.clone())) as Box<dyn Backend>)),
+    )
 }
 
 #[test]
 fn trace_results_match_direct_computation() {
     let f = fabric(FabricConfig::default());
-    let trace = TraceGen::new(TraceConfig { num_requests: 128, seed: 9, ..Default::default() }).generate();
+    let trace =
+        TraceGen::new(TraceConfig { num_requests: 128, seed: 9, ..Default::default() }).generate();
     let expected: Vec<Option<f32>> = trace
         .iter()
-        .map(|r| match &r.kind {
+        .map(|r| match &r.job.kind {
             RequestKind::MassSum { values } => Some(values.iter().sum()),
             RequestKind::MassDot { a, b } => Some(a.iter().zip(b).map(|(x, y)| x * y).sum()),
             RequestKind::RunProgram { .. } => None,
         })
         .collect();
-    let results = f.run_trace(trace);
-    for ((_, resp, _), want) in results.iter().zip(expected) {
-        match (resp, want) {
-            (Response::Scalars(got), Some(w)) => {
+    let results = f.run_trace(trace).unwrap();
+    for ((_, res), want) in results.iter().zip(expected) {
+        let c = res.as_ref().expect("all jobs complete");
+        match (&c.output, want) {
+            (Output::Scalars(got), Some(w)) => {
                 assert!((got[0] - w).abs() < 1e-2 * (1.0 + w.abs()), "{got:?} vs {w}")
             }
-            (Response::Program { .. }, None) => {}
+            (Output::Program { .. }, None) => {}
             other => panic!("unexpected pairing: {other:?}"),
         }
     }
@@ -52,8 +64,9 @@ fn program_responses_carry_table1_numbers() {
         let h = f
             .submit(RequestKind::RunProgram { mode, values: vec![0xd, 0xc0, 0xb00, 0xa000] })
             .unwrap();
-        let (resp, _) = h.wait();
-        assert_eq!(resp, Response::Program { eax: 0xd + 0xc0 + 0xb00 + 0xa000, clocks, cores });
+        let c = h.wait().unwrap();
+        assert_eq!(c.output, Output::Program { eax: 0xd + 0xc0 + 0xb00 + 0xa000, clocks, cores });
+        assert_eq!((c.route, c.backend.as_str()), (Route::Simulator, "sim"));
     }
     f.shutdown();
 }
@@ -69,23 +82,29 @@ fn batching_aggregates_under_load() {
         .map(|i| f.submit(RequestKind::MassSum { values: vec![1.0; 100 + i] }).unwrap())
         .collect();
     for (i, h) in handles.into_iter().enumerate() {
-        let (resp, _) = h.wait();
-        assert_eq!(resp, Response::Scalars(vec![(100 + i) as f32]));
+        let c = h.wait().unwrap();
+        assert_eq!(c.output, Output::Scalars(vec![(100 + i) as f32]));
+        assert!(c.batch_rows >= 1 && c.batch_rows <= 8, "batch metadata: {}", c.batch_rows);
     }
     let batches = f.metrics.accel_batches.load(Ordering::Relaxed);
     assert!(batches >= 8, "64 rows / max 8 per batch: {batches}");
     assert!(f.metrics.mean_batch_rows() > 1.0, "batching actually aggregates");
+    // per-backend accounting matches the global counters
+    let native = f.metrics.backend("native");
+    assert_eq!(native.batches.load(Ordering::Relaxed), batches);
+    assert_eq!(native.rows.load(Ordering::Relaxed), 64);
     f.shutdown();
 }
 
 #[test]
 fn responses_route_back_to_the_right_requester() {
-    // Interleave many concurrent clients, each verifying its own answer.
+    // Interleave many concurrent clients, each verifying its own answer
+    // through its own cloned FabricClient.
     let f = fabric(FabricConfig::default());
     let errors = Arc::new(AtomicU64::new(0));
     std::thread::scope(|s| {
         for t in 0..8 {
-            let f = Arc::clone(&f);
+            let client = f.client().tagged(format!("t{t}"));
             let errors = Arc::clone(&errors);
             s.spawn(move || {
                 let mut rng = Rng::seed_from_u64(t);
@@ -93,11 +112,16 @@ fn responses_route_back_to_the_right_requester() {
                     let len = rng.range_usize(64, 512);
                     let vals: Vec<f32> = (0..len).map(|_| rng.range_f32(-1.0, 1.0)).collect();
                     let want: f32 = vals.iter().sum();
-                    let h = f.submit(RequestKind::MassSum { values: vals }).unwrap();
-                    let (resp, _) = h.wait();
-                    match resp {
-                        Response::Scalars(got) if (got[0] - want).abs() < 1e-3 * (1.0 + want.abs()) => {}
-                        _ => {
+                    let h = client.submit(RequestKind::MassSum { values: vals }).unwrap();
+                    match h.wait() {
+                        Ok(c) => match c.output {
+                            Output::Scalars(got)
+                                if (got[0] - want).abs() < 1e-3 * (1.0 + want.abs()) => {}
+                            _ => {
+                                errors.fetch_add(1, Ordering::Relaxed);
+                            }
+                        },
+                        Err(_) => {
                             errors.fetch_add(1, Ordering::Relaxed);
                         }
                     }
@@ -106,11 +130,15 @@ fn responses_route_back_to_the_right_requester() {
         }
     });
     assert_eq!(errors.load(Ordering::Relaxed), 0);
+    // per-client accounting saw every tagged submission
+    for t in 0..8 {
+        assert_eq!(f.metrics.client(&format!("t{t}")).load(Ordering::Relaxed), 50);
+    }
     f.shutdown();
 }
 
 #[test]
-fn accelerator_failure_reports_errors_not_hangs() {
+fn backend_failure_is_a_typed_error_not_a_hang() {
     struct Broken;
     impl Accelerator for Broken {
         fn name(&self) -> &str {
@@ -120,26 +148,180 @@ fn accelerator_failure_reports_errors_not_hangs() {
             anyhow::bail!("simulated accelerator failure")
         }
     }
-    let f = Fabric::start(
-        FabricConfig::default(),
-        Box::new(|| Ok(Box::new(Broken) as Box<dyn Accelerator>)),
-    );
+    let cfg = FabricConfig::default();
+    // `broken` is the whole mass chain: no failover entry to hide behind.
+    let registry = sim_registry(cfg.empa.clone())
+        .register_accel("broken", || Ok(Box::new(Broken) as Box<dyn Accelerator>));
+    let f = Fabric::start(cfg, registry);
     let h = f.submit(RequestKind::MassSum { values: vec![1.0; 512] }).unwrap();
-    let (resp, _) = h.wait();
-    assert!(matches!(resp, Response::Error(e) if e.contains("simulated")));
+    match h.wait() {
+        Err(FabricError::Backend { name, msg }) => {
+            assert_eq!(name, "broken");
+            assert!(msg.contains("simulated"));
+        }
+        other => panic!("want Backend error, got {other:?}"),
+    }
     assert_eq!(f.metrics.errors.load(Ordering::Relaxed), 1);
     // subsequent small (inline) requests still work
     let h = f.submit(RequestKind::MassSum { values: vec![2.0, 3.0] }).unwrap();
-    assert_eq!(h.wait().0, Response::Scalars(vec![5.0]));
+    assert_eq!(h.wait().unwrap().output, Output::Scalars(vec![5.0]));
     f.shutdown();
 }
 
 #[test]
-fn accelerator_init_failure_degrades_gracefully() {
-    let f = Fabric::start(FabricConfig::default(), Box::new(|| anyhow::bail!("no device")));
-    let h = f.submit(RequestKind::MassSum { values: vec![1.0; 512] }).unwrap();
-    let (resp, _) = h.wait();
-    assert!(matches!(resp, Response::Error(e) if e.contains("accelerator init")));
+fn xla_init_failure_fails_over_to_native() {
+    // A failing `xla` factory ahead of `native`: every mass job must
+    // still complete via failover, with zero error responses and the
+    // degradation visible in per-backend metrics.
+    let cfg = FabricConfig::default();
+    // registration order is failover order: the failing xla comes first
+    let registry = sim_registry(cfg.empa.clone())
+        .register_accel("xla", || anyhow::bail!("no PJRT device"))
+        .register_accel("native", || Ok(Box::new(NativeAccel) as Box<dyn Accelerator>));
+    let f = Fabric::start(cfg, registry);
+    let handles: Vec<_> = (0..32)
+        .map(|i| f.submit(RequestKind::MassSum { values: vec![1.0; 128 + i] }).unwrap())
+        .collect();
+    for (i, h) in handles.into_iter().enumerate() {
+        let c = h.wait().expect("failover answers every mass job");
+        assert_eq!(c.output, Output::Scalars(vec![(128 + i) as f32]));
+        assert_eq!(c.backend, "native", "served by the failover backend");
+    }
+    assert_eq!(f.metrics.errors.load(Ordering::Relaxed), 0);
+    assert_eq!(f.metrics.backend("xla").init_failures.load(Ordering::Relaxed), 1);
+    assert!(f.metrics.backend("native").batches.load(Ordering::Relaxed) >= 1);
+    assert!(f.metrics.failovers.load(Ordering::Relaxed) >= 1);
+    assert!(f.metrics.render().contains("backend xla"));
+    f.shutdown();
+}
+
+#[test]
+fn try_submit_reports_queue_full_under_saturation() {
+    // Tiny queues + one worker chewing a long program: the ingress queue
+    // must eventually refuse work with a typed QueueFull, not block.
+    let cfg = FabricConfig {
+        sim_workers: 1,
+        queue_cap: 1,
+        ..Default::default()
+    };
+    let f = fabric(cfg);
+    let slow = || RequestKind::RunProgram {
+        mode: Mode::Sumup,
+        values: (0..1_000).map(|i| i % 7).collect(),
+    };
+    let mut accepted: Vec<Job> = Vec::new();
+    let mut saw_full = false;
+    for _ in 0..256 {
+        match f.try_submit(slow()) {
+            Ok(j) => accepted.push(j),
+            Err(FabricError::QueueFull) => {
+                saw_full = true;
+                break;
+            }
+            Err(other) => panic!("unexpected error: {other:?}"),
+        }
+    }
+    assert!(saw_full, "saturated fabric must reject with QueueFull");
+    assert!(f.metrics.rejected.load(Ordering::Relaxed) >= 1);
+    // accepted jobs all still complete (backpressure, not loss)
+    for j in accepted {
+        assert!(matches!(j.wait().unwrap().output, Output::Program { .. }));
+    }
+    f.shutdown();
+}
+
+#[test]
+fn wait_timeout_expires_then_job_completes() {
+    // Batcher flushes only on shutdown: the job is parked, so a bounded
+    // wait must expire with None while the handle stays usable.
+    let cfg = FabricConfig {
+        batcher: BatcherConfig { max_rows: 1000, max_wait: Duration::from_secs(30) },
+        ..Default::default()
+    };
+    let f = fabric(cfg);
+    let mut h = f.submit(RequestKind::MassSum { values: vec![1.0; 256] }).unwrap();
+    assert!(h.try_wait().is_none(), "job is parked in the batcher");
+    assert!(h.wait_timeout(Duration::from_millis(30)).is_none(), "bounded wait expires");
+    f.shutdown(); // drains the batcher, completing the job
+    match h.wait_timeout(Duration::from_secs(5)) {
+        Some(Ok(c)) => assert_eq!(c.output, Output::Scalars(vec![256.0])),
+        other => panic!("want completion after drain, got {other:?}"),
+    }
+}
+
+#[test]
+fn cancel_before_dispatch_resolves_cancelled() {
+    let cfg = FabricConfig {
+        batcher: BatcherConfig { max_rows: 1000, max_wait: Duration::from_secs(30) },
+        ..Default::default()
+    };
+    let f = fabric(cfg);
+    let h = f.submit(RequestKind::MassSum { values: vec![1.0; 256] }).unwrap();
+    h.cancel();
+    f.shutdown(); // drain observes the cancel flag before dispatch
+    assert_eq!(h.wait(), Err(FabricError::Cancelled));
+    assert_eq!(f.metrics.cancelled.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn missed_deadline_resolves_deadline_exceeded() {
+    let cfg = FabricConfig {
+        batcher: BatcherConfig { max_rows: 1000, max_wait: Duration::from_secs(30) },
+        ..Default::default()
+    };
+    let f = fabric(cfg);
+    let req = JobRequest::new(RequestKind::MassSum { values: vec![1.0; 256] })
+        .with_deadline(Duration::from_millis(1));
+    let h = f.submit(req).unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    f.shutdown(); // drain happens well past the deadline
+    assert_eq!(h.wait(), Err(FabricError::DeadlineExceeded));
+    assert_eq!(f.metrics.deadline_missed.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn submit_batch_returns_ordered_handles() {
+    let f = fabric(FabricConfig::default());
+    let reqs: Vec<JobRequest> = (1..=16)
+        .map(|i| JobRequest::new(RequestKind::MassSum { values: vec![1.0; 64 * i] }))
+        .collect();
+    let jobs = f.client().submit_batch(reqs).unwrap();
+    assert_eq!(jobs.len(), 16);
+    for (i, j) in jobs.into_iter().enumerate() {
+        assert_eq!(j.wait().unwrap().output, Output::Scalars(vec![(64 * (i + 1)) as f32]));
+    }
+    f.shutdown();
+}
+
+#[test]
+fn high_priority_overtakes_staged_low_priority() {
+    // One worker + a stack of Low jobs, then one High: the High job's
+    // handle must resolve even though it arrived last (priority staging),
+    // and everything completes.
+    let f = fabric(FabricConfig { sim_workers: 1, ..Default::default() });
+    let low: Vec<Job> = (0..8)
+        .map(|_| {
+            f.submit(
+                JobRequest::new(RequestKind::RunProgram {
+                    mode: Mode::No,
+                    values: (0..1_000).map(|i| i % 5).collect(),
+                })
+                .with_priority(Priority::Low),
+            )
+            .unwrap()
+        })
+        .collect();
+    let high = f
+        .submit(
+            JobRequest::new(RequestKind::RunProgram { mode: Mode::Sumup, values: vec![1, 2, 3, 4] })
+                .with_priority(Priority::High),
+        )
+        .unwrap();
+    let c = high.wait().unwrap();
+    assert_eq!(c.output, Output::Program { eax: 10, clocks: 36, cores: 5 });
+    for j in low {
+        assert!(j.wait().is_ok());
+    }
     f.shutdown();
 }
 
@@ -157,9 +339,20 @@ fn shutdown_completes_inflight_work() {
     std::thread::sleep(Duration::from_millis(20));
     f.shutdown();
     for h in hs {
-        let (resp, _) = h.wait();
-        assert_eq!(resp, Response::Scalars(vec![256.0]));
+        assert_eq!(h.wait().unwrap().output, Output::Scalars(vec![256.0]));
     }
+}
+
+#[test]
+fn shutdown_scales_past_the_old_stop_broadcast_limit() {
+    // The seed broadcast 64 Stop messages; worker counts above that used
+    // to hang shutdown. Per-worker stop (sender drop) must not.
+    let f = fabric(FabricConfig { sim_workers: 96, ..Default::default() });
+    let h = f
+        .submit(RequestKind::RunProgram { mode: Mode::Sumup, values: vec![1, 2, 3, 4] })
+        .unwrap();
+    assert!(h.wait().is_ok());
+    f.shutdown(); // must return (joins all 96 workers)
 }
 
 #[test]
@@ -168,14 +361,13 @@ fn throughput_scales_with_sim_workers() {
     // in parallel (4 workers must not be slower than 1).
     let run = |workers: usize| {
         let f = fabric(FabricConfig { sim_workers: workers, ..Default::default() });
-        let trace: Vec<RequestKind> = (0..64)
+        let kinds: Vec<RequestKind> = (0..64)
             .map(|_| RequestKind::RunProgram { mode: Mode::No, values: (0..400).collect() })
             .collect();
         let t0 = std::time::Instant::now();
-        let hs: Vec<_> = trace.into_iter().map(|k| f.submit(k).unwrap()).collect();
+        let hs: Vec<_> = kinds.into_iter().map(|k| f.submit(k).unwrap()).collect();
         for h in hs {
-            let (resp, _) = h.wait();
-            assert!(matches!(resp, Response::Program { .. }));
+            assert!(matches!(h.wait().unwrap().output, Output::Program { .. }));
         }
         let dt = t0.elapsed();
         f.shutdown();

@@ -154,18 +154,22 @@ fn oversized_requests_are_rejected_not_truncated() {
 #[test]
 fn fabric_with_xla_accelerator_end_to_end() {
     let dir = require_artifacts!();
-    use empa::coordinator::{Fabric, FabricConfig};
-    use empa::workload::RequestKind;
-    let fabric = Fabric::start(
-        FabricConfig::default(),
-        Box::new(move || Ok(Box::new(XlaAccel::new(Runtime::load_dir(&dir)?)) as Box<dyn Accelerator>)),
-    );
+    use empa::api::{Output, RequestKind, Route};
+    use empa::coordinator::{BackendRegistry, Fabric, FabricConfig};
+    let cfg = FabricConfig::default();
+    // `xla` first, `native` as failover — with the artifacts present and
+    // the PJRT runtime compiled in, xla serves; otherwise the job still
+    // completes via the failover chain.
+    let registry =
+        BackendRegistry::with_xla(cfg.empa.clone(), dir.to_str().expect("utf8 path"));
+    let fabric = Fabric::start(cfg, registry);
     let mut rng = Rng::seed_from_u64(3);
     let vals: Vec<f32> = (0..512).map(|_| rng.range_f32(-1.0, 1.0)).collect();
     let want: f32 = vals.iter().sum();
     let h = fabric.submit(RequestKind::MassSum { values: vals }).unwrap();
-    let (resp, _) = h.wait();
-    let empa::coordinator::Response::Scalars(got) = resp else { panic!("{resp:?}") };
+    let c = h.wait().expect("mass job completes");
+    assert_eq!(c.route, Route::Accelerator);
+    let Output::Scalars(got) = c.output else { panic!("{:?}", c.output) };
     assert!((got[0] - want).abs() < 1e-3);
     fabric.shutdown();
 }
