@@ -1,12 +1,16 @@
 //! E9 — the end-to-end driver: the full three-layer system serving a
 //! real mixed workload through the typed service API.
 //!
-//! Layer 3 (this binary): the EMPA fabric coordinator routes a synthetic
-//! trace of scalar-program jobs and mass operations; program jobs run on
-//! the simulated EMPA processors (`sim` backend), large mass ops are
-//! dynamically batched into bucket tiles and executed by the mass-backend
-//! chain — `xla` (the Layer-2/1 JAX+Pallas graph through PJRT) with
-//! `native` as the registry failover. Python is not running anywhere.
+//! Layer 3 (this binary): the EMPA fabric supervisor routes a synthetic
+//! trace of scalar-program jobs and mass operations; program jobs are
+//! placed on the dispatch plane's per-worker deques (idle workers steal
+//! neighbours' staged work) and run on the simulated EMPA processors
+//! (`sim` backend); large mass ops are dynamically batched into bucket
+//! tiles and executed by the mass-backend chain — `xla` (the Layer-2/1
+//! JAX+Pallas graph through PJRT) with `native` as the registry
+//! failover; oversized mass ops are scattered across idle sim workers
+//! and gathered by a parent-side accumulator. Python is not running
+//! anywhere.
 //!
 //! Reports throughput and latency percentiles, verifies every mass result
 //! against the native oracle, and prints the routing/batching/per-backend
@@ -111,6 +115,12 @@ fn main() -> anyhow::Result<()> {
     println!("program latency  (us): {}", Summary::of(&prog_lat));
     println!("queue latency    (us): {}", Summary::of(&queue_lat));
     println!("routing/batching     : {}", fabric.metrics.render());
+    println!(
+        "dispatch plane       : {} workers, {} placements, {} steals",
+        fabric.metrics.worker_count(),
+        fabric.metrics.total_placements(),
+        fabric.metrics.total_steals(),
+    );
     fabric.shutdown();
     anyhow::ensure!(errors == 0, "{errors} mismatches against the native oracle");
     println!("\nall responses verified against the native oracle ✓");

@@ -1,16 +1,18 @@
 //! Bench E9 — end-to-end fabric throughput/latency over the mixed trace,
 //! with ablations over the design choices DESIGN.md calls out: sim-pool
-//! width, batch size, and mass-backend choice (native vs the xla→native
-//! failover chain).
+//! width, batch size, mass-backend choice (native vs the xla→native
+//! failover chain), and the dispatch plane's inline-latency isolation
+//! under a saturated program lane.
 
 #[path = "bench_util.rs"]
 mod bench_util;
 
 use bench_util::section;
 use empa::accel::BatcherConfig;
-use empa::api::RequestKind;
+use empa::api::{Job, RequestKind};
 use empa::coordinator::{BackendRegistry, Fabric, FabricConfig};
 use empa::util::Summary;
+use empa::workload::sumup::Mode;
 use empa::workload::{TraceConfig, TraceGen};
 use std::time::{Duration, Instant};
 
@@ -71,6 +73,39 @@ fn main() {
             max_rows, thru, lat.p50, lat.p99, rows
         );
     }
+
+    section("E9: inline latency vs program-lane saturation (dispatch plane)");
+    // Probe the inline lane twice: on an idle fabric, then with the
+    // program lane saturated past queue_cap (2 workers chewing a deep
+    // staged backlog). With per-worker deques the supervisor keeps
+    // ingesting, so inline latency must stay flat.
+    let probe = |f: &Fabric, n: usize| -> Summary {
+        let lats: Vec<f64> = (0..n)
+            .map(|_| {
+                let h = f.submit(RequestKind::MassSum { values: vec![1.0; 8] }).unwrap();
+                h.wait().unwrap().latency.as_secs_f64() * 1e6
+            })
+            .collect();
+        Summary::of(&lats)
+    };
+    let slow = || RequestKind::RunProgram {
+        mode: Mode::No,
+        values: (0..400).map(|i| i % 5).collect(),
+    };
+    let cfg = FabricConfig { sim_workers: 2, queue_cap: 64, ..Default::default() };
+    let registry = BackendRegistry::local(cfg.empa.clone());
+    let f = Fabric::start(cfg, registry);
+    let idle = probe(&f, 64);
+    let backlog: Vec<Job> = (0..96).map(|_| f.submit(slow()).unwrap()).collect();
+    let saturated = probe(&f, 64);
+    let staged_depth = f.metrics.total_queue_depth();
+    for j in backlog {
+        let _ = j.wait();
+    }
+    let steals = f.metrics.total_steals();
+    f.shutdown();
+    println!("inline idle      (us): {idle}");
+    println!("inline saturated (us): {saturated}  [staged depth {staged_depth}, steals {steals}]");
 
     if has_artifacts {
         section("E9: xla→native backend chain behind the §3.8 link (4 workers)");

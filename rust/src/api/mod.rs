@@ -110,6 +110,10 @@ pub enum FabricError {
     DeadlineExceeded,
     /// The job was cancelled via [`Job::cancel`] before dispatch.
     Cancelled,
+    /// A mass-dot request's operands disagree in length. Rejected at
+    /// submission, before the job reaches any queue — a silently
+    /// truncated dot product is a wrong answer, not a service result.
+    ShapeMismatch { a: usize, b: usize },
     /// The guest program faulted (or failed to assemble) on the simulated
     /// EMPA processor.
     GuestFault(String),
@@ -125,6 +129,9 @@ impl std::fmt::Display for FabricError {
             FabricError::QueueFull => write!(f, "fabric queue full (admission control)"),
             FabricError::DeadlineExceeded => write!(f, "deadline exceeded before dispatch"),
             FabricError::Cancelled => write!(f, "job cancelled before dispatch"),
+            FabricError::ShapeMismatch { a, b } => {
+                write!(f, "mass-dot operands disagree in length: a has {a}, b has {b}")
+            }
             FabricError::GuestFault(m) => write!(f, "guest fault: {m}"),
             FabricError::Backend { name, msg } => write!(f, "backend `{name}`: {msg}"),
             FabricError::Shutdown => write!(f, "fabric is shut down"),
@@ -147,6 +154,10 @@ pub enum Route {
     Inline,
     /// A mass-op backend behind the §3.8 link.
     Accelerator,
+    /// Oversized mass op, chunked across idle sim workers and recombined
+    /// by a parent-side accumulator (the §5.2 SUMUP engine lifted to the
+    /// service layer).
+    Split,
 }
 
 /// Successful job output.
@@ -183,6 +194,9 @@ pub struct Completion {
     /// Rows in the accelerator batch this job rode in (1 off the batch
     /// path).
     pub batch_rows: usize,
+    /// Sim-worker shards this mass op was scattered across (1 off the
+    /// [`Route::Split`] path).
+    pub shards: usize,
     /// Submission → dispatch-to-backend.
     pub queue_latency: Duration,
     /// Submission → completion.
@@ -292,6 +306,7 @@ mod tests {
             route: Route::Inline,
             backend: "inline".into(),
             batch_rows: 1,
+            shards: 1,
             queue_latency: Duration::ZERO,
             latency: Duration::ZERO,
         }
@@ -351,6 +366,8 @@ mod tests {
         let e = FabricError::Backend { name: "xla".into(), msg: "no device".into() };
         assert!(e.to_string().contains("xla"));
         assert!(FabricError::QueueFull.to_string().contains("queue full"));
+        let e = FabricError::ShapeMismatch { a: 3, b: 5 }.to_string();
+        assert!(e.contains('3') && e.contains('5'), "{e}");
     }
 
     #[test]

@@ -207,8 +207,9 @@ impl Backend for SimBackend {
                     Some(f) => Err(FabricError::GuestFault(f)),
                 }
             }
-            // Mass work never routes here; serve it with the native loops
-            // rather than erroring (a sim core is a conventional core too).
+            // Mass work lands here as scattered shards of oversized ops
+            // (and, defensively, whole ops): serve it with the native
+            // loops — a sim core is a conventional core too.
             BackendJob::Mass(req) => NativeAccel
                 .execute(req)
                 .map(BackendReply::Mass)

@@ -7,7 +7,7 @@
 //! can hold its own.
 
 use super::{JobCtx, Msg};
-use crate::api::{FabricError, Job, JobRequest};
+use crate::api::{FabricError, Job, JobRequest, RequestKind};
 use crate::coordinator::FabricMetrics;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, SyncSender, TrySendError};
@@ -22,11 +22,18 @@ pub struct FabricClient {
     metrics: Arc<FabricMetrics>,
     /// Default client tag stamped onto requests that carry none.
     tag: Option<Arc<str>>,
+    /// Shared stop flag: lets the supervisor notice shutdown without
+    /// first chewing through the ingress backlog.
+    stop: Arc<AtomicBool>,
 }
 
 impl FabricClient {
-    pub(crate) fn new(tx: SyncSender<Msg>, metrics: Arc<FabricMetrics>) -> Self {
-        FabricClient { tx, next_id: Arc::new(AtomicU64::new(0)), metrics, tag: None }
+    pub(crate) fn new(
+        tx: SyncSender<Msg>,
+        metrics: Arc<FabricMetrics>,
+        stop: Arc<AtomicBool>,
+    ) -> Self {
+        FabricClient { tx, next_id: Arc::new(AtomicU64::new(0)), metrics, tag: None, stop }
     }
 
     /// A clone that stamps `tag` onto untagged requests (per-client
@@ -43,7 +50,9 @@ impl FabricClient {
     /// Submit a job; blocks while the ingress queue is full
     /// (backpressure the caller can feel).
     pub fn submit(&self, req: impl Into<JobRequest>) -> Result<Job, FabricError> {
-        let (msg, job, tag) = self.prepare(req.into());
+        let req = req.into();
+        validate(&req)?;
+        let (msg, job, tag) = self.prepare(req);
         self.tx.send(msg).map_err(|_| FabricError::Shutdown)?;
         self.account(tag.as_deref());
         Ok(job)
@@ -53,7 +62,9 @@ impl FabricClient {
     /// [`FabricError::QueueFull`] the caller observes immediately instead
     /// of a stalled thread.
     pub fn try_submit(&self, req: impl Into<JobRequest>) -> Result<Job, FabricError> {
-        let (msg, job, tag) = self.prepare(req.into());
+        let req = req.into();
+        validate(&req)?;
+        let (msg, job, tag) = self.prepare(req);
         match self.tx.try_send(msg) {
             Ok(()) => {
                 self.account(tag.as_deref());
@@ -82,8 +93,12 @@ impl FabricClient {
         Ok(jobs)
     }
 
-    /// Ask the router to stop (used by `Fabric::shutdown`).
+    /// Ask the supervisor to stop (used by `Fabric::shutdown`). The flag
+    /// lets it notice even while the ingress backlog is deep; the
+    /// sentinel message marks where accepted work ends and wakes a
+    /// blocked receive.
     pub(crate) fn shutdown_signal(&self) -> Result<(), FabricError> {
+        self.stop.store(true, Ordering::Release);
         self.tx.send(Msg::Shutdown).map_err(|_| FabricError::Shutdown)
     }
 
@@ -114,4 +129,16 @@ impl FabricClient {
         let job = Job::new(id, submitted, cancel, reply_rx);
         (Msg::Job { kind: req.kind, ctx }, job, tag)
     }
+}
+
+/// Reject malformed requests before they reach any queue. A mismatched
+/// mass-dot used to be silently truncated by `iter().zip()` downstream —
+/// a wrong answer instead of an error.
+fn validate(req: &JobRequest) -> Result<(), FabricError> {
+    if let RequestKind::MassDot { a, b } = &req.kind {
+        if a.len() != b.len() {
+            return Err(FabricError::ShapeMismatch { a: a.len(), b: b.len() });
+        }
+    }
+    Ok(())
 }

@@ -1,0 +1,382 @@
+//! The supervisor dispatch plane: per-worker bounded deques with
+//! neighbour work-stealing.
+//!
+//! The paper's central mechanism is that a core, "using the help of the
+//! supervisor", outsources part of its job to a neighbouring core. The
+//! seed fabric approximated the sim pool with one shared
+//! `Arc<Mutex<Receiver>>` queue — a lock convoy the supervisor layer
+//! exists to avoid. This module replaces it with the distributed shape
+//! the EMPA-parallelism companion work describes:
+//!
+//! - every worker owns a **bounded deque** (its staged backlog);
+//! - the supervisor **places** each job on the least-loaded deque
+//!   (§4.1.3's one-allocation-per-control-tick pacing);
+//! - an idle worker first drains its own deque, then **steals** the
+//!   highest-priority staged entry from a neighbour's deque (ring
+//!   order), so a busy worker's backlog is redistributed instead of
+//!   serialising behind it — and priority order holds no matter which
+//!   worker ends up serving;
+//! - per-worker depth gauges plus placement/steal counters are published
+//!   through [`FabricMetrics`](super::FabricMetrics) so the
+//!   redistribution is observable.
+//!
+//! The plane is generic over the task type: the coordinator instantiates
+//! it with `SimTask` (program jobs and mass-op shards), the unit tests
+//! with plain integers.
+
+use super::metrics::{FabricMetrics, WorkerStats};
+use crate::api::Priority;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// One staged entry: the task plus the priority that ordered it.
+struct Entry<T> {
+    priority: Priority,
+    item: T,
+}
+
+/// One worker's bounded deque. The lane's depth gauge lives in its
+/// [`WorkerStats`] (single source for placement decisions and metrics).
+struct Lane<T> {
+    queue: Mutex<VecDeque<Entry<T>>>,
+    /// Whether the lane's owner is mid-task (a worker executing has an
+    /// empty deque but is *not* idle — the scatter path cares).
+    busy: AtomicBool,
+}
+
+/// Backstop for a parked worker's wait. Placements notify under the park
+/// lock (and workers re-check under it before waiting), so no wakeup can
+/// be missed — this only bounds the damage if that invariant ever broke.
+const PARK: Duration = Duration::from_millis(250);
+
+/// The dispatch plane: per-worker deques, least-loaded placement,
+/// neighbour stealing. See the module docs for the shape.
+pub struct DispatchPlane<T> {
+    lanes: Vec<Lane<T>>,
+    /// Bounded backlog per lane (`try_place` refuses past this).
+    lane_cap: usize,
+    /// Parking lot for idle workers. Placements notify under this lock
+    /// (and workers re-check depths under it), so no wakeup is missed.
+    park: Mutex<()>,
+    work: Condvar,
+    /// Workers currently waiting on `work` (SeqCst, see `push`): lets a
+    /// placement skip the park lock entirely when nobody is parked.
+    parked: AtomicUsize,
+    closed: AtomicBool,
+    stats: Vec<Arc<WorkerStats>>,
+}
+
+impl<T> DispatchPlane<T> {
+    /// A plane of `workers` lanes whose caps sum to at least `total_cap`.
+    pub fn new(workers: usize, total_cap: usize, metrics: &FabricMetrics) -> Arc<Self> {
+        let workers = workers.max(1);
+        let lane_cap = total_cap.div_ceil(workers).max(1);
+        let lanes = (0..workers)
+            .map(|_| Lane { queue: Mutex::new(VecDeque::new()), busy: AtomicBool::new(false) })
+            .collect();
+        let stats = (0..workers).map(|w| metrics.worker(w)).collect();
+        Arc::new(DispatchPlane {
+            lanes,
+            lane_cap,
+            park: Mutex::new(()),
+            work: Condvar::new(),
+            parked: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            stats,
+        })
+    }
+
+    /// Number of worker lanes.
+    pub fn workers(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// SeqCst store: pairs with the SeqCst `parked` handshake in
+    /// `push`/`next` so a depth a placer published before reading
+    /// `parked == 0` is visible to any worker that parks afterwards.
+    fn set_depth(&self, w: usize, depth: usize) {
+        self.stats[w].depth.store(depth as u64, Ordering::SeqCst);
+    }
+
+    /// Staged depth of one lane (gauge; advisory between mutations).
+    pub fn depth(&self, w: usize) -> usize {
+        self.stats[w].depth.load(Ordering::Relaxed) as usize
+    }
+
+    /// Staged depth across all lanes (SeqCst: the park-path re-check
+    /// relies on seeing any depth published before `parked` was read).
+    pub fn total_depth(&self) -> usize {
+        (0..self.lanes.len())
+            .map(|w| self.stats[w].depth.load(Ordering::SeqCst) as usize)
+            .sum()
+    }
+
+    /// Lanes whose deque is empty *and* whose worker is not mid-task —
+    /// the neighbours actually free to help (the scatter path sizes its
+    /// fan-out off this).
+    pub fn idle_lanes(&self) -> usize {
+        self.lanes
+            .iter()
+            .enumerate()
+            .filter(|(w, l)| !l.busy.load(Ordering::Relaxed) && self.depth(*w) == 0)
+            .count()
+    }
+
+    /// Least-loaded lane, preferring a lane whose worker is free over a
+    /// mid-task worker's (equally shallow) lane — so placements and
+    /// scatter shards land where they will be served soonest.
+    fn least_loaded(&self) -> usize {
+        let mut best = 0;
+        let mut best_key = (usize::MAX, true);
+        for (w, l) in self.lanes.iter().enumerate() {
+            let key = (self.depth(w), l.busy.load(Ordering::Relaxed));
+            if key < best_key {
+                best = w;
+                best_key = key;
+            }
+        }
+        best
+    }
+
+    /// Insert keeping the lane ordered by priority, FIFO within a class.
+    fn insert(queue: &mut VecDeque<Entry<T>>, entry: Entry<T>) {
+        let at = queue
+            .iter()
+            .rposition(|e| e.priority >= entry.priority)
+            .map_or(0, |i| i + 1);
+        queue.insert(at, entry);
+    }
+
+    fn push(&self, w: usize, priority: Priority, item: T, capped: bool) -> Result<(), T> {
+        {
+            let mut q = self.lanes[w].queue.lock().unwrap();
+            if capped && q.len() >= self.lane_cap {
+                return Err(item);
+            }
+            Self::insert(&mut q, Entry { priority, item });
+            self.set_depth(w, q.len());
+            self.stats[w].placements.fetch_add(1, Ordering::Relaxed);
+        }
+        // Wake one parked worker, skipping the park lock when nobody is
+        // parked (the common loaded case). The SeqCst pairing makes the
+        // skip safe: if this load sees 0, any worker that parks later
+        // incremented `parked` after it — and its depth re-check (also
+        // SeqCst, under the park lock) then sees the depth stored above,
+        // so it goes back to work instead of sleeping. One waiter
+        // suffices — any worker can serve any task (own-lane pop or
+        // steal) — and the park timeout backstops everything.
+        if self.parked.load(Ordering::SeqCst) > 0 {
+            let _g = self.park.lock().unwrap();
+            self.work.notify_one();
+        }
+        Ok(())
+    }
+
+    /// Place on the least-loaded lane, refusing past the lane cap — the
+    /// supervisor's backpressure signal. Returns the chosen lane.
+    pub fn try_place(&self, priority: Priority, item: T) -> Result<usize, T> {
+        let w = self.least_loaded();
+        self.push(w, priority, item, true)?;
+        Ok(w)
+    }
+
+    /// Place on the least-loaded lane unconditionally (shutdown drain and
+    /// scatter shards, whose fan-out is already bounded by the idle-lane
+    /// count).
+    pub fn place(&self, priority: Priority, item: T) -> usize {
+        let w = self.least_loaded();
+        let Ok(()) = self.push(w, priority, item, false) else { unreachable!("uncapped push") };
+        w
+    }
+
+    /// Place on a specific lane unconditionally (tests stage skew with it).
+    #[cfg(test)]
+    pub fn place_on(&self, w: usize, priority: Priority, item: T) {
+        let Ok(()) = self.push(w, priority, item, false) else { unreachable!("uncapped push") };
+    }
+
+    fn pop_local(&self, w: usize) -> Option<T> {
+        let mut q = self.lanes[w].queue.lock().unwrap();
+        let e = q.pop_front()?;
+        self.set_depth(w, q.len());
+        Some(e.item)
+    }
+
+    /// Steal one task from the head (highest-priority end) of the first
+    /// non-empty neighbour, scanning the ring from `w + 1`. Both ends sit
+    /// under the same lane mutex, so taking the head costs nothing extra
+    /// and keeps the High-overtakes contract intact no matter which
+    /// worker ends up serving the entry.
+    fn steal(&self, w: usize) -> Option<T> {
+        let n = self.lanes.len();
+        for off in 1..n {
+            let v = (w + off) % n;
+            let mut q = self.lanes[v].queue.lock().unwrap();
+            if let Some(e) = q.pop_front() {
+                self.set_depth(v, q.len());
+                drop(q);
+                self.stats[w].steals.fetch_add(1, Ordering::Relaxed);
+                return Some(e.item);
+            }
+        }
+        None
+    }
+
+    /// Next task for worker `w`: own lane first, then a neighbour's,
+    /// parking when the whole plane is empty. Returns `None` once the
+    /// plane is closed **and** fully drained, so pending work always
+    /// completes before the worker exits. Marks the worker busy while it
+    /// holds a task (see [`DispatchPlane::idle_lanes`]).
+    pub fn next(&self, w: usize) -> Option<T> {
+        self.lanes[w].busy.store(false, Ordering::Relaxed);
+        loop {
+            if let Some(t) = self.pop_local(w).or_else(|| self.steal(w)) {
+                self.lanes[w].busy.store(true, Ordering::Relaxed);
+                return Some(t);
+            }
+            let guard = self.park.lock().unwrap();
+            // Register as parked BEFORE the depth re-check: a placer that
+            // read `parked == 0` (and so skipped the notify) is then
+            // ordered before this increment, which puts its depth store
+            // before our re-check — one side always sees the other.
+            self.parked.fetch_add(1, Ordering::SeqCst);
+            if self.total_depth() > 0 {
+                self.parked.fetch_sub(1, Ordering::SeqCst);
+                continue; // placed between our scan and the park lock
+            }
+            if self.closed.load(Ordering::Acquire) {
+                self.parked.fetch_sub(1, Ordering::SeqCst);
+                return None;
+            }
+            let (guard, _) = self.work.wait_timeout(guard, PARK).unwrap();
+            self.parked.fetch_sub(1, Ordering::SeqCst);
+            drop(guard);
+        }
+    }
+
+    /// Close the plane: workers finish the staged backlog, then exit.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        let _g = self.park.lock().unwrap();
+        self.work.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn plane(workers: usize, cap: usize) -> (Arc<DispatchPlane<u64>>, Arc<FabricMetrics>) {
+        let metrics = Arc::new(FabricMetrics::default());
+        let p = DispatchPlane::new(workers, cap, &metrics);
+        (p, metrics)
+    }
+
+    #[test]
+    fn placement_spreads_to_the_least_loaded_lane() {
+        let (p, m) = plane(3, 30);
+        for i in 0..6 {
+            p.try_place(Priority::Normal, i).unwrap();
+        }
+        assert_eq!([p.depth(0), p.depth(1), p.depth(2)], [2, 2, 2]);
+        assert_eq!(p.total_depth(), 6);
+        assert_eq!(p.idle_lanes(), 0);
+        for w in 0..3 {
+            assert_eq!(m.worker(w).placements.load(Ordering::Relaxed), 2);
+            assert_eq!(m.worker(w).depth.load(Ordering::Relaxed), 2);
+        }
+    }
+
+    #[test]
+    fn try_place_refuses_when_every_lane_is_full() {
+        let (p, _m) = plane(2, 4); // 2 per lane
+        for i in 0..4 {
+            p.try_place(Priority::Normal, i).unwrap();
+        }
+        assert_eq!(p.try_place(Priority::Normal, 99).unwrap_err(), 99);
+        // uncapped place still lands (scatter / shutdown drain path)
+        p.place(Priority::Normal, 100);
+        assert_eq!(p.total_depth(), 5);
+    }
+
+    #[test]
+    fn high_priority_overtakes_within_a_lane() {
+        let (p, _m) = plane(1, 16);
+        p.place(Priority::Normal, 1);
+        p.place(Priority::Low, 2);
+        p.place(Priority::Normal, 3);
+        p.place(Priority::High, 4);
+        let order: Vec<u64> = (0..4).map(|_| p.pop_local(0).unwrap()).collect();
+        assert_eq!(order, vec![4, 1, 3, 2], "High first, Low last, FIFO within a class");
+    }
+
+    #[test]
+    fn a_mid_task_worker_is_not_idle_even_with_an_empty_deque() {
+        let (p, _m) = plane(2, 8);
+        assert_eq!(p.idle_lanes(), 2, "fresh plane: everyone idle");
+        p.place_on(0, Priority::Normal, 7);
+        assert_eq!(p.idle_lanes(), 1, "staged lane is not idle");
+        let t = p.next(0).expect("own-lane pop");
+        assert_eq!(t, 7);
+        // Lane 0's deque is empty again, but its worker now holds a task.
+        assert_eq!(p.depth(0), 0);
+        assert_eq!(p.idle_lanes(), 1, "mid-task worker is busy, not idle");
+    }
+
+    #[test]
+    fn idle_worker_steals_from_a_busy_neighbour() {
+        // Everything is staged on worker 0's lane; worker 1 must clear it.
+        let (p, m) = plane(2, 16);
+        for i in 0..4 {
+            p.place_on(0, Priority::Normal, i);
+        }
+        let got = Arc::new(AtomicU64::new(0));
+        let done = {
+            let p = Arc::clone(&p);
+            let got = Arc::clone(&got);
+            std::thread::spawn(move || {
+                while let Some(v) = p.next(1) {
+                    got.fetch_add(v + 1, Ordering::Relaxed);
+                }
+            })
+        };
+        // Spin until the thief drains the victim lane, then close.
+        while p.total_depth() > 0 {
+            std::thread::yield_now();
+        }
+        p.close();
+        done.join().unwrap();
+        assert_eq!(got.load(Ordering::Relaxed), 1 + 2 + 3 + 4);
+        assert_eq!(m.worker(1).steals.load(Ordering::Relaxed), 4);
+        assert_eq!(m.worker(0).depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn close_drains_staged_work_before_ending_the_lane() {
+        let (p, _m) = plane(1, 8);
+        for i in 0..3 {
+            p.place(Priority::Normal, i);
+        }
+        p.close();
+        assert_eq!(p.next(0), Some(0));
+        assert_eq!(p.next(0), Some(1));
+        assert_eq!(p.next(0), Some(2));
+        assert_eq!(p.next(0), None);
+    }
+
+    #[test]
+    fn steal_takes_the_highest_priority_head() {
+        let (p, _m) = plane(2, 16);
+        p.place_on(0, Priority::Low, 3);
+        p.place_on(0, Priority::High, 1);
+        p.place_on(0, Priority::Normal, 2);
+        // Priority order holds no matter which worker serves: the thief
+        // takes the High head, the owner then pops the Normal entry.
+        assert_eq!(p.steal(1), Some(1), "steal the High head, not the Low tail");
+        assert_eq!(p.pop_local(0), Some(2), "owner pops the next-highest entry");
+        assert_eq!(p.pop_local(0), Some(3));
+    }
+}

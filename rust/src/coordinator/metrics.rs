@@ -1,9 +1,22 @@
-//! Fabric-level metrics: lock-free global counters, per-backend counters,
-//! and per-client accounting.
+//! Fabric-level metrics: lock-free global counters, per-backend and
+//! per-worker counters, and per-client accounting.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Counters for one sim worker's lane in the dispatch plane.
+#[derive(Debug, Default)]
+pub struct WorkerStats {
+    /// Current staged depth of this worker's deque (gauge).
+    pub depth: AtomicU64,
+    /// Jobs the supervisor placed on this worker's deque.
+    pub placements: AtomicU64,
+    /// Jobs this worker stole from a neighbour's deque.
+    pub steals: AtomicU64,
+    /// Tasks this worker executed (own or stolen).
+    pub executed: AtomicU64,
+}
 
 /// Counters for one named backend (`sim`, `native`, `xla`, ...).
 #[derive(Debug, Default)]
@@ -39,6 +52,10 @@ pub struct FabricMetrics {
     pub routed_sim: AtomicU64,
     pub routed_inline: AtomicU64,
     pub routed_accel: AtomicU64,
+    /// Oversized mass ops scattered across the sim pool.
+    pub routed_split: AtomicU64,
+    /// Shards those split ops fanned out to (mean = shards / split ops).
+    pub split_shards: AtomicU64,
     pub accel_batches: AtomicU64,
     pub accel_rows: AtomicU64,
     pub deadline_flushes: AtomicU64,
@@ -46,6 +63,7 @@ pub struct FabricMetrics {
     pub priority_flushes: AtomicU64,
     backends: Mutex<HashMap<String, Arc<BackendStats>>>,
     clients: Mutex<HashMap<String, Arc<AtomicU64>>>,
+    workers: Mutex<Vec<Arc<WorkerStats>>>,
 }
 
 impl FabricMetrics {
@@ -61,6 +79,38 @@ impl FabricMetrics {
         let mut v: Vec<String> = g.keys().cloned().collect();
         v.sort();
         v
+    }
+
+    /// Per-worker dispatch-plane counters, created on first touch.
+    pub fn worker(&self, idx: usize) -> Arc<WorkerStats> {
+        let mut g = self.workers.lock().unwrap();
+        while g.len() <= idx {
+            g.push(Arc::default());
+        }
+        Arc::clone(&g[idx])
+    }
+
+    /// Number of workers that have reported dispatch-plane counters.
+    pub fn worker_count(&self) -> usize {
+        self.workers.lock().unwrap().len()
+    }
+
+    /// Total neighbour steals across the dispatch plane.
+    pub fn total_steals(&self) -> u64 {
+        let g = self.workers.lock().unwrap();
+        g.iter().map(|w| w.steals.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total supervisor placements across the dispatch plane.
+    pub fn total_placements(&self) -> u64 {
+        let g = self.workers.lock().unwrap();
+        g.iter().map(|w| w.placements.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Staged depth summed over every worker's deque (gauge).
+    pub fn total_queue_depth(&self) -> u64 {
+        let g = self.workers.lock().unwrap();
+        g.iter().map(|w| w.depth.load(Ordering::Relaxed)).sum()
     }
 
     /// Per-client submission counter, created on first touch.
@@ -79,11 +129,23 @@ impl FabricMetrics {
         }
     }
 
+    /// Mean shards per split mass op (scatter effectiveness).
+    pub fn mean_split_shards(&self) -> f64 {
+        let s = self.routed_split.load(Ordering::Relaxed);
+        if s == 0 {
+            0.0
+        } else {
+            self.split_shards.load(Ordering::Relaxed) as f64 / s as f64
+        }
+    }
+
     /// Render a summary: one global line plus one line per backend.
     pub fn render(&self) -> String {
         let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
         let mut out = format!(
-            "submitted={} completed={} errors={} rejected={} cancelled={} deadline_missed={} | sim={} inline={} accel={} | batches={} rows={} (mean {:.1}/batch, {} deadline, {} priority) failovers={}",
+            "submitted={} completed={} errors={} rejected={} cancelled={} deadline_missed={} \
+             | sim={} inline={} accel={} split={} (mean {:.1} shards) \
+             | batches={} rows={} (mean {:.1}/batch, {} deadline, {} priority) failovers={}",
             g(&self.submitted),
             g(&self.completed),
             g(&self.errors),
@@ -93,6 +155,8 @@ impl FabricMetrics {
             g(&self.routed_sim),
             g(&self.routed_inline),
             g(&self.routed_accel),
+            g(&self.routed_split),
+            self.mean_split_shards(),
             g(&self.accel_batches),
             g(&self.accel_rows),
             self.mean_batch_rows(),
@@ -100,6 +164,21 @@ impl FabricMetrics {
             g(&self.priority_flushes),
             g(&self.failovers),
         );
+        {
+            let workers = self.workers.lock().unwrap();
+            if !workers.is_empty() {
+                out.push_str("\n  dispatch plane:");
+                for (i, w) in workers.iter().enumerate() {
+                    out.push_str(&format!(
+                        " w{i}[depth={} placed={} steals={} executed={}]",
+                        g(&w.depth),
+                        g(&w.placements),
+                        g(&w.steals),
+                        g(&w.executed),
+                    ));
+                }
+            }
+        }
         for name in self.backend_names() {
             let b = self.backend(&name);
             out.push_str(&format!(
@@ -156,6 +235,30 @@ mod tests {
         let r = m.render();
         assert!(r.contains("backend native"));
         assert!(r.contains("init_failures=1"));
+    }
+
+    #[test]
+    fn worker_stats_grow_on_demand_and_aggregate() {
+        let m = FabricMetrics::default();
+        m.worker(2).steals.fetch_add(3, Ordering::Relaxed);
+        m.worker(0).placements.fetch_add(5, Ordering::Relaxed);
+        m.worker(0).depth.store(2, Ordering::Relaxed);
+        assert_eq!(m.worker_count(), 3);
+        assert_eq!(m.total_steals(), 3);
+        assert_eq!(m.total_placements(), 5);
+        assert_eq!(m.total_queue_depth(), 2);
+        let r = m.render();
+        assert!(r.contains("dispatch plane"), "{r}");
+        assert!(r.contains("w2[depth=0 placed=0 steals=3 executed=0]"), "{r}");
+    }
+
+    #[test]
+    fn mean_split_shards_handles_zero() {
+        let m = FabricMetrics::default();
+        assert_eq!(m.mean_split_shards(), 0.0);
+        m.routed_split.store(2, Ordering::Relaxed);
+        m.split_shards.store(7, Ordering::Relaxed);
+        assert_eq!(m.mean_split_shards(), 3.5);
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! The EMPA fabric coordinator — the paper's supervisor idea lifted to a
-//! service (L3): a leader routes incoming jobs either to a pool of
+//! service (L3): a supervisor routes incoming jobs either to a pool of
 //! simulated EMPA processors (scalar/control QTs) or — through the §3.8
 //! accelerator link — to a chain of mass-processing backends, with
 //! dynamic batching into bucket-shaped tiles, priority staging,
@@ -9,14 +9,23 @@
 //! runs here):
 //!
 //! ```text
-//!  FabricClient ── submit / try_submit / submit_batch ──► router (leader)
+//!  FabricClient ── submit / try_submit / submit_batch ──► supervisor
 //!   (cloneable)        bounded ingress queue               │
-//!                                                          ├ RunProgram: priority-staged
+//!                                                          ├ RunProgram: least-loaded
+//!                                                          │   placement (overflow heap
+//!                                                          │   when the plane is full)
 //!                                                          │      ▼
-//!                                                 sim worker pool ("sim" backends,
-//!                                                   one instance per worker)
+//!                                                 dispatch plane: one bounded
+//!                                                 deque per sim worker, idle
+//!                                                 workers steal neighbours'
+//!                                                 staged work
 //!                                                          │
 //!                                                          ├ small mass op: inline
+//!                                                          │
+//!                                                          ├ oversized mass op: scatter
+//!                                                          │   into shards across idle
+//!                                                          │   sim workers, gathered by
+//!                                                          │   a parent-side accumulator
 //!                                                          │
 //!                                                          └ Mass*: per-op Batcher
 //!                                                                 ▼ (size/deadline/priority)
@@ -25,11 +34,13 @@
 //! ```
 //!
 //! The public vocabulary (requests, errors, handles, completions) lives
-//! in [`crate::api`]; backends and their registry in [`backend`]; this
-//! module owns the threads and queues between them.
+//! in [`crate::api`]; backends and their registry in [`backend`]; the
+//! per-worker deques in [`dispatch`]; this module owns the threads and
+//! the supervisor between them.
 
 pub mod backend;
 pub mod client;
+pub mod dispatch;
 pub mod metrics;
 pub mod router;
 
@@ -41,17 +52,16 @@ pub use backend::{
     BackendRegistry, SimBackend,
 };
 pub use client::FabricClient;
-pub use metrics::{BackendStats, FabricMetrics};
+pub use dispatch::DispatchPlane;
+pub use metrics::{BackendStats, FabricMetrics, WorkerStats};
 pub use router::RoutePolicy;
 
 use crate::accel::{batch::PendingRow, Batcher, BatcherConfig, MassOp, MassRequest, MassResult};
 use crate::empa::EmpaConfig;
 use crate::workload::Request;
 use std::collections::{BinaryHeap, HashMap};
-use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
-use std::sync::mpsc::{
-    self, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
-};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering::AcqRel, Ordering::Relaxed};
+use std::sync::mpsc::{self, sync_channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -65,9 +75,10 @@ pub struct FabricConfig {
     pub empa: EmpaConfig,
     /// Dynamic batching policy for mass ops.
     pub batcher: BatcherConfig,
-    /// Routing policy (accelerator threshold etc.).
+    /// Routing policy (accelerator / split thresholds etc.).
     pub route: RoutePolicy,
-    /// Bounded queue depth (ingress and sim pool — backpressure).
+    /// Bounded queue depth — ingress, the dispatch plane's summed lane
+    /// caps, and the supervisor's overflow heap each get this much.
     pub queue_cap: usize,
 }
 
@@ -156,6 +167,7 @@ impl JobCtx {
         true
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn complete(
         &self,
         metrics: &FabricMetrics,
@@ -163,6 +175,7 @@ impl JobCtx {
         route: Route,
         backend: &str,
         batch_rows: usize,
+        shards: usize,
         dispatched: Instant,
     ) {
         metrics.completed.fetch_add(1, Relaxed);
@@ -172,6 +185,7 @@ impl JobCtx {
             route,
             backend: backend.to_string(),
             batch_rows,
+            shards,
             queue_latency: dispatched.saturating_duration_since(self.submitted),
             latency: now.saturating_duration_since(self.submitted),
         }));
@@ -192,8 +206,103 @@ pub(crate) enum Msg {
     Shutdown,
 }
 
-enum SimMsg {
+/// One unit of work staged on a sim worker's deque.
+pub(crate) enum SimTask {
+    /// A routed job (program, or a mass op a sim slot serves whole).
     Run { kind: RequestKind, ctx: JobCtx },
+    /// One chunk of a scattered oversized mass op.
+    Shard(ShardTask),
+}
+
+/// A contiguous chunk of an oversized mass op, bound for one sim worker.
+/// Zero-copy: the operands live in the shared [`ShardGather`]; the shard
+/// carries only its range.
+pub(crate) struct ShardTask {
+    gather: Arc<ShardGather>,
+    lo: usize,
+    hi: usize,
+}
+
+/// Parent-side accumulator for a scattered mass op: it owns the operand
+/// vectors, shards add the partial result of their slice, and the last
+/// one to land completes the job (the §5.2 SUMUP engine's merge step,
+/// lifted to the service layer).
+pub(crate) struct ShardGather {
+    a: Vec<f32>,
+    /// Second operand (dot only); slicing is bounded by the shorter side.
+    b: Option<Vec<f32>>,
+    ctx: Mutex<Option<JobCtx>>,
+    sum: Mutex<f64>,
+    /// Sticky cancel/deadline verdict (see [`ShardGather::check_dead`]).
+    dead: AtomicBool,
+    remaining: AtomicUsize,
+    shards: usize,
+    dispatched: Instant,
+}
+
+impl ShardGather {
+    /// Pre-compute admission, mirroring the other lanes' gates: a
+    /// cancelled or expired parent stops burning cores on its remaining
+    /// shards. Sticky once observed.
+    fn check_dead(&self) -> bool {
+        if self.dead.load(Relaxed) {
+            return true;
+        }
+        let g = self.ctx.lock().unwrap();
+        let dead = g.as_ref().is_some_and(|c| c.cancelled() || c.expired(Instant::now()));
+        if dead {
+            self.dead.store(true, Relaxed);
+        }
+        dead
+    }
+
+    /// This worker's slice of the mass op — a conventional core doing the
+    /// arithmetic itself (no backend required), accumulating in f64 so
+    /// the gathered total does not drift with the fan-out.
+    fn compute(&self, lo: usize, hi: usize) -> f64 {
+        match &self.b {
+            Some(b) => {
+                self.a[lo..hi].iter().zip(&b[lo..hi]).map(|(x, y)| *x as f64 * *y as f64).sum()
+            }
+            None => self.a[lo..hi].iter().map(|&x| x as f64).sum(),
+        }
+    }
+
+    fn absorb(
+        &self,
+        partial: f64,
+        backend: &str,
+        stats: Option<&BackendStats>,
+        metrics: &FabricMetrics,
+    ) {
+        *self.sum.lock().unwrap() += partial;
+        if self.remaining.fetch_sub(1, AcqRel) != 1 {
+            return;
+        }
+        let ctx = self.ctx.lock().unwrap().take().expect("gather completes exactly once");
+        // The admission gate resolves a cancelled/expired job with its
+        // typed error (cancel is sticky and deadlines are monotonic, so
+        // this cannot disagree with `check_dead`'s verdict for long —
+        // and if it somehow passes, completing is the safe fallback).
+        if self.dead.load(Relaxed) && !ctx.admit(metrics) {
+            return;
+        }
+        // One backend job per completed split op (not per shard), so the
+        // per-backend jobs counter stays in step with completions.
+        if let Some(s) = stats {
+            s.jobs.fetch_add(1, Relaxed);
+        }
+        let total = *self.sum.lock().unwrap() as f32;
+        ctx.complete(
+            metrics,
+            Output::Scalars(vec![total]),
+            Route::Split,
+            backend,
+            1,
+            self.shards,
+            self.dispatched,
+        );
+    }
 }
 
 struct MassJob {
@@ -204,7 +313,8 @@ enum AccelMsg {
     Batch { op: MassOp, rows: Vec<PendingRow<MassJob>>, scale_bias: [f32; 2] },
 }
 
-/// Program job parked in the router, ordered by (priority, FIFO).
+/// Program job parked in the supervisor's overflow heap, ordered by
+/// (priority, FIFO).
 struct Staged {
     priority: Priority,
     seq: u64,
@@ -248,24 +358,25 @@ impl Fabric {
     /// class.
     pub fn start(cfg: FabricConfig, registry: BackendRegistry) -> Arc<Fabric> {
         let metrics = Arc::new(FabricMetrics::default());
+        let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap);
         let mut threads = Vec::new();
         let program_chain = registry.chain(BackendClass::Program);
         let mass_chain = registry.chain(BackendClass::Mass);
 
-        // --- sim worker pool -------------------------------------------
-        // Shallow channel: the backlog lives in the router's priority
-        // heap, so High jobs overtake instead of queueing FIFO.
-        let (sim_tx, sim_rx) = sync_channel::<SimMsg>(cfg.sim_workers.max(1) * 2);
-        let sim_rx = Arc::new(Mutex::new(sim_rx));
-        for w in 0..cfg.sim_workers.max(1) {
-            let rx = Arc::clone(&sim_rx);
+        // --- sim worker pool over the dispatch plane -------------------
+        // Each worker owns a bounded deque; the supervisor places on the
+        // least-loaded one and idle workers steal from neighbours — no
+        // shared-receiver lock convoy on the hot path.
+        let plane = DispatchPlane::new(cfg.sim_workers.max(1), cfg.queue_cap, &metrics);
+        for w in 0..plane.workers() {
+            let plane = Arc::clone(&plane);
             let chain = program_chain.clone();
             let m = Arc::clone(&metrics);
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("empa-sim-{w}"))
-                    .spawn(move || sim_worker(rx, chain, m))
+                    .spawn(move || sim_worker(w, plane, chain, m))
                     .expect("spawn sim worker"),
             );
         }
@@ -282,19 +393,21 @@ impl Fabric {
             );
         }
 
-        // --- router / leader -------------------------------------------
+        // --- supervisor ------------------------------------------------
         {
             let m = Arc::clone(&metrics);
+            let stop = Arc::clone(&stop);
+            let plane = Arc::clone(&plane);
             let cfg2 = cfg.clone();
             threads.push(
                 std::thread::Builder::new()
-                    .name("fabric-router".into())
-                    .spawn(move || router_loop(rx, sim_tx, acc_tx, cfg2, m))
-                    .expect("spawn router"),
+                    .name("fabric-supervisor".into())
+                    .spawn(move || Supervisor::new(plane, acc_tx, cfg2, m).run(rx, stop))
+                    .expect("spawn supervisor"),
             );
         }
 
-        let client = FabricClient::new(tx, Arc::clone(&metrics));
+        let client = FabricClient::new(tx, Arc::clone(&metrics), stop);
         Arc::new(Fabric { client, metrics, threads: Mutex::new(threads) })
     }
 
@@ -341,176 +454,329 @@ impl Fabric {
 }
 
 // ----------------------------------------------------------------------
-// threads
+// the supervisor
 // ----------------------------------------------------------------------
 
-/// How long the router waits for new work while program jobs are staged
-/// for a full sim pool (it retries the pool on every wake-up).
+/// How long the supervisor waits before retrying the dispatch plane while
+/// program jobs are parked in the overflow heap.
 const STAGED_RETRY: Duration = Duration::from_micros(200);
 
-fn router_loop(
-    rx: Receiver<Msg>,
-    sim_tx: SyncSender<SimMsg>,
+/// The supervisor thread's state: the dispatch plane it feeds, the mass
+/// lane's batchers, and the bounded overflow heap that holds program jobs
+/// when every lane is full (priority-ordered, so High still overtakes).
+///
+/// Backpressure is tiered: jobs stage on the plane's per-worker deques
+/// first (total `queue_cap`), then in the overflow heap (another
+/// `queue_cap`); only when **both** are full does the supervisor pause
+/// ingestion, which callers observe as `QueueFull` on the bounded ingress
+/// queue. Inline and accelerator jobs keep flowing until that point —
+/// the seed's single staged heap instead slept with the backlog at
+/// `queue_cap`, head-of-line-blocking every lane behind the program one.
+struct Supervisor {
+    plane: Arc<DispatchPlane<SimTask>>,
     acc_tx: mpsc::Sender<AccelMsg>,
     cfg: FabricConfig,
     metrics: Arc<FabricMetrics>,
-) {
-    // One batcher per mass op kind (rows of one flush share an artifact).
-    let mut batchers: HashMap<MassOp, Batcher<MassJob>> = HashMap::new();
-    // Program jobs waiting for a sim pool slot, highest priority first.
-    // Bounded: past this the router stops ingesting, making the ingress
-    // queue the caller-visible backpressure signal.
-    let mut staged: BinaryHeap<Staged> = BinaryHeap::new();
-    let staged_cap = cfg.queue_cap.max(1);
-    let mut seq = 0u64;
-    let inline_stats = metrics.backend("inline");
-    let flush = |op: MassOp, rows: Vec<PendingRow<MassJob>>, acc_tx: &mpsc::Sender<AccelMsg>| {
-        let _ = acc_tx.send(AccelMsg::Batch { op, rows, scale_bias: [0.0; 2] });
-    };
-    loop {
-        // Drain staged program jobs into the pool without blocking.
-        while let Some(s) = staged.pop() {
-            if !s.ctx.admit(&metrics) {
+    batchers: HashMap<MassOp, Batcher<MassJob>>,
+    staged: BinaryHeap<Staged>,
+    staged_cap: usize,
+    seq: u64,
+    inline_stats: Arc<BackendStats>,
+}
+
+impl Supervisor {
+    fn new(
+        plane: Arc<DispatchPlane<SimTask>>,
+        acc_tx: mpsc::Sender<AccelMsg>,
+        cfg: FabricConfig,
+        metrics: Arc<FabricMetrics>,
+    ) -> Self {
+        let staged_cap = cfg.queue_cap.max(1);
+        let inline_stats = metrics.backend("inline");
+        Supervisor {
+            plane,
+            acc_tx,
+            cfg,
+            metrics,
+            batchers: HashMap::new(),
+            staged: BinaryHeap::new(),
+            staged_cap,
+            seq: 0,
+            inline_stats,
+        }
+    }
+
+    fn run(mut self, rx: Receiver<Msg>, stop: Arc<AtomicBool>) {
+        loop {
+            if stop.load(std::sync::atomic::Ordering::Acquire) {
+                // Shutdown was signalled: ingest what was already
+                // accepted (the sentinel message marks the end), then
+                // fall into the drain. The flag — unlike the sentinel —
+                // is seen even when ingestion is paused on a full
+                // backlog, so shutdown never queues behind program jobs.
+                while let Ok(Msg::Job { kind, ctx }) = rx.try_recv() {
+                    if ctx.admit(&self.metrics) {
+                        self.ingest(kind, ctx);
+                    }
+                }
+                break;
+            }
+            self.refill_plane();
+
+            // Wait bounded by the earliest batch deadline / overflow retry.
+            let batch_deadline = self.batchers.values().filter_map(|b| b.next_deadline()).min();
+            let staged_retry =
+                if self.staged.is_empty() { None } else { Some(Instant::now() + STAGED_RETRY) };
+            let wake = match (batch_deadline, staged_retry) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            let msg = if self.staged.len() >= self.staged_cap {
+                // Both backlog tiers are full: pause ingestion and let
+                // the bounded ingress queue fill — that is what
+                // `try_submit` observes as QueueFull. Wake soon to retry
+                // the plane and honour batch deadlines.
+                let until = wake.unwrap_or_else(|| Instant::now() + STAGED_RETRY);
+                std::thread::sleep(
+                    until.saturating_duration_since(Instant::now()).min(STAGED_RETRY),
+                );
+                None
+            } else {
+                match wake {
+                    Some(d) => {
+                        let wait = d.saturating_duration_since(Instant::now());
+                        match rx.recv_timeout(wait) {
+                            Ok(m) => Some(m),
+                            Err(RecvTimeoutError::Timeout) => None,
+                            Err(RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                    None => match rx.recv() {
+                        Ok(m) => Some(m),
+                        Err(_) => break,
+                    },
+                }
+            };
+            self.poll_batchers();
+            match msg {
+                None => continue,
+                Some(Msg::Shutdown) => break,
+                Some(Msg::Job { kind, ctx }) => {
+                    if ctx.admit(&self.metrics) {
+                        self.ingest(kind, ctx);
+                    }
+                }
+            }
+        }
+        self.shutdown_drain();
+    }
+
+    /// Move overflowed program jobs onto the plane while lanes have room.
+    fn refill_plane(&mut self) {
+        while let Some(s) = self.staged.pop() {
+            if !s.ctx.admit(&self.metrics) {
                 continue;
             }
-            let (pr, sq) = (s.priority, s.seq);
-            match sim_tx.try_send(SimMsg::Run { kind: s.kind, ctx: s.ctx }) {
-                Ok(()) => {}
-                Err(TrySendError::Full(SimMsg::Run { kind, ctx })) => {
-                    staged.push(Staged { priority: pr, seq: sq, kind, ctx });
+            let (priority, seq) = (s.priority, s.seq);
+            match self.plane.try_place(priority, SimTask::Run { kind: s.kind, ctx: s.ctx }) {
+                Ok(_) => {}
+                Err(SimTask::Run { kind, ctx }) => {
+                    self.staged.push(Staged { priority, seq, kind, ctx });
                     break;
                 }
-                Err(TrySendError::Disconnected(SimMsg::Run { ctx, .. })) => {
-                    ctx.fail(&metrics, FabricError::Shutdown);
-                }
+                Err(SimTask::Shard(_)) => unreachable!("overflow holds only Run tasks"),
             }
         }
+    }
 
-        // Wait bounded by the earliest batch deadline / staged backlog.
-        let batch_deadline = batchers.values().filter_map(|b| b.next_deadline()).min();
-        let staged_retry =
-            if staged.is_empty() { None } else { Some(Instant::now() + STAGED_RETRY) };
-        let wake = match (batch_deadline, staged_retry) {
-            (Some(a), Some(b)) => Some(a.min(b)),
-            (a, b) => a.or(b),
-        };
-        let msg = if staged.len() >= staged_cap {
-            // Backpressure: the program backlog is at capacity, so stop
-            // ingesting and let the bounded ingress queue fill — that is
-            // what `try_submit` observes as QueueFull. Wake soon to retry
-            // the pool and honour batch deadlines.
-            let until = wake.unwrap_or_else(|| Instant::now() + STAGED_RETRY);
-            std::thread::sleep(
-                until.saturating_duration_since(Instant::now()).min(STAGED_RETRY),
-            );
-            None
-        } else {
-            match wake {
-                Some(d) => {
-                    let wait = d.saturating_duration_since(Instant::now());
-                    match rx.recv_timeout(wait) {
-                        Ok(m) => Some(m),
-                        Err(RecvTimeoutError::Timeout) => None,
-                        Err(RecvTimeoutError::Disconnected) => break,
+    /// Route one admitted job onto its lane.
+    fn ingest(&mut self, kind: RequestKind, ctx: JobCtx) {
+        match router::route(&kind, &self.cfg.route) {
+            Route::Simulator => {
+                self.metrics.routed_sim.fetch_add(1, Relaxed);
+                self.seq += 1;
+                let seq = self.seq;
+                // FIFO within a priority: bypass the overflow heap only
+                // when it is empty.
+                if self.staged.is_empty() {
+                    match self.plane.try_place(ctx.priority, SimTask::Run { kind, ctx }) {
+                        Ok(_) => {}
+                        Err(SimTask::Run { kind, ctx }) => {
+                            self.staged.push(Staged { priority: ctx.priority, seq, kind, ctx });
+                        }
+                        Err(SimTask::Shard(_)) => unreachable!("placed a Run task"),
+                    }
+                } else {
+                    self.staged.push(Staged { priority: ctx.priority, seq, kind, ctx });
+                }
+            }
+            Route::Inline => {
+                // Small mass op: not worth any queue round trip (the
+                // §2.4 offset-time argument).
+                self.metrics.routed_inline.fetch_add(1, Relaxed);
+                let dispatched = Instant::now();
+                match inline_mass(&kind) {
+                    Ok(out) => {
+                        self.inline_stats.jobs.fetch_add(1, Relaxed);
+                        ctx.complete(&self.metrics, out, Route::Inline, "inline", 1, 1, dispatched);
+                    }
+                    Err(e) => {
+                        self.inline_stats.errors.fetch_add(1, Relaxed);
+                        ctx.fail(&self.metrics, e);
                     }
                 }
-                None => match rx.recv() {
-                    Ok(m) => Some(m),
-                    Err(_) => break,
-                },
+            }
+            Route::Split => {
+                // Scatter pays only when neighbours are free to help
+                // (the §2.4 offset-time argument applied to the pool
+                // itself). With every lane busy it would also bypass the
+                // plane's bounds, so the batcher lane is the fallback.
+                if self.plane.idle_lanes() == 0 {
+                    self.metrics.routed_accel.fetch_add(1, Relaxed);
+                    self.enqueue_accel(kind, ctx);
+                } else {
+                    self.metrics.routed_split.fetch_add(1, Relaxed);
+                    self.scatter(kind, ctx);
+                }
+            }
+            Route::Accelerator => {
+                self.metrics.routed_accel.fetch_add(1, Relaxed);
+                self.enqueue_accel(kind, ctx);
+            }
+        }
+    }
+
+    /// Stage a mass op on its per-op batcher, flushing on size (or
+    /// immediately for High priority).
+    fn enqueue_accel(&mut self, kind: RequestKind, ctx: JobCtx) {
+        let high = ctx.priority == Priority::High;
+        let (op, row, row2) = match kind {
+            RequestKind::MassSum { values } => (MassOp::Sumup, values, None),
+            RequestKind::MassDot { a, b } => (MassOp::Dot, a, Some(b)),
+            RequestKind::RunProgram { .. } => unreachable!("router"),
+        };
+        let mut priority_flush = false;
+        let flushed = {
+            let b = self
+                .batchers
+                .entry(op)
+                .or_insert_with(|| Batcher::new(self.cfg.batcher.clone()));
+            if let Some(rows) = b.push(MassJob { ctx }, row, row2, Instant::now()) {
+                Some(rows)
+            } else if high {
+                // High priority refuses to wait out the batch window:
+                // take whatever is pending now.
+                priority_flush = true;
+                b.drain()
+            } else {
+                None
             }
         };
-        // Deadline flushes first (they are due).
+        if let Some(rows) = flushed {
+            if priority_flush {
+                self.metrics.priority_flushes.fetch_add(1, Relaxed);
+            }
+            self.flush(op, rows);
+        }
+    }
+
+    /// Scatter an oversized mass op into contiguous shards across the
+    /// dispatch plane — the supervisor "using the help of" neighbouring
+    /// cores. The fan-out is sized by the lanes actually idle, and each
+    /// shard is an `Arc` clone plus a range: one allocation per control
+    /// tick (§4.1.3), no payload copies. The gather side lives in
+    /// [`ShardGather`].
+    fn scatter(&self, kind: RequestKind, ctx: JobCtx) {
+        let (a, b) = match kind {
+            RequestKind::MassSum { values } => (values, None),
+            RequestKind::MassDot { a, b } => (a, Some(b)),
+            RequestKind::RunProgram { .. } => unreachable!("only mass ops route to Split"),
+        };
+        // Defence in depth for a mismatched dot that slipped past
+        // submission validation: chunk by the shorter side so the shard
+        // slices can never go out of bounds.
+        let len = b.as_ref().map_or(a.len(), |bv| a.len().min(bv.len()));
+        let min = self.cfg.route.split_min_len.max(1);
+        // Two shards at the threshold, growing with length, capped by
+        // the idle lanes available to help (>= 1, checked by the caller).
+        let idle = self.plane.idle_lanes().max(1);
+        let want = (2 * len / min).clamp(1, idle);
+        // Fix the chunk size first, then re-derive the count from it, so
+        // every shard is non-empty and the last range cannot run past
+        // `len` (ceil(len / ceil(len / want)) <= want always holds).
+        let chunk = len.div_ceil(want).max(1);
+        let shards = len.div_ceil(chunk).max(1);
+        let priority = ctx.priority;
+        let gather = Arc::new(ShardGather {
+            a,
+            b,
+            ctx: Mutex::new(Some(ctx)),
+            sum: Mutex::new(0.0),
+            dead: AtomicBool::new(false),
+            remaining: AtomicUsize::new(shards),
+            shards,
+            dispatched: Instant::now(),
+        });
+        self.metrics.split_shards.fetch_add(shards as u64, Relaxed);
+        for i in 0..shards {
+            let lo = i * chunk;
+            let hi = ((i + 1) * chunk).min(len);
+            let task = ShardTask { gather: Arc::clone(&gather), lo, hi };
+            // Uncapped place: fan-out is bounded by the idle-lane count,
+            // and the least-loaded pick lands shards on those lanes.
+            self.plane.place(priority, SimTask::Shard(task));
+        }
+    }
+
+    fn flush(&self, op: MassOp, rows: Vec<PendingRow<MassJob>>) {
+        let _ = self.acc_tx.send(AccelMsg::Batch { op, rows, scale_bias: [0.0; 2] });
+    }
+
+    /// Deadline flushes (they are due).
+    fn poll_batchers(&mut self) {
         let now = Instant::now();
-        for (op, b) in batchers.iter_mut() {
+        let mut due: Vec<(MassOp, Vec<PendingRow<MassJob>>)> = Vec::new();
+        for (op, b) in self.batchers.iter_mut() {
             if let Some(rows) = b.poll(now) {
-                metrics.deadline_flushes.fetch_add(1, Relaxed);
-                flush(*op, rows, &acc_tx);
+                due.push((*op, rows));
             }
         }
-        let Some(msg) = msg else { continue };
-        match msg {
-            Msg::Shutdown => break,
-            Msg::Job { kind, ctx } => {
-                if !ctx.admit(&metrics) {
-                    continue;
-                }
-                match router::route(&kind, &cfg.route) {
-                    Route::Simulator => {
-                        metrics.routed_sim.fetch_add(1, Relaxed);
-                        seq += 1;
-                        staged.push(Staged { priority: ctx.priority, seq, kind, ctx });
-                    }
-                    Route::Inline => {
-                        // Small mass op: not worth the accelerator round
-                        // trip (the §2.4 offset-time argument).
-                        metrics.routed_inline.fetch_add(1, Relaxed);
-                        let dispatched = Instant::now();
-                        match inline_mass(&kind) {
-                            Ok(out) => {
-                                inline_stats.jobs.fetch_add(1, Relaxed);
-                                ctx.complete(&metrics, out, Route::Inline, "inline", 1, dispatched);
-                            }
-                            Err(e) => {
-                                inline_stats.errors.fetch_add(1, Relaxed);
-                                ctx.fail(&metrics, e);
-                            }
-                        }
-                    }
-                    Route::Accelerator => {
-                        metrics.routed_accel.fetch_add(1, Relaxed);
-                        let high = ctx.priority == Priority::High;
-                        let (op, row, row2) = match kind {
-                            RequestKind::MassSum { values } => (MassOp::Sumup, values, None),
-                            RequestKind::MassDot { a, b } => (MassOp::Dot, a, Some(b)),
-                            RequestKind::RunProgram { .. } => unreachable!("router"),
-                        };
-                        let b = batchers
-                            .entry(op)
-                            .or_insert_with(|| Batcher::new(cfg.batcher.clone()));
-                        if let Some(rows) = b.push(MassJob { ctx }, row, row2, Instant::now()) {
-                            flush(op, rows, &acc_tx);
-                        } else if high {
-                            // High priority refuses to wait out the batch
-                            // window: take whatever is pending now.
-                            if let Some(rows) = b.drain() {
-                                metrics.priority_flushes.fetch_add(1, Relaxed);
-                                flush(op, rows, &acc_tx);
-                            }
-                        }
-                    }
-                }
+        for (op, rows) in due {
+            self.metrics.deadline_flushes.fetch_add(1, Relaxed);
+            self.flush(op, rows);
+        }
+    }
+
+    /// Shutdown drain: overflowed programs onto the plane (uncapped —
+    /// workers are still up and will finish the backlog), pending batches
+    /// to the mass worker, then close the plane. Dropping `acc_tx` with
+    /// `self` disconnects the mass worker once it has drained.
+    fn shutdown_drain(mut self) {
+        while let Some(s) = self.staged.pop() {
+            if !s.ctx.admit(&self.metrics) {
+                continue;
+            }
+            self.plane.place(s.priority, SimTask::Run { kind: s.kind, ctx: s.ctx });
+        }
+        let batchers = std::mem::take(&mut self.batchers);
+        for (op, mut b) in batchers {
+            if let Some(rows) = b.drain() {
+                self.flush(op, rows);
             }
         }
+        self.plane.close();
     }
-    // Shutdown drain: staged programs to the pool (blocking — workers are
-    // still up), pending batches to the mass worker.
-    while let Some(s) = staged.pop() {
-        if !s.ctx.admit(&metrics) {
-            continue;
-        }
-        if let Err(mpsc::SendError(SimMsg::Run { ctx, .. })) =
-            sim_tx.send(SimMsg::Run { kind: s.kind, ctx: s.ctx })
-        {
-            ctx.fail(&metrics, FabricError::Shutdown);
-        }
-    }
-    for (op, mut b) in batchers {
-        if let Some(rows) = b.drain() {
-            flush(op, rows, &acc_tx);
-        }
-    }
-    // Per-worker stop: dropping the senders disconnects each worker's
-    // recv loop once it has drained the queue — no counted Stop
-    // broadcast, so any pool size shuts down cleanly.
-    drop(sim_tx);
-    drop(acc_tx);
 }
 
 fn inline_mass(kind: &RequestKind) -> Result<Output, FabricError> {
     match kind {
         RequestKind::MassSum { values } => Ok(Output::Scalars(vec![values.iter().sum()])),
         RequestKind::MassDot { a, b } => {
+            // Submission validation rejects mismatches; never let one
+            // that slips through zip-truncate into a wrong answer.
+            if a.len() != b.len() {
+                return Err(FabricError::ShapeMismatch { a: a.len(), b: b.len() });
+            }
             Ok(Output::Scalars(vec![a.iter().zip(b).map(|(x, y)| x * y).sum()]))
         }
         RequestKind::RunProgram { .. } => Err(FabricError::Backend {
@@ -521,23 +787,27 @@ fn inline_mass(kind: &RequestKind) -> Result<Output, FabricError> {
 }
 
 /// Instantiate the first healthy backend of a chain on this thread,
-/// recording init successes/failures per backend.
+/// recording init successes/failures per backend. A failover is counted
+/// only when a later entry actually takes over — if every entry fails,
+/// nothing failed *over*, it just failed.
 fn instantiate_chain(
     chain: &[Arc<BackendEntry>],
     metrics: &FabricMetrics,
 ) -> Result<Box<dyn Backend>, FabricError> {
     let mut last: Option<FabricError> = None;
-    for (i, entry) in chain.iter().enumerate() {
+    let mut failed_ahead = 0u64;
+    for entry in chain.iter() {
         match entry.instantiate() {
             Ok(b) => {
                 metrics.backend(&entry.name).init_ok.fetch_add(1, Relaxed);
+                if failed_ahead > 0 {
+                    metrics.failovers.fetch_add(failed_ahead, Relaxed);
+                }
                 return Ok(b);
             }
             Err(e) => {
                 metrics.backend(&entry.name).init_failures.fetch_add(1, Relaxed);
-                if i + 1 < chain.len() {
-                    metrics.failovers.fetch_add(1, Relaxed);
-                }
+                failed_ahead += 1;
                 last = Some(FabricError::Backend {
                     name: entry.name.clone(),
                     msg: format!("init: {e:#}"),
@@ -559,75 +829,129 @@ fn single_row_output(res: MassResult) -> Output {
     }
 }
 
+/// One sim worker: pops its own deque on the dispatch plane, steals from
+/// neighbours when idle, and serves program jobs and mass-op shards on
+/// its thread-owned backend. A panicking backend must not kill the
+/// worker — its lane would strand every staged job (nobody pops it, and
+/// `least_loaded` keeps feeding its empty deque) — so each task is
+/// served under `catch_unwind`: the in-flight job's reply sender drops
+/// with the unwound state (its caller observes `FabricError::Shutdown`)
+/// and the worker keeps draining.
 fn sim_worker(
-    rx: Arc<Mutex<Receiver<SimMsg>>>,
+    w: usize,
+    plane: Arc<DispatchPlane<SimTask>>,
     chain: Vec<Arc<BackendEntry>>,
     metrics: Arc<FabricMetrics>,
 ) {
     let active = instantiate_chain(&chain, &metrics);
     let stats = active.as_ref().ok().map(|b| metrics.backend(b.name()));
-    loop {
-        let msg = {
-            let g = rx.lock().unwrap();
-            g.recv()
-        };
-        let Ok(SimMsg::Run { kind, ctx }) = msg else { break };
-        if !ctx.admit(&metrics) {
-            continue;
-        }
-        let dispatched = Instant::now();
-        let backend = match &active {
-            Ok(b) => b,
-            Err(e) => {
-                ctx.fail(&metrics, e.clone());
-                continue;
-            }
-        };
-        let stats = stats.as_ref().expect("stats exist when backend does");
-        let reply = match &kind {
-            RequestKind::RunProgram { mode, values } => {
-                backend.execute(BackendJob::Program { mode: *mode, values })
-            }
-            // Mass jobs are not routed here, but a sim slot can still
-            // serve one (a conventional core doing the mass op).
-            RequestKind::MassSum { values } => {
-                let req = MassRequest::sumup(vec![values.clone()]);
-                backend.execute(BackendJob::Mass(&req))
-            }
-            RequestKind::MassDot { a, b } => {
-                let req = MassRequest::dot(vec![a.clone()], vec![b.clone()]);
-                backend.execute(BackendJob::Mass(&req))
-            }
-        };
-        match reply {
-            Ok(BackendReply::Program { eax, clocks, cores }) => {
-                stats.jobs.fetch_add(1, Relaxed);
-                ctx.complete(
-                    &metrics,
-                    Output::Program { eax, clocks, cores },
-                    Route::Simulator,
-                    backend.name(),
-                    1,
-                    dispatched,
-                );
-            }
-            Ok(BackendReply::Mass(res)) => {
-                stats.jobs.fetch_add(1, Relaxed);
-                ctx.complete(
-                    &metrics,
-                    single_row_output(res),
-                    Route::Simulator,
-                    backend.name(),
-                    1,
-                    dispatched,
-                );
-            }
-            Err(e) => {
-                stats.errors.fetch_add(1, Relaxed);
-                ctx.fail(&metrics, e);
-            }
+    let wstats = metrics.worker(w);
+    while let Some(task) = plane.next(w) {
+        let served = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            serve_sim_task(task, &active, stats.as_deref(), &wstats, &metrics)
+        }));
+        if served.is_err() {
+            metrics.errors.fetch_add(1, Relaxed);
         }
     }
+}
+
+/// Serve one dispatch-plane task on this worker's backend.
+fn serve_sim_task(
+    task: SimTask,
+    active: &Result<Box<dyn Backend>, FabricError>,
+    stats: Option<&BackendStats>,
+    wstats: &WorkerStats,
+    metrics: &FabricMetrics,
+) {
+    match task {
+        SimTask::Run { kind, ctx } => {
+            if !ctx.admit(metrics) {
+                return;
+            }
+            wstats.executed.fetch_add(1, Relaxed);
+            let dispatched = Instant::now();
+            let backend = match active {
+                Ok(b) => b,
+                Err(e) => {
+                    ctx.fail(metrics, e.clone());
+                    return;
+                }
+            };
+            let stats = stats.expect("stats exist when backend does");
+            let reply = match &kind {
+                RequestKind::RunProgram { mode, values } => {
+                    backend.execute(BackendJob::Program { mode: *mode, values })
+                }
+                // Mass jobs are not routed here, but a sim slot can
+                // still serve one (a conventional core doing the
+                // mass op).
+                RequestKind::MassSum { values } => {
+                    let req = MassRequest::sumup(vec![values.clone()]);
+                    backend.execute(BackendJob::Mass(&req))
+                }
+                RequestKind::MassDot { a, b } => {
+                    let req = MassRequest::dot(vec![a.clone()], vec![b.clone()]);
+                    backend.execute(BackendJob::Mass(&req))
+                }
+            };
+            match reply {
+                Ok(BackendReply::Program { eax, clocks, cores }) => {
+                    stats.jobs.fetch_add(1, Relaxed);
+                    ctx.complete(
+                        metrics,
+                        Output::Program { eax, clocks, cores },
+                        Route::Simulator,
+                        backend.name(),
+                        1,
+                        1,
+                        dispatched,
+                    );
+                }
+                Ok(BackendReply::Mass(res)) => {
+                    stats.jobs.fetch_add(1, Relaxed);
+                    ctx.complete(
+                        metrics,
+                        single_row_output(res),
+                        Route::Simulator,
+                        backend.name(),
+                        1,
+                        1,
+                        dispatched,
+                    );
+                }
+                Err(e) => {
+                    stats.errors.fetch_add(1, Relaxed);
+                    ctx.fail(metrics, e);
+                }
+            }
+        }
+        SimTask::Shard(task) => {
+            wstats.executed.fetch_add(1, Relaxed);
+            let name = active.as_ref().ok().map(|b| b.name());
+            run_shard(task, name, stats, metrics);
+        }
+    }
+}
+
+/// Serve one shard of a scattered mass op: compute this worker's slice
+/// (plain arithmetic — a core needs no backend to be a conventional
+/// core) and feed the partial result to the parent-side accumulator.
+fn run_shard(
+    task: ShardTask,
+    backend: Option<&str>,
+    stats: Option<&BackendStats>,
+    metrics: &FabricMetrics,
+) {
+    let ShardTask { gather, lo, hi } = task;
+    if gather.check_dead() {
+        // Cancelled or past its deadline while staged: contribute
+        // nothing; the last shard resolves the job with its typed error.
+        gather.absorb(0.0, backend.unwrap_or("sim-pool"), stats, metrics);
+        return;
+    }
+    let partial = gather.compute(lo, hi);
+    gather.absorb(partial, backend.unwrap_or("sim-pool"), stats, metrics);
 }
 
 /// One mass-chain slot: the entry's backend, instantiated on first use.
@@ -655,7 +979,10 @@ impl MassChain {
         MassChain { entries, slots }
     }
 
-    /// Execute one batch, walking the chain until a backend answers.
+    /// Execute one batch, walking the chain until a backend answers. A
+    /// failover is counted per entry that failed *this batch* before a
+    /// later entry answered it — an all-entries-failed batch is an error,
+    /// not a failover.
     fn run(
         &mut self,
         req: &MassRequest,
@@ -663,6 +990,7 @@ impl MassChain {
     ) -> Result<(MassResult, String), FabricError> {
         let rows = req.rows.len() as u64;
         let mut last_err: Option<FabricError> = None;
+        let mut failed_ahead = 0u64;
         let n = self.entries.len();
         for i in 0..n {
             if matches!(self.slots[i], Slot::Untried) {
@@ -675,10 +1003,8 @@ impl MassChain {
                     }
                     Err(e) => {
                         metrics.backend(&entry.name).init_failures.fetch_add(1, Relaxed);
-                        if i + 1 < n {
-                            metrics.failovers.fetch_add(1, Relaxed);
-                        }
                         self.slots[i] = Slot::Dead;
+                        failed_ahead += 1;
                         last_err = Some(FabricError::Backend {
                             name: entry.name.clone(),
                             msg: format!("init: {e:#}"),
@@ -692,10 +1018,14 @@ impl MassChain {
                     stats.jobs.fetch_add(rows, Relaxed);
                     stats.batches.fetch_add(1, Relaxed);
                     stats.rows.fetch_add(rows, Relaxed);
+                    if failed_ahead > 0 {
+                        metrics.failovers.fetch_add(failed_ahead, Relaxed);
+                    }
                     return Ok((res, backend.name().to_string()));
                 }
                 Ok(BackendReply::Program { .. }) => {
                     stats.errors.fetch_add(rows, Relaxed);
+                    failed_ahead += 1;
                     last_err = Some(FabricError::Backend {
                         name: backend.name().to_string(),
                         msg: "mass request answered with a program reply".into(),
@@ -703,12 +1033,9 @@ impl MassChain {
                 }
                 Err(e) => {
                     stats.errors.fetch_add(rows, Relaxed);
+                    failed_ahead += 1;
                     last_err = Some(e);
                 }
-            }
-            // Falling through to a later entry is a (per-batch) failover.
-            if i + 1 < n {
-                metrics.failovers.fetch_add(1, Relaxed);
             }
         }
         Err(last_err.unwrap_or(FabricError::Backend {
@@ -773,6 +1100,7 @@ fn mass_worker(rx: Receiver<AccelMsg>, chain: Vec<Arc<BackendEntry>>, metrics: A
                                 Route::Accelerator,
                                 &name,
                                 n,
+                                1,
                                 dispatched,
                             );
                         }
@@ -785,6 +1113,7 @@ fn mass_worker(rx: Receiver<AccelMsg>, chain: Vec<Arc<BackendEntry>>, metrics: A
                                 Route::Accelerator,
                                 &name,
                                 n,
+                                1,
                                 dispatched,
                             );
                         }
@@ -797,6 +1126,7 @@ fn mass_worker(rx: Receiver<AccelMsg>, chain: Vec<Arc<BackendEntry>>, metrics: A
                                 Route::Accelerator,
                                 &name,
                                 n,
+                                1,
                                 dispatched,
                             );
                         }
@@ -836,6 +1166,7 @@ mod tests {
         assert_eq!(c.output, Output::Program { eax: 10, clocks: 36, cores: 5 });
         assert_eq!(c.route, Route::Simulator);
         assert_eq!(c.backend, "sim");
+        assert_eq!(c.shards, 1);
         assert!(c.queue_latency <= c.latency);
         f.shutdown();
     }
@@ -931,6 +1262,62 @@ mod tests {
     }
 
     #[test]
+    fn oversized_mass_op_scatters_and_gathers() {
+        let cfg = FabricConfig {
+            sim_workers: 4,
+            route: RoutePolicy { accel_min_len: 64, split_min_len: 256 },
+            ..Default::default()
+        };
+        let f = Fabric::start_local(cfg);
+        let vals: Vec<f32> = (0..1024).map(|i| (i % 7) as f32 * 0.25).collect();
+        let want: f32 = vals.iter().sum();
+        let h = f.submit(RequestKind::MassSum { values: vals }).unwrap();
+        let c = h.wait().unwrap();
+        assert_eq!(c.route, Route::Split);
+        assert!(c.shards >= 2 && c.shards <= 4, "fan-out: {}", c.shards);
+        assert_eq!(c.backend, "sim");
+        let got = c.output.scalar().unwrap();
+        assert!((got - want).abs() < 1e-2 * (1.0 + want.abs()), "{got} vs {want}");
+        assert_eq!(f.metrics.routed_split.load(Relaxed), 1);
+        assert!(f.metrics.split_shards.load(Relaxed) >= 2);
+        f.shutdown();
+    }
+
+    #[test]
+    fn shard_gather_honours_cancellation_while_staged() {
+        // Drive the gather directly: the second shard observes the
+        // cancel flag, so the job resolves Cancelled, not Ok.
+        let metrics = FabricMetrics::default();
+        let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let ctx = JobCtx {
+            id: 1,
+            priority: Priority::Normal,
+            deadline: None,
+            submitted: Instant::now(),
+            cancel: Arc::clone(&cancel),
+            reply: tx,
+        };
+        let gather = Arc::new(ShardGather {
+            a: vec![1.0; 8],
+            b: None,
+            ctx: Mutex::new(Some(ctx)),
+            sum: Mutex::new(0.0),
+            dead: AtomicBool::new(false),
+            remaining: AtomicUsize::new(2),
+            shards: 2,
+            dispatched: Instant::now(),
+        });
+        let first = ShardTask { gather: Arc::clone(&gather), lo: 0, hi: 4 };
+        run_shard(first, Some("sim"), None, &metrics);
+        cancel.store(true, std::sync::atomic::Ordering::Release);
+        run_shard(ShardTask { gather, lo: 4, hi: 8 }, Some("sim"), None, &metrics);
+        assert_eq!(rx.try_recv().unwrap(), Err(FabricError::Cancelled));
+        assert_eq!(metrics.cancelled.load(Relaxed), 1);
+        assert_eq!(metrics.completed.load(Relaxed), 0);
+    }
+
+    #[test]
     #[allow(deprecated)]
     fn legacy_response_shim_flattens_results() {
         let ok: JobResult = Ok(Completion {
@@ -938,6 +1325,7 @@ mod tests {
             route: Route::Inline,
             backend: "inline".into(),
             batch_rows: 1,
+            shards: 1,
             queue_latency: Duration::ZERO,
             latency: Duration::ZERO,
         });

@@ -4,8 +4,10 @@
 //! work to an external accelerator is "only worth it for activities long
 //! enough to be not disproportional with that offset time". Short mass
 //! ops are computed inline by the leader; long ones go through the §3.8
-//! link to the mass-backend chain; program jobs always go to the
-//! program-class backends (the simulated EMPA pool).
+//! link to the mass-backend chain; *oversized* ones are scattered across
+//! the sim pool's dispatch plane and gathered by a parent-side
+//! accumulator; program jobs always go to the program-class backends
+//! (the simulated EMPA pool).
 
 use crate::api::{RequestKind, Route};
 
@@ -14,11 +16,24 @@ use crate::api::{RequestKind, Route};
 pub struct RoutePolicy {
     /// Minimum vector length for the accelerator to pay off.
     pub accel_min_len: usize,
+    /// Minimum vector length for scatter/gather across the sim pool to
+    /// pay off (oversized ops are chunked instead of batched whole).
+    pub split_min_len: usize,
 }
 
 impl Default for RoutePolicy {
     fn default() -> Self {
-        RoutePolicy { accel_min_len: 64 }
+        RoutePolicy { accel_min_len: 64, split_min_len: 8192 }
+    }
+}
+
+fn mass_route(len: usize, policy: &RoutePolicy) -> Route {
+    if len >= policy.split_min_len {
+        Route::Split
+    } else if len >= policy.accel_min_len {
+        Route::Accelerator
+    } else {
+        Route::Inline
     }
 }
 
@@ -26,20 +41,11 @@ impl Default for RoutePolicy {
 pub fn route(kind: &RequestKind, policy: &RoutePolicy) -> Route {
     match kind {
         RequestKind::RunProgram { .. } => Route::Simulator,
-        RequestKind::MassSum { values } => {
-            if values.len() >= policy.accel_min_len {
-                Route::Accelerator
-            } else {
-                Route::Inline
-            }
-        }
-        RequestKind::MassDot { a, .. } => {
-            if a.len() >= policy.accel_min_len {
-                Route::Accelerator
-            } else {
-                Route::Inline
-            }
-        }
+        RequestKind::MassSum { values } => mass_route(values.len(), policy),
+        // Mismatched operands are rejected at submission
+        // (`FabricError::ShapeMismatch`); routing by the shorter side is
+        // defence in depth — a mismatch can never widen the lane.
+        RequestKind::MassDot { a, b } => mass_route(a.len().min(b.len()), policy),
     }
 }
 
@@ -57,7 +63,7 @@ mod tests {
 
     #[test]
     fn threshold_splits_mass_ops() {
-        let p = RoutePolicy { accel_min_len: 10 };
+        let p = RoutePolicy { accel_min_len: 10, ..Default::default() };
         assert_eq!(route(&RequestKind::MassSum { values: vec![0.0; 9] }, &p), Route::Inline);
         assert_eq!(route(&RequestKind::MassSum { values: vec![0.0; 10] }, &p), Route::Accelerator);
         assert_eq!(
@@ -66,6 +72,28 @@ mod tests {
         );
         assert_eq!(
             route(&RequestKind::MassDot { a: vec![0.0; 2], b: vec![0.0; 2] }, &p),
+            Route::Inline
+        );
+    }
+
+    #[test]
+    fn oversized_mass_ops_route_to_split() {
+        let p = RoutePolicy { accel_min_len: 10, split_min_len: 100 };
+        assert_eq!(route(&RequestKind::MassSum { values: vec![0.0; 99] }, &p), Route::Accelerator);
+        assert_eq!(route(&RequestKind::MassSum { values: vec![0.0; 100] }, &p), Route::Split);
+        assert_eq!(
+            route(&RequestKind::MassDot { a: vec![0.0; 256], b: vec![0.0; 256] }, &p),
+            Route::Split
+        );
+    }
+
+    #[test]
+    fn dot_routes_by_the_shorter_operand() {
+        // Mismatches are rejected at submission; the router must still
+        // never let the long side widen the lane.
+        let p = RoutePolicy { accel_min_len: 10, split_min_len: 100 };
+        assert_eq!(
+            route(&RequestKind::MassDot { a: vec![0.0; 500], b: vec![0.0; 4] }, &p),
             Route::Inline
         );
     }

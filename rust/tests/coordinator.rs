@@ -1,13 +1,17 @@
-//! Fabric coordinator integration: routing, batching, ordering,
-//! backpressure, deadlines, cancellation, and backend failover with the
-//! native accelerator (the XLA path is covered in `runtime_accel.rs`).
+//! Fabric coordinator integration: routing, dispatch-plane staging and
+//! stealing, batching, scatter/gather, ordering, backpressure, deadlines,
+//! cancellation, and backend failover with the native accelerator (the
+//! XLA path is covered in `runtime_accel.rs`).
 //!
 //! Failures are asserted on `FabricError` *variants* — the typed taxonomy
 //! is the contract, not message strings.
 
 use empa::accel::{Accelerator, BatcherConfig, MassRequest, MassResult, NativeAccel};
 use empa::api::{FabricError, Job, JobRequest, Output, Priority, RequestKind, Route};
-use empa::coordinator::{Backend, BackendClass, BackendRegistry, Fabric, FabricConfig, SimBackend};
+use empa::coordinator::{
+    Backend, BackendClass, BackendJob, BackendReply, BackendRegistry, Fabric, FabricConfig,
+    RoutePolicy, SimBackend,
+};
 use empa::empa::EmpaConfig;
 use empa::util::Rng;
 use empa::workload::sumup::Mode;
@@ -27,6 +31,45 @@ fn sim_registry(empa_cfg: EmpaConfig) -> BackendRegistry {
         BackendClass::Program,
         Box::new(move || Ok(Box::new(SimBackend::new(empa_cfg.clone())) as Box<dyn Backend>)),
     )
+}
+
+/// A program backend that sleeps `values[0]` milliseconds per job —
+/// deterministic service times for the dispatch-plane tests.
+struct Paced;
+
+impl Backend for Paced {
+    fn name(&self) -> &str {
+        "paced"
+    }
+    fn execute(&self, job: BackendJob) -> Result<BackendReply, FabricError> {
+        match job {
+            BackendJob::Program { values, .. } => {
+                let ms = values.first().copied().unwrap_or(0).max(0) as u64;
+                std::thread::sleep(Duration::from_millis(ms));
+                Ok(BackendReply::Program { eax: ms as i32, clocks: ms, cores: 1 })
+            }
+            BackendJob::Mass(_) => Err(FabricError::Backend {
+                name: "paced".into(),
+                msg: "program backend".into(),
+            }),
+        }
+    }
+}
+
+/// A registry whose program lane is [`Paced`] and whose mass lane is the
+/// native loops.
+fn paced_registry() -> BackendRegistry {
+    BackendRegistry::new()
+        .register(
+            "paced",
+            BackendClass::Program,
+            Box::new(|| Ok(Box::new(Paced) as Box<dyn Backend>)),
+        )
+        .register_accel("native", || Ok(Box::new(NativeAccel) as Box<dyn Accelerator>))
+}
+
+fn paced_job(ms: i32) -> RequestKind {
+    RequestKind::RunProgram { mode: Mode::No, values: vec![ms] }
 }
 
 #[test]
@@ -353,6 +396,174 @@ fn shutdown_scales_past_the_old_stop_broadcast_limit() {
         .unwrap();
     assert!(h.wait().is_ok());
     f.shutdown(); // must return (joins all 96 workers)
+}
+
+#[test]
+fn inline_jobs_bypass_a_saturated_program_backlog() {
+    // The head-of-line-blocking regression the dispatch plane fixes: the
+    // seed router stopped ingesting once its staged heap hit queue_cap,
+    // so an inline mass op queued behind the whole program backlog. Now
+    // program jobs stage on the plane (and then the overflow heap) while
+    // inline jobs keep flowing.
+    let cfg = FabricConfig { sim_workers: 1, queue_cap: 4, ..Default::default() };
+    let f = Fabric::start(cfg, paced_registry());
+    // 1 running + 4 on the worker's deque (= queue_cap, saturated) + 3
+    // in the overflow heap — ingestion must still be live.
+    let progs: Vec<Job> = (0..8).map(|_| f.submit(paced_job(200)).unwrap()).collect();
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(
+        f.metrics.worker(0).depth.load(Ordering::Relaxed) >= 3,
+        "program backlog is staged on the worker's deque"
+    );
+    let h = f.submit(RequestKind::MassSum { values: vec![1.0, 2.0, 3.0] }).unwrap();
+    let c = h.wait().unwrap();
+    assert_eq!(c.output, Output::Scalars(vec![6.0]));
+    assert_eq!(c.route, Route::Inline);
+    assert!(
+        c.latency < Duration::from_millis(150),
+        "inline job must not wait out a 200 ms program slot: {:?}",
+        c.latency
+    );
+    for p in progs {
+        assert!(matches!(p.wait().unwrap().output, Output::Program { .. }));
+    }
+    assert_eq!(f.metrics.total_placements(), 8, "every program staged exactly once");
+    f.shutdown();
+}
+
+#[test]
+fn idle_worker_steals_the_busy_workers_backlog() {
+    // Steal fairness: jobs staged behind a long-running job on one
+    // worker's deque finish via the idle neighbour instead of
+    // serialising behind it.
+    let cfg = FabricConfig { sim_workers: 2, ..Default::default() };
+    let f = Fabric::start(cfg, paced_registry());
+    let slow = f.submit(paced_job(500)).unwrap();
+    let quick: Vec<(i32, Job)> =
+        (0..7).map(|_| (10, f.submit(paced_job(10)).unwrap())).collect();
+    for (ms, j) in quick {
+        let c = j.wait().unwrap();
+        assert_eq!(c.output, Output::Program { eax: ms, clocks: ms as u64, cores: 1 });
+    }
+    assert!(matches!(slow.wait().unwrap().output, Output::Program { eax: 500, .. }));
+    assert!(
+        f.metrics.total_steals() >= 1,
+        "the idle neighbour must have stolen staged work: {}",
+        f.metrics.render()
+    );
+    let executed: u64 = (0..2)
+        .map(|w| f.metrics.worker(w).executed.load(Ordering::Relaxed))
+        .sum();
+    assert_eq!(executed, 8);
+    assert_eq!(f.metrics.total_queue_depth(), 0, "deques drained");
+    f.shutdown();
+}
+
+#[test]
+fn mass_dot_length_mismatch_is_rejected_at_submission() {
+    let f = fabric(FabricConfig::default());
+    // Below the accelerator threshold: used to zip-truncate inline.
+    let err = f.submit(RequestKind::MassDot { a: vec![1.0; 8], b: vec![1.0; 7] }).unwrap_err();
+    assert_eq!(err, FabricError::ShapeMismatch { a: 8, b: 7 });
+    // Above it: used to reach the batcher with ragged rows.
+    let err = f
+        .try_submit(RequestKind::MassDot { a: vec![1.0; 512], b: vec![1.0; 100] })
+        .unwrap_err();
+    assert!(matches!(err, FabricError::ShapeMismatch { a: 512, b: 100 }));
+    assert_eq!(f.metrics.submitted.load(Ordering::Relaxed), 0, "rejected before any queue");
+    // Well-formed dots still serve.
+    let h = f.submit(RequestKind::MassDot { a: vec![2.0; 128], b: vec![3.0; 128] }).unwrap();
+    assert_eq!(h.wait().unwrap().output, Output::Scalars(vec![768.0]));
+    f.shutdown();
+}
+
+#[test]
+fn failovers_count_only_when_a_later_entry_takes_over() {
+    struct Broken;
+    impl Accelerator for Broken {
+        fn name(&self) -> &str {
+            "broken"
+        }
+        fn execute(&self, _req: &MassRequest) -> anyhow::Result<MassResult> {
+            anyhow::bail!("simulated accelerator failure")
+        }
+    }
+    // Every entry fails — nothing failed *over*, so the counter must
+    // stay 0 (the seed counted one per non-last failing entry).
+    let registry = BackendRegistry::new()
+        .register("dead-a", BackendClass::Program, Box::new(|| anyhow::bail!("a")))
+        .register("dead-b", BackendClass::Program, Box::new(|| anyhow::bail!("b")))
+        .register_accel("broken-1", || Ok(Box::new(Broken) as Box<dyn Accelerator>))
+        .register_accel("broken-2", || Ok(Box::new(Broken) as Box<dyn Accelerator>));
+    let f = Fabric::start(FabricConfig { sim_workers: 1, ..Default::default() }, registry);
+    let h = f.submit(RequestKind::RunProgram { mode: Mode::No, values: vec![1] }).unwrap();
+    assert!(matches!(h.wait(), Err(FabricError::Backend { .. })));
+    let h = f.submit(RequestKind::MassSum { values: vec![1.0; 512] }).unwrap();
+    assert!(matches!(h.wait(), Err(FabricError::Backend { .. })));
+    assert_eq!(f.metrics.backend("dead-a").init_failures.load(Ordering::Relaxed), 1);
+    assert_eq!(f.metrics.backend("dead-b").init_failures.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        f.metrics.failovers.load(Ordering::Relaxed),
+        0,
+        "all-entries-failed is an error, not a failover"
+    );
+    f.shutdown();
+}
+
+#[test]
+fn oversized_mass_ops_scatter_across_the_sim_pool() {
+    let cfg = FabricConfig {
+        sim_workers: 4,
+        route: RoutePolicy { accel_min_len: 64, split_min_len: 256 },
+        ..Default::default()
+    };
+    let f = fabric(cfg);
+    let a: Vec<f32> = (0..512).map(|i| (i % 5) as f32).collect();
+    let b: Vec<f32> = (0..512).map(|i| (i % 3) as f32).collect();
+    let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+    let h = f.submit(RequestKind::MassDot { a, b }).unwrap();
+    let c = h.wait().unwrap();
+    assert_eq!(c.route, Route::Split);
+    assert_eq!(c.shards, 4, "2 * 512 / 256 capped at the pool width");
+    assert_eq!(c.batch_rows, 1);
+    let got = c.output.scalar().unwrap();
+    assert!((got - want).abs() < 1e-2 * (1.0 + want.abs()), "{got} vs {want}");
+    assert_eq!(f.metrics.routed_split.load(Ordering::Relaxed), 1);
+    assert_eq!(f.metrics.split_shards.load(Ordering::Relaxed), 4);
+    assert_eq!(f.metrics.total_placements(), 4, "one placement per shard");
+    assert_eq!(f.metrics.total_queue_depth(), 0, "gauges return to zero");
+    let executed: u64 = (0..4)
+        .map(|w| f.metrics.worker(w).executed.load(Ordering::Relaxed))
+        .sum();
+    assert_eq!(executed, 4, "each shard executed exactly once");
+    f.shutdown();
+}
+
+#[test]
+fn split_falls_back_to_the_batcher_when_no_worker_is_idle() {
+    // Scatter only pays when neighbours are free to help; with every
+    // lane busy the oversized op takes the bounded accelerator lane.
+    let cfg = FabricConfig {
+        sim_workers: 1,
+        route: RoutePolicy { accel_min_len: 64, split_min_len: 256 },
+        ..Default::default()
+    };
+    let f = Fabric::start(cfg, paced_registry());
+    let busy = f.submit(paced_job(300)).unwrap();
+    let staged = f.submit(paced_job(300)).unwrap();
+    std::thread::sleep(Duration::from_millis(30)); // one running, one staged
+    let h = f.submit(RequestKind::MassSum { values: vec![1.0; 512] }).unwrap();
+    let c = h.wait().unwrap();
+    assert_eq!(c.output, Output::Scalars(vec![512.0]));
+    assert_eq!(c.route, Route::Accelerator, "busy pool: no scatter");
+    assert_eq!(c.backend, "native");
+    assert_eq!(c.shards, 1);
+    assert_eq!(f.metrics.routed_split.load(Ordering::Relaxed), 0);
+    assert_eq!(f.metrics.routed_accel.load(Ordering::Relaxed), 1);
+    for j in [busy, staged] {
+        assert!(j.wait().is_ok());
+    }
+    f.shutdown();
 }
 
 #[test]
