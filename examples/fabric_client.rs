@@ -34,11 +34,25 @@ fn main() -> anyhow::Result<()> {
     // --- 1. typed requests through a tagged, cloneable client ----------
     let client = fabric.client().tagged("demo");
     let job = client.submit(
-        JobRequest::new(RequestKind::RunProgram { mode: Mode::Sumup, values: vec![1, 2, 3, 4] })
+        JobRequest::new(RequestKind::sumup(Mode::Sumup, vec![1, 2, 3, 4]))
             .with_priority(Priority::High),
     )?;
     let c = job.wait()?;
     println!("program job     : {:?} via `{}` ({:?})", c.output, c.backend, c.route);
+
+    // Every workload family is servable; repeats of a (family, mode,
+    // size-class) hit the compile-once template cache.
+    let dot = client.submit(RequestKind::dotprod(Mode::Sumup, vec![1, 2, 3], vec![4, 5, 6]))?;
+    println!("dotprod job     : {:?}", dot.wait()?.output);
+    let scale = client.submit(RequestKind::scale(Mode::For, vec![2, 3, 4], 10))?;
+    println!("scale job       : {:?} (result read back from memory)", scale.wait()?.output);
+    use empa::workload::traces::{TraceOp, TraceOpKind};
+    let trace = client.submit(RequestKind::traces(vec![
+        TraceOp::new(TraceOpKind::Add, 40),
+        TraceOp::new(TraceOpKind::Add, 3),
+        TraceOp::new(TraceOpKind::Sub, 1),
+    ]))?;
+    println!("trace-replay job: {:?}", trace.wait()?.output);
 
     // --- 2. non-blocking handles ---------------------------------------
     let mut job = client.submit(RequestKind::MassSum { values: vec![1.0; 4096] })?;
@@ -87,7 +101,7 @@ fn main() -> anyhow::Result<()> {
             .wait(),
         Err(FabricError::DeadlineExceeded)
     ));
-    let j = client.submit(RequestKind::RunProgram { mode: Mode::No, values: (0..500).collect() })?;
+    let j = client.submit(RequestKind::sumup(Mode::No, (0..500).collect()))?;
     j.cancel();
     match j.wait() {
         Err(FabricError::Cancelled) => {

@@ -2,10 +2,12 @@
 //! real mixed workload through the typed service API.
 //!
 //! Layer 3 (this binary): the EMPA fabric supervisor routes a synthetic
-//! trace of scalar-program jobs and mass operations; program jobs are
-//! placed on the dispatch plane's per-worker deques (idle workers steal
-//! neighbours' staged work) and run on the simulated EMPA processors
-//! (`sim` backend); large mass ops are dynamically batched into bucket
+//! trace of scalar-program jobs (all four workload families) and mass
+//! operations; program jobs are placed on the dispatch plane's
+//! per-worker deques (idle workers steal neighbours' staged work) and
+//! run on the simulated EMPA processors (`sim` backend) through the
+//! compile-once pipeline — cached code templates, patched data images,
+//! reused processors; large mass ops are dynamically batched into bucket
 //! tiles and executed by the mass-backend chain — `xla` (the Layer-2/1
 //! JAX+Pallas graph through PJRT) with `native` as the registry
 //! failover; oversized mass ops are scattered across idle sim workers

@@ -10,11 +10,14 @@
 //! metadata) or a structured [`FabricError`].
 //!
 //! Layering: `api` owns the request/response vocabulary and depends on
-//! nothing above `workload::sumup`; the `coordinator` implements the
+//! nothing above the `workload` family vocabulary ([`Family`]/[`Params`]
+//! and `workload::sumup::Mode`); the `coordinator` implements the
 //! service behind it; `workload::traces` *generates* `JobRequest`s rather
 //! than defining them.
 
+use crate::workload::family::{Family, Params};
 use crate::workload::sumup::Mode;
+use crate::workload::traces::TraceOp;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
@@ -29,12 +32,58 @@ pub use crate::coordinator::client::FabricClient;
 /// What a fabric request asks for (the job payload).
 #[derive(Debug, Clone, PartialEq)]
 pub enum RequestKind {
-    /// Simulate a sumup program in the given mode.
-    RunProgram { mode: Mode, values: Vec<i32> },
+    /// Simulate a workload-family program: `(family, mode, params)`. The
+    /// family names the code template, the mode picks the Table 1
+    /// parallelization shape, and `params` is the per-request data — the
+    /// compile-once pipeline caches the first two and patches the third.
+    /// Prefer the [`RequestKind::sumup`]/[`RequestKind::dotprod`]/
+    /// [`RequestKind::scale`]/[`RequestKind::traces`] constructors, which
+    /// keep `family` and `params` consistent by construction.
+    RunProgram { family: Family, mode: Mode, params: Params },
     /// Mass operation over a vector (accelerator-eligible).
     MassSum { values: Vec<f32> },
     /// Mass dot product (accelerator-eligible, exercises the MXU path).
     MassDot { a: Vec<f32>, b: Vec<f32> },
+}
+
+impl RequestKind {
+    /// A sumup program job (§5, any Table 1 mode).
+    pub fn sumup(mode: Mode, values: Vec<i32>) -> Self {
+        RequestKind::RunProgram {
+            family: Family::Sumup,
+            mode,
+            params: Params::Sumup { values },
+        }
+    }
+
+    /// A dot-product program job (§3.7 mass operating mode).
+    pub fn dotprod(mode: Mode, a: Vec<i32>, b: Vec<i32>) -> Self {
+        RequestKind::RunProgram {
+            family: Family::Dotprod,
+            mode,
+            params: Params::Dotprod { a, b },
+        }
+    }
+
+    /// An elementwise-scale program job (`y[i] = c * x[i]`; NO or FOR
+    /// mode — there is no reduction for SUMUP to accelerate).
+    pub fn scale(mode: Mode, x: Vec<i32>, c: i32) -> Self {
+        RequestKind::RunProgram {
+            family: Family::Scale,
+            mode,
+            params: Params::Scale { x, c },
+        }
+    }
+
+    /// A trace-replay program job (control-heavy interpreter; runs
+    /// conventionally).
+    pub fn traces(ops: Vec<TraceOp>) -> Self {
+        RequestKind::RunProgram {
+            family: Family::Traces,
+            mode: Mode::No,
+            params: Params::Traces { ops },
+        }
+    }
 }
 
 /// Scheduling priority of a job. `High` mass jobs flush their batch
@@ -94,6 +143,26 @@ impl From<RequestKind> for JobRequest {
     }
 }
 
+/// Validate a program-request triple: family/params coherence, mode
+/// support, operand shape. The **single** rule set shared by client-side
+/// admission (`FabricClient::submit`) and the sim backend (defence in
+/// depth for directly driven backends) — one place to extend when a
+/// family or mode is added, one set of error messages.
+pub fn validate_program(family: Family, mode: Mode, params: &Params) -> Result<(), FabricError> {
+    if family != params.family() {
+        return Err(FabricError::FamilyMismatch { family, params: params.family() });
+    }
+    if !crate::workload::family::family_impl(family).modes().contains(&mode) {
+        return Err(FabricError::UnsupportedMode { family, mode });
+    }
+    if let Params::Dotprod { a, b } = params {
+        if a.len() != b.len() {
+            return Err(FabricError::ShapeMismatch { a: a.len(), b: b.len() });
+        }
+    }
+    Ok(())
+}
+
 // ----------------------------------------------------------------------
 // errors
 // ----------------------------------------------------------------------
@@ -110,10 +179,18 @@ pub enum FabricError {
     DeadlineExceeded,
     /// The job was cancelled via [`Job::cancel`] before dispatch.
     Cancelled,
-    /// A mass-dot request's operands disagree in length. Rejected at
-    /// submission, before the job reaches any queue — a silently
-    /// truncated dot product is a wrong answer, not a service result.
+    /// A mass-dot (or dot-product program) request's operands disagree
+    /// in length. Rejected at submission, before the job reaches any
+    /// queue — a silently truncated dot product is a wrong answer, not a
+    /// service result.
     ShapeMismatch { a: usize, b: usize },
+    /// The requested mode is not defined for the workload family (e.g.
+    /// SUMUP for `scale`, which has no reduction). Rejected at
+    /// submission.
+    UnsupportedMode { family: Family, mode: Mode },
+    /// A `RunProgram`'s declared family disagrees with its params
+    /// variant (use the `RequestKind` constructors to avoid this).
+    FamilyMismatch { family: Family, params: Family },
     /// The guest program faulted (or failed to assemble) on the simulated
     /// EMPA processor.
     GuestFault(String),
@@ -132,6 +209,15 @@ impl std::fmt::Display for FabricError {
             FabricError::ShapeMismatch { a, b } => {
                 write!(f, "mass-dot operands disagree in length: a has {a}, b has {b}")
             }
+            FabricError::UnsupportedMode { family, mode } => {
+                write!(f, "family `{}` does not support {} mode", family.name(), mode.name())
+            }
+            FabricError::FamilyMismatch { family, params } => write!(
+                f,
+                "request declares family `{}` but carries `{}` params",
+                family.name(),
+                params.name()
+            ),
             FabricError::GuestFault(m) => write!(f, "guest fault: {m}"),
             FabricError::Backend { name, msg } => write!(f, "backend `{name}`: {msg}"),
             FabricError::Shutdown => write!(f, "fabric is shut down"),
@@ -163,8 +249,11 @@ pub enum Route {
 /// Successful job output.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Output {
-    /// Program simulated: final %eax, clocks, cores used.
-    Program { eax: i32, clocks: u64, cores: usize },
+    /// Program simulated: final %eax, clocks, cores used, plus the
+    /// family's read-back memory span (`data`; empty for the reduction
+    /// families whose result *is* %eax — scale returns its output array
+    /// here).
+    Program { eax: i32, clocks: u64, cores: usize, data: Vec<i32> },
     /// Mass op scalar result for this request's row(s).
     Scalars(Vec<f32>),
     /// Mass op row results.
@@ -368,6 +457,31 @@ mod tests {
         assert!(FabricError::QueueFull.to_string().contains("queue full"));
         let e = FabricError::ShapeMismatch { a: 3, b: 5 }.to_string();
         assert!(e.contains('3') && e.contains('5'), "{e}");
+        let e = FabricError::UnsupportedMode { family: Family::Scale, mode: Mode::Sumup };
+        assert!(e.to_string().contains("scale"), "{e}");
+        let e = FabricError::FamilyMismatch { family: Family::Sumup, params: Family::Traces };
+        assert!(e.to_string().contains("traces"), "{e}");
+    }
+
+    #[test]
+    fn request_constructors_keep_family_and_params_consistent() {
+        let cases = [
+            RequestKind::sumup(Mode::For, vec![1, 2]),
+            RequestKind::dotprod(Mode::Sumup, vec![1], vec![2]),
+            RequestKind::scale(Mode::No, vec![3], 5),
+            RequestKind::traces(vec![]),
+        ];
+        for kind in cases {
+            let RequestKind::RunProgram { family, params, .. } = kind else {
+                panic!("constructor builds RunProgram")
+            };
+            assert_eq!(family, params.family());
+        }
+        // the traces constructor pins the only supported mode
+        let RequestKind::RunProgram { mode, .. } = RequestKind::traces(vec![]) else {
+            unreachable!()
+        };
+        assert_eq!(mode, Mode::No);
     }
 
     #[test]

@@ -12,11 +12,15 @@
 //! degrades to the next entry instead of erroring every batch, and the
 //! failure is visible in the per-backend metrics.
 
+use super::metrics::FabricMetrics;
 use crate::accel::{Accelerator, MassRequest, MassResult, NativeAccel};
 use crate::api::{FabricError, RequestKind};
 use crate::empa::{EmpaConfig, EmpaProcessor};
-use crate::isa::assemble;
-use crate::workload::sumup::{self, Mode};
+use crate::isa::{assemble, Program};
+use crate::workload::family::{family_impl, Family, Params};
+use crate::workload::sumup::Mode;
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Which job class a backend serves.
@@ -30,14 +34,14 @@ pub enum BackendClass {
 
 /// One unit of work handed to a backend.
 pub enum BackendJob<'a> {
-    Program { mode: Mode, values: &'a [i32] },
+    Program { family: Family, mode: Mode, params: &'a Params },
     Mass(&'a MassRequest),
 }
 
 /// What a backend hands back.
 #[derive(Debug, Clone, PartialEq)]
 pub enum BackendReply {
-    Program { eax: i32, clocks: u64, cores: usize },
+    Program { eax: i32, clocks: u64, cores: usize, data: Vec<i32> },
     Mass(MassResult),
 }
 
@@ -50,6 +54,10 @@ pub trait Backend {
     fn name(&self) -> &str;
     /// Execute one job synchronously.
     fn execute(&self, job: BackendJob) -> Result<BackendReply, FabricError>;
+    /// Attach the fabric's shared metrics after instantiation, so a
+    /// backend can publish its internal counters (the sim pipeline's
+    /// template-cache and processor-reuse stats). Default: no-op.
+    fn attach_metrics(&mut self, _metrics: Arc<FabricMetrics>) {}
 }
 
 /// Constructs a backend on the owning worker thread. Invoked once per
@@ -172,18 +180,179 @@ pub fn class_of(kind: &RequestKind) -> BackendClass {
 }
 
 // ----------------------------------------------------------------------
-// the simulated EMPA pool as a backend
+// the simulated EMPA pool as a backend: the compile-once pipeline
 // ----------------------------------------------------------------------
 
-/// One simulated EMPA processor slot: assembles the sumup program for the
-/// requested mode and runs it cycle-stepped.
+/// Template-cache capacity per sim worker. Size-classes are exact
+/// element counts, so the working set is `family-mode combos ×
+/// length distribution`: the default serving trace (lengths 1..=32 over
+/// 9 family/mode combos) needs ~288 distinct keys — 512 holds all of
+/// them with headroom, so steady-state serving misses only on first
+/// touch. Templates are a few hundred bytes each; the worst-case cache
+/// is well under a megabyte per worker.
+const TEMPLATE_CACHE_CAP: usize = 512;
+
+type TemplateKey = (Family, Mode, u32);
+
+/// An LRU over assembled program templates: hash-map lookups, eviction
+/// by least-recent stamp (an O(cap) scan, paid only when the cache is
+/// full — far below the cost of the reassembly a hit avoids).
+struct TemplateCache {
+    cap: usize,
+    tick: u64,
+    entries: HashMap<TemplateKey, (u64, Arc<Program>)>,
+}
+
+impl TemplateCache {
+    fn new(cap: usize) -> Self {
+        TemplateCache { cap: cap.max(1), tick: 0, entries: HashMap::new() }
+    }
+
+    fn get(&mut self, key: TemplateKey) -> Option<Arc<Program>> {
+        self.tick += 1;
+        let e = self.entries.get_mut(&key)?;
+        e.0 = self.tick;
+        Some(Arc::clone(&e.1))
+    }
+
+    fn put(&mut self, key: TemplateKey, prog: Arc<Program>) {
+        self.tick += 1;
+        if self.entries.len() >= self.cap && !self.entries.contains_key(&key) {
+            if let Some(lru) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (stamp, _))| *stamp)
+                .map(|(k, _)| *k)
+            {
+                self.entries.remove(&lru);
+            }
+        }
+        self.entries.insert(key, (self.tick, prog));
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// Local (per-backend) pipeline counters, mirrored into the shared
+/// [`FabricMetrics`] when attached — directly inspectable in unit tests
+/// and when the backend is used standalone.
+#[derive(Debug, Default)]
+pub struct PipelineStats {
+    pub template_hits: Cell<u64>,
+    pub template_misses: Cell<u64>,
+    pub proc_reuses: Cell<u64>,
+    pub proc_rebuilds: Cell<u64>,
+}
+
+/// One simulated EMPA processor slot, built as a **compile-once
+/// pipeline**: program jobs name a `(family, mode, params)` triple; the
+/// code template for `(family, mode, size-class)` is assembled once and
+/// cached (LRU), each request patches its data words into a copy of the
+/// cached image, and the worker's `EmpaProcessor` is *reset*, not
+/// rebuilt — cores, memory, bus and decode cache are reused across jobs.
 pub struct SimBackend {
     cfg: EmpaConfig,
+    templates: RefCell<TemplateCache>,
+    proc: RefCell<Option<EmpaProcessor>>,
+    stats: PipelineStats,
+    metrics: Option<Arc<FabricMetrics>>,
 }
 
 impl SimBackend {
     pub fn new(cfg: EmpaConfig) -> Self {
-        SimBackend { cfg }
+        SimBackend {
+            cfg,
+            templates: RefCell::new(TemplateCache::new(TEMPLATE_CACHE_CAP)),
+            proc: RefCell::new(None),
+            stats: PipelineStats::default(),
+            metrics: None,
+        }
+    }
+
+    /// Local pipeline counters (tests, standalone use).
+    pub fn pipeline_stats(&self) -> &PipelineStats {
+        &self.stats
+    }
+
+    /// Cached templates (tests).
+    pub fn cached_templates(&self) -> usize {
+        self.templates.borrow().len()
+    }
+
+    fn count(&self, local: &Cell<u64>, shared: impl Fn(&FabricMetrics) -> &std::sync::atomic::AtomicU64) {
+        local.set(local.get() + 1);
+        if let Some(m) = &self.metrics {
+            shared(m).fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+    }
+
+    /// Fetch (or assemble and cache) the template for a size-class.
+    fn template(
+        &self,
+        family: Family,
+        mode: Mode,
+        size_class: u32,
+    ) -> Result<Arc<Program>, FabricError> {
+        let key = (family, mode, size_class);
+        if let Some(tpl) = self.templates.borrow_mut().get(key) {
+            self.count(&self.stats.template_hits, |m| &m.template_hits);
+            return Ok(tpl);
+        }
+        self.count(&self.stats.template_misses, |m| &m.template_misses);
+        let src = family_impl(family)
+            .template(mode, size_class)
+            .map_err(FabricError::GuestFault)?;
+        let prog =
+            Arc::new(assemble(&src).map_err(|e| FabricError::GuestFault(e.to_string()))?);
+        self.templates.borrow_mut().put(key, Arc::clone(&prog));
+        Ok(prog)
+    }
+
+    fn run_program(
+        &self,
+        family: Family,
+        mode: Mode,
+        params: &Params,
+    ) -> Result<BackendReply, FabricError> {
+        // Same rule set as client-side admission — defence in depth for a
+        // directly driven backend, with identical typed errors.
+        crate::api::validate_program(family, mode, params)?;
+        let fam = family_impl(family);
+        let size_class = fam.size_class(params).map_err(FabricError::GuestFault)?;
+        let tpl = self.template(family, mode, size_class)?;
+        // Patch the per-request data into a copy of the template image —
+        // byte-identical to regenerating and reassembling the source,
+        // without doing either.
+        let mut image = tpl.image.clone();
+        for (symbol, words) in fam.data_image(params).map_err(FabricError::GuestFault)? {
+            tpl.patch_into(&mut image, symbol, &words)
+                .map_err(|e| FabricError::GuestFault(e.to_string()))?;
+        }
+        let mut guard = self.proc.borrow_mut();
+        if let Some(p) = guard.as_mut() {
+            self.count(&self.stats.proc_reuses, |m| &m.proc_reuses);
+            p.reset_with(&image);
+        } else {
+            self.count(&self.stats.proc_rebuilds, |m| &m.proc_rebuilds);
+            *guard = Some(EmpaProcessor::new(&image, &self.cfg));
+        }
+        let proc = guard.as_mut().expect("constructed above");
+        let r = proc.run_report();
+        if let Some(f) = r.fault {
+            return Err(FabricError::GuestFault(f));
+        }
+        // Memory-resident results (scale's output array) are read back
+        // before the processor is reset by the next job.
+        let data = match fam.readback(params) {
+            Some((symbol, words)) => {
+                crate::workload::family::read_span(&tpl, &proc.mem, symbol, words)
+                    .map_err(FabricError::GuestFault)?
+            }
+            None => Vec::new(),
+        };
+        Ok(BackendReply::Program { eax: r.eax(), clocks: r.clocks, cores: r.max_occupied, data })
     }
 }
 
@@ -194,18 +363,8 @@ impl Backend for SimBackend {
 
     fn execute(&self, job: BackendJob) -> Result<BackendReply, FabricError> {
         match job {
-            BackendJob::Program { mode, values } => {
-                let (src, _) = sumup::program(mode, values);
-                let prog = assemble(&src).map_err(|e| FabricError::GuestFault(e.to_string()))?;
-                let r = EmpaProcessor::new(&prog.image, &self.cfg).run();
-                match r.fault {
-                    None => Ok(BackendReply::Program {
-                        eax: r.eax(),
-                        clocks: r.clocks,
-                        cores: r.max_occupied,
-                    }),
-                    Some(f) => Err(FabricError::GuestFault(f)),
-                }
+            BackendJob::Program { family, mode, params } => {
+                self.run_program(family, mode, params)
             }
             // Mass work lands here as scattered shards of oversized ops
             // (and, defensively, whole ops): serve it with the native
@@ -215,6 +374,10 @@ impl Backend for SimBackend {
                 .map(BackendReply::Mass)
                 .map_err(|e| FabricError::Backend { name: "sim".into(), msg: e.to_string() }),
         }
+    }
+
+    fn attach_metrics(&mut self, metrics: Arc<FabricMetrics>) {
+        self.metrics = Some(metrics);
     }
 }
 
@@ -282,10 +445,114 @@ mod tests {
     #[test]
     fn sim_backend_runs_programs_and_reports_guest_faults() {
         let b = SimBackend::new(EmpaConfig::default());
+        let params = Params::Sumup { values: vec![1, 2, 3, 4] };
         let r = b
-            .execute(BackendJob::Program { mode: Mode::Sumup, values: &[1, 2, 3, 4] })
+            .execute(BackendJob::Program { family: Family::Sumup, mode: Mode::Sumup, params: &params })
             .unwrap();
-        assert_eq!(r, BackendReply::Program { eax: 10, clocks: 36, cores: 5 });
+        // clocks/cores identical to the pre-pipeline direct assembly:
+        // the patched template is byte-for-byte the same program.
+        assert_eq!(
+            r,
+            BackendReply::Program { eax: 10, clocks: 36, cores: 5, data: vec![] }
+        );
+    }
+
+    #[test]
+    fn sim_backend_caches_templates_and_reuses_the_processor() {
+        let b = SimBackend::new(EmpaConfig::default());
+        let run = |values: Vec<i32>| {
+            let params = Params::Sumup { values };
+            let r = b
+                .execute(BackendJob::Program {
+                    family: Family::Sumup,
+                    mode: Mode::Sumup,
+                    params: &params,
+                })
+                .unwrap();
+            match r {
+                BackendReply::Program { eax, .. } => eax,
+                other => panic!("program reply expected, got {other:?}"),
+            }
+        };
+        assert_eq!(run(vec![1, 2, 3, 4]), 10);
+        assert_eq!(run(vec![5, 5, 5, 5]), 20, "same size-class, different data");
+        assert_eq!(run(vec![7; 9]), 63, "different size-class");
+        let s = b.pipeline_stats();
+        assert_eq!(s.template_misses.get(), 2, "one template per size-class");
+        assert_eq!(s.template_hits.get(), 1, "second N=4 job hit the cache");
+        assert_eq!(s.proc_rebuilds.get(), 1, "one processor per worker");
+        assert_eq!(s.proc_reuses.get(), 2);
+        assert_eq!(b.cached_templates(), 2);
+    }
+
+    #[test]
+    fn sim_backend_serves_every_family_and_reads_back_memory_results() {
+        let b = SimBackend::new(EmpaConfig::default());
+        // dotprod
+        let params = Params::Dotprod { a: vec![1, 2, 3], b: vec![4, 5, 6] };
+        let r = b
+            .execute(BackendJob::Program { family: Family::Dotprod, mode: Mode::For, params: &params })
+            .unwrap();
+        assert!(matches!(r, BackendReply::Program { eax: 32, .. }));
+        // scale: the result is the read-back output array, not %eax
+        let params = Params::Scale { x: vec![2, -3, 4], c: 10 };
+        let r = b
+            .execute(BackendJob::Program { family: Family::Scale, mode: Mode::For, params: &params })
+            .unwrap();
+        let BackendReply::Program { data, .. } = r else { panic!("program reply") };
+        assert_eq!(data, vec![20, -30, 40]);
+        // traces
+        use crate::workload::traces::{TraceOp, TraceOpKind};
+        let params = Params::Traces {
+            ops: vec![
+                TraceOp::new(TraceOpKind::Add, 7),
+                TraceOp::new(TraceOpKind::Sub, 2),
+                TraceOp::new(TraceOpKind::Xor, 1),
+            ],
+        };
+        let r = b
+            .execute(BackendJob::Program { family: Family::Traces, mode: Mode::No, params: &params })
+            .unwrap();
+        assert!(matches!(r, BackendReply::Program { eax: 4, .. }));
+    }
+
+    #[test]
+    fn sim_backend_rejects_bad_program_requests_with_typed_errors() {
+        let b = SimBackend::new(EmpaConfig::default());
+        let params = Params::Scale { x: vec![1], c: 2 };
+        assert_eq!(
+            b.execute(BackendJob::Program {
+                family: Family::Scale,
+                mode: Mode::Sumup,
+                params: &params
+            })
+            .unwrap_err(),
+            FabricError::UnsupportedMode { family: Family::Scale, mode: Mode::Sumup }
+        );
+        let params = Params::Sumup { values: vec![1] };
+        assert_eq!(
+            b.execute(BackendJob::Program {
+                family: Family::Dotprod,
+                mode: Mode::No,
+                params: &params
+            })
+            .unwrap_err(),
+            FabricError::FamilyMismatch { family: Family::Dotprod, params: Family::Sumup }
+        );
+    }
+
+    #[test]
+    fn template_cache_evicts_least_recently_used() {
+        let mut c = TemplateCache::new(2);
+        let p = Arc::new(Program::default());
+        c.put((Family::Sumup, Mode::No, 1), Arc::clone(&p));
+        c.put((Family::Sumup, Mode::No, 2), Arc::clone(&p));
+        assert!(c.get((Family::Sumup, Mode::No, 1)).is_some(), "touch 1 → 2 is LRU");
+        c.put((Family::Sumup, Mode::No, 3), Arc::clone(&p));
+        assert_eq!(c.len(), 2);
+        assert!(c.get((Family::Sumup, Mode::No, 2)).is_none(), "2 evicted");
+        assert!(c.get((Family::Sumup, Mode::No, 1)).is_some());
+        assert!(c.get((Family::Sumup, Mode::No, 3)).is_some());
     }
 
     #[test]
@@ -324,7 +591,11 @@ mod tests {
     #[test]
     fn class_of_partitions_request_kinds() {
         assert_eq!(
-            class_of(&RequestKind::RunProgram { mode: Mode::No, values: vec![] }),
+            class_of(&RequestKind::sumup(Mode::No, vec![])),
+            BackendClass::Program
+        );
+        assert_eq!(
+            class_of(&RequestKind::traces(vec![])),
             BackendClass::Program
         );
         assert_eq!(class_of(&RequestKind::MassSum { values: vec![] }), BackendClass::Mass);

@@ -133,12 +133,20 @@ impl FabricClient {
 
 /// Reject malformed requests before they reach any queue. A mismatched
 /// mass-dot used to be silently truncated by `iter().zip()` downstream —
-/// a wrong answer instead of an error.
+/// a wrong answer instead of an error; program requests go through the
+/// shared [`crate::api::validate_program`] rule set so a backend never
+/// sees an unservable job.
 fn validate(req: &JobRequest) -> Result<(), FabricError> {
-    if let RequestKind::MassDot { a, b } = &req.kind {
-        if a.len() != b.len() {
-            return Err(FabricError::ShapeMismatch { a: a.len(), b: b.len() });
+    match &req.kind {
+        RequestKind::MassDot { a, b } => {
+            if a.len() != b.len() {
+                return Err(FabricError::ShapeMismatch { a: a.len(), b: b.len() });
+            }
+            Ok(())
         }
+        RequestKind::RunProgram { family, mode, params } => {
+            crate::api::validate_program(*family, *mode, params)
+        }
+        RequestKind::MassSum { .. } => Ok(()),
     }
-    Ok(())
 }

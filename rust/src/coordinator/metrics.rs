@@ -61,6 +61,17 @@ pub struct FabricMetrics {
     pub deadline_flushes: AtomicU64,
     /// High-priority mass jobs that forced an immediate batch flush.
     pub priority_flushes: AtomicU64,
+    /// Program jobs served from a cached `(family, mode, size-class)`
+    /// template (no source regeneration, no reassembly).
+    pub template_hits: AtomicU64,
+    /// Program jobs whose template had to be generated and assembled.
+    pub template_misses: AtomicU64,
+    /// Program jobs served by resetting a worker's existing
+    /// `EmpaProcessor` (cores/memory/icache reused).
+    pub proc_reuses: AtomicU64,
+    /// Program jobs that had to construct a fresh `EmpaProcessor`
+    /// (first job on a worker).
+    pub proc_rebuilds: AtomicU64,
     backends: Mutex<HashMap<String, Arc<BackendStats>>>,
     clients: Mutex<HashMap<String, Arc<AtomicU64>>>,
     workers: Mutex<Vec<Arc<WorkerStats>>>,
@@ -139,6 +150,18 @@ impl FabricMetrics {
         }
     }
 
+    /// Template-cache hit rate of the compile-once program pipeline
+    /// (0 when no program job was served).
+    pub fn template_hit_rate(&self) -> f64 {
+        let h = self.template_hits.load(Ordering::Relaxed);
+        let m = self.template_misses.load(Ordering::Relaxed);
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
     /// Render a summary: one global line plus one line per backend.
     pub fn render(&self) -> String {
         let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
@@ -164,6 +187,16 @@ impl FabricMetrics {
             g(&self.priority_flushes),
             g(&self.failovers),
         );
+        if g(&self.template_hits) + g(&self.template_misses) > 0 {
+            out.push_str(&format!(
+                "\n  program pipeline: template hits={} misses={} ({:.0}% hit) proc reuses={} rebuilds={}",
+                g(&self.template_hits),
+                g(&self.template_misses),
+                100.0 * self.template_hit_rate(),
+                g(&self.proc_reuses),
+                g(&self.proc_rebuilds),
+            ));
+        }
         {
             let workers = self.workers.lock().unwrap();
             if !workers.is_empty() {
@@ -259,6 +292,21 @@ mod tests {
         m.routed_split.store(2, Ordering::Relaxed);
         m.split_shards.store(7, Ordering::Relaxed);
         assert_eq!(m.mean_split_shards(), 3.5);
+    }
+
+    #[test]
+    fn program_pipeline_counters_render_and_rate() {
+        let m = FabricMetrics::default();
+        assert_eq!(m.template_hit_rate(), 0.0);
+        assert!(!m.render().contains("program pipeline"), "line hidden before any program job");
+        m.template_hits.store(3, Ordering::Relaxed);
+        m.template_misses.store(1, Ordering::Relaxed);
+        m.proc_reuses.store(3, Ordering::Relaxed);
+        m.proc_rebuilds.store(1, Ordering::Relaxed);
+        assert_eq!(m.template_hit_rate(), 0.75);
+        let r = m.render();
+        assert!(r.contains("program pipeline: template hits=3 misses=1 (75% hit)"), "{r}");
+        assert!(r.contains("proc reuses=3 rebuilds=1"), "{r}");
     }
 
     #[test]

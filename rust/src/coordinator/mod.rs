@@ -49,7 +49,7 @@ pub use crate::api::{
 };
 pub use backend::{
     AccelBackend, Backend, BackendClass, BackendEntry, BackendFactory, BackendJob, BackendReply,
-    BackendRegistry, SimBackend,
+    BackendRegistry, PipelineStats, SimBackend,
 };
 pub use client::FabricClient;
 pub use dispatch::DispatchPlane;
@@ -116,7 +116,7 @@ impl Response {
     pub fn from_result(res: &JobResult) -> Response {
         match res {
             Ok(c) => match &c.output {
-                Output::Program { eax, clocks, cores } => {
+                Output::Program { eax, clocks, cores, data: _ } => {
                     Response::Program { eax: *eax, clocks: *clocks, cores: *cores }
                 }
                 Output::Scalars(v) => Response::Scalars(v.clone()),
@@ -792,13 +792,14 @@ fn inline_mass(kind: &RequestKind) -> Result<Output, FabricError> {
 /// nothing failed *over*, it just failed.
 fn instantiate_chain(
     chain: &[Arc<BackendEntry>],
-    metrics: &FabricMetrics,
+    metrics: &Arc<FabricMetrics>,
 ) -> Result<Box<dyn Backend>, FabricError> {
     let mut last: Option<FabricError> = None;
     let mut failed_ahead = 0u64;
     for entry in chain.iter() {
         match entry.instantiate() {
-            Ok(b) => {
+            Ok(mut b) => {
+                b.attach_metrics(Arc::clone(metrics));
                 metrics.backend(&entry.name).init_ok.fetch_add(1, Relaxed);
                 if failed_ahead > 0 {
                     metrics.failovers.fetch_add(failed_ahead, Relaxed);
@@ -880,8 +881,8 @@ fn serve_sim_task(
             };
             let stats = stats.expect("stats exist when backend does");
             let reply = match &kind {
-                RequestKind::RunProgram { mode, values } => {
-                    backend.execute(BackendJob::Program { mode: *mode, values })
+                RequestKind::RunProgram { family, mode, params } => {
+                    backend.execute(BackendJob::Program { family: *family, mode: *mode, params })
                 }
                 // Mass jobs are not routed here, but a sim slot can
                 // still serve one (a conventional core doing the
@@ -896,11 +897,11 @@ fn serve_sim_task(
                 }
             };
             match reply {
-                Ok(BackendReply::Program { eax, clocks, cores }) => {
+                Ok(BackendReply::Program { eax, clocks, cores, data }) => {
                     stats.jobs.fetch_add(1, Relaxed);
                     ctx.complete(
                         metrics,
-                        Output::Program { eax, clocks, cores },
+                        Output::Program { eax, clocks, cores, data },
                         Route::Simulator,
                         backend.name(),
                         1,
@@ -986,7 +987,7 @@ impl MassChain {
     fn run(
         &mut self,
         req: &MassRequest,
-        metrics: &FabricMetrics,
+        metrics: &Arc<FabricMetrics>,
     ) -> Result<(MassResult, String), FabricError> {
         let rows = req.rows.len() as u64;
         let mut last_err: Option<FabricError> = None;
@@ -996,7 +997,8 @@ impl MassChain {
             if matches!(self.slots[i], Slot::Untried) {
                 let entry = &self.entries[i];
                 match entry.instantiate() {
-                    Ok(b) => {
+                    Ok(mut b) => {
+                        b.attach_metrics(Arc::clone(metrics));
                         let stats = metrics.backend(&entry.name);
                         stats.init_ok.fetch_add(1, Relaxed);
                         self.slots[i] = Slot::Ready(b, stats);
@@ -1159,15 +1161,15 @@ mod tests {
     #[test]
     fn program_jobs_round_trip() {
         let f = small_fabric();
-        let h = f
-            .submit(RequestKind::RunProgram { mode: Mode::Sumup, values: vec![1, 2, 3, 4] })
-            .unwrap();
+        let h = f.submit(RequestKind::sumup(Mode::Sumup, vec![1, 2, 3, 4])).unwrap();
         let c = h.wait().unwrap();
-        assert_eq!(c.output, Output::Program { eax: 10, clocks: 36, cores: 5 });
+        assert_eq!(c.output, Output::Program { eax: 10, clocks: 36, cores: 5, data: vec![] });
         assert_eq!(c.route, Route::Simulator);
         assert_eq!(c.backend, "sim");
         assert_eq!(c.shards, 1);
         assert!(c.queue_latency <= c.latency);
+        assert_eq!(f.metrics.proc_rebuilds.load(Relaxed) + f.metrics.proc_reuses.load(Relaxed), 1);
+        assert_eq!(f.metrics.template_misses.load(Relaxed), 1);
         f.shutdown();
     }
 
@@ -1330,6 +1332,20 @@ mod tests {
             latency: Duration::ZERO,
         });
         assert_eq!(Response::from_result(&ok), Response::Scalars(vec![1.0]));
+        let prog: JobResult = Ok(Completion {
+            output: Output::Program { eax: 3, clocks: 9, cores: 1, data: vec![4] },
+            route: Route::Simulator,
+            backend: "sim".into(),
+            batch_rows: 1,
+            shards: 1,
+            queue_latency: Duration::ZERO,
+            latency: Duration::ZERO,
+        });
+        assert_eq!(
+            Response::from_result(&prog),
+            Response::Program { eax: 3, clocks: 9, cores: 1 },
+            "legacy shim drops the read-back data"
+        );
         let err: JobResult = Err(FabricError::QueueFull);
         let flat = Response::from_result(&err);
         assert!(

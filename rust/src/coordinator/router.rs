@@ -57,8 +57,13 @@ mod tests {
     #[test]
     fn programs_always_simulate() {
         let p = RoutePolicy::default();
-        let k = RequestKind::RunProgram { mode: Mode::No, values: vec![1] };
-        assert_eq!(route(&k, &p), Route::Simulator);
+        assert_eq!(route(&RequestKind::sumup(Mode::No, vec![1]), &p), Route::Simulator);
+        assert_eq!(
+            route(&RequestKind::dotprod(Mode::For, vec![1], vec![2]), &p),
+            Route::Simulator
+        );
+        assert_eq!(route(&RequestKind::scale(Mode::For, vec![1], 2), &p), Route::Simulator);
+        assert_eq!(route(&RequestKind::traces(vec![]), &p), Route::Simulator);
     }
 
     #[test]

@@ -146,6 +146,20 @@ impl Core {
     pub fn occupied(&self) -> bool {
         !matches!(self.alloc, AllocState::Free)
     }
+
+    /// Return the core to its just-constructed state, reusing the
+    /// allocation (processor reuse across program runs): back in the
+    /// pool, no parent/children/prealloc, zeroed glue and counters.
+    pub fn reset_full(&mut self) {
+        self.alloc = AllocState::Free;
+        self.regs = CoreRegs::default();
+        self.parent = None;
+        self.prealloc = 0;
+        self.available_at = 0;
+        self.retired = 0;
+        self.busy_clocks = 0;
+        self.reset_for_qt(0);
+    }
 }
 
 #[cfg(test)]
@@ -168,6 +182,26 @@ mod tests {
         c.alloc = AllocState::PreAllocatedBy { parent: 0 };
         assert!(!c.available(10));
         assert!(c.occupied());
+    }
+
+    #[test]
+    fn reset_full_returns_the_core_to_pool_state() {
+        let mut c = Core::new(3);
+        c.alloc = AllocState::Rented;
+        c.run = RunState::Halted;
+        c.regs.file[0] = 42;
+        c.parent = Some(1);
+        c.prealloc = 0b10;
+        c.available_at = 99;
+        c.retired = 7;
+        c.busy_clocks = 11;
+        c.reset_full();
+        assert_eq!(c.alloc, AllocState::Free);
+        assert_eq!(c.run, RunState::Idle);
+        assert_eq!(c.regs, CoreRegs::default());
+        assert_eq!((c.parent, c.prealloc, c.available_at), (None, 0, 0));
+        assert_eq!((c.retired, c.busy_clocks), (0, 0));
+        assert!(c.available(0));
     }
 
     #[test]

@@ -104,16 +104,22 @@ pub struct EmpaProcessor {
     rented_mask: u64,
     /// Reused phase-D worklist buffer (hot-loop allocation avoidance).
     worklist_buf: Vec<usize>,
-    /// Direct-mapped decoded-instruction cache: `(tag, insn)` where
-    /// `tag = pc << 24 | mem.version & 0xFFFFFF`; invalidated implicitly
-    /// when memory is written (version bump). Loops re-fetch the same
-    /// handful of PCs — see EXPERIMENTS.md §Perf.
-    icache: Vec<(u64, Insn)>,
+    /// Direct-mapped decoded-instruction cache: `(pc, mem version, insn)`;
+    /// invalidated implicitly when memory is written (version bump).
+    /// Loops re-fetch the same handful of PCs — see EXPERIMENTS.md §Perf.
+    /// The pc and the *full* version are stored side by side: the old
+    /// packed tag (`pc << 24 | version & 0xFFFFFF`) silently aliased once
+    /// the version wrapped past 2^24 writes, letting a stale entry
+    /// validate against self-modified code.
+    icache: Vec<(u32, u64, Insn)>,
     fault: Option<String>,
     halted: bool,
     /// Clock at which the root `halt` completed (the reported run time).
     halt_at: u64,
     max_clocks: u64,
+    /// Configured memory size (`reset_with` restores it, so a previous
+    /// oversized image cannot widen later programs' address space).
+    mem_size: usize,
 }
 
 impl EmpaProcessor {
@@ -139,11 +145,12 @@ impl EmpaProcessor {
             irq_inflight: vec![None; cfg.num_cores],
             rented_mask: 1,
             worklist_buf: Vec::new(),
-            icache: vec![(u64::MAX, Insn::Nop); 128],
+            icache: vec![(u32::MAX, 0, Insn::Nop); 128],
             fault: None,
             halted: false,
             halt_at: 0,
             max_clocks: cfg.max_clocks,
+            mem_size: cfg.mem.size,
         };
         p.trace.push(0, 0, Event::Rent { parent: None });
         p
@@ -151,6 +158,14 @@ impl EmpaProcessor {
 
     /// Run to completion and report.
     pub fn run(mut self) -> RunReport {
+        self.run_report()
+    }
+
+    /// Run to completion without consuming the processor, so it can be
+    /// reset and reused for the next program ([`EmpaProcessor::reset_with`]
+    /// — the compile-once pipeline's processor pool). Memory stays
+    /// readable afterwards for result read-back.
+    pub fn run_report(&mut self) -> RunReport {
         while !self.halted && self.fault.is_none() {
             if self.clock >= self.max_clocks {
                 self.fault = Some(format!("runaway: exceeded {} clocks", self.max_clocks));
@@ -173,9 +188,40 @@ impl EmpaProcessor {
             retired,
             bus: self.bus.stats(),
             sv_ops: self.sv.ops,
-            fault: self.fault,
-            trace: self.trace,
+            fault: self.fault.clone(),
+            trace: self.trace.clone(),
         }
+    }
+
+    /// Reset for a new program image, **reusing** the allocated cores,
+    /// memory, bus and decode cache instead of rebuilding them — the hot
+    /// path of the fabric's compile-once pipeline. Equivalent to
+    /// `EmpaProcessor::new(image, &same_cfg)` observationally: the root
+    /// core is rented at entry 0 and every [`RunReport`] field starts
+    /// from the same state. The decode cache is *not* cleared: its
+    /// entries carry the memory version, which `reload` keeps monotonic,
+    /// so entries from the previous program can never validate.
+    pub fn reset_with(&mut self, image: &[u8]) {
+        self.mem.reload(image, self.mem_size);
+        self.bus.reset();
+        self.sv.reset();
+        for c in &mut self.cores {
+            c.reset_full();
+        }
+        self.cores[0].alloc = AllocState::Rented;
+        self.cores[0].reset_for_qt(0);
+        self.clock = 0;
+        self.trace = Trace::new(self.trace.is_enabled());
+        self.root = 0;
+        self.max_occupied = 1;
+        self.ever_occupied = 1;
+        self.irq_log.clear();
+        self.irq_inflight.iter_mut().for_each(|x| *x = None);
+        self.rented_mask = 1;
+        self.fault = None;
+        self.halted = false;
+        self.halt_at = 0;
+        self.trace.push(0, 0, Event::Rent { parent: None });
     }
 
     /// Reserve a core for interrupt servicing (§3.6): rent it from the
@@ -236,7 +282,7 @@ impl EmpaProcessor {
             }
         }
         // ---- B: engines launch / finalise -----------------------------
-        if !self.sv.engines.is_empty() {
+        if self.sv.any_active() {
             self.engines_tick(now);
         }
         // ---- C: unblock ------------------------------------------------
@@ -361,23 +407,26 @@ impl EmpaProcessor {
         self.fault = Some(format!("core {id}: combinational intercept loop at {:#x}", self.cores[id].pc));
     }
 
-    /// Decode through the direct-mapped cache.
+    /// Decode through the direct-mapped cache. An entry hits only when
+    /// both its pc and its full memory version match — a wrapped or
+    /// truncated version can never validate a stale entry.
     #[inline]
     fn decode_cached(&mut self, pc: u32) -> Option<Insn> {
-        let tag = ((pc as u64) << 24) | (self.mem.version() & 0xFF_FFFF);
+        let version = self.mem.version();
         let slot = (pc as usize) & (self.icache.len() - 1);
-        let (t, i) = self.icache[slot];
-        if t == tag {
-            return Some(i);
+        let (cpc, cver, insn) = self.icache[slot];
+        if cpc == pc && cver == version {
+            return Some(insn);
         }
         let (insn, _len) = Insn::decode(self.mem.fetch_window(pc))?;
-        self.icache[slot] = (tag, insn);
+        self.icache[slot] = (pc, version, insn);
         Some(insn)
     }
 
-    fn parent_engine_mode(&mut self, child: usize) -> Option<MassMode> {
+    fn parent_engine_mode(&self, child: usize) -> Option<MassMode> {
         let parent = self.cores[child].parent?;
-        self.sv.engine_of_parent(parent).map(|e| e.mode)
+        let slot = self.sv.engine_of_parent(parent)?;
+        self.sv.get(slot).map(|e| e.mode)
     }
 
     // ------------------------------------------------------------------
@@ -403,9 +452,10 @@ impl EmpaProcessor {
         // transferring to FromChild in the parent").
         if let Some(v) = streamed {
             if let Some(parent) = self.cores[id].parent {
-                if let Some(e) = self.sv.engine_of_parent(parent) {
+                let readout = self.timing.sv_readout;
+                if let Some(e) = self.sv.engine_of_parent_mut(parent) {
                     if e.mode == MassMode::Sum && e.arrive(v) {
-                        e.done_at = Some(now + self.timing.sv_readout);
+                        e.done_at = Some(now + readout);
                     }
                     self.trace.push(now, id, Event::Stream { value: v });
                     self.sv.ops += 1;
@@ -543,7 +593,7 @@ impl EmpaProcessor {
                 if count == 0 {
                     engine.done_at = Some(now + self.timing.sv_stagger + if mode == MassMode::Sum { self.timing.sv_readout } else { 0 });
                 }
-                self.sv.engines.push(engine);
+                self.sv.add(engine);
                 self.sv.ops += 1;
                 self.cores[id].pc = next_pc;
                 self.cores[id].run = RunState::Blocked(BlockReason::MassEngine);
@@ -637,16 +687,17 @@ impl EmpaProcessor {
     // ------------------------------------------------------------------
 
     fn engines_tick(&mut self, now: u64) {
-        for eidx in 0..self.sv.engines.len() {
-            if self.sv.engines[eidx].finished {
+        for eidx in 0..self.sv.slot_count() {
+            let Some((mode, parent, finished)) =
+                self.sv.get(eidx).map(|e| (e.mode, e.parent, e.finished))
+            else {
+                continue; // reaped slot
+            };
+            if finished {
                 continue;
             }
-            let (mode, parent) = {
-                let e = &self.sv.engines[eidx];
-                (e.mode, e.parent)
-            };
             // finalise?
-            if let Some(done_at) = self.sv.engines[eidx].done_at {
+            if let Some(done_at) = self.sv.get(eidx).expect("live slot").done_at {
                 if done_at <= now {
                     self.finalize_engine(eidx, now);
                     continue;
@@ -654,34 +705,39 @@ impl EmpaProcessor {
             }
             match mode {
                 MassMode::Sum => {
-                    // Launch due children, one per SV tick (§4.1.3: the SV
-                    // is sequential — one allocation at a time).
-                    while self.sv.engines[eidx].remaining > 0 && self.sv.engines[eidx].next_launch_at <= now {
-                        let Some(child) = self.rent_for_mass(parent, now) else { break };
-                        let (body, addr) = {
-                            let e = &mut self.sv.engines[eidx];
-                            let a = e.addr;
-                            e.addr = e.addr.wrapping_add(4);
-                            e.remaining -= 1;
-                            e.next_launch_at = now + self.timing.sv_stagger;
-                            (e.body, a)
-                        };
-                        self.launch_child(parent, child, body, now);
-                        self.cores[child].regs.file[Reg::Ecx as usize] = addr;
-                        break; // one allocation per tick
+                    // Launch one due child per SV tick (§4.1.3: the SV is
+                    // sequential — one allocation at a time).
+                    let due = {
+                        let e = self.sv.get(eidx).expect("live slot");
+                        e.remaining > 0 && e.next_launch_at <= now
+                    };
+                    if due {
+                        if let Some(child) = self.rent_for_mass(parent, now) {
+                            let (body, addr) = {
+                                let e = self.sv.get_mut(eidx).expect("live slot");
+                                let a = e.addr;
+                                e.addr = e.addr.wrapping_add(4);
+                                e.remaining -= 1;
+                                e.next_launch_at = now + self.timing.sv_stagger;
+                                (e.body, a)
+                            };
+                            self.launch_child(parent, child, body, now);
+                            self.cores[child].regs.file[Reg::Ecx as usize] = addr;
+                        }
                     }
                 }
                 MassMode::For => {
                     // First launch only; iterations relaunch combinationally
                     // at the child's qterm.
-                    if self.sv.engines[eidx].child.is_none()
-                        && self.sv.engines[eidx].remaining > 0
-                        && self.sv.engines[eidx].next_launch_at <= now
-                    {
+                    let due = {
+                        let e = self.sv.get(eidx).expect("live slot");
+                        e.child.is_none() && e.remaining > 0 && e.next_launch_at <= now
+                    };
+                    if due {
                         let Some(child) = self.rent_for_mass(parent, now) else { continue };
+                        self.sv.set_child(eidx, Some(child));
                         let (body, addr, acc) = {
-                            let e = &mut self.sv.engines[eidx];
-                            e.child = Some(child);
+                            let e = self.sv.get(eidx).expect("live slot");
                             (e.body, e.addr, e.acc)
                         };
                         self.launch_child(parent, child, body, now);
@@ -697,28 +753,23 @@ impl EmpaProcessor {
     /// FOR engine: one iteration finished (child fetched `qterm`).
     /// Returns true when the child was relaunched (caller refetches).
     fn for_engine_iter_done(&mut self, child: usize, now: u64, worklist: &mut Vec<usize>) -> bool {
-        let eidx = self
-            .sv
-            .engines
-            .iter()
-            .position(|e| e.child == Some(child) && !e.finished)
-            .expect("engine of child");
-        let parent = self.sv.engines[eidx].parent;
+        let eidx = self.sv.engine_of_child(child).expect("engine of child");
+        let parent = self.sv.get(eidx).expect("live slot").parent;
         // Clone back the partial sum (§5.1: "the new partial sum is cloned
         // back to the parent also in %eax").
         let partial = self.cores[child].regs.file[Reg::Eax as usize];
         {
-            let e = &mut self.sv.engines[eidx];
+            let e = self.sv.get_mut(eidx).expect("live slot");
             e.acc = partial;
             e.remaining -= 1;
             e.addr = e.addr.wrapping_add(4);
         }
         self.sv.ops += 1;
-        if self.sv.engines[eidx].remaining > 0 {
+        if self.sv.get(eidx).expect("live slot").remaining > 0 {
             // Relaunch on the same rented child, same clock: the SV's
             // combinational termination+restart (§3.4).
             let (body, addr, acc) = {
-                let e = &self.sv.engines[eidx];
+                let e = self.sv.get(eidx).expect("live slot");
                 (e.body, e.addr, e.acc)
             };
             let glue = self.cores[parent].regs.clone();
@@ -740,8 +791,8 @@ impl EmpaProcessor {
             c.parent = None;
             c.run = RunState::Terminated;
             c.available_at = now;
-            self.sv.engines[eidx].child = None;
-            self.sv.engines[eidx].done_at = Some(now);
+            self.sv.set_child(eidx, None);
+            self.sv.get_mut(eidx).expect("live slot").done_at = Some(now);
             self.finalize_engine(eidx, now);
             worklist.push(parent);
             false
@@ -768,10 +819,10 @@ impl EmpaProcessor {
     /// Deliver engine results to the parent and unblock it.
     fn finalize_engine(&mut self, eidx: usize, now: u64) {
         let (parent, acc, addr, mode) = {
-            let e = &mut self.sv.engines[eidx];
-            e.finished = true;
+            let e = self.sv.get(eidx).expect("live slot");
             (e.parent, e.acc, e.addr, e.mode)
         };
+        self.sv.finish(eidx);
         let p = &mut self.cores[parent];
         // Leave the architectural state as the conventional loop would:
         // %eax = sum, %ecx = one past the vector, %edx = 0.
@@ -817,5 +868,105 @@ impl PseudoPort for LatchPort<'_> {
             _ => return None,
         }
         Some(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::assemble;
+    use crate::workload::sumup;
+
+    #[test]
+    fn icache_cannot_validate_stale_entries_after_version_wrap() {
+        // Regression for the packed-tag hazard: with
+        // `tag = pc << 24 | version & 0xFFFFFF`, a version advanced by
+        // exactly 2^24 writes produced the same tag, so a stale decode of
+        // self-modified code validated. The (pc, full version) tag must
+        // decode the new bytes.
+        let mut p = EmpaProcessor::new(&[0x00], &EmpaConfig::default()); // halt at 0
+        let v0 = p.mem.version();
+        assert_eq!(p.decode_cached(0), Some(Insn::Halt));
+        p.mem.write_u32(0, 0x1010_1010).unwrap(); // overwrite with nops
+        p.mem.force_version(v0 + (1 << 24)); // same low 24 bits as v0
+        assert_eq!(p.decode_cached(0), Some(Insn::Nop), "stale entry must not validate");
+    }
+
+    #[test]
+    fn icache_still_hits_on_unchanged_memory() {
+        let mut p = EmpaProcessor::new(&[0x00], &EmpaConfig::default());
+        assert_eq!(p.decode_cached(0), Some(Insn::Halt));
+        // same pc, same version: served from the cache (observable only
+        // as "still correct", the counter-free cache has no stats)
+        assert_eq!(p.decode_cached(0), Some(Insn::Halt));
+    }
+
+    #[test]
+    fn reset_with_reuses_the_processor_across_programs() {
+        let cfg = EmpaConfig::default();
+        let (src_a, want_a) = sumup::sumup_mode_program(&[1, 2, 3, 4]);
+        let (src_b, want_b) = sumup::for_mode_program(&[10, 20, 30]);
+        let prog_a = assemble(&src_a).unwrap();
+        let prog_b = assemble(&src_b).unwrap();
+
+        // fresh runs, for reference
+        let fresh_a = EmpaProcessor::new(&prog_a.image, &cfg).run();
+        let fresh_b = EmpaProcessor::new(&prog_b.image, &cfg).run();
+
+        let mut p = EmpaProcessor::new(&prog_a.image, &cfg);
+        let r_a = p.run_report();
+        assert_eq!(r_a.fault, None);
+        assert_eq!(r_a.eax(), want_a);
+        assert_eq!(r_a.clocks, fresh_a.clocks);
+
+        p.reset_with(&prog_b.image);
+        let r_b = p.run_report();
+        assert_eq!(r_b.fault, None);
+        assert_eq!(r_b.eax(), want_b);
+        assert_eq!(r_b.clocks, fresh_b.clocks, "reset run is cycle-identical to a fresh one");
+        assert_eq!(r_b.max_occupied, fresh_b.max_occupied);
+        assert_eq!(r_b.retired, fresh_b.retired);
+        assert_eq!(r_b.sv_ops, fresh_b.sv_ops);
+
+        // and back to the first program: the reused pool stays clean
+        p.reset_with(&prog_a.image);
+        let r_a2 = p.run_report();
+        assert_eq!(r_a2.fault, None);
+        assert_eq!(r_a2.eax(), want_a);
+        assert_eq!(r_a2.clocks, fresh_a.clocks);
+    }
+
+    #[test]
+    fn reset_with_clears_a_faulted_processor() {
+        let cfg = EmpaConfig { max_clocks: 200, ..Default::default() };
+        let looping = assemble("Loop: jmp Loop\n").unwrap();
+        let mut p = EmpaProcessor::new(&looping.image, &cfg);
+        let r = p.run_report();
+        assert!(r.fault.is_some(), "runaway fault expected");
+
+        let (src, want) = sumup::no_mode_program(&[5, 6]);
+        let prog = assemble(&src).unwrap();
+        p.reset_with(&prog.image);
+        let r = p.run_report();
+        assert_eq!(r.fault, None, "fault cleared by reset");
+        assert_eq!(r.eax(), want);
+    }
+
+    #[test]
+    fn reset_with_grows_for_large_images_but_never_carries_growth_over() {
+        let cfg = EmpaConfig {
+            mem: crate::mem::MemConfig { size: 64, ..crate::mem::MemConfig::ideal() },
+            ..Default::default()
+        };
+        let mut p = EmpaProcessor::new(&[0x00], &cfg);
+        let _ = p.run_report();
+        let big = vec![0x10u8; 128]; // nops past the configured size
+        p.reset_with(&big);
+        assert!(p.mem.len() >= 128);
+        // The next program sees the *configured* address space again: an
+        // out-of-bounds access faults exactly as on a fresh processor.
+        p.reset_with(&[0x00]);
+        assert_eq!(p.mem.len(), 64, "previous growth must not widen later programs");
+        assert!(p.mem.read_u32(64).is_err());
     }
 }

@@ -10,8 +10,13 @@
 //!
 //! The mass-processing engines (§5.1 FOR, §5.2 SUMUP) live here: one
 //! engine per parent core, configured by the `qmassfor` / `qmasssum`
-//! metainstructions.
-
+//! metainstructions. Engines sit in a **slot arena** with per-core
+//! indices (`core → engine slot` for both the parent and the FOR-child
+//! role), so the per-tick lookups the processor issues on every fetch
+//! and unblock — `engine_of_parent`, `engine_of_child`,
+//! `parent_engine_active` — are O(1) instead of O(engines): hardware
+//! would wire these as direct per-core registers, and a fabric serving
+//! many concurrent mass requests must not pay a scan per core per tick.
 
 /// Which mass-processing mode an engine implements.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,16 +51,19 @@ pub struct MassEngine {
     pub acc: i32,
     /// Earliest clock for the next child launch (SV sequential pacing).
     pub next_launch_at: u64,
-    /// FOR: the single reused child core.
+    /// FOR: the single reused child core. Maintained through
+    /// [`Supervisor::set_child`] so the per-core child index stays
+    /// consistent.
     pub child: Option<usize>,
     /// Set when all iterations completed; engine finalises (readout to the
     /// parent) once `clock >= done_at`.
     pub done_at: Option<u64>,
-    /// Engine finalised; kept until the processor reaps it.
+    /// Engine finalised; kept until the supervisor reaps the slot.
     pub finished: bool,
 }
 
 impl MassEngine {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(mode: MassMode, parent: usize, body: u32, addr: i32, count: u32, acc: i32, now: u64, stagger: u64) -> Self {
         MassEngine {
             mode,
@@ -82,38 +90,156 @@ impl MassEngine {
     }
 }
 
-/// Supervisor state: the set of active mass engines.
+/// Supervisor state: the mass-engine slot arena plus the per-core
+/// indices that make the hot-path lookups O(1).
 ///
 /// (Pool and bitmask state lives on the cores themselves, mirroring the
 /// paper's Fig. 2 where the masks are per-core storage the SV reads and
 /// writes.)
 #[derive(Debug, Default)]
 pub struct Supervisor {
-    pub engines: Vec<MassEngine>,
+    /// Engine slot arena; `None` marks a reaped (free) slot.
+    slots: Vec<Option<MassEngine>>,
+    /// Free slots, reused before the arena grows.
+    free: Vec<usize>,
+    /// Unfinished engines (gates the processor's per-tick engine phase).
+    active: usize,
+    /// core id → slot of the unfinished engine it parents.
+    parent_idx: Vec<Option<usize>>,
+    /// core id → slot of the unfinished FOR engine it serves as child.
+    child_idx: Vec<Option<usize>>,
     /// Total SV-level operations performed (metrics: SV load, §4.1.3
     /// bottleneck analysis).
     pub ops: u64,
 }
 
 impl Supervisor {
-    /// Engine driven by `parent`, if any unfinished one exists.
-    pub fn engine_of_parent(&mut self, parent: usize) -> Option<&mut MassEngine> {
-        self.engines.iter_mut().find(|e| e.parent == parent && !e.finished)
+    fn ensure_core(&mut self, core: usize) {
+        if core >= self.parent_idx.len() {
+            self.parent_idx.resize(core + 1, None);
+            self.child_idx.resize(core + 1, None);
+        }
     }
 
-    /// Engine whose FOR child is `core`.
-    pub fn engine_of_child(&mut self, core: usize) -> Option<&mut MassEngine> {
-        self.engines.iter_mut().find(|e| e.child == Some(core) && !e.finished)
+    /// Register a freshly configured engine; returns its slot.
+    pub fn add(&mut self, engine: MassEngine) -> usize {
+        let parent = engine.parent;
+        self.ensure_core(parent);
+        debug_assert!(
+            self.parent_idx[parent].is_none(),
+            "one engine per parent (the parent stalls on qmass*)"
+        );
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slots[s] = Some(engine);
+                s
+            }
+            None => {
+                self.slots.push(Some(engine));
+                self.slots.len() - 1
+            }
+        };
+        self.parent_idx[parent] = Some(slot);
+        self.active += 1;
+        slot
+    }
+
+    /// Engine in `slot`, if the slot is live.
+    pub fn get(&self, slot: usize) -> Option<&MassEngine> {
+        self.slots.get(slot)?.as_ref()
+    }
+
+    /// Mutable engine in `slot`. Do not flip `finished` or `child`
+    /// through this — use [`Supervisor::finish`] / [`Supervisor::set_child`]
+    /// so the indices stay consistent.
+    pub fn get_mut(&mut self, slot: usize) -> Option<&mut MassEngine> {
+        self.slots.get_mut(slot)?.as_mut()
+    }
+
+    /// Arena size (iteration bound for the processor's engine phase).
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Whether any engine is still unfinished.
+    pub fn any_active(&self) -> bool {
+        self.active > 0
+    }
+
+    /// Slot of the unfinished engine driven by `parent`, if any. O(1).
+    pub fn engine_of_parent(&self, parent: usize) -> Option<usize> {
+        self.parent_idx.get(parent).copied().flatten()
+    }
+
+    /// Unfinished engine driven by `parent`. O(1).
+    pub fn engine_of_parent_mut(&mut self, parent: usize) -> Option<&mut MassEngine> {
+        let slot = self.engine_of_parent(parent)?;
+        self.slots[slot].as_mut()
+    }
+
+    /// Slot of the unfinished FOR engine whose child is `core`. O(1).
+    pub fn engine_of_child(&self, core: usize) -> Option<usize> {
+        self.child_idx.get(core).copied().flatten()
     }
 
     /// True when `parent` still has an unfinished engine (blocks `halt`).
+    /// O(1).
     pub fn parent_engine_active(&self, parent: usize) -> bool {
-        self.engines.iter().any(|e| e.parent == parent && !e.finished)
+        self.engine_of_parent(parent).is_some()
     }
 
-    /// Drop finished engines.
+    /// (Re)assign the FOR engine's child core, keeping the child index
+    /// consistent.
+    pub fn set_child(&mut self, slot: usize, child: Option<usize>) {
+        let e = self.slots[slot].as_mut().expect("live engine slot");
+        if let Some(old) = e.child.take() {
+            self.child_idx[old] = None;
+        }
+        e.child = child;
+        if let Some(c) = child {
+            self.ensure_core(c);
+            debug_assert!(self.child_idx[c].is_none(), "a core serves one engine");
+            self.child_idx[c] = Some(slot);
+        }
+    }
+
+    /// Mark the engine finished and drop it from the per-core indices
+    /// (its parent may halt, its child core is released). The slot is
+    /// freed by the next [`Supervisor::reap`].
+    pub fn finish(&mut self, slot: usize) {
+        let e = self.slots[slot].as_mut().expect("live engine slot");
+        if e.finished {
+            return;
+        }
+        e.finished = true;
+        self.active -= 1;
+        let parent = e.parent;
+        let child = e.child.take();
+        self.parent_idx[parent] = None;
+        if let Some(c) = child {
+            self.child_idx[c] = None;
+        }
+    }
+
+    /// Free the slots of finished engines.
     pub fn reap(&mut self) {
-        self.engines.retain(|e| !e.finished);
+        for s in 0..self.slots.len() {
+            if self.slots[s].as_ref().is_some_and(|e| e.finished) {
+                self.slots[s] = None;
+                self.free.push(s);
+            }
+        }
+    }
+
+    /// Reset for processor reuse: drop all engines and indices, zero the
+    /// op counter, keep the allocations.
+    pub fn reset(&mut self) {
+        self.slots.clear();
+        self.free.clear();
+        self.active = 0;
+        self.parent_idx.clear();
+        self.child_idx.clear();
+        self.ops = 0;
     }
 }
 
@@ -138,18 +264,68 @@ mod tests {
     }
 
     #[test]
-    fn supervisor_lookup() {
+    fn indexed_lookup_tracks_parent_and_child() {
         let mut sv = Supervisor::default();
-        sv.engines.push(MassEngine::new(MassMode::For, 2, 0, 0, 1, 0, 0, 1));
-        sv.engines[0].child = Some(5);
-        assert!(sv.engine_of_parent(2).is_some());
-        assert!(sv.engine_of_parent(3).is_none());
-        assert!(sv.engine_of_child(5).is_some());
+        let slot = sv.add(MassEngine::new(MassMode::For, 2, 0, 0, 1, 0, 0, 1));
+        sv.set_child(slot, Some(5));
+        assert_eq!(sv.engine_of_parent(2), Some(slot));
+        assert_eq!(sv.engine_of_parent(3), None);
+        assert_eq!(sv.engine_of_child(5), Some(slot));
+        assert_eq!(sv.engine_of_child(2), None);
         assert!(sv.parent_engine_active(2));
-        sv.engines[0].finished = true;
+        assert!(sv.any_active());
+        // reassigning the child clears the old index entry
+        sv.set_child(slot, Some(7));
+        assert_eq!(sv.engine_of_child(5), None);
+        assert_eq!(sv.engine_of_child(7), Some(slot));
+        // finishing clears both indices immediately; reap frees the slot
+        sv.finish(slot);
         assert!(!sv.parent_engine_active(2));
+        assert_eq!(sv.engine_of_child(7), None);
+        assert!(!sv.any_active());
+        assert!(sv.get(slot).is_some(), "slot lives until reap");
         sv.reap();
-        assert!(sv.engines.is_empty());
+        assert!(sv.get(slot).is_none());
+    }
+
+    #[test]
+    fn reaped_slots_are_reused() {
+        let mut sv = Supervisor::default();
+        let a = sv.add(MassEngine::new(MassMode::Sum, 0, 0, 0, 1, 0, 0, 1));
+        sv.finish(a);
+        sv.reap();
+        let b = sv.add(MassEngine::new(MassMode::Sum, 1, 0, 0, 1, 0, 0, 1));
+        assert_eq!(a, b, "freed slot reused before growing the arena");
+        assert_eq!(sv.slot_count(), 1);
+    }
+
+    #[test]
+    fn many_engines_coexist_with_independent_indices() {
+        let mut sv = Supervisor::default();
+        let slots: Vec<usize> = (0..16)
+            .map(|p| sv.add(MassEngine::new(MassMode::Sum, p, 0, 0, 2, 0, 0, 1)))
+            .collect();
+        for (p, &s) in slots.iter().enumerate() {
+            assert_eq!(sv.engine_of_parent(p), Some(s));
+        }
+        sv.finish(slots[7]);
+        assert_eq!(sv.engine_of_parent(7), None);
+        assert_eq!(sv.engine_of_parent(8), Some(slots[8]), "neighbours unaffected");
+        assert!(sv.any_active());
+    }
+
+    #[test]
+    fn reset_drops_everything() {
+        let mut sv = Supervisor::default();
+        let s = sv.add(MassEngine::new(MassMode::For, 1, 0, 0, 1, 0, 0, 1));
+        sv.set_child(s, Some(2));
+        sv.ops = 9;
+        sv.reset();
+        assert!(!sv.any_active());
+        assert_eq!(sv.slot_count(), 0);
+        assert_eq!(sv.engine_of_parent(1), None);
+        assert_eq!(sv.engine_of_child(2), None);
+        assert_eq!(sv.ops, 0);
     }
 
     #[test]

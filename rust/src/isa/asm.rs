@@ -27,6 +27,29 @@ pub enum AsmError {
     BadDirective { line: usize, reason: String },
 }
 
+/// One labelled run of `.long` words in the data segment: the unit of
+/// per-request data patching in the compile-once pipeline. A span ends at
+/// the first non-contiguous word **or the next label**, so patching one
+/// symbol can never spill into a neighbouring array (or into code).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DataSpan {
+    /// Address of the first word.
+    pub addr: u32,
+    /// Extent in 32-bit words.
+    pub words: u32,
+}
+
+/// Data-patch failure: the write would leave the span's recorded extent.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum PatchError {
+    #[error("no data span recorded for symbol `{0}`")]
+    NoSpan(String),
+    #[error("patch of {got} words exceeds span `{symbol}` ({words} words)")]
+    Oversized { symbol: String, words: u32, got: u32 },
+    #[error("span `{symbol}` at {addr:#x}+{words} words leaves the image")]
+    OutOfImage { symbol: String, addr: u32, words: u32 },
+}
+
 /// An assembled program: a flat image plus symbol and line metadata.
 #[derive(Debug, Clone, Default)]
 pub struct Program {
@@ -34,6 +57,9 @@ pub struct Program {
     pub image: Vec<u8>,
     /// Label → address.
     pub symbols: HashMap<String, u32>,
+    /// Label → its `.long` run, for labels that name data (the
+    /// data-segment layout the compile-once pipeline patches through).
+    pub data_layout: HashMap<String, DataSpan>,
     /// (address, source line, source text) for listing/disassembly.
     pub lines: Vec<(u32, usize, String)>,
     /// Entry point (address of the first emitted instruction; 0 unless a
@@ -45,6 +71,46 @@ impl Program {
     /// Look up a symbol's address.
     pub fn symbol(&self, name: &str) -> Option<u32> {
         self.symbols.get(name).copied()
+    }
+
+    /// Look up a data symbol's span.
+    pub fn data_span(&self, name: &str) -> Option<DataSpan> {
+        self.data_layout.get(name).copied()
+    }
+
+    /// Patch `words` into `image` at `symbol`'s data span. `image` is a
+    /// copy of (or at least as large as) this program's image; the write
+    /// is bounds-checked against the recorded extent, so data patching
+    /// can never corrupt code or a neighbouring span.
+    pub fn patch_into(
+        &self,
+        image: &mut [u8],
+        symbol: &str,
+        words: &[i32],
+    ) -> Result<(), PatchError> {
+        let span = self
+            .data_span(symbol)
+            .ok_or_else(|| PatchError::NoSpan(symbol.to_string()))?;
+        if words.len() as u32 > span.words {
+            return Err(PatchError::Oversized {
+                symbol: symbol.to_string(),
+                words: span.words,
+                got: words.len() as u32,
+            });
+        }
+        let start = span.addr as usize;
+        let end = start + 4 * words.len();
+        if end > image.len() {
+            return Err(PatchError::OutOfImage {
+                symbol: symbol.to_string(),
+                addr: span.addr,
+                words: span.words,
+            });
+        }
+        for (i, w) in words.iter().enumerate() {
+            image[start + 4 * i..start + 4 * i + 4].copy_from_slice(&w.to_le_bytes());
+        }
+        Ok(())
     }
 }
 
@@ -216,7 +282,31 @@ pub fn assemble(src: &str) -> Result<Program, AsmError> {
         image[*at as usize..*at as usize + buf.len()].copy_from_slice(&buf);
     }
 
-    Ok(Program { image, symbols, lines: lines_meta, entry: entry.unwrap_or(0) })
+    // ---- data-segment layout: label → contiguous `.long` run ----------
+    // `.long` items were appended in address order (`.pos` only moves
+    // forward), so the collected addresses are sorted.
+    let long_addrs: Vec<u32> = items
+        .iter()
+        .filter(|(_, it)| matches!(it, Item::Long { .. }))
+        .map(|(a, _)| *a)
+        .collect();
+    let label_addrs: std::collections::HashSet<u32> = symbols.values().copied().collect();
+    let mut data_layout = HashMap::new();
+    for (name, &addr) in &symbols {
+        let Ok(start) = long_addrs.binary_search(&addr) else { continue };
+        let mut words = 1u32;
+        let mut i = start;
+        while i + 1 < long_addrs.len()
+            && long_addrs[i + 1] == long_addrs[i] + 4
+            && !label_addrs.contains(&long_addrs[i + 1])
+        {
+            words += 1;
+            i += 1;
+        }
+        data_layout.insert(name.clone(), DataSpan { addr, words });
+    }
+
+    Ok(Program { image, symbols, data_layout, lines: lines_meta, entry: entry.unwrap_or(0) })
 }
 
 fn parse_int(s: &str, line: usize) -> Result<i64, AsmError> {
@@ -499,5 +589,70 @@ Body:
         let p = assemble(".pos 3\n.align 4\nx: .long 7\n").unwrap();
         assert_eq!(p.symbol("x"), Some(4));
         assert_eq!(&p.image[4..8], &7i32.to_le_bytes());
+    }
+
+    #[test]
+    fn data_layout_records_long_runs_split_at_labels() {
+        let p = assemble(
+            "    halt\n    .align 4\na:\n    .long 1\n    .long 2\nb:\n    .long 3\n",
+        )
+        .unwrap();
+        let a = p.data_span("a").unwrap();
+        assert_eq!((a.addr, a.words), (4, 2), "run stops at label b");
+        let b = p.data_span("b").unwrap();
+        assert_eq!((b.addr, b.words), (12, 1));
+        // code labels carry no data span
+        let p = assemble("Loop:\n    jmp Loop\n").unwrap();
+        assert_eq!(p.data_span("Loop"), None);
+    }
+
+    #[test]
+    fn data_layout_splits_non_contiguous_runs() {
+        let p = assemble("x:\n    .long 1\n    .pos 16\n    .long 2\n").unwrap();
+        let x = p.data_span("x").unwrap();
+        assert_eq!((x.addr, x.words), (0, 1), "gap ends the run");
+    }
+
+    #[test]
+    fn patch_into_rewrites_data_only_within_the_span() {
+        let p = assemble(
+            "    halt\n    .align 4\narray:\n    .long 0\n    .long 0\nnext:\n    .long 9\n",
+        )
+        .unwrap();
+        let mut image = p.image.clone();
+        p.patch_into(&mut image, "array", &[5, -6]).unwrap();
+        assert_eq!(&image[4..8], &5i32.to_le_bytes());
+        assert_eq!(&image[8..12], &(-6i32).to_le_bytes());
+        assert_eq!(image[0], p.image[0], "code untouched");
+        assert_eq!(&image[12..16], &9i32.to_le_bytes(), "neighbour span untouched");
+        // partial patches are fine; oversized ones are typed errors
+        p.patch_into(&mut image, "array", &[1]).unwrap();
+        assert_eq!(
+            p.patch_into(&mut image, "array", &[1, 2, 3]),
+            Err(PatchError::Oversized { symbol: "array".into(), words: 2, got: 3 })
+        );
+        assert_eq!(
+            p.patch_into(&mut image, "nowhere", &[1]),
+            Err(PatchError::NoSpan("nowhere".into()))
+        );
+        // an image shorter than the span is refused, not sliced OOB
+        let mut short = vec![0u8; 6];
+        assert!(matches!(
+            p.patch_into(&mut short, "array", &[1, 2]),
+            Err(PatchError::OutOfImage { .. })
+        ));
+    }
+
+    #[test]
+    fn patched_placeholder_equals_direct_assembly() {
+        // The compile-once invariant at the assembler level: zero
+        // placeholders patched with values give the same bytes as
+        // assembling the values directly.
+        let tpl = assemble("    halt\n    .align 4\nv:\n    .long 0\n    .long 0\n").unwrap();
+        let direct =
+            assemble("    halt\n    .align 4\nv:\n    .long 13\n    .long -2\n").unwrap();
+        let mut image = tpl.image.clone();
+        tpl.patch_into(&mut image, "v", &[13, -2]).unwrap();
+        assert_eq!(image, direct.image);
     }
 }

@@ -13,7 +13,7 @@ pub mod disasm;
 pub mod insn;
 pub mod loader;
 
-pub use asm::{assemble, AsmError, Program};
+pub use asm::{assemble, AsmError, DataSpan, PatchError, Program};
 pub use disasm::disassemble;
 pub use insn::{CondFn, Insn, MetaFn, OpFn, Reg, DECODE_ERROR};
 

@@ -82,6 +82,17 @@ impl MemoryBus {
     pub fn reset_stats(&mut self) {
         self.stats = BusStats::default();
     }
+
+    /// Full reset for processor reuse: clear the stats *and* the port
+    /// reservation table (the new run starts at clock 0, so leftover
+    /// free-at times from a previous run would read as phantom
+    /// contention).
+    pub fn reset(&mut self) {
+        self.stats = BusStats::default();
+        if let Some(ports) = self.ports.as_mut() {
+            ports.fill(0);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -137,5 +148,14 @@ mod tests {
         bus.access(0);
         bus.reset_stats();
         assert_eq!(bus.stats(), BusStats::default());
+    }
+
+    #[test]
+    fn full_reset_clears_port_reservations() {
+        let mut bus = MemoryBus::new(&MemConfig::single_bus());
+        assert_eq!(bus.access(0), 0); // port held to clock 4
+        bus.reset();
+        assert_eq!(bus.access(0), 0, "no phantom contention after reset");
+        assert_eq!(bus.stats().accesses, 1);
     }
 }

@@ -84,6 +84,28 @@ impl Memory {
         m
     }
 
+    /// Replace the contents with a fresh image, reusing the allocation
+    /// (the compile-once pipeline's processor-reuse path). The memory is
+    /// restored to exactly `max(size, image.len())` — growth from a
+    /// previous oversized image does **not** carry over, so an
+    /// out-of-bounds guest access faults identically on a reused and a
+    /// freshly built processor. The version counter stays **monotonic**
+    /// — resetting it to zero would let decode-cache entries from a
+    /// previous program validate against the new one.
+    pub fn reload(&mut self, image: &[u8], size: usize) {
+        self.bytes.resize(size.max(image.len()), 0);
+        self.bytes[..image.len()].copy_from_slice(image);
+        self.bytes[image.len()..].fill(0);
+        self.version += 1;
+    }
+
+    /// Test hook: force the version counter (decode-cache wrap-hazard
+    /// regression tests).
+    #[cfg(test)]
+    pub(crate) fn force_version(&mut self, v: u64) {
+        self.version = v;
+    }
+
     pub fn len(&self) -> usize {
         self.bytes.len()
     }
@@ -146,6 +168,27 @@ mod tests {
         // image larger than requested size grows the memory
         let m = Memory::with_image(2, &[0; 10]);
         assert_eq!(m.len(), 10);
+    }
+
+    #[test]
+    fn reload_reuses_the_allocation_and_keeps_version_monotonic() {
+        let mut m = Memory::with_image(16, &[1, 2, 3, 4]);
+        m.write_u32(8, 0xAAAA_AAAA).unwrap();
+        let v = m.version();
+        m.reload(&[9, 8], 16);
+        assert!(m.version() > v, "reload bumps the version");
+        assert_eq!(m.read_u8(0).unwrap(), 9);
+        assert_eq!(m.read_u8(1).unwrap(), 8);
+        assert_eq!(m.read_u32(8).unwrap(), 0, "tail zeroed — no stale data");
+        assert_eq!(m.len(), 16, "allocation kept");
+        // a larger image grows the memory...
+        m.reload(&[0; 32], 16);
+        assert_eq!(m.len(), 32);
+        // ...and the next reload restores the configured size, so bounds
+        // checks behave exactly like a fresh build
+        m.reload(&[7], 16);
+        assert_eq!(m.len(), 16, "growth does not carry over");
+        assert_eq!(m.read_u32(16), Err(AddrError(16)));
     }
 
     #[test]

@@ -27,7 +27,20 @@ fn emit_arrays(src: &mut String, a: &[i32], b: &[i32]) {
     }
 }
 
-fn expected(a: &[i32], b: &[i32]) -> i32 {
+/// Zero-filled `arrayA`/`arrayB` segments at capacity `n` — the template
+/// placeholder, patched per request (same layout as `emit_arrays`).
+fn emit_placeholder(src: &mut String, n: usize) {
+    src.push_str("    .align 4\narrayA:\n");
+    for _ in 0..n.max(1) {
+        src.push_str("    .long 0\n");
+    }
+    src.push_str("arrayB:\n");
+    for _ in 0..n.max(1) {
+        src.push_str("    .long 0\n");
+    }
+}
+
+pub(crate) fn expected(a: &[i32], b: &[i32]) -> i32 {
     a.iter().zip(b).fold(0i32, |s, (&x, &y)| s.wrapping_add(x.wrapping_mul(y)))
 }
 
@@ -36,30 +49,82 @@ fn offset(n: usize) -> usize {
     4 * n.max(1)
 }
 
+/// Code section for (mode, element count); bytes depend only on
+/// `(mode, n)` (the count immediate and the A→B displacement), never on
+/// the operand values — the compile-once invariant.
+pub(crate) fn code(mode: Mode, n: usize) -> String {
+    let off = offset(n);
+    let mut s = String::new();
+    match mode {
+        Mode::No => {
+            let _ = writeln!(s, "# adotprod, conventional coding, N={n}");
+            s.push_str("    .pos 0\n");
+            let _ = writeln!(s, "    irmovl ${n}, %edx");
+            s.push_str("    irmovl arrayA, %ecx\n");
+            s.push_str("    xorl %eax, %eax\n");
+            s.push_str("    andl %edx, %edx\n");
+            s.push_str("    je End\n");
+            s.push_str("Loop:\n");
+            s.push_str("    mrmovl (%ecx), %esi   # a[i]\n");
+            let _ = writeln!(s, "    mrmovl {off}(%ecx), %edi # b[i]");
+            s.push_str("    mull %edi, %esi       # a[i]*b[i]\n");
+            s.push_str("    addl %esi, %eax\n");
+            s.push_str("    irmovl $4, %ebx\n");
+            s.push_str("    addl %ebx, %ecx\n");
+            s.push_str("    irmovl $-1, %ebx\n");
+            s.push_str("    addl %ebx, %edx\n");
+            s.push_str("    jne Loop\n");
+            s.push_str("End:\n    halt\n");
+        }
+        Mode::For => {
+            let _ = writeln!(s, "# adotprod, EMPA FOR mode, N={n}");
+            s.push_str("    .pos 0\n");
+            let _ = writeln!(s, "    irmovl ${n}, %edx");
+            s.push_str("    irmovl arrayA, %ecx\n");
+            s.push_str("    xorl %eax, %eax\n");
+            s.push_str("    qprealloc $1\n");
+            s.push_str("    qmassfor Body\n");
+            s.push_str("    halt\n");
+            s.push_str("Body:\n");
+            s.push_str("    mrmovl (%ecx), %esi\n");
+            let _ = writeln!(s, "    mrmovl {off}(%ecx), %edi");
+            s.push_str("    mull %edi, %esi\n");
+            s.push_str("    addl %esi, %eax\n");
+            s.push_str("    qterm %eax\n");
+        }
+        Mode::Sumup => {
+            let prealloc = (n as u32).min(SUMUP_MAX_CHILDREN);
+            let _ = writeln!(s, "# adotprod, EMPA SUMUP mode, N={n}");
+            s.push_str("    .pos 0\n");
+            let _ = writeln!(s, "    irmovl ${n}, %edx");
+            s.push_str("    irmovl arrayA, %ecx\n");
+            s.push_str("    xorl %eax, %eax\n");
+            let _ = writeln!(s, "    qprealloc ${prealloc}");
+            s.push_str("    qmasssum Body\n");
+            s.push_str("    halt\n");
+            s.push_str("Body:\n");
+            s.push_str("    mrmovl (%ecx), %esi\n");
+            let _ = writeln!(s, "    mrmovl {off}(%ecx), %edi");
+            s.push_str("    mull %edi, %esi\n");
+            s.push_str("    addl %esi, %pp       # stream the product\n");
+            s.push_str("    qterm\n");
+        }
+    }
+    s
+}
+
+/// Data-independent template source: code for `(mode, n)` plus zeroed
+/// `arrayA`/`arrayB` segments of capacity `n`.
+pub fn template_source(mode: Mode, n: usize) -> String {
+    let mut s = code(mode, n);
+    emit_placeholder(&mut s, n);
+    s
+}
+
 /// Conventional loop (baseline).
 pub fn no_mode(a: &[i32], b: &[i32]) -> (String, i32) {
     assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let off = offset(n);
-    let mut s = String::new();
-    let _ = writeln!(s, "# adotprod, conventional coding, N={n}");
-    s.push_str("    .pos 0\n");
-    let _ = writeln!(s, "    irmovl ${n}, %edx");
-    s.push_str("    irmovl arrayA, %ecx\n");
-    s.push_str("    xorl %eax, %eax\n");
-    s.push_str("    andl %edx, %edx\n");
-    s.push_str("    je End\n");
-    s.push_str("Loop:\n");
-    s.push_str("    mrmovl (%ecx), %esi   # a[i]\n");
-    let _ = writeln!(s, "    mrmovl {off}(%ecx), %edi # b[i]");
-    s.push_str("    mull %edi, %esi       # a[i]*b[i]\n");
-    s.push_str("    addl %esi, %eax\n");
-    s.push_str("    irmovl $4, %ebx\n");
-    s.push_str("    addl %ebx, %ecx\n");
-    s.push_str("    irmovl $-1, %ebx\n");
-    s.push_str("    addl %ebx, %edx\n");
-    s.push_str("    jne Loop\n");
-    s.push_str("End:\n    halt\n");
+    let mut s = code(Mode::No, a.len());
     emit_arrays(&mut s, a, b);
     (s, expected(a, b))
 }
@@ -67,23 +132,7 @@ pub fn no_mode(a: &[i32], b: &[i32]) -> (String, i32) {
 /// FOR mode: the product+accumulate kernel as a re-launched child QT.
 pub fn for_mode(a: &[i32], b: &[i32]) -> (String, i32) {
     assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let off = offset(n);
-    let mut s = String::new();
-    let _ = writeln!(s, "# adotprod, EMPA FOR mode, N={n}");
-    s.push_str("    .pos 0\n");
-    let _ = writeln!(s, "    irmovl ${n}, %edx");
-    s.push_str("    irmovl arrayA, %ecx\n");
-    s.push_str("    xorl %eax, %eax\n");
-    s.push_str("    qprealloc $1\n");
-    s.push_str("    qmassfor Body\n");
-    s.push_str("    halt\n");
-    s.push_str("Body:\n");
-    s.push_str("    mrmovl (%ecx), %esi\n");
-    let _ = writeln!(s, "    mrmovl {off}(%ecx), %edi");
-    s.push_str("    mull %edi, %esi\n");
-    s.push_str("    addl %esi, %eax\n");
-    s.push_str("    qterm %eax\n");
+    let mut s = code(Mode::For, a.len());
     emit_arrays(&mut s, a, b);
     (s, expected(a, b))
 }
@@ -91,24 +140,7 @@ pub fn for_mode(a: &[i32], b: &[i32]) -> (String, i32) {
 /// SUMUP mode: each child streams one product into the parent adder.
 pub fn sumup_mode(a: &[i32], b: &[i32]) -> (String, i32) {
     assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let off = offset(n);
-    let prealloc = (n as u32).min(SUMUP_MAX_CHILDREN);
-    let mut s = String::new();
-    let _ = writeln!(s, "# adotprod, EMPA SUMUP mode, N={n}");
-    s.push_str("    .pos 0\n");
-    let _ = writeln!(s, "    irmovl ${n}, %edx");
-    s.push_str("    irmovl arrayA, %ecx\n");
-    s.push_str("    xorl %eax, %eax\n");
-    let _ = writeln!(s, "    qprealloc ${prealloc}");
-    s.push_str("    qmasssum Body\n");
-    s.push_str("    halt\n");
-    s.push_str("Body:\n");
-    s.push_str("    mrmovl (%ecx), %esi\n");
-    let _ = writeln!(s, "    mrmovl {off}(%ecx), %edi");
-    s.push_str("    mull %edi, %esi\n");
-    s.push_str("    addl %esi, %pp       # stream the product\n");
-    s.push_str("    qterm\n");
+    let mut s = code(Mode::Sumup, a.len());
     emit_arrays(&mut s, a, b);
     (s, expected(a, b))
 }

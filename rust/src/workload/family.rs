@@ -1,0 +1,493 @@
+//! The workload-family abstraction behind the compile-once program
+//! pipeline.
+//!
+//! The EMPA-programming companion work (arXiv:1608.07155) frames
+//! SUMUP/FOR/dot-product as a *family* of parallelization shapes rather
+//! than unrelated programs. [`WorkloadFamily`] captures that: each family
+//! emits a **code template** whose bytes depend only on
+//! `(mode, size-class)` and a separate **data image** (the per-request
+//! words patched into the assembled template's data segment), plus an
+//! expected-result oracle for verification.
+//!
+//! The split is what makes caching possible: the fabric's `sim` backend
+//! assembles a template once per `(family, mode, size-class)` and serves
+//! every subsequent request of that class by patching data words into a
+//! copy of the cached image — no source regeneration, no reassembly. A
+//! size-class is the exact element count: the count is an immediate in
+//! the code bytes, which keeps the served programs byte-identical to the
+//! directly generated ones (and the Table 1 clock counts exact); a
+//! coarser bucketing would need a data-resident count.
+
+use super::sumup::Mode;
+use super::traces::TraceOp;
+use super::{dotprod, scale, sumup, traces};
+use crate::isa::Program;
+use crate::mem::Memory;
+
+/// The program families servable by the fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// `asumup` — vector reduction (§5, all three Table 1 modes).
+    Sumup,
+    /// `adotprod` — two-operand reduction (§3.7 mass operating mode).
+    Dotprod,
+    /// `ascale` — elementwise map, output written back to memory (§5.1).
+    Scale,
+    /// `atrace` — control-heavy replay interpreter over a record stream.
+    Traces,
+}
+
+/// Every family, in a fixed order (tests and sweeps).
+pub const ALL_FAMILIES: [Family; 4] =
+    [Family::Sumup, Family::Dotprod, Family::Scale, Family::Traces];
+
+impl Family {
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Sumup => "sumup",
+            Family::Dotprod => "dotprod",
+            Family::Scale => "scale",
+            Family::Traces => "traces",
+        }
+    }
+}
+
+/// Per-request parameters — the *data* half of the code/data split. The
+/// variant determines the family ([`Params::family`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Params {
+    Sumup { values: Vec<i32> },
+    Dotprod { a: Vec<i32>, b: Vec<i32> },
+    Scale { x: Vec<i32>, c: i32 },
+    Traces { ops: Vec<TraceOp> },
+}
+
+impl Params {
+    /// The family these parameters belong to.
+    pub fn family(&self) -> Family {
+        match self {
+            Params::Sumup { .. } => Family::Sumup,
+            Params::Dotprod { .. } => Family::Dotprod,
+            Params::Scale { .. } => Family::Scale,
+            Params::Traces { .. } => Family::Traces,
+        }
+    }
+}
+
+/// What a family's oracle predicts for a run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Expected {
+    /// Final `%eax` of the root core (the reduction families).
+    Eax(i32),
+    /// Words of the family's read-back span (`Output::Program::data`).
+    Data(Vec<i32>),
+}
+
+impl Expected {
+    /// Check a run's observables against the prediction.
+    pub fn matches(&self, eax: i32, data: &[i32]) -> bool {
+        match self {
+            Expected::Eax(want) => *want == eax,
+            Expected::Data(want) => want == data,
+        }
+    }
+}
+
+/// A parallelizable program family: code template + data image + oracle.
+///
+/// Invariant (checked by the unit tests below): assembling
+/// `template(mode, size_class(params))` and patching `data_image(params)`
+/// into its data segment yields an image **byte-identical** to assembling
+/// the directly generated program for `params`.
+pub trait WorkloadFamily {
+    fn family(&self) -> Family;
+
+    /// Operating modes this family supports (scale has no reduction, the
+    /// replay interpreter's payload *is* control flow).
+    fn modes(&self) -> &'static [Mode];
+
+    /// Template cache key component: the element count class.
+    fn size_class(&self, params: &Params) -> Result<u32, String>;
+
+    /// Data-independent source for `(mode, size_class)`.
+    fn template(&self, mode: Mode, size_class: u32) -> Result<String, String>;
+
+    /// `(symbol, words)` pairs to patch into the template's data segment.
+    fn data_image(&self, params: &Params) -> Result<Vec<(&'static str, Vec<i32>)>, String>;
+
+    /// Expected result for verification.
+    fn oracle(&self, params: &Params) -> Result<Expected, String>;
+
+    /// Memory span `(symbol, words)` to read back into the reply after
+    /// the run (families whose result lives in memory, not `%eax`).
+    fn readback(&self, _params: &Params) -> Option<(&'static str, u32)> {
+        None
+    }
+}
+
+fn wrong_params(fam: Family, params: &Params) -> String {
+    format!("{} family given {} params", fam.name(), params.family().name())
+}
+
+fn check_mode(fam: &dyn WorkloadFamily, mode: Mode) -> Result<(), String> {
+    if fam.modes().contains(&mode) {
+        Ok(())
+    } else {
+        Err(format!("{} family does not support {} mode", fam.family().name(), mode.name()))
+    }
+}
+
+// ----------------------------------------------------------------------
+// the four families
+// ----------------------------------------------------------------------
+
+pub struct SumupFamily;
+
+impl WorkloadFamily for SumupFamily {
+    fn family(&self) -> Family {
+        Family::Sumup
+    }
+
+    fn modes(&self) -> &'static [Mode] {
+        &[Mode::No, Mode::For, Mode::Sumup]
+    }
+
+    fn size_class(&self, params: &Params) -> Result<u32, String> {
+        match params {
+            Params::Sumup { values } => Ok(values.len() as u32),
+            other => Err(wrong_params(Family::Sumup, other)),
+        }
+    }
+
+    fn template(&self, mode: Mode, size_class: u32) -> Result<String, String> {
+        check_mode(self, mode)?;
+        Ok(sumup::template_source(mode, size_class as usize))
+    }
+
+    fn data_image(&self, params: &Params) -> Result<Vec<(&'static str, Vec<i32>)>, String> {
+        match params {
+            Params::Sumup { values } => Ok(vec![("array", values.clone())]),
+            other => Err(wrong_params(Family::Sumup, other)),
+        }
+    }
+
+    fn oracle(&self, params: &Params) -> Result<Expected, String> {
+        match params {
+            Params::Sumup { values } => {
+                Ok(Expected::Eax(values.iter().fold(0i32, |a, &b| a.wrapping_add(b))))
+            }
+            other => Err(wrong_params(Family::Sumup, other)),
+        }
+    }
+}
+
+pub struct DotprodFamily;
+
+impl WorkloadFamily for DotprodFamily {
+    fn family(&self) -> Family {
+        Family::Dotprod
+    }
+
+    fn modes(&self) -> &'static [Mode] {
+        &[Mode::No, Mode::For, Mode::Sumup]
+    }
+
+    fn size_class(&self, params: &Params) -> Result<u32, String> {
+        match params {
+            Params::Dotprod { a, b } => {
+                if a.len() != b.len() {
+                    return Err(format!(
+                        "dotprod operands disagree in length: a has {}, b has {}",
+                        a.len(),
+                        b.len()
+                    ));
+                }
+                Ok(a.len() as u32)
+            }
+            other => Err(wrong_params(Family::Dotprod, other)),
+        }
+    }
+
+    fn template(&self, mode: Mode, size_class: u32) -> Result<String, String> {
+        check_mode(self, mode)?;
+        Ok(dotprod::template_source(mode, size_class as usize))
+    }
+
+    fn data_image(&self, params: &Params) -> Result<Vec<(&'static str, Vec<i32>)>, String> {
+        match params {
+            Params::Dotprod { a, b } => Ok(vec![("arrayA", a.clone()), ("arrayB", b.clone())]),
+            other => Err(wrong_params(Family::Dotprod, other)),
+        }
+    }
+
+    fn oracle(&self, params: &Params) -> Result<Expected, String> {
+        match params {
+            Params::Dotprod { a, b } => Ok(Expected::Eax(dotprod::expected(a, b))),
+            other => Err(wrong_params(Family::Dotprod, other)),
+        }
+    }
+}
+
+pub struct ScaleFamily;
+
+impl WorkloadFamily for ScaleFamily {
+    fn family(&self) -> Family {
+        Family::Scale
+    }
+
+    fn modes(&self) -> &'static [Mode] {
+        // No reduction: SUMUP does not apply.
+        &[Mode::No, Mode::For]
+    }
+
+    fn size_class(&self, params: &Params) -> Result<u32, String> {
+        match params {
+            Params::Scale { x, .. } => Ok(x.len() as u32),
+            other => Err(wrong_params(Family::Scale, other)),
+        }
+    }
+
+    fn template(&self, mode: Mode, size_class: u32) -> Result<String, String> {
+        check_mode(self, mode)?;
+        scale::template_source(mode, size_class as usize)
+            .ok_or_else(|| "scale family does not support sumup mode".to_string())
+    }
+
+    fn data_image(&self, params: &Params) -> Result<Vec<(&'static str, Vec<i32>)>, String> {
+        match params {
+            Params::Scale { x, c } => Ok(vec![("cval", vec![*c]), ("arrayX", x.clone())]),
+            other => Err(wrong_params(Family::Scale, other)),
+        }
+    }
+
+    fn oracle(&self, params: &Params) -> Result<Expected, String> {
+        match params {
+            Params::Scale { x, c } => Ok(Expected::Data(scale::expected(x, *c))),
+            other => Err(wrong_params(Family::Scale, other)),
+        }
+    }
+
+    fn readback(&self, params: &Params) -> Option<(&'static str, u32)> {
+        match params {
+            Params::Scale { x, .. } => Some(("arrayY", x.len() as u32)),
+            _ => None,
+        }
+    }
+}
+
+pub struct TracesFamily;
+
+impl WorkloadFamily for TracesFamily {
+    fn family(&self) -> Family {
+        Family::Traces
+    }
+
+    fn modes(&self) -> &'static [Mode] {
+        // The interpreter's payload is its control flow; there is nothing
+        // for the SV loop engines to absorb.
+        &[Mode::No]
+    }
+
+    fn size_class(&self, params: &Params) -> Result<u32, String> {
+        match params {
+            Params::Traces { ops } => Ok(ops.len() as u32),
+            other => Err(wrong_params(Family::Traces, other)),
+        }
+    }
+
+    fn template(&self, mode: Mode, size_class: u32) -> Result<String, String> {
+        check_mode(self, mode)?;
+        Ok(traces::template_source(size_class as usize))
+    }
+
+    fn data_image(&self, params: &Params) -> Result<Vec<(&'static str, Vec<i32>)>, String> {
+        match params {
+            Params::Traces { ops } => Ok(vec![("trace", traces::encode_ops(ops))]),
+            other => Err(wrong_params(Family::Traces, other)),
+        }
+    }
+
+    fn oracle(&self, params: &Params) -> Result<Expected, String> {
+        match params {
+            Params::Traces { ops } => Ok(Expected::Eax(traces::fold_ops(ops))),
+            other => Err(wrong_params(Family::Traces, other)),
+        }
+    }
+}
+
+/// Static dispatch table: the implementation behind a [`Family`] tag.
+pub fn family_impl(f: Family) -> &'static dyn WorkloadFamily {
+    match f {
+        Family::Sumup => &SumupFamily,
+        Family::Dotprod => &DotprodFamily,
+        Family::Scale => &ScaleFamily,
+        Family::Traces => &TracesFamily,
+    }
+}
+
+/// Read a family's read-back span out of simulated memory. The single
+/// implementation shared by the sim backend and the verification tests,
+/// so the product and test paths stay provably identical.
+pub fn read_span(
+    prog: &Program,
+    mem: &Memory,
+    symbol: &str,
+    words: u32,
+) -> Result<Vec<i32>, String> {
+    let addr = prog
+        .symbol(symbol)
+        .ok_or_else(|| format!("readback symbol `{symbol}` missing"))?;
+    (0..words)
+        .map(|i| {
+            mem.read_u32(addr + 4 * i)
+                .map(|w| w as i32)
+                .map_err(|e| format!("readback at `{symbol}`+{i}: {e:?}"))
+        })
+        .collect()
+}
+
+/// Deterministic per-family parameter synthesis (tests, sweeps): `n`
+/// elements, reproducible from `seed`. The single constructor the
+/// fuzz/integration/unit tests share, so adding a family means updating
+/// one match.
+pub fn synth_params(family: Family, n: usize, seed: u64) -> Params {
+    match family {
+        Family::Sumup => Params::Sumup { values: sumup::synth_vector(n, seed) },
+        Family::Dotprod => Params::Dotprod {
+            a: sumup::synth_vector(n, seed),
+            b: sumup::synth_vector(n, seed.wrapping_add(1)),
+        },
+        Family::Scale => Params::Scale {
+            x: sumup::synth_vector(n, seed),
+            c: (seed % 31) as i32 - 15,
+        },
+        Family::Traces => Params::Traces { ops: traces::synth_ops(n, seed) },
+    }
+}
+
+/// Directly generated source for `params` (the pre-pipeline path: data
+/// baked into the text). Used by tests to prove the patched-template
+/// image is byte-identical.
+pub fn direct_source(mode: Mode, params: &Params) -> Result<String, String> {
+    match params {
+        Params::Sumup { values } => Ok(sumup::program(mode, values).0),
+        Params::Dotprod { a, b } => {
+            if a.len() != b.len() {
+                return Err("dotprod operand mismatch".into());
+            }
+            Ok(dotprod::program(mode, a, b).0)
+        }
+        Params::Scale { x, c } => scale::program(mode, x, *c)
+            .map(|(s, _)| s)
+            .ok_or_else(|| "scale does not support SUMUP".into()),
+        Params::Traces { ops } => {
+            if mode != Mode::No {
+                return Err("traces only runs conventionally".into());
+            }
+            Ok(traces::replay_program(ops).0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::empa::{EmpaConfig, EmpaProcessor};
+    use crate::isa::assemble;
+
+    fn params_for(f: Family, n: usize, seed: u64) -> Params {
+        synth_params(f, n, seed)
+    }
+
+    #[test]
+    fn templates_assemble_for_every_mode_and_size() {
+        for f in ALL_FAMILIES {
+            let fam = family_impl(f);
+            for &mode in fam.modes() {
+                for sc in [0u32, 1, 2, 7, 31] {
+                    let src = fam.template(mode, sc).unwrap();
+                    assemble(&src).unwrap_or_else(|e| {
+                        panic!("{} {mode:?} size-class {sc}: {e}", f.name())
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_modes_are_errors_not_panics() {
+        assert!(family_impl(Family::Scale).template(Mode::Sumup, 4).is_err());
+        assert!(family_impl(Family::Traces).template(Mode::For, 4).is_err());
+        assert!(family_impl(Family::Traces).template(Mode::Sumup, 4).is_err());
+    }
+
+    #[test]
+    fn wrong_params_variant_is_an_error() {
+        let p = Params::Sumup { values: vec![1] };
+        assert!(family_impl(Family::Dotprod).size_class(&p).is_err());
+        assert!(family_impl(Family::Scale).data_image(&p).is_err());
+        assert!(family_impl(Family::Traces).oracle(&p).is_err());
+        assert_eq!(p.family(), Family::Sumup);
+    }
+
+    #[test]
+    fn patched_template_image_is_byte_identical_to_direct_assembly() {
+        for f in ALL_FAMILIES {
+            let fam = family_impl(f);
+            for &mode in fam.modes() {
+                for n in [0usize, 1, 2, 6, 13] {
+                    let params = params_for(f, n, 0x5EED ^ n as u64);
+                    let sc = fam.size_class(&params).unwrap();
+                    let tpl = assemble(&fam.template(mode, sc).unwrap()).unwrap();
+                    let mut image = tpl.image.clone();
+                    for (sym, words) in fam.data_image(&params).unwrap() {
+                        tpl.patch_into(&mut image, sym, &words).unwrap_or_else(|e| {
+                            panic!("{} {mode:?} N={n} patch {sym}: {e}", f.name())
+                        });
+                    }
+                    let direct = assemble(&direct_source(mode, &params).unwrap()).unwrap();
+                    assert_eq!(image, direct.image, "{} {mode:?} N={n}", f.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oracles_match_simulation_through_the_patched_template() {
+        let cfg = EmpaConfig::default();
+        for f in ALL_FAMILIES {
+            let fam = family_impl(f);
+            for &mode in fam.modes() {
+                for n in [0usize, 1, 5] {
+                    let params = params_for(f, n, 0xACE ^ n as u64);
+                    let sc = fam.size_class(&params).unwrap();
+                    let tpl = assemble(&fam.template(mode, sc).unwrap()).unwrap();
+                    let mut image = tpl.image.clone();
+                    for (sym, words) in fam.data_image(&params).unwrap() {
+                        tpl.patch_into(&mut image, sym, &words).unwrap();
+                    }
+                    let mut proc = EmpaProcessor::new(&image, &cfg);
+                    let r = proc.run_report();
+                    assert_eq!(r.fault, None, "{} {mode:?} N={n}", f.name());
+                    let data: Vec<i32> = match fam.readback(&params) {
+                        Some((sym, words)) => read_span(&tpl, &proc.mem, sym, words).unwrap(),
+                        None => Vec::new(),
+                    };
+                    let want = fam.oracle(&params).unwrap();
+                    assert!(
+                        want.matches(r.eax(), &data),
+                        "{} {mode:?} N={n}: want {want:?}, got eax={} data={data:?}",
+                        f.name(),
+                        r.eax()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dotprod_shape_mismatch_is_an_error() {
+        let p = Params::Dotprod { a: vec![1, 2, 3], b: vec![1] };
+        assert!(family_impl(Family::Dotprod).size_class(&p).is_err());
+    }
+}

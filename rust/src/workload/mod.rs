@@ -1,15 +1,20 @@
-//! Workload generators: the paper's `asumup` program family (§5) in all
-//! three modes, plus synthetic request traces for the fabric coordinator.
+//! Workload generators: the paper's program families (§5) — `sumup`,
+//! `dotprod`, `scale` and the `traces` replay interpreter — unified
+//! behind the [`family::WorkloadFamily`] trait (code template + data
+//! image + oracle, the compile-once split), plus synthetic request
+//! traces for the fabric coordinator.
 //!
 //! Workloads *generate* [`crate::api::JobRequest`]s; the request and
 //! response vocabulary itself belongs to the `api` module
 //! (`RequestKind` is re-exported here for convenience).
 
 pub mod dotprod;
+pub mod family;
 pub mod scale;
 pub mod sumup;
 pub mod traces;
 
 pub use crate::api::RequestKind;
+pub use family::{family_impl, Expected, Family, Params, WorkloadFamily, ALL_FAMILIES};
 pub use sumup::{for_mode_program, no_mode_program, sumup_mode_program, Mode};
-pub use traces::{Request, TraceConfig, TraceGen};
+pub use traces::{Request, TraceConfig, TraceGen, TraceOp, TraceOpKind};

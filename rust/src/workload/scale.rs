@@ -5,12 +5,18 @@
 //!
 //! Output array placed at a fixed displacement from the input, same
 //! single-address-register discipline as the dot-product family.
+//!
+//! The scale factor is a *data* word (`cval`), loaded through a register
+//! in the prologue — it used to be an `irmovl` immediate, which baked
+//! per-request data into the code bytes and defeated template reuse.
 
 use super::sumup::Mode;
 use std::fmt::Write;
 
-fn emit_arrays(src: &mut String, x: &[i32]) {
-    src.push_str("    .align 4\narrayX:\n");
+fn emit_data(src: &mut String, x: &[i32], c: i32) {
+    src.push_str("    .align 4\ncval:\n");
+    let _ = writeln!(src, "    .long {c}");
+    src.push_str("arrayX:\n");
     for v in x {
         let _ = writeln!(src, "    .long {v}");
     }
@@ -23,56 +29,102 @@ fn emit_arrays(src: &mut String, x: &[i32]) {
     }
 }
 
+/// Zeroed `cval`/`arrayX`/`arrayY` segments at capacity `n` — the
+/// template placeholder, patched per request (same layout as
+/// `emit_data`).
+fn emit_placeholder(src: &mut String, n: usize) {
+    src.push_str("    .align 4\ncval:\n");
+    src.push_str("    .long 0\n");
+    src.push_str("arrayX:\n");
+    for _ in 0..n.max(1) {
+        src.push_str("    .long 0\n");
+    }
+    src.push_str("arrayY:\n");
+    for _ in 0..n.max(1) {
+        src.push_str("    .long 0\n");
+    }
+}
+
+pub(crate) fn expected(x: &[i32], c: i32) -> Vec<i32> {
+    x.iter().map(|v| v.wrapping_mul(c)).collect()
+}
+
 fn offset(n: usize) -> usize {
     4 * n.max(1)
 }
 
-/// Conventional loop.
-pub fn no_mode(x: &[i32], c: i32) -> (String, Vec<i32>) {
-    let n = x.len();
+/// Code section for (mode, element count); bytes depend only on
+/// `(mode, n)` — the scale factor is read from the `cval` data word.
+pub(crate) fn code(mode: Mode, n: usize) -> String {
     let off = offset(n);
     let mut s = String::new();
-    let _ = writeln!(s, "# ascale, conventional coding, N={n}, c={c}");
-    s.push_str("    .pos 0\n");
-    let _ = writeln!(s, "    irmovl ${n}, %edx");
-    s.push_str("    irmovl arrayX, %ecx\n");
-    let _ = writeln!(s, "    irmovl ${c}, %ebp    # scale factor");
-    s.push_str("    andl %edx, %edx\n");
-    s.push_str("    je End\n");
-    s.push_str("Loop:\n");
-    s.push_str("    mrmovl (%ecx), %esi\n");
-    s.push_str("    mull %ebp, %esi\n");
-    let _ = writeln!(s, "    rmmovl %esi, {off}(%ecx)");
-    s.push_str("    irmovl $4, %ebx\n");
-    s.push_str("    addl %ebx, %ecx\n");
-    s.push_str("    irmovl $-1, %ebx\n");
-    s.push_str("    addl %ebx, %edx\n");
-    s.push_str("    jne Loop\n");
-    s.push_str("End:\n    halt\n");
-    emit_arrays(&mut s, x);
-    (s, x.iter().map(|v| v.wrapping_mul(c)).collect())
+    match mode {
+        Mode::No => {
+            let _ = writeln!(s, "# ascale, conventional coding, N={n}");
+            s.push_str("    .pos 0\n");
+            let _ = writeln!(s, "    irmovl ${n}, %edx");
+            s.push_str("    irmovl arrayX, %ecx\n");
+            s.push_str("    irmovl cval, %ebx\n");
+            s.push_str("    mrmovl (%ebx), %ebp  # scale factor (data word)\n");
+            s.push_str("    andl %edx, %edx\n");
+            s.push_str("    je End\n");
+            s.push_str("Loop:\n");
+            s.push_str("    mrmovl (%ecx), %esi\n");
+            s.push_str("    mull %ebp, %esi\n");
+            let _ = writeln!(s, "    rmmovl %esi, {off}(%ecx)");
+            s.push_str("    irmovl $4, %ebx\n");
+            s.push_str("    addl %ebx, %ecx\n");
+            s.push_str("    irmovl $-1, %ebx\n");
+            s.push_str("    addl %ebx, %edx\n");
+            s.push_str("    jne Loop\n");
+            s.push_str("End:\n    halt\n");
+        }
+        Mode::For => {
+            let _ = writeln!(s, "# ascale, EMPA FOR mode, N={n}");
+            s.push_str("    .pos 0\n");
+            let _ = writeln!(s, "    irmovl ${n}, %edx");
+            s.push_str("    irmovl arrayX, %ecx\n");
+            s.push_str("    irmovl cval, %ebx\n");
+            s.push_str("    mrmovl (%ebx), %ebp  # scale factor (data word)\n");
+            s.push_str("    qprealloc $1\n");
+            s.push_str("    qmassfor Body\n");
+            s.push_str("    halt\n");
+            s.push_str("Body:\n");
+            s.push_str("    mrmovl (%ecx), %esi\n");
+            s.push_str("    mull %ebp, %esi\n");
+            let _ = writeln!(s, "    rmmovl %esi, {off}(%ecx)");
+            s.push_str("    qterm\n");
+        }
+        Mode::Sumup => unreachable!("scale has no reduction; callers check the mode first"),
+    }
+    s
+}
+
+/// Data-independent template source: code for `(mode, n)` plus zeroed
+/// `cval`/`arrayX`/`arrayY` segments of capacity `n`. `None` for SUMUP
+/// (no reduction), mirroring [`program`] — a data-only "program" that
+/// halts on the zeroed `cval` word would be a silent wrong answer.
+pub fn template_source(mode: Mode, n: usize) -> Option<String> {
+    if mode == Mode::Sumup {
+        return None;
+    }
+    let mut s = code(mode, n);
+    emit_placeholder(&mut s, n);
+    Some(s)
+}
+
+/// Conventional loop.
+pub fn no_mode(x: &[i32], c: i32) -> (String, Vec<i32>) {
+    let mut s = code(Mode::No, x.len());
+    emit_data(&mut s, x, c);
+    (s, expected(x, c))
 }
 
 /// FOR mode: pure-payload child, loop control fully absorbed by the SV.
 pub fn for_mode(x: &[i32], c: i32) -> (String, Vec<i32>) {
-    let n = x.len();
-    let off = offset(n);
-    let mut s = String::new();
-    let _ = writeln!(s, "# ascale, EMPA FOR mode, N={n}, c={c}");
-    s.push_str("    .pos 0\n");
-    let _ = writeln!(s, "    irmovl ${n}, %edx");
-    s.push_str("    irmovl arrayX, %ecx\n");
-    let _ = writeln!(s, "    irmovl ${c}, %ebp");
-    s.push_str("    qprealloc $1\n");
-    s.push_str("    qmassfor Body\n");
-    s.push_str("    halt\n");
-    s.push_str("Body:\n");
-    s.push_str("    mrmovl (%ecx), %esi\n");
-    s.push_str("    mull %ebp, %esi\n");
-    let _ = writeln!(s, "    rmmovl %esi, {off}(%ecx)");
-    s.push_str("    qterm\n");
-    emit_arrays(&mut s, x);
-    (s, x.iter().map(|v| v.wrapping_mul(c)).collect())
+    let mut s = code(Mode::For, x.len());
+    emit_data(&mut s, x, c);
+    (s, expected(x, c))
 }
 
 /// Program source for (mode, x, c); SUMUP does not apply (no reduction).
@@ -137,6 +189,8 @@ mod tests {
     #[test]
     fn sumup_mode_is_rejected() {
         assert!(program(Mode::Sumup, &[1, 2], 3).is_none());
+        assert!(template_source(Mode::Sumup, 2).is_none(), "no data-only pseudo-template");
+        assert!(template_source(Mode::For, 2).is_some());
     }
 
     #[test]

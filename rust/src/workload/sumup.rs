@@ -34,6 +34,8 @@ impl Mode {
 /// Maximum useful SUMUP children (§6.2: the 30-clock rent period).
 pub const SUMUP_MAX_CHILDREN: u32 = 30;
 
+/// Emit the labelled data section for `values` (`.long` per element; one
+/// zero placeholder keeps the label addressable when empty).
 fn emit_vector(src: &mut String, values: &[i32]) {
     src.push_str("    .align 4\narray:\n");
     for v in values {
@@ -45,32 +47,92 @@ fn emit_vector(src: &mut String, values: &[i32]) {
     }
 }
 
+/// Zero-filled data section at capacity `n` — the template's placeholder
+/// segment, patched per request through the assembled program's data
+/// layout (same shape `emit_vector` produces, so a patched template image
+/// is byte-identical to a directly generated one).
+fn emit_placeholder(src: &mut String, n: usize) {
+    src.push_str("    .align 4\narray:\n");
+    for _ in 0..n.max(1) {
+        src.push_str("    .long 0\n");
+    }
+}
+
 fn checked_sum(values: &[i32]) -> i32 {
     values.iter().fold(0i32, |a, &b| a.wrapping_add(b))
+}
+
+/// Code section for (mode, element count): everything *except* the data
+/// segment. The emitted bytes depend only on `(mode, n)` — this is what
+/// makes a compiled template reusable across requests of the same
+/// size-class with only the data words patched.
+pub(crate) fn code(mode: Mode, n: usize) -> String {
+    let mut s = String::new();
+    match mode {
+        Mode::No => {
+            let _ = writeln!(s, "# asumup, conventional coding (Listing 1), N={n}");
+            s.push_str("    .pos 0\n");
+            let _ = writeln!(s, "    irmovl ${n}, %edx      # No of items to sum");
+            s.push_str("    irmovl array, %ecx   # Array address\n");
+            s.push_str("    xorl %eax, %eax      # sum = 0\n");
+            s.push_str("    andl %edx, %edx      # Set condition codes\n");
+            s.push_str("    je End\n");
+            s.push_str("Loop:\n");
+            s.push_str("    mrmovl (%ecx), %esi  # get *Start\n");
+            s.push_str("    addl %esi, %eax      # add to sum\n");
+            s.push_str("    irmovl $4, %ebx\n");
+            s.push_str("    addl %ebx, %ecx      # Start++\n");
+            s.push_str("    irmovl $-1, %ebx\n");
+            s.push_str("    addl %ebx, %edx      # Count--\n");
+            s.push_str("    jne Loop             # Stop when 0\n");
+            s.push_str("End:\n");
+            s.push_str("    halt\n");
+        }
+        Mode::For => {
+            let _ = writeln!(s, "# asumup, EMPA FOR mode (§5.1), N={n}");
+            s.push_str("    .pos 0\n");
+            let _ = writeln!(s, "    irmovl ${n}, %edx      # No of items to sum");
+            s.push_str("    irmovl array, %ecx   # Array address\n");
+            s.push_str("    xorl %eax, %eax      # sum = 0\n");
+            s.push_str("    qprealloc $1         # guarantee a helper core\n");
+            s.push_str("    qmassfor Body        # SV drives the loop\n");
+            s.push_str("    halt\n");
+            s.push_str("Body:\n");
+            s.push_str("    mrmovl (%ecx), %esi  # get *Start (payload)\n");
+            s.push_str("    addl %esi, %eax      # add to sum (payload)\n");
+            s.push_str("    qterm %eax           # clone the partial sum back\n");
+        }
+        Mode::Sumup => {
+            let prealloc = (n as u32).min(SUMUP_MAX_CHILDREN);
+            let _ = writeln!(s, "# asumup, EMPA SUMUP mode (§5.2), N={n}");
+            s.push_str("    .pos 0\n");
+            let _ = writeln!(s, "    irmovl ${n}, %edx      # No of items to sum");
+            s.push_str("    irmovl array, %ecx   # Array address\n");
+            s.push_str("    xorl %eax, %eax      # sum = 0\n");
+            let _ = writeln!(s, "    qprealloc ${prealloc}       # compiler rule: min(N, 30)");
+            s.push_str("    qmasssum Body        # SV engine + parent adder\n");
+            s.push_str("    halt\n");
+            s.push_str("Body:\n");
+            s.push_str("    mrmovl (%ecx), %esi  # get my element\n");
+            s.push_str("    addl %esi, %pp       # stream summand to parent adder\n");
+            s.push_str("    qterm                # one-shot QT\n");
+        }
+    }
+    s
+}
+
+/// Data-independent template source for the compile-once pipeline: code
+/// for `(mode, n)` plus a zeroed `array` segment of capacity `n`.
+pub fn template_source(mode: Mode, n: usize) -> String {
+    let mut s = code(mode, n);
+    emit_placeholder(&mut s, n);
+    s
 }
 
 /// Listing 1, generalised to an arbitrary vector. Returns the source and
 /// the expected sum.
 pub fn no_mode_program(values: &[i32]) -> (String, i32) {
-    let n = values.len();
-    let mut s = String::new();
-    let _ = writeln!(s, "# asumup, conventional coding (Listing 1), N={n}");
-    s.push_str("    .pos 0\n");
-    let _ = writeln!(s, "    irmovl ${n}, %edx      # No of items to sum");
-    s.push_str("    irmovl array, %ecx   # Array address\n");
-    s.push_str("    xorl %eax, %eax      # sum = 0\n");
-    s.push_str("    andl %edx, %edx      # Set condition codes\n");
-    s.push_str("    je End\n");
-    s.push_str("Loop:\n");
-    s.push_str("    mrmovl (%ecx), %esi  # get *Start\n");
-    s.push_str("    addl %esi, %eax      # add to sum\n");
-    s.push_str("    irmovl $4, %ebx\n");
-    s.push_str("    addl %ebx, %ecx      # Start++\n");
-    s.push_str("    irmovl $-1, %ebx\n");
-    s.push_str("    addl %ebx, %edx      # Count--\n");
-    s.push_str("    jne Loop             # Stop when 0\n");
-    s.push_str("End:\n");
-    s.push_str("    halt\n");
+    let mut s = code(Mode::No, values.len());
     emit_vector(&mut s, values);
     (s, checked_sum(values))
 }
@@ -78,20 +140,7 @@ pub fn no_mode_program(values: &[i32]) -> (String, i32) {
 /// §5.1 FOR mode: lines 9–10 of Listing 1 become a QT executed by one
 /// preallocated child; the SV takes over loop organisation.
 pub fn for_mode_program(values: &[i32]) -> (String, i32) {
-    let n = values.len();
-    let mut s = String::new();
-    let _ = writeln!(s, "# asumup, EMPA FOR mode (§5.1), N={n}");
-    s.push_str("    .pos 0\n");
-    let _ = writeln!(s, "    irmovl ${n}, %edx      # No of items to sum");
-    s.push_str("    irmovl array, %ecx   # Array address\n");
-    s.push_str("    xorl %eax, %eax      # sum = 0\n");
-    s.push_str("    qprealloc $1         # guarantee a helper core\n");
-    s.push_str("    qmassfor Body        # SV drives the loop\n");
-    s.push_str("    halt\n");
-    s.push_str("Body:\n");
-    s.push_str("    mrmovl (%ecx), %esi  # get *Start (payload)\n");
-    s.push_str("    addl %esi, %eax      # add to sum (payload)\n");
-    s.push_str("    qterm %eax           # clone the partial sum back\n");
+    let mut s = code(Mode::For, values.len());
     emit_vector(&mut s, values);
     (s, checked_sum(values))
 }
@@ -99,21 +148,7 @@ pub fn for_mode_program(values: &[i32]) -> (String, i32) {
 /// §5.2 SUMUP mode: staggered children stream summands through `%pp`
 /// into the parent-side adder.
 pub fn sumup_mode_program(values: &[i32]) -> (String, i32) {
-    let n = values.len();
-    let prealloc = (n as u32).min(SUMUP_MAX_CHILDREN);
-    let mut s = String::new();
-    let _ = writeln!(s, "# asumup, EMPA SUMUP mode (§5.2), N={n}");
-    s.push_str("    .pos 0\n");
-    let _ = writeln!(s, "    irmovl ${n}, %edx      # No of items to sum");
-    s.push_str("    irmovl array, %ecx   # Array address\n");
-    s.push_str("    xorl %eax, %eax      # sum = 0\n");
-    let _ = writeln!(s, "    qprealloc ${prealloc}       # compiler rule: min(N, 30)");
-    s.push_str("    qmasssum Body        # SV engine + parent adder\n");
-    s.push_str("    halt\n");
-    s.push_str("Body:\n");
-    s.push_str("    mrmovl (%ecx), %esi  # get my element\n");
-    s.push_str("    addl %esi, %pp       # stream summand to parent adder\n");
-    s.push_str("    qterm                # one-shot QT\n");
+    let mut s = code(Mode::Sumup, values.len());
     emit_vector(&mut s, values);
     (s, checked_sum(values))
 }

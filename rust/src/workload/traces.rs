@@ -1,16 +1,165 @@
-//! Synthetic request traces for the EMPA fabric coordinator (E9).
+//! The trace-replay workload family, plus synthetic request traces for
+//! the EMPA fabric coordinator (E9).
 //!
-//! A trace mixes scalar QT jobs (run a sumup program on a simulated EMPA
-//! processor) with mass operations (batched vector reductions eligible for
-//! the §3.8 accelerator link), with exponential arrivals. The request
-//! *types* live in [`crate::api`]; this module only generates them — a
-//! workload is a producer of [`JobRequest`]s, not a definer of the
-//! service vocabulary.
+//! **Replay family** (`atrace`): a control-heavy interpreter kernel. The
+//! *code* is a fixed dispatch loop; the *trace* — a stream of
+//! `(opcode, operand)` records folded into the accumulator — is pure
+//! data. This is the extreme point of the code/data split the
+//! compile-once pipeline exploits: every request shares one template and
+//! differs only in the patched record stream.
+//!
+//! **Request traces**: a trace mixes scalar QT jobs (programs from every
+//! workload family on a simulated EMPA processor) with mass operations
+//! (batched vector reductions eligible for the §3.8 accelerator link),
+//! with exponential arrivals. The request *types* live in [`crate::api`];
+//! this module only generates them — a workload is a producer of
+//! [`JobRequest`]s, not a definer of the service vocabulary.
 
 use super::sumup::{self, Mode};
 use crate::api::{JobRequest, Priority, RequestKind};
 use crate::util::Rng;
+use std::fmt::Write;
 use std::time::Duration;
+
+// ----------------------------------------------------------------------
+// the trace-replay program family
+// ----------------------------------------------------------------------
+
+/// One replay record's operation on the accumulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceOpKind {
+    /// `acc += v` (opcode 0)
+    Add,
+    /// `acc -= v` (opcode 1)
+    Sub,
+    /// `acc ^= v` (opcode 2)
+    Xor,
+}
+
+impl TraceOpKind {
+    fn opcode(self) -> i32 {
+        match self {
+            TraceOpKind::Add => 0,
+            TraceOpKind::Sub => 1,
+            TraceOpKind::Xor => 2,
+        }
+    }
+}
+
+/// One `(opcode, operand)` replay record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceOp {
+    pub kind: TraceOpKind,
+    pub value: i32,
+}
+
+impl TraceOp {
+    pub fn new(kind: TraceOpKind, value: i32) -> Self {
+        TraceOp { kind, value }
+    }
+}
+
+/// Flatten a record stream into the data words the interpreter reads
+/// (two words per record: opcode, operand).
+pub fn encode_ops(ops: &[TraceOp]) -> Vec<i32> {
+    let mut words = Vec::with_capacity(2 * ops.len());
+    for op in ops {
+        words.push(op.kind.opcode());
+        words.push(op.value);
+    }
+    words
+}
+
+/// Expected accumulator after replaying `ops` (the family oracle).
+pub fn fold_ops(ops: &[TraceOp]) -> i32 {
+    ops.iter().fold(0i32, |acc, op| match op.kind {
+        TraceOpKind::Add => acc.wrapping_add(op.value),
+        TraceOpKind::Sub => acc.wrapping_sub(op.value),
+        TraceOpKind::Xor => acc ^ op.value,
+    })
+}
+
+/// Interpreter code for `n` records; bytes depend only on `n`. The
+/// dispatch chain is straight Y86 control flow — this family only runs
+/// conventionally (`Mode::No`): its payload *is* control.
+pub(crate) fn code(n: usize) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "# atrace, replay interpreter, N={n} records");
+    s.push_str("    .pos 0\n");
+    let _ = writeln!(s, "    irmovl ${n}, %edx    # record count");
+    s.push_str("    irmovl trace, %ecx   # record stream\n");
+    s.push_str("    xorl %eax, %eax      # accumulator\n");
+    s.push_str("    andl %edx, %edx\n");
+    s.push_str("    je End\n");
+    s.push_str("Loop:\n");
+    s.push_str("    mrmovl (%ecx), %ebx  # opcode\n");
+    s.push_str("    mrmovl 4(%ecx), %esi # operand\n");
+    s.push_str("    andl %ebx, %ebx\n");
+    s.push_str("    je DoAdd\n");
+    s.push_str("    irmovl $-1, %edi\n");
+    s.push_str("    addl %edi, %ebx\n");
+    s.push_str("    je DoSub\n");
+    s.push_str("    xorl %esi, %eax      # opcode 2: xor\n");
+    s.push_str("    jmp Next\n");
+    s.push_str("DoAdd:\n");
+    s.push_str("    addl %esi, %eax\n");
+    s.push_str("    jmp Next\n");
+    s.push_str("DoSub:\n");
+    s.push_str("    subl %esi, %eax\n");
+    s.push_str("Next:\n");
+    s.push_str("    irmovl $8, %edi\n");
+    s.push_str("    addl %edi, %ecx      # next record\n");
+    s.push_str("    irmovl $-1, %edi\n");
+    s.push_str("    addl %edi, %edx\n");
+    s.push_str("    jne Loop\n");
+    s.push_str("End:\n");
+    s.push_str("    halt\n");
+    s
+}
+
+fn emit_trace(src: &mut String, ops: &[TraceOp]) {
+    src.push_str("    .align 4\ntrace:\n");
+    for w in encode_ops(ops) {
+        let _ = writeln!(src, "    .long {w}");
+    }
+    if ops.is_empty() {
+        src.push_str("    .long 0\n    .long 0\n");
+    }
+}
+
+/// Data-independent template source: interpreter code plus a zeroed
+/// record stream of capacity `n`.
+pub fn template_source(n: usize) -> String {
+    let mut s = code(n);
+    s.push_str("    .align 4\ntrace:\n");
+    for _ in 0..2 * n.max(1) {
+        s.push_str("    .long 0\n");
+    }
+    s
+}
+
+/// Full replay program for `ops`. Returns the source and the expected
+/// accumulator.
+pub fn replay_program(ops: &[TraceOp]) -> (String, i32) {
+    let mut s = code(ops.len());
+    emit_trace(&mut s, ops);
+    (s, fold_ops(ops))
+}
+
+/// A deterministic pseudo-random record stream (tests, trace generation).
+pub fn synth_ops(n: usize, seed: u64) -> Vec<TraceOp> {
+    let mut rng = Rng::seed_from_u64(seed ^ 0x7ace);
+    (0..n)
+        .map(|_| {
+            let kind = match rng.below(3) {
+                0 => TraceOpKind::Add,
+                1 => TraceOpKind::Sub,
+                _ => TraceOpKind::Xor,
+            };
+            TraceOp::new(kind, (rng.next_u64() as u32 as i32) >> 8)
+        })
+        .collect()
+}
 
 /// One generated request with its arrival offset.
 #[derive(Debug, Clone, PartialEq)]
@@ -89,14 +238,27 @@ impl TraceGen {
                 }
             } else {
                 let len = self.rng.range_usize(self.cfg.program_len.0, self.cfg.program_len.1);
+                let seed = self.cfg.seed ^ id;
                 let mode = match self.rng.below(3) {
                     0 => Mode::No,
                     1 => Mode::For,
                     _ => Mode::Sumup,
                 };
-                RequestKind::RunProgram {
-                    mode,
-                    values: sumup::synth_vector(len, self.cfg.seed ^ id),
+                // Every program family is fabric-servable; sample them all.
+                match self.rng.below(4) {
+                    0 => RequestKind::sumup(mode, sumup::synth_vector(len, seed)),
+                    1 => RequestKind::dotprod(
+                        mode,
+                        sumup::synth_vector(len, seed),
+                        sumup::synth_vector(len, seed.wrapping_add(1)),
+                    ),
+                    2 => RequestKind::scale(
+                        // scale has no reduction: SUMUP does not apply
+                        if mode == Mode::Sumup { Mode::For } else { mode },
+                        sumup::synth_vector(len, seed),
+                        (seed % 97) as i32 - 48,
+                    ),
+                    _ => RequestKind::traces(synth_ops(len, seed)),
                 }
             };
             let mut job = JobRequest::new(kind);
@@ -153,20 +315,59 @@ mod tests {
     }
 
     #[test]
-    fn program_requests_use_all_modes() {
+    fn program_requests_use_all_modes_and_families() {
+        use crate::workload::family::Family;
         let cfg = TraceConfig { num_requests: 600, mass_fraction: 0.0, ..Default::default() };
         let t = TraceGen::new(cfg).generate();
-        let mut seen = [false; 3];
+        let mut modes = [false; 3];
+        let mut families = [false; 4];
         for r in &t {
-            if let RequestKind::RunProgram { mode, .. } = &r.job.kind {
-                seen[match mode {
+            if let RequestKind::RunProgram { family, mode, .. } = &r.job.kind {
+                modes[match mode {
                     Mode::No => 0,
                     Mode::For => 1,
                     Mode::Sumup => 2,
                 }] = true;
+                families[match family {
+                    Family::Sumup => 0,
+                    Family::Dotprod => 1,
+                    Family::Scale => 2,
+                    Family::Traces => 3,
+                }] = true;
             }
         }
-        assert_eq!(seen, [true; 3]);
+        assert_eq!(modes, [true; 3]);
+        assert_eq!(families, [true; 4]);
+    }
+
+    #[test]
+    fn replay_program_matches_fold_oracle() {
+        use crate::empa::{EmpaConfig, EmpaProcessor};
+        use crate::isa::assemble;
+        for n in [0usize, 1, 2, 9, 30] {
+            let ops = synth_ops(n, 5);
+            let (src, want) = replay_program(&ops);
+            let p = assemble(&src).unwrap_or_else(|e| panic!("N={n}: {e}"));
+            let r = EmpaProcessor::new(&p.image, &EmpaConfig::default()).run();
+            assert_eq!(r.fault, None, "N={n}");
+            assert_eq!(r.eax(), want, "N={n}");
+        }
+    }
+
+    #[test]
+    fn replay_ops_cover_all_kinds_and_wrap() {
+        let ops = vec![
+            TraceOp::new(TraceOpKind::Add, i32::MAX),
+            TraceOp::new(TraceOpKind::Add, 1), // wraps
+            TraceOp::new(TraceOpKind::Sub, 5),
+            TraceOp::new(TraceOpKind::Xor, -1),
+        ];
+        let want = i32::MAX
+            .wrapping_add(1)
+            .wrapping_sub(5) ^ -1;
+        assert_eq!(fold_ops(&ops), want);
+        assert_eq!(encode_ops(&ops).len(), 8);
+        assert_eq!(encode_ops(&ops)[..2], [0, i32::MAX]);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use empa::coordinator::{
 };
 use empa::empa::EmpaConfig;
 use empa::util::Rng;
+use empa::workload::family::{family_impl, synth_params, Expected, Family, Params, ALL_FAMILIES};
 use empa::workload::sumup::Mode;
 use empa::workload::{TraceConfig, TraceGen};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -43,10 +44,13 @@ impl Backend for Paced {
     }
     fn execute(&self, job: BackendJob) -> Result<BackendReply, FabricError> {
         match job {
-            BackendJob::Program { values, .. } => {
-                let ms = values.first().copied().unwrap_or(0).max(0) as u64;
+            BackendJob::Program { params, .. } => {
+                let ms = match params {
+                    Params::Sumup { values } => values.first().copied().unwrap_or(0).max(0) as u64,
+                    _ => 0,
+                };
                 std::thread::sleep(Duration::from_millis(ms));
-                Ok(BackendReply::Program { eax: ms as i32, clocks: ms, cores: 1 })
+                Ok(BackendReply::Program { eax: ms as i32, clocks: ms, cores: 1, data: vec![] })
             }
             BackendJob::Mass(_) => Err(FabricError::Backend {
                 name: "paced".into(),
@@ -69,7 +73,7 @@ fn paced_registry() -> BackendRegistry {
 }
 
 fn paced_job(ms: i32) -> RequestKind {
-    RequestKind::RunProgram { mode: Mode::No, values: vec![ms] }
+    RequestKind::sumup(Mode::No, vec![ms])
 }
 
 #[test]
@@ -101,16 +105,100 @@ fn trace_results_match_direct_computation() {
 
 #[test]
 fn program_responses_carry_table1_numbers() {
+    // The compile-once pipeline serves byte-identical programs, so the
+    // fabric's clock counts still reproduce Table 1 exactly.
     let f = fabric(FabricConfig::default());
     let cases = [(Mode::No, 142u64, 1usize), (Mode::For, 64, 2), (Mode::Sumup, 36, 5)];
     for (mode, clocks, cores) in cases {
-        let h = f
-            .submit(RequestKind::RunProgram { mode, values: vec![0xd, 0xc0, 0xb00, 0xa000] })
-            .unwrap();
+        let h = f.submit(RequestKind::sumup(mode, vec![0xd, 0xc0, 0xb00, 0xa000])).unwrap();
         let c = h.wait().unwrap();
-        assert_eq!(c.output, Output::Program { eax: 0xd + 0xc0 + 0xb00 + 0xa000, clocks, cores });
+        assert_eq!(
+            c.output,
+            Output::Program { eax: 0xd + 0xc0 + 0xb00 + 0xa000, clocks, cores, data: vec![] }
+        );
         assert_eq!((c.route, c.backend.as_str()), (Route::Simulator, "sim"));
     }
+    f.shutdown();
+}
+
+/// Acceptance: every workload family is submittable through the client
+/// and its completion matches the family oracle; the pipeline metrics
+/// show template caching and processor reuse at work.
+#[test]
+fn all_families_submittable_and_verified_against_oracles() {
+    // One worker → one template cache/processor: the second round's
+    // hit/reuse counts are exact, not placement-dependent.
+    let f = fabric(FabricConfig { sim_workers: 1, ..Default::default() });
+    let client = f.client();
+    let mut jobs: Vec<(Family, Mode, Params, Job)> = Vec::new();
+    for round in 0..2u64 {
+        for family in ALL_FAMILIES {
+            let fam = family_impl(family);
+            for &mode in fam.modes() {
+                for n in [0usize, 1, 9] {
+                    let params = synth_params(family, n, round ^ (n as u64) << 3);
+                    let job = client
+                        .submit(RequestKind::RunProgram { family, mode, params: params.clone() })
+                        .unwrap();
+                    jobs.push((family, mode, params, job));
+                }
+            }
+        }
+    }
+    let total = jobs.len() as u64;
+    for (family, mode, params, job) in jobs {
+        let c = job.wait().unwrap_or_else(|e| panic!("{} {mode:?}: {e}", family.name()));
+        let Output::Program { eax, data, .. } = &c.output else {
+            panic!("{} {mode:?}: program output expected", family.name())
+        };
+        let want = family_impl(family).oracle(&params).unwrap();
+        assert!(
+            want.matches(*eax, data),
+            "{} {mode:?}: want {want:?}, got eax={eax} data={data:?}",
+            family.name()
+        );
+        if let Expected::Data(w) = &want {
+            assert_eq!(data, w, "scale returns its output array");
+        }
+    }
+    let m = &f.metrics;
+    let hits = m.template_hits.load(Ordering::Relaxed);
+    let misses = m.template_misses.load(Ordering::Relaxed);
+    assert_eq!(hits + misses, total, "every program job went through the template cache");
+    assert_eq!(hits, misses, "round 2 repeats every (family, mode, size-class) exactly");
+    let reuses = m.proc_reuses.load(Ordering::Relaxed);
+    let rebuilds = m.proc_rebuilds.load(Ordering::Relaxed);
+    assert_eq!(rebuilds, 1, "one processor build for the single worker");
+    assert_eq!(reuses, total - 1, "every later job reset the existing processor");
+    assert!(m.render().contains("program pipeline"), "{}", m.render());
+    f.shutdown();
+}
+
+#[test]
+fn unsupported_modes_and_family_mismatch_rejected_at_submission() {
+    let f = fabric(FabricConfig::default());
+    let err = f.submit(RequestKind::scale(Mode::Sumup, vec![1, 2], 3)).unwrap_err();
+    assert_eq!(err, FabricError::UnsupportedMode { family: Family::Scale, mode: Mode::Sumup });
+    let err = f
+        .submit(RequestKind::RunProgram {
+            family: Family::Traces,
+            mode: Mode::For,
+            params: Params::Traces { ops: vec![] },
+        })
+        .unwrap_err();
+    assert_eq!(err, FabricError::UnsupportedMode { family: Family::Traces, mode: Mode::For });
+    let err = f
+        .submit(RequestKind::RunProgram {
+            family: Family::Sumup,
+            mode: Mode::No,
+            params: Params::Scale { x: vec![1], c: 2 },
+        })
+        .unwrap_err();
+    assert_eq!(err, FabricError::FamilyMismatch { family: Family::Sumup, params: Family::Scale });
+    // a mismatched dot-product *program* is rejected like the mass op
+    let err = f.submit(RequestKind::dotprod(Mode::No, vec![1, 2, 3], vec![1])).unwrap_err();
+    assert_eq!(err, FabricError::ShapeMismatch { a: 3, b: 1 });
+    assert_eq!(f.metrics.submitted.load(Ordering::Relaxed), 0, "rejected before any queue");
     f.shutdown();
 }
 
@@ -248,10 +336,7 @@ fn try_submit_reports_queue_full_under_saturation() {
         ..Default::default()
     };
     let f = fabric(cfg);
-    let slow = || RequestKind::RunProgram {
-        mode: Mode::Sumup,
-        values: (0..1_000).map(|i| i % 7).collect(),
-    };
+    let slow = || RequestKind::sumup(Mode::Sumup, (0..1_000).map(|i| i % 7).collect());
     let mut accepted: Vec<Job> = Vec::new();
     let mut saw_full = false;
     for _ in 0..256 {
@@ -345,10 +430,10 @@ fn high_priority_overtakes_staged_low_priority() {
     let low: Vec<Job> = (0..8)
         .map(|_| {
             f.submit(
-                JobRequest::new(RequestKind::RunProgram {
-                    mode: Mode::No,
-                    values: (0..1_000).map(|i| i % 5).collect(),
-                })
+                JobRequest::new(RequestKind::sumup(
+                    Mode::No,
+                    (0..1_000).map(|i| i % 5).collect(),
+                ))
                 .with_priority(Priority::Low),
             )
             .unwrap()
@@ -356,12 +441,12 @@ fn high_priority_overtakes_staged_low_priority() {
         .collect();
     let high = f
         .submit(
-            JobRequest::new(RequestKind::RunProgram { mode: Mode::Sumup, values: vec![1, 2, 3, 4] })
+            JobRequest::new(RequestKind::sumup(Mode::Sumup, vec![1, 2, 3, 4]))
                 .with_priority(Priority::High),
         )
         .unwrap();
     let c = high.wait().unwrap();
-    assert_eq!(c.output, Output::Program { eax: 10, clocks: 36, cores: 5 });
+    assert_eq!(c.output, Output::Program { eax: 10, clocks: 36, cores: 5, data: vec![] });
     for j in low {
         assert!(j.wait().is_ok());
     }
@@ -391,9 +476,7 @@ fn shutdown_scales_past_the_old_stop_broadcast_limit() {
     // The seed broadcast 64 Stop messages; worker counts above that used
     // to hang shutdown. Per-worker stop (sender drop) must not.
     let f = fabric(FabricConfig { sim_workers: 96, ..Default::default() });
-    let h = f
-        .submit(RequestKind::RunProgram { mode: Mode::Sumup, values: vec![1, 2, 3, 4] })
-        .unwrap();
+    let h = f.submit(RequestKind::sumup(Mode::Sumup, vec![1, 2, 3, 4])).unwrap();
     assert!(h.wait().is_ok());
     f.shutdown(); // must return (joins all 96 workers)
 }
@@ -443,7 +526,7 @@ fn idle_worker_steals_the_busy_workers_backlog() {
         (0..7).map(|_| (10, f.submit(paced_job(10)).unwrap())).collect();
     for (ms, j) in quick {
         let c = j.wait().unwrap();
-        assert_eq!(c.output, Output::Program { eax: ms, clocks: ms as u64, cores: 1 });
+        assert_eq!(c.output, Output::Program { eax: ms, clocks: ms as u64, cores: 1, data: vec![] });
     }
     assert!(matches!(slow.wait().unwrap().output, Output::Program { eax: 500, .. }));
     assert!(
@@ -496,7 +579,7 @@ fn failovers_count_only_when_a_later_entry_takes_over() {
         .register_accel("broken-1", || Ok(Box::new(Broken) as Box<dyn Accelerator>))
         .register_accel("broken-2", || Ok(Box::new(Broken) as Box<dyn Accelerator>));
     let f = Fabric::start(FabricConfig { sim_workers: 1, ..Default::default() }, registry);
-    let h = f.submit(RequestKind::RunProgram { mode: Mode::No, values: vec![1] }).unwrap();
+    let h = f.submit(RequestKind::sumup(Mode::No, vec![1])).unwrap();
     assert!(matches!(h.wait(), Err(FabricError::Backend { .. })));
     let h = f.submit(RequestKind::MassSum { values: vec![1.0; 512] }).unwrap();
     assert!(matches!(h.wait(), Err(FabricError::Backend { .. })));
@@ -573,7 +656,7 @@ fn throughput_scales_with_sim_workers() {
     let run = |workers: usize| {
         let f = fabric(FabricConfig { sim_workers: workers, ..Default::default() });
         let kinds: Vec<RequestKind> = (0..64)
-            .map(|_| RequestKind::RunProgram { mode: Mode::No, values: (0..400).collect() })
+            .map(|_| RequestKind::sumup(Mode::No, (0..400).collect()))
             .collect();
         let t0 = std::time::Instant::now();
         let hs: Vec<_> = kinds.into_iter().map(|k| f.submit(k).unwrap()).collect();

@@ -1,10 +1,15 @@
 //! Robustness fuzzing (proptest-style, in-crate PRNG): the decoder,
-//! assembler and simulator must never panic on hostile input, and the
-//! architectural results must be invariant under timing perturbations.
+//! assembler and simulator must never panic on hostile input, the
+//! architectural results must be invariant under timing perturbations,
+//! and every workload family must match its oracle through both the
+//! direct compile-once pipeline and the fabric service.
 
+use empa::api::RequestKind;
+use empa::coordinator::{Fabric, FabricConfig};
 use empa::empa::{EmpaConfig, EmpaProcessor, TimingConfig};
 use empa::isa::{assemble, disassemble, Insn};
 use empa::util::Rng;
+use empa::workload::family::{direct_source, family_impl, read_span, synth_params, ALL_FAMILIES};
 use empa::workload::sumup::{self, Mode};
 
 #[test]
@@ -136,6 +141,77 @@ fn sumup_marginal_cost_equals_stagger() {
         let b = clocks(18);
         assert_eq!(b - a, 6 * stagger, "stagger {stagger}");
     }
+}
+
+/// Differential test over every workload family (random sizes including
+/// the 0 and 1 edges): the patched-template pipeline, the directly
+/// generated source, and the fabric service must all agree with the
+/// family oracle — and with each other, byte-for-byte at the image
+/// level.
+#[test]
+fn workload_families_match_oracles_direct_and_via_fabric() {
+    let mut rng = Rng::seed_from_u64(0xFA111);
+    let cfg = EmpaConfig::default();
+    let fabric = Fabric::start_local(FabricConfig { sim_workers: 2, ..Default::default() });
+    let client = fabric.client();
+    for case in 0..6u64 {
+        for family in ALL_FAMILIES {
+            let fam = family_impl(family);
+            for &mode in fam.modes() {
+                // always exercise the 0 and 1 edges, plus a random size
+                for n in [0usize, 1, rng.range_usize(2, 40)] {
+                    let params = synth_params(family, n, case.wrapping_mul(97) ^ n as u64);
+                    let want = fam.oracle(&params).unwrap();
+
+                    // --- direct pipeline: template + patch -------------
+                    let sc = fam.size_class(&params).unwrap();
+                    let tpl = assemble(&fam.template(mode, sc).unwrap()).unwrap();
+                    let mut image = tpl.image.clone();
+                    for (sym, words) in fam.data_image(&params).unwrap() {
+                        tpl.patch_into(&mut image, sym, &words).unwrap();
+                    }
+                    // byte-identical to the pre-pipeline source path
+                    let direct = assemble(&direct_source(mode, &params).unwrap()).unwrap();
+                    assert_eq!(image, direct.image, "{} {mode:?} N={n}", family.name());
+
+                    let mut proc = EmpaProcessor::new(&image, &cfg);
+                    let r = proc.run_report();
+                    assert_eq!(r.fault, None, "{} {mode:?} N={n}", family.name());
+                    let data: Vec<i32> = match fam.readback(&params) {
+                        Some((sym, words)) => read_span(&tpl, &proc.mem, sym, words).unwrap(),
+                        None => Vec::new(),
+                    };
+                    assert!(
+                        want.matches(r.eax(), &data),
+                        "direct {} {mode:?} N={n}: want {want:?}, eax={} data={data:?}",
+                        family.name(),
+                        r.eax()
+                    );
+
+                    // --- fabric path -----------------------------------
+                    let job = client
+                        .submit(RequestKind::RunProgram { family, mode, params })
+                        .unwrap();
+                    let c = job.wait().unwrap_or_else(|e| {
+                        panic!("fabric {} {mode:?} N={n}: {e}", family.name())
+                    });
+                    let empa::api::Output::Program { eax, data: fdata, clocks, .. } = &c.output
+                    else {
+                        panic!("program output expected");
+                    };
+                    assert!(
+                        want.matches(*eax, fdata),
+                        "fabric {} {mode:?} N={n}: want {want:?}, eax={eax} data={fdata:?}",
+                        family.name()
+                    );
+                    // the two paths agree with each other, not just the oracle
+                    assert_eq!((*eax, fdata), (r.eax(), &data), "{} {mode:?} N={n}", family.name());
+                    assert_eq!(*clocks, r.clocks, "served run is cycle-identical");
+                }
+            }
+        }
+    }
+    fabric.shutdown();
 }
 
 /// The FOR-mode marginal cost is the child body length, for any timing.
