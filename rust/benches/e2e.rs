@@ -131,9 +131,10 @@ fn main() {
             let misses = f.metrics.template_misses.load(std::sync::atomic::Ordering::Relaxed);
             let reuses = f.metrics.proc_reuses.load(std::sync::atomic::Ordering::Relaxed);
             println!(
-                "{label:>6}: {:>8.0} req/s  latency us {}  [hits {hits} misses {misses} reuses {reuses}]",
+                "{label:>6}: {:>8.0} req/s  latency us {}  [hits {hits} misses {misses} reuses {reuses}, sim {:.1} clocks/event]",
                 reqs as f64 / wall.as_secs_f64(),
                 Summary::of(&lats),
+                f.metrics.sim_clocks_per_event(),
             );
             f.shutdown();
         };

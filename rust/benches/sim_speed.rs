@@ -1,0 +1,181 @@
+//! Bench E11 — the event-horizon scheduler: simulated-clocks-per-wall-
+//! second and scheduler iterations (events) vs lockstep ticks, across
+//! the workload families at small and large N, plus the fabric-published
+//! `sim engine:` ratio. See EXPERIMENTS.md §Perf for the methodology.
+//!
+//! `--save-baseline [path]` dumps the table as JSON (default
+//! `BENCH_sim_speed.json`) so future PRs can keep a trajectory.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::section;
+use empa::api::RequestKind;
+use empa::coordinator::{Fabric, FabricConfig};
+use empa::empa::{EmpaConfig, EmpaProcessor, RunReport, StepMode};
+use empa::isa::assemble;
+use empa::util::json::{num, JsonWriter};
+use empa::workload::family::{direct_source, synth_params, Family};
+use empa::workload::sumup::{self, Mode};
+use std::time::Instant;
+
+struct Row {
+    label: String,
+    n: usize,
+    clocks: u64,
+    ticks: u64,
+    events: u64,
+    ratio: f64,
+    lock_clocks_per_s: f64,
+    eh_clocks_per_s: f64,
+    speedup: f64,
+}
+
+/// Run `image` in `mode` `iters` times; report the last run and the best
+/// simulated-clocks-per-wall-second over the iterations.
+fn measure(image: &[u8], mode: StepMode, iters: u32) -> (RunReport, f64) {
+    let cfg = EmpaConfig { step: mode, ..Default::default() };
+    let mut best = 0.0f64;
+    let mut last = None;
+    for _ in 0..iters {
+        let mut p = EmpaProcessor::new(image, &cfg);
+        let t0 = Instant::now();
+        let r = p.run_report();
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(r.fault, None, "bench workload must not fault");
+        best = best.max(r.clocks as f64 / wall.max(1e-12));
+        last = Some(r);
+    }
+    (last.expect("iters > 0"), best)
+}
+
+fn bench_image(label: &str, n: usize, image: &[u8], iters: u32) -> Row {
+    let (lock, lock_rate) = measure(image, StepMode::Lockstep, iters);
+    let (eh, eh_rate) = measure(image, StepMode::EventHorizon, iters);
+    // the modes must agree before their speeds are comparable
+    assert_eq!(lock.clocks, eh.clocks, "{label}: cycle-identical");
+    assert_eq!(lock.regs.file, eh.regs.file, "{label}: architecturally identical");
+    assert_eq!(lock.max_occupied, eh.max_occupied, "{label}");
+    assert_eq!(lock.retired, eh.retired, "{label}");
+    Row {
+        label: label.to_string(),
+        n,
+        clocks: eh.clocks,
+        ticks: lock.events_processed,
+        events: eh.events_processed,
+        ratio: lock.events_processed as f64 / eh.events_processed.max(1) as f64,
+        lock_clocks_per_s: lock_rate,
+        eh_clocks_per_s: eh_rate,
+        speedup: eh_rate / lock_rate.max(1e-12),
+    }
+}
+
+fn sumup_image(mode: Mode, n: usize) -> Vec<u8> {
+    let (src, _) = sumup::program(mode, &sumup::synth_vector(n, 0xBE));
+    assemble(&src).unwrap().image
+}
+
+fn traces_image(n: usize) -> Vec<u8> {
+    let params = synth_params(Family::Traces, n, 0x7ACE);
+    assemble(&direct_source(Mode::No, &params).unwrap()).unwrap().image
+}
+
+fn main() {
+    let mut save: Option<String> = None;
+    let mut args = std::env::args().skip(1).peekable();
+    while let Some(a) = args.next() {
+        if a == "--save-baseline" {
+            let path = match args.peek() {
+                Some(p) if !p.starts_with("--") => args.next().unwrap(),
+                _ => "BENCH_sim_speed.json".to_string(),
+            };
+            save = Some(path);
+        }
+    }
+
+    section("E11: event-horizon scheduler vs lockstep (cycle-identical)");
+    println!(
+        "{:>14} {:>6} {:>9} {:>9} {:>8} {:>7} {:>12} {:>12} {:>8}",
+        "workload", "N", "clocks", "ticks", "events", "ratio", "lock clk/s", "eh clk/s", "speedup"
+    );
+    let mut rows = Vec::new();
+    for (label, n, image, iters) in [
+        ("NO", 64usize, sumup_image(Mode::No, 64), 20u32),
+        ("NO", 4096, sumup_image(Mode::No, 4096), 5),
+        ("FOR", 64, sumup_image(Mode::For, 64), 20),
+        ("FOR", 4096, sumup_image(Mode::For, 4096), 5),
+        ("SUMUP", 64, sumup_image(Mode::Sumup, 64), 20),
+        ("SUMUP", 4096, sumup_image(Mode::Sumup, 4096), 5),
+        ("traces", 64, traces_image(64), 20),
+        ("traces", 1024, traces_image(1024), 5),
+    ] {
+        let row = bench_image(label, n, &image, iters);
+        println!(
+            "{:>14} {:>6} {:>9} {:>9} {:>8} {:>6.1}x {:>12.3e} {:>12.3e} {:>7.1}x",
+            row.label,
+            row.n,
+            row.clocks,
+            row.ticks,
+            row.events,
+            row.ratio,
+            row.lock_clocks_per_s,
+            row.eh_clocks_per_s,
+            row.speedup
+        );
+        rows.push(row);
+    }
+    let no_big = rows.iter().find(|r| r.label == "NO" && r.n == 4096).expect("NO/4096 row");
+    assert!(
+        no_big.ratio >= 5.0,
+        "acceptance bar: >=5x fewer scheduler iterations on NO N=4096, got {:.1}x",
+        no_big.ratio
+    );
+
+    section("E11: the ratio as served through the fabric (FabricMetrics)");
+    {
+        let f = Fabric::start_local(FabricConfig { sim_workers: 1, ..Default::default() });
+        for _ in 0..8 {
+            let job = f
+                .submit(RequestKind::sumup(Mode::No, (0..4096).map(|i| i % 7).collect()))
+                .unwrap();
+            job.wait().unwrap();
+        }
+        let render = f.metrics.render();
+        let line = render
+            .lines()
+            .find(|l| l.contains("sim engine:"))
+            .expect("metrics publish the sim engine line")
+            .trim()
+            .to_string();
+        println!("{line}");
+        println!("fabric-observed clocks/event: {:.1}", f.metrics.sim_clocks_per_event());
+        f.shutdown();
+    }
+
+    if let Some(path) = save {
+        let mut w = JsonWriter::new();
+        let objs: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                let mut o = JsonWriter::new();
+                o.object(&[
+                    ("workload", format!("\"{}\"", r.label)),
+                    ("n", r.n.to_string()),
+                    ("clocks", r.clocks.to_string()),
+                    ("ticks", r.ticks.to_string()),
+                    ("events", r.events.to_string()),
+                    ("events_vs_ticks_ratio", num(r.ratio)),
+                    ("lockstep_clocks_per_sec", num(r.lock_clocks_per_s)),
+                    ("event_horizon_clocks_per_sec", num(r.eh_clocks_per_s)),
+                    ("wall_speedup", num(r.speedup)),
+                ]);
+                o.finish()
+            })
+            .collect();
+        w.raw("{\"bench\":\"sim_speed\",\"rows\":");
+        w.array(&objs);
+        w.raw("}");
+        std::fs::write(&path, w.finish()).expect("write baseline");
+        println!("\nbaseline saved to {path}");
+    }
+}

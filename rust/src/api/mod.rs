@@ -191,6 +191,11 @@ pub enum FabricError {
     /// A `RunProgram`'s declared family disagrees with its params
     /// variant (use the `RequestKind` constructors to avoid this).
     FamilyMismatch { family: Family, params: Family },
+    /// The fabric's simulator configuration is invalid (e.g. an
+    /// unsupported core count). Produced at backend init — and again,
+    /// defensively, per job — instead of aborting the serving process
+    /// the way the old `assert!` did.
+    InvalidConfig(String),
     /// The guest program faulted (or failed to assemble) on the simulated
     /// EMPA processor.
     GuestFault(String),
@@ -218,6 +223,7 @@ impl std::fmt::Display for FabricError {
                 family.name(),
                 params.name()
             ),
+            FabricError::InvalidConfig(m) => write!(f, "invalid fabric configuration: {m}"),
             FabricError::GuestFault(m) => write!(f, "guest fault: {m}"),
             FabricError::Backend { name, msg } => write!(f, "backend `{name}`: {msg}"),
             FabricError::Shutdown => write!(f, "fabric is shut down"),
@@ -461,6 +467,8 @@ mod tests {
         assert!(e.to_string().contains("scale"), "{e}");
         let e = FabricError::FamilyMismatch { family: Family::Sumup, params: Family::Traces };
         assert!(e.to_string().contains("traces"), "{e}");
+        let e = FabricError::InvalidConfig("num_cores=0 unsupported".into());
+        assert!(e.to_string().contains("num_cores=0"), "{e}");
     }
 
     #[test]

@@ -128,14 +128,21 @@ impl BackendRegistry {
         )
     }
 
+    /// The `sim` program-backend factory, validating the fabric's
+    /// simulator configuration at init: a bad config is a typed factory
+    /// failure (visible as `init_failures` and a failover), never a
+    /// panic inside the serving process.
+    fn sim_factory(empa: EmpaConfig) -> BackendFactory {
+        Box::new(move || {
+            empa.validate().map_err(anyhow::Error::new)?;
+            Ok(Box::new(SimBackend::new(empa.clone())) as Box<dyn Backend>)
+        })
+    }
+
     /// The default local registry: simulated EMPA pool + native mass ops.
     pub fn local(empa: EmpaConfig) -> Self {
         BackendRegistry::new()
-            .register(
-                "sim",
-                BackendClass::Program,
-                Box::new(move || Ok(Box::new(SimBackend::new(empa.clone())) as Box<dyn Backend>)),
-            )
+            .register("sim", BackendClass::Program, Self::sim_factory(empa))
             .register_accel("native", || Ok(Box::new(NativeAccel) as Box<dyn Accelerator>))
     }
 
@@ -144,11 +151,7 @@ impl BackendRegistry {
     pub fn with_xla(empa: EmpaConfig, artifact_dir: impl Into<String>) -> Self {
         let dir = artifact_dir.into();
         BackendRegistry::new()
-            .register(
-                "sim",
-                BackendClass::Program,
-                Box::new(move || Ok(Box::new(SimBackend::new(empa.clone())) as Box<dyn Backend>)),
-            )
+            .register("sim", BackendClass::Program, Self::sim_factory(empa))
             .register_accel("xla", move || {
                 let rt = crate::runtime::Runtime::load_dir(&dir)?;
                 Ok(Box::new(crate::accel::XlaAccel::new(rt)) as Box<dyn Accelerator>)
@@ -244,6 +247,11 @@ pub struct PipelineStats {
     pub template_misses: Cell<u64>,
     pub proc_reuses: Cell<u64>,
     pub proc_rebuilds: Cell<u64>,
+    /// Scheduler iterations executed across served jobs (see
+    /// [`crate::empa::RunReport::events_processed`]).
+    pub sim_events: Cell<u64>,
+    /// Clocks the event-horizon scheduler skipped across served jobs.
+    pub sim_clocks_skipped: Cell<u64>,
 }
 
 /// One simulated EMPA processor slot, built as a **compile-once
@@ -282,9 +290,18 @@ impl SimBackend {
     }
 
     fn count(&self, local: &Cell<u64>, shared: impl Fn(&FabricMetrics) -> &std::sync::atomic::AtomicU64) {
-        local.set(local.get() + 1);
+        self.count_by(local, 1, shared);
+    }
+
+    fn count_by(
+        &self,
+        local: &Cell<u64>,
+        n: u64,
+        shared: impl Fn(&FabricMetrics) -> &std::sync::atomic::AtomicU64,
+    ) {
+        local.set(local.get() + n);
         if let Some(m) = &self.metrics {
-            shared(m).fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            shared(m).fetch_add(n, std::sync::atomic::Ordering::Relaxed);
         }
     }
 
@@ -335,11 +352,18 @@ impl SimBackend {
             self.count(&self.stats.proc_reuses, |m| &m.proc_reuses);
             p.reset_with(&image);
         } else {
+            *guard = Some(
+                EmpaProcessor::try_new(&image, &self.cfg)
+                    .map_err(|e| FabricError::InvalidConfig(e.to_string()))?,
+            );
             self.count(&self.stats.proc_rebuilds, |m| &m.proc_rebuilds);
-            *guard = Some(EmpaProcessor::new(&image, &self.cfg));
         }
         let proc = guard.as_mut().expect("constructed above");
         let r = proc.run_report();
+        // Event-horizon scheduler economics, visible as the fabric's
+        // `sim engine:` metrics line.
+        self.count_by(&self.stats.sim_events, r.events_processed, |m| &m.sim_events);
+        self.count_by(&self.stats.sim_clocks_skipped, r.clocks_skipped, |m| &m.sim_clocks_skipped);
         if let Some(f) = r.fault {
             return Err(FabricError::GuestFault(f));
         }
@@ -455,6 +479,48 @@ mod tests {
             r,
             BackendReply::Program { eax: 10, clocks: 36, cores: 5, data: vec![] }
         );
+    }
+
+    #[test]
+    fn invalid_empa_config_fails_backend_init_not_the_process() {
+        let bad = EmpaConfig { num_cores: 0, ..Default::default() };
+        let reg = BackendRegistry::local(bad.clone());
+        let chain = reg.chain(BackendClass::Program);
+        let err = chain[0].instantiate().expect_err("factory rejects the config");
+        assert!(err.to_string().contains("num_cores=0"), "{err}");
+        // defence in depth: a directly driven backend refuses per job too
+        let b = SimBackend::new(bad);
+        let params = Params::Sumup { values: vec![1] };
+        let err = b
+            .execute(BackendJob::Program { family: Family::Sumup, mode: Mode::Sumup, params: &params })
+            .unwrap_err();
+        assert!(matches!(err, FabricError::InvalidConfig(ref m) if m.contains("num_cores=0")), "{err}");
+        assert_eq!(b.pipeline_stats().proc_rebuilds.get(), 0, "no processor was built");
+    }
+
+    #[test]
+    fn sim_backend_publishes_event_horizon_stats() {
+        let b = SimBackend::new(EmpaConfig::default());
+        let params = Params::Sumup { values: (0..64).collect() };
+        b.execute(BackendJob::Program { family: Family::Sumup, mode: Mode::No, params: &params })
+            .unwrap();
+        let s = b.pipeline_stats();
+        assert!(s.sim_events.get() > 0, "events counted");
+        assert!(
+            s.sim_clocks_skipped.get() > s.sim_events.get(),
+            "NO-mode serving skips most clocks: {} events, {} skipped",
+            s.sim_events.get(),
+            s.sim_clocks_skipped.get()
+        );
+        // a lockstep pool publishes zero skips
+        let lock = SimBackend::new(EmpaConfig {
+            step: crate::empa::StepMode::Lockstep,
+            ..Default::default()
+        });
+        lock.execute(BackendJob::Program { family: Family::Sumup, mode: Mode::No, params: &params })
+            .unwrap();
+        assert_eq!(lock.pipeline_stats().sim_clocks_skipped.get(), 0);
+        assert!(lock.pipeline_stats().sim_events.get() > b.pipeline_stats().sim_events.get());
     }
 
     #[test]

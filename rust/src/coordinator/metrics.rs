@@ -72,6 +72,13 @@ pub struct FabricMetrics {
     /// Program jobs that had to construct a fresh `EmpaProcessor`
     /// (first job on a worker).
     pub proc_rebuilds: AtomicU64,
+    /// Scheduler iterations (full simulator ticks) executed across all
+    /// served program jobs — the event-horizon scheduler's "events".
+    pub sim_events: AtomicU64,
+    /// Simulated clocks the event-horizon scheduler advanced without a
+    /// full tick (dead-clock skips + single-core bursts), summed across
+    /// served program jobs. 0 when the pool runs in lockstep.
+    pub sim_clocks_skipped: AtomicU64,
     backends: Mutex<HashMap<String, Arc<BackendStats>>>,
     clients: Mutex<HashMap<String, Arc<AtomicU64>>>,
     workers: Mutex<Vec<Arc<WorkerStats>>>,
@@ -162,6 +169,19 @@ impl FabricMetrics {
         }
     }
 
+    /// Effective simulated clocks per scheduler iteration across all
+    /// served program jobs (1.0 ≙ lockstep; higher = dead clocks
+    /// skipped). 0 when no program job has been simulated.
+    pub fn sim_clocks_per_event(&self) -> f64 {
+        let e = self.sim_events.load(Ordering::Relaxed);
+        let s = self.sim_clocks_skipped.load(Ordering::Relaxed);
+        if e == 0 {
+            0.0
+        } else {
+            (e + s) as f64 / e as f64
+        }
+    }
+
     /// Render a summary: one global line plus one line per backend.
     pub fn render(&self) -> String {
         let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
@@ -195,6 +215,14 @@ impl FabricMetrics {
                 100.0 * self.template_hit_rate(),
                 g(&self.proc_reuses),
                 g(&self.proc_rebuilds),
+            ));
+        }
+        if g(&self.sim_events) > 0 {
+            out.push_str(&format!(
+                "\n  sim engine: events={} clocks_skipped={} ({:.1} clocks/event)",
+                g(&self.sim_events),
+                g(&self.sim_clocks_skipped),
+                self.sim_clocks_per_event(),
             ));
         }
         {
@@ -307,6 +335,18 @@ mod tests {
         let r = m.render();
         assert!(r.contains("program pipeline: template hits=3 misses=1 (75% hit)"), "{r}");
         assert!(r.contains("proc reuses=3 rebuilds=1"), "{r}");
+    }
+
+    #[test]
+    fn sim_engine_counters_render_and_rate() {
+        let m = FabricMetrics::default();
+        assert_eq!(m.sim_clocks_per_event(), 0.0);
+        assert!(!m.render().contains("sim engine"), "line hidden before any simulation");
+        m.sim_events.store(4, Ordering::Relaxed);
+        m.sim_clocks_skipped.store(36, Ordering::Relaxed);
+        assert_eq!(m.sim_clocks_per_event(), 10.0);
+        let r = m.render();
+        assert!(r.contains("sim engine: events=4 clocks_skipped=36 (10.0 clocks/event)"), "{r}");
     }
 
     #[test]

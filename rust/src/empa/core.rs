@@ -147,6 +147,26 @@ impl Core {
         !matches!(self.alloc, AllocState::Free)
     }
 
+    /// The earliest clock at which this core, on its own, needs a
+    /// scheduler step — its contribution to the event-horizon scheduler:
+    /// `Some(now)` when ready to fetch or (per `block_clear`, computed by
+    /// the processor since it needs supervisor state) to unblock,
+    /// `Some(apply_at)` for a pending retirement, and `None` when only an
+    /// external event can wake it (blocked on children, a mass engine, or
+    /// the interrupt line).
+    pub fn wake_at(&self, now: u64, block_clear: bool) -> Option<u64> {
+        match self.run {
+            RunState::Idle => Some(now),
+            RunState::Exec { apply_at, .. } => Some(apply_at.max(now)),
+            RunState::Blocked(BlockReason::WaitChildren { .. } | BlockReason::HaltPending)
+                if block_clear =>
+            {
+                Some(now)
+            }
+            RunState::Blocked(_) | RunState::Halted | RunState::Terminated => None,
+        }
+    }
+
     /// Return the core to its just-constructed state, reusing the
     /// allocation (processor reuse across program runs): back in the
     /// pool, no parent/children/prealloc, zeroed glue and counters.

@@ -12,7 +12,7 @@ pub mod timing;
 pub mod trace;
 
 pub use core::{AllocState, BlockReason, Core, Latches, RunState};
-pub use processor::{EmpaConfig, EmpaProcessor, RunReport};
+pub use processor::{ConfigError, EmpaConfig, EmpaProcessor, RunReport, StepMode};
 pub use sv::{MassEngine, MassMode, Supervisor};
 pub use timing::TimingConfig;
 pub use trace::{Event, Trace, TraceEntry};

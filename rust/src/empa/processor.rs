@@ -17,6 +17,16 @@
 //!                 handled combinationally (§3.4: synchronisation "in one
 //!                 clock cycle ... no time is used when there is no need
 //!                 to wait").
+//!
+//! Time advances through the **event-horizon scheduler** ([`StepMode`]):
+//! every instruction costs 3–8+ clocks, so most clocks are dead — no
+//! retirement, no engine action, no unblock. [`EmpaProcessor::step`] runs
+//! one full tick, then jumps the clock straight to the next interesting
+//! time (integrating occupancy over the skipped span) and chains
+//! single-core apply→fetch sequences inline when nothing else can run.
+//! Lockstep stepping is kept as a [`StepMode::Lockstep`] knob for
+//! differential testing; the two modes are cycle-identical by
+//! construction (see `rust/tests/stepping.rs` and EXPERIMENTS.md §Perf).
 
 use super::core::{AllocState, BlockReason, Core, RunState};
 use super::sv::{MassEngine, MassMode, Supervisor};
@@ -25,6 +35,49 @@ use super::trace::{Event, Trace};
 use crate::emu::{execute, CoreRegs, ExecEffect, PseudoPort};
 use crate::isa::{Insn, MetaFn, Reg, Status};
 use crate::mem::{bus::MemoryBus, MemConfig, Memory};
+
+/// How the simulator advances time.
+///
+/// Both modes are **cycle-identical**: every architectural effect, trace
+/// event, bus reservation and occupancy figure lands on the same clock.
+/// They differ only in how many scheduler iterations it takes to get
+/// there — `EventHorizon` jumps over the dead clocks between events
+/// instead of ticking through them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StepMode {
+    /// One clock per scheduler iteration — the original cycle-stepped
+    /// engine, kept for differential testing.
+    Lockstep,
+    /// Jump the clock to the next interesting time (a retirement, an
+    /// engine launch/readout/finalise, a core becoming rentable), with
+    /// occupancy accounting integrated over the skipped interval. §3.4's
+    /// licence: the SV synchronises combinationally and "no time is used
+    /// when there is no need to wait".
+    #[default]
+    EventHorizon,
+}
+
+/// Why an [`EmpaConfig`] cannot be instantiated. Surfaced as a typed
+/// error (not a panic) so a bad fabric configuration degrades to a
+/// failed backend init instead of aborting the serving process.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConfigError {
+    /// `num_cores` outside the supported range: the supervisor's
+    /// identity/children/preallocation bitmasks are 64-bit one-hot sets.
+    CoreCount { requested: usize },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::CoreCount { requested } => {
+                write!(f, "num_cores={requested} unsupported (this supervisor models 1..=64 cores)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// Processor configuration.
 #[derive(Debug, Clone)]
@@ -37,6 +90,8 @@ pub struct EmpaConfig {
     pub trace: bool,
     /// Runaway guard.
     pub max_clocks: u64,
+    /// How the scheduler advances time (cycle-identical either way).
+    pub step: StepMode,
 }
 
 impl Default for EmpaConfig {
@@ -47,7 +102,19 @@ impl Default for EmpaConfig {
             mem: MemConfig::ideal(),
             trace: false,
             max_clocks: 10_000_000,
+            step: StepMode::EventHorizon,
         }
+    }
+}
+
+impl EmpaConfig {
+    /// Validate the configuration; the rule set behind
+    /// [`EmpaProcessor::try_new`] and the fabric's `sim` backend init.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if !(1..=64).contains(&self.num_cores) {
+            return Err(ConfigError::CoreCount { requested: self.num_cores });
+        }
+        Ok(())
     }
 }
 
@@ -70,6 +137,15 @@ pub struct RunReport {
     pub bus: crate::mem::BusStats,
     /// Supervisor operations performed.
     pub sv_ops: u64,
+    /// Scheduler iterations actually executed (full four-phase ticks) —
+    /// the event-horizon scheduler's "events". In lockstep mode this
+    /// equals the clocks simulated.
+    pub events_processed: u64,
+    /// Clocks advanced **without** a full scheduler iteration: dead
+    /// clocks jumped over plus single-core burst clocks. Always 0 in
+    /// lockstep mode; `events_processed + clocks_skipped` is the total
+    /// clock advance.
+    pub clocks_skipped: u64,
     /// Simulation-level fault (runaway, child halt, invalid meta use).
     pub fault: Option<String>,
     /// Event trace, when enabled.
@@ -80,6 +156,16 @@ impl RunReport {
     /// Value of `%eax` — the sum in the paper's running example.
     pub fn eax(&self) -> i32 {
         self.regs.file[0]
+    }
+
+    /// Effective simulated clocks per scheduler iteration (1.0 in
+    /// lockstep; the event-horizon scheduler's skip ratio).
+    pub fn clocks_per_event(&self) -> f64 {
+        if self.events_processed == 0 {
+            0.0
+        } else {
+            (self.events_processed + self.clocks_skipped) as f64 / self.events_processed as f64
+        }
     }
 }
 
@@ -120,13 +206,27 @@ pub struct EmpaProcessor {
     /// Configured memory size (`reset_with` restores it, so a previous
     /// oversized image cannot widen later programs' address space).
     mem_size: usize,
+    /// How the scheduler advances time.
+    step_mode: StepMode,
+    /// Full ticks executed by [`EmpaProcessor::step`].
+    events_processed: u64,
+    /// Clocks advanced without a full tick (skips + bursts).
+    clocks_skipped: u64,
+    /// Event-horizon bound for external drivers (interrupt raisers): the
+    /// scheduler never skips past this clock, so a driver acting "at
+    /// clock T" observes `clock == T` exactly as it would in lockstep.
+    external_wake_at: Option<u64>,
 }
 
 impl EmpaProcessor {
     /// Build a processor with the program image at address 0; the root
     /// core is rented and enabled at the entry point.
-    pub fn new(image: &[u8], cfg: &EmpaConfig) -> Self {
-        assert!(cfg.num_cores >= 1 && cfg.num_cores <= 64, "1..=64 cores supported");
+    ///
+    /// Returns a typed [`ConfigError`] for an invalid configuration
+    /// instead of panicking — the fabric surfaces it through backend
+    /// init / [`crate::api::FabricError::InvalidConfig`].
+    pub fn try_new(image: &[u8], cfg: &EmpaConfig) -> Result<Self, ConfigError> {
+        cfg.validate()?;
         let mut cores: Vec<Core> = (0..cfg.num_cores).map(Core::new).collect();
         cores[0].alloc = AllocState::Rented;
         cores[0].reset_for_qt(0);
@@ -145,15 +245,29 @@ impl EmpaProcessor {
             irq_inflight: vec![None; cfg.num_cores],
             rented_mask: 1,
             worklist_buf: Vec::new(),
-            icache: vec![(u32::MAX, 0, Insn::Nop); 128],
+            // Virgin entries carry version u64::MAX, which the monotonic
+            // write counter can never reach: a fetch of pc == u32::MAX on
+            // never-written memory (version 0) must miss and fault, not
+            // hit the sentinel and execute a phantom Nop.
+            icache: vec![(u32::MAX, u64::MAX, Insn::Nop); 128],
             fault: None,
             halted: false,
             halt_at: 0,
             max_clocks: cfg.max_clocks,
             mem_size: cfg.mem.size,
+            step_mode: cfg.step,
+            events_processed: 0,
+            clocks_skipped: 0,
+            external_wake_at: None,
         };
         p.trace.push(0, 0, Event::Rent { parent: None });
-        p
+        Ok(p)
+    }
+
+    /// Panicking convenience constructor for tests and direct embedding;
+    /// serving paths use [`EmpaProcessor::try_new`].
+    pub fn new(image: &[u8], cfg: &EmpaConfig) -> Self {
+        Self::try_new(image, cfg).unwrap_or_else(|e| panic!("invalid EmpaConfig: {e}"))
     }
 
     /// Run to completion and report.
@@ -171,7 +285,7 @@ impl EmpaProcessor {
                 self.fault = Some(format!("runaway: exceeded {} clocks", self.max_clocks));
                 break;
             }
-            self.tick();
+            self.step();
         }
         let status = if self.fault.is_some() {
             Status::Ins
@@ -179,6 +293,11 @@ impl EmpaProcessor {
             Status::Hlt
         };
         let retired = self.cores.iter().map(|c| c.retired).sum();
+        // Move the trace out instead of cloning it (it can be large when
+        // enabled — the next run replaces it anyway); the replacement
+        // keeps the enabled flag so a reused processor keeps tracing.
+        let enabled = self.trace.is_enabled();
+        let trace = std::mem::replace(&mut self.trace, Trace::new(enabled));
         RunReport {
             clocks: if self.halted { self.halt_at } else { self.clock },
             status,
@@ -188,8 +307,10 @@ impl EmpaProcessor {
             retired,
             bus: self.bus.stats(),
             sv_ops: self.sv.ops,
+            events_processed: self.events_processed,
+            clocks_skipped: self.clocks_skipped,
             fault: self.fault.clone(),
-            trace: self.trace.clone(),
+            trace,
         }
     }
 
@@ -221,6 +342,9 @@ impl EmpaProcessor {
         self.fault = None;
         self.halted = false;
         self.halt_at = 0;
+        self.events_processed = 0;
+        self.clocks_skipped = 0;
+        self.external_wake_at = None;
         self.trace.push(0, 0, Event::Rent { parent: None });
     }
 
@@ -262,6 +386,195 @@ impl EmpaProcessor {
         self.irq_inflight.iter().all(|x| x.is_none())
     }
 
+    /// Bound the event-horizon scheduler for an external driver: the
+    /// clock will pass through `Some(t)` exactly (never be skipped over),
+    /// so a driver that raises an interrupt "at clock t" behaves
+    /// identically in both [`StepMode`]s. `None` removes the bound.
+    /// Ignored in lockstep, where every clock is visited anyway.
+    pub fn set_external_wake(&mut self, at: Option<u64>) {
+        self.external_wake_at = at;
+    }
+
+    // ------------------------------------------------------------------
+    // the event-horizon scheduler
+    // ------------------------------------------------------------------
+
+    /// One scheduler iteration: a full [`EmpaProcessor::tick`], then — in
+    /// [`StepMode::EventHorizon`] — the single-core burst fast path and a
+    /// jump straight to the next interesting clock. Cycle-identical to
+    /// calling `tick()` in a loop; only the iteration count differs.
+    pub fn step(&mut self) {
+        self.tick();
+        self.events_processed += 1;
+        if self.step_mode == StepMode::Lockstep || self.halted || self.fault.is_some() {
+            return;
+        }
+        self.burst();
+        if self.halted || self.fault.is_some() {
+            return;
+        }
+        let mut h = self.next_event().min(self.max_clocks.max(self.clock));
+        if let Some(w) = self.external_wake_at {
+            h = h.min(w.max(self.clock));
+        }
+        if h > self.clock {
+            self.advance_to(h);
+        }
+    }
+
+    /// The next clock (≥ now) at which `tick()` would do *anything*:
+    /// the minimum over core retirements (`apply_at`), cores ready to
+    /// fetch or unblock (now), engine launches/readouts/finalises
+    /// (including the `available_at` of the cores a stalled launch is
+    /// waiting to rent), capped by the runaway guard. Every state change
+    /// in `tick()` traces back to one of these sources, which is the
+    /// skip invariant: all clocks strictly before the returned horizon
+    /// are provably dead.
+    fn next_event(&self) -> u64 {
+        let now = self.clock;
+        let mut h = self.max_clocks.max(now);
+        let mut bits = self.rented_mask;
+        while bits != 0 {
+            let id = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            let c = &self.cores[id];
+            let block_clear = matches!(
+                c.run,
+                RunState::Blocked(BlockReason::WaitChildren { .. })
+                    | RunState::Blocked(BlockReason::HaltPending)
+            ) && c.children == 0
+                && !self.sv.parent_engine_active(id);
+            if let Some(t) = c.wake_at(now, block_clear) {
+                h = h.min(t);
+            }
+        }
+        let engine_due = self
+            .sv
+            .any_active()
+            .then(|| self.sv.earliest_due(now, |parent| self.earliest_mass_rent_at(parent)))
+            .flatten();
+        if let Some(t) = engine_due {
+            h = h.min(t);
+        }
+        h.max(now)
+    }
+
+    /// Earliest clock a mass engine of `parent` could rent a core —
+    /// mirrors the candidate set of [`EmpaProcessor::rent_for_mass`]
+    /// (preallocated set when the parent has one, else the pool), but
+    /// over `available_at` instead of availability-now. `None` when no
+    /// candidate core exists at all (only an event can free one).
+    fn earliest_mass_rent_at(&self, parent: usize) -> Option<u64> {
+        let prealloc = self.cores[parent].prealloc;
+        if prealloc != 0 {
+            self.cores
+                .iter()
+                .filter(|c| {
+                    matches!(c.alloc, AllocState::PreAllocatedBy { parent: p } if p == parent)
+                        && prealloc & c.mask() != 0
+                })
+                .map(|c| c.available_at)
+                .min()
+        } else {
+            self.cores
+                .iter()
+                .filter(|c| c.id != parent && c.alloc == AllocState::Free)
+                .map(|c| c.available_at)
+                .min()
+        }
+    }
+
+    /// Jump the clock to `h`, integrating the occupancy accounting the
+    /// skipped lockstep ticks would have performed: every rented core
+    /// accrues the whole span at once. Nothing else can change during
+    /// the span (that is [`EmpaProcessor::next_event`]'s invariant), so
+    /// `rented_mask`, `max_occupied` and `ever_occupied` are already
+    /// correct.
+    fn advance_to(&mut self, h: u64) {
+        let delta = h - self.clock;
+        if delta == 0 {
+            return;
+        }
+        let mut bits = self.rented_mask;
+        while bits != 0 {
+            let id = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            self.cores[id].busy_clocks += delta;
+        }
+        self.clocks_skipped += delta;
+        self.clock = h;
+    }
+
+    /// Single-core fast path: while the machine is quiescent except for
+    /// exactly one executing core — no mass engine active, every other
+    /// rented core blocked on a condition only a metainstruction could
+    /// clear — chain that core's apply→fetch sequence inline instead of
+    /// paying a full four-phase tick per instruction. Metainstructions
+    /// and `halt` break the burst (they touch supervisor state that the
+    /// full tick owns). State evolution — clocks, bus reservations,
+    /// trace times, occupancy — is identical to lockstep; only the
+    /// scheduler-iteration count drops.
+    fn burst(&mut self) {
+        loop {
+            if self.fault.is_some() || self.halted || self.sv.any_active() {
+                return;
+            }
+            let mut exec = None;
+            let mut bits = self.rented_mask;
+            while bits != 0 {
+                let id = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                match self.cores[id].run {
+                    RunState::Exec { .. } => {
+                        if exec.replace(id).is_some() {
+                            return; // two runnable cores: full ticks
+                        }
+                    }
+                    RunState::Blocked(BlockReason::IrqWait) => {}
+                    RunState::Blocked(
+                        BlockReason::WaitChildren { .. } | BlockReason::HaltPending,
+                    ) => {
+                        // no engine is active, so children == 0 means a
+                        // pending unblock the next full tick must run
+                        if self.cores[id].children == 0 {
+                            return;
+                        }
+                    }
+                    _ => return,
+                }
+            }
+            let Some(id) = exec else { return };
+            let RunState::Exec { insn, apply_at } = self.cores[id].run else { unreachable!() };
+            if matches!(insn, Insn::Meta { .. } | Insn::Halt) {
+                return;
+            }
+            let t = apply_at.max(self.clock);
+            if t >= self.max_clocks {
+                return; // the runaway guard fires before this apply
+            }
+            if self.external_wake_at.is_some_and(|w| w <= t) {
+                return; // an external driver wants the clock at w exactly
+            }
+            // Lockstep would run (t - clock) dead ticks plus the applying
+            // tick itself; account the whole rented span, then replay the
+            // apply and the same-tick fetch inline. A conventional apply
+            // cannot change allocation state, so the rented set is
+            // constant across the span.
+            self.advance_to(t + 1);
+            self.apply(id, insn, t);
+            if self.fault.is_some() {
+                return;
+            }
+            if self.cores[id].run == RunState::Idle {
+                let mut worklist = std::mem::take(&mut self.worklist_buf);
+                worklist.clear();
+                self.fetch(id, t, &mut worklist);
+                debug_assert!(worklist.is_empty(), "no engine paths inside a burst");
+                self.worklist_buf = worklist;
+            }
+        }
+    }
+
     /// One core clock.
     ///
     /// Hot loop: phases iterate only the bits of `rented_mask` (a
@@ -276,7 +589,7 @@ impl EmpaProcessor {
             let id = bits.trailing_zeros() as usize;
             bits &= bits - 1;
             if let RunState::Exec { insn, apply_at } = self.cores[id].run {
-                if apply_at == now {
+                if apply_at <= now {
                     self.apply(id, insn, now);
                 }
             }
@@ -586,13 +899,17 @@ impl EmpaProcessor {
                 let count = core.regs.file[Reg::Edx as usize].max(0) as u32;
                 let addr = core.regs.file[Reg::Ecx as usize];
                 let acc = core.regs.file[Reg::Eax as usize];
-                let mut engine = MassEngine::new(mode, id, value, addr, count, acc, now, self.timing.sv_stagger);
-                if mode == MassMode::Sum && count == 0 {
-                    // still pay the readout on finalise
-                }
-                if count == 0 {
-                    engine.done_at = Some(now + self.timing.sv_stagger + if mode == MassMode::Sum { self.timing.sv_readout } else { 0 });
-                }
+                let engine = MassEngine::new(
+                    mode,
+                    id,
+                    value,
+                    addr,
+                    count,
+                    acc,
+                    now,
+                    self.timing.sv_stagger,
+                    self.timing.sv_readout,
+                );
                 self.sv.add(engine);
                 self.sv.ops += 1;
                 self.cores[id].pc = next_pc;
@@ -950,6 +1267,116 @@ mod tests {
         let r = p.run_report();
         assert_eq!(r.fault, None, "fault cleared by reset");
         assert_eq!(r.eax(), want);
+    }
+
+    #[test]
+    fn config_validation_is_typed_not_a_panic() {
+        for bad in [0usize, 65, 1000] {
+            let cfg = EmpaConfig { num_cores: bad, ..Default::default() };
+            assert_eq!(cfg.validate(), Err(ConfigError::CoreCount { requested: bad }));
+            assert_eq!(
+                EmpaProcessor::try_new(&[0x00], &cfg).err(),
+                Some(ConfigError::CoreCount { requested: bad })
+            );
+        }
+        for good in [1usize, 32, 64] {
+            let cfg = EmpaConfig { num_cores: good, ..Default::default() };
+            assert!(EmpaProcessor::try_new(&[0x00], &cfg).is_ok());
+        }
+        assert!(ConfigError::CoreCount { requested: 0 }.to_string().contains("num_cores=0"));
+    }
+
+    fn run_in(mode: StepMode, image: &[u8]) -> RunReport {
+        let cfg = EmpaConfig { step: mode, ..Default::default() };
+        EmpaProcessor::new(image, &cfg).run()
+    }
+
+    #[test]
+    fn event_horizon_skips_dead_clocks_but_keeps_the_clock_count() {
+        let (src, want) = sumup::no_mode_program(&[3, 5, 7, 9]);
+        let image = assemble(&src).unwrap().image;
+        let lock = run_in(StepMode::Lockstep, &image);
+        let eh = run_in(StepMode::EventHorizon, &image);
+        assert_eq!(lock.clocks, 142, "Table 1, N=4 NO");
+        assert_eq!(eh.clocks, lock.clocks);
+        assert_eq!(eh.eax(), want);
+        assert_eq!(eh.regs.file, lock.regs.file);
+        assert_eq!(eh.retired, lock.retired);
+        assert_eq!(lock.clocks_skipped, 0);
+        assert_eq!(lock.events_processed, lock.clocks + 1, "lockstep ticks every clock");
+        assert!(
+            eh.events_processed * 5 <= lock.events_processed,
+            "straight-line code bursts: {} events vs {} ticks",
+            eh.events_processed,
+            lock.events_processed
+        );
+        assert!((eh.clocks_per_event() - 1.0).abs() > 1.0, "ratio is published");
+        assert!((lock.clocks_per_event() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn event_horizon_and_lockstep_agree_on_mass_modes() {
+        for (src, want) in [
+            sumup::for_mode_program(&[0xd, 0xc0, 0xb00, 0xa000]),
+            sumup::sumup_mode_program(&[0xd, 0xc0, 0xb00, 0xa000]),
+            sumup::sumup_mode_program(&(0..200).collect::<Vec<i32>>()),
+        ] {
+            let image = assemble(&src).unwrap().image;
+            let lock = run_in(StepMode::Lockstep, &image);
+            let eh = run_in(StepMode::EventHorizon, &image);
+            assert_eq!(eh.eax(), want);
+            assert_eq!(eh.clocks, lock.clocks);
+            assert_eq!(eh.max_occupied, lock.max_occupied);
+            assert_eq!(eh.distinct_cores, lock.distinct_cores);
+            assert_eq!(eh.retired, lock.retired);
+            assert_eq!(eh.sv_ops, lock.sv_ops);
+            assert!(eh.events_processed < lock.events_processed);
+        }
+    }
+
+    #[test]
+    fn event_horizon_runaway_faults_at_the_same_clock() {
+        let looping = assemble("Loop: jmp Loop\n").unwrap();
+        let cfg = |mode| EmpaConfig { max_clocks: 333, step: mode, ..Default::default() };
+        let lock = EmpaProcessor::new(&looping.image, &cfg(StepMode::Lockstep)).run();
+        let eh = EmpaProcessor::new(&looping.image, &cfg(StepMode::EventHorizon)).run();
+        assert_eq!(lock.fault, eh.fault);
+        assert_eq!(lock.clocks, eh.clocks);
+        assert_eq!(lock.clocks, 333);
+    }
+
+    #[test]
+    fn external_wake_bounds_the_skip() {
+        let (src, _) = sumup::no_mode_program(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let image = assemble(&src).unwrap().image;
+        let mut p = EmpaProcessor::new(&image, &EmpaConfig::default());
+        p.set_external_wake(Some(100));
+        let mut visited_100 = false;
+        for _ in 0..100_000 {
+            if p.clock == 100 {
+                visited_100 = true;
+                p.set_external_wake(None);
+            }
+            if matches!(p.cores[0].run, RunState::Halted) {
+                break;
+            }
+            p.step();
+        }
+        assert!(visited_100, "the scheduler must not skip past an external wake");
+    }
+
+    #[test]
+    fn reset_with_clears_scheduler_counters() {
+        let (src, _) = sumup::no_mode_program(&[1, 2, 3]);
+        let prog = assemble(&src).unwrap();
+        let mut p = EmpaProcessor::new(&prog.image, &EmpaConfig::default());
+        let r1 = p.run_report();
+        assert!(r1.events_processed > 0 && r1.clocks_skipped > 0);
+        p.reset_with(&prog.image);
+        let r2 = p.run_report();
+        assert_eq!(r1.events_processed, r2.events_processed);
+        assert_eq!(r1.clocks_skipped, r2.clocks_skipped);
+        assert_eq!(r1.clocks, r2.clocks);
     }
 
     #[test]

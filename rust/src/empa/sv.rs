@@ -63,8 +63,21 @@ pub struct MassEngine {
 }
 
 impl MassEngine {
+    /// Configure an engine. An empty (`count == 0`) engine finalises
+    /// after the setup stagger plus, in SUMUP mode, the adder readout —
+    /// the one place the empty-engine finalise cost is computed.
     #[allow(clippy::too_many_arguments)]
-    pub fn new(mode: MassMode, parent: usize, body: u32, addr: i32, count: u32, acc: i32, now: u64, stagger: u64) -> Self {
+    pub fn new(
+        mode: MassMode,
+        parent: usize,
+        body: u32,
+        addr: i32,
+        count: u32,
+        acc: i32,
+        now: u64,
+        stagger: u64,
+        readout: u64,
+    ) -> Self {
         MassEngine {
             mode,
             parent,
@@ -76,7 +89,8 @@ impl MassEngine {
             acc,
             next_launch_at: now + stagger,
             child: None,
-            done_at: if count == 0 { Some(now + stagger) } else { None },
+            done_at: (count == 0)
+                .then(|| now + stagger + match mode { MassMode::Sum => readout, MassMode::For => 0 }),
             finished: false,
         }
     }
@@ -87,6 +101,30 @@ impl MassEngine {
         self.acc = self.acc.wrapping_add(value);
         self.arrived += 1;
         self.arrived == self.total
+    }
+
+    /// Earliest clock (≥ `now`) at which this engine acts **on its own**
+    /// — the engine's contribution to the event-horizon scheduler: a
+    /// pending finalise (`done_at`), or the next child launch, which is
+    /// `next_launch_at` gated by `rent_at` — the caller-supplied earliest
+    /// clock a candidate core can be rented for `parent` (`None`: no
+    /// candidate exists, so only an event can unstall the launch and the
+    /// engine contributes no time-driven horizon).
+    pub fn earliest_due<F: Fn(usize) -> Option<u64>>(&self, now: u64, rent_at: &F) -> Option<u64> {
+        if self.finished {
+            return None;
+        }
+        if let Some(d) = self.done_at {
+            return Some(d.max(now));
+        }
+        // SUMUP launches every remaining child; FOR launches only while
+        // no child is attached (iterations relaunch combinationally at
+        // the child's qterm — an apply event, not a timer).
+        let launch_pending = self.remaining > 0 && (self.mode == MassMode::Sum || self.child.is_none());
+        if !launch_pending {
+            return None;
+        }
+        rent_at(self.parent).map(|r| self.next_launch_at.max(r).max(now))
     }
 }
 
@@ -231,6 +269,15 @@ impl Supervisor {
         }
     }
 
+    /// Earliest clock (≥ `now`) at which **any** unfinished engine acts
+    /// on its own (launch stagger, readout, finalise) — the supervisor's
+    /// contribution to the event-horizon scheduler. `rent_at(parent)` is
+    /// the processor-supplied earliest clock a candidate core can be
+    /// rented for `parent` (see [`MassEngine::earliest_due`]).
+    pub fn earliest_due<F: Fn(usize) -> Option<u64>>(&self, now: u64, rent_at: F) -> Option<u64> {
+        self.slots.iter().flatten().filter_map(|e| e.earliest_due(now, &rent_at)).min()
+    }
+
     /// Reset for processor reuse: drop all engines and indices, zero the
     /// op counter, keep the allocations.
     pub fn reset(&mut self) {
@@ -249,13 +296,16 @@ mod tests {
 
     #[test]
     fn engine_zero_count_completes_immediately() {
-        let e = MassEngine::new(MassMode::For, 0, 0x20, 0x100, 0, 0, 16, 1);
+        let e = MassEngine::new(MassMode::For, 0, 0x20, 0x100, 0, 0, 16, 1, 1);
         assert_eq!(e.done_at, Some(17));
+        // an empty SUMUP engine additionally pays the adder readout
+        let e = MassEngine::new(MassMode::Sum, 0, 0x20, 0x100, 0, 0, 16, 1, 2);
+        assert_eq!(e.done_at, Some(19));
     }
 
     #[test]
     fn arrivals_accumulate_and_complete() {
-        let mut e = MassEngine::new(MassMode::Sum, 0, 0x20, 0x100, 3, 10, 17, 1);
+        let mut e = MassEngine::new(MassMode::Sum, 0, 0x20, 0x100, 3, 10, 17, 1, 1);
         assert!(!e.arrive(1));
         assert!(!e.arrive(2));
         assert!(e.arrive(3));
@@ -266,7 +316,7 @@ mod tests {
     #[test]
     fn indexed_lookup_tracks_parent_and_child() {
         let mut sv = Supervisor::default();
-        let slot = sv.add(MassEngine::new(MassMode::For, 2, 0, 0, 1, 0, 0, 1));
+        let slot = sv.add(MassEngine::new(MassMode::For, 2, 0, 0, 1, 0, 0, 1, 1));
         sv.set_child(slot, Some(5));
         assert_eq!(sv.engine_of_parent(2), Some(slot));
         assert_eq!(sv.engine_of_parent(3), None);
@@ -291,10 +341,10 @@ mod tests {
     #[test]
     fn reaped_slots_are_reused() {
         let mut sv = Supervisor::default();
-        let a = sv.add(MassEngine::new(MassMode::Sum, 0, 0, 0, 1, 0, 0, 1));
+        let a = sv.add(MassEngine::new(MassMode::Sum, 0, 0, 0, 1, 0, 0, 1, 1));
         sv.finish(a);
         sv.reap();
-        let b = sv.add(MassEngine::new(MassMode::Sum, 1, 0, 0, 1, 0, 0, 1));
+        let b = sv.add(MassEngine::new(MassMode::Sum, 1, 0, 0, 1, 0, 0, 1, 1));
         assert_eq!(a, b, "freed slot reused before growing the arena");
         assert_eq!(sv.slot_count(), 1);
     }
@@ -303,7 +353,7 @@ mod tests {
     fn many_engines_coexist_with_independent_indices() {
         let mut sv = Supervisor::default();
         let slots: Vec<usize> = (0..16)
-            .map(|p| sv.add(MassEngine::new(MassMode::Sum, p, 0, 0, 2, 0, 0, 1)))
+            .map(|p| sv.add(MassEngine::new(MassMode::Sum, p, 0, 0, 2, 0, 0, 1, 1)))
             .collect();
         for (p, &s) in slots.iter().enumerate() {
             assert_eq!(sv.engine_of_parent(p), Some(s));
@@ -317,7 +367,7 @@ mod tests {
     #[test]
     fn reset_drops_everything() {
         let mut sv = Supervisor::default();
-        let s = sv.add(MassEngine::new(MassMode::For, 1, 0, 0, 1, 0, 0, 1));
+        let s = sv.add(MassEngine::new(MassMode::For, 1, 0, 0, 1, 0, 0, 1, 1));
         sv.set_child(s, Some(2));
         sv.ops = 9;
         sv.reset();
@@ -330,8 +380,47 @@ mod tests {
 
     #[test]
     fn acc_wraps_like_hardware() {
-        let mut e = MassEngine::new(MassMode::Sum, 0, 0, 0, 1, i32::MAX, 0, 1);
+        let mut e = MassEngine::new(MassMode::Sum, 0, 0, 0, 1, i32::MAX, 0, 1, 1);
         e.arrive(1);
         assert_eq!(e.acc, i32::MIN);
+    }
+
+    #[test]
+    fn earliest_due_reports_finalise_and_gated_launches() {
+        // pending finalise wins outright (and is clamped to `now`)
+        let mut e = MassEngine::new(MassMode::Sum, 0, 0, 0, 0, 0, 10, 1, 1);
+        assert_eq!(e.done_at, Some(12));
+        assert_eq!(e.earliest_due(11, &|_| Some(0)), Some(12));
+        assert_eq!(e.earliest_due(20, &|_| Some(0)), Some(20), "clamped to now");
+        // a launch-pending engine is gated by both the stagger and the
+        // earliest rentable core
+        let e = MassEngine::new(MassMode::Sum, 0, 0, 0, 3, 0, 10, 2, 1);
+        assert_eq!(e.earliest_due(10, &|_| Some(0)), Some(12), "stagger gates");
+        assert_eq!(e.earliest_due(10, &|_| Some(30)), Some(30), "rent gates");
+        assert_eq!(e.earliest_due(10, &|_| None), None, "no candidate: event-driven");
+        // a FOR engine with its child attached is driven by the child's
+        // applies, never by a timer
+        let mut f = MassEngine::new(MassMode::For, 1, 0, 0, 4, 0, 0, 1, 1);
+        f.child = Some(3);
+        assert_eq!(f.earliest_due(5, &|_| Some(0)), None);
+        f.child = None;
+        assert_eq!(f.earliest_due(5, &|_| Some(0)), Some(5));
+        // finished engines contribute nothing
+        let mut done = MassEngine::new(MassMode::Sum, 0, 0, 0, 1, 0, 0, 1, 1);
+        done.finished = true;
+        assert_eq!(done.earliest_due(0, &|_| Some(0)), None);
+    }
+
+    #[test]
+    fn supervisor_earliest_due_is_the_min_over_live_engines() {
+        let mut sv = Supervisor::default();
+        assert_eq!(sv.earliest_due(0, |_| Some(0)), None, "no engines");
+        let a = sv.add(MassEngine::new(MassMode::Sum, 0, 0, 0, 2, 0, 10, 5, 1)); // due 15
+        let b = sv.add(MassEngine::new(MassMode::Sum, 1, 0, 0, 2, 0, 10, 2, 1)); // due 12
+        assert_eq!(sv.earliest_due(10, |_| Some(0)), Some(12));
+        sv.finish(b);
+        assert_eq!(sv.earliest_due(10, |_| Some(0)), Some(15));
+        sv.finish(a);
+        assert_eq!(sv.earliest_due(10, |_| Some(0)), None);
     }
 }

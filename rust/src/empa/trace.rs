@@ -32,7 +32,7 @@ pub enum Event {
 }
 
 /// A recorded `(clock, core, event)` triple.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TraceEntry {
     pub clock: u64,
     pub core: usize,

@@ -168,6 +168,8 @@ mod tests {
             retired: 0,
             bus: Default::default(),
             sv_ops: 0,
+            events_processed: 0,
+            clocks_skipped: 0,
             fault: None,
             trace: Default::default(),
         };

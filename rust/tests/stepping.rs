@@ -1,0 +1,257 @@
+//! Differential stepping: the event-horizon scheduler must be
+//! **cycle-identical** to lockstep stepping — same clocks, architectural
+//! state, occupancy figures, supervisor ops, bus statistics and trace —
+//! on every workload family (sizes including the 0/1 edges), under
+//! interrupt servicing raised mid-run, under memory-bus contention, and
+//! across randomised timing models. Only the scheduler-iteration count
+//! (`events_processed`) may differ.
+
+use empa::empa::{EmpaConfig, EmpaProcessor, RunReport, RunState, StepMode, TimingConfig};
+use empa::isa::{assemble, Reg};
+use empa::mem::MemConfig;
+use empa::util::Rng;
+use empa::workload::family::{direct_source, family_impl, synth_params, ALL_FAMILIES};
+use empa::workload::sumup::{self, Mode};
+use std::fmt::Write;
+
+/// Run `image` under `step`, returning the report, the per-core
+/// integrated occupancy, and the processor's final internal clock.
+fn run_mode(image: &[u8], base: &EmpaConfig, step: StepMode) -> (RunReport, Vec<u64>, u64) {
+    let cfg = EmpaConfig { step, trace: true, ..base.clone() };
+    let mut p = EmpaProcessor::new(image, &cfg);
+    let r = p.run_report();
+    let busy = p.cores.iter().map(|c| c.busy_clocks).collect();
+    (r, busy, p.clock)
+}
+
+/// The equivalence bar: every observable of the two runs must match.
+fn assert_identical(ctx: &str, image: &[u8], base: &EmpaConfig) -> (RunReport, RunReport) {
+    let (lock, lock_busy, _) = run_mode(image, base, StepMode::Lockstep);
+    let (eh, eh_busy, eh_clock) = run_mode(image, base, StepMode::EventHorizon);
+    assert_eq!(lock.clocks, eh.clocks, "{ctx}: clocks");
+    assert_eq!(lock.status, eh.status, "{ctx}: status");
+    assert_eq!(lock.regs.file, eh.regs.file, "{ctx}: registers");
+    assert_eq!(lock.regs.cc, eh.regs.cc, "{ctx}: flags");
+    assert_eq!(lock.max_occupied, eh.max_occupied, "{ctx}: max_occupied");
+    assert_eq!(lock.distinct_cores, eh.distinct_cores, "{ctx}: distinct_cores");
+    assert_eq!(lock.retired, eh.retired, "{ctx}: retired");
+    assert_eq!(lock.bus, eh.bus, "{ctx}: bus stats");
+    assert_eq!(lock.sv_ops, eh.sv_ops, "{ctx}: sv_ops");
+    assert_eq!(lock.fault, eh.fault, "{ctx}: fault");
+    assert_eq!(lock.trace.entries, eh.trace.entries, "{ctx}: trace");
+    assert_eq!(lock_busy, eh_busy, "{ctx}: integrated occupancy");
+    assert_eq!(lock.clocks_skipped, 0, "{ctx}: lockstep never skips");
+    assert_eq!(
+        eh_clock,
+        eh.events_processed + eh.clocks_skipped,
+        "{ctx}: every clock is either ticked or skipped"
+    );
+    assert!(eh.events_processed <= lock.events_processed, "{ctx}: event count");
+    (lock, eh)
+}
+
+#[test]
+fn every_workload_family_steps_identically() {
+    let mut rng = Rng::seed_from_u64(0x5E44);
+    let base = EmpaConfig::default();
+    for case in 0..3u64 {
+        for family in ALL_FAMILIES {
+            let fam = family_impl(family);
+            for &mode in fam.modes() {
+                for n in [0usize, 1, rng.range_usize(2, 48)] {
+                    let params = synth_params(family, n, case.wrapping_mul(131) ^ n as u64);
+                    let src = direct_source(mode, &params).unwrap();
+                    let image = assemble(&src).unwrap().image;
+                    let ctx = format!("{} {mode:?} N={n} case {case}", family.name());
+                    assert_identical(&ctx, &image, &base);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn contended_bus_configs_step_identically() {
+    for mem in [MemConfig::single_bus(), MemConfig::buses(2)] {
+        for mode in [Mode::No, Mode::For, Mode::Sumup] {
+            for n in [1usize, 4, 17, 40] {
+                let (src, _) = sumup::program(mode, &sumup::synth_vector(n, 7));
+                let image = assemble(&src).unwrap().image;
+                let base = EmpaConfig { mem: mem.clone(), ..Default::default() };
+                let ctx = format!("{mode:?} N={n} ports={:?}", mem.ports);
+                let (lock, _) = assert_identical(&ctx, &image, &base);
+                if mode == Mode::Sumup && n >= 17 && mem.ports == Some(1) {
+                    assert!(lock.bus.stall_cycles > 0, "{ctx}: contention actually exercised");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn timing_sweeps_step_identically() {
+    let mut rng = Rng::seed_from_u64(0x7E57);
+    for case in 0..12u64 {
+        let mut t = TimingConfig::paper();
+        t.irmov = rng.range_u64(1, 12);
+        t.alu = rng.range_u64(1, 12);
+        t.mrmov = rng.range_u64(1, 16);
+        t.jump = rng.range_u64(1, 10);
+        t.halt = rng.range_u64(1, 6);
+        t.sv_create = rng.range_u64(1, 8);
+        t.sv_stagger = rng.range_u64(1, 4);
+        t.sv_readout = rng.range_u64(1, 4);
+        t.sumup_rent_overhead = rng.range_u64(0, 40);
+        let base = EmpaConfig { timing: t, ..Default::default() };
+        let n = rng.range_usize(1, 40);
+        for mode in [Mode::No, Mode::For, Mode::Sumup] {
+            let (src, _) = sumup::program(mode, &sumup::synth_vector(n, case));
+            let image = assemble(&src).unwrap().image;
+            assert_identical(&format!("timing case {case} {mode:?} N={n}"), &image, &base);
+        }
+    }
+}
+
+#[test]
+fn core_starvation_steps_identically() {
+    // Small pools exercise engine rent stalls (the `available_at`
+    // wake-up source) and the SUMUP put-back administration.
+    for cores in [2usize, 3, 5] {
+        for mode in [Mode::For, Mode::Sumup] {
+            for n in [0usize, 1, 6, 23] {
+                let (src, _) = sumup::program(mode, &sumup::synth_vector(n, 3));
+                let image = assemble(&src).unwrap().image;
+                let base = EmpaConfig { num_cores: cores, ..Default::default() };
+                assert_identical(&format!("cores={cores} {mode:?} N={n}"), &image, &base);
+            }
+        }
+    }
+}
+
+#[test]
+fn nested_qt_graphs_step_identically() {
+    // A deep qcall chain: with a full pool it fans across cores, with a
+    // tiny pool it falls back to §3.3 borrowing — both must step
+    // identically either way.
+    let depth = 20usize;
+    let mut src = String::new();
+    let _ = writeln!(src, "    irmovl $0, %eax");
+    let _ = writeln!(src, "    qcall QT0");
+    let _ = writeln!(src, "    qwait %eax");
+    let _ = writeln!(src, "    halt");
+    for d in 0..depth {
+        let _ = writeln!(src, "QT{d}:");
+        let _ = writeln!(src, "    irmovl $1, %ebx");
+        let _ = writeln!(src, "    addl %ebx, %eax");
+        if d + 1 < depth {
+            let _ = writeln!(src, "    qcall QT{}", d + 1);
+            let _ = writeln!(src, "    qwait %eax");
+        }
+        let _ = writeln!(src, "    qterm %eax");
+    }
+    let image = assemble(&src).unwrap().image;
+    for cores in [1usize, 4, 32] {
+        let base = EmpaConfig { num_cores: cores, ..Default::default() };
+        let (lock, _) = assert_identical(&format!("qt-chain cores={cores}"), &image, &base);
+        assert_eq!(lock.eax(), depth as i32);
+    }
+}
+
+#[test]
+fn fault_paths_step_identically() {
+    // A starved FOR engine (single core, nothing rentable) deadlocks:
+    // both modes must hit the runaway guard at the same clock.
+    let (src, _) = sumup::for_mode_program(&[1, 2, 3]);
+    let base = EmpaConfig { num_cores: 1, max_clocks: 4000, ..Default::default() };
+    let (lock, eh) = assert_identical("for-mode starved", &assemble(&src).unwrap().image, &base);
+    assert!(lock.fault.as_deref().unwrap_or("").contains("runaway"));
+    assert_eq!(lock.clocks, 4000);
+    assert!(eh.events_processed < 100, "the deadlock is skipped, not ticked through");
+
+    // invalid instruction image
+    let base = EmpaConfig { max_clocks: 4000, ..Default::default() };
+    assert_identical("invalid opcode", &[0xFF, 0x00, 0x10], &base);
+
+    // a child executing `halt` is a guest fault in both modes
+    let src = "    qcall Child\n    qwait\n    halt\nChild:\n    halt\n";
+    let (lock, _) = assert_identical("child halt", &assemble(src).unwrap().image, &base);
+    assert!(lock.fault.is_some());
+}
+
+// ----------------------------------------------------------------------
+// interrupt servicing mid-run
+// ----------------------------------------------------------------------
+
+fn irq_program() -> (empa::isa::Program, u32, u32) {
+    let (mut src, _) = sumup::sumup_mode_program(&[1, 2, 3, 4, 5, 6]);
+    src.push_str(
+        "\nHandler:\n    mrmovl (%ebp), %edi\n    irmovl $1, %ebx\n    addl %ebx, %edi\n    rmmovl %edi, (%ebp)\n    qterm\n",
+    );
+    src.push_str("    .align 4\nmailbox:\n    .long 0\n");
+    let prog = assemble(&src).unwrap();
+    let handler = prog.symbol("Handler").unwrap();
+    let mailbox = prog.symbol("mailbox").unwrap();
+    (prog, handler, mailbox)
+}
+
+/// Drive the payload with interrupts raised at exact clocks, using
+/// [`EmpaProcessor::set_external_wake`] so the event-horizon scheduler
+/// lands on each raise clock instead of skipping it.
+fn drive_irqs(step: StepMode, raise_at: &[u64]) -> (Vec<(u64, u64)>, u32, u64) {
+    let (prog, handler, mailbox) = irq_program();
+    let cfg = EmpaConfig { step, ..Default::default() };
+    let mut p = EmpaProcessor::new(&prog.image, &cfg);
+    let irq_core = p.reserve_irq_core(handler).expect("reserve");
+    p.cores[irq_core].regs.file[Reg::Ebp as usize] = mailbox as i32;
+    let mut pending: Vec<u64> = raise_at.to_vec();
+    let mut halt_clock = 0u64;
+    for _ in 0..100_000 {
+        if let Some(pos) = pending.iter().position(|&t| t == p.clock) {
+            pending.remove(pos);
+            assert!(p.raise_irq(irq_core), "line busy at {}", p.clock);
+            p.cores[irq_core].regs.file[Reg::Ebp as usize] = mailbox as i32;
+        }
+        p.set_external_wake(pending.iter().min().copied());
+        p.step();
+        if matches!(p.cores[0].run, RunState::Halted) && halt_clock == 0 {
+            halt_clock = p.clock;
+        }
+        if halt_clock != 0 && pending.is_empty() && p.irq_log.len() >= raise_at.len() {
+            break;
+        }
+    }
+    let mbox = p.mem.read_u32(mailbox).unwrap();
+    (p.irq_log.clone(), mbox, halt_clock)
+}
+
+#[test]
+fn irq_servicing_steps_identically() {
+    for raises in [&[5u64, 50][..], &[5, 35, 90, 130][..], &[40, 80, 120][..]] {
+        let (log_l, mbox_l, halt_l) = drive_irqs(StepMode::Lockstep, raises);
+        let (log_e, mbox_e, halt_e) = drive_irqs(StepMode::EventHorizon, raises);
+        assert_eq!(log_l, log_e, "{raises:?}: per-interrupt (raised, done) clocks");
+        assert_eq!(log_l.len(), raises.len(), "{raises:?}: every raise serviced");
+        assert_eq!(mbox_l, mbox_e, "{raises:?}: handler side effects");
+        assert_eq!(mbox_l, raises.len() as u32, "{raises:?}: mailbox counted every service");
+        assert_eq!(halt_l, halt_e, "{raises:?}: payload completion clock");
+    }
+}
+
+// ----------------------------------------------------------------------
+// the acceptance bar for the scheduler's economics
+// ----------------------------------------------------------------------
+
+#[test]
+fn no_mode_n4096_uses_at_least_5x_fewer_scheduler_iterations() {
+    let (src, _) = sumup::no_mode_program(&sumup::synth_vector(4096, 1));
+    let image = assemble(&src).unwrap().image;
+    let (lock, eh) = assert_identical("NO N=4096", &image, &EmpaConfig::default());
+    assert_eq!(lock.clocks, 22 + 30 * 4096, "Table 1 time law");
+    assert!(
+        eh.events_processed * 5 <= lock.events_processed,
+        "events={} vs ticks={}: the ≥5× bar",
+        eh.events_processed,
+        lock.events_processed
+    );
+    assert!(eh.clocks_per_event() >= 5.0);
+}
