@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     println!("trace-replay job: {:?}", trace.wait()?.output);
 
     // --- 2. non-blocking handles ---------------------------------------
-    let mut job = client.submit(RequestKind::MassSum { values: vec![1.0; 4096] })?;
+    let mut job = client.submit(RequestKind::mass_sum(vec![1.0; 4096]))?;
     let mut polls = 0u32;
     let done = loop {
         match job.try_wait() {
@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- 3. vectorized submission --------------------------------------
     let reqs: Vec<JobRequest> = (1..=32)
-        .map(|i| JobRequest::new(RequestKind::MassSum { values: vec![1.0; 64 * i] }))
+        .map(|i| JobRequest::new(RequestKind::mass_sum(vec![1.0; 64 * i])))
         .collect();
     let jobs = client.submit_batch(reqs)?;
     let mut ok = 0;
@@ -88,14 +88,14 @@ fn main() -> anyhow::Result<()> {
 
     // --- 4. deadlines and cancellation ---------------------------------
     let j = client.submit(
-        JobRequest::new(RequestKind::MassSum { values: vec![1.0; 128] })
+        JobRequest::new(RequestKind::mass_sum(vec![1.0; 128]))
             .with_deadline(Duration::from_nanos(1)),
     )?;
     println!("deadline        : {:?}", j.wait().unwrap_err());
     assert!(matches!(
         client
             .submit(
-                JobRequest::new(RequestKind::MassSum { values: vec![1.0; 128] })
+                JobRequest::new(RequestKind::mass_sum(vec![1.0; 128]))
                     .with_deadline(Duration::from_nanos(1))
             )?
             .wait(),

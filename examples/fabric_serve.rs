@@ -69,7 +69,7 @@ fn main() -> anyhow::Result<()> {
     let fabric = Fabric::start(cfg.clone(), BackendRegistry::with_xla(cfg.empa, "artifacts"));
 
     // Warm-up: let the mass worker initialise its backend before timing.
-    let h = fabric.submit(RequestKind::MassSum { values: vec![1.0; 512] })?;
+    let h = fabric.submit(RequestKind::mass_sum(vec![1.0; 512]))?;
     let warm = h.wait()?;
     println!(
         "mass backend warm-up (init + first batch): {:.0} ms via `{}`",

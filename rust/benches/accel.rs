@@ -39,7 +39,7 @@ fn main() {
     for op in [MassOp::Sumup, MassOp::Dot, MassOp::For, MassOp::Prefix, MassOp::SumupStats] {
         let rows = mk_rows(&mut rng, 32, 1024);
         let rows2 = mk_rows(&mut rng, 32, 1024);
-        let req = MassRequest { op, rows, rows2, scale_bias: [1.5, -0.5] };
+        let req = MassRequest::new(op, rows, rows2, [1.5, -0.5]);
         let rn = bench(2, 15, || native.execute(&req).unwrap());
         let rx = bench(2, 15, || xla.execute(&req).unwrap());
         println!(

@@ -24,7 +24,7 @@ fn run_once(cfg: FabricConfig, xla: bool, n: usize) -> (f64, Summary, u64, f64) 
     };
     let fabric = Fabric::start(cfg, registry);
     // warm-up (backend init happens here, untimed)
-    let h = fabric.submit(RequestKind::MassSum { values: vec![1.0; 512] }).unwrap();
+    let h = fabric.submit(RequestKind::mass_sum(vec![1.0; 512])).unwrap();
     let _ = h.wait();
 
     let trace =
@@ -82,7 +82,7 @@ fn main() {
     let probe = |f: &Fabric, n: usize| -> Summary {
         let lats: Vec<f64> = (0..n)
             .map(|_| {
-                let h = f.submit(RequestKind::MassSum { values: vec![1.0; 8] }).unwrap();
+                let h = f.submit(RequestKind::mass_sum(vec![1.0; 8])).unwrap();
                 h.wait().unwrap().latency.as_secs_f64() * 1e6
             })
             .collect();

@@ -1,0 +1,182 @@
+//! Bench E12 — the zero-copy data plane: fabric jobs/sec and
+//! bytes-copied-per-job across the mass-op routes (inline small N,
+//! batched medium N, scattered large N) and the mixed trace. The only
+//! bytes the batched path copies are the tile-arena appends
+//! (`FabricMetrics::tile_bytes`); the inline and scatter/gather paths
+//! compute straight over the submitted `Arc` buffers — their
+//! bytes-copied-per-job must be **zero**. See EXPERIMENTS.md §Perf.
+//!
+//! `--quick` runs a smoke-sized version (CI keeps it compiling *and*
+//! passing); `--save-baseline [path]` dumps the table as JSON (default
+//! `BENCH_fabric_throughput.json`) so future PRs keep a trajectory.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::section;
+use empa::api::{Job, RequestKind};
+use empa::coordinator::{Fabric, FabricConfig, RoutePolicy};
+use empa::util::json::{num, str_val, JsonWriter};
+use empa::util::Rng;
+use empa::workload::{TraceConfig, TraceGen};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Row {
+    scenario: &'static str,
+    n: usize,
+    jobs: usize,
+    jobs_per_sec: f64,
+    bytes_per_job: f64,
+    mean_batch_rows: f64,
+}
+
+/// Drive `jobs` identical-length mass sums through a fresh fabric and
+/// report jobs/sec plus the data plane's bytes-copied-per-job.
+fn mass_arm(scenario: &'static str, n: usize, jobs: usize, route: RoutePolicy) -> Row {
+    let cfg = FabricConfig { sim_workers: 4, route, ..Default::default() };
+    let f = Fabric::start_local(cfg);
+    let mut rng = Rng::seed_from_u64(0xE12 ^ n as u64);
+    let bufs: Vec<Arc<[f32]>> = (0..jobs.min(64))
+        .map(|_| (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+        .collect();
+    // Warm-up: backend init off the clock.
+    let _ = f.submit(RequestKind::mass_sum(vec![1.0; n.max(1)])).unwrap().wait();
+    let warm_bytes = f.metrics.tile_bytes.load(Relaxed);
+
+    let t0 = Instant::now();
+    let handles: Vec<Job> = (0..jobs)
+        .map(|i| {
+            // Re-submitting shared buffers: the steady-state serving
+            // shape (zero per-submission copies).
+            f.submit(RequestKind::MassSum { values: Arc::clone(&bufs[i % bufs.len()]) }).unwrap()
+        })
+        .collect();
+    let mut expected = 0usize;
+    for (i, h) in handles.into_iter().enumerate() {
+        let c = h.wait().expect("mass job completes");
+        let want: f32 = bufs[i % bufs.len()].iter().sum();
+        let got = c.output.scalar().expect("scalar output");
+        assert!((got - want).abs() < 1e-2 * (1.0 + want.abs()), "{scenario} row {i}");
+        expected += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let copied = f.metrics.tile_bytes.load(Relaxed) - warm_bytes;
+    let row = Row {
+        scenario,
+        n,
+        jobs: expected,
+        jobs_per_sec: expected as f64 / wall.max(1e-12),
+        bytes_per_job: copied as f64 / expected.max(1) as f64,
+        mean_batch_rows: f.metrics.mean_batch_rows(),
+    };
+    f.shutdown();
+    row
+}
+
+/// The mixed default trace (programs + mass ops) end to end.
+fn mixed_arm(jobs: usize) -> Row {
+    let f = Fabric::start_local(FabricConfig { sim_workers: 4, ..Default::default() });
+    let _ = f.submit(RequestKind::mass_sum(vec![1.0; 512])).unwrap().wait();
+    let warm_bytes = f.metrics.tile_bytes.load(Relaxed);
+    let trace =
+        TraceGen::new(TraceConfig { num_requests: jobs, seed: 12, ..Default::default() })
+            .generate();
+    let t0 = Instant::now();
+    let results = f.run_trace(trace).expect("fabric accepts the trace");
+    let wall = t0.elapsed().as_secs_f64();
+    assert!(results.iter().all(|(_, r)| r.is_ok()), "mixed trace completes");
+    let copied = f.metrics.tile_bytes.load(Relaxed) - warm_bytes;
+    let row = Row {
+        scenario: "mixed_trace",
+        n: 0,
+        jobs: results.len(),
+        jobs_per_sec: results.len() as f64 / wall.max(1e-12),
+        bytes_per_job: copied as f64 / results.len().max(1) as f64,
+        mean_batch_rows: f.metrics.mean_batch_rows(),
+    };
+    f.shutdown();
+    row
+}
+
+fn main() {
+    let mut save: Option<String> = None;
+    let mut quick = false;
+    let mut args = std::env::args().skip(1).peekable();
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--quick" => quick = true,
+            "--save-baseline" => {
+                let path = match args.peek() {
+                    Some(p) if !p.starts_with("--") => args.next().unwrap(),
+                    _ => "BENCH_fabric_throughput.json".to_string(),
+                };
+                save = Some(path);
+            }
+            _ => {}
+        }
+    }
+    let scale = if quick { 1usize } else { 16 };
+
+    section("E12: fabric data-plane throughput (jobs/sec, bytes copied/job)");
+    println!(
+        "{:>14} {:>7} {:>7} {:>12} {:>14} {:>11}",
+        "scenario", "N", "jobs", "jobs/s", "bytes/job", "rows/batch"
+    );
+    let split_all = RoutePolicy { accel_min_len: 64, split_min_len: 4096 };
+    let rows = vec![
+        // inline: below accel_min_len — zero-copy, zero-batch
+        mass_arm("mass_inline", 32, 64 * scale, RoutePolicy::default()),
+        // batched: the tile arena is the only copy
+        mass_arm("mass_batched_small", 256, 64 * scale, RoutePolicy::default()),
+        mass_arm("mass_batched_large", 4096, 16 * scale, RoutePolicy::default()),
+        // scattered: oversized ops computed over the shared buffer
+        mass_arm("mass_split", 16384, 8 * scale, split_all),
+        mixed_arm(64 * scale),
+    ];
+    for r in &rows {
+        println!(
+            "{:>14} {:>7} {:>7} {:>12.0} {:>14.1} {:>11.1}",
+            r.scenario, r.n, r.jobs, r.jobs_per_sec, r.bytes_per_job, r.mean_batch_rows
+        );
+    }
+
+    // Acceptance: the non-batched lanes copy nothing, and the batched
+    // lane copies each operand exactly once (4 bytes/float ± the odd
+    // deadline-split batch).
+    let inline = rows.iter().find(|r| r.scenario == "mass_inline").unwrap();
+    assert_eq!(inline.bytes_per_job, 0.0, "inline lane must not copy operands");
+    let batched = rows.iter().find(|r| r.scenario == "mass_batched_small").unwrap();
+    let per_job = 4.0 * batched.n as f64;
+    assert!(
+        (batched.bytes_per_job - per_job).abs() < 1.0,
+        "batched lane copies each operand exactly once: {} vs {}",
+        batched.bytes_per_job,
+        per_job
+    );
+
+    if let Some(path) = save {
+        let objs: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                let mut o = JsonWriter::new();
+                o.object(&[
+                    ("scenario", str_val(r.scenario)),
+                    ("n", r.n.to_string()),
+                    ("jobs", r.jobs.to_string()),
+                    ("jobs_per_sec", num(r.jobs_per_sec)),
+                    ("bytes_copied_per_job", num(r.bytes_per_job)),
+                    ("mean_batch_rows", num(r.mean_batch_rows)),
+                ]);
+                o.finish()
+            })
+            .collect();
+        let mut w = JsonWriter::new();
+        w.raw("{\"bench\":\"fabric_throughput\",\"rows\":");
+        w.array(&objs);
+        w.raw("}");
+        std::fs::write(&path, w.finish()).expect("write baseline");
+        println!("\nbaseline saved to {path}");
+    }
+}

@@ -1,8 +1,20 @@
-//! Dynamic batcher: groups per-request vectors into bucket-shaped
-//! batches for the accelerator, bounded by batch size and a deadline
-//! window — the serving-side analogue of the SV collecting child QTs for
-//! mass processing before triggering the engine.
+//! Dynamic batcher and the flat tile arena: groups per-request vectors
+//! into bucket-shaped batches for the accelerator, bounded by batch size
+//! and a deadline window — the serving-side analogue of the SV
+//! collecting child QTs for mass processing before triggering the
+//! engine.
+//!
+//! Operands arrive as shared `Arc<[f32]>` buffers and are **never
+//! copied while staged or flushed** — a [`Batch`] carries the
+//! submitters' handles. The mass worker, after its per-row admission
+//! gate, appends the surviving rows once into a [`Tile`] — a flat,
+//! zero-padded `(B, L)` buffer drawn from a recycled [`TilePool`] arena
+//! (grown, never shrunk) — so the backends receive contiguous,
+//! already-shaped data instead of a `Vec<Vec<f32>>` they would have to
+//! re-pack per flush, the supervisor's routing loop never pays a
+//! memcpy, and cancelled rows are never tiled at all.
 
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Batcher policy.
@@ -20,13 +32,158 @@ impl Default for BatcherConfig {
     }
 }
 
-/// A pending row with its owner request id.
+// ----------------------------------------------------------------------
+// the flat tile arena
+// ----------------------------------------------------------------------
+
+/// A flat, zero-padded `(B, L)` tile: `rows() * stride()` floats, row
+/// `i` occupying `data[i*stride .. i*stride + len(i)]` with zero
+/// padding up to the stride. The stride is bucketed to the next power
+/// of two of the longest row, so recycled buffers stabilise at a few
+/// shapes instead of reallocating per flush.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tile {
+    data: Vec<f32>,
+    lens: Vec<u32>,
+    stride: usize,
+}
+
+impl Tile {
+    /// Flatten `rows` into `buf` (typically a recycled arena buffer —
+    /// its capacity is kept, its contents replaced). This is the **one**
+    /// copy of the batched data plane: everything before it shares the
+    /// submitters' allocations, everything after it reads this tile.
+    pub fn build(rows: &[Arc<[f32]>], mut buf: Vec<f32>) -> Tile {
+        let max = rows.iter().map(|r| r.len()).max().unwrap_or(0);
+        let stride = max.next_power_of_two().max(1);
+        buf.clear();
+        buf.resize(rows.len() * stride, 0.0);
+        let mut lens = Vec::with_capacity(rows.len());
+        for (i, r) in rows.iter().enumerate() {
+            buf[i * stride..i * stride + r.len()].copy_from_slice(r);
+            lens.push(r.len() as u32);
+        }
+        Tile { data: buf, lens, stride }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.lens.len()
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Row `i` without its padding.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.stride..i * self.stride + self.lens[i] as usize]
+    }
+
+    /// The whole `rows * stride` flat buffer (padding included).
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Bytes of row payload copied into this tile (excludes padding) —
+    /// the data plane's bytes-copied-per-flush accounting.
+    pub fn filled_bytes(&self) -> u64 {
+        4 * self.lens.iter().map(|&l| l as u64).sum::<u64>()
+    }
+
+    /// Surrender the backing buffer for recycling (see [`TilePool`]).
+    pub fn into_buffer(self) -> Vec<f32> {
+        self.data
+    }
+}
+
+/// Free-list of tile buffers: whoever builds tiles (the fabric's mass
+/// worker) takes a buffer per tile and returns it once the batch
+/// completed. Buffers keep their capacity across trips — the
+/// steady-state batch allocates nothing.
+#[derive(Debug, Clone, Default)]
+pub struct TilePool {
+    free: Arc<Mutex<Vec<Vec<f32>>>>,
+}
+
+/// Buffers retained per pool; beyond this, returned buffers are dropped
+/// (bounds idle memory after a burst).
+const POOL_CAP: usize = 32;
+
+impl TilePool {
+    /// A buffer to build the next tile into (recycled, or fresh-empty).
+    pub fn take(&self) -> Vec<f32> {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a tile buffer after its batch completed.
+    pub fn give(&self, mut buf: Vec<f32>) {
+        buf.clear();
+        let mut g = self.free.lock().unwrap();
+        if g.len() < POOL_CAP {
+            g.push(buf);
+        }
+    }
+
+    /// Buffers currently parked in the pool (tests).
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+// ----------------------------------------------------------------------
+// the batcher
+// ----------------------------------------------------------------------
+
+/// A pending row: the caller's tag plus shared handles onto the
+/// submitted operand buffers (no copies while staged).
 #[derive(Debug, Clone)]
-pub struct PendingRow<T> {
-    pub tag: T,
-    pub row: Vec<f32>,
-    pub row2: Option<Vec<f32>>,
-    pub enqueued: Instant,
+struct PendingRow<T> {
+    tag: T,
+    row: Arc<[f32]>,
+    row2: Option<Arc<[f32]>>,
+    enqueued: Instant,
+}
+
+/// One flushed batch: per-row tags (in push order) and the shared
+/// operand handles. Rows are still the submitters' `Arc`s — the flat
+/// tiles are built later, by the mass worker, *after* its per-row
+/// admission gate, so the supervisor's routing loop never pays a copy
+/// and cancelled rows are never tiled at all.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub tags: Vec<T>,
+    pub rows: Vec<Arc<[f32]>>,
+    /// Second operand (dot only; empty otherwise). Row-aligned with
+    /// `tags` — rows without a second operand are padded with an empty
+    /// `Arc` — so [`Batch::retain`]'s flags apply positionally.
+    pub rows2: Vec<Arc<[f32]>>,
+}
+
+impl<T> Batch<T> {
+    pub fn len(&self) -> usize {
+        self.tags.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tags.is_empty()
+    }
+
+    /// Drop the rows whose `keep` flag is false from every aligned
+    /// container.
+    pub fn retain(&mut self, keep: &[bool]) {
+        debug_assert!(
+            self.rows2.is_empty() || self.rows2.len() == self.tags.len(),
+            "rows2 must stay row-aligned with tags"
+        );
+        let mut it = keep.iter();
+        self.tags.retain(|_| *it.next().unwrap());
+        let mut it = keep.iter();
+        self.rows.retain(|_| *it.next().unwrap());
+        if !self.rows2.is_empty() {
+            let mut it = keep.iter();
+            self.rows2.retain(|_| *it.next().unwrap());
+        }
+    }
 }
 
 /// Rows grouped per operation, flushed as one accelerator call.
@@ -46,39 +203,65 @@ impl<T> Batcher<T> {
     }
 
     /// Queue a row; returns a full batch when the size trigger fires.
-    pub fn push(&mut self, tag: T, row: Vec<f32>, row2: Option<Vec<f32>>, now: Instant) -> Option<Vec<PendingRow<T>>> {
+    pub fn push(
+        &mut self,
+        tag: T,
+        row: Arc<[f32]>,
+        row2: Option<Arc<[f32]>>,
+        now: Instant,
+    ) -> Option<Batch<T>> {
         self.pending.push(PendingRow { tag, row, row2, enqueued: now });
         if self.pending.len() >= self.cfg.max_rows {
             self.flushes += 1;
             self.flushed_rows += self.pending.len() as u64;
-            Some(std::mem::take(&mut self.pending))
+            Some(self.flush_pending())
         } else {
             None
         }
     }
 
     /// Deadline check: flush when the oldest row exceeded `max_wait`.
-    pub fn poll(&mut self, now: Instant) -> Option<Vec<PendingRow<T>>> {
+    pub fn poll(&mut self, now: Instant) -> Option<Batch<T>> {
         let oldest = self.pending.first()?;
         if now.duration_since(oldest.enqueued) >= self.cfg.max_wait {
             self.flushes += 1;
             self.deadline_flushes += 1;
             self.flushed_rows += self.pending.len() as u64;
-            Some(std::mem::take(&mut self.pending))
+            Some(self.flush_pending())
         } else {
             None
         }
     }
 
-    /// Force out whatever is pending (shutdown path).
-    pub fn drain(&mut self) -> Option<Vec<PendingRow<T>>> {
+    /// Force out whatever is pending (priority and shutdown paths).
+    pub fn drain(&mut self) -> Option<Batch<T>> {
         if self.pending.is_empty() {
             None
         } else {
             self.flushes += 1;
             self.flushed_rows += self.pending.len() as u64;
-            Some(std::mem::take(&mut self.pending))
+            Some(self.flush_pending())
         }
+    }
+
+    /// Hand the staged rows over — `Arc` moves only, no copies. When any
+    /// staged row carries a second operand, `rows2` is padded with empty
+    /// rows so it stays **aligned** with `tags`/`rows` (in practice a
+    /// batcher is per-op, so batches are all-or-none on `row2`).
+    fn flush_pending(&mut self) -> Batch<T> {
+        let pending = std::mem::take(&mut self.pending);
+        let mut tags = Vec::with_capacity(pending.len());
+        let mut rows = Vec::with_capacity(pending.len());
+        let mut rows2: Vec<Arc<[f32]>> = Vec::new();
+        let any_row2 = pending.iter().any(|p| p.row2.is_some());
+        for p in pending {
+            tags.push(p.tag);
+            rows.push(p.row);
+            if any_row2 {
+                rows2.push(p.row2.unwrap_or_else(|| Vec::new().into()));
+            }
+        }
+        Batch { tags, rows, rows2 }
     }
 
     pub fn pending_len(&self) -> usize {
@@ -99,13 +282,21 @@ mod tests {
         BatcherConfig { max_rows: rows, max_wait: Duration::from_micros(wait_us) }
     }
 
+    fn batcher(rows: usize, wait_us: u64) -> Batcher<u64> {
+        Batcher::new(cfg(rows, wait_us))
+    }
+
+    fn arc(v: Vec<f32>) -> Arc<[f32]> {
+        v.into()
+    }
+
     #[test]
     fn size_trigger_flushes_exactly_at_max() {
-        let mut b: Batcher<u64> = Batcher::new(cfg(3, 1_000_000));
+        let mut b = batcher(3, 1_000_000);
         let t = Instant::now();
-        assert!(b.push(1, vec![1.0], None, t).is_none());
-        assert!(b.push(2, vec![2.0], None, t).is_none());
-        let batch = b.push(3, vec![3.0], None, t).expect("flush at 3");
+        assert!(b.push(1, arc(vec![1.0]), None, t).is_none());
+        assert!(b.push(2, arc(vec![2.0]), None, t).is_none());
+        let batch = b.push(3, arc(vec![3.0]), None, t).expect("flush at 3");
         assert_eq!(batch.len(), 3);
         assert_eq!(b.pending_len(), 0);
         assert_eq!(b.flushes, 1);
@@ -114,9 +305,9 @@ mod tests {
 
     #[test]
     fn deadline_trigger() {
-        let mut b: Batcher<u64> = Batcher::new(cfg(100, 0));
+        let mut b = batcher(100, 0);
         let t = Instant::now();
-        assert!(b.push(1, vec![1.0], None, t).is_none());
+        assert!(b.push(1, arc(vec![1.0]), None, t).is_none());
         let batch = b.poll(t + Duration::from_micros(1)).expect("deadline flush");
         assert_eq!(batch.len(), 1);
         assert_eq!(b.deadline_flushes, 1);
@@ -124,9 +315,9 @@ mod tests {
 
     #[test]
     fn poll_before_deadline_keeps_pending() {
-        let mut b: Batcher<u64> = Batcher::new(cfg(100, 1_000_000));
+        let mut b = batcher(100, 1_000_000);
         let t = Instant::now();
-        b.push(1, vec![1.0], None, t);
+        b.push(1, arc(vec![1.0]), None, t);
         assert!(b.poll(t).is_none());
         assert_eq!(b.pending_len(), 1);
         assert!(b.next_deadline().is_some());
@@ -134,25 +325,88 @@ mod tests {
 
     #[test]
     fn drain_flushes_remainder() {
-        let mut b: Batcher<u64> = Batcher::new(cfg(100, 1_000_000));
+        let mut b = batcher(100, 1_000_000);
         assert!(b.drain().is_none());
-        b.push(1, vec![1.0], None, Instant::now());
-        b.push(2, vec![2.0], Some(vec![3.0]), Instant::now());
+        b.push(1, arc(vec![1.0]), None, Instant::now());
+        b.push(2, arc(vec![2.0]), Some(arc(vec![3.0])), Instant::now());
         let batch = b.drain().unwrap();
         assert_eq!(batch.len(), 2);
-        assert!(batch[1].row2.is_some());
+        // rows2 is padded to stay row-aligned with tags, so retain's
+        // positional flags can never skew a mixed batch
+        assert_eq!(batch.rows2.len(), 2);
+        assert!(batch.rows2[0].is_empty());
+        assert_eq!(&batch.rows2[1][..], &[3.0]);
         assert_eq!(b.flushed_rows, 2);
     }
 
     #[test]
+    fn retain_keeps_mixed_second_operands_aligned() {
+        let mut b = batcher(100, 1_000_000);
+        let t = Instant::now();
+        b.push(1, arc(vec![1.0]), None, t);
+        b.push(2, arc(vec![2.0]), Some(arc(vec![5.0])), t);
+        b.push(3, arc(vec![3.0]), None, t);
+        let mut batch = b.drain().unwrap();
+        batch.retain(&[false, true, true]);
+        assert_eq!(batch.tags, vec![2, 3]);
+        assert_eq!(&batch.rows[0][..], &[2.0]);
+        assert_eq!(&batch.rows2[0][..], &[5.0], "tag 2 keeps its second operand");
+        assert!(batch.rows2[1].is_empty());
+    }
+
+    #[test]
     fn order_preserved_within_batch() {
-        let mut b: Batcher<u64> = Batcher::new(cfg(4, 1_000_000));
+        let mut b = batcher(4, 1_000_000);
         let t = Instant::now();
         for i in 0..3 {
-            b.push(i, vec![i as f32], None, t);
+            b.push(i, arc(vec![i as f32]), None, t);
         }
-        let batch = b.push(3, vec![3.0], None, t).unwrap();
-        let tags: Vec<u64> = batch.iter().map(|p| p.tag).collect();
-        assert_eq!(tags, vec![0, 1, 2, 3]);
+        let batch = b.push(3, arc(vec![3.0]), None, t).unwrap();
+        assert_eq!(batch.tags, vec![0, 1, 2, 3]);
+        for i in 0..4 {
+            assert_eq!(&batch.rows[i][..], &[i as f32][..]);
+        }
+    }
+
+    #[test]
+    fn staged_rows_share_the_submitted_allocation() {
+        let mut b = batcher(2, 1_000_000);
+        let buf = arc(vec![1.0, 2.0, 3.0]);
+        b.push(1, Arc::clone(&buf), None, Instant::now());
+        let batch = b.push(2, arc(vec![4.0]), None, Instant::now()).unwrap();
+        assert!(Arc::ptr_eq(&batch.rows[0], &buf), "zero-copy while staged and flushed");
+        let tile = Tile::build(&batch.rows, Vec::new());
+        assert_eq!(tile.row(0), &[1.0, 2.0, 3.0][..], "the tile copy happens post-flush");
+    }
+
+    #[test]
+    fn tile_is_zero_padded_to_a_bucketed_stride() {
+        let rows = vec![arc(vec![1.0, 2.0, 3.0]), arc(vec![4.0])];
+        let tile = Tile::build(&rows, Vec::new());
+        assert_eq!(tile.rows(), 2);
+        assert_eq!(tile.stride(), 4, "next power of two of the longest row");
+        assert_eq!(tile.flat(), &[1.0, 2.0, 3.0, 0.0, 4.0, 0.0, 0.0, 0.0]);
+        assert_eq!(tile.row(1), &[4.0][..]);
+        assert_eq!(tile.filled_bytes(), 16, "4 payload floats");
+        // degenerate shapes stay well-formed
+        let empty = Tile::build(&[], Vec::new());
+        assert_eq!((empty.rows(), empty.stride()), (0, 1));
+        let zero_len = Tile::build(&[arc(vec![])], Vec::new());
+        assert_eq!((zero_len.rows(), zero_len.stride()), (1, 1));
+        assert_eq!(zero_len.row(0), &[] as &[f32]);
+    }
+
+    #[test]
+    fn pool_recycles_buffers_with_their_capacity() {
+        let pool = TilePool::default();
+        let rows = vec![arc(vec![1.0; 100]); 8];
+        let tile = Tile::build(&rows, pool.take());
+        let cap = tile.flat().len();
+        pool.give(tile.into_buffer());
+        assert_eq!(pool.idle(), 1);
+        let reused = pool.take();
+        assert!(reused.capacity() >= cap, "grown, never shrunk");
+        assert!(reused.is_empty(), "recycled buffers come back clean");
+        assert_eq!(pool.idle(), 0);
     }
 }

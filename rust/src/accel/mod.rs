@@ -7,6 +7,13 @@
 //! operation signal), results come back; the SV never sees the
 //! accelerator's internals.
 //!
+//! The data plane is zero-copy up to the accelerator boundary: a
+//! [`MassRequest`] carries shared `Arc<[f32]>` operand handles — the
+//! very allocations the clients submitted — plus, on the batched path,
+//! the flat [`Tile`]s the batcher's recycled arena built (one copy,
+//! into pooled memory). Backends read the contiguous tile when present
+//! and fall back to the shared rows otherwise.
+//!
 //! Two implementations:
 //! - [`NativeAccel`] — straightforward rust loops (the "conventional
 //!   core" doing the mass op; baseline for the E8 crossover bench);
@@ -15,10 +22,11 @@
 
 use crate::runtime::{Runtime, Tensor};
 use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
 pub mod batch;
 
-pub use batch::{Batcher, BatcherConfig};
+pub use batch::{Batch, Batcher, BatcherConfig, Tile, TilePool};
 
 /// A mass operation the fabric can route to an accelerator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -56,31 +64,105 @@ impl MassOp {
     }
 }
 
-/// One mass-operation request: `rows` vectors of equal length, plus the
-/// scalar latch values (FOR's scale/bias) where the op needs them.
+/// One mass-operation request: shared operand rows, the scalar latch
+/// values (FOR's scale/bias) where the op needs them, and — when the
+/// batcher staged this request — the pre-flattened tiles.
 #[derive(Debug, Clone)]
 pub struct MassRequest {
     pub op: MassOp,
-    /// First operand rows (each of length `l`).
-    pub rows: Vec<Vec<f32>>,
+    /// First-operand rows: shared handles onto the submitters' buffers.
+    pub rows: Vec<Arc<[f32]>>,
     /// Second operand rows (Dot only).
-    pub rows2: Vec<Vec<f32>>,
+    pub rows2: Vec<Arc<[f32]>>,
     /// FOR: [scale, bias] latch.
     pub scale_bias: [f32; 2],
+    /// Flat `(B, L)` layout of `rows`, built once by the batcher arena.
+    /// `None` for requests constructed directly from rows.
+    pub tile: Option<Tile>,
+    /// Flat layout of `rows2` (Dot only).
+    pub tile2: Option<Tile>,
 }
 
 impl MassRequest {
-    pub fn sumup(rows: Vec<Vec<f32>>) -> Self {
-        MassRequest { op: MassOp::Sumup, rows, rows2: Vec::new(), scale_bias: [0.0; 2] }
+    /// Build from owned or shared rows (`Vec<f32>` and `Arc<[f32]>` both
+    /// work — shared rows are adopted without copying).
+    pub fn new<R: Into<Arc<[f32]>>, S: Into<Arc<[f32]>>>(
+        op: MassOp,
+        rows: impl IntoIterator<Item = R>,
+        rows2: impl IntoIterator<Item = S>,
+        scale_bias: [f32; 2],
+    ) -> Self {
+        MassRequest {
+            op,
+            rows: rows.into_iter().map(Into::into).collect(),
+            rows2: rows2.into_iter().map(Into::into).collect(),
+            scale_bias,
+            tile: None,
+            tile2: None,
+        }
     }
 
-    pub fn dot(rows: Vec<Vec<f32>>, rows2: Vec<Vec<f32>>) -> Self {
-        MassRequest { op: MassOp::Dot, rows, rows2, scale_bias: [0.0; 2] }
+    pub fn sumup<R: Into<Arc<[f32]>>>(rows: impl IntoIterator<Item = R>) -> Self {
+        Self::new(MassOp::Sumup, rows, none_rows(), [0.0; 2])
     }
 
-    pub fn for_op(rows: Vec<Vec<f32>>, scale: f32, bias: f32) -> Self {
-        MassRequest { op: MassOp::For, rows, rows2: Vec::new(), scale_bias: [scale, bias] }
+    pub fn dot<R: Into<Arc<[f32]>>, S: Into<Arc<[f32]>>>(
+        rows: impl IntoIterator<Item = R>,
+        rows2: impl IntoIterator<Item = S>,
+    ) -> Self {
+        Self::new(MassOp::Dot, rows, rows2, [0.0; 2])
     }
+
+    pub fn for_op<R: Into<Arc<[f32]>>>(
+        rows: impl IntoIterator<Item = R>,
+        scale: f32,
+        bias: f32,
+    ) -> Self {
+        Self::new(MassOp::For, rows, none_rows(), [scale, bias])
+    }
+
+    /// Number of rows in the batch.
+    pub fn batch_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Row `i` of the first operand — from the flat tile when present
+    /// (contiguous), else the shared submitted buffer.
+    pub fn row(&self, i: usize) -> &[f32] {
+        match &self.tile {
+            Some(t) => t.row(i),
+            None => &self.rows[i],
+        }
+    }
+
+    /// Row `i` of the second operand (Dot).
+    pub fn row2(&self, i: usize) -> &[f32] {
+        match &self.tile2 {
+            Some(t) => t.row(i),
+            None => &self.rows2[i],
+        }
+    }
+
+    /// Longest first-operand row.
+    pub fn max_len(&self) -> usize {
+        self.rows.iter().map(|r| r.len()).max().unwrap_or(0)
+    }
+
+    /// Return the tile buffers to the arena after the batch completed.
+    pub fn recycle(self, pool: &TilePool) {
+        if let Some(t) = self.tile {
+            pool.give(t.into_buffer());
+        }
+        if let Some(t) = self.tile2 {
+            pool.give(t.into_buffer());
+        }
+    }
+}
+
+/// Type-inference helper: an empty `rows2` has no element type of its
+/// own, so give it one.
+fn none_rows() -> std::iter::Empty<Arc<[f32]>> {
+    std::iter::empty()
 }
 
 /// Per-row results: scalar ops give one value per row; FOR/Prefix give a
@@ -117,7 +199,8 @@ pub type AccelFactory = Box<dyn Fn() -> Result<Box<dyn Accelerator>> + Send + Sy
 // ----------------------------------------------------------------------
 
 /// Plain-rust mass ops: what a conventional core would do, and the
-/// numerical oracle for [`XlaAccel`] parity tests.
+/// numerical oracle for [`XlaAccel`] parity tests. On the batched path
+/// it reads the flat tile — contiguous rows, no per-row pointer chase.
 pub struct NativeAccel;
 
 impl Accelerator for NativeAccel {
@@ -126,34 +209,33 @@ impl Accelerator for NativeAccel {
     }
 
     fn execute(&self, req: &MassRequest) -> Result<MassResult> {
+        let n = req.batch_rows();
         match req.op {
             MassOp::Sumup => Ok(MassResult::Scalars(
-                req.rows.iter().map(|r| r.iter().sum()).collect(),
+                (0..n).map(|i| req.row(i).iter().sum()).collect(),
             )),
             MassOp::Dot => {
-                if req.rows.len() != req.rows2.len() {
+                if n != req.rows2.len() {
                     return Err(anyhow!("dot: operand row counts differ"));
                 }
                 Ok(MassResult::Scalars(
-                    req.rows
-                        .iter()
-                        .zip(&req.rows2)
-                        .map(|(a, b)| a.iter().zip(b).map(|(x, y)| x * y).sum())
+                    (0..n)
+                        .map(|i| req.row(i).iter().zip(req.row2(i)).map(|(x, y)| x * y).sum())
                         .collect(),
                 ))
             }
             MassOp::For => {
                 let [s, c] = req.scale_bias;
                 Ok(MassResult::Rows(
-                    req.rows.iter().map(|r| r.iter().map(|x| x * s + c).collect()).collect(),
+                    (0..n).map(|i| req.row(i).iter().map(|x| x * s + c).collect()).collect(),
                 ))
             }
             MassOp::Prefix => Ok(MassResult::Rows(
-                req.rows
-                    .iter()
-                    .map(|r| {
+                (0..n)
+                    .map(|i| {
                         let mut acc = 0.0f32;
-                        r.iter()
+                        req.row(i)
+                            .iter()
                             .map(|x| {
                                 acc += x;
                                 acc
@@ -163,13 +245,12 @@ impl Accelerator for NativeAccel {
                     .collect(),
             )),
             MassOp::SumupStats => {
-                let sum: Vec<f32> = req.rows.iter().map(|r| r.iter().sum()).collect();
-                let mean: Vec<f32> =
-                    req.rows.iter().zip(&sum).map(|(r, s)| s / r.len().max(1) as f32).collect();
-                let l2: Vec<f32> = req
-                    .rows
-                    .iter()
-                    .map(|r| r.iter().map(|x| x * x).sum::<f32>().sqrt())
+                let sum: Vec<f32> = (0..n).map(|i| req.row(i).iter().sum()).collect();
+                let mean: Vec<f32> = (0..n)
+                    .map(|i| sum[i] / req.row(i).len().max(1) as f32)
+                    .collect();
+                let l2: Vec<f32> = (0..n)
+                    .map(|i| req.row(i).iter().map(|x| x * x).sum::<f32>().sqrt())
                     .collect();
                 Ok(MassResult::Stats { sum, mean, l2 })
             }
@@ -185,6 +266,9 @@ impl Accelerator for NativeAccel {
 ///
 /// Requests are padded into the smallest bucket that fits (zero padding —
 /// the identity of the reductions; FOR/Prefix results are sliced back).
+/// When the batcher's flat tile already has the bucket's stride, the
+/// bucket tensor is one bulk copy of the tile instead of a row-by-row
+/// re-pack.
 pub struct XlaAccel {
     rt: Runtime,
 }
@@ -208,10 +292,23 @@ impl XlaAccel {
             .ok_or_else(|| anyhow!("{entry}: ({rows}, {len}) exceeds all buckets"))
     }
 
-    fn pack(rows: &[Vec<f32>], b: usize, l: usize) -> Tensor {
+    /// Pack one operand into the (b, l) bucket tensor: a single bulk
+    /// copy of the flat tile when its stride matches the bucket, a
+    /// row-by-row pack otherwise.
+    fn pack(req: &MassRequest, second: bool, b: usize, l: usize) -> Tensor {
         let mut data = vec![0.0f32; b * l];
-        for (i, r) in rows.iter().enumerate() {
-            data[i * l..i * l + r.len()].copy_from_slice(r);
+        let tile = if second { &req.tile2 } else { &req.tile };
+        match tile {
+            Some(t) if t.stride() == l => {
+                data[..t.flat().len()].copy_from_slice(t.flat());
+            }
+            _ => {
+                let n = if second { req.rows2.len() } else { req.rows.len() };
+                for i in 0..n {
+                    let r = if second { req.row2(i) } else { req.row(i) };
+                    data[i * l..i * l + r.len()].copy_from_slice(r);
+                }
+            }
         }
         Tensor::matrix(b, l, data)
     }
@@ -223,18 +320,18 @@ impl Accelerator for XlaAccel {
     }
 
     fn execute(&self, req: &MassRequest) -> Result<MassResult> {
-        let rows = req.rows.len();
-        let len = req.rows.iter().map(|r| r.len()).max().unwrap_or(0);
+        let rows = req.batch_rows();
+        let len = req.max_len();
         let (b, l) = self.pick_bucket(req.op.entry(), rows, len)?;
         let name = self
             .rt
             .find(req.op.entry(), b, l)
             .ok_or_else(|| anyhow!("missing artifact {} b{b} l{l}", req.op.entry()))?
             .to_string();
-        let x = Self::pack(&req.rows, b, l);
+        let x = Self::pack(req, false, b, l);
         let outs = match req.op {
             MassOp::Dot => {
-                let y = Self::pack(&req.rows2, b, l);
+                let y = Self::pack(req, true, b, l);
                 self.rt.execute(&name, &[x, y])?
             }
             MassOp::For => {
@@ -246,21 +343,16 @@ impl Accelerator for XlaAccel {
         match req.op {
             MassOp::Sumup | MassOp::Dot => Ok(MassResult::Scalars(outs[0].data[..rows].to_vec())),
             MassOp::For | MassOp::Prefix => Ok(MassResult::Rows(
-                req.rows
-                    .iter()
-                    .enumerate()
-                    .map(|(i, r)| outs[0].data[i * l..i * l + r.len()].to_vec())
+                (0..rows)
+                    .map(|i| outs[0].data[i * l..i * l + req.row(i).len()].to_vec())
                     .collect(),
             )),
             MassOp::SumupStats => {
                 // mean over the padded bucket length must be rescaled to
                 // the true row length (padding contributed zeros).
                 let sum = outs[0].data[..rows].to_vec();
-                let mean = req
-                    .rows
-                    .iter()
-                    .zip(&sum)
-                    .map(|(r, s)| s / r.len().max(1) as f32)
+                let mean = (0..rows)
+                    .map(|i| sum[i] / req.row(i).len().max(1) as f32)
                     .collect();
                 let l2 = outs[2].data[..rows].to_vec();
                 Ok(MassResult::Stats { sum, mean, l2 })
@@ -289,24 +381,24 @@ mod tests {
         let a = NativeAccel;
         let r = a.execute(&MassRequest::for_op(vec![vec![1.0, 2.0]], 2.0, 1.0)).unwrap();
         assert_eq!(r, MassResult::Rows(vec![vec![3.0, 5.0]]));
-        let req = MassRequest {
-            op: MassOp::Prefix,
-            rows: vec![vec![1.0, 2.0, 3.0]],
-            rows2: vec![],
-            scale_bias: [0.0; 2],
-        };
+        let req = MassRequest::new(
+            MassOp::Prefix,
+            vec![vec![1.0, 2.0, 3.0]],
+            Vec::<Vec<f32>>::new(),
+            [0.0; 2],
+        );
         assert_eq!(a.execute(&req).unwrap(), MassResult::Rows(vec![vec![1.0, 3.0, 6.0]]));
     }
 
     #[test]
     fn native_stats() {
         let a = NativeAccel;
-        let req = MassRequest {
-            op: MassOp::SumupStats,
-            rows: vec![vec![3.0, 4.0]],
-            rows2: vec![],
-            scale_bias: [0.0; 2],
-        };
+        let req = MassRequest::new(
+            MassOp::SumupStats,
+            vec![vec![3.0, 4.0]],
+            Vec::<Vec<f32>>::new(),
+            [0.0; 2],
+        );
         let MassResult::Stats { sum, mean, l2 } = a.execute(&req).unwrap() else {
             panic!("wrong variant")
         };
@@ -318,7 +410,32 @@ mod tests {
     #[test]
     fn dot_mismatched_rows_is_error() {
         let a = NativeAccel;
-        assert!(a.execute(&MassRequest::dot(vec![vec![1.0]], vec![])).is_err());
+        assert!(a
+            .execute(&MassRequest::dot(vec![vec![1.0]], Vec::<Vec<f32>>::new()))
+            .is_err());
+    }
+
+    #[test]
+    fn constructors_adopt_shared_rows_without_copying() {
+        let buf: Arc<[f32]> = vec![1.0, 2.0, 3.0].into();
+        let req = MassRequest::sumup(vec![Arc::clone(&buf)]);
+        assert!(Arc::ptr_eq(&req.rows[0], &buf), "the handle is adopted, not copied");
+        assert_eq!(req.row(0), &[1.0, 2.0, 3.0][..]);
+        assert!(req.tile.is_none(), "direct requests carry no tile");
+    }
+
+    #[test]
+    fn tiled_and_row_requests_agree() {
+        let rows: Vec<Arc<[f32]>> =
+            vec![vec![1.0, 2.0, 3.0].into(), vec![4.0, 5.0].into(), vec![6.0].into()];
+        let plain = MassRequest::sumup(rows.clone());
+        let tiled = MassRequest {
+            tile: Some(Tile::build(&rows, Vec::new())),
+            ..MassRequest::sumup(rows)
+        };
+        let a = NativeAccel;
+        assert_eq!(a.execute(&plain).unwrap(), a.execute(&tiled).unwrap());
+        assert_eq!(tiled.row(1), &[4.0, 5.0][..], "tile rows slice without padding");
     }
 
     #[test]

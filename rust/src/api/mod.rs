@@ -40,13 +40,27 @@ pub enum RequestKind {
     /// [`RequestKind::scale`]/[`RequestKind::traces`] constructors, which
     /// keep `family` and `params` consistent by construction.
     RunProgram { family: Family, mode: Mode, params: Params },
-    /// Mass operation over a vector (accelerator-eligible).
-    MassSum { values: Vec<f32> },
+    /// Mass operation over a vector (accelerator-eligible). The operand
+    /// is a **shared, immutable buffer**: every stage of the data plane
+    /// — supervisor, scatter shards, batcher, backend chain — borrows
+    /// this one allocation instead of copying it
+    /// ([`RequestKind::mass_sum`] accepts a plain `Vec` too).
+    MassSum { values: Arc<[f32]> },
     /// Mass dot product (accelerator-eligible, exercises the MXU path).
-    MassDot { a: Vec<f32>, b: Vec<f32> },
+    MassDot { a: Arc<[f32]>, b: Arc<[f32]> },
 }
 
 impl RequestKind {
+    /// A mass-sum job over a shared operand buffer (`Vec<f32>` and
+    /// `Arc<[f32]>` both convert; an `Arc` is adopted without copying).
+    pub fn mass_sum(values: impl Into<Arc<[f32]>>) -> Self {
+        RequestKind::MassSum { values: values.into() }
+    }
+
+    /// A mass dot-product job over two shared operand buffers.
+    pub fn mass_dot(a: impl Into<Arc<[f32]>>, b: impl Into<Arc<[f32]>>) -> Self {
+        RequestKind::MassDot { a: a.into(), b: b.into() }
+    }
     /// A sumup program job (§5, any Table 1 mode).
     pub fn sumup(mode: Mode, values: Vec<i32>) -> Self {
         RequestKind::RunProgram {
@@ -260,10 +274,13 @@ pub enum Output {
     /// families whose result *is* %eax — scale returns its output array
     /// here).
     Program { eax: i32, clocks: u64, cores: usize, data: Vec<i32> },
-    /// Mass op scalar result for this request's row(s).
-    Scalars(Vec<f32>),
-    /// Mass op row results.
-    Rows(Vec<Vec<f32>>),
+    /// Mass op scalar result for this request's row(s). Shared buffer:
+    /// `Completion` clones are refcount bumps; the deprecated
+    /// `coordinator::Response` shim converts to owned `Vec`s at the
+    /// boundary only.
+    Scalars(Arc<[f32]>),
+    /// Mass op row results (shared buffers, as above).
+    Rows(Vec<Arc<[f32]>>),
 }
 
 impl Output {
@@ -397,7 +414,7 @@ mod tests {
 
     fn completion() -> Completion {
         Completion {
-            output: Output::Scalars(vec![3.0]),
+            output: Output::Scalars(vec![3.0].into()),
             route: Route::Inline,
             backend: "inline".into(),
             batch_rows: 1,
@@ -409,7 +426,7 @@ mod tests {
 
     #[test]
     fn builder_sets_contract_fields() {
-        let r = JobRequest::new(RequestKind::MassSum { values: vec![1.0] })
+        let r = JobRequest::new(RequestKind::mass_sum(vec![1.0]))
             .with_priority(Priority::High)
             .with_deadline(Duration::from_millis(5))
             .with_client("tenant-a");
@@ -490,6 +507,21 @@ mod tests {
             unreachable!()
         };
         assert_eq!(mode, Mode::No);
+    }
+
+    #[test]
+    fn mass_constructors_adopt_shared_buffers_without_copying() {
+        let buf: Arc<[f32]> = vec![1.0, 2.0].into();
+        let RequestKind::MassSum { values } = RequestKind::mass_sum(Arc::clone(&buf)) else {
+            unreachable!()
+        };
+        assert!(Arc::ptr_eq(&values, &buf), "the Arc is adopted, not copied");
+        let RequestKind::MassDot { a, b } = RequestKind::mass_dot(Arc::clone(&buf), vec![3.0])
+        else {
+            unreachable!()
+        };
+        assert!(Arc::ptr_eq(&a, &buf));
+        assert_eq!(&b[..], &[3.0]);
     }
 
     #[test]

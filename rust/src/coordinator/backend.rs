@@ -247,23 +247,37 @@ pub struct PipelineStats {
     pub template_misses: Cell<u64>,
     pub proc_reuses: Cell<u64>,
     pub proc_rebuilds: Cell<u64>,
+    /// Jobs served by patching data spans into the already-loaded
+    /// template image (no image copy, no memory reload).
+    pub image_reuses: Cell<u64>,
     /// Scheduler iterations executed across served jobs (see
     /// [`crate::empa::RunReport::events_processed`]).
     pub sim_events: Cell<u64>,
     /// Clocks the event-horizon scheduler skipped across served jobs.
     pub sim_clocks_skipped: Cell<u64>,
+    /// Decode-cache hits/misses across served jobs (host-perf; the
+    /// code-limit boundary keeps data stores from poisoning the cache).
+    pub icache_hits: Cell<u64>,
+    pub icache_misses: Cell<u64>,
 }
 
 /// One simulated EMPA processor slot, built as a **compile-once
-/// pipeline**: program jobs name a `(family, mode, params)` triple; the
-/// code template for `(family, mode, size-class)` is assembled once and
-/// cached (LRU), each request patches its data words into a copy of the
-/// cached image, and the worker's `EmpaProcessor` is *reset*, not
-/// rebuilt — cores, memory, bus and decode cache are reused across jobs.
+/// pipeline** with a zero-copy data plane: program jobs name a
+/// `(family, mode, params)` triple; the code template for
+/// `(family, mode, size-class)` is assembled once and cached (LRU); the
+/// worker's `EmpaProcessor` is *reset*, not rebuilt — cores, memory,
+/// bus and decode cache are reused across jobs. The template image is
+/// **never cloned per run**: a job of a new template reloads guest
+/// memory straight from the cached image, and consecutive jobs of the
+/// *same* template restore only the bytes the previous run dirtied,
+/// then patch just the per-request data spans (`Program::patch_mem`).
 pub struct SimBackend {
     cfg: EmpaConfig,
     templates: RefCell<TemplateCache>,
     proc: RefCell<Option<EmpaProcessor>>,
+    /// The template whose image the live processor's memory holds
+    /// (pointer identity decides full reload vs dirty-window restore).
+    live: RefCell<Option<Arc<Program>>>,
     stats: PipelineStats,
     metrics: Option<Arc<FabricMetrics>>,
 }
@@ -274,6 +288,7 @@ impl SimBackend {
             cfg,
             templates: RefCell::new(TemplateCache::new(TEMPLATE_CACHE_CAP)),
             proc: RefCell::new(None),
+            live: RefCell::new(None),
             stats: PipelineStats::default(),
             metrics: None,
         }
@@ -339,31 +354,48 @@ impl SimBackend {
         let fam = family_impl(family);
         let size_class = fam.size_class(params).map_err(FabricError::GuestFault)?;
         let tpl = self.template(family, mode, size_class)?;
-        // Patch the per-request data into a copy of the template image —
-        // byte-identical to regenerating and reassembling the source,
-        // without doing either.
-        let mut image = tpl.image.clone();
-        for (symbol, words) in fam.data_image(params).map_err(FabricError::GuestFault)? {
-            tpl.patch_into(&mut image, symbol, &words)
-                .map_err(|e| FabricError::GuestFault(e.to_string()))?;
-        }
+        let data = fam.data_image(params).map_err(FabricError::GuestFault)?;
+        // Load (or restore) the template image, then patch only the
+        // per-request data spans into the live guest memory — the
+        // result is byte-identical to regenerating, reassembling and
+        // reloading the full source, with no image clone anywhere.
         let mut guard = self.proc.borrow_mut();
+        let mut live = self.live.borrow_mut();
         if let Some(p) = guard.as_mut() {
             self.count(&self.stats.proc_reuses, |m| &m.proc_reuses);
-            p.reset_with(&image);
+            if live.as_ref().is_some_and(|l| Arc::ptr_eq(l, &tpl)) {
+                // Same template as the previous run: roll back only the
+                // dirty bytes; the decode cache stays warm.
+                self.count(&self.stats.image_reuses, |m| &m.image_reuses);
+                p.reset_reusing(&tpl.image);
+            } else {
+                p.reset_with(&tpl.image);
+                *live = Some(Arc::clone(&tpl));
+            }
         } else {
             *guard = Some(
-                EmpaProcessor::try_new(&image, &self.cfg)
+                EmpaProcessor::try_new(&tpl.image, &self.cfg)
                     .map_err(|e| FabricError::InvalidConfig(e.to_string()))?,
             );
+            *live = Some(Arc::clone(&tpl));
             self.count(&self.stats.proc_rebuilds, |m| &m.proc_rebuilds);
         }
         let proc = guard.as_mut().expect("constructed above");
+        // Data stores above the code boundary must not poison the
+        // decode cache (set before patching, so the patches themselves
+        // are invisible to it too).
+        proc.set_code_limit(tpl.code_end);
+        for (symbol, words) in data {
+            tpl.patch_mem(&mut proc.mem, symbol, &words)
+                .map_err(|e| FabricError::GuestFault(e.to_string()))?;
+        }
         let r = proc.run_report();
         // Event-horizon scheduler economics, visible as the fabric's
         // `sim engine:` metrics line.
         self.count_by(&self.stats.sim_events, r.events_processed, |m| &m.sim_events);
         self.count_by(&self.stats.sim_clocks_skipped, r.clocks_skipped, |m| &m.sim_clocks_skipped);
+        self.count_by(&self.stats.icache_hits, r.icache_hits, |m| &m.icache_hits);
+        self.count_by(&self.stats.icache_misses, r.icache_misses, |m| &m.icache_misses);
         if let Some(f) = r.fault {
             return Err(FabricError::GuestFault(f));
         }
@@ -552,6 +584,51 @@ mod tests {
     }
 
     #[test]
+    fn same_template_jobs_patch_in_place_with_a_warm_icache() {
+        let b = SimBackend::new(EmpaConfig::default());
+        let run = |values: Vec<i32>| {
+            let params = Params::Sumup { values };
+            match b
+                .execute(BackendJob::Program {
+                    family: Family::Sumup,
+                    mode: Mode::Sumup,
+                    params: &params,
+                })
+                .unwrap()
+            {
+                BackendReply::Program { eax, clocks, .. } => (eax, clocks),
+                other => panic!("program reply expected, got {other:?}"),
+            }
+        };
+        let (eax1, clocks1) = run(vec![1, 2, 3, 4]);
+        assert_eq!(eax1, 10);
+        let misses_after_first = b.pipeline_stats().icache_misses.get();
+        assert!(misses_after_first > 0, "cold cache decodes once");
+
+        // Same (family, mode, size-class): the image is *patched*, not
+        // reloaded — and the decode cache survives, so the second run
+        // re-decodes only the few boundary-band fetches (instructions
+        // within 6 bytes of `code_end` always bypass the cache).
+        let (eax2, clocks2) = run(vec![5, 6, 7, 8]);
+        assert_eq!(eax2, 26, "new data served through the patched spans");
+        assert_eq!(clocks1, clocks2, "cycle-identical to a full reload");
+        let s = b.pipeline_stats();
+        assert_eq!(s.image_reuses.get(), 1, "second job reused the loaded image");
+        let second_run_misses = s.icache_misses.get() - misses_after_first;
+        assert!(
+            second_run_misses <= 4,
+            "data patching must not invalidate cached decodes: {second_run_misses} new misses"
+        );
+        assert!(s.icache_hits.get() > 0);
+
+        // A different size-class reloads (different template) but still
+        // without cloning the image.
+        let (eax3, _) = run(vec![7; 9]);
+        assert_eq!(eax3, 63);
+        assert_eq!(s.image_reuses.get(), 1, "different template: full reload path");
+    }
+
+    #[test]
     fn sim_backend_serves_every_family_and_reads_back_memory_results() {
         let b = SimBackend::new(EmpaConfig::default());
         // dotprod
@@ -664,7 +741,10 @@ mod tests {
             class_of(&RequestKind::traces(vec![])),
             BackendClass::Program
         );
-        assert_eq!(class_of(&RequestKind::MassSum { values: vec![] }), BackendClass::Mass);
-        assert_eq!(class_of(&RequestKind::MassDot { a: vec![], b: vec![] }), BackendClass::Mass);
+        assert_eq!(class_of(&RequestKind::mass_sum(Vec::<f32>::new())), BackendClass::Mass);
+        assert_eq!(
+            class_of(&RequestKind::mass_dot(Vec::<f32>::new(), Vec::<f32>::new())),
+            BackendClass::Mass
+        );
     }
 }

@@ -58,6 +58,11 @@ pub struct FabricMetrics {
     pub split_shards: AtomicU64,
     pub accel_batches: AtomicU64,
     pub accel_rows: AtomicU64,
+    /// Bytes of row payload copied into batcher tile arenas — the **one**
+    /// copy of the batched data plane (everything else borrows shared
+    /// `Arc` operands). `tile_bytes / completed` is the throughput
+    /// bench's bytes-copied-per-job figure.
+    pub tile_bytes: AtomicU64,
     pub deadline_flushes: AtomicU64,
     /// High-priority mass jobs that forced an immediate batch flush.
     pub priority_flushes: AtomicU64,
@@ -79,6 +84,15 @@ pub struct FabricMetrics {
     /// full tick (dead-clock skips + single-core bursts), summed across
     /// served program jobs. 0 when the pool runs in lockstep.
     pub sim_clocks_skipped: AtomicU64,
+    /// Decode-cache hits across served program jobs (host-perf: the
+    /// code-limit boundary keeps guest data stores from invalidating
+    /// cached decodes).
+    pub icache_hits: AtomicU64,
+    /// Decode-cache misses across served program jobs.
+    pub icache_misses: AtomicU64,
+    /// Program jobs served by patching data spans into the worker's
+    /// already-loaded template image (no image copy, no memory reload).
+    pub image_reuses: AtomicU64,
     backends: Mutex<HashMap<String, Arc<BackendStats>>>,
     clients: Mutex<HashMap<String, Arc<AtomicU64>>>,
     workers: Mutex<Vec<Arc<WorkerStats>>>,
@@ -169,6 +183,18 @@ impl FabricMetrics {
         }
     }
 
+    /// Decode-cache hit rate across served program jobs (0 when no
+    /// fetch has been decoded).
+    pub fn icache_hit_rate(&self) -> f64 {
+        let h = self.icache_hits.load(Ordering::Relaxed);
+        let m = self.icache_misses.load(Ordering::Relaxed);
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
     /// Effective simulated clocks per scheduler iteration across all
     /// served program jobs (1.0 ≙ lockstep; higher = dead clocks
     /// skipped). 0 when no program job has been simulated.
@@ -188,7 +214,7 @@ impl FabricMetrics {
         let mut out = format!(
             "submitted={} completed={} errors={} rejected={} cancelled={} deadline_missed={} \
              | sim={} inline={} accel={} split={} (mean {:.1} shards) \
-             | batches={} rows={} (mean {:.1}/batch, {} deadline, {} priority) failovers={}",
+             | batches={} rows={} tile_bytes={} (mean {:.1}/batch, {} deadline, {} priority) failovers={}",
             g(&self.submitted),
             g(&self.completed),
             g(&self.errors),
@@ -202,6 +228,7 @@ impl FabricMetrics {
             self.mean_split_shards(),
             g(&self.accel_batches),
             g(&self.accel_rows),
+            g(&self.tile_bytes),
             self.mean_batch_rows(),
             g(&self.deadline_flushes),
             g(&self.priority_flushes),
@@ -209,20 +236,24 @@ impl FabricMetrics {
         );
         if g(&self.template_hits) + g(&self.template_misses) > 0 {
             out.push_str(&format!(
-                "\n  program pipeline: template hits={} misses={} ({:.0}% hit) proc reuses={} rebuilds={}",
+                "\n  program pipeline: template hits={} misses={} ({:.0}% hit) proc reuses={} rebuilds={} image reuses={}",
                 g(&self.template_hits),
                 g(&self.template_misses),
                 100.0 * self.template_hit_rate(),
                 g(&self.proc_reuses),
                 g(&self.proc_rebuilds),
+                g(&self.image_reuses),
             ));
         }
         if g(&self.sim_events) > 0 {
             out.push_str(&format!(
-                "\n  sim engine: events={} clocks_skipped={} ({:.1} clocks/event)",
+                "\n  sim engine: events={} clocks_skipped={} ({:.1} clocks/event) icache hits={} misses={} ({:.0}% hit)",
                 g(&self.sim_events),
                 g(&self.sim_clocks_skipped),
                 self.sim_clocks_per_event(),
+                g(&self.icache_hits),
+                g(&self.icache_misses),
+                100.0 * self.icache_hit_rate(),
             ));
         }
         {
@@ -347,6 +378,23 @@ mod tests {
         assert_eq!(m.sim_clocks_per_event(), 10.0);
         let r = m.render();
         assert!(r.contains("sim engine: events=4 clocks_skipped=36 (10.0 clocks/event)"), "{r}");
+    }
+
+    #[test]
+    fn icache_and_tile_counters_render() {
+        let m = FabricMetrics::default();
+        assert_eq!(m.icache_hit_rate(), 0.0);
+        m.sim_events.store(1, Ordering::Relaxed);
+        m.icache_hits.store(9, Ordering::Relaxed);
+        m.icache_misses.store(1, Ordering::Relaxed);
+        m.image_reuses.store(2, Ordering::Relaxed);
+        m.template_hits.store(1, Ordering::Relaxed);
+        m.tile_bytes.store(4096, Ordering::Relaxed);
+        assert_eq!(m.icache_hit_rate(), 0.9);
+        let r = m.render();
+        assert!(r.contains("icache hits=9 misses=1 (90% hit)"), "{r}");
+        assert!(r.contains("image reuses=2"), "{r}");
+        assert!(r.contains("tile_bytes=4096"), "{r}");
     }
 
     #[test]

@@ -56,7 +56,7 @@ pub use dispatch::DispatchPlane;
 pub use metrics::{BackendStats, FabricMetrics, WorkerStats};
 pub use router::RoutePolicy;
 
-use crate::accel::{batch::PendingRow, Batcher, BatcherConfig, MassOp, MassRequest, MassResult};
+use crate::accel::{Batch, Batcher, BatcherConfig, MassOp, MassRequest, MassResult, TilePool};
 use crate::empa::EmpaConfig;
 use crate::workload::Request;
 use std::collections::{BinaryHeap, HashMap};
@@ -112,15 +112,18 @@ pub enum Response {
 
 #[allow(deprecated)]
 impl Response {
-    /// Flatten a typed job result into the legacy shape.
+    /// Flatten a typed job result into the legacy shape. The modern
+    /// `Output` borrows from shared `Arc` buffers; this shim is the one
+    /// place the data plane materialises owned `Vec`s — legacy callers
+    /// pay the conversion at the boundary, the serving path never does.
     pub fn from_result(res: &JobResult) -> Response {
         match res {
             Ok(c) => match &c.output {
                 Output::Program { eax, clocks, cores, data: _ } => {
                     Response::Program { eax: *eax, clocks: *clocks, cores: *cores }
                 }
-                Output::Scalars(v) => Response::Scalars(v.clone()),
-                Output::Rows(r) => Response::Rows(r.clone()),
+                Output::Scalars(v) => Response::Scalars(v.to_vec()),
+                Output::Rows(r) => Response::Rows(r.iter().map(|row| row.to_vec()).collect()),
             },
             Err(e) => Response::Error(e.to_string()),
         }
@@ -223,14 +226,15 @@ pub(crate) struct ShardTask {
     hi: usize,
 }
 
-/// Parent-side accumulator for a scattered mass op: it owns the operand
-/// vectors, shards add the partial result of their slice, and the last
-/// one to land completes the job (the §5.2 SUMUP engine's merge step,
-/// lifted to the service layer).
+/// Parent-side accumulator for a scattered mass op: it holds the
+/// *submitted* operand buffers (shared `Arc`s — the scatter moves the
+/// client's allocation here, no copy), shards add the partial result of
+/// their slice, and the last one to land completes the job (the §5.2
+/// SUMUP engine's merge step, lifted to the service layer).
 pub(crate) struct ShardGather {
-    a: Vec<f32>,
+    a: Arc<[f32]>,
     /// Second operand (dot only); slicing is bounded by the shorter side.
-    b: Option<Vec<f32>>,
+    b: Option<Arc<[f32]>>,
     ctx: Mutex<Option<JobCtx>>,
     sum: Mutex<f64>,
     /// Sticky cancel/deadline verdict (see [`ShardGather::check_dead`]).
@@ -295,7 +299,7 @@ impl ShardGather {
         let total = *self.sum.lock().unwrap() as f32;
         ctx.complete(
             metrics,
-            Output::Scalars(vec![total]),
+            Output::Scalars(vec![total].into()),
             Route::Split,
             backend,
             1,
@@ -310,7 +314,7 @@ struct MassJob {
 }
 
 enum AccelMsg {
-    Batch { op: MassOp, rows: Vec<PendingRow<MassJob>>, scale_bias: [f32; 2] },
+    Batch { op: MassOp, batch: Batch<MassJob>, scale_bias: [f32; 2] },
 }
 
 /// Program job parked in the supervisor's overflow heap, ordered by
@@ -647,7 +651,8 @@ impl Supervisor {
     }
 
     /// Stage a mass op on its per-op batcher, flushing on size (or
-    /// immediately for High priority).
+    /// immediately for High priority). The operand `Arc`s move into the
+    /// batcher as-is — staging copies nothing.
     fn enqueue_accel(&mut self, kind: RequestKind, ctx: JobCtx) {
         let high = ctx.priority == Priority::High;
         let (op, row, row2) = match kind {
@@ -661,8 +666,8 @@ impl Supervisor {
                 .batchers
                 .entry(op)
                 .or_insert_with(|| Batcher::new(self.cfg.batcher.clone()));
-            if let Some(rows) = b.push(MassJob { ctx }, row, row2, Instant::now()) {
-                Some(rows)
+            if let Some(batch) = b.push(MassJob { ctx }, row, row2, Instant::now()) {
+                Some(batch)
             } else if high {
                 // High priority refuses to wait out the batch window:
                 // take whatever is pending now.
@@ -672,20 +677,21 @@ impl Supervisor {
                 None
             }
         };
-        if let Some(rows) = flushed {
+        if let Some(batch) = flushed {
             if priority_flush {
                 self.metrics.priority_flushes.fetch_add(1, Relaxed);
             }
-            self.flush(op, rows);
+            self.flush(op, batch);
         }
     }
 
     /// Scatter an oversized mass op into contiguous shards across the
     /// dispatch plane — the supervisor "using the help of" neighbouring
-    /// cores. The fan-out is sized by the lanes actually idle, and each
-    /// shard is an `Arc` clone plus a range: one allocation per control
-    /// tick (§4.1.3), no payload copies. The gather side lives in
-    /// [`ShardGather`].
+    /// cores. The submitted operand buffers move into the gather whole
+    /// (they are already shared `Arc`s), the fan-out is sized by the
+    /// lanes actually idle, and each shard is an `Arc` clone plus a
+    /// range: one allocation per control tick (§4.1.3), zero payload
+    /// copies. The gather side lives in [`ShardGather`].
     fn scatter(&self, kind: RequestKind, ctx: JobCtx) {
         let (a, b) = match kind {
             RequestKind::MassSum { values } => (values, None),
@@ -728,22 +734,24 @@ impl Supervisor {
         }
     }
 
-    fn flush(&self, op: MassOp, rows: Vec<PendingRow<MassJob>>) {
-        let _ = self.acc_tx.send(AccelMsg::Batch { op, rows, scale_bias: [0.0; 2] });
+    fn flush(&self, op: MassOp, batch: Batch<MassJob>) {
+        // Zero-copy handoff: the batch carries the submitters' operand
+        // handles; the mass worker builds the flat tiles post-admission.
+        let _ = self.acc_tx.send(AccelMsg::Batch { op, batch, scale_bias: [0.0; 2] });
     }
 
     /// Deadline flushes (they are due).
     fn poll_batchers(&mut self) {
         let now = Instant::now();
-        let mut due: Vec<(MassOp, Vec<PendingRow<MassJob>>)> = Vec::new();
+        let mut due: Vec<(MassOp, Batch<MassJob>)> = Vec::new();
         for (op, b) in self.batchers.iter_mut() {
-            if let Some(rows) = b.poll(now) {
-                due.push((*op, rows));
+            if let Some(batch) = b.poll(now) {
+                due.push((*op, batch));
             }
         }
-        for (op, rows) in due {
+        for (op, batch) in due {
             self.metrics.deadline_flushes.fetch_add(1, Relaxed);
-            self.flush(op, rows);
+            self.flush(op, batch);
         }
     }
 
@@ -760,24 +768,31 @@ impl Supervisor {
         }
         let batchers = std::mem::take(&mut self.batchers);
         for (op, mut b) in batchers {
-            if let Some(rows) = b.drain() {
-                self.flush(op, rows);
+            if let Some(batch) = b.drain() {
+                self.flush(op, batch);
             }
         }
         self.plane.close();
     }
 }
 
+/// Compute a mass op directly over the submitted (shared) operand
+/// buffers — the inline lane, and the sim pool's defensive whole-op
+/// path. Borrows; never copies.
 fn inline_mass(kind: &RequestKind) -> Result<Output, FabricError> {
     match kind {
-        RequestKind::MassSum { values } => Ok(Output::Scalars(vec![values.iter().sum()])),
+        RequestKind::MassSum { values } => {
+            Ok(Output::Scalars(vec![values.iter().sum()].into()))
+        }
         RequestKind::MassDot { a, b } => {
             // Submission validation rejects mismatches; never let one
             // that slips through zip-truncate into a wrong answer.
             if a.len() != b.len() {
                 return Err(FabricError::ShapeMismatch { a: a.len(), b: b.len() });
             }
-            Ok(Output::Scalars(vec![a.iter().zip(b).map(|(x, y)| x * y).sum()]))
+            Ok(Output::Scalars(
+                vec![a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()].into(),
+            ))
         }
         RequestKind::RunProgram { .. } => Err(FabricError::Backend {
             name: "inline".into(),
@@ -822,14 +837,6 @@ fn instantiate_chain(
     }))
 }
 
-fn single_row_output(res: MassResult) -> Output {
-    match res {
-        MassResult::Scalars(v) => Output::Scalars(v),
-        MassResult::Rows(r) => Output::Rows(r),
-        MassResult::Stats { sum, .. } => Output::Scalars(sum),
-    }
-}
-
 /// One sim worker: pops its own deque on the dispatch plane, steals from
 /// neighbours when idle, and serves program jobs and mass-op shards on
 /// its thread-owned backend. A panicking backend must not kill the
@@ -872,6 +879,28 @@ fn serve_sim_task(
             }
             wstats.executed.fetch_add(1, Relaxed);
             let dispatched = Instant::now();
+            // Mass jobs are not routed here, but a sim slot can still
+            // serve one — a conventional core doing the arithmetic,
+            // borrowing the submitted buffers in place (no request
+            // rebuild, no operand clone).
+            if matches!(kind, RequestKind::MassSum { .. } | RequestKind::MassDot { .. }) {
+                let name = active.as_ref().map(|b| b.name()).unwrap_or("sim-pool");
+                match inline_mass(&kind) {
+                    Ok(out) => {
+                        if let Some(s) = stats {
+                            s.jobs.fetch_add(1, Relaxed);
+                        }
+                        ctx.complete(metrics, out, Route::Simulator, name, 1, 1, dispatched);
+                    }
+                    Err(e) => {
+                        if let Some(s) = stats {
+                            s.errors.fetch_add(1, Relaxed);
+                        }
+                        ctx.fail(metrics, e);
+                    }
+                }
+                return;
+            }
             let backend = match active {
                 Ok(b) => b,
                 Err(e) => {
@@ -884,16 +913,8 @@ fn serve_sim_task(
                 RequestKind::RunProgram { family, mode, params } => {
                     backend.execute(BackendJob::Program { family: *family, mode: *mode, params })
                 }
-                // Mass jobs are not routed here, but a sim slot can
-                // still serve one (a conventional core doing the
-                // mass op).
-                RequestKind::MassSum { values } => {
-                    let req = MassRequest::sumup(vec![values.clone()]);
-                    backend.execute(BackendJob::Mass(&req))
-                }
-                RequestKind::MassDot { a, b } => {
-                    let req = MassRequest::dot(vec![a.clone()], vec![b.clone()]);
-                    backend.execute(BackendJob::Mass(&req))
+                RequestKind::MassSum { .. } | RequestKind::MassDot { .. } => {
+                    unreachable!("mass ops served above")
                 }
             };
             match reply {
@@ -909,16 +930,14 @@ fn serve_sim_task(
                         dispatched,
                     );
                 }
-                Ok(BackendReply::Mass(res)) => {
-                    stats.jobs.fetch_add(1, Relaxed);
-                    ctx.complete(
+                Ok(BackendReply::Mass(_)) => {
+                    stats.errors.fetch_add(1, Relaxed);
+                    ctx.fail(
                         metrics,
-                        single_row_output(res),
-                        Route::Simulator,
-                        backend.name(),
-                        1,
-                        1,
-                        dispatched,
+                        FabricError::Backend {
+                            name: backend.name().to_string(),
+                            msg: "program request answered with a mass reply".into(),
+                        },
                     );
                 }
                 Err(e) => {
@@ -1049,27 +1068,31 @@ impl MassChain {
 
 fn mass_worker(rx: Receiver<AccelMsg>, chain: Vec<Arc<BackendEntry>>, metrics: Arc<FabricMetrics>) {
     let mut exec = MassChain::new(chain);
-    while let Ok(AccelMsg::Batch { op, rows, scale_bias }) = rx.recv() {
-        // Admission per row: cancelled/expired jobs resolve here instead
-        // of padding the accelerator batch. Rows move into the request
-        // (no copies on the hot path); contexts stay behind for replies.
-        let mut ctxs = Vec::with_capacity(rows.len());
-        let mut batch_rows = Vec::with_capacity(rows.len());
-        let mut batch_rows2 = Vec::new();
-        for p in rows {
-            if !p.tag.ctx.admit(&metrics) {
-                continue;
-            }
-            batch_rows.push(p.row);
-            if let Some(r2) = p.row2 {
-                batch_rows2.push(r2);
-            }
-            ctxs.push(p.tag.ctx);
+    // The tile arena lives with the one thread that builds and frees
+    // tiles; buffers recycle across batches (grown, never shrunk).
+    let pool = TilePool::default();
+    while let Ok(AccelMsg::Batch { op, mut batch, scale_bias }) = rx.recv() {
+        // Admission per row: cancelled/expired jobs resolve here, before
+        // any copy — dead rows are never tiled at all.
+        let keep: Vec<bool> = batch.tags.iter().map(|t| t.ctx.admit(&metrics)).collect();
+        if keep.iter().any(|&k| !k) {
+            batch.retain(&keep);
         }
-        if ctxs.is_empty() {
+        if batch.is_empty() {
             continue;
         }
-        let req = MassRequest { op, rows: batch_rows, rows2: batch_rows2, scale_bias };
+        let Batch { tags, rows, rows2 } = batch;
+        let ctxs: Vec<JobCtx> = tags.into_iter().map(|t| t.ctx).collect();
+        // Build the flat tiles — the batched path's single copy, into
+        // recycled arena buffers — and account it for the throughput
+        // bench's bytes-copied-per-job figure.
+        let tile = crate::accel::Tile::build(&rows, pool.take());
+        let tile2 = (!rows2.is_empty()).then(|| crate::accel::Tile::build(&rows2, pool.take()));
+        let bytes = tile.filled_bytes() + tile2.as_ref().map_or(0, |t| t.filled_bytes());
+        metrics.tile_bytes.fetch_add(bytes, Relaxed);
+        // The request shares the submitted buffers (identity preserved
+        // for the chain) and carries the arena tiles for flat execution.
+        let req = MassRequest { op, rows, rows2, scale_bias, tile: Some(tile), tile2 };
         let dispatched = Instant::now();
         let n = ctxs.len();
         match exec.run(&req, &metrics) {
@@ -1089,6 +1112,7 @@ fn mass_worker(rx: Receiver<AccelMsg>, chain: Vec<Arc<BackendEntry>>, metrics: A
                     for ctx in ctxs {
                         ctx.fail(&metrics, err.clone());
                     }
+                    req.recycle(&pool);
                     continue;
                 }
                 metrics.accel_batches.fetch_add(1, Relaxed);
@@ -1098,7 +1122,7 @@ fn mass_worker(rx: Receiver<AccelMsg>, chain: Vec<Arc<BackendEntry>>, metrics: A
                         for (ctx, v) in ctxs.into_iter().zip(vals) {
                             ctx.complete(
                                 &metrics,
-                                Output::Scalars(vec![v]),
+                                Output::Scalars(vec![v].into()),
                                 Route::Accelerator,
                                 &name,
                                 n,
@@ -1111,7 +1135,7 @@ fn mass_worker(rx: Receiver<AccelMsg>, chain: Vec<Arc<BackendEntry>>, metrics: A
                         for (ctx, r) in ctxs.into_iter().zip(out) {
                             ctx.complete(
                                 &metrics,
-                                Output::Rows(vec![r]),
+                                Output::Rows(vec![r.into()]),
                                 Route::Accelerator,
                                 &name,
                                 n,
@@ -1124,7 +1148,7 @@ fn mass_worker(rx: Receiver<AccelMsg>, chain: Vec<Arc<BackendEntry>>, metrics: A
                         for (ctx, v) in ctxs.into_iter().zip(sum) {
                             ctx.complete(
                                 &metrics,
-                                Output::Scalars(vec![v]),
+                                Output::Scalars(vec![v].into()),
                                 Route::Accelerator,
                                 &name,
                                 n,
@@ -1134,11 +1158,13 @@ fn mass_worker(rx: Receiver<AccelMsg>, chain: Vec<Arc<BackendEntry>>, metrics: A
                         }
                     }
                 }
+                req.recycle(&pool);
             }
             Err(e) => {
                 for ctx in ctxs {
                     ctx.fail(&metrics, e.clone());
                 }
+                req.recycle(&pool);
             }
         }
     }
@@ -1177,11 +1203,11 @@ mod tests {
     fn mass_ops_batched_and_answered() {
         let f = small_fabric();
         let hs: Vec<Job> = (0..8)
-            .map(|i| f.submit(RequestKind::MassSum { values: vec![i as f32; 200] }).unwrap())
+            .map(|i| f.submit(RequestKind::mass_sum(vec![i as f32; 200])).unwrap())
             .collect();
         for (i, h) in hs.into_iter().enumerate() {
             let c = h.wait().unwrap();
-            assert_eq!(c.output, Output::Scalars(vec![(i * 200) as f32]));
+            assert_eq!(c.output, Output::Scalars(vec![(i * 200) as f32].into()));
             assert_eq!(c.route, Route::Accelerator);
             assert_eq!(c.backend, "native");
             assert!(c.batch_rows >= 1);
@@ -1193,9 +1219,9 @@ mod tests {
     #[test]
     fn small_mass_ops_computed_inline() {
         let f = small_fabric();
-        let h = f.submit(RequestKind::MassSum { values: vec![1.0, 2.0] }).unwrap();
+        let h = f.submit(RequestKind::mass_sum(vec![1.0, 2.0])).unwrap();
         let c = h.wait().unwrap();
-        assert_eq!(c.output, Output::Scalars(vec![3.0]));
+        assert_eq!(c.output, Output::Scalars(vec![3.0].into()));
         assert_eq!((c.route, c.backend.as_str(), c.batch_rows), (Route::Inline, "inline", 1));
         assert_eq!(f.metrics.routed_inline.load(Relaxed), 1);
         assert_eq!(f.metrics.routed_accel.load(Relaxed), 0);
@@ -1207,10 +1233,10 @@ mod tests {
         // 3 rows < max_rows=4: only the deadline can flush them.
         let f = small_fabric();
         let hs: Vec<Job> = (0..3)
-            .map(|_| f.submit(RequestKind::MassSum { values: vec![1.0; 128] }).unwrap())
+            .map(|_| f.submit(RequestKind::mass_sum(vec![1.0; 128])).unwrap())
             .collect();
         for h in hs {
-            assert_eq!(h.wait().unwrap().output, Output::Scalars(vec![128.0]));
+            assert_eq!(h.wait().unwrap().output, Output::Scalars(vec![128.0].into()));
         }
         f.shutdown();
     }
@@ -1239,11 +1265,11 @@ mod tests {
             ..Default::default()
         };
         let f = Fabric::start_local(cfg);
-        let req = JobRequest::new(RequestKind::MassSum { values: vec![2.0; 128] })
+        let req = JobRequest::new(RequestKind::mass_sum(vec![2.0; 128]))
             .with_priority(Priority::High);
         let h = f.submit(req).unwrap();
         let c = h.wait().unwrap();
-        assert_eq!(c.output, Output::Scalars(vec![256.0]));
+        assert_eq!(c.output, Output::Scalars(vec![256.0].into()));
         assert_eq!(f.metrics.priority_flushes.load(Relaxed), 1);
         f.shutdown();
     }
@@ -1252,7 +1278,7 @@ mod tests {
     fn submit_after_shutdown_is_a_typed_error() {
         let f = small_fabric();
         f.shutdown();
-        let err = f.submit(RequestKind::MassSum { values: vec![1.0] }).unwrap_err();
+        let err = f.submit(RequestKind::mass_sum(vec![1.0])).unwrap_err();
         assert_eq!(err, FabricError::Shutdown);
         // run_trace propagates instead of panicking
         let trace = crate::workload::TraceGen::new(crate::workload::TraceConfig {
@@ -1273,7 +1299,7 @@ mod tests {
         let f = Fabric::start_local(cfg);
         let vals: Vec<f32> = (0..1024).map(|i| (i % 7) as f32 * 0.25).collect();
         let want: f32 = vals.iter().sum();
-        let h = f.submit(RequestKind::MassSum { values: vals }).unwrap();
+        let h = f.submit(RequestKind::mass_sum(vals)).unwrap();
         let c = h.wait().unwrap();
         assert_eq!(c.route, Route::Split);
         assert!(c.shards >= 2 && c.shards <= 4, "fan-out: {}", c.shards);
@@ -1301,7 +1327,7 @@ mod tests {
             reply: tx,
         };
         let gather = Arc::new(ShardGather {
-            a: vec![1.0; 8],
+            a: vec![1.0; 8].into(),
             b: None,
             ctx: Mutex::new(Some(ctx)),
             sum: Mutex::new(0.0),
@@ -1320,10 +1346,27 @@ mod tests {
     }
 
     #[test]
+    fn inline_mass_borrows_the_submitted_allocation() {
+        // The inline lane computes straight over the client's buffer:
+        // the request still holds the only other handle afterwards — no
+        // hidden clones anywhere on the path.
+        let buf: Arc<[f32]> = vec![1.0, 2.0, 3.0].into();
+        let kind = RequestKind::MassSum { values: Arc::clone(&buf) };
+        assert_eq!(inline_mass(&kind).unwrap(), Output::Scalars(vec![6.0].into()));
+        assert_eq!(Arc::strong_count(&buf), 2, "no copies of the operand exist");
+        let b: Arc<[f32]> = vec![4.0, 5.0, 6.0].into();
+        let kind = RequestKind::MassDot { a: Arc::clone(&buf), b: Arc::clone(&b) };
+        assert_eq!(inline_mass(&kind).unwrap(), Output::Scalars(vec![32.0].into()));
+        assert_eq!(Arc::strong_count(&buf), 2);
+        drop(kind);
+        assert_eq!(Arc::strong_count(&buf), 1);
+    }
+
+    #[test]
     #[allow(deprecated)]
     fn legacy_response_shim_flattens_results() {
         let ok: JobResult = Ok(Completion {
-            output: Output::Scalars(vec![1.0]),
+            output: Output::Scalars(vec![1.0].into()),
             route: Route::Inline,
             backend: "inline".into(),
             batch_rows: 1,

@@ -69,14 +69,14 @@ mod tests {
     #[test]
     fn threshold_splits_mass_ops() {
         let p = RoutePolicy { accel_min_len: 10, ..Default::default() };
-        assert_eq!(route(&RequestKind::MassSum { values: vec![0.0; 9] }, &p), Route::Inline);
-        assert_eq!(route(&RequestKind::MassSum { values: vec![0.0; 10] }, &p), Route::Accelerator);
+        assert_eq!(route(&RequestKind::mass_sum(vec![0.0; 9]), &p), Route::Inline);
+        assert_eq!(route(&RequestKind::mass_sum(vec![0.0; 10]), &p), Route::Accelerator);
         assert_eq!(
-            route(&RequestKind::MassDot { a: vec![0.0; 10], b: vec![0.0; 10] }, &p),
+            route(&RequestKind::mass_dot(vec![0.0; 10], vec![0.0; 10]), &p),
             Route::Accelerator
         );
         assert_eq!(
-            route(&RequestKind::MassDot { a: vec![0.0; 2], b: vec![0.0; 2] }, &p),
+            route(&RequestKind::mass_dot(vec![0.0; 2], vec![0.0; 2]), &p),
             Route::Inline
         );
     }
@@ -84,10 +84,10 @@ mod tests {
     #[test]
     fn oversized_mass_ops_route_to_split() {
         let p = RoutePolicy { accel_min_len: 10, split_min_len: 100 };
-        assert_eq!(route(&RequestKind::MassSum { values: vec![0.0; 99] }, &p), Route::Accelerator);
-        assert_eq!(route(&RequestKind::MassSum { values: vec![0.0; 100] }, &p), Route::Split);
+        assert_eq!(route(&RequestKind::mass_sum(vec![0.0; 99]), &p), Route::Accelerator);
+        assert_eq!(route(&RequestKind::mass_sum(vec![0.0; 100]), &p), Route::Split);
         assert_eq!(
-            route(&RequestKind::MassDot { a: vec![0.0; 256], b: vec![0.0; 256] }, &p),
+            route(&RequestKind::mass_dot(vec![0.0; 256], vec![0.0; 256]), &p),
             Route::Split
         );
     }
@@ -98,7 +98,7 @@ mod tests {
         // never let the long side widen the lane.
         let p = RoutePolicy { accel_min_len: 10, split_min_len: 100 };
         assert_eq!(
-            route(&RequestKind::MassDot { a: vec![0.0; 500], b: vec![0.0; 4] }, &p),
+            route(&RequestKind::mass_dot(vec![0.0; 500], vec![0.0; 4]), &p),
             Route::Inline
         );
     }

@@ -146,6 +146,11 @@ pub struct RunReport {
     /// lockstep mode; `events_processed + clocks_skipped` is the total
     /// clock advance.
     pub clocks_skipped: u64,
+    /// Fetches served from the decoded-instruction cache (host-perf
+    /// observability; modeled clocks are unaffected either way).
+    pub icache_hits: u64,
+    /// Fetches that had to decode from memory bytes.
+    pub icache_misses: u64,
     /// Simulation-level fault (runaway, child halt, invalid meta use).
     pub fault: Option<String>,
     /// Event trace, when enabled.
@@ -212,6 +217,9 @@ pub struct EmpaProcessor {
     events_processed: u64,
     /// Clocks advanced without a full tick (skips + bursts).
     clocks_skipped: u64,
+    /// Decode-cache hits/misses (see [`EmpaProcessor::decode_cached`]).
+    icache_hits: u64,
+    icache_misses: u64,
     /// Event-horizon bound for external drivers (interrupt raisers): the
     /// scheduler never skips past this clock, so a driver acting "at
     /// clock T" observes `clock == T` exactly as it would in lockstep.
@@ -258,6 +266,8 @@ impl EmpaProcessor {
             step_mode: cfg.step,
             events_processed: 0,
             clocks_skipped: 0,
+            icache_hits: 0,
+            icache_misses: 0,
             external_wake_at: None,
         };
         p.trace.push(0, 0, Event::Rent { parent: None });
@@ -309,6 +319,8 @@ impl EmpaProcessor {
             sv_ops: self.sv.ops,
             events_processed: self.events_processed,
             clocks_skipped: self.clocks_skipped,
+            icache_hits: self.icache_hits,
+            icache_misses: self.icache_misses,
             fault: self.fault.clone(),
             trace,
         }
@@ -324,6 +336,31 @@ impl EmpaProcessor {
     /// so entries from the previous program can never validate.
     pub fn reset_with(&mut self, image: &[u8]) {
         self.mem.reload(image, self.mem_size);
+        self.reset_state();
+    }
+
+    /// Reset for a new run of the **same** image the memory was last
+    /// loaded with: instead of copying the whole image back in, only the
+    /// bytes the previous run wrote (the memory's dirty window) are
+    /// restored — the fabric's program pipeline calls this when a worker
+    /// serves consecutive requests of one cached template, then patches
+    /// just the data spans. Observationally identical to
+    /// [`EmpaProcessor::reset_with`] of the same image; cached decodes
+    /// stay valid when the previous run only wrote data (see
+    /// [`crate::mem::Memory::restore_from`]).
+    pub fn reset_reusing(&mut self, image: &[u8]) {
+        self.mem.restore_from(image, self.mem_size);
+        self.reset_state();
+    }
+
+    /// Forward the program's code/data boundary to the memory's decode
+    /// cache versioning (see [`crate::mem::Memory::set_code_limit`]).
+    pub fn set_code_limit(&mut self, limit: u32) {
+        self.mem.set_code_limit(limit);
+    }
+
+    /// Everything [`EmpaProcessor::reset_with`] resets besides memory.
+    fn reset_state(&mut self) {
         self.bus.reset();
         self.sv.reset();
         for c in &mut self.cores {
@@ -344,6 +381,8 @@ impl EmpaProcessor {
         self.halt_at = 0;
         self.events_processed = 0;
         self.clocks_skipped = 0;
+        self.icache_hits = 0;
+        self.icache_misses = 0;
         self.external_wake_at = None;
         self.trace.push(0, 0, Event::Rent { parent: None });
     }
@@ -722,15 +761,28 @@ impl EmpaProcessor {
 
     /// Decode through the direct-mapped cache. An entry hits only when
     /// both its pc and its full memory version match — a wrapped or
-    /// truncated version can never validate a stale entry.
+    /// truncated version can never validate a stale entry. Fetches whose
+    /// 6-byte decode window could reach the *data region* (at or above
+    /// the code limit) bypass the cache entirely: writes there no longer
+    /// bump the version, so both a guest that executes from its data
+    /// segment and an instruction whose operand bytes straddle the
+    /// boundary must always decode the live bytes. Cached entries thus
+    /// only ever cover windows fully below the limit, where every write
+    /// is version-visible.
     #[inline]
     fn decode_cached(&mut self, pc: u32) -> Option<Insn> {
+        if pc >= self.mem.code_limit().saturating_sub(5) {
+            self.icache_misses += 1;
+            return Insn::decode(self.mem.fetch_window(pc)).map(|(i, _len)| i);
+        }
         let version = self.mem.version();
         let slot = (pc as usize) & (self.icache.len() - 1);
         let (cpc, cver, insn) = self.icache[slot];
         if cpc == pc && cver == version {
+            self.icache_hits += 1;
             return Some(insn);
         }
+        self.icache_misses += 1;
         let (insn, _len) = Insn::decode(self.mem.fetch_window(pc))?;
         self.icache[slot] = (pc, version, insn);
         Some(insn)
@@ -1213,9 +1265,132 @@ mod tests {
     fn icache_still_hits_on_unchanged_memory() {
         let mut p = EmpaProcessor::new(&[0x00], &EmpaConfig::default());
         assert_eq!(p.decode_cached(0), Some(Insn::Halt));
-        // same pc, same version: served from the cache (observable only
-        // as "still correct", the counter-free cache has no stats)
+        assert_eq!((p.icache_hits, p.icache_misses), (0, 1));
         assert_eq!(p.decode_cached(0), Some(Insn::Halt));
+        assert_eq!((p.icache_hits, p.icache_misses), (1, 1), "second fetch hits");
+    }
+
+    /// A guest loop that stores every iteration. Without a code limit
+    /// every store bumps the version and poisons the whole decode cache;
+    /// with the limit set at the program's code extent the loop body
+    /// stays cached.
+    fn store_heavy_loop() -> crate::isa::Program {
+        let src = "    irmovl $64, %edx
+    irmovl buf, %ecx
+Loop:
+    rmmovl %edx, (%ecx)
+    irmovl $-1, %edi
+    addl %edi, %edx
+    jne Loop
+    halt
+    .align 4
+buf:
+    .long 0
+";
+        assemble(src).unwrap()
+    }
+
+    #[test]
+    fn store_heavy_loops_still_hit_the_icache_with_a_code_limit() {
+        let prog = store_heavy_loop();
+        let cfg = EmpaConfig::default();
+
+        // Without the boundary: every store invalidates, ~every fetch
+        // misses (the perf bug this PR fixes).
+        let mut poisoned = EmpaProcessor::new(&prog.image, &cfg);
+        let rp = poisoned.run_report();
+        assert_eq!(rp.fault, None);
+        assert!(
+            rp.icache_misses > rp.icache_hits,
+            "unbounded versioning decodes on (almost) every fetch: {} hits / {} misses",
+            rp.icache_hits,
+            rp.icache_misses
+        );
+
+        // With the boundary: after the first lap the loop body is
+        // entirely cached — misses stay at the handful of distinct PCs.
+        let mut fixed = EmpaProcessor::new(&prog.image, &cfg);
+        fixed.set_code_limit(prog.code_end);
+        let rf = fixed.run_report();
+        assert_eq!(rf.fault, None);
+        assert_eq!((rf.clocks, rf.regs.file), (rp.clocks, rp.regs.file), "host-only change");
+        assert!(
+            rf.icache_misses <= 8,
+            "store-heavy loop must decode each pc once: {} misses",
+            rf.icache_misses
+        );
+        assert!(rf.icache_hits > 4 * rf.icache_misses, "{rf:?}");
+    }
+
+    #[test]
+    fn data_region_fetches_always_decode_live_bytes() {
+        // Writes at or above the code limit do not bump the version, so
+        // a guest that stores instruction bytes into its data segment
+        // and executes them must bypass the cache, not hit a stale entry.
+        let mut p = EmpaProcessor::new(&[0x00], &EmpaConfig::default());
+        p.set_code_limit(0); // the whole address space is "data"
+        assert_eq!(p.decode_cached(0), Some(Insn::Halt));
+        p.mem.write_u32(0, 0x1010_1010).unwrap(); // no version bump
+        assert_eq!(p.decode_cached(0), Some(Insn::Nop), "live bytes, not a stale decode");
+        assert_eq!(p.icache_hits, 0, "data-region fetches never hit the cache");
+    }
+
+    #[test]
+    fn self_modifying_code_still_invalidates_below_the_code_limit() {
+        // pc 0 sits well below the boundary's 6-byte guard band, so the
+        // fetch genuinely goes through the cache — the store must
+        // invalidate via the version, not via a bypass.
+        let mut p = EmpaProcessor::new(&[0x00; 16], &EmpaConfig::default());
+        p.set_code_limit(16);
+        assert_eq!(p.decode_cached(0), Some(Insn::Halt));
+        assert_eq!(p.decode_cached(0), Some(Insn::Halt));
+        assert_eq!((p.icache_hits, p.icache_misses), (1, 1), "cached path exercised");
+        p.mem.write_u32(0, 0x1010_1010).unwrap(); // overwrite with nops
+        assert_eq!(p.decode_cached(0), Some(Insn::Nop), "code store invalidates");
+    }
+
+    #[test]
+    fn boundary_straddling_fetches_bypass_the_cache() {
+        // An instruction at pc >= code_limit - 5 could decode operand
+        // bytes from the data region, whose writes are version-invisible
+        // — such fetches must re-decode live bytes every time.
+        let mut p = EmpaProcessor::new(&[0x10; 16], &EmpaConfig::default());
+        p.set_code_limit(8);
+        assert_eq!(p.decode_cached(3), Some(Insn::Nop), "pc 3 straddles: bypass");
+        assert_eq!(p.decode_cached(3), Some(Insn::Nop));
+        assert_eq!(p.icache_hits, 0, "straddling fetches never hit");
+        assert_eq!(p.decode_cached(2), Some(Insn::Nop), "pc 2's window ends at 8: cached");
+        assert_eq!(p.decode_cached(2), Some(Insn::Nop));
+        assert_eq!(p.icache_hits, 1);
+    }
+
+    #[test]
+    fn reset_reusing_is_cycle_identical_and_keeps_the_icache_warm() {
+        let cfg = EmpaConfig::default();
+        let prog = store_heavy_loop();
+        let mut p = EmpaProcessor::new(&prog.image, &cfg);
+        p.set_code_limit(prog.code_end);
+        let r1 = p.run_report();
+        assert_eq!(r1.fault, None);
+
+        p.reset_reusing(&prog.image);
+        let r2 = p.run_report();
+        assert_eq!(r2.fault, None);
+        assert_eq!(r1.clocks, r2.clocks, "reused-image run is cycle-identical");
+        assert_eq!(r1.regs.file, r2.regs.file);
+        assert_eq!(r1.retired, r2.retired);
+        // The previous run only wrote data, so the decode cache survived
+        // the reset: the second run re-decodes only the boundary-band
+        // fetch (the final `halt` sits within 6 bytes of `code_end` and
+        // always bypasses the cache).
+        assert!(r2.icache_misses <= 1, "warm decode cache across reuse: {r2:?}");
+        assert!(r2.icache_hits >= r1.icache_hits);
+
+        // And memory was genuinely rolled back: the guest observes the
+        // template's pristine data (buf reads 0 again before the run).
+        p.reset_reusing(&prog.image);
+        let buf = prog.symbol("buf").unwrap();
+        assert_eq!(p.mem.read_u32(buf).unwrap(), 0, "dirty window restored");
     }
 
     #[test]

@@ -8,24 +8,48 @@
 
 use super::insn::{CondFn, Insn, MetaFn, OpFn, Reg};
 use std::collections::HashMap;
-use thiserror::Error;
 
 /// Assembler errors, with 1-based source line numbers.
-#[derive(Debug, Error)]
+///
+/// (Hand-rolled `Display`/`Error` impls: the build is fully offline and
+/// `thiserror` is not among the vendored dependencies.)
+#[derive(Debug)]
 pub enum AsmError {
-    #[error("line {line}: unknown mnemonic `{mnemonic}`")]
     UnknownMnemonic { line: usize, mnemonic: String },
-    #[error("line {line}: bad operand `{operand}`: {reason}")]
     BadOperand { line: usize, operand: String, reason: String },
-    #[error("line {line}: wrong operand count for `{mnemonic}` (got {got}, want {want})")]
     OperandCount { line: usize, mnemonic: String, got: usize, want: usize },
-    #[error("line {line}: undefined label `{label}`")]
     UndefinedLabel { line: usize, label: String },
-    #[error("line {line}: duplicate label `{label}`")]
     DuplicateLabel { line: usize, label: String },
-    #[error("line {line}: bad directive: {reason}")]
     BadDirective { line: usize, reason: String },
 }
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AsmError::UnknownMnemonic { line, mnemonic } => {
+                write!(f, "line {line}: unknown mnemonic `{mnemonic}`")
+            }
+            AsmError::BadOperand { line, operand, reason } => {
+                write!(f, "line {line}: bad operand `{operand}`: {reason}")
+            }
+            AsmError::OperandCount { line, mnemonic, got, want } => write!(
+                f,
+                "line {line}: wrong operand count for `{mnemonic}` (got {got}, want {want})"
+            ),
+            AsmError::UndefinedLabel { line, label } => {
+                write!(f, "line {line}: undefined label `{label}`")
+            }
+            AsmError::DuplicateLabel { line, label } => {
+                write!(f, "line {line}: duplicate label `{label}`")
+            }
+            AsmError::BadDirective { line, reason } => {
+                write!(f, "line {line}: bad directive: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AsmError {}
 
 /// One labelled run of `.long` words in the data segment: the unit of
 /// per-request data patching in the compile-once pipeline. A span ends at
@@ -40,15 +64,28 @@ pub struct DataSpan {
 }
 
 /// Data-patch failure: the write would leave the span's recorded extent.
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum PatchError {
-    #[error("no data span recorded for symbol `{0}`")]
     NoSpan(String),
-    #[error("patch of {got} words exceeds span `{symbol}` ({words} words)")]
     Oversized { symbol: String, words: u32, got: u32 },
-    #[error("span `{symbol}` at {addr:#x}+{words} words leaves the image")]
     OutOfImage { symbol: String, addr: u32, words: u32 },
 }
+
+impl std::fmt::Display for PatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PatchError::NoSpan(s) => write!(f, "no data span recorded for symbol `{s}`"),
+            PatchError::Oversized { symbol, words, got } => {
+                write!(f, "patch of {got} words exceeds span `{symbol}` ({words} words)")
+            }
+            PatchError::OutOfImage { symbol, addr, words } => {
+                write!(f, "span `{symbol}` at {addr:#x}+{words} words leaves the image")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PatchError {}
 
 /// An assembled program: a flat image plus symbol and line metadata.
 #[derive(Debug, Clone, Default)]
@@ -65,6 +102,11 @@ pub struct Program {
     /// Entry point (address of the first emitted instruction; 0 unless a
     /// `.pos` moved it).
     pub entry: u32,
+    /// One past the last instruction byte — the code/data boundary the
+    /// simulator's decode cache uses (`Memory::set_code_limit`): stores
+    /// at or above this address cannot alter code, so they need not
+    /// invalidate cached decodes.
+    pub code_end: u32,
 }
 
 impl Program {
@@ -78,16 +120,9 @@ impl Program {
         self.data_layout.get(name).copied()
     }
 
-    /// Patch `words` into `image` at `symbol`'s data span. `image` is a
-    /// copy of (or at least as large as) this program's image; the write
-    /// is bounds-checked against the recorded extent, so data patching
-    /// can never corrupt code or a neighbouring span.
-    pub fn patch_into(
-        &self,
-        image: &mut [u8],
-        symbol: &str,
-        words: &[i32],
-    ) -> Result<(), PatchError> {
+    /// Look up `symbol`'s span and check `words` fits it — the single
+    /// validation both patch paths share.
+    fn checked_span(&self, symbol: &str, words: &[i32]) -> Result<DataSpan, PatchError> {
         let span = self
             .data_span(symbol)
             .ok_or_else(|| PatchError::NoSpan(symbol.to_string()))?;
@@ -98,6 +133,20 @@ impl Program {
                 got: words.len() as u32,
             });
         }
+        Ok(span)
+    }
+
+    /// Patch `words` into `image` at `symbol`'s data span. `image` is a
+    /// copy of (or at least as large as) this program's image; the write
+    /// is bounds-checked against the recorded extent, so data patching
+    /// can never corrupt code or a neighbouring span.
+    pub fn patch_into(
+        &self,
+        image: &mut [u8],
+        symbol: &str,
+        words: &[i32],
+    ) -> Result<(), PatchError> {
+        let span = self.checked_span(symbol, words)?;
         let start = span.addr as usize;
         let end = start + 4 * words.len();
         if end > image.len() {
@@ -111,6 +160,26 @@ impl Program {
             image[start + 4 * i..start + 4 * i + 4].copy_from_slice(&w.to_le_bytes());
         }
         Ok(())
+    }
+
+    /// Patch `words` directly into a live [`Memory`] at `symbol`'s data
+    /// span — the zero-copy sibling of [`Program::patch_into`]: the
+    /// template image stays untouched and unduplicated; only the data
+    /// words land in the guest memory. Same bounds rules: the write can
+    /// never leave the recorded span, so it cannot corrupt code or a
+    /// neighbouring array.
+    pub fn patch_mem(
+        &self,
+        mem: &mut crate::mem::Memory,
+        symbol: &str,
+        words: &[i32],
+    ) -> Result<(), PatchError> {
+        let span = self.checked_span(symbol, words)?;
+        mem.write_words(span.addr, words).map_err(|_| PatchError::OutOfImage {
+            symbol: symbol.to_string(),
+            addr: span.addr,
+            words: span.words,
+        })
     }
 }
 
@@ -250,6 +319,7 @@ pub fn assemble(src: &str) -> Result<Program, AsmError> {
     // ---- pass 2: resolve labels, emit image ---------------------------
     let mut image = vec![0u8; addr as usize];
     let mut buf = Vec::with_capacity(8);
+    let mut code_end = 0u32;
     for (at, item) in &items {
         buf.clear();
         match item {
@@ -277,6 +347,7 @@ pub fn assemble(src: &str) -> Result<Program, AsmError> {
                     },
                 };
                 ready.encode(&mut buf);
+                code_end = code_end.max(*at + buf.len() as u32);
             }
         }
         image[*at as usize..*at as usize + buf.len()].copy_from_slice(&buf);
@@ -306,7 +377,14 @@ pub fn assemble(src: &str) -> Result<Program, AsmError> {
         data_layout.insert(name.clone(), DataSpan { addr, words });
     }
 
-    Ok(Program { image, symbols, data_layout, lines: lines_meta, entry: entry.unwrap_or(0) })
+    Ok(Program {
+        image,
+        symbols,
+        data_layout,
+        lines: lines_meta,
+        entry: entry.unwrap_or(0),
+        code_end,
+    })
 }
 
 fn parse_int(s: &str, line: usize) -> Result<i64, AsmError> {
@@ -641,6 +719,52 @@ Body:
             p.patch_into(&mut short, "array", &[1, 2]),
             Err(PatchError::OutOfImage { .. })
         ));
+    }
+
+    #[test]
+    fn code_end_marks_the_last_instruction_byte() {
+        let p = assemble("    halt\n    .align 4\narray:\n    .long 1\n    .long 2\n").unwrap();
+        assert_eq!(p.code_end, 1, "one-byte halt");
+        assert!(p.data_span("array").unwrap().addr >= p.code_end, "data sits above code");
+        let p = assemble("    irmovl $7, %eax\n    halt\n").unwrap();
+        assert_eq!(p.code_end, 7, "6-byte irmovl + 1-byte halt");
+        let p = assemble("x:\n    .long 3\n").unwrap();
+        assert_eq!(p.code_end, 0, "no instructions, no code");
+    }
+
+    #[test]
+    fn patch_mem_writes_the_span_into_live_memory() {
+        use crate::mem::Memory;
+        let p = assemble(
+            "    halt\n    .align 4\narray:\n    .long 0\n    .long 0\nnext:\n    .long 9\n",
+        )
+        .unwrap();
+        let mut mem = Memory::with_image(64, &p.image);
+        p.patch_mem(&mut mem, "array", &[5, -6]).unwrap();
+        assert_eq!(mem.read_u32(4).unwrap(), 5);
+        assert_eq!(mem.read_u32(8).unwrap(), -6i32 as u32);
+        assert_eq!(mem.read_u32(12).unwrap(), 9, "neighbour span untouched");
+        assert_eq!(
+            p.patch_mem(&mut mem, "array", &[1, 2, 3]),
+            Err(PatchError::Oversized { symbol: "array".into(), words: 2, got: 3 })
+        );
+        assert_eq!(
+            p.patch_mem(&mut mem, "nowhere", &[1]),
+            Err(PatchError::NoSpan("nowhere".into()))
+        );
+        // a memory shorter than the span is refused, not sliced OOB
+        let mut short = Memory::new(6);
+        assert!(matches!(
+            p.patch_mem(&mut short, "array", &[1, 2]),
+            Err(PatchError::OutOfImage { .. })
+        ));
+        // patching through memory matches patching through the image
+        let mut image = p.image.clone();
+        p.patch_into(&mut image, "array", &[5, -6]).unwrap();
+        let direct = Memory::with_image(64, &image);
+        for a in (0..16).step_by(4) {
+            assert_eq!(mem.read_u32(a).unwrap(), direct.read_u32(a).unwrap());
+        }
     }
 
     #[test]

@@ -54,13 +54,29 @@ impl MemConfig {
 
 /// Flat little-endian memory with bounds-checked word access.
 ///
-/// `version` increments on every write; the simulator's decode cache
-/// uses it to invalidate stale entries (self-modifying code stays
-/// correct without per-write cache walks).
+/// `version` increments on writes the decode cache can *see*: writes
+/// below the **code limit** (plus every image reload). The simulator's
+/// decode cache uses it to invalidate stale entries, so self-modifying
+/// code stays correct without per-write cache walks — while data stores
+/// above the limit leave cached decodes valid (a store-heavy guest loop
+/// must not re-decode its own body every iteration). The limit defaults
+/// to `u32::MAX` (every write bumps — safe for raw users) and is set
+/// from the program's code extent at image load/reload.
+///
+/// The memory also tracks the **dirty byte window** since the last
+/// load: [`Memory::restore_from`] rolls only that window back to the
+/// base image, which is what lets the fabric's program pipeline reuse a
+/// loaded template image across runs instead of copying it whole.
 #[derive(Debug, Clone)]
 pub struct Memory {
     bytes: Vec<u8>,
     version: u64,
+    /// First byte address that is data, not code (exclusive code bound).
+    code_limit: u32,
+    /// Dirty window since load: half-open byte range, empty when
+    /// `dirty_lo > dirty_hi`.
+    dirty_lo: usize,
+    dirty_hi: usize,
 }
 
 /// Error for out-of-range accesses (maps to Y86 `ADR` status).
@@ -69,12 +85,47 @@ pub struct AddrError(pub u32);
 
 impl Memory {
     pub fn new(size: usize) -> Self {
-        Memory { bytes: vec![0; size], version: 0 }
+        Memory {
+            bytes: vec![0; size],
+            version: 0,
+            code_limit: u32::MAX,
+            dirty_lo: usize::MAX,
+            dirty_hi: 0,
+        }
     }
 
-    /// Write-generation counter (decode-cache invalidation).
+    /// Write-generation counter (decode-cache invalidation). Bumped by
+    /// writes below the code limit and by image (re)loads — data stores
+    /// above the limit are invisible to the decode cache.
     pub fn version(&self) -> u64 {
         self.version
+    }
+
+    /// Set the code/data boundary: writes at addresses `>= limit` no
+    /// longer bump the cache-visible version. Call after loading an
+    /// image whose code extent is known (`Program::code_end`);
+    /// [`Memory::reload`] resets the limit to the conservative
+    /// `u32::MAX`.
+    pub fn set_code_limit(&mut self, limit: u32) {
+        self.code_limit = limit;
+    }
+
+    /// Current code/data boundary.
+    pub fn code_limit(&self) -> u32 {
+        self.code_limit
+    }
+
+    #[inline]
+    fn note_write(&mut self, lo: usize, hi: usize) {
+        if lo < self.dirty_lo {
+            self.dirty_lo = lo;
+        }
+        if hi > self.dirty_hi {
+            self.dirty_hi = hi;
+        }
+        if lo < self.code_limit as usize {
+            self.version += 1;
+        }
     }
 
     /// Build a memory preloaded with a program image at address 0.
@@ -97,6 +148,44 @@ impl Memory {
         self.bytes[..image.len()].copy_from_slice(image);
         self.bytes[image.len()..].fill(0);
         self.version += 1;
+        // New image: the old code boundary is meaningless; callers that
+        // know the new code extent re-set it after the load.
+        self.code_limit = u32::MAX;
+        self.dirty_lo = usize::MAX;
+        self.dirty_hi = 0;
+    }
+
+    /// Roll back to `image` assuming the memory was **already loaded
+    /// from these very bytes**: only the dirty window (bytes written
+    /// since the load) is restored, instead of copying the whole image.
+    /// Falls back to a full [`Memory::reload`] when the allocation size
+    /// does not match (e.g. an oversized image grew it). The
+    /// cache-visible version bumps only when the dirty window reached
+    /// into the code region — data-only runs keep every cached decode
+    /// valid across the restore.
+    pub fn restore_from(&mut self, image: &[u8], size: usize) {
+        if self.bytes.len() != size.max(image.len()) {
+            self.reload(image, size);
+            return;
+        }
+        if self.dirty_lo < self.dirty_hi {
+            let lo = self.dirty_lo.min(self.bytes.len());
+            let hi = self.dirty_hi.min(self.bytes.len());
+            let img_hi = hi.min(image.len());
+            if lo < img_hi {
+                self.bytes[lo..img_hi].copy_from_slice(&image[lo..img_hi]);
+            }
+            if img_hi < hi {
+                self.bytes[img_hi.max(lo)..hi].fill(0);
+            }
+            if lo < self.code_limit as usize {
+                // Code bytes were modified and are now restored: cached
+                // decodes of the *modified* bytes must not validate.
+                self.version += 1;
+            }
+            self.dirty_lo = usize::MAX;
+            self.dirty_hi = 0;
+        }
     }
 
     /// Test hook: force the version counter (decode-cache wrap-hazard
@@ -134,7 +223,7 @@ impl Memory {
         let a = addr as usize;
         let w = self.bytes.get_mut(a..a + 4).ok_or(AddrError(addr))?;
         w.copy_from_slice(&value.to_le_bytes());
-        self.version += 1;
+        self.note_write(a, a + 4);
         Ok(())
     }
 
@@ -198,6 +287,66 @@ mod tests {
         assert_eq!(m.read_u32(8).unwrap(), 0xd);
         assert_eq!(m.read_u32(12).unwrap(), 0xc0);
         assert_eq!(m.read_u32(16).unwrap(), 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn data_writes_above_the_code_limit_leave_the_version_alone() {
+        let mut m = Memory::with_image(64, &[1, 2, 3, 4]);
+        m.set_code_limit(16);
+        let v = m.version();
+        m.write_u32(32, 7).unwrap(); // data store
+        m.write_words(40, &[1, 2, 3]).unwrap();
+        assert_eq!(m.version(), v, "data stores are invisible to the decode cache");
+        m.write_u32(8, 9).unwrap(); // below the limit: self-modifying code
+        assert_eq!(m.version(), v + 1, "code writes still invalidate");
+        // a write straddling the boundary counts as a code write
+        m.write_u32(15, 1).unwrap();
+        assert_eq!(m.version(), v + 2);
+    }
+
+    #[test]
+    fn restore_from_rolls_back_only_the_dirty_window() {
+        let image = [1u8, 2, 3, 4, 5, 6, 7, 8];
+        let mut m = Memory::with_image(16, &image);
+        m.set_code_limit(4);
+        let v = m.version();
+        m.write_u32(4, 0xAAAA_AAAA).unwrap(); // data-only dirt
+        m.write_u32(12, 0xBBBB_BBBB).unwrap(); // beyond the image: restore zeroes it
+        m.restore_from(&image, 16);
+        assert_eq!(m.read_u32(4).unwrap(), 0x0807_0605, "image bytes restored");
+        assert_eq!(m.read_u32(12).unwrap(), 0, "tail beyond the image zeroed");
+        assert_eq!(m.version(), v, "data-only dirt keeps cached decodes valid");
+        // clean restore is a no-op
+        m.restore_from(&image, 16);
+        assert_eq!(m.version(), v);
+        // code dirt forces an invalidation on restore
+        m.write_u32(0, 0xCCCC_CCCC).unwrap();
+        let v2 = m.version();
+        m.restore_from(&image, 16);
+        assert_eq!(m.read_u32(0).unwrap(), 0x0403_0201);
+        assert!(m.version() > v2, "restored code bytes must invalidate cached decodes");
+    }
+
+    #[test]
+    fn restore_from_falls_back_to_reload_on_size_mismatch() {
+        let mut m = Memory::with_image(8, &[1, 2, 3, 4]);
+        m.reload(&[0; 32], 8); // grown by an oversized image
+        let v = m.version();
+        m.restore_from(&[9, 9], 8); // configured size again: full reload path
+        assert_eq!(m.len(), 8);
+        assert_eq!(m.read_u8(0).unwrap(), 9);
+        assert!(m.version() > v, "reload always bumps");
+    }
+
+    #[test]
+    fn reload_resets_the_code_limit() {
+        let mut m = Memory::with_image(16, &[1, 2, 3, 4]);
+        m.set_code_limit(4);
+        m.reload(&[5, 6], 16);
+        assert_eq!(m.code_limit(), u32::MAX, "a new image means a new (unknown) boundary");
+        let v = m.version();
+        m.write_u32(8, 1).unwrap();
+        assert_eq!(m.version(), v + 1, "conservative default: every write bumps");
     }
 
     #[test]

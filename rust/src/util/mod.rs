@@ -1,5 +1,5 @@
 //! Small zero-dependency utilities (the build is fully offline; only
-//! `xla`, `anyhow` and `thiserror` are vendored).
+//! `anyhow` — and `xla`, when vendored — are external).
 
 pub mod json;
 pub mod rng;

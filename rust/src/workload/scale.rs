@@ -170,6 +170,8 @@ mod tests {
             sv_ops: 0,
             events_processed: 0,
             clocks_skipped: 0,
+            icache_hits: 0,
+            icache_misses: 0,
             fault: None,
             trace: Default::default(),
         };

@@ -85,7 +85,7 @@ fn trace_results_match_direct_computation() {
         .iter()
         .map(|r| match &r.job.kind {
             RequestKind::MassSum { values } => Some(values.iter().sum()),
-            RequestKind::MassDot { a, b } => Some(a.iter().zip(b).map(|(x, y)| x * y).sum()),
+            RequestKind::MassDot { a, b } => Some(a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()),
             RequestKind::RunProgram { .. } => None,
         })
         .collect();
@@ -210,11 +210,11 @@ fn batching_aggregates_under_load() {
     };
     let f = fabric(cfg);
     let handles: Vec<_> = (0..64)
-        .map(|i| f.submit(RequestKind::MassSum { values: vec![1.0; 100 + i] }).unwrap())
+        .map(|i| f.submit(RequestKind::mass_sum(vec![1.0; 100 + i])).unwrap())
         .collect();
     for (i, h) in handles.into_iter().enumerate() {
         let c = h.wait().unwrap();
-        assert_eq!(c.output, Output::Scalars(vec![(100 + i) as f32]));
+        assert_eq!(c.output, Output::Scalars(vec![(100 + i) as f32].into()));
         assert!(c.batch_rows >= 1 && c.batch_rows <= 8, "batch metadata: {}", c.batch_rows);
     }
     let batches = f.metrics.accel_batches.load(Ordering::Relaxed);
@@ -243,7 +243,7 @@ fn responses_route_back_to_the_right_requester() {
                     let len = rng.range_usize(64, 512);
                     let vals: Vec<f32> = (0..len).map(|_| rng.range_f32(-1.0, 1.0)).collect();
                     let want: f32 = vals.iter().sum();
-                    let h = client.submit(RequestKind::MassSum { values: vals }).unwrap();
+                    let h = client.submit(RequestKind::mass_sum(vals)).unwrap();
                     match h.wait() {
                         Ok(c) => match c.output {
                             Output::Scalars(got)
@@ -284,7 +284,7 @@ fn backend_failure_is_a_typed_error_not_a_hang() {
     let registry = sim_registry(cfg.empa.clone())
         .register_accel("broken", || Ok(Box::new(Broken) as Box<dyn Accelerator>));
     let f = Fabric::start(cfg, registry);
-    let h = f.submit(RequestKind::MassSum { values: vec![1.0; 512] }).unwrap();
+    let h = f.submit(RequestKind::mass_sum(vec![1.0; 512])).unwrap();
     match h.wait() {
         Err(FabricError::Backend { name, msg }) => {
             assert_eq!(name, "broken");
@@ -294,8 +294,8 @@ fn backend_failure_is_a_typed_error_not_a_hang() {
     }
     assert_eq!(f.metrics.errors.load(Ordering::Relaxed), 1);
     // subsequent small (inline) requests still work
-    let h = f.submit(RequestKind::MassSum { values: vec![2.0, 3.0] }).unwrap();
-    assert_eq!(h.wait().unwrap().output, Output::Scalars(vec![5.0]));
+    let h = f.submit(RequestKind::mass_sum(vec![2.0, 3.0])).unwrap();
+    assert_eq!(h.wait().unwrap().output, Output::Scalars(vec![5.0].into()));
     f.shutdown();
 }
 
@@ -311,11 +311,11 @@ fn xla_init_failure_fails_over_to_native() {
         .register_accel("native", || Ok(Box::new(NativeAccel) as Box<dyn Accelerator>));
     let f = Fabric::start(cfg, registry);
     let handles: Vec<_> = (0..32)
-        .map(|i| f.submit(RequestKind::MassSum { values: vec![1.0; 128 + i] }).unwrap())
+        .map(|i| f.submit(RequestKind::mass_sum(vec![1.0; 128 + i])).unwrap())
         .collect();
     for (i, h) in handles.into_iter().enumerate() {
         let c = h.wait().expect("failover answers every mass job");
-        assert_eq!(c.output, Output::Scalars(vec![(128 + i) as f32]));
+        assert_eq!(c.output, Output::Scalars(vec![(128 + i) as f32].into()));
         assert_eq!(c.backend, "native", "served by the failover backend");
     }
     assert_eq!(f.metrics.errors.load(Ordering::Relaxed), 0);
@@ -367,12 +367,12 @@ fn wait_timeout_expires_then_job_completes() {
         ..Default::default()
     };
     let f = fabric(cfg);
-    let mut h = f.submit(RequestKind::MassSum { values: vec![1.0; 256] }).unwrap();
+    let mut h = f.submit(RequestKind::mass_sum(vec![1.0; 256])).unwrap();
     assert!(h.try_wait().is_none(), "job is parked in the batcher");
     assert!(h.wait_timeout(Duration::from_millis(30)).is_none(), "bounded wait expires");
     f.shutdown(); // drains the batcher, completing the job
     match h.wait_timeout(Duration::from_secs(5)) {
-        Some(Ok(c)) => assert_eq!(c.output, Output::Scalars(vec![256.0])),
+        Some(Ok(c)) => assert_eq!(c.output, Output::Scalars(vec![256.0].into())),
         other => panic!("want completion after drain, got {other:?}"),
     }
 }
@@ -384,7 +384,7 @@ fn cancel_before_dispatch_resolves_cancelled() {
         ..Default::default()
     };
     let f = fabric(cfg);
-    let h = f.submit(RequestKind::MassSum { values: vec![1.0; 256] }).unwrap();
+    let h = f.submit(RequestKind::mass_sum(vec![1.0; 256])).unwrap();
     h.cancel();
     f.shutdown(); // drain observes the cancel flag before dispatch
     assert_eq!(h.wait(), Err(FabricError::Cancelled));
@@ -398,7 +398,7 @@ fn missed_deadline_resolves_deadline_exceeded() {
         ..Default::default()
     };
     let f = fabric(cfg);
-    let req = JobRequest::new(RequestKind::MassSum { values: vec![1.0; 256] })
+    let req = JobRequest::new(RequestKind::mass_sum(vec![1.0; 256]))
         .with_deadline(Duration::from_millis(1));
     let h = f.submit(req).unwrap();
     std::thread::sleep(Duration::from_millis(20));
@@ -411,12 +411,12 @@ fn missed_deadline_resolves_deadline_exceeded() {
 fn submit_batch_returns_ordered_handles() {
     let f = fabric(FabricConfig::default());
     let reqs: Vec<JobRequest> = (1..=16)
-        .map(|i| JobRequest::new(RequestKind::MassSum { values: vec![1.0; 64 * i] }))
+        .map(|i| JobRequest::new(RequestKind::mass_sum(vec![1.0; 64 * i])))
         .collect();
     let jobs = f.client().submit_batch(reqs).unwrap();
     assert_eq!(jobs.len(), 16);
     for (i, j) in jobs.into_iter().enumerate() {
-        assert_eq!(j.wait().unwrap().output, Output::Scalars(vec![(64 * (i + 1)) as f32]));
+        assert_eq!(j.wait().unwrap().output, Output::Scalars(vec![(64 * (i + 1)) as f32].into()));
     }
     f.shutdown();
 }
@@ -462,12 +462,12 @@ fn shutdown_completes_inflight_work() {
     let f = fabric(cfg);
     // These can only flush via the shutdown drain path.
     let hs: Vec<_> = (0..5)
-        .map(|_| f.submit(RequestKind::MassSum { values: vec![1.0; 256] }).unwrap())
+        .map(|_| f.submit(RequestKind::mass_sum(vec![1.0; 256])).unwrap())
         .collect();
     std::thread::sleep(Duration::from_millis(20));
     f.shutdown();
     for h in hs {
-        assert_eq!(h.wait().unwrap().output, Output::Scalars(vec![256.0]));
+        assert_eq!(h.wait().unwrap().output, Output::Scalars(vec![256.0].into()));
     }
 }
 
@@ -498,9 +498,9 @@ fn inline_jobs_bypass_a_saturated_program_backlog() {
         f.metrics.worker(0).depth.load(Ordering::Relaxed) >= 3,
         "program backlog is staged on the worker's deque"
     );
-    let h = f.submit(RequestKind::MassSum { values: vec![1.0, 2.0, 3.0] }).unwrap();
+    let h = f.submit(RequestKind::mass_sum(vec![1.0, 2.0, 3.0])).unwrap();
     let c = h.wait().unwrap();
-    assert_eq!(c.output, Output::Scalars(vec![6.0]));
+    assert_eq!(c.output, Output::Scalars(vec![6.0].into()));
     assert_eq!(c.route, Route::Inline);
     assert!(
         c.latency < Duration::from_millis(150),
@@ -546,17 +546,17 @@ fn idle_worker_steals_the_busy_workers_backlog() {
 fn mass_dot_length_mismatch_is_rejected_at_submission() {
     let f = fabric(FabricConfig::default());
     // Below the accelerator threshold: used to zip-truncate inline.
-    let err = f.submit(RequestKind::MassDot { a: vec![1.0; 8], b: vec![1.0; 7] }).unwrap_err();
+    let err = f.submit(RequestKind::mass_dot(vec![1.0; 8], vec![1.0; 7])).unwrap_err();
     assert_eq!(err, FabricError::ShapeMismatch { a: 8, b: 7 });
     // Above it: used to reach the batcher with ragged rows.
     let err = f
-        .try_submit(RequestKind::MassDot { a: vec![1.0; 512], b: vec![1.0; 100] })
+        .try_submit(RequestKind::mass_dot(vec![1.0; 512], vec![1.0; 100]))
         .unwrap_err();
     assert!(matches!(err, FabricError::ShapeMismatch { a: 512, b: 100 }));
     assert_eq!(f.metrics.submitted.load(Ordering::Relaxed), 0, "rejected before any queue");
     // Well-formed dots still serve.
-    let h = f.submit(RequestKind::MassDot { a: vec![2.0; 128], b: vec![3.0; 128] }).unwrap();
-    assert_eq!(h.wait().unwrap().output, Output::Scalars(vec![768.0]));
+    let h = f.submit(RequestKind::mass_dot(vec![2.0; 128], vec![3.0; 128])).unwrap();
+    assert_eq!(h.wait().unwrap().output, Output::Scalars(vec![768.0].into()));
     f.shutdown();
 }
 
@@ -581,7 +581,7 @@ fn failovers_count_only_when_a_later_entry_takes_over() {
     let f = Fabric::start(FabricConfig { sim_workers: 1, ..Default::default() }, registry);
     let h = f.submit(RequestKind::sumup(Mode::No, vec![1])).unwrap();
     assert!(matches!(h.wait(), Err(FabricError::Backend { .. })));
-    let h = f.submit(RequestKind::MassSum { values: vec![1.0; 512] }).unwrap();
+    let h = f.submit(RequestKind::mass_sum(vec![1.0; 512])).unwrap();
     assert!(matches!(h.wait(), Err(FabricError::Backend { .. })));
     assert_eq!(f.metrics.backend("dead-a").init_failures.load(Ordering::Relaxed), 1);
     assert_eq!(f.metrics.backend("dead-b").init_failures.load(Ordering::Relaxed), 1);
@@ -604,7 +604,7 @@ fn oversized_mass_ops_scatter_across_the_sim_pool() {
     let a: Vec<f32> = (0..512).map(|i| (i % 5) as f32).collect();
     let b: Vec<f32> = (0..512).map(|i| (i % 3) as f32).collect();
     let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-    let h = f.submit(RequestKind::MassDot { a, b }).unwrap();
+    let h = f.submit(RequestKind::mass_dot(a, b)).unwrap();
     let c = h.wait().unwrap();
     assert_eq!(c.route, Route::Split);
     assert_eq!(c.shards, 4, "2 * 512 / 256 capped at the pool width");
@@ -635,9 +635,9 @@ fn split_falls_back_to_the_batcher_when_no_worker_is_idle() {
     let busy = f.submit(paced_job(300)).unwrap();
     let staged = f.submit(paced_job(300)).unwrap();
     std::thread::sleep(Duration::from_millis(30)); // one running, one staged
-    let h = f.submit(RequestKind::MassSum { values: vec![1.0; 512] }).unwrap();
+    let h = f.submit(RequestKind::mass_sum(vec![1.0; 512])).unwrap();
     let c = h.wait().unwrap();
-    assert_eq!(c.output, Output::Scalars(vec![512.0]));
+    assert_eq!(c.output, Output::Scalars(vec![512.0].into()));
     assert_eq!(c.route, Route::Accelerator, "busy pool: no scatter");
     assert_eq!(c.backend, "native");
     assert_eq!(c.shards, 1);

@@ -111,7 +111,7 @@ fn xla_accel_matches_native_on_all_ops() {
 
     // Prefix.
     let a = rows(&mut rng, 4, 300);
-    let req = MassRequest { op: MassOp::Prefix, rows: a, rows2: vec![], scale_bias: [0.0; 2] };
+    let req = MassRequest::new(MassOp::Prefix, a, Vec::<Vec<f32>>::new(), [0.0; 2]);
     let (MassResult::Rows(x), MassResult::Rows(y)) =
         (xla.execute(&req).unwrap(), native.execute(&req).unwrap())
     else {
@@ -125,7 +125,7 @@ fn xla_accel_matches_native_on_all_ops() {
 
     // Fused stats.
     let a = rows(&mut rng, 6, 200);
-    let req = MassRequest { op: MassOp::SumupStats, rows: a, rows2: vec![], scale_bias: [0.0; 2] };
+    let req = MassRequest::new(MassOp::SumupStats, a, Vec::<Vec<f32>>::new(), [0.0; 2]);
     let (MassResult::Stats { sum: s1, mean: m1, l2: l1 }, MassResult::Stats { sum: s2, mean: m2, l2: l2b }) =
         (xla.execute(&req).unwrap(), native.execute(&req).unwrap())
     else {
@@ -166,7 +166,7 @@ fn fabric_with_xla_accelerator_end_to_end() {
     let mut rng = Rng::seed_from_u64(3);
     let vals: Vec<f32> = (0..512).map(|_| rng.range_f32(-1.0, 1.0)).collect();
     let want: f32 = vals.iter().sum();
-    let h = fabric.submit(RequestKind::MassSum { values: vals }).unwrap();
+    let h = fabric.submit(RequestKind::mass_sum(vals)).unwrap();
     let c = h.wait().expect("mass job completes");
     assert_eq!(c.route, Route::Accelerator);
     let Output::Scalars(got) = c.output else { panic!("{:?}", c.output) };
