@@ -1,130 +1,189 @@
 //! E9 — the end-to-end driver: the full three-layer system serving a
-//! real mixed workload through the typed service API.
+//! real mixed workload **over TCP** through the network serve plane.
 //!
-//! Layer 3 (this binary): the EMPA fabric supervisor routes a synthetic
-//! trace of scalar-program jobs (all four workload families) and mass
-//! operations; program jobs are placed on the dispatch plane's
-//! per-worker deques (idle workers steal neighbours' staged work) and
-//! run on the simulated EMPA processors (`sim` backend) through the
-//! compile-once pipeline — cached code templates, patched data images,
-//! reused processors; large mass ops are dynamically batched into bucket
-//! tiles and executed by the mass-backend chain — `xla` (the Layer-2/1
-//! JAX+Pallas graph through PJRT) with `native` as the registry
-//! failover; oversized mass ops are scattered across idle sim workers
-//! and gathered by a parent-side accumulator. Python is not running
-//! anywhere.
+//! Layer 3 (this binary): a [`ServePlane`] binds a loopback port and
+//! speaks the hand-rolled wire protocol; behind it the EMPA fabric
+//! supervisor routes scalar-program jobs (all four workload families)
+//! and mass operations — program jobs run on the simulated EMPA
+//! processors through the compile-once pipeline, mass ops are batched
+//! into bucket tiles on the mass-backend chain (`xla` through PJRT with
+//! `native` failover), and oversized mass ops are scattered across idle
+//! sim workers. Python is not running anywhere.
 //!
-//! Reports throughput and latency percentiles, verifies every mass result
-//! against the native oracle, and prints the routing/batching/per-backend
-//! metrics.
+//! Three tenants share the plane: `alice` and `bob` are unthrottled,
+//! `mallory` is pinned to a tight token-bucket quota and pipelines the
+//! same load anyway — so the demo shows per-tenant isolation end to
+//! end: mallory collects `QuotaExceeded` wire errors while alice's and
+//! bob's answers all verify against the native oracle, and the
+//! per-tenant ledger accounts for every request.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --offline --example fabric_serve [requests]
 //! ```
 
 use empa::accel::{Accelerator, MassRequest, NativeAccel};
-use empa::api::{Output, RequestKind};
-use empa::coordinator::{BackendRegistry, Fabric, FabricConfig};
+use empa::api::{FabricError, Output, RequestKind};
+use empa::coordinator::FabricConfig;
+use empa::serve::{QuotaConfig, ServeConfig, ServePlane, SloConfig, WireClient, WireReply};
 use empa::util::Summary;
-use empa::workload::{TraceConfig, TraceGen};
+use empa::workload::{Request, TraceConfig, TraceGen};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
-    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
+/// Native-oracle expectation for a mass op (programs verify on-fabric).
+fn oracle(kind: &RequestKind) -> Option<f32> {
+    let o = NativeAccel;
+    let req = match kind {
+        RequestKind::MassSum { values } => MassRequest::sumup(vec![values.clone()]),
+        RequestKind::MassDot { a, b } => MassRequest::dot(vec![a.clone()], vec![b.clone()]),
+        RequestKind::RunProgram { .. } => return None,
+    };
+    let empa::accel::MassResult::Scalars(v) = o.execute(&req).unwrap() else { unreachable!() };
+    Some(v[0])
+}
 
-    // Build the trace up front (deterministic).
-    let trace = TraceGen::new(TraceConfig {
-        num_requests: n,
-        seed: 7,
-        client: Some("serve-example"),
+/// One tenant's outcome after pipelining its whole trace over one socket.
+#[derive(Default)]
+struct Tally {
+    ok: usize,
+    quota_denied: usize,
+    other_err: usize,
+    wrong: usize,
+    lat_us: Vec<f64>,
+}
+
+/// Pipeline the trace (submit everything, then drain replies) and check
+/// each completion against the oracle expectation for its request id.
+fn drive(addr: &str, trace: &[Request]) -> anyhow::Result<Tally> {
+    let expected: Vec<Option<f32>> = trace.iter().map(|r| oracle(&r.job.kind)).collect();
+    let mut client = WireClient::connect(addr)?;
+    let mut ids = Vec::with_capacity(trace.len());
+    let t0 = Instant::now();
+    for r in trace {
+        ids.push(client.submit(&r.job)?);
+    }
+    let mut t = Tally::default();
+    for _ in 0..trace.len() {
+        let Some(reply) = client.recv()? else {
+            anyhow::bail!("server closed before all replies arrived")
+        };
+        match reply {
+            WireReply::Completed { id, completion } => {
+                t.ok += 1;
+                t.lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                let idx = ids.iter().position(|&i| i == id).expect("unknown reply id");
+                match (&completion.output, &expected[idx]) {
+                    (Output::Scalars(got), Some(w)) => {
+                        if (got[0] - w).abs() > 1e-2 * (1.0 + w.abs()) {
+                            t.wrong += 1;
+                        }
+                    }
+                    (Output::Program { .. }, None) => {}
+                    _ => t.wrong += 1,
+                }
+            }
+            WireReply::Failed { error, .. } => match error {
+                FabricError::QuotaExceeded { .. } => t.quota_denied += 1,
+                _ => t.other_err += 1,
+            },
+            WireReply::MetricsText { .. } => anyhow::bail!("unexpected metrics reply"),
+        }
+    }
+    Ok(t)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+
+    // The serve plane: wire protocol + quotas + SLO governor over the
+    // fabric. mallory's bucket refills at 20 req/s (burst 4) — far below
+    // what a pipelined client offers — while the default shape is
+    // unlimited.
+    let fabric = FabricConfig::default();
+    let slo = SloConfig::for_queue_cap(fabric.queue_cap);
+    let plane = ServePlane::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        quota: QuotaConfig::default().with_override("mallory", 20.0, 4.0),
+        slo,
+        fabric,
         ..Default::default()
-    })
-    .generate();
-    let oracle = NativeAccel;
-    let expected: Vec<Option<f32>> = trace
+    })?;
+    let addr = plane.local_addr().to_string();
+    println!("serve plane listening on {addr}");
+
+    // Deterministic per-tenant traces (arrival offsets are ignored —
+    // each tenant pipelines as fast as the socket accepts).
+    let tenants = ["alice", "bob", "mallory"];
+    let traces: Vec<Vec<Request>> = tenants
         .iter()
-        .map(|r| match &r.job.kind {
-            RequestKind::MassSum { values } => {
-                let empa::accel::MassResult::Scalars(v) =
-                    oracle.execute(&MassRequest::sumup(vec![values.clone()])).unwrap()
-                else {
-                    unreachable!()
-                };
-                Some(v[0])
-            }
-            RequestKind::MassDot { a, b } => {
-                let empa::accel::MassResult::Scalars(v) =
-                    oracle.execute(&MassRequest::dot(vec![a.clone()], vec![b.clone()])).unwrap()
-                else {
-                    unreachable!()
-                };
-                Some(v[0])
-            }
-            RequestKind::RunProgram { .. } => None,
+        .enumerate()
+        .map(|(i, name)| {
+            TraceGen::new(TraceConfig {
+                num_requests: n / tenants.len(),
+                seed: 7 + i as u64,
+                client: Some(name),
+                ..Default::default()
+            })
+            .generate()
         })
         .collect();
 
-    // Registry order is failover order: prefer xla, degrade to native.
-    let cfg = FabricConfig::default();
-    let fabric = Fabric::start(cfg.clone(), BackendRegistry::with_xla(cfg.empa, "artifacts"));
-
-    // Warm-up: let the mass worker initialise its backend before timing.
-    let h = fabric.submit(RequestKind::mass_sum(vec![1.0; 512]))?;
-    let warm = h.wait()?;
-    println!(
-        "mass backend warm-up (init + first batch): {:.0} ms via `{}`",
-        warm.latency.as_secs_f64() * 1e3,
-        warm.backend
-    );
-
-    // Serve the trace.
     let t0 = Instant::now();
-    let results = fabric.run_trace(trace)?;
+    let handles: Vec<_> = traces
+        .iter()
+        .map(|trace| {
+            let addr = addr.clone();
+            let trace = trace.clone();
+            std::thread::spawn(move || drive(&addr, &trace))
+        })
+        .collect();
+    let tallies: Vec<Tally> = handles
+        .into_iter()
+        .map(|h| h.join().expect("tenant thread panicked"))
+        .collect::<anyhow::Result<_>>()?;
     let wall = t0.elapsed();
 
-    // Verify and summarise.
-    let mut errors = 0usize;
-    let mut mass_lat = Vec::new();
-    let mut prog_lat = Vec::new();
-    let mut queue_lat = Vec::new();
-    for ((_, res), want) in results.iter().zip(&expected) {
-        match res {
-            Ok(c) => {
-                queue_lat.push(c.queue_latency.as_secs_f64() * 1e6);
-                match (&c.output, want) {
-                    (Output::Scalars(got), Some(w)) => {
-                        if (got[0] - w).abs() > 1e-2 * (1.0 + w.abs()) {
-                            errors += 1;
-                        }
-                        mass_lat.push(c.latency.as_secs_f64() * 1e6);
-                    }
-                    (Output::Program { .. }, None) => prog_lat.push(c.latency.as_secs_f64() * 1e6),
-                    _ => errors += 1,
-                }
-            }
-            Err(_) => errors += 1,
-        }
+    let served: usize = tallies.iter().map(|t| t.ok).sum();
+    println!(
+        "\nserved {served} completions (of {} submitted) in {:.1} ms over TCP",
+        n / tenants.len() * tenants.len(),
+        wall.as_secs_f64() * 1e3
+    );
+    for (name, t) in tenants.iter().zip(&tallies) {
+        println!(
+            "tenant {name:8}: ok={} quota_denied={} other_err={} wrong={}  reply-latency(us): {}",
+            t.ok,
+            t.quota_denied,
+            t.other_err,
+            t.wrong,
+            Summary::of(&t.lat_us)
+        );
     }
 
-    let thru = results.len() as f64 / wall.as_secs_f64();
-    println!(
-        "\nserved {} requests in {:.1} ms  →  {:.0} req/s, {errors} wrong answers",
-        results.len(),
-        wall.as_secs_f64() * 1e3,
-        thru
-    );
-    println!("mass-op latency  (us): {}", Summary::of(&mass_lat));
-    println!("program latency  (us): {}", Summary::of(&prog_lat));
-    println!("queue latency    (us): {}", Summary::of(&queue_lat));
-    println!("routing/batching     : {}", fabric.metrics.render());
-    println!(
-        "dispatch plane       : {} workers, {} placements, {} steals",
-        fabric.metrics.worker_count(),
-        fabric.metrics.total_placements(),
-        fabric.metrics.total_steals(),
-    );
-    fabric.shutdown();
-    anyhow::ensure!(errors == 0, "{errors} mismatches against the native oracle");
-    println!("\nall responses verified against the native oracle ✓");
+    // The server-side view — per-tenant ledger and SLO playbook — over
+    // the same wire protocol.
+    let text = WireClient::connect(&addr)?.metrics()?;
+    println!("\nserver metrics:\n{text}");
+    plane.shutdown();
+
+    // The isolation story, checked: honest tenants verify clean, the
+    // throttled tenant was actually throttled, and every request is
+    // accounted for.
+    let per = n / tenants.len();
+    for (name, t) in tenants.iter().zip(&tallies) {
+        anyhow::ensure!(
+            t.ok + t.quota_denied + t.other_err == per,
+            "tenant {name}: ledger does not close"
+        );
+        anyhow::ensure!(t.wrong == 0, "tenant {name}: {} wrong answers", t.wrong);
+        if *name == "mallory" {
+            anyhow::ensure!(t.quota_denied > 0, "mallory was never throttled");
+        } else {
+            anyhow::ensure!(
+                t.quota_denied == 0 && t.other_err == 0,
+                "unthrottled tenant {name} saw errors"
+            );
+        }
+    }
+    println!("all completions verified against the native oracle; quota isolation held ✓");
     Ok(())
 }

@@ -217,6 +217,14 @@ pub enum FabricError {
     Backend { name: String, msg: String },
     /// The fabric is shut down.
     Shutdown,
+    /// Per-tenant admission on the serve plane: the tenant's token-bucket
+    /// quota is exhausted. Retry after the bucket refills — the fabric
+    /// itself was never asked.
+    QuotaExceeded { tenant: String },
+    /// The serve plane shed this request because an SLO threshold rule
+    /// tripped (`rule` names it — see `serve::slo`). Unlike `QueueFull`
+    /// this is a *policy* decision taken before the ingress queue.
+    Overloaded { rule: String },
 }
 
 impl std::fmt::Display for FabricError {
@@ -241,6 +249,12 @@ impl std::fmt::Display for FabricError {
             FabricError::GuestFault(m) => write!(f, "guest fault: {m}"),
             FabricError::Backend { name, msg } => write!(f, "backend `{name}`: {msg}"),
             FabricError::Shutdown => write!(f, "fabric is shut down"),
+            FabricError::QuotaExceeded { tenant } => {
+                write!(f, "tenant `{tenant}` is over its admission quota")
+            }
+            FabricError::Overloaded { rule } => {
+                write!(f, "shed by SLO rule `{rule}` (fabric overloaded)")
+            }
         }
     }
 }
@@ -486,6 +500,10 @@ mod tests {
         assert!(e.to_string().contains("traces"), "{e}");
         let e = FabricError::InvalidConfig("num_cores=0 unsupported".into());
         assert!(e.to_string().contains("num_cores=0"), "{e}");
+        let e = FabricError::QuotaExceeded { tenant: "tenant-b".into() };
+        assert!(e.to_string().contains("tenant-b"), "{e}");
+        let e = FabricError::Overloaded { rule: "inflight-ceiling".into() };
+        assert!(e.to_string().contains("inflight-ceiling"), "{e}");
     }
 
     #[test]

@@ -1,0 +1,373 @@
+//! `loadgen` — open-loop, multi-tenant load generator for the serve plane.
+//!
+//! Spawns one sender/receiver pair per simulated tenant, each on its own
+//! TCP connection, and replays a [`TraceGen`] arrival schedule (mixed
+//! mass ops and program runs) against the wire protocol. Tenant 0 is
+//! "hot": it arrives at `--hot-factor` times the base rate, so with a
+//! server-side quota between the two rates it demonstrates per-tenant
+//! isolation — the hot tenant eats quota denials while the in-SLO
+//! tenants keep completing.
+//!
+//! Open loop means arrivals follow the schedule regardless of
+//! completions: latency under overload is measured honestly instead of
+//! being hidden by closed-loop self-throttling.
+//!
+//! ```text
+//! loadgen [--addr HOST:PORT] [--tenants N] [--rate R] [--hot-factor F]
+//!         [--secs S] [--seed SEED] [--workers N] [--queue-cap N]
+//!         [--quota RATE[:BURST]] [--quick]
+//! ```
+//!
+//! Without `--addr` an in-process [`ServePlane`] is spawned on an
+//! ephemeral loopback port — still exercised over real TCP. `--quick`
+//! applies a small CI preset and asserts the accounting invariants
+//! (every submit answered; hot tenant denied; in-SLO tenants complete),
+//! exiting nonzero on violation.
+
+use empa::api::FabricError;
+use empa::coordinator::FabricConfig;
+use empa::serve::{QuotaConfig, ServeConfig, ServePlane, SloConfig, WireClient, WireReply};
+use empa::util::Summary;
+use empa::workload::{Request, TraceConfig, TraceGen};
+use std::process::ExitCode;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+fn main() -> ExitCode {
+    match run(std::env::args().skip(1).collect()) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("loadgen: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+struct Opts {
+    addr: Option<String>,
+    tenants: usize,
+    rate: f64,
+    hot_factor: f64,
+    secs: f64,
+    seed: u64,
+    workers: usize,
+    queue_cap: usize,
+    quota: Option<(f64, f64)>,
+    quick: bool,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            addr: None,
+            tenants: 3,
+            rate: 200.0,
+            hot_factor: 4.0,
+            secs: 2.0,
+            seed: 42,
+            workers: 4,
+            queue_cap: 256,
+            quota: None,
+            quick: false,
+        }
+    }
+}
+
+/// `RATE[:BURST]` — burst defaults to the rate.
+fn parse_shape(s: &str) -> anyhow::Result<(f64, f64)> {
+    let (rate, burst) = match s.split_once(':') {
+        Some((r, b)) => (r.parse::<f64>()?, b.parse::<f64>()?),
+        None => {
+            let r = s.parse::<f64>()?;
+            (r, r)
+        }
+    };
+    anyhow::ensure!(rate >= 0.0 && burst >= 0.0, "quota shape must be non-negative");
+    Ok((rate, burst))
+}
+
+fn parse(args: Vec<String>) -> anyhow::Result<Option<Opts>> {
+    let mut o = Opts::default();
+    let mut it = args.into_iter();
+    while let Some(flag) = it.next() {
+        let mut val =
+            || it.next().ok_or_else(|| anyhow::anyhow!("flag `{flag}` needs a value"));
+        match flag.as_str() {
+            "--addr" => o.addr = Some(val()?),
+            "--tenants" => o.tenants = val()?.parse()?,
+            "--rate" => o.rate = val()?.parse()?,
+            "--hot-factor" => o.hot_factor = val()?.parse()?,
+            "--secs" => o.secs = val()?.parse()?,
+            "--seed" => o.seed = val()?.parse()?,
+            "--workers" => o.workers = val()?.parse()?,
+            "--queue-cap" => o.queue_cap = val()?.parse()?,
+            "--quota" => o.quota = Some(parse_shape(&val()?)?),
+            "--quick" => {
+                // CI smoke preset: ~1 s window, small payloads, a quota
+                // that admits the base rate but not the hot tenant.
+                o.quick = true;
+                o.tenants = 3;
+                o.rate = 150.0;
+                o.hot_factor = 4.0;
+                o.secs = 1.0;
+            }
+            "--help" | "-h" => {
+                println!(
+                    "loadgen [--addr HOST:PORT] [--tenants N] [--rate R] \
+                     [--hot-factor F] [--secs S] [--seed SEED] [--workers N] \
+                     [--queue-cap N] [--quota RATE[:BURST]] [--quick]"
+                );
+                return Ok(None);
+            }
+            other => anyhow::bail!("unknown flag `{other}`; try --help"),
+        }
+    }
+    anyhow::ensure!(o.tenants >= 1, "--tenants must be at least 1");
+    anyhow::ensure!(o.rate > 0.0 && o.secs > 0.0, "--rate and --secs must be positive");
+    Ok(Some(o))
+}
+
+/// Per-tenant outcome counters plus the completed-request latency sample.
+#[derive(Default)]
+struct Counts {
+    ok: usize,
+    quota_denied: usize,
+    shed: usize,
+    queue_full: usize,
+    failed_other: usize,
+    lat_us: Vec<f64>,
+}
+
+struct TenantReport {
+    name: &'static str,
+    hot: bool,
+    sent: usize,
+    counts: Counts,
+    wall: Duration,
+}
+
+impl TenantReport {
+    fn answered(&self) -> usize {
+        let c = &self.counts;
+        c.ok + c.quota_denied + c.shed + c.queue_full + c.failed_other
+    }
+}
+
+/// Replay one tenant's trace: a writer on this thread paced by the
+/// arrival schedule, a reader thread draining replies on a clone of the
+/// same socket. Returns once every sent request has been answered.
+fn drive_tenant(
+    addr: &str,
+    name: &'static str,
+    hot: bool,
+    trace: Vec<Request>,
+    start: Instant,
+) -> anyhow::Result<TenantReport> {
+    let mut tx = WireClient::connect(addr)?;
+    let mut rx = tx.try_clone()?;
+
+    let planned = trace.len();
+    // Submit instants, indexed by wire id - 1 (ids are assigned
+    // monotonically from 1, in submission order). Pushed *before* the
+    // submit so a fast reply can never observe a missing slot; on a
+    // send failure `expect` is rolled back to the count actually sent.
+    let send_times: Arc<Mutex<Vec<Instant>>> = Arc::new(Mutex::new(Vec::with_capacity(planned)));
+    let expect = Arc::new(AtomicUsize::new(planned));
+
+    let reader = {
+        let send_times = Arc::clone(&send_times);
+        let expect = Arc::clone(&expect);
+        std::thread::spawn(move || -> anyhow::Result<Counts> {
+            let mut c = Counts::default();
+            let mut got = 0usize;
+            while got < expect.load(Ordering::Acquire) {
+                let Some(reply) = rx.recv()? else {
+                    anyhow::bail!("server closed with {got} of {} replies received", planned)
+                };
+                got += 1;
+                match reply {
+                    WireReply::Completed { id, .. } => {
+                        c.ok += 1;
+                        let slot = (id as usize).checked_sub(1);
+                        let sent_at =
+                            slot.and_then(|s| send_times.lock().unwrap().get(s).copied());
+                        if let Some(t) = sent_at {
+                            c.lat_us.push(t.elapsed().as_micros() as f64);
+                        }
+                    }
+                    WireReply::Failed { error, .. } => match error {
+                        FabricError::QuotaExceeded { .. } => c.quota_denied += 1,
+                        FabricError::Overloaded { .. } => c.shed += 1,
+                        FabricError::QueueFull => c.queue_full += 1,
+                        _ => c.failed_other += 1,
+                    },
+                    WireReply::MetricsText { .. } => {
+                        anyhow::bail!("unexpected metrics reply on a load connection")
+                    }
+                }
+            }
+            Ok(c)
+        })
+    };
+
+    let mut sent = 0usize;
+    for req in &trace {
+        let target = start + Duration::from_micros(req.arrival_us);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        send_times.lock().unwrap().push(Instant::now());
+        if let Err(e) = tx.submit(&req.job) {
+            eprintln!("loadgen: tenant {name}: send failed after {sent} requests: {e:#}");
+            expect.store(sent, Ordering::Release);
+            break;
+        }
+        sent += 1;
+    }
+    expect.store(sent, Ordering::Release);
+
+    let counts = reader
+        .join()
+        .map_err(|_| anyhow::anyhow!("tenant {name}: reader thread panicked"))??;
+    Ok(TenantReport { name, hot, sent, counts, wall: start.elapsed() })
+}
+
+fn run(args: Vec<String>) -> anyhow::Result<bool> {
+    let Some(o) = parse(args)? else { return Ok(true) };
+
+    // Server-side quota default: between the base rate and the hot rate,
+    // so plain tenants fit and the hot one visibly does not.
+    let (qrate, qburst) = o.quota.unwrap_or((o.rate * 1.5, 16.0));
+    let plane = match &o.addr {
+        Some(_) => None,
+        None => {
+            let fabric =
+                FabricConfig { sim_workers: o.workers, queue_cap: o.queue_cap, ..Default::default() };
+            let slo = SloConfig::for_queue_cap(o.queue_cap);
+            let quota = QuotaConfig::uniform(qrate, qburst);
+            Some(ServePlane::start(ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                fabric,
+                quota,
+                slo,
+                ..Default::default()
+            })?)
+        }
+    };
+    let addr = match (&o.addr, &plane) {
+        (Some(a), _) => a.clone(),
+        (None, Some(p)) => p.local_addr().to_string(),
+        (None, None) => unreachable!(),
+    };
+
+    println!(
+        "loadgen: {} tenants over {addr}, window {:.1}s, base rate {:.0}/s \
+         (tenant t0 hot at x{:.0}), server quota {qrate:.0}:{qburst:.0}",
+        o.tenants, o.secs, o.rate, o.hot_factor
+    );
+
+    // Per-tenant traces: tenant 0 arrives hot_factor times faster AND
+    // sends proportionally more requests over the same wall window.
+    let traces: Vec<(&'static str, bool, Vec<Request>)> = (0..o.tenants)
+        .map(|i| {
+            let name: &'static str = Box::leak(format!("t{i}").into_boxed_str());
+            let hot = i == 0 && o.tenants > 1;
+            let rate = if hot { o.rate * o.hot_factor } else { o.rate };
+            let cfg = TraceConfig {
+                seed: o.seed.wrapping_add(i as u64),
+                num_requests: (rate * o.secs).round() as usize,
+                mean_gap_us: (1e6 / rate) as u64,
+                mass_fraction: 0.5,
+                mass_len: if o.quick { (16, 64) } else { (64, 512) },
+                program_len: if o.quick { (1, 8) } else { (1, 24) },
+                high_priority_fraction: 0.1,
+                deadline: None,
+                client: Some(name),
+            };
+            (name, hot, TraceGen::new(cfg).generate())
+        })
+        .collect();
+
+    let start = Instant::now();
+    let handles: Vec<_> = traces
+        .into_iter()
+        .map(|(name, hot, trace)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || drive_tenant(&addr, name, hot, trace, start))
+        })
+        .collect();
+    let mut reports = Vec::new();
+    for h in handles {
+        reports.push(h.join().map_err(|_| anyhow::anyhow!("tenant thread panicked"))??);
+    }
+    reports.sort_by_key(|r| r.name);
+
+    for r in &reports {
+        let c = &r.counts;
+        let lat = Summary::of(&c.lat_us);
+        let goodput = c.ok as f64 / r.wall.as_secs_f64();
+        println!(
+            "tenant {}{}: sent={} ok={} quota_denied={} shed={} queue_full={} failed={}",
+            r.name,
+            if r.hot { " (hot)" } else { "" },
+            r.sent,
+            c.ok,
+            c.quota_denied,
+            c.shed,
+            c.queue_full,
+            c.failed_other
+        );
+        println!("  latency_us: {lat}");
+        println!("  goodput: {goodput:.1} req/s over {:.2}s", r.wall.as_secs_f64());
+    }
+
+    // Server-side view, over the wire like any other client.
+    let metrics = WireClient::connect(&addr).and_then(|mut c| c.metrics());
+    match metrics {
+        Ok(text) => println!("server metrics:\n{text}"),
+        Err(e) => eprintln!("loadgen: metrics fetch failed: {e:#}"),
+    }
+    if let Some(p) = plane {
+        p.shutdown();
+    }
+
+    if !o.quick {
+        return Ok(true);
+    }
+    // Timing-robust invariants only: exact latencies and deny ratios
+    // vary with load, but accounting must always close.
+    let mut pass = true;
+    let mut check = |ok: bool, msg: String| {
+        if !ok {
+            pass = false;
+            eprintln!("loadgen --quick: FAIL: {msg}");
+        }
+    };
+    for r in &reports {
+        check(
+            r.answered() == r.sent,
+            format!("tenant {}: {} answered of {} sent", r.name, r.answered(), r.sent),
+        );
+        if r.hot {
+            check(
+                r.counts.quota_denied > 0,
+                format!("hot tenant {} saw no quota denials", r.name),
+            );
+        } else {
+            check(r.counts.ok >= 1, format!("in-SLO tenant {} completed nothing", r.name));
+            // Loose liveness bound, not a performance assertion.
+            let lat = Summary::of(&r.counts.lat_us);
+            check(
+                lat.p99 < 10_000_000.0,
+                format!("tenant {}: p99 {:.0}us exceeds 10s liveness bound", r.name, lat.p99),
+            );
+        }
+    }
+    if pass {
+        println!("loadgen --quick: PASS");
+    }
+    Ok(pass)
+}

@@ -1,0 +1,107 @@
+//! `serve` — the EMPA fabric's TCP front door as a standalone binary.
+//!
+//! Binds a [`ServePlane`] (wire protocol + per-tenant quotas + SLO
+//! governor over the fabric) and runs until the configured duration
+//! elapses (or forever with `--secs 0`), then prints the fabric metrics
+//! and the live SLO playbook. Hand-rolled flag parsing — the offline
+//! image has no clap.
+//!
+//! ```text
+//! serve [--addr HOST:PORT] [--workers N] [--queue-cap N]
+//!       [--quota RATE[:BURST]] [--tenant TAG=RATE[:BURST]]...
+//!       [--max-frame BYTES] [--secs S]
+//! ```
+//!
+//! `--quota` sets the default token-bucket shape for every tenant;
+//! `--tenant` overrides one tag. Omitted burst defaults to the rate
+//! (a one-second burst window).
+
+use empa::coordinator::FabricConfig;
+use empa::serve::{QuotaConfig, ServeConfig, ServePlane, SloConfig, MAX_FRAME};
+use std::process::ExitCode;
+use std::time::Duration;
+
+fn main() -> ExitCode {
+    match run(std::env::args().skip(1).collect()) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("serve: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// `RATE[:BURST]` — burst defaults to the rate.
+fn parse_shape(s: &str) -> anyhow::Result<(f64, f64)> {
+    let (rate, burst) = match s.split_once(':') {
+        Some((r, b)) => (r.parse::<f64>()?, b.parse::<f64>()?),
+        None => {
+            let r = s.parse::<f64>()?;
+            (r, r)
+        }
+    };
+    anyhow::ensure!(rate >= 0.0 && burst >= 0.0, "quota shape must be non-negative");
+    Ok((rate, burst))
+}
+
+fn run(args: Vec<String>) -> anyhow::Result<()> {
+    let mut addr = "127.0.0.1:0".to_string();
+    let mut workers = 4usize;
+    let mut queue_cap = 256usize;
+    let mut quota = QuotaConfig::default();
+    let mut max_frame = MAX_FRAME;
+    let mut secs = 0u64;
+
+    let mut it = args.into_iter();
+    while let Some(flag) = it.next() {
+        let mut val = || {
+            it.next().ok_or_else(|| anyhow::anyhow!("flag `{flag}` needs a value"))
+        };
+        match flag.as_str() {
+            "--addr" => addr = val()?,
+            "--workers" => workers = val()?.parse()?,
+            "--queue-cap" => queue_cap = val()?.parse()?,
+            "--quota" => {
+                let (r, b) = parse_shape(&val()?)?;
+                quota.default_rate = r;
+                quota.default_burst = b;
+            }
+            "--tenant" => {
+                let spec = val()?;
+                let (tag, shape) = spec
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("--tenant wants TAG=RATE[:BURST]"))?;
+                let (r, b) = parse_shape(shape)?;
+                quota = quota.with_override(tag, r, b);
+            }
+            "--max-frame" => max_frame = val()?.parse()?,
+            "--secs" => secs = val()?.parse()?,
+            "--help" | "-h" => {
+                println!(
+                    "serve [--addr HOST:PORT] [--workers N] [--queue-cap N] \
+                     [--quota RATE[:BURST]] [--tenant TAG=RATE[:BURST]]... \
+                     [--max-frame BYTES] [--secs S (0 = forever)]"
+                );
+                return Ok(());
+            }
+            other => anyhow::bail!("unknown flag `{other}`; try --help"),
+        }
+    }
+
+    let fabric = FabricConfig { sim_workers: workers, queue_cap, ..Default::default() };
+    let slo = SloConfig::for_queue_cap(queue_cap);
+    let plane = ServePlane::start(ServeConfig { addr, fabric, quota, slo, max_frame })?;
+    println!("serve: listening on {}", plane.local_addr());
+
+    if secs == 0 {
+        // Run until killed.
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(secs));
+    println!("{}", plane.metrics().render());
+    println!("{}", plane.governor().render());
+    plane.shutdown();
+    Ok(())
+}

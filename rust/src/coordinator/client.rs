@@ -105,7 +105,7 @@ impl FabricClient {
     fn account(&self, tag: Option<&str>) {
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         if let Some(t) = tag {
-            self.metrics.client(t).fetch_add(1, Ordering::Relaxed);
+            self.metrics.client(t).submitted.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -125,6 +125,7 @@ impl FabricClient {
             submitted,
             cancel: Arc::clone(&cancel),
             reply: reply_tx,
+            client: tag.clone(),
         };
         let job = Job::new(id, submitted, cancel, reply_rx);
         (Msg::Job { kind: req.kind, ctx }, job, tag)

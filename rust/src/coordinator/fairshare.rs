@@ -1,0 +1,254 @@
+//! Fair-share staging for the supervisor's overflow tier: deficit
+//! round-robin (DRR) across tenant tags, priority-ordered within each
+//! tenant.
+//!
+//! The seed's overflow tier was one global priority heap: under
+//! contention, a tenant that floods the fabric with `High` jobs owns the
+//! heap's head and starves everyone else. [`FairStage`] replaces it with
+//! one priority heap *per tenant tag* and a DRR ring across the tenants
+//! that currently have staged work. Each turn of the ring a tenant earns
+//! a `quantum` of unit-cost job credits and drains up to that many of its
+//! best jobs; then the next tenant gets its turn. The composition rule:
+//!
+//! - **across tenants**: round-robin — a hot tenant's backlog waits its
+//!   turn like everyone else's;
+//! - **within a tenant**: the existing priority order — `High` overtakes
+//!   `Normal` overtakes `Low`, FIFO inside a priority level.
+//!
+//! Fairness engages only at this staging tier, i.e. only under
+//! contention: while the dispatch plane has room, jobs bypass staging
+//! entirely and arrival order rules (the uncontended fabric behaves
+//! exactly as before this layer existed). Untagged jobs form one
+//! implicit tenant (`None`), so anonymous traffic competes as a single
+//! party rather than bypassing fairness.
+
+use crate::api::Priority;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::sync::Arc;
+
+/// One staged entry: the per-tenant heap's ordering key plus the item.
+struct FairEntry<T> {
+    priority: Priority,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for FairEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.priority == other.priority && self.seq == other.seq
+    }
+}
+impl<T> Eq for FairEntry<T> {}
+impl<T> PartialOrd for FairEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for FairEntry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // max-heap: higher priority first, then earlier submission
+        self.priority.cmp(&other.priority).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// A job handed back by [`FairStage::pop`] — carries everything needed
+/// to [`FairStage::requeue`] it unchanged if placement fails.
+pub(crate) struct Popped<T> {
+    pub tag: Option<Arc<str>>,
+    pub priority: Priority,
+    pub seq: u64,
+    pub item: T,
+}
+
+/// DRR staging across tenant tags (see the module docs for the policy).
+pub(crate) struct FairStage<T> {
+    /// Per-tenant priority heap. Invariant: a key is present iff its
+    /// heap is non-empty and the tag sits in `ring` exactly once.
+    queues: HashMap<Option<Arc<str>>, BinaryHeap<FairEntry<T>>>,
+    /// Tenants awaiting their DRR turn, front = next served.
+    ring: VecDeque<Option<Arc<str>>>,
+    /// Unspent job credits for the tenant currently at the ring's front.
+    deficit: HashMap<Option<Arc<str>>, u64>,
+    /// Job credits a tenant earns per ring turn (unit cost per job).
+    quantum: u64,
+    len: usize,
+}
+
+impl<T> FairStage<T> {
+    pub fn new(quantum: u64) -> FairStage<T> {
+        FairStage {
+            queues: HashMap::new(),
+            ring: VecDeque::new(),
+            deficit: HashMap::new(),
+            quantum: quantum.max(1),
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Stage a job under its tenant tag. A tenant staging its first job
+    /// joins the back of the ring — it cannot jump an ongoing rotation.
+    pub fn push(&mut self, tag: Option<Arc<str>>, priority: Priority, seq: u64, item: T) {
+        let newly_active = !self.queues.contains_key(&tag);
+        self.queues
+            .entry(tag.clone())
+            .or_default()
+            .push(FairEntry { priority, seq, item });
+        if newly_active {
+            self.ring.push_back(tag);
+        }
+        self.len += 1;
+    }
+
+    /// The next job under the DRR policy: the front tenant's best entry,
+    /// rotating the ring when its quantum is spent (or its heap empties).
+    pub fn pop(&mut self) -> Option<Popped<T>> {
+        loop {
+            let tag = self.ring.front()?.clone();
+            let Some(q) = self.queues.get_mut(&tag) else {
+                // Stale ring slot (tenant drained via an earlier path).
+                self.ring.pop_front();
+                self.deficit.remove(&tag);
+                continue;
+            };
+            let d = self.deficit.entry(tag.clone()).or_insert(0);
+            if *d == 0 {
+                // New visit: the tenant earns its quantum.
+                *d = self.quantum;
+            }
+            *d -= 1;
+            let turn_over = *d == 0;
+            let e = q.pop().expect("queues holds only non-empty heaps");
+            self.len -= 1;
+            let emptied = q.is_empty();
+            if emptied {
+                self.queues.remove(&tag);
+            }
+            if emptied || turn_over {
+                self.ring.pop_front();
+                self.deficit.remove(&tag);
+                if !emptied {
+                    self.ring.push_back(tag.clone());
+                }
+            }
+            return Some(Popped { tag, priority: e.priority, seq: e.seq, item: e.item });
+        }
+    }
+
+    /// Put a popped job back unchanged (placement failed): the tenant
+    /// returns to the ring's *front* with a one-job credit, so the retry
+    /// serves this same job first — the failed attempt costs the tenant
+    /// nothing and preserves FIFO within its priority level.
+    pub fn requeue(&mut self, p: Popped<T>) {
+        let newly_active = !self.queues.contains_key(&p.tag);
+        self.queues
+            .entry(p.tag.clone())
+            .or_default()
+            .push(FairEntry { priority: p.priority, seq: p.seq, item: p.item });
+        if newly_active {
+            self.ring.push_front(p.tag.clone());
+        }
+        *self.deficit.entry(p.tag).or_insert(0) += 1;
+        self.len += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tag(s: &str) -> Option<Arc<str>> {
+        Some(Arc::from(s))
+    }
+
+    fn drain(f: &mut FairStage<u32>) -> Vec<u32> {
+        let mut out = Vec::new();
+        while let Some(p) = f.pop() {
+            out.push(p.item);
+        }
+        out
+    }
+
+    #[test]
+    fn hot_tenant_cannot_starve_the_rest() {
+        // A stages 10 jobs before B stages 2 — DRR still interleaves, so
+        // B's second job goes out 4th, not 11th.
+        let mut f = FairStage::new(1);
+        for i in 0..10 {
+            f.push(tag("a"), Priority::Normal, i, 100 + i as u32);
+        }
+        f.push(tag("b"), Priority::Normal, 10, 200);
+        f.push(tag("b"), Priority::Normal, 11, 201);
+        assert_eq!(f.len(), 12);
+        let order = drain(&mut f);
+        assert_eq!(&order[..4], &[100, 200, 101, 201], "B interleaves from its first turn");
+        assert_eq!(&order[4..], &[102, 103, 104, 105, 106, 107, 108, 109]);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn priority_overtakes_within_a_tenant_only() {
+        let mut f = FairStage::new(1);
+        f.push(tag("a"), Priority::Low, 0, 1);
+        f.push(tag("a"), Priority::High, 1, 2);
+        f.push(tag("b"), Priority::Normal, 2, 3);
+        // A's High beats A's earlier Low; B's Normal is not overtaken by
+        // A's High — fairness is cross-tenant, priority is intra-tenant.
+        assert_eq!(drain(&mut f), vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn quantum_drains_bursts_per_turn() {
+        let mut f = FairStage::new(2);
+        for i in 0..4 {
+            f.push(tag("a"), Priority::Normal, i, 10 + i as u32);
+        }
+        for i in 4..8 {
+            f.push(tag("b"), Priority::Normal, i, 20 + (i - 4) as u32);
+        }
+        assert_eq!(drain(&mut f), vec![10, 11, 20, 21, 12, 13, 22, 23]);
+    }
+
+    #[test]
+    fn untagged_jobs_form_one_implicit_tenant() {
+        let mut f = FairStage::new(1);
+        f.push(None, Priority::Normal, 0, 1);
+        f.push(None, Priority::Normal, 1, 2);
+        f.push(tag("a"), Priority::Normal, 2, 3);
+        assert_eq!(drain(&mut f), vec![1, 3, 2], "anonymous traffic is a single party");
+    }
+
+    #[test]
+    fn requeue_retries_the_same_job_first() {
+        let mut f = FairStage::new(1);
+        f.push(tag("a"), Priority::Normal, 0, 1);
+        f.push(tag("b"), Priority::Normal, 1, 2);
+        let p = f.pop().unwrap();
+        assert_eq!(p.item, 1);
+        f.requeue(p);
+        assert_eq!(f.len(), 2);
+        // the failed placement costs A nothing: same job, same turn
+        assert_eq!(f.pop().unwrap().item, 1);
+        assert_eq!(f.pop().unwrap().item, 2);
+        assert!(f.pop().is_none());
+    }
+
+    #[test]
+    fn reactivated_tenant_rejoins_at_the_back() {
+        let mut f = FairStage::new(1);
+        f.push(tag("a"), Priority::Normal, 0, 1);
+        assert_eq!(f.pop().unwrap().item, 1);
+        assert!(f.is_empty());
+        // A went idle; B arrives, then A again — B is served first.
+        f.push(tag("b"), Priority::Normal, 1, 2);
+        f.push(tag("a"), Priority::Normal, 2, 3);
+        assert_eq!(drain(&mut f), vec![2, 3]);
+    }
+}

@@ -18,6 +18,24 @@ pub struct WorkerStats {
     pub executed: AtomicU64,
 }
 
+/// Per-tenant accounting: the full admission ledger for one client tag.
+/// `submitted = accepted-and-resolved + still-in-flight + quota_denied +
+/// shed + fabric rejections` — the serve plane's acceptance test checks
+/// that every request a tenant sent is accounted for in exactly one of
+/// these buckets.
+#[derive(Debug, Default)]
+pub struct ClientStats {
+    /// Requests carrying this tag that reached admission (in-process
+    /// `submit` or the serve plane's front door).
+    pub submitted: AtomicU64,
+    /// Jobs that were admitted *and* completed successfully.
+    pub accepted: AtomicU64,
+    /// Requests shed by an SLO rule before reaching the fabric.
+    pub shed: AtomicU64,
+    /// Requests denied by this tenant's token-bucket quota.
+    pub quota_denied: AtomicU64,
+}
+
 /// Counters for one named backend (`sim`, `native`, `xla`, ...).
 #[derive(Debug, Default)]
 pub struct BackendStats {
@@ -93,8 +111,14 @@ pub struct FabricMetrics {
     /// Program jobs served by patching data spans into the worker's
     /// already-loaded template image (no image copy, no memory reload).
     pub image_reuses: AtomicU64,
+    /// Serve plane: requests denied by a tenant token-bucket quota
+    /// (summed over tenants; the per-tenant split is in `client(tag)`).
+    pub quota_denied: AtomicU64,
+    /// Serve plane: requests shed by a tripped SLO rule (per-rule split
+    /// in the SLO governor's own render).
+    pub slo_shed: AtomicU64,
     backends: Mutex<HashMap<String, Arc<BackendStats>>>,
-    clients: Mutex<HashMap<String, Arc<AtomicU64>>>,
+    clients: Mutex<HashMap<String, Arc<ClientStats>>>,
     workers: Mutex<Vec<Arc<WorkerStats>>>,
 }
 
@@ -145,8 +169,8 @@ impl FabricMetrics {
         g.iter().map(|w| w.depth.load(Ordering::Relaxed)).sum()
     }
 
-    /// Per-client submission counter, created on first touch.
-    pub fn client(&self, tag: &str) -> Arc<AtomicU64> {
+    /// Per-tenant counters, created on first touch.
+    pub fn client(&self, tag: &str) -> Arc<ClientStats> {
         let mut g = self.clients.lock().unwrap();
         Arc::clone(g.entry(tag.to_string()).or_default())
     }
@@ -283,13 +307,27 @@ impl FabricMetrics {
                 g(&b.errors),
             ));
         }
+        if g(&self.quota_denied) + g(&self.slo_shed) > 0 {
+            out.push_str(&format!(
+                "\n  serve plane: quota_denied={} slo_shed={}",
+                g(&self.quota_denied),
+                g(&self.slo_shed),
+            ));
+        }
         let clients = self.clients.lock().unwrap();
         if !clients.is_empty() {
             let mut tags: Vec<&String> = clients.keys().collect();
             tags.sort();
-            out.push_str("\n  clients:");
+            out.push_str("\n  tenants:");
             for t in tags {
-                out.push_str(&format!(" {t}={}", clients[t].load(Ordering::Relaxed)));
+                let c = &clients[t];
+                out.push_str(&format!(
+                    " {t}[submitted={} accepted={} shed={} quota_denied={}]",
+                    g(&c.submitted),
+                    g(&c.accepted),
+                    g(&c.shed),
+                    g(&c.quota_denied),
+                ));
             }
         }
         out
@@ -400,9 +438,28 @@ mod tests {
     #[test]
     fn client_counters_accumulate() {
         let m = FabricMetrics::default();
-        m.client("tenant-a").fetch_add(2, Ordering::Relaxed);
-        m.client("tenant-a").fetch_add(1, Ordering::Relaxed);
-        assert_eq!(m.client("tenant-a").load(Ordering::Relaxed), 3);
-        assert!(m.render().contains("tenant-a=3"));
+        m.client("tenant-a").submitted.fetch_add(2, Ordering::Relaxed);
+        m.client("tenant-a").submitted.fetch_add(1, Ordering::Relaxed);
+        m.client("tenant-a").accepted.fetch_add(2, Ordering::Relaxed);
+        m.client("tenant-b").quota_denied.fetch_add(4, Ordering::Relaxed);
+        m.client("tenant-b").shed.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(m.client("tenant-a").submitted.load(Ordering::Relaxed), 3);
+        let r = m.render();
+        assert!(r.contains("tenants:"), "{r}");
+        assert!(r.contains("tenant-a[submitted=3 accepted=2 shed=0 quota_denied=0]"), "{r}");
+        assert!(r.contains("tenant-b[submitted=0 accepted=0 shed=1 quota_denied=4]"), "{r}");
+        let a = r.find("tenant-a").unwrap();
+        let b = r.find("tenant-b").unwrap();
+        assert!(a < b, "tenants render sorted by tag");
+    }
+
+    #[test]
+    fn serve_plane_line_is_hidden_until_a_denial_or_shed() {
+        let m = FabricMetrics::default();
+        assert!(!m.render().contains("serve plane"), "hidden while zero");
+        m.quota_denied.fetch_add(3, Ordering::Relaxed);
+        m.slo_shed.fetch_add(1, Ordering::Relaxed);
+        let r = m.render();
+        assert!(r.contains("serve plane: quota_denied=3 slo_shed=1"), "{r}");
     }
 }

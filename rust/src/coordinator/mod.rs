@@ -41,6 +41,7 @@
 pub mod backend;
 pub mod client;
 pub mod dispatch;
+pub(crate) mod fairshare;
 pub mod metrics;
 pub mod router;
 
@@ -53,13 +54,14 @@ pub use backend::{
 };
 pub use client::FabricClient;
 pub use dispatch::DispatchPlane;
-pub use metrics::{BackendStats, FabricMetrics, WorkerStats};
+pub use metrics::{BackendStats, ClientStats, FabricMetrics, WorkerStats};
 pub use router::RoutePolicy;
 
 use crate::accel::{Batch, Batcher, BatcherConfig, MassOp, MassRequest, MassResult, TilePool};
 use crate::empa::EmpaConfig;
 use crate::workload::Request;
-use std::collections::{BinaryHeap, HashMap};
+use fairshare::{FairStage, Popped};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering::AcqRel, Ordering::Relaxed};
 use std::sync::mpsc::{self, sync_channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -100,7 +102,9 @@ impl Default for FabricConfig {
 
 /// Pre-registry reply enum, kept only so downstream code migrating to the
 /// typed API can convert at the boundary. New code matches on
-/// [`Output`] / [`FabricError`] instead.
+/// [`Output`] / [`FabricError`] instead. Nothing inside this crate uses
+/// the shim anymore — its only remaining references are its own
+/// compatibility tests (`legacy_response_shim_flattens_results` below).
 #[deprecated(note = "match on `api::Output` and `api::FabricError` via `Job::wait`")]
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
@@ -145,6 +149,8 @@ pub(crate) struct JobCtx {
     pub submitted: Instant,
     pub cancel: Arc<AtomicBool>,
     pub reply: Sender<JobResult>,
+    /// Tenant tag: keys fair-share staging and per-tenant accounting.
+    pub client: Option<Arc<str>>,
 }
 
 impl JobCtx {
@@ -182,6 +188,9 @@ impl JobCtx {
         dispatched: Instant,
     ) {
         metrics.completed.fetch_add(1, Relaxed);
+        if let Some(t) = &self.client {
+            metrics.client(t).accepted.fetch_add(1, Relaxed);
+        }
         let now = Instant::now();
         let _ = self.reply.send(Ok(Completion {
             output,
@@ -317,33 +326,6 @@ enum AccelMsg {
     Batch { op: MassOp, batch: Batch<MassJob>, scale_bias: [f32; 2] },
 }
 
-/// Program job parked in the supervisor's overflow heap, ordered by
-/// (priority, FIFO).
-struct Staged {
-    priority: Priority,
-    seq: u64,
-    kind: RequestKind,
-    ctx: JobCtx,
-}
-
-impl PartialEq for Staged {
-    fn eq(&self, other: &Self) -> bool {
-        self.priority == other.priority && self.seq == other.seq
-    }
-}
-impl Eq for Staged {}
-impl PartialOrd for Staged {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Staged {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // max-heap: higher priority first, then earlier submission
-        self.priority.cmp(&other.priority).then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
 // ----------------------------------------------------------------------
 // the fabric
 // ----------------------------------------------------------------------
@@ -466,11 +448,14 @@ impl Fabric {
 const STAGED_RETRY: Duration = Duration::from_micros(200);
 
 /// The supervisor thread's state: the dispatch plane it feeds, the mass
-/// lane's batchers, and the bounded overflow heap that holds program jobs
-/// when every lane is full (priority-ordered, so High still overtakes).
+/// lane's batchers, and the bounded fair-share stage that holds program
+/// jobs when every lane is full ([`FairStage`]: deficit-round-robin
+/// across tenant tags, priority-ordered within each tenant — so a hot
+/// tenant's backlog cannot starve the rest, while `High` still overtakes
+/// within its own tenant).
 ///
 /// Backpressure is tiered: jobs stage on the plane's per-worker deques
-/// first (total `queue_cap`), then in the overflow heap (another
+/// first (total `queue_cap`), then in the fair stage (another
 /// `queue_cap`); only when **both** are full does the supervisor pause
 /// ingestion, which callers observe as `QueueFull` on the bounded ingress
 /// queue. Inline and accelerator jobs keep flowing until that point —
@@ -482,7 +467,7 @@ struct Supervisor {
     cfg: FabricConfig,
     metrics: Arc<FabricMetrics>,
     batchers: HashMap<MassOp, Batcher<MassJob>>,
-    staged: BinaryHeap<Staged>,
+    staged: FairStage<(RequestKind, JobCtx)>,
     staged_cap: usize,
     seq: u64,
     inline_stats: Arc<BackendStats>,
@@ -503,7 +488,7 @@ impl Supervisor {
             cfg,
             metrics,
             batchers: HashMap::new(),
-            staged: BinaryHeap::new(),
+            staged: FairStage::new(1),
             staged_cap,
             seq: 0,
             inline_stats,
@@ -575,20 +560,24 @@ impl Supervisor {
         self.shutdown_drain();
     }
 
-    /// Move overflowed program jobs onto the plane while lanes have room.
+    /// Move staged program jobs onto the plane (in DRR order) while lanes
+    /// have room.
     fn refill_plane(&mut self) {
-        while let Some(s) = self.staged.pop() {
-            if !s.ctx.admit(&self.metrics) {
+        while let Some(p) = self.staged.pop() {
+            let (kind, ctx) = p.item;
+            if !ctx.admit(&self.metrics) {
                 continue;
             }
-            let (priority, seq) = (s.priority, s.seq);
-            match self.plane.try_place(priority, SimTask::Run { kind: s.kind, ctx: s.ctx }) {
+            let (tag, priority, seq) = (p.tag, p.priority, p.seq);
+            match self.plane.try_place(priority, SimTask::Run { kind, ctx }) {
                 Ok(_) => {}
                 Err(SimTask::Run { kind, ctx }) => {
-                    self.staged.push(Staged { priority, seq, kind, ctx });
+                    // Placement failed: hand the job back unchanged — the
+                    // tenant retries it first, at no DRR cost.
+                    self.staged.requeue(Popped { tag, priority, seq, item: (kind, ctx) });
                     break;
                 }
-                Err(SimTask::Shard(_)) => unreachable!("overflow holds only Run tasks"),
+                Err(SimTask::Shard(_)) => unreachable!("the stage holds only Run tasks"),
             }
         }
     }
@@ -600,18 +589,18 @@ impl Supervisor {
                 self.metrics.routed_sim.fetch_add(1, Relaxed);
                 self.seq += 1;
                 let seq = self.seq;
-                // FIFO within a priority: bypass the overflow heap only
-                // when it is empty.
+                // FIFO within a priority: bypass the fair stage only
+                // when it is empty (fairness engages under contention).
                 if self.staged.is_empty() {
                     match self.plane.try_place(ctx.priority, SimTask::Run { kind, ctx }) {
                         Ok(_) => {}
                         Err(SimTask::Run { kind, ctx }) => {
-                            self.staged.push(Staged { priority: ctx.priority, seq, kind, ctx });
+                            self.staged.push(ctx.client.clone(), ctx.priority, seq, (kind, ctx));
                         }
                         Err(SimTask::Shard(_)) => unreachable!("placed a Run task"),
                     }
                 } else {
-                    self.staged.push(Staged { priority: ctx.priority, seq, kind, ctx });
+                    self.staged.push(ctx.client.clone(), ctx.priority, seq, (kind, ctx));
                 }
             }
             Route::Inline => {
@@ -755,16 +744,17 @@ impl Supervisor {
         }
     }
 
-    /// Shutdown drain: overflowed programs onto the plane (uncapped —
+    /// Shutdown drain: staged programs onto the plane (uncapped —
     /// workers are still up and will finish the backlog), pending batches
     /// to the mass worker, then close the plane. Dropping `acc_tx` with
     /// `self` disconnects the mass worker once it has drained.
     fn shutdown_drain(mut self) {
-        while let Some(s) = self.staged.pop() {
-            if !s.ctx.admit(&self.metrics) {
+        while let Some(p) = self.staged.pop() {
+            let (kind, ctx) = p.item;
+            if !ctx.admit(&self.metrics) {
                 continue;
             }
-            self.plane.place(s.priority, SimTask::Run { kind: s.kind, ctx: s.ctx });
+            self.plane.place(p.priority, SimTask::Run { kind, ctx });
         }
         let batchers = std::mem::take(&mut self.batchers);
         for (op, mut b) in batchers {
@@ -1325,6 +1315,7 @@ mod tests {
             submitted: Instant::now(),
             cancel: Arc::clone(&cancel),
             reply: tx,
+            client: None,
         };
         let gather = Arc::new(ShardGather {
             a: vec![1.0; 8].into(),

@@ -12,7 +12,10 @@
 //!   coordinator ([`coordinator`]) that routes work across a named
 //!   registry of backends — the simulated EMPA pool (`sim`), native mass
 //!   ops (`native`), and an external accelerator (`xla`) linked through
-//!   the paper's §3.8 signal/data interface ([`accel`]).
+//!   the paper's §3.8 signal/data interface ([`accel`]). A network serve
+//!   plane ([`serve`]) puts a TCP front door on the fabric: a hand-rolled
+//!   wire protocol, per-tenant token-bucket quotas, fair-share staging,
+//!   and SLO-driven load shedding.
 //! - **Layer 2/1 (build-time Python)** — a JAX/Pallas mass-processing
 //!   accelerator, AOT-lowered to HLO text under `artifacts/`, loaded and
 //!   executed from Rust via PJRT ([`runtime`]; gated behind the
@@ -33,6 +36,7 @@ pub mod mem;
 pub mod metrics;
 pub mod os;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 pub mod workload;
 

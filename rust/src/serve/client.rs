@@ -1,0 +1,107 @@
+//! A minimal blocking client for the serve plane's wire protocol —
+//! used by the `loadgen` binary, the `fabric_serve` example, and the
+//! loopback integration tests.
+//!
+//! The client is deliberately dumb: it frames and unframes, nothing
+//! more. Correlation is by the caller-visible request id ([`WireClient`]
+//! assigns them monotonically), so a caller can pipeline submissions on
+//! one socket and match replies out of order — or use [`WireClient::call`]
+//! for the simple submit-and-wait shape.
+
+use super::wire::{
+    decode_reply, encode_request, read_frame, write_frame, WireReply, WireRequest, MAX_FRAME,
+};
+use crate::api::{JobRequest, JobResult};
+use anyhow::{bail, Context};
+use std::net::TcpStream;
+
+/// Blocking wire-protocol client over one TCP connection.
+pub struct WireClient {
+    stream: TcpStream,
+    next_id: u64,
+    max_frame: usize,
+}
+
+impl WireClient {
+    /// Connect to a serve plane.
+    pub fn connect(addr: impl std::net::ToSocketAddrs + std::fmt::Debug) -> anyhow::Result<WireClient> {
+        let stream =
+            TcpStream::connect(&addr).with_context(|| format!("connect to serve plane {addr:?}"))?;
+        Ok(WireClient { stream, next_id: 0, max_frame: MAX_FRAME })
+    }
+
+    /// Override the frame cap (must match the server's to be useful).
+    pub fn with_max_frame(mut self, cap: usize) -> WireClient {
+        self.max_frame = cap;
+        self
+    }
+
+    /// A second handle on the same socket (shared kernel stream). The
+    /// intended split: one side only writes (submit), the other only
+    /// reads (recv) — e.g. loadgen's per-tenant sender/receiver pair.
+    pub fn try_clone(&self) -> anyhow::Result<WireClient> {
+        Ok(WireClient {
+            stream: self.stream.try_clone().context("clone wire stream")?,
+            next_id: self.next_id,
+            max_frame: self.max_frame,
+        })
+    }
+
+    /// Submit one job; returns the request id its reply will carry.
+    pub fn submit(&mut self, req: &JobRequest) -> anyhow::Result<u64> {
+        self.next_id += 1;
+        let id = self.next_id;
+        let payload = encode_request(&WireRequest::submit(id, req));
+        write_frame(&mut self.stream, &payload, self.max_frame).context("write submit frame")?;
+        Ok(id)
+    }
+
+    /// Read the next reply frame. `Ok(None)` means the server closed the
+    /// connection cleanly.
+    pub fn recv(&mut self) -> anyhow::Result<Option<WireReply>> {
+        match read_frame(&mut self.stream, self.max_frame).context("read reply frame")? {
+            None => Ok(None),
+            Some(p) => Ok(Some(decode_reply(&p).context("decode reply")?)),
+        }
+    }
+
+    /// Submit one job and block for *its* reply (single-in-flight use;
+    /// replies to other outstanding ids would be misordered — pipeline
+    /// with [`WireClient::submit`]/[`WireClient::recv`] instead).
+    pub fn call(&mut self, req: &JobRequest) -> anyhow::Result<JobResult> {
+        let id = self.submit(req)?;
+        loop {
+            let Some(reply) = self.recv()? else {
+                bail!("server closed the connection before replying to request {id}")
+            };
+            match reply {
+                WireReply::Completed { id: rid, completion } if rid == id => {
+                    return Ok(Ok(completion))
+                }
+                WireReply::Failed { id: rid, error } if rid == id => return Ok(Err(error)),
+                WireReply::MetricsText { .. } => bail!("unexpected metrics reply to a submit"),
+                other => bail!("reply for id {} while waiting for {id}", other.id()),
+            }
+        }
+    }
+
+    /// Fetch the server's rendered metrics + SLO playbook.
+    pub fn metrics(&mut self) -> anyhow::Result<String> {
+        self.next_id += 1;
+        let id = self.next_id;
+        let payload = encode_request(&WireRequest::Metrics { id });
+        write_frame(&mut self.stream, &payload, self.max_frame).context("write metrics frame")?;
+        loop {
+            let Some(reply) = self.recv()? else {
+                bail!("server closed the connection before the metrics reply")
+            };
+            match reply {
+                WireReply::MetricsText { id: rid, text } if rid == id => return Ok(text),
+                // A straggling completion from earlier pipelined work is
+                // not an error here; skip it.
+                WireReply::Completed { .. } | WireReply::Failed { .. } => continue,
+                other => bail!("mismatched metrics reply id {}", other.id()),
+            }
+        }
+    }
+}

@@ -1,0 +1,323 @@
+//! `empa::serve` — the fabric's network front door.
+//!
+//! A [`ServePlane`] binds a TCP listener and speaks the hand-rolled
+//! length-prefixed frame protocol in [`wire`]: requests map onto the
+//! existing typed [`JobRequest`] admission path, replies carry the full
+//! [`Completion`] / [`FabricError`](crate::api::FabricError) vocabulary
+//! back to the client. Stacked in front of `try_submit` are the two
+//! serve-plane policy layers:
+//!
+//! 1. **SLO governor** ([`slo`]) — playbook threshold rules over
+//!    `FabricMetrics` that trip backpressure/shed; a refused request
+//!    gets a typed `Overloaded { rule }` wire error and is counted per
+//!    tenant and per rule.
+//! 2. **Per-tenant quotas** ([`quota`]) — token buckets keyed by client
+//!    tag; an exhausted bucket is a typed `QuotaExceeded { tenant }`
+//!    error, again before the fabric is ever asked.
+//!
+//! Admitted jobs flow through the fabric's normal bounded-queue
+//! admission (`QueueFull` is still possible) and the coordinator's
+//! fair-share staging keyed by the same tenant tag, so one hot tenant
+//! saturating its quota still cannot starve the others inside the
+//! fabric.
+//!
+//! Threading: one nonblocking acceptor polling a stop flag, one blocking
+//! reader thread per connection, and one detached waiter thread per
+//! in-flight job (replies are written under a per-connection mutex, so
+//! out-of-order completions interleave safely on the wire). Simple over
+//! scalable — the fabric behind it is a simulator; the serve plane's job
+//! is correctness of the admission story, not C10K.
+
+pub mod client;
+pub mod quota;
+pub mod slo;
+pub mod wire;
+
+pub use client::WireClient;
+pub use quota::{QuotaConfig, QuotaTable, TokenBucket};
+pub use slo::{SloAction, SloConfig, SloGovernor, SloRule, SloSnapshot};
+pub use wire::{CodecError, WireReply, WireRequest, MAX_FRAME, WIRE_VERSION};
+
+use crate::api::FabricError;
+use crate::coordinator::{Fabric, FabricConfig, FabricMetrics};
+use anyhow::Context;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Serve-plane configuration.
+pub struct ServeConfig {
+    /// Listen address; port 0 picks an ephemeral port (tests, loadgen).
+    pub addr: String,
+    /// The fabric to start behind the listener.
+    pub fabric: FabricConfig,
+    /// Per-tenant admission quotas (default: unlimited).
+    pub quota: QuotaConfig,
+    /// SLO playbook (default: scaled to the fabric's `queue_cap`).
+    pub slo: SloConfig,
+    /// Frame-size cap enforced on both directions.
+    pub max_frame: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let fabric = FabricConfig::default();
+        let slo = SloConfig::for_queue_cap(fabric.queue_cap);
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            fabric,
+            quota: QuotaConfig::default(),
+            slo,
+            max_frame: MAX_FRAME,
+        }
+    }
+}
+
+/// The running serve plane: listener + fabric + policy layers.
+pub struct ServePlane {
+    fabric: Arc<Fabric>,
+    governor: Arc<SloGovernor>,
+    local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    /// Registered connection streams, shut down to unblock readers.
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    /// Handler threads, registered by the acceptor as they spawn.
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl ServePlane {
+    /// Bind the listener, start the fabric, and begin accepting.
+    pub fn start(cfg: ServeConfig) -> anyhow::Result<ServePlane> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind serve listener on {}", cfg.addr))?;
+        let local_addr = listener.local_addr().context("serve listener local addr")?;
+        listener.set_nonblocking(true).context("nonblocking serve listener")?;
+
+        let fabric = Fabric::start_local(cfg.fabric);
+        let governor = Arc::new(SloGovernor::new(cfg.slo));
+        let quota = Arc::new(QuotaTable::new(cfg.quota));
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::default();
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::default();
+
+        let acceptor = {
+            let fabric = Arc::clone(&fabric);
+            let governor = Arc::clone(&governor);
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            let handlers = Arc::clone(&handlers);
+            let max_frame = cfg.max_frame;
+            std::thread::Builder::new()
+                .name("empa-serve-accept".into())
+                .spawn(move || {
+                    accept_loop(listener, fabric, governor, quota, stop, conns, handlers, max_frame)
+                })
+                .context("spawn serve acceptor")?
+        };
+
+        Ok(ServePlane {
+            fabric,
+            governor,
+            local_addr,
+            stop,
+            conns,
+            threads: Mutex::new(vec![acceptor]),
+            handlers,
+        })
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    /// The fabric behind the listener.
+    pub fn fabric(&self) -> &Arc<Fabric> {
+        &self.fabric
+    }
+
+    /// Shared fabric metrics.
+    pub fn metrics(&self) -> &FabricMetrics {
+        &self.fabric.metrics
+    }
+
+    /// The SLO governor (its `render()` is the live playbook).
+    pub fn governor(&self) -> &SloGovernor {
+        &self.governor
+    }
+
+    /// Stop accepting, unblock and join every connection handler, then
+    /// shut the fabric down (pending jobs complete first). Idempotent.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        // Unblock handler reads: a blocking `read` on a shut-down socket
+        // returns 0, which the codec reports as clean EOF.
+        for s in self.conns.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        for t in self.threads.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+        for t in self.handlers.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+        self.fabric.shutdown();
+    }
+}
+
+/// How often the nonblocking acceptor polls the stop flag.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: TcpListener,
+    fabric: Arc<Fabric>,
+    governor: Arc<SloGovernor>,
+    quota: Arc<QuotaTable>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    max_frame: usize,
+) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // The listener is nonblocking; the accepted stream must
+                // not inherit that — handlers read blocking.
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let Ok(registered) = stream.try_clone() else { continue };
+                conns.lock().unwrap().push(registered);
+                let fabric = Arc::clone(&fabric);
+                let governor = Arc::clone(&governor);
+                let quota = Arc::clone(&quota);
+                let spawned = std::thread::Builder::new()
+                    .name("empa-serve-conn".into())
+                    .spawn(move || handle_conn(stream, fabric, governor, quota, max_frame));
+                if let Ok(h) = spawned {
+                    handlers.lock().unwrap().push(h);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// Write one reply frame under the connection's write lock (completions
+/// from different waiter threads interleave frame-atomically).
+fn send_reply(out: &Mutex<TcpStream>, reply: &WireReply, max_frame: usize) {
+    let payload = wire::encode_reply(reply);
+    let mut g = out.lock().unwrap();
+    let _ = wire::write_frame(&mut *g, &payload, max_frame);
+}
+
+/// One connection: read frames until EOF/error, run each request through
+/// the admission stack, spawn a waiter per accepted job.
+fn handle_conn(
+    mut stream: TcpStream,
+    fabric: Arc<Fabric>,
+    governor: Arc<SloGovernor>,
+    quota: Arc<QuotaTable>,
+    max_frame: usize,
+) {
+    let Ok(write_half) = stream.try_clone() else { return };
+    let out = Arc::new(Mutex::new(write_half));
+    loop {
+        let payload = match wire::read_frame(&mut stream, max_frame) {
+            Ok(Some(p)) => p,
+            Ok(None) => return, // clean EOF
+            Err(_) => return,   // transport error or oversized frame: drop the connection
+        };
+        let req = match wire::decode_request(&payload) {
+            Ok(r) => r,
+            Err(e) => {
+                // Malformed payload: the stream itself still frames
+                // correctly, so answer with a typed error (id 0 — the
+                // real id may be part of what failed to decode) and
+                // stop trusting the connection.
+                let reply = WireReply::Failed {
+                    id: 0,
+                    error: FabricError::InvalidConfig(format!("bad request frame: {e}")),
+                };
+                send_reply(&out, &reply, max_frame);
+                return;
+            }
+        };
+        match req {
+            WireRequest::Metrics { id } => {
+                let text = format!("{}\n{}", fabric.metrics.render(), governor.render());
+                send_reply(&out, &WireReply::MetricsText { id, text }, max_frame);
+            }
+            submit @ WireRequest::Submit { .. } => {
+                let id = submit.id();
+                let job_req = submit.into_job().expect("Submit carries a job");
+                let tenant = job_req.client.clone();
+                let metrics = &fabric.metrics;
+                let tenant_stats = tenant.as_deref().map(|t| metrics.client(t));
+                let now = Instant::now();
+
+                // 1) SLO governor: policy shed before any queue.
+                if let Some((rule, action)) = governor.decide(metrics, now) {
+                    if action.refuses(job_req.priority) {
+                        metrics.slo_shed.fetch_add(1, Ordering::Relaxed);
+                        if let Some(s) = &tenant_stats {
+                            s.submitted.fetch_add(1, Ordering::Relaxed);
+                            s.shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        governor.note_shed(rule);
+                        let error = FabricError::Overloaded { rule: rule.to_string() };
+                        send_reply(&out, &WireReply::Failed { id, error }, max_frame);
+                        continue;
+                    }
+                }
+
+                // 2) Token-bucket quota: the tenant's own budget.
+                if !quota.admit(tenant.as_deref(), now) {
+                    metrics.quota_denied.fetch_add(1, Ordering::Relaxed);
+                    if let Some(s) = &tenant_stats {
+                        s.submitted.fetch_add(1, Ordering::Relaxed);
+                        s.quota_denied.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let error = FabricError::QuotaExceeded {
+                        tenant: tenant.as_deref().unwrap_or("").to_string(),
+                    };
+                    send_reply(&out, &WireReply::Failed { id, error }, max_frame);
+                    continue;
+                }
+
+                // 3) The fabric's own bounded admission. `try_submit`
+                //    accounts per-tenant `submitted` on success; failures
+                //    here still count toward the tenant's ledger.
+                match fabric.try_submit(job_req) {
+                    Ok(job) => {
+                        let out = Arc::clone(&out);
+                        // Detached waiter: resolves whenever the fabric
+                        // does; the write lock orders frames.
+                        let _ = std::thread::Builder::new()
+                            .name("empa-serve-wait".into())
+                            .spawn(move || {
+                                let reply = match job.wait() {
+                                    Ok(completion) => WireReply::Completed { id, completion },
+                                    Err(error) => WireReply::Failed { id, error },
+                                };
+                                send_reply(&out, &reply, max_frame);
+                            });
+                    }
+                    Err(error) => {
+                        if let Some(s) = &tenant_stats {
+                            s.submitted.fetch_add(1, Ordering::Relaxed);
+                        }
+                        send_reply(&out, &WireReply::Failed { id, error }, max_frame);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Per-tenant admission quotas for the serve plane: classic token
+//! buckets keyed by client tag.
+//!
+//! A tenant's bucket refills at `rate` tokens/second up to `burst`
+//! capacity; each submitted job costs one token. Admission is decided
+//! *before* the fabric is asked — a denied request costs the fabric
+//! nothing, which is the point: quotas bound what a tenant can even
+//! attempt, while the SLO governor (see [`crate::serve::slo`]) bounds
+//! what the fabric as a whole will absorb.
+//!
+//! Time is passed in explicitly (`now: Instant`) rather than read from
+//! the clock inside, so tests drive refill deterministically with
+//! synthetic instants.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One tenant's refillable budget.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    /// Tokens added per second. `f64::INFINITY` means unlimited.
+    rate: f64,
+    /// Maximum tokens the bucket holds (also the initial fill).
+    burst: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// A bucket born full.
+    pub fn new(rate: f64, burst: f64, now: Instant) -> TokenBucket {
+        let burst = burst.max(0.0);
+        TokenBucket { rate: rate.max(0.0), burst, tokens: burst, last: now }
+    }
+
+    /// Refill for the elapsed time, then try to spend one token.
+    pub fn try_take(&mut self, now: Instant) -> bool {
+        if self.rate.is_infinite() {
+            return true;
+        }
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Tokens currently available (after a refill to `now`) — metrics
+    /// only, does not spend.
+    pub fn available(&mut self, now: Instant) -> f64 {
+        if self.rate.is_infinite() {
+            return f64::INFINITY;
+        }
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        self.tokens
+    }
+}
+
+/// Quota policy: a default bucket shape plus per-tenant overrides.
+#[derive(Debug, Clone)]
+pub struct QuotaConfig {
+    /// Bucket shape for tenants without an override. The default is
+    /// unlimited — quotas are opt-in per deployment.
+    pub default_rate: f64,
+    pub default_burst: f64,
+    /// `(tag, rate, burst)` per-tenant overrides.
+    pub overrides: Vec<(String, f64, f64)>,
+}
+
+impl Default for QuotaConfig {
+    fn default() -> Self {
+        QuotaConfig {
+            default_rate: f64::INFINITY,
+            default_burst: f64::INFINITY,
+            overrides: Vec::new(),
+        }
+    }
+}
+
+impl QuotaConfig {
+    /// Same default shape for everyone.
+    pub fn uniform(rate: f64, burst: f64) -> QuotaConfig {
+        QuotaConfig { default_rate: rate, default_burst: burst, overrides: Vec::new() }
+    }
+
+    /// Add a per-tenant override.
+    pub fn with_override(mut self, tag: impl Into<String>, rate: f64, burst: f64) -> QuotaConfig {
+        self.overrides.push((tag.into(), rate, burst));
+        self
+    }
+
+    fn shape_for(&self, tag: &str) -> (f64, f64) {
+        self.overrides
+            .iter()
+            .rev() // later overrides win
+            .find(|(t, _, _)| t == tag)
+            .map(|(_, r, b)| (*r, *b))
+            .unwrap_or((self.default_rate, self.default_burst))
+    }
+}
+
+/// The serve plane's admission table: one lazily-created bucket per
+/// tenant tag. Untagged requests share the `""` bucket — anonymity is
+/// not a way around the default quota.
+pub struct QuotaTable {
+    cfg: QuotaConfig,
+    buckets: Mutex<HashMap<String, TokenBucket>>,
+}
+
+impl QuotaTable {
+    pub fn new(cfg: QuotaConfig) -> QuotaTable {
+        QuotaTable { cfg, buckets: Mutex::new(HashMap::new()) }
+    }
+
+    /// Spend one token from `tenant`'s bucket (creating it full on first
+    /// sight). `true` = admitted.
+    pub fn admit(&self, tenant: Option<&str>, now: Instant) -> bool {
+        let tag = tenant.unwrap_or("");
+        let mut g = self.buckets.lock().unwrap();
+        g.entry(tag.to_string())
+            .or_insert_with(|| {
+                let (rate, burst) = self.cfg.shape_for(tag);
+                TokenBucket::new(rate, burst, now)
+            })
+            .try_take(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn bucket_spends_burst_then_refills_at_rate() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(10.0, 2.0, t0);
+        assert!(b.try_take(t0));
+        assert!(b.try_take(t0));
+        assert!(!b.try_take(t0), "burst of 2 is exhausted");
+        // 100 ms at 10/s refills exactly one token
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(b.try_take(t1));
+        assert!(!b.try_take(t1));
+        // refill never exceeds burst
+        let t2 = t1 + Duration::from_secs(60);
+        assert!((b.available(t2) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_rate_admits_burst_then_nothing_ever() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(0.0, 1.0, t0);
+        assert!(b.try_take(t0));
+        assert!(!b.try_take(t0 + Duration::from_secs(3600)));
+    }
+
+    #[test]
+    fn infinite_rate_never_denies() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(f64::INFINITY, f64::INFINITY, t0);
+        for _ in 0..10_000 {
+            assert!(b.try_take(t0));
+        }
+    }
+
+    #[test]
+    fn table_applies_overrides_and_pools_untagged() {
+        let t0 = Instant::now();
+        let cfg = QuotaConfig::uniform(0.0, 2.0).with_override("vip", f64::INFINITY, f64::INFINITY);
+        let q = QuotaTable::new(cfg);
+        // default shape: burst 2, no refill
+        assert!(q.admit(Some("a"), t0));
+        assert!(q.admit(Some("a"), t0));
+        assert!(!q.admit(Some("a"), t0));
+        // a different tenant has its own bucket
+        assert!(q.admit(Some("b"), t0));
+        // the override is unlimited
+        for _ in 0..100 {
+            assert!(q.admit(Some("vip"), t0));
+        }
+        // untagged requests share one bucket under the default shape
+        assert!(q.admit(None, t0));
+        assert!(q.admit(None, t0));
+        assert!(!q.admit(None, t0), "anonymous traffic pools into one bucket");
+    }
+
+    #[test]
+    fn later_override_wins() {
+        let cfg = QuotaConfig::default()
+            .with_override("t", 1.0, 1.0)
+            .with_override("t", 5.0, 9.0);
+        assert_eq!(cfg.shape_for("t"), (5.0, 9.0));
+        assert_eq!(cfg.shape_for("other"), (f64::INFINITY, f64::INFINITY));
+    }
+}

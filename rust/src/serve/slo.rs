@@ -1,0 +1,398 @@
+//! SLO threshold rules over [`FabricMetrics`], in the ops-playbook
+//! shape: every rule is a literal **Source → Query → Threshold →
+//! Interpretation → Action** row, evaluated by a small governor that
+//! trips backpressure / load-shed decisions with hysteresis.
+//!
+//! The playbook rows are data, not prose: `source` names the metrics
+//! surface the rule reads, `query` computes the observed value from a
+//! windowed pair of snapshots, `threshold`/`clear_below` bound the trip
+//! with hysteresis (no flapping at the boundary), `interpretation` says
+//! what a trip *means*, and `action` is what the serve plane does about
+//! it. [`SloGovernor::render`] prints the live table, so the running
+//! system shows its own playbook.
+//!
+//! Actions are graduated to preserve the paper's real-time emphasis:
+//! [`SloAction::Backpressure`] sheds only `Low` priority work,
+//! [`SloAction::Shed`] sheds `Low` and `Normal` but keeps admitting
+//! `High` — the jobs with deadlines worth protecting are the last to be
+//! turned away.
+
+use crate::api::Priority;
+use crate::coordinator::FabricMetrics;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// What a tripped rule makes the serve plane do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloAction {
+    /// Refuse `Low`-priority requests (soft brake).
+    Backpressure,
+    /// Refuse `Low` and `Normal`; only `High` is still admitted.
+    Shed,
+}
+
+impl SloAction {
+    /// Whether a request at `p` is refused under this action.
+    pub fn refuses(self, p: Priority) -> bool {
+        match self {
+            SloAction::Backpressure => p == Priority::Low,
+            SloAction::Shed => p != Priority::High,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            SloAction::Backpressure => "backpressure",
+            SloAction::Shed => "shed",
+        }
+    }
+}
+
+/// A windowed view of the fabric counters (monotonic totals; the
+/// governor differences consecutive snapshots for rate-shaped queries).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SloSnapshot {
+    pub queue_depth: u64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub cancelled: u64,
+    pub deadline_missed: u64,
+}
+
+impl SloSnapshot {
+    pub fn take(m: &FabricMetrics) -> SloSnapshot {
+        SloSnapshot {
+            queue_depth: m.total_queue_depth(),
+            submitted: m.submitted.load(Relaxed),
+            completed: m.completed.load(Relaxed),
+            errors: m.errors.load(Relaxed),
+            cancelled: m.cancelled.load(Relaxed),
+            deadline_missed: m.deadline_missed.load(Relaxed),
+        }
+    }
+
+    /// Jobs accepted but not yet resolved (gauge derived from totals).
+    pub fn inflight(&self) -> u64 {
+        self.submitted.saturating_sub(
+            self.completed + self.errors + self.cancelled + self.deadline_missed,
+        )
+    }
+}
+
+/// One playbook row. `query(cur, prev)` computes the observed value —
+/// gauge rules read `cur` alone, rate rules difference the pair.
+pub struct SloRule {
+    /// Short name, echoed in the wire error a shed request receives.
+    pub name: &'static str,
+    /// Which metrics surface the query reads (playbook: Source).
+    pub source: &'static str,
+    /// Observed value from (current, previous) snapshots (playbook: Query).
+    pub query: fn(&SloSnapshot, &SloSnapshot) -> f64,
+    /// Trips at `observed > threshold` (playbook: Threshold) ...
+    pub threshold: f64,
+    /// ... and clears only at `observed < clear_below` (hysteresis).
+    pub clear_below: f64,
+    /// What a trip means (playbook: Interpretation).
+    pub interpretation: &'static str,
+    /// What the serve plane does while tripped (playbook: Action).
+    pub action: SloAction,
+}
+
+/// Serve-plane SLO policy: the rule set plus the evaluation cadence.
+pub struct SloConfig {
+    pub rules: Vec<SloRule>,
+    /// Re-evaluate at most this often (`Duration::ZERO` = every
+    /// decision, which deterministic tests use).
+    pub eval_every: Duration,
+}
+
+impl SloConfig {
+    /// The default playbook, scaled to the fabric's `queue_cap`.
+    pub fn for_queue_cap(queue_cap: usize) -> SloConfig {
+        let cap = queue_cap.max(1) as f64;
+        SloConfig {
+            rules: vec![
+                SloRule {
+                    name: "staged-backlog",
+                    source: "dispatch-plane depth gauge",
+                    query: |cur, _| cur.queue_depth as f64,
+                    threshold: 0.75 * cap,
+                    clear_below: 0.25 * cap,
+                    interpretation: "sim lanes are saturating; queue latency is about to grow",
+                    action: SloAction::Backpressure,
+                },
+                SloRule {
+                    name: "inflight-ceiling",
+                    source: "fabric totals (submitted - resolved)",
+                    query: |cur, _| cur.inflight() as f64,
+                    threshold: 4.0 * cap,
+                    clear_below: 2.0 * cap,
+                    interpretation: "accepted work far exceeds drain rate; the fabric is overloaded",
+                    action: SloAction::Shed,
+                },
+                SloRule {
+                    name: "deadline-miss-burst",
+                    source: "windowed deadline_missed / submitted deltas",
+                    query: |cur, prev| {
+                        let missed = cur.deadline_missed.saturating_sub(prev.deadline_missed);
+                        let subs = cur.submitted.saturating_sub(prev.submitted);
+                        missed as f64 / subs.max(1) as f64
+                    },
+                    threshold: 0.2,
+                    clear_below: 0.05,
+                    interpretation: "deadlines are being missed in bulk; admitted work is already late",
+                    action: SloAction::Shed,
+                },
+            ],
+            eval_every: Duration::from_millis(50),
+        }
+    }
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig::for_queue_cap(256)
+    }
+}
+
+/// Per-rule live state.
+struct RuleState {
+    tripped: bool,
+    /// clear → tripped transitions.
+    trips: u64,
+    /// Requests refused while this rule was the strongest active one.
+    shed: u64,
+    /// Last observed query value (rendered).
+    observed: f64,
+}
+
+struct GovState {
+    prev: SloSnapshot,
+    cur: SloSnapshot,
+    last_eval: Option<Instant>,
+    rules: Vec<RuleState>,
+    /// Cached decision between evaluations.
+    active: Option<(usize, SloAction)>,
+}
+
+/// Evaluates the rule set against live metrics and answers "may this
+/// request pass?". Evaluation is rate-limited by `eval_every`; between
+/// evaluations the last decision is reused (admission stays O(1)).
+pub struct SloGovernor {
+    cfg: SloConfig,
+    state: Mutex<GovState>,
+}
+
+impl SloGovernor {
+    pub fn new(cfg: SloConfig) -> SloGovernor {
+        let rules = cfg
+            .rules
+            .iter()
+            .map(|_| RuleState { tripped: false, trips: 0, shed: 0, observed: 0.0 })
+            .collect();
+        SloGovernor {
+            cfg,
+            state: Mutex::new(GovState {
+                prev: SloSnapshot::default(),
+                cur: SloSnapshot::default(),
+                last_eval: None,
+                rules,
+                active: None,
+            }),
+        }
+    }
+
+    /// The strongest currently-active action, with the rule that demands
+    /// it. Re-evaluates at most every `eval_every`.
+    pub fn decide(&self, metrics: &FabricMetrics, now: Instant) -> Option<(&'static str, SloAction)> {
+        let mut g = self.state.lock().unwrap();
+        let due = match g.last_eval {
+            None => true,
+            Some(t) => now.saturating_duration_since(t) >= self.cfg.eval_every,
+        };
+        if due {
+            g.prev = g.cur;
+            g.cur = SloSnapshot::take(metrics);
+            g.last_eval = Some(now);
+            let (prev, cur) = (g.prev, g.cur);
+            let mut strongest: Option<(usize, SloAction)> = None;
+            for (i, rule) in self.cfg.rules.iter().enumerate() {
+                let v = (rule.query)(&cur, &prev);
+                let st = &mut g.rules[i];
+                st.observed = v;
+                if st.tripped {
+                    if v < rule.clear_below {
+                        st.tripped = false;
+                    }
+                } else if v > rule.threshold {
+                    st.tripped = true;
+                    st.trips += 1;
+                }
+                let stronger = match strongest {
+                    None => true,
+                    Some((_, a)) => rule.action > a,
+                };
+                if st.tripped && stronger {
+                    strongest = Some((i, rule.action));
+                }
+            }
+            g.active = strongest;
+        }
+        g.active.map(|(i, a)| (self.cfg.rules[i].name, a))
+    }
+
+    /// Count a refusal against the rule that caused it.
+    pub fn note_shed(&self, rule: &str) {
+        let mut g = self.state.lock().unwrap();
+        if let Some(i) = self.cfg.rules.iter().position(|r| r.name == rule) {
+            g.rules[i].shed += 1;
+        }
+    }
+
+    /// The live playbook: one Source → Query → Threshold →
+    /// Interpretation → Action row per rule, plus its current state.
+    pub fn render(&self) -> String {
+        let g = self.state.lock().unwrap();
+        let mut out = String::from("slo playbook:");
+        for (i, r) in self.cfg.rules.iter().enumerate() {
+            let st = &g.rules[i];
+            out.push_str(&format!(
+                "\n  rule {name}: source={source} | observed={obs:.3} threshold={thr:.3} clear={clr:.3} \
+                 | action={act} | {state} trips={trips} shed={shed}\n    interpretation: {interp}",
+                name = r.name,
+                source = r.source,
+                obs = st.observed,
+                thr = r.threshold,
+                clr = r.clear_below,
+                act = r.action.name(),
+                state = if st.tripped { "TRIPPED" } else { "clear" },
+                trips = st.trips,
+                shed = st.shed,
+                interp = r.interpretation,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gov(rules: Vec<SloRule>) -> SloGovernor {
+        SloGovernor::new(SloConfig { rules, eval_every: Duration::ZERO })
+    }
+
+    fn depth_rule(threshold: f64, clear: f64, action: SloAction) -> SloRule {
+        SloRule {
+            name: "depth",
+            source: "queue gauge",
+            query: |cur, _| cur.queue_depth as f64,
+            threshold,
+            clear_below: clear,
+            interpretation: "test",
+            action,
+        }
+    }
+
+    #[test]
+    fn actions_grade_by_priority() {
+        assert!(SloAction::Backpressure.refuses(Priority::Low));
+        assert!(!SloAction::Backpressure.refuses(Priority::Normal));
+        assert!(SloAction::Shed.refuses(Priority::Normal));
+        assert!(!SloAction::Shed.refuses(Priority::High), "High survives even shed");
+        assert!(SloAction::Shed > SloAction::Backpressure, "shed is the stronger action");
+    }
+
+    #[test]
+    fn rule_trips_and_clears_with_hysteresis() {
+        let g = gov(vec![depth_rule(10.0, 4.0, SloAction::Backpressure)]);
+        let m = FabricMetrics::default();
+        let t = Instant::now();
+        assert_eq!(g.decide(&m, t), None);
+        m.worker(0).depth.store(11, Relaxed);
+        assert_eq!(g.decide(&m, t), Some(("depth", SloAction::Backpressure)));
+        // Back under the threshold but above clear_below: still tripped.
+        m.worker(0).depth.store(7, Relaxed);
+        assert_eq!(g.decide(&m, t), Some(("depth", SloAction::Backpressure)));
+        // Under clear_below: clears.
+        m.worker(0).depth.store(3, Relaxed);
+        assert_eq!(g.decide(&m, t), None);
+        // One full trip/clear cycle → exactly one trip counted.
+        assert!(g.render().contains("trips=1"), "{}", g.render());
+    }
+
+    #[test]
+    fn strongest_action_wins() {
+        let mut soft = depth_rule(5.0, 1.0, SloAction::Backpressure);
+        soft.name = "soft";
+        let mut hard = depth_rule(10.0, 2.0, SloAction::Shed);
+        hard.name = "hard";
+        let g = gov(vec![soft, hard]);
+        let m = FabricMetrics::default();
+        let t = Instant::now();
+        m.worker(0).depth.store(7, Relaxed);
+        assert_eq!(g.decide(&m, t), Some(("soft", SloAction::Backpressure)));
+        m.worker(0).depth.store(20, Relaxed);
+        assert_eq!(g.decide(&m, t), Some(("hard", SloAction::Shed)));
+    }
+
+    #[test]
+    fn windowed_query_differences_snapshots() {
+        let g = gov(SloConfig::for_queue_cap(4).rules);
+        let m = FabricMetrics::default();
+        let t = Instant::now();
+        assert_eq!(g.decide(&m, t), None);
+        // 10 submissions this window, 5 deadline misses: 50% miss rate.
+        m.submitted.store(10, Relaxed);
+        m.deadline_missed.store(5, Relaxed);
+        let d = g.decide(&m, t);
+        assert_eq!(d, Some(("deadline-miss-burst", SloAction::Shed)), "{d:?}");
+        // Next window: no new misses — the rate rule clears. Completions
+        // keep the inflight gauge under its own (4×cap) ceiling.
+        m.submitted.store(30, Relaxed);
+        m.completed.store(25, Relaxed);
+        assert_eq!(g.decide(&m, t), None);
+    }
+
+    #[test]
+    fn eval_rate_limit_caches_the_decision() {
+        let g = SloGovernor::new(SloConfig {
+            rules: vec![depth_rule(10.0, 4.0, SloAction::Shed)],
+            eval_every: Duration::from_secs(3600),
+        });
+        let m = FabricMetrics::default();
+        let t = Instant::now();
+        assert_eq!(g.decide(&m, t), None);
+        // Depth explodes, but the next eval is an hour away: cached None.
+        m.worker(0).depth.store(100, Relaxed);
+        assert_eq!(g.decide(&m, t + Duration::from_millis(1)), None);
+        // Past the cadence the trip is observed.
+        assert!(g.decide(&m, t + Duration::from_secs(3601)).is_some());
+    }
+
+    #[test]
+    fn render_is_the_playbook() {
+        let g = gov(SloConfig::for_queue_cap(8).rules);
+        let r = g.render();
+        for needle in
+            ["slo playbook:", "staged-backlog", "inflight-ceiling", "deadline-miss-burst",
+             "source=", "threshold=", "interpretation:", "action="]
+        {
+            assert!(r.contains(needle), "missing {needle:?} in:\n{r}");
+        }
+    }
+
+    #[test]
+    fn note_shed_counts_per_rule() {
+        let g = gov(vec![depth_rule(-1.0, -2.0, SloAction::Shed)]);
+        let m = FabricMetrics::default();
+        let (name, _) = g.decide(&m, Instant::now()).expect("always-trip rule");
+        g.note_shed(name);
+        g.note_shed(name);
+        g.note_shed("unknown-rule-is-ignored");
+        assert!(g.render().contains("shed=2"), "{}", g.render());
+    }
+}

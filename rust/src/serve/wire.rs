@@ -1,0 +1,906 @@
+//! The serve plane's wire protocol: a hand-rolled, length-prefixed
+//! binary frame codec.
+//!
+//! The only crate dependency is `anyhow`, so there is no serde/bincode —
+//! every message is encoded by explicit little-endian writers and decoded
+//! by a bounds-checked cursor that returns typed [`CodecError`]s and
+//! **never panics**, whatever bytes arrive. The framing is:
+//!
+//! ```text
+//! frame   := len:u32le  payload[len]
+//! payload := version:u8 (= WIRE_VERSION)  tag:u8  body
+//! ```
+//!
+//! `len` counts payload bytes only and is capped ([`MAX_FRAME`] by
+//! default, configurable per endpoint): an oversized header is rejected
+//! *before* any allocation, so a hostile length field cannot OOM the
+//! server. Every variable-length field inside the payload re-checks its
+//! claimed count against the bytes actually remaining for the same
+//! reason.
+//!
+//! Requests map onto [`JobRequest`] (priority / deadline / client tag all
+//! survive the trip); replies map onto [`Completion`] / [`FabricError`].
+//! Frames carry a client-chosen `id` so replies can be pipelined and
+//! matched out of order.
+
+use crate::api::{Completion, FabricError, JobRequest, Output, Priority, RequestKind, Route};
+use crate::workload::family::Family;
+use crate::workload::sumup::Mode;
+use crate::workload::traces::{TraceOp, TraceOpKind};
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Protocol version stamped on (and checked in) every payload.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Default hard cap on a frame's payload length (16 MiB).
+pub const MAX_FRAME: usize = 16 << 20;
+
+// ----------------------------------------------------------------------
+// typed codec errors
+// ----------------------------------------------------------------------
+
+/// Typed decode/framing failure. Malformed input is an error value,
+/// never a panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// The stream ended inside a frame (header or payload).
+    Truncated { need: usize, have: usize },
+    /// The frame header claims more payload than the cap allows.
+    Oversized { len: usize, cap: usize },
+    /// The payload's version byte is not [`WIRE_VERSION`].
+    BadVersion { got: u8 },
+    /// An enum tag byte (message/kind/mode/route/...) is out of range.
+    BadTag { what: &'static str, got: u8 },
+    /// A field claims more elements than the remaining bytes could hold.
+    BadLength { what: &'static str, claimed: usize, available: usize },
+    /// A string field is not valid UTF-8.
+    BadUtf8 { what: &'static str },
+    /// Bytes were left over after a complete message was decoded.
+    TrailingBytes { extra: usize },
+    /// Transport error underneath the codec.
+    Io { kind: std::io::ErrorKind, msg: String },
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            CodecError::Oversized { len, cap } => {
+                write!(f, "oversized frame: {len} bytes exceeds the {cap}-byte cap")
+            }
+            CodecError::BadVersion { got } => {
+                write!(f, "unsupported wire version {got} (this end speaks {WIRE_VERSION})")
+            }
+            CodecError::BadTag { what, got } => write!(f, "bad {what} tag 0x{got:02x}"),
+            CodecError::BadLength { what, claimed, available } => {
+                write!(f, "{what} claims {claimed} elements but only {available} bytes remain")
+            }
+            CodecError::BadUtf8 { what } => write!(f, "{what} is not valid UTF-8"),
+            CodecError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after a complete message")
+            }
+            CodecError::Io { kind, msg } => write!(f, "i/o ({kind:?}): {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+impl From<std::io::Error> for CodecError {
+    fn from(e: std::io::Error) -> Self {
+        CodecError::Io { kind: e.kind(), msg: e.to_string() }
+    }
+}
+
+// ----------------------------------------------------------------------
+// messages
+// ----------------------------------------------------------------------
+
+/// Client → server messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireRequest {
+    /// Submit one job. `id` is chosen by the client and echoed on the
+    /// reply; `deadline_us` is the relative deadline in microseconds.
+    Submit {
+        id: u64,
+        tenant: Option<String>,
+        priority: Priority,
+        deadline_us: Option<u64>,
+        kind: RequestKind,
+    },
+    /// Ask for the server's rendered `FabricMetrics` (plus the SLO
+    /// governor's playbook state) as text.
+    Metrics { id: u64 },
+}
+
+impl WireRequest {
+    /// Build a `Submit` from a typed [`JobRequest`] (the loadgen path:
+    /// `TraceGen` emits `JobRequest`s, the wire carries them).
+    pub fn submit(id: u64, req: &JobRequest) -> WireRequest {
+        WireRequest::Submit {
+            id,
+            tenant: req.client.as_deref().map(str::to_string),
+            priority: req.priority,
+            deadline_us: req.deadline.map(|d| d.as_micros() as u64),
+            kind: req.kind.clone(),
+        }
+    }
+
+    /// The typed [`JobRequest`] this `Submit` carries (server side).
+    /// `None` for non-submit messages.
+    pub fn into_job(self) -> Option<JobRequest> {
+        let WireRequest::Submit { tenant, priority, deadline_us, kind, .. } = self else {
+            return None;
+        };
+        let mut job = JobRequest::new(kind).with_priority(priority);
+        if let Some(us) = deadline_us {
+            job = job.with_deadline(Duration::from_micros(us));
+        }
+        if let Some(t) = tenant {
+            job = job.with_client(t);
+        }
+        Some(job)
+    }
+
+    /// The client-chosen correlation id.
+    pub fn id(&self) -> u64 {
+        match self {
+            WireRequest::Submit { id, .. } | WireRequest::Metrics { id } => *id,
+        }
+    }
+}
+
+/// Server → client messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireReply {
+    /// The job completed; the full [`Completion`] metadata survives the
+    /// trip (latencies at microsecond precision).
+    Completed { id: u64, completion: Completion },
+    /// The job failed (admission, quota, shed, or execution) with its
+    /// typed [`FabricError`].
+    Failed { id: u64, error: FabricError },
+    /// Answer to [`WireRequest::Metrics`].
+    MetricsText { id: u64, text: String },
+}
+
+impl WireReply {
+    /// The correlation id this reply answers.
+    pub fn id(&self) -> u64 {
+        match self {
+            WireReply::Completed { id, .. }
+            | WireReply::Failed { id, .. }
+            | WireReply::MetricsText { id, .. } => *id,
+        }
+    }
+}
+
+// message tags
+const TAG_SUBMIT: u8 = 0x01;
+const TAG_METRICS: u8 = 0x02;
+const TAG_COMPLETED: u8 = 0x81;
+const TAG_FAILED: u8 = 0x82;
+const TAG_METRICS_TEXT: u8 = 0x83;
+
+// ----------------------------------------------------------------------
+// framing
+// ----------------------------------------------------------------------
+
+/// Read one frame's payload. `Ok(None)` is a clean end-of-stream at a
+/// frame boundary; inside a frame the same condition is
+/// [`CodecError::Truncated`]. An over-cap header is rejected before any
+/// payload allocation.
+pub fn read_frame(r: &mut impl Read, cap: usize) -> Result<Option<Vec<u8>>, CodecError> {
+    let mut len_buf = [0u8; 4];
+    match read_full(r, &mut len_buf)? {
+        0 => return Ok(None),
+        4 => {}
+        have => return Err(CodecError::Truncated { need: 4, have }),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > cap {
+        return Err(CodecError::Oversized { len, cap });
+    }
+    let mut payload = vec![0u8; len];
+    let have = read_full(r, &mut payload)?;
+    if have < len {
+        return Err(CodecError::Truncated { need: len, have });
+    }
+    Ok(Some(payload))
+}
+
+/// Write one frame (length prefix + payload). The cap is enforced on the
+/// sending side too, so a peer speaking the same config never sees an
+/// oversized frame arrive.
+pub fn write_frame(w: &mut impl Write, payload: &[u8], cap: usize) -> Result<(), CodecError> {
+    if payload.len() > cap {
+        return Err(CodecError::Oversized { len: payload.len(), cap });
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read until `buf` is full or EOF; returns bytes read. `Interrupted` is
+/// retried, any other error propagates.
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> Result<usize, CodecError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(got)
+}
+
+// ----------------------------------------------------------------------
+// encode
+// ----------------------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(tag: u8) -> Enc {
+        Enc { buf: vec![WIRE_VERSION, tag] }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn opt_str(&mut self, s: Option<&str>) {
+        match s {
+            None => self.u8(0),
+            Some(s) => {
+                self.u8(1);
+                self.str(s);
+            }
+        }
+    }
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.f32(*x);
+        }
+    }
+    fn i32s(&mut self, v: &[i32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.i32(*x);
+        }
+    }
+}
+
+fn priority_tag(p: Priority) -> u8 {
+    match p {
+        Priority::Low => 0,
+        Priority::Normal => 1,
+        Priority::High => 2,
+    }
+}
+
+fn mode_tag(m: Mode) -> u8 {
+    match m {
+        Mode::No => 0,
+        Mode::For => 1,
+        Mode::Sumup => 2,
+    }
+}
+
+fn family_tag(f: Family) -> u8 {
+    match f {
+        Family::Sumup => 0,
+        Family::Dotprod => 1,
+        Family::Scale => 2,
+        Family::Traces => 3,
+    }
+}
+
+fn route_tag(r: Route) -> u8 {
+    match r {
+        Route::Simulator => 0,
+        Route::Inline => 1,
+        Route::Accelerator => 2,
+        Route::Split => 3,
+    }
+}
+
+// request-kind tags
+const KIND_MASS_SUM: u8 = 0x01;
+const KIND_MASS_DOT: u8 = 0x02;
+const KIND_SUMUP: u8 = 0x03;
+const KIND_DOTPROD: u8 = 0x04;
+const KIND_SCALE: u8 = 0x05;
+const KIND_TRACES: u8 = 0x06;
+
+fn encode_kind(e: &mut Enc, kind: &RequestKind) {
+    use crate::workload::family::Params;
+    match kind {
+        RequestKind::MassSum { values } => {
+            e.u8(KIND_MASS_SUM);
+            e.f32s(values);
+        }
+        RequestKind::MassDot { a, b } => {
+            e.u8(KIND_MASS_DOT);
+            e.f32s(a);
+            e.f32s(b);
+        }
+        RequestKind::RunProgram { mode, params, .. } => match params {
+            Params::Sumup { values } => {
+                e.u8(KIND_SUMUP);
+                e.u8(mode_tag(*mode));
+                e.i32s(values);
+            }
+            Params::Dotprod { a, b } => {
+                e.u8(KIND_DOTPROD);
+                e.u8(mode_tag(*mode));
+                e.i32s(a);
+                e.i32s(b);
+            }
+            Params::Scale { x, c } => {
+                e.u8(KIND_SCALE);
+                e.u8(mode_tag(*mode));
+                e.i32s(x);
+                e.i32(*c);
+            }
+            Params::Traces { ops } => {
+                e.u8(KIND_TRACES);
+                e.u32(ops.len() as u32);
+                for op in ops {
+                    e.u8(match op.kind {
+                        TraceOpKind::Add => 0,
+                        TraceOpKind::Sub => 1,
+                        TraceOpKind::Xor => 2,
+                    });
+                    e.i32(op.value);
+                }
+            }
+        },
+    }
+}
+
+// fabric-error codes
+const ERR_QUEUE_FULL: u8 = 1;
+const ERR_DEADLINE: u8 = 2;
+const ERR_CANCELLED: u8 = 3;
+const ERR_SHAPE: u8 = 4;
+const ERR_UNSUPPORTED_MODE: u8 = 5;
+const ERR_FAMILY_MISMATCH: u8 = 6;
+const ERR_INVALID_CONFIG: u8 = 7;
+const ERR_GUEST_FAULT: u8 = 8;
+const ERR_BACKEND: u8 = 9;
+const ERR_SHUTDOWN: u8 = 10;
+const ERR_QUOTA: u8 = 11;
+const ERR_OVERLOADED: u8 = 12;
+
+fn encode_error(e: &mut Enc, err: &FabricError) {
+    match err {
+        FabricError::QueueFull => e.u8(ERR_QUEUE_FULL),
+        FabricError::DeadlineExceeded => e.u8(ERR_DEADLINE),
+        FabricError::Cancelled => e.u8(ERR_CANCELLED),
+        FabricError::ShapeMismatch { a, b } => {
+            e.u8(ERR_SHAPE);
+            e.u64(*a as u64);
+            e.u64(*b as u64);
+        }
+        FabricError::UnsupportedMode { family, mode } => {
+            e.u8(ERR_UNSUPPORTED_MODE);
+            e.u8(family_tag(*family));
+            e.u8(mode_tag(*mode));
+        }
+        FabricError::FamilyMismatch { family, params } => {
+            e.u8(ERR_FAMILY_MISMATCH);
+            e.u8(family_tag(*family));
+            e.u8(family_tag(*params));
+        }
+        FabricError::InvalidConfig(m) => {
+            e.u8(ERR_INVALID_CONFIG);
+            e.str(m);
+        }
+        FabricError::GuestFault(m) => {
+            e.u8(ERR_GUEST_FAULT);
+            e.str(m);
+        }
+        FabricError::Backend { name, msg } => {
+            e.u8(ERR_BACKEND);
+            e.str(name);
+            e.str(msg);
+        }
+        FabricError::Shutdown => e.u8(ERR_SHUTDOWN),
+        FabricError::QuotaExceeded { tenant } => {
+            e.u8(ERR_QUOTA);
+            e.str(tenant);
+        }
+        FabricError::Overloaded { rule } => {
+            e.u8(ERR_OVERLOADED);
+            e.str(rule);
+        }
+    }
+}
+
+fn encode_output(e: &mut Enc, out: &Output) {
+    match out {
+        Output::Program { eax, clocks, cores, data } => {
+            e.u8(0);
+            e.i32(*eax);
+            e.u64(*clocks);
+            e.u64(*cores as u64);
+            e.i32s(data);
+        }
+        Output::Scalars(v) => {
+            e.u8(1);
+            e.f32s(v);
+        }
+        Output::Rows(rows) => {
+            e.u8(2);
+            e.u32(rows.len() as u32);
+            for r in rows {
+                e.f32s(r);
+            }
+        }
+    }
+}
+
+/// Encode a request message's payload (no length prefix; pair with
+/// [`write_frame`]).
+pub fn encode_request(req: &WireRequest) -> Vec<u8> {
+    match req {
+        WireRequest::Submit { id, tenant, priority, deadline_us, kind } => {
+            let mut e = Enc::new(TAG_SUBMIT);
+            e.u64(*id);
+            e.opt_str(tenant.as_deref());
+            e.u8(priority_tag(*priority));
+            match deadline_us {
+                None => e.u8(0),
+                Some(us) => {
+                    e.u8(1);
+                    e.u64(*us);
+                }
+            }
+            encode_kind(&mut e, kind);
+            e.buf
+        }
+        WireRequest::Metrics { id } => {
+            let mut e = Enc::new(TAG_METRICS);
+            e.u64(*id);
+            e.buf
+        }
+    }
+}
+
+/// Encode a reply message's payload.
+pub fn encode_reply(rep: &WireReply) -> Vec<u8> {
+    match rep {
+        WireReply::Completed { id, completion } => {
+            let mut e = Enc::new(TAG_COMPLETED);
+            e.u64(*id);
+            encode_output(&mut e, &completion.output);
+            e.u8(route_tag(completion.route));
+            e.str(&completion.backend);
+            e.u64(completion.batch_rows as u64);
+            e.u64(completion.shards as u64);
+            e.u64(completion.queue_latency.as_micros() as u64);
+            e.u64(completion.latency.as_micros() as u64);
+            e.buf
+        }
+        WireReply::Failed { id, error } => {
+            let mut e = Enc::new(TAG_FAILED);
+            e.u64(*id);
+            encode_error(&mut e, error);
+            e.buf
+        }
+        WireReply::MetricsText { id, text } => {
+            let mut e = Enc::new(TAG_METRICS_TEXT);
+            e.u64(*id);
+            e.str(text);
+            e.buf
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// decode
+// ----------------------------------------------------------------------
+
+/// Bounds-checked little-endian cursor. Every read returns a typed error
+/// instead of slicing out of range.
+struct Cur<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, off: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.off
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError::Truncated { need: n, have: self.remaining() });
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+
+    fn i32(&mut self) -> Result<i32, CodecError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
+    }
+
+    fn f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
+    }
+
+    /// A claimed element count, validated against the bytes remaining
+    /// (`elem_size` each) *before* anything is allocated.
+    fn count(&mut self, what: &'static str, elem_size: usize) -> Result<usize, CodecError> {
+        let n = self.u32()? as usize;
+        let need = n.checked_mul(elem_size).unwrap_or(usize::MAX);
+        if need > self.remaining() {
+            return Err(CodecError::BadLength { what, claimed: n, available: self.remaining() });
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self, what: &'static str) -> Result<String, CodecError> {
+        let n = self.count(what, 1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| CodecError::BadUtf8 { what })
+    }
+
+    fn opt_str(&mut self, what: &'static str) -> Result<Option<String>, CodecError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.str(what)?)),
+            got => Err(CodecError::BadTag { what: "option", got }),
+        }
+    }
+
+    fn f32s(&mut self, what: &'static str) -> Result<Vec<f32>, CodecError> {
+        let n = self.count(what, 4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    fn i32s(&mut self, what: &'static str) -> Result<Vec<i32>, CodecError> {
+        let n = self.count(what, 4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.i32()?);
+        }
+        Ok(v)
+    }
+
+    fn finish(&self) -> Result<(), CodecError> {
+        if self.remaining() > 0 {
+            return Err(CodecError::TrailingBytes { extra: self.remaining() });
+        }
+        Ok(())
+    }
+}
+
+fn decode_priority(c: &mut Cur) -> Result<Priority, CodecError> {
+    match c.u8()? {
+        0 => Ok(Priority::Low),
+        1 => Ok(Priority::Normal),
+        2 => Ok(Priority::High),
+        got => Err(CodecError::BadTag { what: "priority", got }),
+    }
+}
+
+fn decode_mode(c: &mut Cur) -> Result<Mode, CodecError> {
+    match c.u8()? {
+        0 => Ok(Mode::No),
+        1 => Ok(Mode::For),
+        2 => Ok(Mode::Sumup),
+        got => Err(CodecError::BadTag { what: "mode", got }),
+    }
+}
+
+fn decode_family(b: u8) -> Result<Family, CodecError> {
+    match b {
+        0 => Ok(Family::Sumup),
+        1 => Ok(Family::Dotprod),
+        2 => Ok(Family::Scale),
+        3 => Ok(Family::Traces),
+        got => Err(CodecError::BadTag { what: "family", got }),
+    }
+}
+
+fn decode_route(c: &mut Cur) -> Result<Route, CodecError> {
+    match c.u8()? {
+        0 => Ok(Route::Simulator),
+        1 => Ok(Route::Inline),
+        2 => Ok(Route::Accelerator),
+        3 => Ok(Route::Split),
+        got => Err(CodecError::BadTag { what: "route", got }),
+    }
+}
+
+fn decode_kind(c: &mut Cur) -> Result<RequestKind, CodecError> {
+    match c.u8()? {
+        KIND_MASS_SUM => Ok(RequestKind::mass_sum(c.f32s("mass-sum values")?)),
+        KIND_MASS_DOT => {
+            let a = c.f32s("mass-dot a")?;
+            let b = c.f32s("mass-dot b")?;
+            Ok(RequestKind::mass_dot(a, b))
+        }
+        KIND_SUMUP => {
+            let mode = decode_mode(c)?;
+            Ok(RequestKind::sumup(mode, c.i32s("sumup values")?))
+        }
+        KIND_DOTPROD => {
+            let mode = decode_mode(c)?;
+            let a = c.i32s("dotprod a")?;
+            let b = c.i32s("dotprod b")?;
+            Ok(RequestKind::dotprod(mode, a, b))
+        }
+        KIND_SCALE => {
+            let mode = decode_mode(c)?;
+            let x = c.i32s("scale x")?;
+            let k = c.i32()?;
+            Ok(RequestKind::scale(mode, x, k))
+        }
+        KIND_TRACES => {
+            let n = c.count("trace ops", 5)?;
+            let mut ops = Vec::with_capacity(n);
+            for _ in 0..n {
+                let kind = match c.u8()? {
+                    0 => TraceOpKind::Add,
+                    1 => TraceOpKind::Sub,
+                    2 => TraceOpKind::Xor,
+                    got => return Err(CodecError::BadTag { what: "trace op", got }),
+                };
+                ops.push(TraceOp::new(kind, c.i32()?));
+            }
+            Ok(RequestKind::traces(ops))
+        }
+        got => Err(CodecError::BadTag { what: "request kind", got }),
+    }
+}
+
+fn decode_error(c: &mut Cur) -> Result<FabricError, CodecError> {
+    match c.u8()? {
+        ERR_QUEUE_FULL => Ok(FabricError::QueueFull),
+        ERR_DEADLINE => Ok(FabricError::DeadlineExceeded),
+        ERR_CANCELLED => Ok(FabricError::Cancelled),
+        ERR_SHAPE => {
+            let a = c.u64()? as usize;
+            let b = c.u64()? as usize;
+            Ok(FabricError::ShapeMismatch { a, b })
+        }
+        ERR_UNSUPPORTED_MODE => {
+            let family = decode_family(c.u8()?)?;
+            let mode = decode_mode(c)?;
+            Ok(FabricError::UnsupportedMode { family, mode })
+        }
+        ERR_FAMILY_MISMATCH => {
+            let family = decode_family(c.u8()?)?;
+            let params = decode_family(c.u8()?)?;
+            Ok(FabricError::FamilyMismatch { family, params })
+        }
+        ERR_INVALID_CONFIG => Ok(FabricError::InvalidConfig(c.str("invalid-config msg")?)),
+        ERR_GUEST_FAULT => Ok(FabricError::GuestFault(c.str("guest-fault msg")?)),
+        ERR_BACKEND => {
+            let name = c.str("backend name")?;
+            let msg = c.str("backend msg")?;
+            Ok(FabricError::Backend { name, msg })
+        }
+        ERR_SHUTDOWN => Ok(FabricError::Shutdown),
+        ERR_QUOTA => Ok(FabricError::QuotaExceeded { tenant: c.str("quota tenant")? }),
+        ERR_OVERLOADED => Ok(FabricError::Overloaded { rule: c.str("slo rule")? }),
+        got => Err(CodecError::BadTag { what: "error code", got }),
+    }
+}
+
+fn decode_output(c: &mut Cur) -> Result<Output, CodecError> {
+    match c.u8()? {
+        0 => {
+            let eax = c.i32()?;
+            let clocks = c.u64()?;
+            let cores = c.u64()? as usize;
+            let data = c.i32s("program data")?;
+            Ok(Output::Program { eax, clocks, cores, data })
+        }
+        1 => Ok(Output::Scalars(c.f32s("scalars")?.into())),
+        2 => {
+            let n = c.count("rows", 4)?;
+            let mut rows: Vec<Arc<[f32]>> = Vec::with_capacity(n);
+            for _ in 0..n {
+                rows.push(c.f32s("row")?.into());
+            }
+            Ok(Output::Rows(rows))
+        }
+        got => Err(CodecError::BadTag { what: "output", got }),
+    }
+}
+
+/// Check the version byte and return the message tag.
+fn header(c: &mut Cur) -> Result<u8, CodecError> {
+    let version = c.u8()?;
+    if version != WIRE_VERSION {
+        return Err(CodecError::BadVersion { got: version });
+    }
+    c.u8()
+}
+
+/// Decode a request payload (as produced by [`encode_request`]).
+pub fn decode_request(payload: &[u8]) -> Result<WireRequest, CodecError> {
+    let mut c = Cur::new(payload);
+    let msg = match header(&mut c)? {
+        TAG_SUBMIT => {
+            let id = c.u64()?;
+            let tenant = c.opt_str("tenant")?;
+            let priority = decode_priority(&mut c)?;
+            let deadline_us = match c.u8()? {
+                0 => None,
+                1 => Some(c.u64()?),
+                got => return Err(CodecError::BadTag { what: "deadline option", got }),
+            };
+            let kind = decode_kind(&mut c)?;
+            WireRequest::Submit { id, tenant, priority, deadline_us, kind }
+        }
+        TAG_METRICS => WireRequest::Metrics { id: c.u64()? },
+        got => return Err(CodecError::BadTag { what: "request message", got }),
+    };
+    c.finish()?;
+    Ok(msg)
+}
+
+/// Decode a reply payload (as produced by [`encode_reply`]).
+pub fn decode_reply(payload: &[u8]) -> Result<WireReply, CodecError> {
+    let mut c = Cur::new(payload);
+    let msg = match header(&mut c)? {
+        TAG_COMPLETED => {
+            let id = c.u64()?;
+            let output = decode_output(&mut c)?;
+            let route = decode_route(&mut c)?;
+            let backend = c.str("backend")?;
+            let batch_rows = c.u64()? as usize;
+            let shards = c.u64()? as usize;
+            let queue_latency = Duration::from_micros(c.u64()?);
+            let latency = Duration::from_micros(c.u64()?);
+            WireReply::Completed {
+                id,
+                completion: Completion {
+                    output,
+                    route,
+                    backend,
+                    batch_rows,
+                    shards,
+                    queue_latency,
+                    latency,
+                },
+            }
+        }
+        TAG_FAILED => {
+            let id = c.u64()?;
+            WireReply::Failed { id, error: decode_error(&mut c)? }
+        }
+        TAG_METRICS_TEXT => {
+            let id = c.u64()?;
+            WireReply::MetricsText { id, text: c.str("metrics text")? }
+        }
+        got => return Err(CodecError::BadTag { what: "reply message", got }),
+    };
+    c.finish()?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_round_trips_through_job_request() {
+        let req = JobRequest::new(RequestKind::mass_sum(vec![1.0, 2.5]))
+            .with_priority(Priority::High)
+            .with_deadline(Duration::from_micros(1500))
+            .with_client("tenant-a");
+        let wire = WireRequest::submit(9, &req);
+        let decoded = decode_request(&encode_request(&wire)).unwrap();
+        assert_eq!(decoded, wire);
+        assert_eq!(decoded.id(), 9);
+        let job = decoded.into_job().unwrap();
+        assert_eq!(job, req);
+    }
+
+    #[test]
+    fn frame_cap_is_enforced_on_both_sides() {
+        let mut out = Vec::new();
+        let err = write_frame(&mut out, &[0u8; 64], 16).unwrap_err();
+        assert_eq!(err, CodecError::Oversized { len: 64, cap: 16 });
+        // hostile header: huge claimed length, no allocation
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut hdr.as_slice(), 1024).unwrap_err();
+        assert_eq!(err, CodecError::Oversized { len: u32::MAX as usize, cap: 1024 });
+    }
+
+    #[test]
+    fn clean_eof_is_none_but_mid_frame_eof_is_truncated() {
+        assert_eq!(read_frame(&mut (&[][..]), MAX_FRAME).unwrap(), None);
+        // 2 of 4 header bytes
+        let err = read_frame(&mut (&[1u8, 0][..]), MAX_FRAME).unwrap_err();
+        assert_eq!(err, CodecError::Truncated { need: 4, have: 2 });
+        // full header, short payload
+        let mut b = Vec::new();
+        b.extend_from_slice(&8u32.to_le_bytes());
+        b.extend_from_slice(&[1, 2, 3]);
+        let err = read_frame(&mut b.as_slice(), MAX_FRAME).unwrap_err();
+        assert_eq!(err, CodecError::Truncated { need: 8, have: 3 });
+    }
+
+    #[test]
+    fn bad_version_is_typed() {
+        let mut p = encode_request(&WireRequest::Metrics { id: 1 });
+        p[0] = 9;
+        assert_eq!(decode_request(&p).unwrap_err(), CodecError::BadVersion { got: 9 });
+    }
+
+    #[test]
+    fn hostile_counts_cannot_allocate() {
+        // a Submit whose vector claims u32::MAX floats
+        let mut e = Enc::new(TAG_SUBMIT);
+        e.u64(1);
+        e.u8(0); // no tenant
+        e.u8(1); // Normal
+        e.u8(0); // no deadline
+        e.u8(KIND_MASS_SUM);
+        e.u32(u32::MAX);
+        let err = decode_request(&e.buf).unwrap_err();
+        assert!(
+            matches!(err, CodecError::BadLength { what: "mass-sum values", .. }),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut p = encode_request(&WireRequest::Metrics { id: 1 });
+        p.push(0xaa);
+        assert_eq!(decode_request(&p).unwrap_err(), CodecError::TrailingBytes { extra: 1 });
+    }
+}

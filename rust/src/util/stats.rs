@@ -9,6 +9,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub max: f64,
 }
@@ -17,7 +18,16 @@ impl Summary {
     /// Compute from a sample; empty samples yield zeros.
     pub fn of(values: &[f64]) -> Summary {
         if values.is_empty() {
-            return Summary { n: 0, mean: 0.0, min: 0.0, p50: 0.0, p90: 0.0, p99: 0.0, max: 0.0 };
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
         }
         let mut v: Vec<f64> = values.to_vec();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -28,6 +38,7 @@ impl Summary {
             min: v[0],
             p50: q(0.50),
             p90: q(0.90),
+            p95: q(0.95),
             p99: q(0.99),
             max: *v.last().unwrap(),
         }
@@ -44,8 +55,8 @@ impl std::fmt::Display for Summary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "n={} mean={:.1} min={:.0} p50={:.0} p90={:.0} p99={:.0} max={:.0}",
-            self.n, self.mean, self.min, self.p50, self.p90, self.p99, self.max
+            "n={} mean={:.1} min={:.0} p50={:.0} p90={:.0} p95={:.0} p99={:.0} max={:.0}",
+            self.n, self.mean, self.min, self.p50, self.p90, self.p95, self.p99, self.max
         )
     }
 }
@@ -68,7 +79,8 @@ mod tests {
         assert_eq!(s.n, 1000);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 1000.0);
-        assert!(s.p50 <= s.p90 && s.p90 <= s.p99);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99);
+        assert!((s.p95 - 950.0).abs() <= 1.0);
         assert!((s.mean - 500.5).abs() < 1e-9);
         assert!((s.p50 - 500.0).abs() <= 1.0);
     }

@@ -261,9 +261,11 @@ fn responses_route_back_to_the_right_requester() {
         }
     });
     assert_eq!(errors.load(Ordering::Relaxed), 0);
-    // per-client accounting saw every tagged submission
+    // per-client accounting saw every tagged submission and completion
     for t in 0..8 {
-        assert_eq!(f.metrics.client(&format!("t{t}")).load(Ordering::Relaxed), 50);
+        let c = f.metrics.client(&format!("t{t}"));
+        assert_eq!(c.submitted.load(Ordering::Relaxed), 50);
+        assert_eq!(c.accepted.load(Ordering::Relaxed), 50);
     }
     f.shutdown();
 }

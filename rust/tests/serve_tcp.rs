@@ -1,0 +1,206 @@
+//! Loopback integration tests for the serve plane: a real [`ServePlane`]
+//! on 127.0.0.1, driven through [`WireClient`] over actual TCP sockets.
+//! Covers the submit→completion happy path, quota denial, SLO shedding,
+//! malformed-frame handling, and the per-tenant ledger.
+
+use empa::api::{FabricError, JobRequest, Output, Priority, RequestKind};
+use empa::coordinator::FabricConfig;
+use empa::serve::wire::write_frame;
+use empa::serve::{
+    QuotaConfig, ServeConfig, ServePlane, SloAction, SloConfig, SloRule, WireClient, WireReply,
+    MAX_FRAME,
+};
+use empa::workload::Mode;
+use std::time::Duration;
+
+fn plane_with(quota: QuotaConfig, slo: SloConfig) -> ServePlane {
+    ServePlane::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        fabric: FabricConfig { sim_workers: 2, ..Default::default() },
+        quota,
+        slo,
+        max_frame: MAX_FRAME,
+    })
+    .expect("serve plane binds loopback")
+}
+
+/// An SLO config whose single rule never trips (threshold above any
+/// observable value) — the tests that aren't about shedding use it so a
+/// backlog spike can't turn into a surprise refusal.
+fn quiet_slo() -> SloConfig {
+    SloConfig {
+        rules: vec![SloRule {
+            name: "never",
+            source: "FabricMetrics.submitted",
+            query: |_, _| 0.0,
+            threshold: f64::INFINITY,
+            clear_below: 0.0,
+            interpretation: "unreachable",
+            action: SloAction::Shed,
+        }],
+        eval_every: Duration::ZERO,
+    }
+}
+
+#[test]
+fn submit_and_complete_over_tcp() {
+    let plane = plane_with(QuotaConfig::default(), quiet_slo());
+    let mut c = WireClient::connect(plane.local_addr()).unwrap();
+
+    // A program job through the simulated EMPA pool…
+    let sum = c
+        .call(&JobRequest::new(RequestKind::sumup(Mode::Sumup, vec![1, 2, 3, 4])).with_client("it"))
+        .unwrap()
+        .expect("program completes");
+    match &sum.output {
+        Output::Program { eax, .. } => assert_eq!(*eax, 10),
+        other => panic!("expected program output, got {other:?}"),
+    }
+
+    // …and a mass op through the accelerator chain, over the same socket.
+    let mass = c
+        .call(&JobRequest::new(RequestKind::mass_sum(vec![2.0f32; 64])).with_client("it"))
+        .unwrap()
+        .expect("mass op completes");
+    match &mass.output {
+        Output::Scalars(v) => assert!((v[0] - 128.0).abs() < 1e-3),
+        other => panic!("expected scalars, got {other:?}"),
+    }
+
+    plane.shutdown();
+}
+
+#[test]
+fn quota_denial_is_a_typed_wire_error_and_counted() {
+    // greedy's bucket never refills and holds exactly one token; the
+    // default shape is unlimited.
+    let plane = plane_with(QuotaConfig::default().with_override("greedy", 0.0, 1.0), quiet_slo());
+    let addr = plane.local_addr();
+    let mut c = WireClient::connect(addr).unwrap();
+
+    let job = |tag: &str| JobRequest::new(RequestKind::sumup(Mode::No, vec![1])).with_client(tag);
+
+    assert!(c.call(&job("greedy")).unwrap().is_ok(), "first token admits");
+    for _ in 0..3 {
+        match c.call(&job("greedy")).unwrap() {
+            Err(FabricError::QuotaExceeded { tenant }) => assert_eq!(tenant, "greedy"),
+            other => panic!("expected QuotaExceeded, got {other:?}"),
+        }
+    }
+    // Another tenant on the same plane is untouched by greedy's bucket.
+    assert!(c.call(&job("patient")).unwrap().is_ok());
+
+    let text = WireClient::connect(addr).unwrap().metrics().unwrap();
+    assert!(text.contains("quota_denied=3"), "global counter in:\n{text}");
+    assert!(
+        text.contains("greedy[submitted=4 accepted=1 shed=0 quota_denied=3]"),
+        "greedy ledger in:\n{text}"
+    );
+    assert!(
+        text.contains("patient[submitted=1 accepted=1 shed=0 quota_denied=0]"),
+        "patient ledger in:\n{text}"
+    );
+    plane.shutdown();
+}
+
+#[test]
+fn slo_shed_refuses_by_priority_and_names_the_rule() {
+    // A rule that is always tripped: observed 1.0 > threshold -1.0.
+    let always = SloConfig {
+        rules: vec![SloRule {
+            name: "always-shed",
+            source: "test",
+            query: |_, _| 1.0,
+            threshold: -1.0,
+            clear_below: -2.0,
+            interpretation: "test rule that always trips",
+            action: SloAction::Shed,
+        }],
+        eval_every: Duration::ZERO,
+    };
+    let plane = plane_with(QuotaConfig::default(), always);
+    let addr = plane.local_addr();
+    let mut c = WireClient::connect(addr).unwrap();
+
+    let job = |p: Priority| {
+        JobRequest::new(RequestKind::sumup(Mode::No, vec![2])).with_priority(p).with_client("t")
+    };
+
+    // Shed refuses Low and Normal…
+    for p in [Priority::Low, Priority::Normal] {
+        match c.call(&job(p)).unwrap() {
+            Err(FabricError::Overloaded { rule }) => assert_eq!(rule, "always-shed"),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+    // …but High still lands (shed is load-shedding, not an outage).
+    assert!(c.call(&job(Priority::High)).unwrap().is_ok());
+
+    let text = WireClient::connect(addr).unwrap().metrics().unwrap();
+    assert!(text.contains("slo_shed=2"), "shed counter in:\n{text}");
+    assert!(text.contains("always-shed"), "rule in playbook:\n{text}");
+    assert!(text.contains("TRIPPED"), "tripped state in playbook:\n{text}");
+    assert!(
+        text.contains("t[submitted=3 accepted=1 shed=2 quota_denied=0]"),
+        "tenant ledger in:\n{text}"
+    );
+    plane.shutdown();
+}
+
+#[test]
+fn malformed_frame_gets_a_typed_error_not_a_hang() {
+    let plane = plane_with(QuotaConfig::default(), quiet_slo());
+    let mut raw = std::net::TcpStream::connect(plane.local_addr()).unwrap();
+
+    // A well-framed payload that is not a valid message.
+    write_frame(&mut raw, &[0xde, 0xad, 0xbe, 0xef], MAX_FRAME).unwrap();
+
+    // The server answers with Failed{id:0} and then closes.
+    let mut reader = raw.try_clone().unwrap();
+    let payload = empa::serve::wire::read_frame(&mut reader, MAX_FRAME)
+        .unwrap()
+        .expect("one reply before close");
+    match empa::serve::wire::decode_reply(&payload).unwrap() {
+        WireReply::Failed { id, error } => {
+            assert_eq!(id, 0);
+            assert!(matches!(error, FabricError::InvalidConfig(_)), "got {error:?}");
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+    assert!(
+        empa::serve::wire::read_frame(&mut reader, MAX_FRAME).unwrap().is_none(),
+        "connection closes after a malformed frame"
+    );
+    plane.shutdown();
+}
+
+#[test]
+fn pipelined_submits_all_get_replies() {
+    let plane = plane_with(QuotaConfig::default(), quiet_slo());
+    let mut c = WireClient::connect(plane.local_addr()).unwrap();
+
+    let n = 32;
+    let mut ids = Vec::new();
+    for i in 0..n {
+        let req = JobRequest::new(RequestKind::sumup(Mode::For, vec![i, i + 1])).with_client("pipe");
+        ids.push(c.submit(&req).unwrap());
+    }
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..n {
+        match c.recv().unwrap().expect("reply before close") {
+            WireReply::Completed { id, completion } => {
+                assert!(seen.insert(id), "duplicate reply id {id}");
+                match completion.output {
+                    Output::Program { eax, .. } => {
+                        let i = ids.iter().position(|&x| x == id).unwrap() as i32;
+                        assert_eq!(eax, 2 * i + 1);
+                    }
+                    other => panic!("expected program output, got {other:?}"),
+                }
+            }
+            other => panic!("expected Completed, got {other:?}"),
+        }
+    }
+    assert_eq!(seen.len(), n as usize);
+    plane.shutdown();
+}

@@ -1,0 +1,232 @@
+//! Wire-codec integration tests: every message variant round-trips,
+//! malformed input is a typed [`CodecError`] (never a panic), and the
+//! frame cap holds on both directions.
+
+use empa::api::{Completion, FabricError, JobRequest, Output, Priority, RequestKind, Route};
+use empa::serve::wire::{
+    decode_reply, decode_request, encode_reply, encode_request, read_frame, write_frame,
+};
+use empa::serve::{CodecError, WireReply, WireRequest, MAX_FRAME, WIRE_VERSION};
+use empa::workload::{Family, Mode, TraceOp, TraceOpKind};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One of each request kind, exercising every kind/mode/priority tag.
+fn all_kinds() -> Vec<RequestKind> {
+    vec![
+        RequestKind::mass_sum(vec![1.0f32, -2.5, 3.25]),
+        RequestKind::mass_dot(vec![1.0f32, 2.0], vec![3.0f32, 4.0]),
+        RequestKind::sumup(Mode::No, vec![1, 2, 3]),
+        RequestKind::sumup(Mode::For, vec![4, 5]),
+        RequestKind::sumup(Mode::Sumup, vec![6]),
+        RequestKind::dotprod(Mode::For, vec![1, 2], vec![3, 4]),
+        RequestKind::scale(Mode::No, vec![7, 8, 9], 3),
+        RequestKind::traces(vec![
+            TraceOp::new(TraceOpKind::Add, 11),
+            TraceOp::new(TraceOpKind::Sub, -4),
+            TraceOp::new(TraceOpKind::Xor, 0x5a5a),
+        ]),
+        RequestKind::traces(vec![]),
+    ]
+}
+
+#[test]
+fn every_request_variant_round_trips() {
+    let mut id = 0u64;
+    for kind in all_kinds() {
+        for (priority, deadline, tenant) in [
+            (Priority::Low, None, None),
+            (Priority::Normal, Some(Duration::from_micros(1500)), Some("acme")),
+            (Priority::High, Some(Duration::from_secs(2)), Some("")),
+        ] {
+            id += 1;
+            let mut job = JobRequest::new(kind.clone()).with_priority(priority);
+            if let Some(d) = deadline {
+                job = job.with_deadline(d);
+            }
+            if let Some(t) = tenant {
+                job = job.with_client(t);
+            }
+            let wire = WireRequest::submit(id, &job);
+            let back = decode_request(&encode_request(&wire)).unwrap();
+            assert_eq!(back, wire);
+            // And the server-side reconstruction matches the original job.
+            assert_eq!(back.into_job().unwrap(), job);
+        }
+    }
+    let m = WireRequest::Metrics { id: 77 };
+    assert_eq!(decode_request(&encode_request(&m)).unwrap(), m);
+}
+
+/// Every error variant the wire can carry (all twelve codes).
+fn all_errors() -> Vec<FabricError> {
+    vec![
+        FabricError::QueueFull,
+        FabricError::DeadlineExceeded,
+        FabricError::Cancelled,
+        FabricError::ShapeMismatch { a: 3, b: 5 },
+        FabricError::UnsupportedMode { family: Family::Scale, mode: Mode::Sumup },
+        FabricError::FamilyMismatch { family: Family::Sumup, params: Family::Dotprod },
+        FabricError::InvalidConfig("cores=7".to_string()),
+        FabricError::GuestFault("halt at 0x40".to_string()),
+        FabricError::Backend { name: "xla".to_string(), msg: "load failed".to_string() },
+        FabricError::Shutdown,
+        FabricError::QuotaExceeded { tenant: "mallory".to_string() },
+        FabricError::Overloaded { rule: "staged-backlog".to_string() },
+    ]
+}
+
+#[test]
+fn every_reply_variant_round_trips() {
+    let outputs = vec![
+        Output::Program { eax: -7, clocks: 123_456, cores: 4, data: vec![1, -2, 3] },
+        Output::Program { eax: 0, clocks: 0, cores: 1, data: vec![] },
+        Output::Scalars(Arc::from(vec![1.5f32, -0.25].into_boxed_slice())),
+        Output::Rows(vec![
+            Arc::from(vec![1.0f32].into_boxed_slice()),
+            Arc::from(Vec::<f32>::new().into_boxed_slice()),
+        ]),
+    ];
+    for (i, (output, route)) in outputs
+        .into_iter()
+        .zip([Route::Simulator, Route::Inline, Route::Accelerator, Route::Split])
+        .enumerate()
+    {
+        let rep = WireReply::Completed {
+            id: i as u64 + 1,
+            completion: Completion {
+                output,
+                route,
+                backend: "sim".to_string(),
+                batch_rows: 8,
+                shards: 3,
+                queue_latency: Duration::from_micros(250),
+                latency: Duration::from_micros(1999),
+            },
+        };
+        assert_eq!(decode_reply(&encode_reply(&rep)).unwrap(), rep);
+    }
+    for (i, error) in all_errors().into_iter().enumerate() {
+        let rep = WireReply::Failed { id: 100 + i as u64, error };
+        assert_eq!(decode_reply(&encode_reply(&rep)).unwrap(), rep);
+    }
+    let m = WireReply::MetricsText { id: 9, text: "submitted=1\ntenants: …\n".to_string() };
+    assert_eq!(decode_reply(&encode_reply(&m)).unwrap(), m);
+}
+
+#[test]
+fn framing_rejects_truncation_and_oversize_with_typed_errors() {
+    let payload = encode_request(&WireRequest::Metrics { id: 1 });
+
+    // Clean EOF at a frame boundary is None, not an error.
+    let mut empty: &[u8] = &[];
+    assert!(read_frame(&mut empty, MAX_FRAME).unwrap().is_none());
+
+    // EOF inside the header and inside the payload are Truncated.
+    let mut framed = Vec::new();
+    write_frame(&mut framed, &payload, MAX_FRAME).unwrap();
+    let mut cut_header = &framed[..2];
+    assert!(matches!(
+        read_frame(&mut cut_header, MAX_FRAME),
+        Err(CodecError::Truncated { need: 4, have: 2 })
+    ));
+    let mut cut_payload = &framed[..framed.len() - 1];
+    assert!(matches!(read_frame(&mut cut_payload, MAX_FRAME), Err(CodecError::Truncated { .. })));
+
+    // A header claiming more than the cap is rejected before allocation —
+    // u32::MAX here would be a 4 GiB allocation if it were honoured.
+    let mut hostile: &[u8] = &[0xff, 0xff, 0xff, 0xff];
+    assert_eq!(
+        read_frame(&mut hostile, 64).unwrap_err(),
+        CodecError::Oversized { len: u32::MAX as usize, cap: 64 }
+    );
+
+    // The cap binds the writer too.
+    let mut sink = Vec::new();
+    assert_eq!(
+        write_frame(&mut sink, &payload, 2).unwrap_err(),
+        CodecError::Oversized { len: payload.len(), cap: 2 }
+    );
+}
+
+#[test]
+fn decode_rejects_bad_version_tag_length_and_trailing() {
+    let mut p = encode_request(&WireRequest::Metrics { id: 1 });
+    assert_eq!(p[0], WIRE_VERSION);
+    p[0] = 42;
+    assert_eq!(decode_request(&p).unwrap_err(), CodecError::BadVersion { got: 42 });
+
+    // Unknown message tag.
+    let p = vec![WIRE_VERSION, 0x7f];
+    assert!(matches!(
+        decode_request(&p).unwrap_err(),
+        CodecError::BadTag { what: "request message", got: 0x7f }
+    ));
+    assert!(matches!(decode_reply(&p).unwrap_err(), CodecError::BadTag { .. }));
+
+    // A count field claiming more elements than the payload holds is
+    // BadLength — caught before any allocation sized by the claim.
+    let req = WireRequest::submit(5, &JobRequest::new(RequestKind::sumup(Mode::No, vec![1, 2])));
+    let good = encode_request(&req);
+    let count_at = good.len() - 2 * 4 - 4; // two i32 values + u32 count
+    let mut evil = good.clone();
+    evil[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    match decode_request(&evil) {
+        Err(CodecError::BadLength { claimed, .. }) => assert_eq!(claimed, u32::MAX as usize),
+        other => panic!("expected BadLength, got {other:?}"),
+    }
+
+    // Trailing garbage after a complete message.
+    let mut long = good.clone();
+    long.extend_from_slice(&[0, 0, 0]);
+    assert_eq!(decode_request(&long).unwrap_err(), CodecError::TrailingBytes { extra: 3 });
+
+    // Non-UTF-8 tenant bytes.
+    let tagged = WireRequest::submit(
+        6,
+        &JobRequest::new(RequestKind::sumup(Mode::No, vec![])).with_client("zz"),
+    );
+    let mut bad_utf8 = encode_request(&tagged);
+    let pos = bad_utf8
+        .windows(2)
+        .position(|w| w == b"zz")
+        .expect("tenant bytes present in encoding");
+    bad_utf8[pos] = 0xff;
+    bad_utf8[pos + 1] = 0xfe;
+    assert!(matches!(decode_request(&bad_utf8).unwrap_err(), CodecError::BadUtf8 { .. }));
+}
+
+/// Deterministic single-byte mutation sweep: whatever we do to a valid
+/// payload, decoding returns `Ok` or a typed `Err` — it never panics and
+/// never allocates absurdly (the suite would OOM/abort if it did).
+#[test]
+fn mutation_sweep_never_panics() {
+    let job = JobRequest::new(RequestKind::traces(vec![
+        TraceOp::new(TraceOpKind::Add, 3),
+        TraceOp::new(TraceOpKind::Xor, -9),
+    ]))
+    .with_priority(Priority::High)
+    .with_deadline(Duration::from_millis(5))
+    .with_client("fuzz");
+    let req = encode_request(&WireRequest::submit(1, &job));
+    let rep = encode_reply(&WireReply::Failed {
+        id: 1,
+        error: FabricError::Backend { name: "xla".into(), msg: "m".into() },
+    });
+
+    for base in [&req, &rep] {
+        for i in 0..base.len() {
+            for delta in [1u8, 0x80, 0xff] {
+                let mut m = base.clone();
+                m[i] = m[i].wrapping_add(delta);
+                let _ = decode_request(&m);
+                let _ = decode_reply(&m);
+            }
+        }
+        // Every truncation point, both decoders.
+        for end in 0..base.len() {
+            let _ = decode_request(&base[..end]);
+            let _ = decode_reply(&base[..end]);
+        }
+    }
+}

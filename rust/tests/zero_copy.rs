@@ -177,8 +177,8 @@ fn shard_gather_over_shared_operands_at_split_boundaries() {
 #[test]
 fn completions_share_their_output_buffers() {
     // Output::Scalars is a shared buffer: cloning a completion is a
-    // refcount bump, and the deprecated Response shim converts to an
-    // owned Vec only at the boundary.
+    // refcount bump (the legacy owned-Vec conversion lives only in the
+    // deprecated Response shim's own compatibility tests).
     let f = Fabric::start_local(FabricConfig::default());
     let h = f.submit(RequestKind::mass_sum(vec![1.0, 2.0])).unwrap();
     let c = h.wait().unwrap();
@@ -186,12 +186,7 @@ fn completions_share_their_output_buffers() {
     let c2 = c.clone();
     let Output::Scalars(v2) = &c2.output else { unreachable!() };
     assert!(Arc::ptr_eq(v, v2), "completion clones share the output allocation");
-    #[allow(deprecated)]
-    {
-        use empa::coordinator::Response;
-        let flat = Response::from_result(&Ok(c));
-        assert_eq!(flat, Response::Scalars(vec![3.0]));
-    }
+    assert_eq!(c.output.scalar(), Some(3.0));
     // Shutdown still resolves submissions with typed errors.
     f.shutdown();
     assert_eq!(
