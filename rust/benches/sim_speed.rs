@@ -4,7 +4,14 @@
 //! `sim engine:` ratio. See EXPERIMENTS.md §Perf for the methodology.
 //!
 //! `--save-baseline [path]` dumps the table as JSON (default
-//! `BENCH_sim_speed.json`) so future PRs can keep a trajectory.
+//! `BENCH_sim_speed.json`) so future PRs can keep a trajectory; rows
+//! from the thread sweep carry the host-thread count in their key.
+//!
+//! `--threads LIST` (default `1,2,4`) sets the host-thread counts for
+//! the `ParallelA` sweep. Spans are instruction-grained, so on small
+//! images the pool handoff can cost more than the payload it fans out —
+//! cycle-identity is the contract here; wall speedup is reported, not
+//! asserted.
 
 #[path = "bench_util.rs"]
 mod bench_util;
@@ -80,8 +87,21 @@ fn traces_image(n: usize) -> Vec<u8> {
     assemble(&direct_source(Mode::No, &params).unwrap()).unwrap().image
 }
 
+struct SweepRow {
+    label: String,
+    n: usize,
+    threads: usize,
+    clocks: u64,
+    spans: u64,
+    cores_per_span: f64,
+    conflicts: u64,
+    clocks_per_s: f64,
+    vs_one: Option<f64>,
+}
+
 fn main() {
     let mut save: Option<String> = None;
+    let mut threads: Vec<usize> = vec![1, 2, 4];
     let mut args = std::env::args().skip(1).peekable();
     while let Some(a) = args.next() {
         if a == "--save-baseline" {
@@ -90,6 +110,13 @@ fn main() {
                 _ => "BENCH_sim_speed.json".to_string(),
             };
             save = Some(path);
+        } else if a == "--threads" {
+            let list = args.next().expect("--threads wants a comma-separated list");
+            threads = list
+                .split(',')
+                .map(|s| s.trim().parse().expect("--threads wants positive integers"))
+                .collect();
+            assert!(!threads.is_empty(), "--threads wants at least one count");
         }
     }
 
@@ -130,6 +157,55 @@ fn main() {
         "acceptance bar: >=5x fewer scheduler iterations on NO N=4096, got {:.1}x",
         no_big.ratio
     );
+
+    section("E14: parallel phase A — host-thread sweep (cycle-identical)");
+    println!(
+        "{:>14} {:>6} {:>8} {:>9} {:>8} {:>11} {:>10} {:>12} {:>8}",
+        "workload", "N", "threads", "clocks", "spans", "cores/span", "conflicts", "clk/s", "vs t=1"
+    );
+    let mut sweep = Vec::new();
+    for (label, n, image, iters) in [
+        ("SUMUP", 4096usize, sumup_image(Mode::Sumup, 4096), 5u32),
+        ("FOR", 4096, sumup_image(Mode::For, 4096), 5),
+    ] {
+        let (lock, _) = measure(&image, StepMode::Lockstep, 1);
+        let mut one_rate: Option<f64> = None;
+        for &t in &threads {
+            let (r, rate) = measure(&image, StepMode::ParallelA { threads: t }, iters);
+            // identity before speed: every thread count must replay lockstep
+            assert_eq!(lock.clocks, r.clocks, "{label} t={t}: cycle-identical");
+            assert_eq!(lock.regs.file, r.regs.file, "{label} t={t}: architecturally identical");
+            assert_eq!(lock.retired, r.retired, "{label} t={t}");
+            if t == 1 {
+                assert_eq!(r.parallel_spans, 0, "{label}: threads=1 is the serial path");
+                one_rate = Some(rate);
+            }
+            let vs_one = one_rate.map(|b| rate / b.max(1e-12));
+            println!(
+                "{:>14} {:>6} {:>8} {:>9} {:>8} {:>11.1} {:>10} {:>12.3e} {:>8}",
+                label,
+                n,
+                t,
+                r.clocks,
+                r.parallel_spans,
+                r.cores_per_span(),
+                r.span_conflicts,
+                rate,
+                vs_one.map_or("-".to_string(), |v| format!("{v:.2}x")),
+            );
+            sweep.push(SweepRow {
+                label: label.to_string(),
+                n,
+                threads: t,
+                clocks: r.clocks,
+                spans: r.parallel_spans,
+                cores_per_span: r.cores_per_span(),
+                conflicts: r.span_conflicts,
+                clocks_per_s: rate,
+                vs_one,
+            });
+        }
+    }
 
     section("E11: the ratio as served through the fabric (FabricMetrics)");
     {
@@ -172,8 +248,31 @@ fn main() {
                 o.finish()
             })
             .collect();
+        let sweep_objs: Vec<String> = sweep
+            .iter()
+            .map(|r| {
+                let mut o = JsonWriter::new();
+                o.object(&[
+                    // the workload/threads pair is the row's identity, so a
+                    // future sweep at different counts extends, not clobbers
+                    ("key", format!("\"{}/{}@t{}\"", r.label, r.n, r.threads)),
+                    ("workload", format!("\"{}\"", r.label)),
+                    ("n", r.n.to_string()),
+                    ("host_threads", r.threads.to_string()),
+                    ("clocks", r.clocks.to_string()),
+                    ("parallel_spans", r.spans.to_string()),
+                    ("cores_per_span", num(r.cores_per_span)),
+                    ("span_conflicts", r.conflicts.to_string()),
+                    ("clocks_per_sec", num(r.clocks_per_s)),
+                    ("vs_one_thread", r.vs_one.map_or("null".to_string(), num)),
+                ]);
+                o.finish()
+            })
+            .collect();
         w.raw("{\"bench\":\"sim_speed\",\"rows\":");
         w.array(&objs);
+        w.raw(",\"thread_sweep\":");
+        w.array(&sweep_objs);
         w.raw("}");
         std::fs::write(&path, w.finish()).expect("write baseline");
         println!("\nbaseline saved to {path}");

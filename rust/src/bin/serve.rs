@@ -7,14 +7,16 @@
 //! image has no clap.
 //!
 //! ```text
-//! serve [--addr HOST:PORT] [--workers N] [--queue-cap N]
+//! serve [--addr HOST:PORT] [--workers N] [--sim-threads N] [--queue-cap N]
 //!       [--quota RATE[:BURST]] [--tenant TAG=RATE[:BURST]]...
 //!       [--max-frame BYTES] [--secs S]
 //! ```
 //!
 //! `--quota` sets the default token-bucket shape for every tenant;
 //! `--tenant` overrides one tag. Omitted burst defaults to the rate
-//! (a one-second burst window).
+//! (a one-second burst window). `--sim-threads N` steps each worker's
+//! simulated processor with N host threads (`StepMode::ParallelA`);
+//! 1 (the default) keeps the serial event-horizon scheduler.
 
 use empa::coordinator::FabricConfig;
 use empa::serve::{QuotaConfig, ServeConfig, ServePlane, SloConfig, MAX_FRAME};
@@ -47,6 +49,7 @@ fn parse_shape(s: &str) -> anyhow::Result<(f64, f64)> {
 fn run(args: Vec<String>) -> anyhow::Result<()> {
     let mut addr = "127.0.0.1:0".to_string();
     let mut workers = 4usize;
+    let mut sim_threads = 1usize;
     let mut queue_cap = 256usize;
     let mut quota = QuotaConfig::default();
     let mut max_frame = MAX_FRAME;
@@ -60,6 +63,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         match flag.as_str() {
             "--addr" => addr = val()?,
             "--workers" => workers = val()?.parse()?,
+            "--sim-threads" => sim_threads = val()?.parse()?,
             "--queue-cap" => queue_cap = val()?.parse()?,
             "--quota" => {
                 let (r, b) = parse_shape(&val()?)?;
@@ -78,7 +82,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
             "--secs" => secs = val()?.parse()?,
             "--help" | "-h" => {
                 println!(
-                    "serve [--addr HOST:PORT] [--workers N] [--queue-cap N] \
+                    "serve [--addr HOST:PORT] [--workers N] [--sim-threads N] [--queue-cap N] \
                      [--quota RATE[:BURST]] [--tenant TAG=RATE[:BURST]]... \
                      [--max-frame BYTES] [--secs S (0 = forever)]"
                 );
@@ -88,7 +92,10 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         }
     }
 
-    let fabric = FabricConfig { sim_workers: workers, queue_cap, ..Default::default() };
+    let mut fabric = FabricConfig { sim_workers: workers, queue_cap, ..Default::default() };
+    if sim_threads >= 2 {
+        fabric.empa.step = empa::empa::StepMode::ParallelA { threads: sim_threads };
+    }
     let slo = SloConfig::for_queue_cap(queue_cap);
     let plane = ServePlane::start(ServeConfig { addr, fabric, quota, slo, max_frame })?;
     println!("serve: listening on {}", plane.local_addr());

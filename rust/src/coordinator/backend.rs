@@ -259,6 +259,13 @@ pub struct PipelineStats {
     /// code-limit boundary keeps data stores from poisoning the cache).
     pub icache_hits: Cell<u64>,
     pub icache_misses: Cell<u64>,
+    /// Host threads stepping this worker's processor (gauge; 1 = serial).
+    pub host_threads: Cell<u64>,
+    /// Parallel phase-A spans / speculated retirements / conflict
+    /// re-executions across served jobs (`StepMode::ParallelA`).
+    pub parallel_spans: Cell<u64>,
+    pub parallel_cores: Cell<u64>,
+    pub span_conflicts: Cell<u64>,
 }
 
 /// One simulated EMPA processor slot, built as a **compile-once
@@ -396,6 +403,22 @@ impl SimBackend {
         self.count_by(&self.stats.sim_clocks_skipped, r.clocks_skipped, |m| &m.sim_clocks_skipped);
         self.count_by(&self.stats.icache_hits, r.icache_hits, |m| &m.icache_hits);
         self.count_by(&self.stats.icache_misses, r.icache_misses, |m| &m.icache_misses);
+        // Host-parallel stepping economics (the `host parallel:` line).
+        // The thread count is a gauge — the shared metric keeps the max
+        // any worker reported, not a sum over jobs.
+        let threads = r.host_threads as u64;
+        self.stats.host_threads.set(self.stats.host_threads.get().max(threads));
+        if let Some(m) = &self.metrics {
+            m.host_threads.fetch_max(threads, std::sync::atomic::Ordering::Relaxed);
+            for (slot, n) in m.span_hist.iter().zip(r.span_hist) {
+                if n > 0 {
+                    slot.fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+        }
+        self.count_by(&self.stats.parallel_spans, r.parallel_spans, |m| &m.parallel_spans);
+        self.count_by(&self.stats.parallel_cores, r.parallel_cores, |m| &m.parallel_cores);
+        self.count_by(&self.stats.span_conflicts, r.span_conflicts, |m| &m.span_conflicts);
         if let Some(f) = r.fault {
             return Err(FabricError::GuestFault(f));
         }
@@ -553,6 +576,29 @@ mod tests {
             .unwrap();
         assert_eq!(lock.pipeline_stats().sim_clocks_skipped.get(), 0);
         assert!(lock.pipeline_stats().sim_events.get() > b.pipeline_stats().sim_events.get());
+    }
+
+    #[test]
+    fn sim_backend_publishes_host_parallel_stats() {
+        let b = SimBackend::new(EmpaConfig {
+            step: crate::empa::StepMode::ParallelA { threads: 2 },
+            ..Default::default()
+        });
+        let params = Params::Sumup { values: (0..64).collect() };
+        b.execute(BackendJob::Program { family: Family::Sumup, mode: Mode::Sumup, params: &params })
+            .unwrap();
+        let s = b.pipeline_stats();
+        assert_eq!(s.host_threads.get(), 2);
+        assert!(s.parallel_spans.get() > 0, "staggered SUMUP children overlap");
+        assert!(s.parallel_cores.get() >= 2 * s.parallel_spans.get());
+
+        // a serial pool reports threads=1 and never spans
+        let serial = SimBackend::new(EmpaConfig::default());
+        serial
+            .execute(BackendJob::Program { family: Family::Sumup, mode: Mode::Sumup, params: &params })
+            .unwrap();
+        assert_eq!(serial.pipeline_stats().host_threads.get(), 1);
+        assert_eq!(serial.pipeline_stats().parallel_spans.get(), 0);
     }
 
     #[test]

@@ -111,6 +111,20 @@ pub struct FabricMetrics {
     /// Program jobs served by patching data spans into the worker's
     /// already-loaded template image (no image copy, no memory reload).
     pub image_reuses: AtomicU64,
+    /// Host threads stepping one simulated processor (gauge: the maximum
+    /// any worker reported; 1 = serial stepping everywhere).
+    pub host_threads: AtomicU64,
+    /// Simulator ticks whose phase A fanned out over the worker pool,
+    /// summed across served program jobs (`StepMode::ParallelA`).
+    pub parallel_spans: AtomicU64,
+    /// Core retirements speculated inside those spans (mean span width =
+    /// `parallel_cores / parallel_spans`).
+    pub parallel_cores: AtomicU64,
+    /// Speculations that conflicted with an earlier same-clock store and
+    /// were re-executed serially.
+    pub span_conflicts: AtomicU64,
+    /// Span-size histogram: buckets 2, 3, 4, 5–8, 9–16, 17+ cores.
+    pub span_hist: [AtomicU64; 6],
     /// Serve plane: requests denied by a tenant token-bucket quota
     /// (summed over tenants; the per-tenant split is in `client(tag)`).
     pub quota_denied: AtomicU64,
@@ -219,6 +233,17 @@ impl FabricMetrics {
         }
     }
 
+    /// Mean fan-out width of the parallel phase-A spans across served
+    /// program jobs (0 when phase A never fanned out).
+    pub fn cores_per_span(&self) -> f64 {
+        let s = self.parallel_spans.load(Ordering::Relaxed);
+        if s == 0 {
+            0.0
+        } else {
+            self.parallel_cores.load(Ordering::Relaxed) as f64 / s as f64
+        }
+    }
+
     /// Effective simulated clocks per scheduler iteration across all
     /// served program jobs (1.0 ≙ lockstep; higher = dead clocks
     /// skipped). 0 when no program job has been simulated.
@@ -278,6 +303,24 @@ impl FabricMetrics {
                 g(&self.icache_hits),
                 g(&self.icache_misses),
                 100.0 * self.icache_hit_rate(),
+            ));
+        }
+        if g(&self.host_threads) > 1 || g(&self.parallel_spans) > 0 {
+            let h = &self.span_hist;
+            out.push_str(&format!(
+                "\n  host parallel: threads={} spans={} cores={} (mean {:.1}/span) conflicts={} \
+                 hist [2]={} [3]={} [4]={} [5-8]={} [9-16]={} [17+]={}",
+                g(&self.host_threads),
+                g(&self.parallel_spans),
+                g(&self.parallel_cores),
+                self.cores_per_span(),
+                g(&self.span_conflicts),
+                g(&h[0]),
+                g(&h[1]),
+                g(&h[2]),
+                g(&h[3]),
+                g(&h[4]),
+                g(&h[5]),
             ));
         }
         {
@@ -416,6 +459,28 @@ mod tests {
         assert_eq!(m.sim_clocks_per_event(), 10.0);
         let r = m.render();
         assert!(r.contains("sim engine: events=4 clocks_skipped=36 (10.0 clocks/event)"), "{r}");
+    }
+
+    #[test]
+    fn host_parallel_line_is_hidden_until_threads_or_spans() {
+        let m = FabricMetrics::default();
+        assert_eq!(m.cores_per_span(), 0.0);
+        assert!(!m.render().contains("host parallel"), "hidden while serial");
+        m.host_threads.store(4, Ordering::Relaxed);
+        m.parallel_spans.store(2, Ordering::Relaxed);
+        m.parallel_cores.store(7, Ordering::Relaxed);
+        m.span_conflicts.store(1, Ordering::Relaxed);
+        m.span_hist[0].store(1, Ordering::Relaxed);
+        m.span_hist[3].store(1, Ordering::Relaxed);
+        assert_eq!(m.cores_per_span(), 3.5);
+        let r = m.render();
+        assert!(r.contains("host parallel: threads=4 spans=2 cores=7 (mean 3.5/span)"), "{r}");
+        assert!(r.contains("conflicts=1"), "{r}");
+        assert!(r.contains("hist [2]=1 [3]=0 [4]=0 [5-8]=1 [9-16]=0 [17+]=0"), "{r}");
+        // a parallel pool that never spanned still shows its thread count
+        let m = FabricMetrics::default();
+        m.host_threads.store(2, Ordering::Relaxed);
+        assert!(m.render().contains("host parallel: threads=2 spans=0"));
     }
 
     #[test]

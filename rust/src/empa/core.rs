@@ -4,8 +4,10 @@
 //! identity/parent/children/preallocated bitmasks, the QT offset, and the
 //! four latch registers behind the pseudo-registers of §4.6.
 
+use super::effects::{PendingEffects, PhaseTask};
 use crate::emu::CoreRegs;
 use crate::isa::Insn;
+use crate::mem::MemView;
 
 /// Allocation state as seen by the supervisor's pool (§4.3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -167,6 +169,26 @@ impl Core {
         }
     }
 
+    /// Snapshot the inputs of this core's pending phase-A apply. The
+    /// core must be in [`RunState::Exec`].
+    pub(crate) fn phase_task(&self) -> PhaseTask {
+        let RunState::Exec { insn, .. } = self.run else {
+            unreachable!("phase_task on a non-executing core")
+        };
+        PhaseTask { id: self.id, insn, pc: self.pc, regs: self.regs.clone(), latch: self.latch }
+    }
+
+    /// Pure phase-A step: `&Core, &MemView -> PendingEffects`. Nothing
+    /// shared is touched — every cross-core consequence of the retiring
+    /// instruction (the data store, the `%pp` stream, the fault) comes
+    /// back as an ordered effect record for the processor's serial
+    /// commit. This is the function the parallel stepping mode fans out
+    /// over host threads; it is also how a conflicted speculation is
+    /// re-executed in place against the live bytes.
+    pub(crate) fn step_phase_a(&self, view: &MemView<'_>) -> PendingEffects {
+        self.phase_task().run(view)
+    }
+
     /// Return the core to its just-constructed state, reusing the
     /// allocation (processor reuse across program runs): back in the
     /// pool, no parent/children/prealloc, zeroed glue and counters.
@@ -222,6 +244,29 @@ mod tests {
         assert_eq!((c.parent, c.prealloc, c.available_at), (None, 0, 0));
         assert_eq!((c.retired, c.busy_clocks), (0, 0));
         assert!(c.available(0));
+    }
+
+    #[test]
+    fn step_phase_a_is_pure_over_the_shard() {
+        use crate::isa::Reg;
+        let mut mem = crate::mem::Memory::new(64);
+        mem.write_u32(0x20, 9).unwrap();
+        let mut c = Core::new(4);
+        c.regs.file[Reg::Ecx as usize] = 0x20;
+        c.pc = 0x8;
+        c.run = RunState::Exec {
+            insn: Insn::MrMov { ra: Reg::Eax, rb: Reg::Ecx, disp: 0 },
+            apply_at: 11,
+        };
+        let before = c.clone();
+        let eff = c.step_phase_a(&mem.view());
+        assert_eq!(eff.id, 4);
+        assert_eq!(eff.read, Some(0x20));
+        assert_eq!(eff.regs.file[Reg::Eax as usize], 9);
+        // purity: neither the core nor the memory moved
+        assert_eq!(c.regs, before.regs);
+        assert_eq!(c.run, before.run);
+        assert_eq!(mem.read_u32(0x20).unwrap(), 9);
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Pure phase-A speculation: the effect-record layer of the parallel
+//! stepping core.
+//!
+//! Between two supervisor sync points (metainstruction retirements,
+//! engine rents, IRQ raises — the boundaries arXiv 1608.07155 identifies
+//! as the safe fan-out window), every retiring *conventional*
+//! instruction touches only its own core's registers/latches plus at
+//! most one data word. [`PhaseTask`] snapshots those inputs so a worker
+//! thread can execute the instruction against a read-only [`MemView`] of
+//! the pre-phase memory; [`PendingEffects`] records everything the
+//! instruction *would* have done. The commit loop in
+//! [`super::processor::EmpaProcessor`] then replays the records serially
+//! in core-index order — the same order the lockstep phase-A loop uses —
+//! which is what keeps the parallel mode bit-identical.
+
+use super::core::Latches;
+use crate::emu::{execute, CoreRegs, ExecEffect, PseudoPort};
+use crate::isa::{Insn, Reg, Status};
+use crate::mem::{AddrError, DataPort, MemView};
+
+/// Inputs of one core's pending phase-A apply, cloned out so a worker
+/// thread can speculate without borrowing the processor.
+#[derive(Debug, Clone)]
+pub(crate) struct PhaseTask {
+    pub id: usize,
+    pub insn: Insn,
+    pub pc: u32,
+    pub regs: CoreRegs,
+    pub latch: Latches,
+}
+
+/// Everything one speculated instruction would do to the machine —
+/// an ordered effect record.
+#[derive(Debug, Clone)]
+pub(crate) struct PendingEffects {
+    pub id: usize,
+    /// Post-execution register file (including condition codes).
+    pub regs: CoreRegs,
+    /// Post-execution latches.
+    pub latch: Latches,
+    /// `%pp` stream value (SUMUP adder traffic, §5.2) — routed to the
+    /// parent's engine at commit, in core-index order.
+    pub streamed: Option<i32>,
+    /// Word address of a successful data load — the read set for
+    /// conflict detection (a Y86 instruction loads at most one word).
+    pub read: Option<u32>,
+    /// Staged data store `(addr, value)` (at most one per instruction);
+    /// performed at commit through the live memory so decode-cache
+    /// versioning and dirty-window accounting stay identical.
+    pub write: Option<(u32, u32)>,
+    pub outcome: EffectOutcome,
+}
+
+/// [`ExecEffect`], detached from the borrow of the live machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum EffectOutcome {
+    Continue { next_pc: u32 },
+    Stop(Status),
+}
+
+/// Two word accesses overlap iff their 4-byte ranges intersect.
+#[inline]
+pub(crate) fn words_overlap(a: u32, b: u32) -> bool {
+    a.abs_diff(b) < 4
+}
+
+/// Staging [`DataPort`]: loads read the pre-phase view and are recorded
+/// into the read set; stores are bounds-probed and held back for the
+/// serial commit. No instruction both loads and stores (see
+/// [`crate::emu::execute`]), so one slot of each suffices.
+struct StagedMem<'a> {
+    view: &'a MemView<'a>,
+    read: Option<u32>,
+    write: Option<(u32, u32)>,
+}
+
+impl DataPort for StagedMem<'_> {
+    fn load(&mut self, addr: u32) -> Result<u32, AddrError> {
+        let v = self.view.read_u32(addr)?;
+        debug_assert!(self.read.is_none(), "one load per Y86 instruction");
+        self.read = Some(addr);
+        Ok(v)
+    }
+
+    fn store(&mut self, addr: u32, value: u32) -> Result<(), AddrError> {
+        self.view.probe_write(addr)?;
+        debug_assert!(self.write.is_none(), "one store per Y86 instruction");
+        self.write = Some((addr, value));
+        Ok(())
+    }
+}
+
+/// Pseudo-register port backed by a core's latch registers (§4.6).
+///
+/// Context-dependent directions: reading `%pc` takes the `FromParent`
+/// latch; writing `%pc` stages `ForChild`. Reading `%pp` peeks
+/// `FromChild`; writing `%pp` latches `ForParent` (and, in SUMUP mode,
+/// streams to the parent adder — handled by the caller through
+/// `streamed`). Empty latches read as 0. Shared by the serial apply path
+/// and the speculated phase-A path: both operate on a plain
+/// `&mut Latches`, live or cloned.
+pub(crate) struct LatchPort<'a> {
+    pub latch: &'a mut Latches,
+    pub streamed: &'a mut Option<i32>,
+}
+
+impl PseudoPort for LatchPort<'_> {
+    fn read(&mut self, r: Reg) -> Option<i32> {
+        Some(match r {
+            Reg::PseudoC => self.latch.from_parent.unwrap_or(0),
+            Reg::PseudoP => self.latch.from_child.unwrap_or(0),
+            _ => return None,
+        })
+    }
+
+    fn write(&mut self, r: Reg, v: i32) -> Option<()> {
+        match r {
+            Reg::PseudoC => self.latch.for_child = Some(v),
+            Reg::PseudoP => {
+                self.latch.for_parent = Some(v);
+                *self.streamed = Some(v);
+            }
+            _ => return None,
+        }
+        Some(())
+    }
+}
+
+impl PhaseTask {
+    /// Speculate the task against `view`. Pure: no processor, supervisor
+    /// or memory state is touched — everything comes back in the record.
+    pub fn run(&self, view: &MemView<'_>) -> PendingEffects {
+        let mut regs = self.regs.clone();
+        let mut latch = self.latch;
+        let mut streamed = None;
+        let mut mem = StagedMem { view, read: None, write: None };
+        let effect = {
+            let mut port = LatchPort { latch: &mut latch, streamed: &mut streamed };
+            execute(&self.insn, self.pc, &mut regs, &mut mem, &mut port)
+        };
+        PendingEffects {
+            id: self.id,
+            regs,
+            latch,
+            streamed,
+            read: mem.read,
+            write: mem.write,
+            outcome: match effect {
+                ExecEffect::Continue { next_pc } => EffectOutcome::Continue { next_pc },
+                ExecEffect::Stop(s) => EffectOutcome::Stop(s),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::OpFn;
+    use crate::mem::Memory;
+
+    fn task(insn: Insn) -> PhaseTask {
+        PhaseTask { id: 3, insn, pc: 0x10, regs: CoreRegs::default(), latch: Latches::default() }
+    }
+
+    #[test]
+    fn a_store_is_staged_not_performed() {
+        let mem = Memory::new(64);
+        let mut t = task(Insn::RmMov { ra: Reg::Esi, rb: Reg::Ecx, disp: 4 });
+        t.regs.file[Reg::Esi as usize] = 77;
+        t.regs.file[Reg::Ecx as usize] = 0x20;
+        let eff = t.run(&mem.view());
+        assert_eq!(eff.write, Some((0x24, 77)));
+        assert_eq!(eff.read, None);
+        assert_eq!(eff.outcome, EffectOutcome::Continue { next_pc: 0x10 + 6 });
+        assert_eq!(mem.read_u32(0x24).unwrap(), 0, "view is read-only");
+    }
+
+    #[test]
+    fn a_load_is_recorded_in_the_read_set() {
+        let mut mem = Memory::new(64);
+        mem.write_u32(0x24, 1234).unwrap();
+        let mut t = task(Insn::MrMov { ra: Reg::Edi, rb: Reg::Ecx, disp: 4 });
+        t.regs.file[Reg::Ecx as usize] = 0x20;
+        let eff = t.run(&mem.view());
+        assert_eq!(eff.read, Some(0x24));
+        assert_eq!(eff.write, None);
+        assert_eq!(eff.regs.file[Reg::Edi as usize], 1234);
+    }
+
+    #[test]
+    fn out_of_bounds_accesses_stop_with_adr_like_the_live_memory() {
+        let mem = Memory::new(16);
+        let mut t = task(Insn::RmMov { ra: Reg::Esi, rb: Reg::Ecx, disp: 0 });
+        t.regs.file[Reg::Ecx as usize] = 1000;
+        assert_eq!(t.run(&mem.view()).outcome, EffectOutcome::Stop(Status::Adr));
+        let mut t = task(Insn::MrMov { ra: Reg::Esi, rb: Reg::Ecx, disp: 0 });
+        t.regs.file[Reg::Ecx as usize] = 1000;
+        assert_eq!(t.run(&mem.view()).outcome, EffectOutcome::Stop(Status::Adr));
+    }
+
+    #[test]
+    fn pp_writes_stream_and_latch() {
+        let mem = Memory::new(16);
+        let mut t = task(Insn::Op { op: OpFn::Add, ra: Reg::Eax, rb: Reg::PseudoP });
+        t.regs.file[Reg::Eax as usize] = 5;
+        t.latch.from_child = Some(37);
+        let eff = t.run(&mem.view());
+        assert_eq!(eff.streamed, Some(42), "read %pp (37) + %eax (5), streamed back");
+        assert_eq!(eff.latch.for_parent, Some(42));
+        assert_eq!(t.latch.for_parent, None, "the task's own snapshot is untouched");
+    }
+
+    #[test]
+    fn halt_and_alu_outcomes_round_trip() {
+        let mem = Memory::new(16);
+        assert_eq!(task(Insn::Halt).run(&mem.view()).outcome, EffectOutcome::Stop(Status::Hlt));
+        let mut t = task(Insn::Op { op: OpFn::Sub, ra: Reg::Eax, rb: Reg::Ebx });
+        t.regs.file[0] = 5;
+        t.regs.file[3] = 5;
+        let eff = t.run(&mem.view());
+        assert!(eff.regs.cc.zf, "condition codes travel in the record");
+        assert_eq!(eff.regs.file[3], 0);
+    }
+
+    #[test]
+    fn word_overlap_is_symmetric_and_tight() {
+        assert!(words_overlap(100, 100));
+        assert!(words_overlap(100, 103));
+        assert!(words_overlap(103, 100));
+        assert!(!words_overlap(100, 104));
+        assert!(!words_overlap(104, 100));
+    }
+}

@@ -3,9 +3,11 @@
 //! engines, pseudo-registers and the calibrated timing model.
 
 pub mod core;
+mod effects;
 pub mod gantt;
 #[cfg(test)]
 mod irq_tests;
+mod pool;
 pub mod processor;
 pub mod sv;
 pub mod timing;

@@ -1,0 +1,279 @@
+//! Persistent phase-A worker pool.
+//!
+//! One pool serves one [`super::processor::EmpaProcessor`] for its whole
+//! life (it survives `reset_with`/`reset_reusing`). `threads` counts the
+//! *total* participants including the stepping thread itself:
+//! `ParallelA { threads: 4 }` spawns 3 workers and the stepping thread
+//! computes the first chunk of every span in place. Workers park on a
+//! condvar between spans; a span hands them owned [`PhaseTask`]s plus a
+//! shared read-only byte slice of the pre-phase memory, and
+//! [`PhasePool::run_span`] blocks until every chunk is back — so the
+//! effect records always come home before the serial commit starts.
+
+use super::effects::{PendingEffects, PhaseTask};
+use crate::mem::{MemView, Memory};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// The pre-phase memory bytes, smuggled across the thread boundary as a
+/// raw slice.
+///
+/// SAFETY invariant: set under the state lock by [`PhasePool::run_span`],
+/// which does not return until `outstanding == 0` — the `&Memory` borrow
+/// it was taken from therefore outlives every worker dereference, and
+/// the bytes are never written while a span is in flight (speculated
+/// stores are staged in the effect records; the commit runs only after
+/// the join). Workers never touch the slice outside a span.
+#[derive(Clone, Copy)]
+struct SpanBytes {
+    ptr: *const u8,
+    len: usize,
+}
+
+unsafe impl Send for SpanBytes {}
+
+impl SpanBytes {
+    fn empty() -> Self {
+        SpanBytes { ptr: std::ptr::NonNull::<u8>::dangling().as_ptr(), len: 0 }
+    }
+}
+
+struct State {
+    /// Monotonic span counter: a worker computes its chunk of span
+    /// `epoch` exactly once (guards against spurious condvar wakeups).
+    epoch: u64,
+    shutdown: bool,
+    bytes: SpanBytes,
+    tasks: Vec<PhaseTask>,
+    results: Vec<Option<PendingEffects>>,
+    /// Workers still computing the current span.
+    outstanding: usize,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signalled when a new span (or shutdown) is published.
+    work: Condvar,
+    /// Signalled when the last worker finishes its chunk.
+    done: Condvar,
+}
+
+impl Shared {
+    /// A worker panic poisons the lock with the pool mid-span; the
+    /// stepping thread would deadlock waiting for `outstanding` anyway,
+    /// so recovering the guard (for shutdown paths) is strictly better
+    /// than a second panic.
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Persistent scoped worker pool for parallel phase-A speculation.
+pub(crate) struct PhasePool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Total participants, including the stepping thread.
+    threads: usize,
+}
+
+/// Contiguous chunk `[lo, hi)` of `n` items for participant `slot` of
+/// `parts` (slot 0 is the stepping thread). Sizes differ by at most one.
+fn chunk(n: usize, parts: usize, slot: usize) -> (usize, usize) {
+    let per = n / parts;
+    let rem = n % parts;
+    let lo = slot * per + slot.min(rem);
+    (lo, lo + per + usize::from(slot < rem))
+}
+
+impl PhasePool {
+    /// Build a pool with `threads` total participants (>= 2; a serial
+    /// mode needs no pool at all).
+    pub fn new(threads: usize) -> Self {
+        debug_assert!(threads >= 2, "threads=1 is the serial path, no pool");
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                shutdown: false,
+                bytes: SpanBytes::empty(),
+                tasks: Vec::new(),
+                results: Vec::new(),
+                outstanding: 0,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|slot| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("empa-phase-a-{slot}"))
+                    .spawn(move || worker_loop(shared, threads, slot))
+                    .expect("spawn phase-A worker")
+            })
+            .collect();
+        PhasePool { shared, handles, threads }
+    }
+
+    /// Total participants, including the stepping thread.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Speculate one span: fan `tasks` out over the participants against
+    /// the pre-phase `mem` bytes, block until every chunk is computed,
+    /// and return the effect records in task order (= core-index order,
+    /// the commit order).
+    pub fn run_span(&self, mem: &Memory, tasks: Vec<PhaseTask>) -> Vec<PendingEffects> {
+        let n = tasks.len();
+        let (lo0, hi0) = chunk(n, self.threads, 0);
+        // The stepping thread's own chunk, cloned before publication so
+        // it can compute outside the lock alongside the workers.
+        let mine: Vec<PhaseTask> = tasks[lo0..hi0].to_vec();
+        {
+            let mut st = self.shared.lock();
+            debug_assert_eq!(st.outstanding, 0, "spans never overlap");
+            let raw = mem.raw_bytes();
+            st.bytes = SpanBytes { ptr: raw.as_ptr(), len: raw.len() };
+            st.tasks = tasks;
+            st.results.clear();
+            st.results.resize_with(n, || None);
+            st.outstanding = self.handles.len();
+            st.epoch += 1;
+            self.shared.work.notify_all();
+        }
+        let view = mem.view();
+        let computed: Vec<PendingEffects> = mine.iter().map(|t| t.run(&view)).collect();
+        let mut st = self.shared.lock();
+        for (k, eff) in computed.into_iter().enumerate() {
+            st.results[lo0 + k] = Some(eff);
+        }
+        while st.outstanding > 0 {
+            st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        // Drop the borrow markers before the `&Memory` borrow ends.
+        st.tasks.clear();
+        st.bytes = SpanBytes::empty();
+        st.results.drain(..).map(|r| r.expect("every chunk computed")).collect()
+    }
+}
+
+impl Drop for PhasePool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, parts: usize, slot: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (bytes, mine, base) = {
+            let mut st = shared.lock();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    break;
+                }
+                st = shared.work.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            seen = st.epoch;
+            let (lo, hi) = chunk(st.tasks.len(), parts, slot);
+            (st.bytes, st.tasks[lo..hi].to_vec(), lo)
+        };
+        // SAFETY: see `SpanBytes` — `run_span` keeps the backing memory
+        // alive and unwritten until this worker decrements `outstanding`.
+        let slice: &[u8] = unsafe { std::slice::from_raw_parts(bytes.ptr, bytes.len) };
+        let view = MemView::new(slice);
+        let computed: Vec<PendingEffects> = mine.iter().map(|t| t.run(&view)).collect();
+        let mut st = shared.lock();
+        for (k, eff) in computed.into_iter().enumerate() {
+            st.results[base + k] = Some(eff);
+        }
+        st.outstanding -= 1;
+        if st.outstanding == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emu::CoreRegs;
+    use crate::empa::core::Latches;
+    use crate::isa::{Insn, Reg};
+
+    fn load_task(id: usize, addr: i32) -> PhaseTask {
+        let mut regs = CoreRegs::default();
+        regs.file[Reg::Ecx as usize] = addr;
+        PhaseTask {
+            id,
+            insn: Insn::MrMov { ra: Reg::Eax, rb: Reg::Ecx, disp: 0 },
+            pc: 0,
+            regs,
+            latch: Latches::default(),
+        }
+    }
+
+    #[test]
+    fn chunks_partition_without_gaps() {
+        for n in 0..40 {
+            for parts in 1..6 {
+                let mut next = 0;
+                for slot in 0..parts {
+                    let (lo, hi) = chunk(n, parts, slot);
+                    assert_eq!(lo, next, "n={n} parts={parts} slot={slot}");
+                    assert!(hi - lo <= n / parts + 1);
+                    next = hi;
+                }
+                assert_eq!(next, n, "chunks cover exactly [0, n)");
+            }
+        }
+    }
+
+    #[test]
+    fn spans_come_back_in_task_order_across_reuse() {
+        let mut mem = Memory::new(256);
+        for i in 0..32 {
+            mem.write_u32(4 * i, 100 + i).unwrap();
+        }
+        let pool = PhasePool::new(3);
+        assert_eq!(pool.threads(), 3);
+        for _round in 0..50 {
+            let tasks: Vec<PhaseTask> = (0..32).map(|i| load_task(i, 4 * i as i32)).collect();
+            let effs = pool.run_span(&mem, tasks);
+            assert_eq!(effs.len(), 32);
+            for (i, e) in effs.iter().enumerate() {
+                assert_eq!(e.id, i, "records come back in submission order");
+                assert_eq!(e.regs.file[Reg::Eax as usize], 100 + i as u32 as i32);
+                assert_eq!(e.read, Some(4 * i as u32));
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_and_empty_spans_are_fine() {
+        let mem = Memory::new(64);
+        let pool = PhasePool::new(4);
+        assert_eq!(pool.run_span(&mem, Vec::new()).len(), 0);
+        let effs = pool.run_span(&mem, vec![load_task(7, 8)]);
+        assert_eq!(effs.len(), 1);
+        assert_eq!(effs[0].id, 7);
+    }
+
+    #[test]
+    fn drop_joins_the_workers() {
+        let pool = PhasePool::new(2);
+        let mem = Memory::new(16);
+        let _ = pool.run_span(&mem, vec![load_task(0, 0)]);
+        drop(pool); // must not hang
+    }
+}

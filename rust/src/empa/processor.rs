@@ -29,10 +29,12 @@
 //! construction (see `rust/tests/stepping.rs` and EXPERIMENTS.md §Perf).
 
 use super::core::{AllocState, BlockReason, Core, RunState};
+use super::effects::{words_overlap, EffectOutcome, LatchPort, PendingEffects, PhaseTask};
+use super::pool::PhasePool;
 use super::sv::{MassEngine, MassMode, Supervisor};
 use super::timing::TimingConfig;
 use super::trace::{Event, Trace};
-use crate::emu::{execute, CoreRegs, ExecEffect, PseudoPort};
+use crate::emu::{execute, CoreRegs, ExecEffect};
 use crate::isa::{Insn, MetaFn, Reg, Status};
 use crate::mem::{bus::MemoryBus, MemConfig, Memory};
 
@@ -55,6 +57,19 @@ pub enum StepMode {
     /// when there is no need to wait".
     #[default]
     EventHorizon,
+    /// Event-horizon scheduling plus **host-parallel phase A**: between
+    /// two supervisor sync points (metainstruction retirements, engine
+    /// actions, IRQ raises), same-clock conventional retirements are
+    /// speculated on `threads` host threads against a read-only view of
+    /// the pre-phase memory, then their effect records are committed
+    /// serially in core-index order — the order the lockstep loop uses —
+    /// with conflicting reads re-executed in place. Bit-identical to the
+    /// other modes; `threads: 1` *is* the serial event-horizon path (no
+    /// worker pool is built at all).
+    ParallelA {
+        /// Total host threads, including the stepping thread (1..=64).
+        threads: usize,
+    },
 }
 
 /// Why an [`EmpaConfig`] cannot be instantiated. Surfaced as a typed
@@ -65,6 +80,10 @@ pub enum ConfigError {
     /// `num_cores` outside the supported range: the supervisor's
     /// identity/children/preallocation bitmasks are 64-bit one-hot sets.
     CoreCount { requested: usize },
+    /// `ParallelA` thread count outside the supported range (more host
+    /// threads than simulated cores can never all be busy; 64 is the
+    /// core-count ceiling).
+    HostThreads { requested: usize },
 }
 
 impl std::fmt::Display for ConfigError {
@@ -72,6 +91,9 @@ impl std::fmt::Display for ConfigError {
         match self {
             ConfigError::CoreCount { requested } => {
                 write!(f, "num_cores={requested} unsupported (this supervisor models 1..=64 cores)")
+            }
+            ConfigError::HostThreads { requested } => {
+                write!(f, "ParallelA threads={requested} unsupported (1..=64 host threads)")
             }
         }
     }
@@ -114,6 +136,11 @@ impl EmpaConfig {
         if !(1..=64).contains(&self.num_cores) {
             return Err(ConfigError::CoreCount { requested: self.num_cores });
         }
+        if let StepMode::ParallelA { threads } = self.step {
+            if !(1..=64).contains(&threads) {
+                return Err(ConfigError::HostThreads { requested: threads });
+            }
+        }
         Ok(())
     }
 }
@@ -151,6 +178,21 @@ pub struct RunReport {
     pub icache_hits: u64,
     /// Fetches that had to decode from memory bytes.
     pub icache_misses: u64,
+    /// Host threads stepping this run (1 for the serial modes and for
+    /// `ParallelA { threads: 1 }`).
+    pub host_threads: usize,
+    /// Ticks whose phase A was fanned out over the worker pool (≥2
+    /// same-clock conventional retirements, no metainstruction pending).
+    /// Host-perf observability only — modeled clocks are unaffected.
+    pub parallel_spans: u64,
+    /// Retirements speculated inside those spans (`/ parallel_spans` =
+    /// achieved fan-out width; see [`RunReport::cores_per_span`]).
+    pub parallel_cores: u64,
+    /// Speculations whose read overlapped an earlier core's same-clock
+    /// store and were re-executed serially against the live memory.
+    pub span_conflicts: u64,
+    /// Span-size histogram: buckets 2, 3, 4, 5–8, 9–16, 17+ cores.
+    pub span_hist: [u64; 6],
     /// Simulation-level fault (runaway, child halt, invalid meta use).
     pub fault: Option<String>,
     /// Event trace, when enabled.
@@ -170,6 +212,16 @@ impl RunReport {
             0.0
         } else {
             (self.events_processed + self.clocks_skipped) as f64 / self.events_processed as f64
+        }
+    }
+
+    /// Mean fan-out width of the parallel spans (0.0 when phase A never
+    /// fanned out).
+    pub fn cores_per_span(&self) -> f64 {
+        if self.parallel_spans == 0 {
+            0.0
+        } else {
+            self.parallel_cores as f64 / self.parallel_spans as f64
         }
     }
 }
@@ -213,6 +265,24 @@ pub struct EmpaProcessor {
     mem_size: usize,
     /// How the scheduler advances time.
     step_mode: StepMode,
+    /// Phase-A worker pool: `Some` iff `ParallelA { threads >= 2 }`.
+    /// Survives `reset_with`/`reset_reusing` — the fabric's processor
+    /// pool must not respawn host threads per request.
+    pool: Option<PhasePool>,
+    /// Host threads stepping this processor (1 for the serial modes).
+    host_threads: usize,
+    /// Ticks whose phase A fanned out over the pool.
+    parallel_spans: u64,
+    /// Retirements speculated inside those spans.
+    parallel_cores: u64,
+    /// Conflicting speculations re-executed serially.
+    span_conflicts: u64,
+    /// Span-size histogram (buckets 2, 3, 4, 5–8, 9–16, 17+).
+    span_hist: [u64; 6],
+    /// Reused phase-A pending buffer (hot-loop allocation avoidance).
+    span_buf: Vec<(usize, Insn)>,
+    /// Reused commit-time write-set buffer.
+    span_writes: Vec<u32>,
     /// Full ticks executed by [`EmpaProcessor::step`].
     events_processed: u64,
     /// Clocks advanced without a full tick (skips + bursts).
@@ -235,6 +305,10 @@ impl EmpaProcessor {
     /// init / [`crate::api::FabricError::InvalidConfig`].
     pub fn try_new(image: &[u8], cfg: &EmpaConfig) -> Result<Self, ConfigError> {
         cfg.validate()?;
+        let host_threads = match cfg.step {
+            StepMode::ParallelA { threads } => threads,
+            _ => 1,
+        };
         let mut cores: Vec<Core> = (0..cfg.num_cores).map(Core::new).collect();
         cores[0].alloc = AllocState::Rented;
         cores[0].reset_for_qt(0);
@@ -264,6 +338,14 @@ impl EmpaProcessor {
             max_clocks: cfg.max_clocks,
             mem_size: cfg.mem.size,
             step_mode: cfg.step,
+            pool: (host_threads >= 2).then(|| PhasePool::new(host_threads)),
+            host_threads,
+            parallel_spans: 0,
+            parallel_cores: 0,
+            span_conflicts: 0,
+            span_hist: [0; 6],
+            span_buf: Vec::new(),
+            span_writes: Vec::new(),
             events_processed: 0,
             clocks_skipped: 0,
             icache_hits: 0,
@@ -321,6 +403,11 @@ impl EmpaProcessor {
             clocks_skipped: self.clocks_skipped,
             icache_hits: self.icache_hits,
             icache_misses: self.icache_misses,
+            host_threads: self.host_threads,
+            parallel_spans: self.parallel_spans,
+            parallel_cores: self.parallel_cores,
+            span_conflicts: self.span_conflicts,
+            span_hist: self.span_hist,
             fault: self.fault.clone(),
             trace,
         }
@@ -383,6 +470,11 @@ impl EmpaProcessor {
         self.clocks_skipped = 0;
         self.icache_hits = 0;
         self.icache_misses = 0;
+        // span counters restart per run; the pool itself is kept warm
+        self.parallel_spans = 0;
+        self.parallel_cores = 0;
+        self.span_conflicts = 0;
+        self.span_hist = [0; 6];
         self.external_wake_at = None;
         self.trace.push(0, 0, Event::Rent { parent: None });
     }
@@ -623,13 +715,17 @@ impl EmpaProcessor {
     pub fn tick(&mut self) {
         let now = self.clock;
         // ---- A: apply retiring instructions ---------------------------
-        let mut bits = self.rented_mask;
-        while bits != 0 {
-            let id = bits.trailing_zeros() as usize;
-            bits &= bits - 1;
-            if let RunState::Exec { insn, apply_at } = self.cores[id].run {
-                if apply_at <= now {
-                    self.apply(id, insn, now);
+        if self.pool.is_some() {
+            self.phase_a_span(now);
+        } else {
+            let mut bits = self.rented_mask;
+            while bits != 0 {
+                let id = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                if let RunState::Exec { insn, apply_at } = self.cores[id].run {
+                    if apply_at <= now {
+                        self.apply(id, insn, now);
+                    }
                 }
             }
         }
@@ -689,6 +785,124 @@ impl EmpaProcessor {
         self.rented_mask = rented;
         self.max_occupied = self.max_occupied.max(occ);
         self.clock += 1;
+    }
+
+    // ------------------------------------------------------------------
+    // parallel phase A (StepMode::ParallelA, threads >= 2)
+    // ------------------------------------------------------------------
+
+    /// Phase A with the host-parallel fan-out. Gathers the tick's pending
+    /// retirements in ascending core-index order, then:
+    ///
+    /// - **sync point** (any metainstruction pending, or fewer than two
+    ///   retirements): the plain serial loop. A meta's supervisor-level
+    ///   apply may mutate *other* cores (a `qterm` writes the parent's
+    ///   `FromChild` latch), so same-clock speculation against pre-phase
+    ///   snapshots would read stale inputs — metas are exactly the
+    ///   supervisor sync points of arXiv 1608.07155.
+    /// - **fan-out** otherwise: speculate every retirement on the worker
+    ///   pool against the pre-phase memory, then commit the effect
+    ///   records serially in core-index order. A record whose load
+    ///   overlaps an earlier core's same-clock store is stale and is
+    ///   re-executed in place against the live memory (a pure apply
+    ///   never mutates another core, so the re-run's inputs are intact).
+    ///
+    /// Either way the result is bit-identical to the lockstep loop.
+    fn phase_a_span(&mut self, now: u64) {
+        let mut pending = std::mem::take(&mut self.span_buf);
+        pending.clear();
+        let mut any_meta = false;
+        let mut bits = self.rented_mask;
+        while bits != 0 {
+            let id = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            if let RunState::Exec { insn, apply_at } = self.cores[id].run {
+                if apply_at <= now {
+                    any_meta |= matches!(insn, Insn::Meta { .. });
+                    pending.push((id, insn));
+                }
+            }
+        }
+        if pending.len() < 2 || any_meta {
+            for &(id, insn) in &pending {
+                self.apply(id, insn, now);
+            }
+            self.span_buf = pending;
+            return;
+        }
+        self.parallel_spans += 1;
+        self.parallel_cores += pending.len() as u64;
+        self.span_hist[span_bucket(pending.len())] += 1;
+        let tasks: Vec<PhaseTask> =
+            pending.iter().map(|&(id, _)| self.cores[id].phase_task()).collect();
+        let effects =
+            self.pool.as_ref().expect("parallel phase A has a pool").run_span(&self.mem, tasks);
+        let mut writes = std::mem::take(&mut self.span_writes);
+        writes.clear();
+        for mut eff in effects {
+            let stale = eff.read.is_some_and(|r| writes.iter().any(|&w| words_overlap(r, w)));
+            if stale {
+                self.span_conflicts += 1;
+                eff = self.cores[eff.id].step_phase_a(&self.mem.view());
+            }
+            if let Some((addr, _)) = eff.write {
+                writes.push(addr);
+            }
+            self.commit_effect(eff, now);
+        }
+        self.span_writes = writes;
+        self.span_buf = pending;
+    }
+
+    /// Serially commit one speculated retirement — the exact state
+    /// transitions of [`EmpaProcessor::apply`]'s conventional arm, driven
+    /// from the effect record instead of a live execution.
+    fn commit_effect(&mut self, eff: PendingEffects, now: u64) {
+        let id = eff.id;
+        self.cores[id].retired += 1;
+        if let Some((addr, value)) = eff.write {
+            // Through the live memory so decode-cache versioning and
+            // dirty-window accounting stay identical to the serial path.
+            self.mem.write_u32(addr, value).expect("speculation bounds-probed this store");
+        }
+        self.cores[id].regs = eff.regs;
+        self.cores[id].latch = eff.latch;
+        if let Some(v) = eff.streamed {
+            self.stream_to_parent(id, v, now);
+        }
+        match eff.outcome {
+            EffectOutcome::Continue { next_pc } => {
+                self.cores[id].pc = next_pc;
+                self.cores[id].run = RunState::Idle;
+            }
+            EffectOutcome::Stop(Status::Hlt) => {
+                if id == self.root {
+                    self.cores[id].run = RunState::Halted;
+                    self.halted = true;
+                    self.halt_at = now;
+                    self.trace.push(now, id, Event::Halt);
+                } else {
+                    self.fault = Some(format!("core {id}: halt inside a QT (use qterm)"));
+                }
+            }
+            EffectOutcome::Stop(s) => {
+                self.fault =
+                    Some(format!("core {id}: stopped with {s:?} at {:#x}", self.cores[id].pc));
+            }
+        }
+    }
+
+    /// A `%pp` write by a SUMUP child streams into the parent adder
+    /// (§5.2: "executing addl to a special pseudo register ... triggers
+    /// transferring to FromChild in the parent"). Shared by the serial
+    /// apply and the parallel commit; outside mass mode the latch write
+    /// alone suffices and nothing happens here.
+    fn stream_to_parent(&mut self, id: usize, v: i32, now: u64) {
+        let Some(parent) = self.cores[id].parent else { return };
+        if self.sv.sum_stream(parent, v, now, self.timing.sv_readout) {
+            self.trace.push(now, id, Event::Stream { value: v });
+            self.sv.ops += 1;
+        }
     }
 
     // ------------------------------------------------------------------
@@ -812,23 +1026,8 @@ impl EmpaProcessor {
             let mut port = LatchPort { latch: &mut core.latch, streamed: &mut streamed };
             execute(&insn, core.pc, &mut core.regs, &mut self.mem, &mut port)
         };
-        // A `%pp` write by a SUMUP child streams into the parent adder
-        // (§5.2: "executing addl to a special pseudo register ... triggers
-        // transferring to FromChild in the parent").
         if let Some(v) = streamed {
-            if let Some(parent) = self.cores[id].parent {
-                let readout = self.timing.sv_readout;
-                if let Some(e) = self.sv.engine_of_parent_mut(parent) {
-                    if e.mode == MassMode::Sum && e.arrive(v) {
-                        e.done_at = Some(now + readout);
-                    }
-                    self.trace.push(now, id, Event::Stream { value: v });
-                    self.sv.ops += 1;
-                } else {
-                    // outside mass mode the latch write also lands in the
-                    // parent's FromChild on termination; nothing to do now
-                }
-            }
+            self.stream_to_parent(id, v, now);
         }
         match effect {
             ExecEffect::Continue { next_pc } => {
@@ -1206,37 +1405,16 @@ impl EmpaProcessor {
     }
 }
 
-/// Pseudo-register port backed by a core's latch registers (§4.6).
-///
-/// Context-dependent directions: reading `%pc` takes the `FromParent`
-/// latch; writing `%pc` stages `ForChild`. Reading `%pp` peeks
-/// `FromChild`; writing `%pp` latches `ForParent` (and, in SUMUP mode,
-/// streams to the parent adder — handled by the caller through
-/// `streamed`). Empty latches read as 0.
-struct LatchPort<'a> {
-    latch: &'a mut super::core::Latches,
-    streamed: &'a mut Option<i32>,
-}
-
-impl PseudoPort for LatchPort<'_> {
-    fn read(&mut self, r: Reg) -> Option<i32> {
-        Some(match r {
-            Reg::PseudoC => self.latch.from_parent.unwrap_or(0),
-            Reg::PseudoP => self.latch.from_child.unwrap_or(0),
-            _ => return None,
-        })
-    }
-
-    fn write(&mut self, r: Reg, v: i32) -> Option<()> {
-        match r {
-            Reg::PseudoC => self.latch.for_child = Some(v),
-            Reg::PseudoP => {
-                self.latch.for_parent = Some(v);
-                *self.streamed = Some(v);
-            }
-            _ => return None,
-        }
-        Some(())
+/// Histogram bucket of a parallel span of `n` cores (`n >= 2`):
+/// 2, 3, 4, 5–8, 9–16, 17+.
+fn span_bucket(n: usize) -> usize {
+    match n {
+        0..=2 => 0,
+        3 => 1,
+        4 => 2,
+        5..=8 => 3,
+        9..=16 => 4,
+        _ => 5,
     }
 }
 
@@ -1570,5 +1748,122 @@ buf:
         p.reset_with(&[0x00]);
         assert_eq!(p.mem.len(), 64, "previous growth must not widen later programs");
         assert!(p.mem.read_u32(64).is_err());
+    }
+
+    #[test]
+    fn host_thread_validation_is_typed() {
+        for bad in [0usize, 65, 1000] {
+            let cfg =
+                EmpaConfig { step: StepMode::ParallelA { threads: bad }, ..Default::default() };
+            assert_eq!(cfg.validate(), Err(ConfigError::HostThreads { requested: bad }));
+        }
+        for good in [1usize, 2, 64] {
+            let cfg =
+                EmpaConfig { step: StepMode::ParallelA { threads: good }, ..Default::default() };
+            assert!(EmpaProcessor::try_new(&[0x00], &cfg).is_ok());
+        }
+        assert!(ConfigError::HostThreads { requested: 65 }.to_string().contains("threads=65"));
+    }
+
+    #[test]
+    fn span_buckets_cover_the_ranges() {
+        assert_eq!(span_bucket(2), 0);
+        assert_eq!(span_bucket(3), 1);
+        assert_eq!(span_bucket(4), 2);
+        assert_eq!((span_bucket(5), span_bucket(8)), (3, 3));
+        assert_eq!((span_bucket(9), span_bucket(16)), (4, 4));
+        assert_eq!((span_bucket(17), span_bucket(64)), (5, 5));
+    }
+
+    #[test]
+    fn parallel_one_thread_is_the_serial_event_horizon_path() {
+        let (src, want) = sumup::sumup_mode_program(&[1, 2, 3, 4]);
+        let image = assemble(&src).unwrap().image;
+        let eh = run_in(StepMode::EventHorizon, &image);
+        let p1 = run_in(StepMode::ParallelA { threads: 1 }, &image);
+        assert_eq!(p1.eax(), want);
+        assert_eq!(p1.clocks, eh.clocks);
+        assert_eq!(p1.events_processed, eh.events_processed, "identical scheduler path");
+        assert_eq!(p1.clocks_skipped, eh.clocks_skipped);
+        assert_eq!(p1.parallel_spans, 0, "no pool is built for threads=1");
+        assert_eq!((p1.host_threads, eh.host_threads), (1, 1));
+    }
+
+    #[test]
+    fn same_clock_store_load_conflict_commits_in_core_index_order() {
+        // Hand-built span: core 0 stores 77 → 0x40 while core 1 loads
+        // 0x40, both retiring on the same clock. Serial order says the
+        // load sees the store; the speculated load read the pre-phase
+        // bytes and must be detected and re-executed.
+        let setup = |step| {
+            let cfg = EmpaConfig { num_cores: 4, step, ..Default::default() };
+            let mut p = EmpaProcessor::new(&[0x00; 16], &cfg);
+            p.cores[0].regs.file[Reg::Esi as usize] = 77;
+            p.cores[0].regs.file[Reg::Ecx as usize] = 0x40;
+            p.cores[0].run = RunState::Exec {
+                insn: Insn::RmMov { ra: Reg::Esi, rb: Reg::Ecx, disp: 0 },
+                apply_at: 0,
+            };
+            p.cores[1].alloc = AllocState::Rented;
+            p.cores[1].regs.file[Reg::Ecx as usize] = 0x40;
+            p.cores[1].run = RunState::Exec {
+                insn: Insn::MrMov { ra: Reg::Eax, rb: Reg::Ecx, disp: 0 },
+                apply_at: 0,
+            };
+            p.rented_mask |= 0b10;
+            p.tick();
+            p
+        };
+        let lock = setup(StepMode::Lockstep);
+        let par = setup(StepMode::ParallelA { threads: 2 });
+        assert_eq!(par.parallel_spans, 1);
+        assert_eq!(par.span_conflicts, 1, "the load overlapped the earlier store");
+        assert_eq!(par.span_hist, [1, 0, 0, 0, 0, 0]);
+        assert_eq!(par.cores[1].regs.file[0], 77, "serial order: the load sees the store");
+        for (a, b) in lock.cores.iter().zip(&par.cores) {
+            assert_eq!(a.regs, b.regs, "core {} regs", a.id);
+            assert_eq!((a.pc, a.run, a.retired), (b.pc, b.run, b.retired));
+        }
+        assert_eq!(lock.mem.read_u32(0x40).unwrap(), 77);
+        assert_eq!(par.mem.read_u32(0x40).unwrap(), 77);
+        assert_eq!(par.mem.version(), lock.mem.version(), "commit writes bump the version too");
+    }
+
+    #[test]
+    fn parallel_sumup_fans_out_and_stays_cycle_identical() {
+        let (src, want) = sumup::sumup_mode_program(&(0..64).collect::<Vec<i32>>());
+        let image = assemble(&src).unwrap().image;
+        let lock = run_in(StepMode::Lockstep, &image);
+        for threads in [2usize, 4] {
+            let par = run_in(StepMode::ParallelA { threads }, &image);
+            assert_eq!(par.eax(), want);
+            assert_eq!(par.clocks, lock.clocks);
+            assert_eq!(par.regs.file, lock.regs.file);
+            assert_eq!(par.retired, lock.retired);
+            assert_eq!(par.sv_ops, lock.sv_ops);
+            assert_eq!(par.max_occupied, lock.max_occupied);
+            assert_eq!(par.distinct_cores, lock.distinct_cores);
+            assert!(par.parallel_spans > 0, "staggered SUMUP children collide: {par:?}");
+            assert_eq!(par.span_hist.iter().sum::<u64>(), par.parallel_spans);
+            assert!(par.cores_per_span() >= 2.0);
+            assert_eq!(par.host_threads, threads);
+        }
+        assert!((lock.cores_per_span() - 0.0).abs() < 1e-12, "serial modes never span");
+    }
+
+    #[test]
+    fn reset_keeps_the_pool_but_clears_span_counters() {
+        let (src, _) = sumup::sumup_mode_program(&(0..32).collect::<Vec<i32>>());
+        let prog = assemble(&src).unwrap();
+        let cfg = EmpaConfig { step: StepMode::ParallelA { threads: 2 }, ..Default::default() };
+        let mut p = EmpaProcessor::new(&prog.image, &cfg);
+        let r1 = p.run_report();
+        assert!(r1.parallel_spans > 0);
+        p.reset_with(&prog.image);
+        assert!(p.pool.is_some(), "the worker pool survives reuse");
+        let r2 = p.run_report();
+        assert_eq!(r1.clocks, r2.clocks);
+        assert_eq!(r1.parallel_spans, r2.parallel_spans, "counters restart per run");
+        assert_eq!(r1.span_hist, r2.span_hist);
     }
 }

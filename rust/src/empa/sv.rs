@@ -220,6 +220,21 @@ impl Supervisor {
         self.child_idx.get(core).copied().flatten()
     }
 
+    /// Route a child's `%pp` stream into `parent`'s engine (§5.2: the
+    /// SUMUP adder arrival; the last awaited summand schedules the
+    /// readout). Returns true when an engine consumed the value — the
+    /// caller then records the Stream trace event and charges an SV op.
+    /// Outside mass mode the latch write alone suffices and nothing
+    /// happens here. Shared by the serial apply path and the parallel
+    /// span commit so both charge identical supervisor work.
+    pub fn sum_stream(&mut self, parent: usize, value: i32, now: u64, readout: u64) -> bool {
+        let Some(e) = self.engine_of_parent_mut(parent) else { return false };
+        if e.mode == MassMode::Sum && e.arrive(value) {
+            e.done_at = Some(now + readout);
+        }
+        true
+    }
+
     /// True when `parent` still has an unfinished engine (blocks `halt`).
     /// O(1).
     pub fn parent_engine_active(&self, parent: usize) -> bool {
@@ -376,6 +391,24 @@ mod tests {
         assert_eq!(sv.engine_of_parent(1), None);
         assert_eq!(sv.engine_of_child(2), None);
         assert_eq!(sv.ops, 0);
+    }
+
+    #[test]
+    fn sum_stream_feeds_the_adder_and_reports_consumption() {
+        let mut sv = Supervisor::default();
+        assert!(!sv.sum_stream(0, 5, 10, 2), "no engine: latch-only stream");
+        sv.add(MassEngine::new(MassMode::Sum, 0, 0, 0, 2, 0, 10, 1, 2));
+        assert!(sv.sum_stream(0, 5, 12, 2));
+        assert_eq!(sv.engine_of_parent_mut(0).unwrap().done_at, None);
+        assert!(sv.sum_stream(0, 7, 14, 2));
+        let e = sv.engine_of_parent_mut(0).unwrap();
+        assert_eq!(e.acc, 12);
+        assert_eq!(e.done_at, Some(16), "last arrival schedules the readout");
+        // a FOR engine consumes the stream event but never sums
+        let mut sv = Supervisor::default();
+        sv.add(MassEngine::new(MassMode::For, 1, 0, 0, 2, 0, 10, 1, 2));
+        assert!(sv.sum_stream(1, 9, 12, 2));
+        assert_eq!(sv.engine_of_parent_mut(1).unwrap().acc, 0);
     }
 
     #[test]

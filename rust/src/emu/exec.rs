@@ -9,6 +9,8 @@
 use crate::isa::{CondCodes, Insn, Reg, Status};
 #[cfg(test)]
 use crate::isa::OpFn;
+use crate::mem::DataPort;
+#[cfg(test)]
 use crate::mem::Memory;
 
 /// Architectural register file + condition codes ("glue" in the paper's
@@ -85,11 +87,19 @@ fn write_any(r: Reg, v: i32, regs: &mut CoreRegs, pseudo: &mut dyn PseudoPort) -
 /// pre-fetch raises `Meta` and the SV executes them, §4.5); passing one
 /// here returns `Stop(Ins)` like any invalid opcode would on a
 /// conventional machine.
-pub fn execute(
+///
+/// Data traffic goes through a [`DataPort`]: the live memory when
+/// stepping serially, or a staging record over a read-only view when a
+/// parallel phase A speculates the instruction on a worker thread. No
+/// Y86 instruction both loads *and* stores data memory (loads: `mrmovl`,
+/// `ret`, `popl`; stores: `rmmovl`, `call`, `pushl`), which is what
+/// makes single-address effect records sufficient for conflict
+/// detection.
+pub fn execute<M: DataPort>(
     insn: &Insn,
     pc: u32,
     regs: &mut CoreRegs,
-    mem: &mut Memory,
+    mem: &mut M,
     pseudo: &mut dyn PseudoPort,
 ) -> ExecEffect {
     let next = pc + insn.len() as u32;
@@ -118,7 +128,7 @@ pub fn execute(
                 return fault(Status::Ins);
             };
             let addr = base.wrapping_add(disp) as u32;
-            match mem.write_u32(addr, v as u32) {
+            match mem.store(addr, v as u32) {
                 Ok(()) => cont,
                 Err(_) => fault(Status::Adr),
             }
@@ -126,7 +136,7 @@ pub fn execute(
         Insn::MrMov { ra, rb, disp } => {
             let Some(base) = read_any(rb, regs, pseudo) else { return fault(Status::Ins) };
             let addr = base.wrapping_add(disp) as u32;
-            match mem.read_u32(addr) {
+            match mem.load(addr) {
                 Ok(v) => {
                     if write_any(ra, v as i32, regs, pseudo).is_none() {
                         return fault(Status::Ins);
@@ -156,7 +166,7 @@ pub fn execute(
         }
         Insn::Call { dest } => {
             let sp = regs.file[Reg::Esp as usize].wrapping_sub(4);
-            if mem.write_u32(sp as u32, next).is_err() {
+            if mem.store(sp as u32, next).is_err() {
                 return fault(Status::Adr);
             }
             regs.file[Reg::Esp as usize] = sp;
@@ -164,7 +174,7 @@ pub fn execute(
         }
         Insn::Ret => {
             let sp = regs.file[Reg::Esp as usize];
-            match mem.read_u32(sp as u32) {
+            match mem.load(sp as u32) {
                 Ok(ra) => {
                     regs.file[Reg::Esp as usize] = sp.wrapping_add(4);
                     ExecEffect::Continue { next_pc: ra }
@@ -175,7 +185,7 @@ pub fn execute(
         Insn::Push { ra } => {
             let Some(v) = read_any(ra, regs, pseudo) else { return fault(Status::Ins) };
             let sp = regs.file[Reg::Esp as usize].wrapping_sub(4);
-            if mem.write_u32(sp as u32, v as u32).is_err() {
+            if mem.store(sp as u32, v as u32).is_err() {
                 return fault(Status::Adr);
             }
             regs.file[Reg::Esp as usize] = sp;
@@ -183,7 +193,7 @@ pub fn execute(
         }
         Insn::Pop { ra } => {
             let sp = regs.file[Reg::Esp as usize];
-            match mem.read_u32(sp as u32) {
+            match mem.load(sp as u32) {
                 Ok(v) => {
                     // Y86: increment before write so `popl %esp` gets the value.
                     regs.file[Reg::Esp as usize] = sp.wrapping_add(4);

@@ -5,6 +5,16 @@
 //! and holds the chosen port for `access_cycles`. The returned *extra*
 //! latency (start − t) is the queueing delay the multiport proposal of the
 //! paper eliminates.
+//!
+//! **Ordering contract (parallel stepping):** reservation is stateful and
+//! order-dependent — two cores contending for the last free port at the
+//! same clock are served in the order `access` is called, which lockstep
+//! fixes as ascending core index during phase-D fetch. The parallel
+//! phase-A fan-out therefore never touches the bus: data-access delays
+//! are charged at *fetch* (serial, deterministic order) and the
+//! speculated phase-A apply replays only the architectural effect. Any
+//! future parallel fetch must route bus traffic through ordered effect
+//! records to keep [`BusStats`] bit-identical.
 
 use super::MemConfig;
 

@@ -83,6 +83,73 @@ pub struct Memory {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AddrError(pub u32);
 
+/// Where an instruction's data traffic goes: the live [`Memory`] when
+/// stepping serially, or a staging record over a read-only [`MemView`]
+/// when a parallel phase A speculates the instruction on a worker
+/// thread (stores are then held back as effect records and committed in
+/// core-index order). [`crate::emu::execute`] is generic over this, so
+/// both paths share one copy of the instruction semantics.
+pub trait DataPort {
+    fn load(&mut self, addr: u32) -> Result<u32, AddrError>;
+    fn store(&mut self, addr: u32, value: u32) -> Result<(), AddrError>;
+}
+
+impl DataPort for Memory {
+    fn load(&mut self, addr: u32) -> Result<u32, AddrError> {
+        self.read_u32(addr)
+    }
+
+    fn store(&mut self, addr: u32, value: u32) -> Result<(), AddrError> {
+        self.write_u32(addr, value)
+    }
+}
+
+/// Read-only view of the memory bytes — the shard a speculating core
+/// sees during a parallel phase A. It deliberately carries none of the
+/// version/dirty-window state: all mutation goes through [`Memory`] on
+/// the stepping thread, so a view is just the pre-phase bytes with the
+/// same bounds behaviour as the live memory (the address-space length
+/// cannot change while a view exists, which is what makes bounds checks
+/// against it authoritative for the later commit).
+#[derive(Debug, Clone, Copy)]
+pub struct MemView<'a> {
+    bytes: &'a [u8],
+}
+
+impl<'a> MemView<'a> {
+    /// A view over raw bytes (the worker-pool side reconstructs one from
+    /// the span's shared byte slice).
+    pub fn new(bytes: &'a [u8]) -> Self {
+        MemView { bytes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    pub fn read_u32(&self, addr: u32) -> Result<u32, AddrError> {
+        let a = addr as usize;
+        let w = self.bytes.get(a..a + 4).ok_or(AddrError(addr))?;
+        Ok(u32::from_le_bytes([w[0], w[1], w[2], w[3]]))
+    }
+
+    /// Bounds-probe a word store without performing it. A store that
+    /// probes `Ok` here cannot fail when the commit loop replays it
+    /// through [`Memory::write_u32`]: the length is fixed for the span.
+    pub fn probe_write(&self, addr: u32) -> Result<(), AddrError> {
+        let a = addr as usize;
+        if self.bytes.get(a..a + 4).is_some() {
+            Ok(())
+        } else {
+            Err(AddrError(addr))
+        }
+    }
+}
+
 impl Memory {
     pub fn new(size: usize) -> Self {
         Memory {
@@ -201,6 +268,17 @@ impl Memory {
 
     pub fn is_empty(&self) -> bool {
         self.bytes.is_empty()
+    }
+
+    /// Read-only view of the current bytes (parallel phase-A shard).
+    pub fn view(&self) -> MemView<'_> {
+        MemView { bytes: &self.bytes }
+    }
+
+    /// The raw backing bytes — the worker pool shares these (read-only)
+    /// with speculating threads for the duration of one span.
+    pub(crate) fn raw_bytes(&self) -> &[u8] {
+        &self.bytes
     }
 
     /// Raw byte slice for fetch (decoding reads up to 6 bytes).
@@ -347,6 +425,35 @@ mod tests {
         let v = m.version();
         m.write_u32(8, 1).unwrap();
         assert_eq!(m.version(), v + 1, "conservative default: every write bumps");
+    }
+
+    #[test]
+    fn view_reads_match_the_live_memory_and_probe_matches_write_bounds() {
+        let mut m = Memory::new(16);
+        m.write_u32(4, 0xDEAD_BEEF).unwrap();
+        let v = m.view();
+        assert_eq!(v.len(), 16);
+        assert!(!v.is_empty());
+        assert_eq!(v.read_u32(4), m.read_u32(4));
+        assert_eq!(v.read_u32(13), Err(AddrError(13)));
+        // probe agrees with write_u32 bounds exactly
+        assert_eq!(v.probe_write(12), Ok(()));
+        assert_eq!(v.probe_write(13), Err(AddrError(13)));
+        assert_eq!(v.probe_write(16), Err(AddrError(16)));
+        // a reconstructed view (worker side) behaves identically
+        let w = MemView::new(m.raw_bytes());
+        assert_eq!(w.read_u32(4).unwrap(), 0xDEAD_BEEF);
+    }
+
+    #[test]
+    fn memory_data_port_routes_through_versioned_writes() {
+        let mut m = Memory::new(16);
+        m.set_code_limit(16);
+        let v0 = m.version();
+        DataPort::store(&mut m, 8, 7).unwrap();
+        assert_eq!(DataPort::load(&mut m, 8).unwrap(), 7);
+        assert_eq!(m.version(), v0 + 1, "port stores keep decode-cache versioning");
+        assert_eq!(DataPort::load(&mut m, 14), Err(AddrError(14)));
     }
 
     #[test]

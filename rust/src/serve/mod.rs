@@ -22,9 +22,13 @@
 //! fabric.
 //!
 //! Threading: one nonblocking acceptor polling a stop flag, one blocking
-//! reader thread per connection, and one detached waiter thread per
-//! in-flight job (replies are written under a per-connection mutex, so
-//! out-of-order completions interleave safely on the wire). Simple over
+//! reader thread per connection, and a small bounded **completion pump**
+//! that parks every accepted job and writes its reply when the fabric
+//! resolves it (replies are written under a per-connection mutex, so
+//! out-of-order completions interleave safely on the wire). The pump
+//! replaces the old detached waiter-thread-per-job scheme: thread count
+//! no longer scales with in-flight jobs, and shutdown joins the pump
+//! workers instead of abandoning detached threads mid-write. Simple over
 //! scalable — the fabric behind it is a simulator; the serve plane's job
 //! is correctness of the admission story, not C10K.
 
@@ -38,12 +42,12 @@ pub use quota::{QuotaConfig, QuotaTable, TokenBucket};
 pub use slo::{SloAction, SloConfig, SloGovernor, SloRule, SloSnapshot};
 pub use wire::{CodecError, WireReply, WireRequest, MAX_FRAME, WIRE_VERSION};
 
-use crate::api::FabricError;
+use crate::api::{FabricError, Job};
 use crate::coordinator::{Fabric, FabricConfig, FabricMetrics};
 use anyhow::Context;
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -75,6 +79,131 @@ impl Default for ServeConfig {
     }
 }
 
+/// How many completion-pump workers a serve plane runs. The pump is a
+/// poller, not a compute pool — two lanes keep a slow client write on
+/// one lane from delaying every other tenant's replies.
+const PUMP_WORKERS: usize = 2;
+
+/// How long a pump worker waits for new intake while it has parked jobs
+/// to poll (also its drain-poll interval during shutdown).
+const PUMP_POLL: Duration = Duration::from_millis(1);
+
+/// One accepted job parked in the completion pump until the fabric
+/// resolves it.
+struct PumpEntry {
+    id: u64,
+    job: Job,
+    out: Arc<Mutex<TcpStream>>,
+    max_frame: usize,
+}
+
+/// Bounded pool of reply writers: accepted jobs are parked here and
+/// polled with [`Job::try_wait`], replacing the old detached
+/// thread-per-job waiters (whose population scaled with in-flight jobs
+/// and which shutdown could only abandon, never join).
+///
+/// Entries are dealt round-robin onto per-worker lanes; each worker
+/// blocks while idle, and polls its parked set on a short tick while it
+/// has any. Closing the lanes tells workers to drain: they keep polling
+/// until every parked job resolves (fabric shutdown resolves all of
+/// them), then exit.
+struct CompletionPump {
+    lanes: Mutex<Vec<mpsc::Sender<PumpEntry>>>,
+    next: AtomicUsize,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl CompletionPump {
+    fn new(n: usize) -> CompletionPump {
+        let mut lanes = Vec::new();
+        let mut workers = Vec::new();
+        for slot in 0..n.max(1) {
+            let (tx, rx) = mpsc::channel::<PumpEntry>();
+            lanes.push(tx);
+            let h = std::thread::Builder::new()
+                .name(format!("empa-serve-pump-{slot}"))
+                .spawn(move || pump_loop(rx))
+                .expect("spawn serve completion pump");
+            workers.push(h);
+        }
+        CompletionPump { lanes: Mutex::new(lanes), next: AtomicUsize::new(0), workers: Mutex::new(workers) }
+    }
+
+    /// Park a job. After [`CompletionPump::close_intake`] the entry is
+    /// dropped — by then every connection handler has already exited, so
+    /// nobody is left to park work.
+    fn submit(&self, entry: PumpEntry) {
+        let lanes = self.lanes.lock().unwrap();
+        if lanes.is_empty() {
+            return;
+        }
+        let lane = self.next.fetch_add(1, Ordering::Relaxed) % lanes.len();
+        let _ = lanes[lane].send(entry);
+    }
+
+    /// Drop the senders: workers stop taking intake and begin draining
+    /// their parked sets.
+    fn close_intake(&self) {
+        self.lanes.lock().unwrap().clear();
+    }
+
+    /// Join the workers. Call after the fabric has shut down, so every
+    /// parked job has resolved and the drains cannot spin.
+    fn join(&self) {
+        for t in self.workers.lock().unwrap().drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn pump_loop(rx: mpsc::Receiver<PumpEntry>) {
+    let mut pending: Vec<PumpEntry> = Vec::new();
+    let mut open = true;
+    loop {
+        if open {
+            // Intake: block while idle, bounded wait while jobs are
+            // parked (they need polling), then sweep the lane dry.
+            if pending.is_empty() {
+                match rx.recv() {
+                    Ok(e) => pending.push(e),
+                    Err(_) => open = false,
+                }
+            } else {
+                match rx.recv_timeout(PUMP_POLL) {
+                    Ok(e) => pending.push(e),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+                }
+            }
+            while let Ok(e) = rx.try_recv() {
+                pending.push(e);
+            }
+        }
+        if !open && pending.is_empty() {
+            return;
+        }
+        let mut i = 0;
+        while i < pending.len() {
+            match pending[i].job.try_wait() {
+                Some(result) => {
+                    let e = pending.swap_remove(i);
+                    let reply = match result {
+                        Ok(completion) => WireReply::Completed { id: e.id, completion },
+                        Err(error) => WireReply::Failed { id: e.id, error },
+                    };
+                    send_reply(&e.out, &reply, e.max_frame);
+                }
+                None => i += 1,
+            }
+        }
+        if !open && !pending.is_empty() {
+            // Lane closed but jobs still in flight: the fabric is being
+            // shut down and resolves them all; pace the drain.
+            std::thread::sleep(PUMP_POLL);
+        }
+    }
+}
+
 /// The running serve plane: listener + fabric + policy layers.
 pub struct ServePlane {
     fabric: Arc<Fabric>,
@@ -86,6 +215,8 @@ pub struct ServePlane {
     threads: Mutex<Vec<JoinHandle<()>>>,
     /// Handler threads, registered by the acceptor as they spawn.
     handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    /// Reply writers for accepted jobs.
+    pump: Arc<CompletionPump>,
 }
 
 impl ServePlane {
@@ -102,6 +233,7 @@ impl ServePlane {
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::default();
         let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::default();
+        let pump = Arc::new(CompletionPump::new(PUMP_WORKERS));
 
         let acceptor = {
             let fabric = Arc::clone(&fabric);
@@ -109,11 +241,14 @@ impl ServePlane {
             let stop = Arc::clone(&stop);
             let conns = Arc::clone(&conns);
             let handlers = Arc::clone(&handlers);
+            let pump = Arc::clone(&pump);
             let max_frame = cfg.max_frame;
             std::thread::Builder::new()
                 .name("empa-serve-accept".into())
                 .spawn(move || {
-                    accept_loop(listener, fabric, governor, quota, stop, conns, handlers, max_frame)
+                    accept_loop(
+                        listener, fabric, governor, quota, stop, conns, handlers, pump, max_frame,
+                    )
                 })
                 .context("spawn serve acceptor")?
         };
@@ -126,6 +261,7 @@ impl ServePlane {
             conns,
             threads: Mutex::new(vec![acceptor]),
             handlers,
+            pump,
         })
     }
 
@@ -164,7 +300,12 @@ impl ServePlane {
         for t in self.handlers.lock().unwrap().drain(..) {
             let _ = t.join();
         }
+        // With every handler joined nothing feeds the pump: close its
+        // intake, resolve every parked job by shutting the fabric down,
+        // then join the drained pump workers.
+        self.pump.close_intake();
         self.fabric.shutdown();
+        self.pump.join();
     }
 }
 
@@ -180,6 +321,7 @@ fn accept_loop(
     stop: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<TcpStream>>>,
     handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    pump: Arc<CompletionPump>,
     max_frame: usize,
 ) {
     while !stop.load(Ordering::Acquire) {
@@ -195,9 +337,10 @@ fn accept_loop(
                 let fabric = Arc::clone(&fabric);
                 let governor = Arc::clone(&governor);
                 let quota = Arc::clone(&quota);
+                let pump = Arc::clone(&pump);
                 let spawned = std::thread::Builder::new()
                     .name("empa-serve-conn".into())
-                    .spawn(move || handle_conn(stream, fabric, governor, quota, max_frame));
+                    .spawn(move || handle_conn(stream, fabric, governor, quota, pump, max_frame));
                 if let Ok(h) = spawned {
                     handlers.lock().unwrap().push(h);
                 }
@@ -219,12 +362,13 @@ fn send_reply(out: &Mutex<TcpStream>, reply: &WireReply, max_frame: usize) {
 }
 
 /// One connection: read frames until EOF/error, run each request through
-/// the admission stack, spawn a waiter per accepted job.
+/// the admission stack, park accepted jobs in the completion pump.
 fn handle_conn(
     mut stream: TcpStream,
     fabric: Arc<Fabric>,
     governor: Arc<SloGovernor>,
     quota: Arc<QuotaTable>,
+    pump: Arc<CompletionPump>,
     max_frame: usize,
 ) {
     let Ok(write_half) = stream.try_clone() else { return };
@@ -297,18 +441,9 @@ fn handle_conn(
                 //    here still count toward the tenant's ledger.
                 match fabric.try_submit(job_req) {
                     Ok(job) => {
-                        let out = Arc::clone(&out);
-                        // Detached waiter: resolves whenever the fabric
-                        // does; the write lock orders frames.
-                        let _ = std::thread::Builder::new()
-                            .name("empa-serve-wait".into())
-                            .spawn(move || {
-                                let reply = match job.wait() {
-                                    Ok(completion) => WireReply::Completed { id, completion },
-                                    Err(error) => WireReply::Failed { id, error },
-                                };
-                                send_reply(&out, &reply, max_frame);
-                            });
+                        // Park in the pump: it replies whenever the
+                        // fabric resolves; the write lock orders frames.
+                        pump.submit(PumpEntry { id, job, out: Arc::clone(&out), max_frame });
                     }
                     Err(error) => {
                         if let Some(s) = &tenant_stats {

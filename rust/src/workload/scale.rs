@@ -172,6 +172,11 @@ mod tests {
             clocks_skipped: 0,
             icache_hits: 0,
             icache_misses: 0,
+            host_threads: 1,
+            parallel_spans: 0,
+            parallel_cores: 0,
+            span_conflicts: 0,
+            span_hist: [0; 6],
             fault: None,
             trace: Default::default(),
         };

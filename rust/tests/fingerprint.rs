@@ -1,0 +1,88 @@
+//! Determinism fingerprint: hash everything architecturally observable
+//! about a run — final clock, status, registers, flags, occupancy,
+//! retirement/bus/supervisor ledgers, fault, the full trace, and every
+//! core's integrated busy time — into one FNV-1a 64 value, and demand
+//! the value be **bit-identical** across every stepping mode and across
+//! repeated runs. Scheduler economics (`events_processed`,
+//! `clocks_skipped`, icache and host-parallelism counters) are
+//! deliberately *excluded*: those are allowed to differ between modes;
+//! nothing else is.
+
+use empa::empa::{EmpaConfig, EmpaProcessor, StepMode};
+use empa::isa::assemble;
+use empa::workload::family::{direct_source, family_impl, synth_params, ALL_FAMILIES};
+use std::fmt::Write;
+
+const MODES: [StepMode; 5] = [
+    StepMode::Lockstep,
+    StepMode::EventHorizon,
+    StepMode::ParallelA { threads: 1 },
+    StepMode::ParallelA { threads: 2 },
+    StepMode::ParallelA { threads: 4 },
+];
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Run `image` under `step` and fingerprint the architectural outcome.
+fn fingerprint(image: &[u8], step: StepMode) -> u64 {
+    let cfg = EmpaConfig { step, trace: true, ..Default::default() };
+    let mut p = EmpaProcessor::new(image, &cfg);
+    let r = p.run_report();
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        "clocks={} status={:?} regs={:?} cc={:?} occ={} cores={} retired={} bus={:?} sv={} fault={:?}",
+        r.clocks,
+        r.status,
+        r.regs.file,
+        r.regs.cc,
+        r.max_occupied,
+        r.distinct_cores,
+        r.retired,
+        r.bus,
+        r.sv_ops,
+        r.fault,
+    );
+    for e in &r.trace.entries {
+        let _ = write!(s, "|{e:?}");
+    }
+    for c in &p.cores {
+        let _ = write!(s, "|busy={}", c.busy_clocks);
+    }
+    fnv1a(s.as_bytes())
+}
+
+#[test]
+fn fingerprints_are_mode_invariant_and_repeatable() {
+    for family in ALL_FAMILIES {
+        let fam = family_impl(family);
+        for &mode in fam.modes() {
+            for n in [1usize, 24] {
+                let params = synth_params(family, n, 0xF1F0 ^ n as u64);
+                let src = direct_source(mode, &params).unwrap();
+                let image = assemble(&src).unwrap().image;
+                let ctx = format!("{} {mode:?} N={n}", family.name());
+                let base = fingerprint(&image, StepMode::Lockstep);
+                for step in MODES {
+                    assert_eq!(
+                        base,
+                        fingerprint(&image, step),
+                        "{ctx} [{step:?}]: fingerprint drifted from lockstep"
+                    );
+                    assert_eq!(
+                        fingerprint(&image, step),
+                        fingerprint(&image, step),
+                        "{ctx} [{step:?}]: fingerprint not repeatable"
+                    );
+                }
+            }
+        }
+    }
+}

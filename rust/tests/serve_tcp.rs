@@ -204,3 +204,19 @@ fn pipelined_submits_all_get_replies() {
     assert_eq!(seen.len(), n as usize);
     plane.shutdown();
 }
+
+#[test]
+fn shutdown_with_inflight_jobs_joins_the_pump() {
+    // Submit a burst and shut down WITHOUT reading any replies: the
+    // completion pump must drain its parked jobs (the fabric resolves
+    // them during shutdown) and its workers must join — the old
+    // detached-waiter scheme could only abandon these threads.
+    let plane = plane_with(QuotaConfig::default(), quiet_slo());
+    let mut c = WireClient::connect(plane.local_addr()).unwrap();
+    for i in 0..16 {
+        let req = JobRequest::new(RequestKind::sumup(Mode::No, (i..i + 64).collect()))
+            .with_client("rush");
+        c.submit(&req).unwrap();
+    }
+    plane.shutdown();
+}

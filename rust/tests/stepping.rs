@@ -1,18 +1,28 @@
-//! Differential stepping: the event-horizon scheduler must be
-//! **cycle-identical** to lockstep stepping — same clocks, architectural
-//! state, occupancy figures, supervisor ops, bus statistics and trace —
-//! on every workload family (sizes including the 0/1 edges), under
-//! interrupt servicing raised mid-run, under memory-bus contention, and
-//! across randomised timing models. Only the scheduler-iteration count
-//! (`events_processed`) may differ.
+//! Differential stepping: the event-horizon scheduler AND the
+//! host-parallel phase-A modes must be **cycle-identical** to lockstep
+//! stepping — same clocks, architectural state, occupancy figures,
+//! supervisor ops, bus statistics and trace — on every workload family
+//! (sizes including the 0/1 edges), under interrupt servicing raised
+//! mid-run, under memory-bus contention, and across randomised timing
+//! models. Only the scheduler-iteration count (`events_processed`) and
+//! the host-parallelism counters may differ.
 
 use empa::empa::{EmpaConfig, EmpaProcessor, RunReport, RunState, StepMode, TimingConfig};
 use empa::isa::{assemble, Reg};
 use empa::mem::MemConfig;
 use empa::util::Rng;
 use empa::workload::family::{direct_source, family_impl, synth_params, ALL_FAMILIES};
+use empa::workload::scale;
 use empa::workload::sumup::{self, Mode};
 use std::fmt::Write;
+
+/// Every stepping mode that must replay lockstep bit-for-bit.
+const CHALLENGERS: [StepMode; 4] = [
+    StepMode::EventHorizon,
+    StepMode::ParallelA { threads: 1 },
+    StepMode::ParallelA { threads: 2 },
+    StepMode::ParallelA { threads: 4 },
+];
 
 /// Run `image` under `step`, returning the report, the per-core
 /// integrated occupancy, and the processor's final internal clock.
@@ -24,30 +34,51 @@ fn run_mode(image: &[u8], base: &EmpaConfig, step: StepMode) -> (RunReport, Vec<
     (r, busy, p.clock)
 }
 
-/// The equivalence bar: every observable of the two runs must match.
+/// The equivalence bar: every observable of each challenger mode must
+/// match the lockstep run. Returns (lockstep, event-horizon) reports so
+/// callers can keep asserting on the scheduler economics.
 fn assert_identical(ctx: &str, image: &[u8], base: &EmpaConfig) -> (RunReport, RunReport) {
     let (lock, lock_busy, _) = run_mode(image, base, StepMode::Lockstep);
-    let (eh, eh_busy, eh_clock) = run_mode(image, base, StepMode::EventHorizon);
-    assert_eq!(lock.clocks, eh.clocks, "{ctx}: clocks");
-    assert_eq!(lock.status, eh.status, "{ctx}: status");
-    assert_eq!(lock.regs.file, eh.regs.file, "{ctx}: registers");
-    assert_eq!(lock.regs.cc, eh.regs.cc, "{ctx}: flags");
-    assert_eq!(lock.max_occupied, eh.max_occupied, "{ctx}: max_occupied");
-    assert_eq!(lock.distinct_cores, eh.distinct_cores, "{ctx}: distinct_cores");
-    assert_eq!(lock.retired, eh.retired, "{ctx}: retired");
-    assert_eq!(lock.bus, eh.bus, "{ctx}: bus stats");
-    assert_eq!(lock.sv_ops, eh.sv_ops, "{ctx}: sv_ops");
-    assert_eq!(lock.fault, eh.fault, "{ctx}: fault");
-    assert_eq!(lock.trace.entries, eh.trace.entries, "{ctx}: trace");
-    assert_eq!(lock_busy, eh_busy, "{ctx}: integrated occupancy");
     assert_eq!(lock.clocks_skipped, 0, "{ctx}: lockstep never skips");
-    assert_eq!(
-        eh_clock,
-        eh.events_processed + eh.clocks_skipped,
-        "{ctx}: every clock is either ticked or skipped"
-    );
-    assert!(eh.events_processed <= lock.events_processed, "{ctx}: event count");
-    (lock, eh)
+    let mut eh_report = None;
+    let mut eh_events = 0u64;
+    for step in CHALLENGERS {
+        let (r, busy, clock) = run_mode(image, base, step);
+        let ctx = format!("{ctx} [{step:?}]");
+        assert_eq!(lock.clocks, r.clocks, "{ctx}: clocks");
+        assert_eq!(lock.status, r.status, "{ctx}: status");
+        assert_eq!(lock.regs.file, r.regs.file, "{ctx}: registers");
+        assert_eq!(lock.regs.cc, r.regs.cc, "{ctx}: flags");
+        assert_eq!(lock.max_occupied, r.max_occupied, "{ctx}: max_occupied");
+        assert_eq!(lock.distinct_cores, r.distinct_cores, "{ctx}: distinct_cores");
+        assert_eq!(lock.retired, r.retired, "{ctx}: retired");
+        assert_eq!(lock.bus, r.bus, "{ctx}: bus stats");
+        assert_eq!(lock.sv_ops, r.sv_ops, "{ctx}: sv_ops");
+        assert_eq!(lock.fault, r.fault, "{ctx}: fault");
+        assert_eq!(lock.trace.entries, r.trace.entries, "{ctx}: trace");
+        assert_eq!(lock_busy, busy, "{ctx}: integrated occupancy");
+        assert_eq!(
+            clock,
+            r.events_processed + r.clocks_skipped,
+            "{ctx}: every clock is either ticked or skipped"
+        );
+        assert!(r.events_processed <= lock.events_processed, "{ctx}: event count");
+        match step {
+            StepMode::EventHorizon => {
+                eh_events = r.events_processed;
+                eh_report = Some(r);
+            }
+            StepMode::ParallelA { threads: 1 } => {
+                // threads=1 IS the serial event-horizon path: same
+                // scheduler iterations, no pool, no spans.
+                assert_eq!(r.events_processed, eh_events, "{ctx}: serial path");
+                assert_eq!(r.parallel_spans, 0, "{ctx}: no fan-out at one thread");
+                assert_eq!(r.span_conflicts, 0, "{ctx}: no conflicts at one thread");
+            }
+            _ => {}
+        }
+    }
+    (lock, eh_report.expect("EventHorizon is a challenger"))
 }
 
 #[test]
@@ -228,12 +259,111 @@ fn drive_irqs(step: StepMode, raise_at: &[u64]) -> (Vec<(u64, u64)>, u32, u64) {
 fn irq_servicing_steps_identically() {
     for raises in [&[5u64, 50][..], &[5, 35, 90, 130][..], &[40, 80, 120][..]] {
         let (log_l, mbox_l, halt_l) = drive_irqs(StepMode::Lockstep, raises);
-        let (log_e, mbox_e, halt_e) = drive_irqs(StepMode::EventHorizon, raises);
-        assert_eq!(log_l, log_e, "{raises:?}: per-interrupt (raised, done) clocks");
         assert_eq!(log_l.len(), raises.len(), "{raises:?}: every raise serviced");
-        assert_eq!(mbox_l, mbox_e, "{raises:?}: handler side effects");
         assert_eq!(mbox_l, raises.len() as u32, "{raises:?}: mailbox counted every service");
-        assert_eq!(halt_l, halt_e, "{raises:?}: payload completion clock");
+        for step in CHALLENGERS {
+            let (log_e, mbox_e, halt_e) = drive_irqs(step, raises);
+            assert_eq!(log_l, log_e, "{raises:?} [{step:?}]: per-interrupt (raised, done) clocks");
+            assert_eq!(mbox_l, mbox_e, "{raises:?} [{step:?}]: handler side effects");
+            assert_eq!(halt_l, halt_e, "{raises:?} [{step:?}]: payload completion clock");
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// effect-record paths: the scenarios host-parallel phase A must not bend
+// ----------------------------------------------------------------------
+
+/// SUMUP at this size keeps ~31 children in flight with stagger 1 and
+/// per-child retirements at +8 (mrmovl) and +11 (addl), so children 3
+/// apart retire on the same clock — parallel spans are guaranteed, not
+/// incidental.
+#[test]
+fn parallel_spans_actually_fan_out_on_wide_sumup() {
+    let (src, want) = sumup::sumup_mode_program(&sumup::synth_vector(128, 9));
+    let image = assemble(&src).unwrap().image;
+    let base = EmpaConfig::default();
+    let (lock, _) = assert_identical("sumup N=128", &image, &base);
+    assert_eq!(lock.eax(), want);
+    for threads in [2usize, 4] {
+        let (r, _, _) = run_mode(&image, &base, StepMode::ParallelA { threads });
+        assert!(r.parallel_spans > 0, "t={threads}: spans actually formed");
+        assert!(r.cores_per_span() >= 2.0, "t={threads}: spans hold at least two cores");
+        assert_eq!(r.span_hist.iter().sum::<u64>(), r.parallel_spans, "t={threads}: histogram");
+    }
+}
+
+/// Cross-shard store ordering: FOR-mode scale keeps many children
+/// storing into `arrayY` (spread across the data region) while others
+/// load from `arrayX` on the same clocks — the committed memory image
+/// must be exactly what the serial machine writes.
+#[test]
+fn cross_shard_stores_commit_in_core_index_order() {
+    let x: Vec<i32> = (0..96).map(|i| i * 3 - 7).collect();
+    let (src, want) = scale::for_mode(&x, 5);
+    let prog = assemble(&src).unwrap();
+    let y_addr = prog.symbol("arrayY").unwrap();
+    let base = EmpaConfig::default();
+    assert_identical("scale FOR N=96", &prog.image, &base);
+    for threads in [1usize, 2, 4] {
+        let cfg = EmpaConfig { step: StepMode::ParallelA { threads }, ..base.clone() };
+        let mut p = EmpaProcessor::new(&prog.image, &cfg);
+        let r = p.run_report();
+        assert_eq!(r.fault, None, "t={threads}");
+        let got: Vec<i32> =
+            (0..x.len()).map(|i| p.mem.read_u32(y_addr + 4 * i as u32).unwrap() as i32).collect();
+        assert_eq!(got, want, "t={threads}: output array");
+        if threads >= 2 {
+            // body retirements at +8/+14/+22 → children 6 apart collide
+            assert!(r.parallel_spans > 0, "t={threads}: stores actually overlapped in spans");
+        }
+    }
+}
+
+/// Two cores contending for one bus slot while a span is in flight: the
+/// single-port config serialises fetches, and the bus ledger (charged at
+/// fetch, never inside the span) must match lockstep exactly.
+#[test]
+fn bus_slot_contention_inside_spans_steps_identically() {
+    let (src, _) = sumup::sumup_mode_program(&sumup::synth_vector(64, 11));
+    let image = assemble(&src).unwrap().image;
+    let base = EmpaConfig { mem: MemConfig::single_bus(), ..Default::default() };
+    let (lock, _) = assert_identical("sumup single-bus N=64", &image, &base);
+    assert!(lock.bus.stall_cycles > 0, "contention actually exercised");
+    let (r, _, _) = run_mode(&image, &base, StepMode::ParallelA { threads: 4 });
+    assert!(r.parallel_spans > 0, "spans formed under contention");
+    assert_eq!(lock.bus, r.bus, "bus ledger identical under fan-out");
+}
+
+/// SV rent raised mid-run: a small pool forces the SUMUP engine to stall
+/// on `available_at` and re-rent cores while earlier children are still
+/// retiring — engine actions are sync points, so every rent lands
+/// between spans at the same clock as lockstep.
+#[test]
+fn sv_rent_raised_mid_span_steps_identically() {
+    for cores in [3usize, 5, 9] {
+        let (src, _) = sumup::sumup_mode_program(&sumup::synth_vector(40, 13));
+        let image = assemble(&src).unwrap().image;
+        let base = EmpaConfig { num_cores: cores, ..Default::default() };
+        let (lock, _) = assert_identical(&format!("sumup rent cores={cores}"), &image, &base);
+        assert!(lock.sv_ops > 0, "cores={cores}: the engine actually rented");
+    }
+}
+
+/// IRQ raised while a parallel span is possible: the raise is a sync
+/// point, so the handler's (raised, done) clocks and side effects must
+/// not shift under any thread count — covered per-mode above in
+/// `irq_servicing_steps_identically`; this pins the wide-payload case
+/// where spans are dense around the raise clocks.
+#[test]
+fn irq_raise_inside_a_parallel_span_steps_identically() {
+    let raises = &[30u64, 61, 95][..];
+    let (log_l, mbox_l, halt_l) = drive_irqs(StepMode::Lockstep, raises);
+    for threads in [2usize, 4] {
+        let (log_p, mbox_p, halt_p) = drive_irqs(StepMode::ParallelA { threads }, raises);
+        assert_eq!(log_l, log_p, "t={threads}: interrupt clocks");
+        assert_eq!(mbox_l, mbox_p, "t={threads}: handler side effects");
+        assert_eq!(halt_l, halt_p, "t={threads}: payload completion clock");
     }
 }
 
