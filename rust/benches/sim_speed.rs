@@ -5,13 +5,23 @@
 //!
 //! `--save-baseline [path]` dumps the table as JSON (default
 //! `BENCH_sim_speed.json`) so future PRs can keep a trajectory; rows
-//! from the thread sweep carry the host-thread count in their key.
+//! from the thread sweep carry the host-thread count in their key
+//! (`label/N@tT`, plus `bB` when a span-batch cap other than 1 is in
+//! effect, e.g. `SUMUP/4096@t4b16`).
 //!
 //! `--threads LIST` (default `1,2,4`) sets the host-thread counts for
-//! the `ParallelA` sweep. Spans are instruction-grained, so on small
-//! images the pool handoff can cost more than the payload it fans out —
-//! cycle-identity is the contract here; wall speedup is reported, not
-//! asserted.
+//! the `ParallelA` sweep, and `--span-batch LIST` (default `1,16`) the
+//! multi-clock batching caps crossed with every multi-thread count
+//! (threads=1 has no pool, so it runs once, unbatched). Spans are
+//! instruction-grained, so on small images the pool handoff can cost
+//! more than the payload it fans out — cycle-identity is the contract
+//! here; wall speedup is reported, not asserted.
+//!
+//! `--compare-baseline FILE [--tolerance PCT]` re-reads a saved
+//! baseline and exits non-zero if any current sweep row's
+//! clocks-per-second falls more than PCT percent (default 20) below
+//! the stored value for the same key. Keys absent from the baseline
+//! are reported and skipped, so adding sweep axes never breaks CI.
 
 #[path = "bench_util.rs"]
 mod bench_util;
@@ -41,11 +51,15 @@ struct Row {
 /// Run `image` in `mode` `iters` times; report the last run and the best
 /// simulated-clocks-per-wall-second over the iterations.
 fn measure(image: &[u8], mode: StepMode, iters: u32) -> (RunReport, f64) {
-    let cfg = EmpaConfig { step: mode, ..Default::default() };
+    measure_cfg(image, &EmpaConfig { step: mode, ..Default::default() }, iters)
+}
+
+/// [`measure`] with a fully specified config (span-batch sweep rows).
+fn measure_cfg(image: &[u8], cfg: &EmpaConfig, iters: u32) -> (RunReport, f64) {
     let mut best = 0.0f64;
     let mut last = None;
     for _ in 0..iters {
-        let mut p = EmpaProcessor::new(image, &cfg);
+        let mut p = EmpaProcessor::new(image, cfg);
         let t0 = Instant::now();
         let r = p.run_report();
         let wall = t0.elapsed().as_secs_f64();
@@ -88,20 +102,52 @@ fn traces_image(n: usize) -> Vec<u8> {
 }
 
 struct SweepRow {
+    key: String,
     label: String,
     n: usize,
     threads: usize,
+    span_batch: usize,
     clocks: u64,
     spans: u64,
     cores_per_span: f64,
     conflicts: u64,
+    batched_clocks: u64,
+    batched_share: f64,
+    clocks_per_batch: f64,
     clocks_per_s: f64,
     vs_one: Option<f64>,
 }
 
+/// Scan a saved baseline for `"key":"..."` rows and the
+/// `"clocks_per_sec"` value that follows each — enough JSON to compare
+/// against without a parser in the offline image.
+fn baseline_rates(json: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    let mut rest = json;
+    while let Some(i) = rest.find("\"key\":\"") {
+        rest = &rest[i + 7..];
+        let Some(end) = rest.find('"') else { break };
+        let key = rest[..end].to_string();
+        rest = &rest[end..];
+        let Some(j) = rest.find("\"clocks_per_sec\":") else { break };
+        rest = &rest[j + 17..];
+        let num: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E'))
+            .collect();
+        if let Ok(v) = num.parse::<f64>() {
+            out.push((key, v));
+        }
+    }
+    out
+}
+
 fn main() {
     let mut save: Option<String> = None;
+    let mut compare: Option<String> = None;
+    let mut tolerance = 20.0f64;
     let mut threads: Vec<usize> = vec![1, 2, 4];
+    let mut span_batches: Vec<usize> = vec![1, 16];
     let mut args = std::env::args().skip(1).peekable();
     while let Some(a) = args.next() {
         if a == "--save-baseline" {
@@ -110,6 +156,15 @@ fn main() {
                 _ => "BENCH_sim_speed.json".to_string(),
             };
             save = Some(path);
+        } else if a == "--compare-baseline" {
+            compare = Some(args.next().expect("--compare-baseline wants a file path"));
+        } else if a == "--tolerance" {
+            tolerance = args
+                .next()
+                .expect("--tolerance wants a percentage")
+                .parse()
+                .expect("--tolerance wants a number");
+            assert!((0.0..100.0).contains(&tolerance), "--tolerance wants a percent in [0,100)");
         } else if a == "--threads" {
             let list = args.next().expect("--threads wants a comma-separated list");
             threads = list
@@ -117,6 +172,14 @@ fn main() {
                 .map(|s| s.trim().parse().expect("--threads wants positive integers"))
                 .collect();
             assert!(!threads.is_empty(), "--threads wants at least one count");
+        } else if a == "--span-batch" {
+            let list = args.next().expect("--span-batch wants a comma-separated list");
+            span_batches = list
+                .split(',')
+                .map(|s| s.trim().parse().expect("--span-batch wants positive integers"))
+                .collect();
+            assert!(!span_batches.is_empty(), "--span-batch wants at least one cap");
+            assert!(span_batches.iter().all(|&b| b >= 1), "--span-batch caps must be >= 1");
         }
     }
 
@@ -158,10 +221,21 @@ fn main() {
         no_big.ratio
     );
 
-    section("E14: parallel phase A — host-thread sweep (cycle-identical)");
+    section("E14/E15: parallel phase A — thread x span-batch sweep (cycle-identical)");
     println!(
-        "{:>14} {:>6} {:>8} {:>9} {:>8} {:>11} {:>10} {:>12} {:>8}",
-        "workload", "N", "threads", "clocks", "spans", "cores/span", "conflicts", "clk/s", "vs t=1"
+        "{:>14} {:>6} {:>8} {:>6} {:>9} {:>8} {:>11} {:>10} {:>9} {:>9} {:>12} {:>8}",
+        "workload",
+        "N",
+        "threads",
+        "batch",
+        "clocks",
+        "spans",
+        "cores/span",
+        "conflicts",
+        "batched%",
+        "clk/batch",
+        "clk/s",
+        "vs t=1"
     );
     let mut sweep = Vec::new();
     for (label, n, image, iters) in [
@@ -171,39 +245,64 @@ fn main() {
         let (lock, _) = measure(&image, StepMode::Lockstep, 1);
         let mut one_rate: Option<f64> = None;
         for &t in &threads {
-            let (r, rate) = measure(&image, StepMode::ParallelA { threads: t }, iters);
-            // identity before speed: every thread count must replay lockstep
-            assert_eq!(lock.clocks, r.clocks, "{label} t={t}: cycle-identical");
-            assert_eq!(lock.regs.file, r.regs.file, "{label} t={t}: architecturally identical");
-            assert_eq!(lock.retired, r.retired, "{label} t={t}");
-            if t == 1 {
-                assert_eq!(r.parallel_spans, 0, "{label}: threads=1 is the serial path");
-                one_rate = Some(rate);
+            // threads=1 has no pool, so batching caps are inert there
+            let caps: &[usize] = if t == 1 { &span_batches[..1] } else { &span_batches };
+            for &b in caps {
+                let cfg = EmpaConfig {
+                    step: StepMode::ParallelA { threads: t },
+                    span_batch: b,
+                    ..Default::default()
+                };
+                let (r, rate) = measure_cfg(&image, &cfg, iters);
+                // identity before speed: every point must replay lockstep
+                assert_eq!(lock.clocks, r.clocks, "{label} t={t} b={b}: cycle-identical");
+                assert_eq!(lock.regs.file, r.regs.file, "{label} t={t} b={b}: architectural");
+                assert_eq!(lock.retired, r.retired, "{label} t={t} b={b}");
+                if t == 1 {
+                    assert_eq!(r.parallel_spans, 0, "{label}: threads=1 is the serial path");
+                    assert_eq!(r.batched_clocks, 0, "{label}: threads=1 never batches");
+                    one_rate = Some(rate);
+                }
+                let batches: u64 = r.span_batch_hist.iter().sum();
+                let clocks_per_batch = r.batched_clocks as f64 / batches.max(1) as f64;
+                let vs_one = one_rate.map(|base| rate / base.max(1e-12));
+                let key = if b == 1 {
+                    format!("{label}/{n}@t{t}")
+                } else {
+                    format!("{label}/{n}@t{t}b{b}")
+                };
+                println!(
+                    "{:>14} {:>6} {:>8} {:>6} {:>9} {:>8} {:>11.1} {:>10} {:>8.1}% {:>9.1} {:>12.3e} {:>8}",
+                    label,
+                    n,
+                    t,
+                    b,
+                    r.clocks,
+                    r.parallel_spans,
+                    r.cores_per_span(),
+                    r.span_conflicts,
+                    100.0 * r.batched_share(),
+                    clocks_per_batch,
+                    rate,
+                    vs_one.map_or("-".to_string(), |v| format!("{v:.2}x")),
+                );
+                sweep.push(SweepRow {
+                    key,
+                    label: label.to_string(),
+                    n,
+                    threads: t,
+                    span_batch: b,
+                    clocks: r.clocks,
+                    spans: r.parallel_spans,
+                    cores_per_span: r.cores_per_span(),
+                    conflicts: r.span_conflicts,
+                    batched_clocks: r.batched_clocks,
+                    batched_share: r.batched_share(),
+                    clocks_per_batch,
+                    clocks_per_s: rate,
+                    vs_one,
+                });
             }
-            let vs_one = one_rate.map(|b| rate / b.max(1e-12));
-            println!(
-                "{:>14} {:>6} {:>8} {:>9} {:>8} {:>11.1} {:>10} {:>12.3e} {:>8}",
-                label,
-                n,
-                t,
-                r.clocks,
-                r.parallel_spans,
-                r.cores_per_span(),
-                r.span_conflicts,
-                rate,
-                vs_one.map_or("-".to_string(), |v| format!("{v:.2}x")),
-            );
-            sweep.push(SweepRow {
-                label: label.to_string(),
-                n,
-                threads: t,
-                clocks: r.clocks,
-                spans: r.parallel_spans,
-                cores_per_span: r.cores_per_span(),
-                conflicts: r.span_conflicts,
-                clocks_per_s: rate,
-                vs_one,
-            });
         }
     }
 
@@ -253,16 +352,21 @@ fn main() {
             .map(|r| {
                 let mut o = JsonWriter::new();
                 o.object(&[
-                    // the workload/threads pair is the row's identity, so a
-                    // future sweep at different counts extends, not clobbers
-                    ("key", format!("\"{}/{}@t{}\"", r.label, r.n, r.threads)),
+                    // workload/threads/span-batch is the row's identity, so
+                    // a future sweep at different counts extends, not
+                    // clobbers (span_batch=1 keeps the legacy @tT key)
+                    ("key", format!("\"{}\"", r.key)),
                     ("workload", format!("\"{}\"", r.label)),
                     ("n", r.n.to_string()),
                     ("host_threads", r.threads.to_string()),
+                    ("span_batch", r.span_batch.to_string()),
                     ("clocks", r.clocks.to_string()),
                     ("parallel_spans", r.spans.to_string()),
                     ("cores_per_span", num(r.cores_per_span)),
                     ("span_conflicts", r.conflicts.to_string()),
+                    ("batched_clocks", r.batched_clocks.to_string()),
+                    ("batched_share", num(r.batched_share)),
+                    ("clocks_per_batch", num(r.clocks_per_batch)),
                     ("clocks_per_sec", num(r.clocks_per_s)),
                     ("vs_one_thread", r.vs_one.map_or("null".to_string(), num)),
                 ]);
@@ -276,5 +380,40 @@ fn main() {
         w.raw("}");
         std::fs::write(&path, w.finish()).expect("write baseline");
         println!("\nbaseline saved to {path}");
+    }
+
+    if let Some(path) = compare {
+        section(&format!("baseline compare vs {path} (tolerance {tolerance:.0}%)"));
+        let text = std::fs::read_to_string(&path).expect("read comparison baseline");
+        let base = baseline_rates(&text);
+        assert!(!base.is_empty(), "{path}: no keyed rows found in baseline");
+        let mut regressions = 0usize;
+        let mut matched = 0usize;
+        for row in &sweep {
+            match base.iter().find(|(k, _)| *k == row.key) {
+                Some((_, b)) => {
+                    matched += 1;
+                    let floor = b * (1.0 - tolerance / 100.0);
+                    let ok = row.clocks_per_s >= floor;
+                    println!(
+                        "{:>22} {:>12.3e} vs baseline {:>12.3e}  {}",
+                        row.key,
+                        row.clocks_per_s,
+                        b,
+                        if ok { "ok" } else { "REGRESSED" }
+                    );
+                    if !ok {
+                        regressions += 1;
+                    }
+                }
+                None => println!("{:>22} (no baseline row — skipped)", row.key),
+            }
+        }
+        assert!(matched > 0, "{path}: no baseline rows matched the current sweep keys");
+        if regressions > 0 {
+            eprintln!("sim_speed: {regressions} row(s) regressed beyond {tolerance:.0}%");
+            std::process::exit(1);
+        }
+        println!("all {matched} matched rows within tolerance");
     }
 }

@@ -20,6 +20,7 @@
 //! - [`XlaAccel`] — the L2/L1 JAX+Pallas graph via the PJRT [`Runtime`]
 //!   (the "special accelerator" the paper envisions linking).
 
+use crate::kernels;
 use crate::runtime::{Runtime, Tensor};
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -209,30 +210,34 @@ impl Accelerator for NativeAccel {
     }
 
     fn execute(&self, req: &MassRequest) -> Result<MassResult> {
+        // Reductions go through `crate::kernels` — the shared fixed-order
+        // f32 kernels — so the accelerator/batched route is bit-identical
+        // to the inline and scatter/gather routes (and SIMD-accelerated
+        // where the host supports it). `row(i)` reads the flat tile when
+        // one was staged, so the tile path is covered by the same kernels.
         let n = req.batch_rows();
         match req.op {
-            MassOp::Sumup => Ok(MassResult::Scalars(
-                (0..n).map(|i| req.row(i).iter().sum()).collect(),
-            )),
+            MassOp::Sumup => {
+                Ok(MassResult::Scalars((0..n).map(|i| kernels::sum(req.row(i))).collect()))
+            }
             MassOp::Dot => {
                 if n != req.rows2.len() {
                     return Err(anyhow!("dot: operand row counts differ"));
                 }
                 Ok(MassResult::Scalars(
-                    (0..n)
-                        .map(|i| req.row(i).iter().zip(req.row2(i)).map(|(x, y)| x * y).sum())
-                        .collect(),
+                    (0..n).map(|i| kernels::dot(req.row(i), req.row2(i))).collect(),
                 ))
             }
             MassOp::For => {
                 let [s, c] = req.scale_bias;
                 Ok(MassResult::Rows(
-                    (0..n).map(|i| req.row(i).iter().map(|x| x * s + c).collect()).collect(),
+                    (0..n).map(|i| kernels::scale(req.row(i), s, c)).collect(),
                 ))
             }
             MassOp::Prefix => Ok(MassResult::Rows(
                 (0..n)
                     .map(|i| {
+                        // Inherently sequential; stays scalar.
                         let mut acc = 0.0f32;
                         req.row(i)
                             .iter()
@@ -245,12 +250,12 @@ impl Accelerator for NativeAccel {
                     .collect(),
             )),
             MassOp::SumupStats => {
-                let sum: Vec<f32> = (0..n).map(|i| req.row(i).iter().sum()).collect();
+                let sum: Vec<f32> = (0..n).map(|i| kernels::sum(req.row(i))).collect();
                 let mean: Vec<f32> = (0..n)
                     .map(|i| sum[i] / req.row(i).len().max(1) as f32)
                     .collect();
                 let l2: Vec<f32> = (0..n)
-                    .map(|i| req.row(i).iter().map(|x| x * x).sum::<f32>().sqrt())
+                    .map(|i| kernels::dot(req.row(i), req.row(i)).sqrt())
                     .collect();
                 Ok(MassResult::Stats { sum, mean, l2 })
             }

@@ -7,7 +7,8 @@
 //! image has no clap.
 //!
 //! ```text
-//! serve [--addr HOST:PORT] [--workers N] [--sim-threads N] [--queue-cap N]
+//! serve [--addr HOST:PORT] [--workers N] [--sim-threads N]
+//!       [--sim-span-batch N] [--queue-cap N]
 //!       [--quota RATE[:BURST]] [--tenant TAG=RATE[:BURST]]...
 //!       [--max-frame BYTES] [--secs S]
 //! ```
@@ -17,6 +18,9 @@
 //! (a one-second burst window). `--sim-threads N` steps each worker's
 //! simulated processor with N host threads (`StepMode::ParallelA`);
 //! 1 (the default) keeps the serial event-horizon scheduler.
+//! `--sim-span-batch N` caps how many consecutive clocks a parallel
+//! span may batch (1 disables batching; only meaningful with
+//! `--sim-threads >= 2`).
 
 use empa::coordinator::FabricConfig;
 use empa::serve::{QuotaConfig, ServeConfig, ServePlane, SloConfig, MAX_FRAME};
@@ -50,6 +54,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
     let mut addr = "127.0.0.1:0".to_string();
     let mut workers = 4usize;
     let mut sim_threads = 1usize;
+    let mut sim_span_batch: Option<usize> = None;
     let mut queue_cap = 256usize;
     let mut quota = QuotaConfig::default();
     let mut max_frame = MAX_FRAME;
@@ -64,6 +69,7 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
             "--addr" => addr = val()?,
             "--workers" => workers = val()?.parse()?,
             "--sim-threads" => sim_threads = val()?.parse()?,
+            "--sim-span-batch" => sim_span_batch = Some(val()?.parse()?),
             "--queue-cap" => queue_cap = val()?.parse()?,
             "--quota" => {
                 let (r, b) = parse_shape(&val()?)?;
@@ -82,7 +88,8 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
             "--secs" => secs = val()?.parse()?,
             "--help" | "-h" => {
                 println!(
-                    "serve [--addr HOST:PORT] [--workers N] [--sim-threads N] [--queue-cap N] \
+                    "serve [--addr HOST:PORT] [--workers N] [--sim-threads N] \
+                     [--sim-span-batch N] [--queue-cap N] \
                      [--quota RATE[:BURST]] [--tenant TAG=RATE[:BURST]]... \
                      [--max-frame BYTES] [--secs S (0 = forever)]"
                 );
@@ -95,6 +102,10 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
     let mut fabric = FabricConfig { sim_workers: workers, queue_cap, ..Default::default() };
     if sim_threads >= 2 {
         fabric.empa.step = empa::empa::StepMode::ParallelA { threads: sim_threads };
+    }
+    if let Some(batch) = sim_span_batch {
+        anyhow::ensure!(batch >= 1, "--sim-span-batch must be >= 1 (1 disables batching)");
+        fabric.empa.span_batch = batch;
     }
     let slo = SloConfig::for_queue_cap(queue_cap);
     let plane = ServePlane::start(ServeConfig { addr, fabric, quota, slo, max_frame })?;

@@ -266,6 +266,9 @@ pub struct PipelineStats {
     pub parallel_spans: Cell<u64>,
     pub parallel_cores: Cell<u64>,
     pub span_conflicts: Cell<u64>,
+    /// Clocks advanced through multi-clock span batches across served
+    /// jobs (subset of `sim_clocks_skipped`).
+    pub batched_clocks: Cell<u64>,
 }
 
 /// One simulated EMPA processor slot, built as a **compile-once
@@ -415,10 +418,16 @@ impl SimBackend {
                     slot.fetch_add(n, std::sync::atomic::Ordering::Relaxed);
                 }
             }
+            for (slot, n) in m.span_batch_hist.iter().zip(r.span_batch_hist) {
+                if n > 0 {
+                    slot.fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
         }
         self.count_by(&self.stats.parallel_spans, r.parallel_spans, |m| &m.parallel_spans);
         self.count_by(&self.stats.parallel_cores, r.parallel_cores, |m| &m.parallel_cores);
         self.count_by(&self.stats.span_conflicts, r.span_conflicts, |m| &m.span_conflicts);
+        self.count_by(&self.stats.batched_clocks, r.batched_clocks, |m| &m.batched_clocks);
         if let Some(f) = r.fault {
             return Err(FabricError::GuestFault(f));
         }
@@ -592,13 +601,14 @@ mod tests {
         assert!(s.parallel_spans.get() > 0, "staggered SUMUP children overlap");
         assert!(s.parallel_cores.get() >= 2 * s.parallel_spans.get());
 
-        // a serial pool reports threads=1 and never spans
+        // a serial pool reports threads=1, never spans, and never batches
         let serial = SimBackend::new(EmpaConfig::default());
         serial
             .execute(BackendJob::Program { family: Family::Sumup, mode: Mode::Sumup, params: &params })
             .unwrap();
         assert_eq!(serial.pipeline_stats().host_threads.get(), 1);
         assert_eq!(serial.pipeline_stats().parallel_spans.get(), 0);
+        assert_eq!(serial.pipeline_stats().batched_clocks.get(), 0);
     }
 
     #[test]

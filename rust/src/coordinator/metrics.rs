@@ -125,6 +125,12 @@ pub struct FabricMetrics {
     pub span_conflicts: AtomicU64,
     /// Span-size histogram: buckets 2, 3, 4, 5–8, 9–16, 17+ cores.
     pub span_hist: [AtomicU64; 6],
+    /// Simulated clocks advanced through multi-clock span batches
+    /// (subset of `sim_clocks_skipped`), summed across program jobs.
+    pub batched_clocks: AtomicU64,
+    /// Batch-length histogram in clocks: buckets 1–2, 3, 4, 5–8, 9–16,
+    /// 17+; one entry per batched span.
+    pub span_batch_hist: [AtomicU64; 6],
     /// Serve plane: requests denied by a tenant token-bucket quota
     /// (summed over tenants; the per-tenant split is in `client(tag)`).
     pub quota_denied: AtomicU64,
@@ -307,9 +313,11 @@ impl FabricMetrics {
         }
         if g(&self.host_threads) > 1 || g(&self.parallel_spans) > 0 {
             let h = &self.span_hist;
+            let b = &self.span_batch_hist;
             out.push_str(&format!(
                 "\n  host parallel: threads={} spans={} cores={} (mean {:.1}/span) conflicts={} \
-                 hist [2]={} [3]={} [4]={} [5-8]={} [9-16]={} [17+]={}",
+                 hist [2]={} [3]={} [4]={} [5-8]={} [9-16]={} [17+]={} \
+                 batched_clocks={} batch_hist [1-2]={} [3]={} [4]={} [5-8]={} [9-16]={} [17+]={}",
                 g(&self.host_threads),
                 g(&self.parallel_spans),
                 g(&self.parallel_cores),
@@ -321,6 +329,13 @@ impl FabricMetrics {
                 g(&h[3]),
                 g(&h[4]),
                 g(&h[5]),
+                g(&self.batched_clocks),
+                g(&b[0]),
+                g(&b[1]),
+                g(&b[2]),
+                g(&b[3]),
+                g(&b[4]),
+                g(&b[5]),
             ));
         }
         {
@@ -477,6 +492,14 @@ mod tests {
         assert!(r.contains("host parallel: threads=4 spans=2 cores=7 (mean 3.5/span)"), "{r}");
         assert!(r.contains("conflicts=1"), "{r}");
         assert!(r.contains("hist [2]=1 [3]=0 [4]=0 [5-8]=1 [9-16]=0 [17+]=0"), "{r}");
+        assert!(r.contains("batched_clocks=0"), "{r}");
+        m.batched_clocks.store(40, Ordering::Relaxed);
+        m.span_batch_hist[4].store(3, Ordering::Relaxed);
+        let r = m.render();
+        assert!(
+            r.contains("batched_clocks=40 batch_hist [1-2]=0 [3]=0 [4]=0 [5-8]=0 [9-16]=3 [17+]=0"),
+            "{r}"
+        );
         // a parallel pool that never spanned still shows its thread count
         let m = FabricMetrics::default();
         m.host_threads.store(2, Ordering::Relaxed);

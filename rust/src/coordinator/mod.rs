@@ -59,6 +59,7 @@ pub use router::RoutePolicy;
 
 use crate::accel::{Batch, Batcher, BatcherConfig, MassOp, MassRequest, MassResult, TilePool};
 use crate::empa::EmpaConfig;
+use crate::kernels;
 use crate::workload::Request;
 use fairshare::{FairStage, Popped};
 use std::collections::HashMap;
@@ -237,15 +238,23 @@ pub(crate) struct ShardTask {
 
 /// Parent-side accumulator for a scattered mass op: it holds the
 /// *submitted* operand buffers (shared `Arc`s — the scatter moves the
-/// client's allocation here, no copy), shards add the partial result of
-/// their slice, and the last one to land completes the job (the §5.2
-/// SUMUP engine's merge step, lifted to the service layer).
+/// client's allocation here, no copy), shards place the canonical
+/// block partials of their slice, and the last one to land folds them
+/// and completes the job (the §5.2 SUMUP engine's merge step, lifted
+/// to the service layer).
 pub(crate) struct ShardGather {
     a: Arc<[f32]>,
     /// Second operand (dot only); slicing is bounded by the shorter side.
     b: Option<Arc<[f32]>>,
     ctx: Mutex<Option<JobCtx>>,
-    sum: Mutex<f64>,
+    /// One `kernels::BLOCK`-sized partial per block of the full operand,
+    /// placed by global block index. Shard boundaries are block-aligned
+    /// (see [`scatter`](MassRouter::scatter)), so the slots line up with
+    /// the whole-slice block grid and the final fold is bit-identical to
+    /// the inline `kernels::sum`/`dot` — regardless of shard completion
+    /// order. This replaces an order-dependent running f64 sum that made
+    /// the split route drift from the inline route.
+    partials: Mutex<Vec<f32>>,
     /// Sticky cancel/deadline verdict (see [`ShardGather::check_dead`]).
     dead: AtomicBool,
     remaining: AtomicUsize,
@@ -269,26 +278,36 @@ impl ShardGather {
         dead
     }
 
-    /// This worker's slice of the mass op — a conventional core doing the
-    /// arithmetic itself (no backend required), accumulating in f64 so
-    /// the gathered total does not drift with the fan-out.
-    fn compute(&self, lo: usize, hi: usize) -> f64 {
+    /// This worker's slice of the mass op — a conventional core doing
+    /// the arithmetic itself (no backend required) — reduced to the
+    /// canonical per-block partials of the shared kernels. `lo` is a
+    /// `kernels::BLOCK` multiple by the scatter contract.
+    fn compute(&self, lo: usize, hi: usize) -> Vec<f32> {
+        let mut out = Vec::new();
         match &self.b {
-            Some(b) => {
-                self.a[lo..hi].iter().zip(&b[lo..hi]).map(|(x, y)| *x as f64 * *y as f64).sum()
-            }
-            None => self.a[lo..hi].iter().map(|&x| x as f64).sum(),
+            Some(b) => kernels::dot_block_partials(&self.a[lo..hi], &b[lo..hi], &mut out),
+            None => kernels::sum_block_partials(&self.a[lo..hi], &mut out),
         }
+        out
     }
 
     fn absorb(
         &self,
-        partial: f64,
+        lo: usize,
+        partial: Vec<f32>,
         backend: &str,
         stats: Option<&BackendStats>,
         metrics: &FabricMetrics,
     ) {
-        *self.sum.lock().unwrap() += partial;
+        {
+            let mut slots = self.partials.lock().unwrap();
+            let base = lo / kernels::BLOCK;
+            for (i, p) in partial.into_iter().enumerate() {
+                if let Some(s) = slots.get_mut(base + i) {
+                    *s = p;
+                }
+            }
+        }
         if self.remaining.fetch_sub(1, AcqRel) != 1 {
             return;
         }
@@ -305,7 +324,7 @@ impl ShardGather {
         if let Some(s) = stats {
             s.jobs.fetch_add(1, Relaxed);
         }
-        let total = *self.sum.lock().unwrap() as f32;
+        let total = kernels::fold_partials(&self.partials.lock().unwrap());
         ctx.complete(
             metrics,
             Output::Scalars(vec![total].into()),
@@ -699,14 +718,17 @@ impl Supervisor {
         // Fix the chunk size first, then re-derive the count from it, so
         // every shard is non-empty and the last range cannot run past
         // `len` (ceil(len / ceil(len / want)) <= want always holds).
-        let chunk = len.div_ceil(want).max(1);
+        // Chunks round up to the kernel block grid: shard partials then
+        // land on the whole-slice block grid, making the gathered fold
+        // bit-identical to the inline kernel reduction.
+        let chunk = len.div_ceil(want).max(1).div_ceil(kernels::BLOCK) * kernels::BLOCK;
         let shards = len.div_ceil(chunk).max(1);
         let priority = ctx.priority;
         let gather = Arc::new(ShardGather {
             a,
             b,
             ctx: Mutex::new(Some(ctx)),
-            sum: Mutex::new(0.0),
+            partials: Mutex::new(vec![0.0; len.div_ceil(kernels::BLOCK)]),
             dead: AtomicBool::new(false),
             remaining: AtomicUsize::new(shards),
             shards,
@@ -770,9 +792,11 @@ impl Supervisor {
 /// buffers — the inline lane, and the sim pool's defensive whole-op
 /// path. Borrows; never copies.
 fn inline_mass(kind: &RequestKind) -> Result<Output, FabricError> {
+    // Through the shared fixed-order kernels, so the inline answer is
+    // bit-identical to the split and accelerator routes for the same job.
     match kind {
         RequestKind::MassSum { values } => {
-            Ok(Output::Scalars(vec![values.iter().sum()].into()))
+            Ok(Output::Scalars(vec![kernels::sum(values)].into()))
         }
         RequestKind::MassDot { a, b } => {
             // Submission validation rejects mismatches; never let one
@@ -780,9 +804,7 @@ fn inline_mass(kind: &RequestKind) -> Result<Output, FabricError> {
             if a.len() != b.len() {
                 return Err(FabricError::ShapeMismatch { a: a.len(), b: b.len() });
             }
-            Ok(Output::Scalars(
-                vec![a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()].into(),
-            ))
+            Ok(Output::Scalars(vec![kernels::dot(a, b)].into()))
         }
         RequestKind::RunProgram { .. } => Err(FabricError::Backend {
             name: "inline".into(),
@@ -957,11 +979,11 @@ fn run_shard(
     if gather.check_dead() {
         // Cancelled or past its deadline while staged: contribute
         // nothing; the last shard resolves the job with its typed error.
-        gather.absorb(0.0, backend.unwrap_or("sim-pool"), stats, metrics);
+        gather.absorb(lo, Vec::new(), backend.unwrap_or("sim-pool"), stats, metrics);
         return;
     }
     let partial = gather.compute(lo, hi);
-    gather.absorb(partial, backend.unwrap_or("sim-pool"), stats, metrics);
+    gather.absorb(lo, partial, backend.unwrap_or("sim-pool"), stats, metrics);
 }
 
 /// One mass-chain slot: the entry's backend, instantiated on first use.
@@ -1301,6 +1323,107 @@ mod tests {
         f.shutdown();
     }
 
+    /// Magnitude-diverse values so f32 summation order actually matters:
+    /// if any route deviated from the canonical kernel reduction order,
+    /// the bit-equality below would catch it.
+    fn noisy(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (((s >> 33) & 0xffff) as f32) * 2f32.powi(((s >> 49) % 29) as i32 - 14)
+            })
+            .collect()
+    }
+
+    /// Run `values` through the split lane exactly as `scatter` would —
+    /// block-aligned chunks — but absorbing the shards in *reverse*
+    /// completion order, and return the gathered scalar.
+    fn split_scalar(a: Arc<[f32]>, b: Option<Arc<[f32]>>, chunks: usize) -> f32 {
+        let metrics = FabricMetrics::default();
+        let (tx, rx) = mpsc::channel();
+        let ctx = JobCtx {
+            id: 1,
+            priority: Priority::Normal,
+            deadline: None,
+            submitted: Instant::now(),
+            cancel: Arc::new(AtomicBool::new(false)),
+            reply: tx,
+            client: None,
+        };
+        let len = b.as_ref().map_or(a.len(), |bv| a.len().min(bv.len()));
+        let chunk = len.div_ceil(chunks).max(1).div_ceil(kernels::BLOCK) * kernels::BLOCK;
+        let shards = len.div_ceil(chunk).max(1);
+        let gather = Arc::new(ShardGather {
+            a,
+            b,
+            ctx: Mutex::new(Some(ctx)),
+            partials: Mutex::new(vec![0.0; len.div_ceil(kernels::BLOCK)]),
+            dead: AtomicBool::new(false),
+            remaining: AtomicUsize::new(shards),
+            shards,
+            dispatched: Instant::now(),
+        });
+        for i in (0..shards).rev() {
+            let (lo, hi) = (i * chunk, ((i + 1) * chunk).min(len));
+            run_shard(
+                ShardTask { gather: Arc::clone(&gather), lo, hi },
+                Some("sim"),
+                None,
+                &metrics,
+            );
+        }
+        let Ok(Ok(c)) = rx.try_recv() else { panic!("gather did not complete") };
+        c.output.scalar().expect("split mass ops return one scalar")
+    }
+
+    #[test]
+    fn inline_split_and_batched_routes_agree_bitwise() {
+        use crate::accel::{Accelerator, MassRequest, MassResult, NativeAccel};
+        // split_min_len boundary shapes: below, at, just above, a
+        // multiple, and a multiple plus a ragged block tail.
+        let min = 256usize;
+        for n in [min - 1, min, min + 1, 2 * min, 2 * min + 63] {
+            let vals = noisy(n, n as u64);
+            let a: Arc<[f32]> = vals.into();
+            let Ok(Output::Scalars(v)) =
+                inline_mass(&RequestKind::MassSum { values: Arc::clone(&a) })
+            else {
+                panic!("inline sum failed")
+            };
+            let inline = v[0];
+            let Ok(MassResult::Scalars(v)) =
+                NativeAccel.execute(&MassRequest::sumup([Arc::clone(&a)]))
+            else {
+                panic!("batched sum failed")
+            };
+            let batched = v[0];
+            for chunks in [2, 3, 5] {
+                let split = split_scalar(Arc::clone(&a), None, chunks);
+                assert_eq!(split.to_bits(), inline.to_bits(), "sum n={n} chunks={chunks}");
+            }
+            assert_eq!(batched.to_bits(), inline.to_bits(), "sum n={n}");
+        }
+        // Dot: same contract through the second operand.
+        let n = 2 * min + 63;
+        let a: Arc<[f32]> = noisy(n, 7).into();
+        let b: Arc<[f32]> = noisy(n, 13).into();
+        let Ok(Output::Scalars(v)) =
+            inline_mass(&RequestKind::MassDot { a: Arc::clone(&a), b: Arc::clone(&b) })
+        else {
+            panic!("inline dot failed")
+        };
+        let inline = v[0];
+        let Ok(MassResult::Scalars(v)) =
+            NativeAccel.execute(&MassRequest::dot([Arc::clone(&a)], [Arc::clone(&b)]))
+        else {
+            panic!("batched dot failed")
+        };
+        assert_eq!(v[0].to_bits(), inline.to_bits(), "dot batched");
+        let split = split_scalar(a, Some(b), 3);
+        assert_eq!(split.to_bits(), inline.to_bits(), "dot split");
+    }
+
     #[test]
     fn shard_gather_honours_cancellation_while_staged() {
         // Drive the gather directly: the second shard observes the
@@ -1321,7 +1444,7 @@ mod tests {
             a: vec![1.0; 8].into(),
             b: None,
             ctx: Mutex::new(Some(ctx)),
-            sum: Mutex::new(0.0),
+            partials: Mutex::new(vec![0.0; 1]),
             dead: AtomicBool::new(false),
             remaining: AtomicUsize::new(2),
             shards: 2,

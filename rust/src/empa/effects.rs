@@ -14,6 +14,7 @@
 //! which is what keeps the parallel mode bit-identical.
 
 use super::core::Latches;
+use super::timing::TimingConfig;
 use crate::emu::{execute, CoreRegs, ExecEffect, PseudoPort};
 use crate::isa::{Insn, Reg, Status};
 use crate::mem::{AddrError, DataPort, MemView};
@@ -149,6 +150,121 @@ impl PhaseTask {
                 ExecEffect::Continue { next_pc } => EffectOutcome::Continue { next_pc },
                 ExecEffect::Stop(s) => EffectOutcome::Stop(s),
             },
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Multi-clock span batching: per-core apply→fetch chains
+// ----------------------------------------------------------------------
+
+/// One core's starting state for a multi-clock batch window: its pending
+/// `Exec` instruction plus the snapshot a worker needs to keep stepping
+/// that core — apply, same-clock fetch-decode, next apply — entirely
+/// against the read-only [`MemView`], until the window ends or the chain
+/// hits something only the serial tick may handle.
+#[derive(Debug, Clone)]
+pub(crate) struct ChainTask {
+    pub id: usize,
+    /// Pending instruction (never a metainstruction — the window-end
+    /// computation excludes cores with pending metas).
+    pub insn: Insn,
+    /// Clock at which `insn` retires.
+    pub apply_at: u64,
+    pub pc: u32,
+    pub regs: CoreRegs,
+    pub latch: Latches,
+}
+
+/// The fetch half of a chained clock: the next instruction decoded from
+/// the pre-window bytes, plus everything the commit loop must replay.
+#[derive(Debug, Clone)]
+pub(crate) struct FetchRecord {
+    /// Fetch pc — the 6-byte decode window `[pc, pc+6)` is re-checked at
+    /// commit against every store in the batch (self-modifying code).
+    pub pc: u32,
+    pub insn: Insn,
+    /// Retirement clock of the fetched instruction (`t + insn_cost`; the
+    /// batch runs only on an ideal bus, so the data-access delay is 0).
+    pub apply_at: u64,
+    /// Memory instruction: the commit loop replays `bus.access(t)` so
+    /// [`crate::mem::BusStats`] stay bit-identical to lockstep.
+    pub bus_access: bool,
+}
+
+/// One committed-clock candidate of a chain: the apply's effect record
+/// and the same-clock fetch that followed it.
+#[derive(Debug, Clone)]
+pub(crate) struct ChainStep {
+    /// Clock this apply retires at (strictly increasing along a chain).
+    pub t: u64,
+    pub eff: PendingEffects,
+    pub fetch: FetchRecord,
+}
+
+/// A chain's output: complete apply+fetch records for every clock it
+/// covered, plus where (if anywhere) it hit a non-batchable event.
+#[derive(Debug, Clone)]
+pub(crate) struct ChainResult {
+    pub id: usize,
+    pub steps: Vec<ChainStep>,
+    /// Clock of the first event only the serial tick may handle: a
+    /// `Stop` outcome (halt/fault), a fetched metainstruction or `halt`,
+    /// or an undecodable fetch window. The processor truncates the whole
+    /// batch to the minimum stop over all chains; records at that clock
+    /// are discarded and the serial tick redoes it with full supervisor
+    /// semantics. `None`: the chain ran to the window end.
+    pub stop_at: Option<u64>,
+}
+
+impl ChainTask {
+    /// Step this core through consecutive clocks `< end`, speculating
+    /// each apply with [`PhaseTask::run`] and decoding each same-clock
+    /// fetch from the pre-window bytes. Pure, like the single-clock path.
+    ///
+    /// The uniform stopper rule: anything that is not "conventional
+    /// apply then conventional fetch" stops the chain *at* that clock,
+    /// and the records for that clock are not produced — the serial tick
+    /// owns it. That covers halt retirement and faults (`Stop`
+    /// outcomes), metainstruction and `halt` fetches (supervisor ops,
+    /// blocking decisions), and decode failures.
+    pub fn run(&self, view: &MemView<'_>, timing: &TimingConfig, end: u64) -> ChainResult {
+        let mut steps = Vec::new();
+        let mut insn = self.insn;
+        let mut apply_at = self.apply_at;
+        let mut pc = self.pc;
+        let mut regs = self.regs.clone();
+        let mut latch = self.latch;
+        loop {
+            let t = apply_at;
+            if t >= end {
+                return ChainResult { id: self.id, steps, stop_at: None };
+            }
+            let task = PhaseTask { id: self.id, insn, pc, regs: regs.clone(), latch };
+            let eff = task.run(view);
+            let EffectOutcome::Continue { next_pc } = eff.outcome else {
+                return ChainResult { id: self.id, steps, stop_at: Some(t) };
+            };
+            regs = eff.regs.clone();
+            latch = eff.latch;
+            pc = next_pc;
+            // The same-clock fetch (phase D of the tick this apply
+            // belongs to). Engine-intercepted qterm, halt blocking, and
+            // supervisor dispatch all live behind Meta/Halt — stoppers.
+            let Some((next, _len)) = Insn::decode(view.fetch_window(pc)) else {
+                return ChainResult { id: self.id, steps, stop_at: Some(t) };
+            };
+            if matches!(next, Insn::Meta { .. } | Insn::Halt) {
+                return ChainResult { id: self.id, steps, stop_at: Some(t) };
+            }
+            let bus_access = matches!(next, Insn::MrMov { .. } | Insn::RmMov { .. });
+            apply_at = t + timing.insn_cost(&next);
+            steps.push(ChainStep {
+                t,
+                eff,
+                fetch: FetchRecord { pc, insn: next, apply_at, bus_access },
+            });
+            insn = next;
         }
     }
 }

@@ -5,12 +5,28 @@
 //! *total* participants including the stepping thread itself:
 //! `ParallelA { threads: 4 }` spawns 3 workers and the stepping thread
 //! computes the first chunk of every span in place. Workers park on a
-//! condvar between spans; a span hands them owned [`PhaseTask`]s plus a
-//! shared read-only byte slice of the pre-phase memory, and
-//! [`PhasePool::run_span`] blocks until every chunk is back — so the
-//! effect records always come home before the serial commit starts.
+//! condvar between spans; a span hands them owned tasks plus a shared
+//! read-only byte slice of the pre-phase memory, and the `run_*` entry
+//! points block until every chunk is back — so the effect records always
+//! come home before the serial commit starts.
+//!
+//! Two kinds of span ride the same epoch protocol:
+//! - [`PhasePool::run_span`] — one clock of same-clock phase-A applies
+//!   ([`PhaseTask`] → [`PendingEffects`]);
+//! - [`PhasePool::run_batch`] — multi-clock apply→fetch chains
+//!   ([`ChainTask`] → [`ChainResult`]) for span batching.
+//!
+//! Chunking is *cost-weighted*, not even: cores about to stream a SUMUP
+//! partial (`%pp` write) or touch memory (staged store / load) carry
+//! weight 2, plain ALU/control flow weight 1, and the contiguous chunk
+//! boundaries balance the weight prefix sums. The boundaries are
+//! computed once on the stepping thread and published with the span, so
+//! every participant sees the same deterministic partition and results
+//! still come home in task (= core-index = commit) order.
 
-use super::effects::{PendingEffects, PhaseTask};
+use super::effects::{ChainResult, ChainTask, PendingEffects, PhaseTask};
+use super::timing::TimingConfig;
+use crate::isa::{Insn, Reg};
 use crate::mem::{MemView, Memory};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
@@ -18,10 +34,10 @@ use std::thread::JoinHandle;
 /// The pre-phase memory bytes, smuggled across the thread boundary as a
 /// raw slice.
 ///
-/// SAFETY invariant: set under the state lock by [`PhasePool::run_span`],
-/// which does not return until `outstanding == 0` — the `&Memory` borrow
-/// it was taken from therefore outlives every worker dereference, and
-/// the bytes are never written while a span is in flight (speculated
+/// SAFETY invariant: set under the state lock by the `run_*` entry
+/// points, which do not return until `outstanding == 0` — the `&Memory`
+/// borrow it was taken from therefore outlives every worker dereference,
+/// and the bytes are never written while a span is in flight (speculated
 /// stores are staged in the effect records; the commit runs only after
 /// the join). Workers never touch the slice outside a span.
 #[derive(Clone, Copy)]
@@ -38,14 +54,33 @@ impl SpanBytes {
     }
 }
 
+/// What the published span asks the workers to compute.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum WorkKind {
+    /// One clock of phase-A applies (`tasks` → `results`).
+    Span,
+    /// Multi-clock apply→fetch chains (`chain_tasks` → `chain_results`).
+    Batch,
+}
+
 struct State {
     /// Monotonic span counter: a worker computes its chunk of span
     /// `epoch` exactly once (guards against spurious condvar wakeups).
     epoch: u64,
     shutdown: bool,
     bytes: SpanBytes,
+    kind: WorkKind,
+    /// Cost-weighted contiguous chunk `[lo, hi)` per participant slot,
+    /// computed once by the publisher.
+    bounds: Vec<(usize, usize)>,
     tasks: Vec<PhaseTask>,
     results: Vec<Option<PendingEffects>>,
+    chain_tasks: Vec<ChainTask>,
+    chain_results: Vec<Option<ChainResult>>,
+    /// Batch window end (exclusive) and instruction timing for the
+    /// chained fetches; `timing` is only `Some` while a batch is live.
+    chain_end: u64,
+    timing: Option<TimingConfig>,
     /// Workers still computing the current span.
     outstanding: usize,
 }
@@ -76,13 +111,42 @@ pub(crate) struct PhasePool {
     threads: usize,
 }
 
-/// Contiguous chunk `[lo, hi)` of `n` items for participant `slot` of
-/// `parts` (slot 0 is the stepping thread). Sizes differ by at most one.
-fn chunk(n: usize, parts: usize, slot: usize) -> (usize, usize) {
-    let per = n / parts;
-    let rem = n % parts;
-    let lo = slot * per + slot.min(rem);
-    (lo, lo + per + usize::from(slot < rem))
+/// Relative cost of speculating one pending instruction: memory traffic
+/// and SUMUP streaming (`%pp` writes) dominate a span's critical path,
+/// plain register ops are cheap. The absolute values only matter
+/// relative to each other.
+fn task_weight(insn: &Insn) -> u64 {
+    match insn {
+        Insn::MrMov { .. } | Insn::RmMov { .. } => 2,
+        Insn::Op { rb: Reg::PseudoP, .. } => 2,
+        _ => 1,
+    }
+}
+
+/// Contiguous weight-balanced partition of `weights` into `parts`
+/// chunks: chunk `k` ends where the cumulative weight first reaches
+/// `total * (k+1) / parts`. Deterministic, covers exactly `[0, n)`,
+/// and reduces to the even split when all weights are equal.
+fn weighted_bounds(weights: &[u64], parts: usize) -> Vec<(usize, usize)> {
+    let total: u64 = weights.iter().sum();
+    let mut bounds = Vec::with_capacity(parts);
+    let mut acc = 0u64;
+    let mut i = 0usize;
+    for slot in 0..parts {
+        let lo = i;
+        let target = total * (slot as u64 + 1) / parts as u64;
+        while i < weights.len() && acc < target {
+            acc += weights[i];
+            i += 1;
+        }
+        if slot + 1 == parts {
+            // Zero-weight tails (there are none today, but the partition
+            // must stay total) land on the last chunk.
+            i = weights.len();
+        }
+        bounds.push((lo, i));
+    }
+    bounds
 }
 
 impl PhasePool {
@@ -95,8 +159,14 @@ impl PhasePool {
                 epoch: 0,
                 shutdown: false,
                 bytes: SpanBytes::empty(),
+                kind: WorkKind::Span,
+                bounds: Vec::new(),
                 tasks: Vec::new(),
                 results: Vec::new(),
+                chain_tasks: Vec::new(),
+                chain_results: Vec::new(),
+                chain_end: 0,
+                timing: None,
                 outstanding: 0,
             }),
             work: Condvar::new(),
@@ -107,7 +177,7 @@ impl PhasePool {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("empa-phase-a-{slot}"))
-                    .spawn(move || worker_loop(shared, threads, slot))
+                    .spawn(move || worker_loop(shared, slot))
                     .expect("spawn phase-A worker")
             })
             .collect();
@@ -125,7 +195,9 @@ impl PhasePool {
     /// the commit order).
     pub fn run_span(&self, mem: &Memory, tasks: Vec<PhaseTask>) -> Vec<PendingEffects> {
         let n = tasks.len();
-        let (lo0, hi0) = chunk(n, self.threads, 0);
+        let weights: Vec<u64> = tasks.iter().map(|t| task_weight(&t.insn)).collect();
+        let bounds = weighted_bounds(&weights, self.threads);
+        let (lo0, hi0) = bounds[0];
         // The stepping thread's own chunk, cloned before publication so
         // it can compute outside the lock alongside the workers.
         let mine: Vec<PhaseTask> = tasks[lo0..hi0].to_vec();
@@ -134,6 +206,8 @@ impl PhasePool {
             debug_assert_eq!(st.outstanding, 0, "spans never overlap");
             let raw = mem.raw_bytes();
             st.bytes = SpanBytes { ptr: raw.as_ptr(), len: raw.len() };
+            st.kind = WorkKind::Span;
+            st.bounds = bounds;
             st.tasks = tasks;
             st.results.clear();
             st.results.resize_with(n, || None);
@@ -155,6 +229,53 @@ impl PhasePool {
         st.bytes = SpanBytes::empty();
         st.results.drain(..).map(|r| r.expect("every chunk computed")).collect()
     }
+
+    /// Speculate one multi-clock batch: each chain steps its core
+    /// through consecutive clocks `< end` against the pre-window `mem`
+    /// bytes (see [`ChainTask::run`]). Blocks until every chain is back;
+    /// results return in task order.
+    pub fn run_batch(
+        &self,
+        mem: &Memory,
+        timing: &TimingConfig,
+        tasks: Vec<ChainTask>,
+        end: u64,
+    ) -> Vec<ChainResult> {
+        let n = tasks.len();
+        let weights: Vec<u64> = tasks.iter().map(|t| task_weight(&t.insn)).collect();
+        let bounds = weighted_bounds(&weights, self.threads);
+        let (lo0, hi0) = bounds[0];
+        let mine: Vec<ChainTask> = tasks[lo0..hi0].to_vec();
+        {
+            let mut st = self.shared.lock();
+            debug_assert_eq!(st.outstanding, 0, "spans never overlap");
+            let raw = mem.raw_bytes();
+            st.bytes = SpanBytes { ptr: raw.as_ptr(), len: raw.len() };
+            st.kind = WorkKind::Batch;
+            st.bounds = bounds;
+            st.chain_tasks = tasks;
+            st.chain_results.clear();
+            st.chain_results.resize_with(n, || None);
+            st.chain_end = end;
+            st.timing = Some(timing.clone());
+            st.outstanding = self.handles.len();
+            st.epoch += 1;
+            self.shared.work.notify_all();
+        }
+        let view = mem.view();
+        let computed: Vec<ChainResult> = mine.iter().map(|t| t.run(&view, timing, end)).collect();
+        let mut st = self.shared.lock();
+        for (k, r) in computed.into_iter().enumerate() {
+            st.chain_results[lo0 + k] = Some(r);
+        }
+        while st.outstanding > 0 {
+            st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.chain_tasks.clear();
+        st.timing = None;
+        st.bytes = SpanBytes::empty();
+        st.chain_results.drain(..).map(|r| r.expect("every chain computed")).collect()
+    }
 }
 
 impl Drop for PhasePool {
@@ -170,10 +291,14 @@ impl Drop for PhasePool {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>, parts: usize, slot: usize) {
+fn worker_loop(shared: Arc<Shared>, slot: usize) {
     let mut seen = 0u64;
     loop {
-        let (bytes, mine, base) = {
+        enum Work {
+            Span(Vec<PhaseTask>),
+            Batch(Vec<ChainTask>, TimingConfig, u64),
+        }
+        let (bytes, work, base) = {
             let mut st = shared.lock();
             loop {
                 if st.shutdown {
@@ -185,21 +310,46 @@ fn worker_loop(shared: Arc<Shared>, parts: usize, slot: usize) {
                 st = shared.work.wait(st).unwrap_or_else(|e| e.into_inner());
             }
             seen = st.epoch;
-            let (lo, hi) = chunk(st.tasks.len(), parts, slot);
-            (st.bytes, st.tasks[lo..hi].to_vec(), lo)
+            let (lo, hi) = st.bounds[slot];
+            let work = match st.kind {
+                WorkKind::Span => Work::Span(st.tasks[lo..hi].to_vec()),
+                WorkKind::Batch => Work::Batch(
+                    st.chain_tasks[lo..hi].to_vec(),
+                    st.timing.clone().expect("batch publishes timing"),
+                    st.chain_end,
+                ),
+            };
+            (st.bytes, work, lo)
         };
-        // SAFETY: see `SpanBytes` — `run_span` keeps the backing memory
-        // alive and unwritten until this worker decrements `outstanding`.
+        // SAFETY: see `SpanBytes` — the publishing `run_*` call keeps the
+        // backing memory alive and unwritten until this worker decrements
+        // `outstanding`.
         let slice: &[u8] = unsafe { std::slice::from_raw_parts(bytes.ptr, bytes.len) };
         let view = MemView::new(slice);
-        let computed: Vec<PendingEffects> = mine.iter().map(|t| t.run(&view)).collect();
-        let mut st = shared.lock();
-        for (k, eff) in computed.into_iter().enumerate() {
-            st.results[base + k] = Some(eff);
-        }
-        st.outstanding -= 1;
-        if st.outstanding == 0 {
-            shared.done.notify_all();
+        match work {
+            Work::Span(mine) => {
+                let computed: Vec<PendingEffects> = mine.iter().map(|t| t.run(&view)).collect();
+                let mut st = shared.lock();
+                for (k, eff) in computed.into_iter().enumerate() {
+                    st.results[base + k] = Some(eff);
+                }
+                st.outstanding -= 1;
+                if st.outstanding == 0 {
+                    shared.done.notify_all();
+                }
+            }
+            Work::Batch(mine, timing, end) => {
+                let computed: Vec<ChainResult> =
+                    mine.iter().map(|t| t.run(&view, &timing, end)).collect();
+                let mut st = shared.lock();
+                for (k, r) in computed.into_iter().enumerate() {
+                    st.chain_results[base + k] = Some(r);
+                }
+                st.outstanding -= 1;
+                if st.outstanding == 0 {
+                    shared.done.notify_all();
+                }
+            }
         }
     }
 }
@@ -209,7 +359,7 @@ mod tests {
     use super::*;
     use crate::emu::CoreRegs;
     use crate::empa::core::Latches;
-    use crate::isa::{Insn, Reg};
+    use crate::isa::{Insn, OpFn, Reg};
 
     fn load_task(id: usize, addr: i32) -> PhaseTask {
         let mut regs = CoreRegs::default();
@@ -224,19 +374,57 @@ mod tests {
     }
 
     #[test]
-    fn chunks_partition_without_gaps() {
-        for n in 0..40 {
+    fn weighted_bounds_partition_without_gaps() {
+        // Uniform weights: behaves like the old even split.
+        for n in 0..40usize {
             for parts in 1..6 {
+                let weights = vec![1u64; n];
+                let bounds = weighted_bounds(&weights, parts);
+                assert_eq!(bounds.len(), parts);
                 let mut next = 0;
-                for slot in 0..parts {
-                    let (lo, hi) = chunk(n, parts, slot);
+                for (slot, &(lo, hi)) in bounds.iter().enumerate() {
                     assert_eq!(lo, next, "n={n} parts={parts} slot={slot}");
-                    assert!(hi - lo <= n / parts + 1);
+                    assert!(hi >= lo);
                     next = hi;
                 }
                 assert_eq!(next, n, "chunks cover exactly [0, n)");
             }
         }
+        // Mixed weights: the partition still covers [0, n) and no chunk
+        // exceeds its fair share of total weight by more than one task.
+        let weights = [2u64, 1, 1, 2, 2, 1, 2, 2, 1, 1, 2, 2];
+        let total: u64 = weights.iter().sum();
+        for parts in 1..6 {
+            let bounds = weighted_bounds(&weights, parts);
+            let mut next = 0;
+            for &(lo, hi) in &bounds {
+                assert_eq!(lo, next);
+                let w: u64 = weights[lo..hi].iter().sum();
+                assert!(w <= total.div_ceil(parts as u64) + 2, "chunk weight {w} balanced");
+                next = hi;
+            }
+            assert_eq!(next, weights.len());
+        }
+    }
+
+    #[test]
+    fn heavy_tasks_shrink_their_chunk() {
+        // 4 heavy stores then 8 cheap ALU ops, 2 participants: the
+        // boundary must land before the even-split midpoint 6.
+        let mut weights = vec![2u64; 4];
+        weights.extend([1u64; 8]);
+        let bounds = weighted_bounds(&weights, 2);
+        assert!(bounds[0].1 < 6, "store-heavy prefix got a shorter chunk: {bounds:?}");
+        assert_eq!(bounds[1].1, 12);
+    }
+
+    #[test]
+    fn task_weights_follow_the_instruction_class() {
+        assert_eq!(task_weight(&Insn::MrMov { ra: Reg::Eax, rb: Reg::Ecx, disp: 0 }), 2);
+        assert_eq!(task_weight(&Insn::RmMov { ra: Reg::Eax, rb: Reg::Ecx, disp: 0 }), 2);
+        assert_eq!(task_weight(&Insn::Op { op: OpFn::Add, ra: Reg::Eax, rb: Reg::PseudoP }), 2);
+        assert_eq!(task_weight(&Insn::Op { op: OpFn::Add, ra: Reg::Eax, rb: Reg::Ebx }), 1);
+        assert_eq!(task_weight(&Insn::Nop), 1);
     }
 
     #[test]
@@ -267,6 +455,44 @@ mod tests {
         let effs = pool.run_span(&mem, vec![load_task(7, 8)]);
         assert_eq!(effs.len(), 1);
         assert_eq!(effs[0].id, 7);
+    }
+
+    #[test]
+    fn batches_chain_applies_and_fetches_in_task_order() {
+        // Straight-line code at pc 0: a run of conventional ALU ops each
+        // core walks privately against the shared read-only bytes.
+        let op = Insn::Op { op: OpFn::Add, ra: Reg::Eax, rb: Reg::Ebx };
+        let mut img = Vec::new();
+        for _ in 0..8 {
+            op.encode(&mut img);
+        }
+        let mem = Memory::with_image(256, &img);
+        let timing = TimingConfig::paper();
+        let cost = timing.insn_cost(&op);
+        let pool = PhasePool::new(2);
+        let tasks: Vec<ChainTask> = (0..3)
+            .map(|id| {
+                let mut regs = CoreRegs::default();
+                regs.file[Reg::Eax as usize] = 1;
+                ChainTask {
+                    id,
+                    insn: op,
+                    apply_at: 10,
+                    pc: 0,
+                    regs,
+                    latch: Latches::default(),
+                }
+            })
+            .collect();
+        let rs = pool.run_batch(&mem, &timing, tasks, 10 + 2 * cost);
+        assert_eq!(rs.len(), 3);
+        for (i, r) in rs.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert_eq!(r.steps.len(), 2, "two applies fit the window");
+            assert_eq!(r.steps[0].t, 10);
+            assert_eq!(r.steps[1].t, 10 + cost);
+            assert_eq!(r.stop_at, None);
+        }
     }
 
     #[test]

@@ -29,7 +29,7 @@
 //! construction (see `rust/tests/stepping.rs` and EXPERIMENTS.md §Perf).
 
 use super::core::{AllocState, BlockReason, Core, RunState};
-use super::effects::{words_overlap, EffectOutcome, LatchPort, PendingEffects, PhaseTask};
+use super::effects::{words_overlap, ChainTask, EffectOutcome, LatchPort, PendingEffects, PhaseTask};
 use super::pool::PhasePool;
 use super::sv::{MassEngine, MassMode, Supervisor};
 use super::timing::TimingConfig;
@@ -63,7 +63,11 @@ pub enum StepMode {
     /// speculated on `threads` host threads against a read-only view of
     /// the pre-phase memory, then their effect records are committed
     /// serially in core-index order — the order the lockstep loop uses —
-    /// with conflicting reads re-executed in place. Bit-identical to the
+    /// with conflicting reads re-executed in place. When the next
+    /// supervisor sync point is provably more than one clock away, the
+    /// fan-out covers up to [`EmpaConfig::span_batch`] *consecutive*
+    /// clocks per span (multi-clock span batching — each worker chains
+    /// its cores' apply→fetch sequences privately). Bit-identical to the
     /// other modes; `threads: 1` *is* the serial event-horizon path (no
     /// worker pool is built at all).
     ParallelA {
@@ -84,6 +88,10 @@ pub enum ConfigError {
     /// threads than simulated cores can never all be busy; 64 is the
     /// core-count ceiling).
     HostThreads { requested: usize },
+    /// `span_batch` of 0: the window length is a clock *count*, and
+    /// "batch zero clocks" has no meaning — 1 is the explicit way to
+    /// disable batching while keeping the single-clock fan-out.
+    SpanBatch { requested: usize },
 }
 
 impl std::fmt::Display for ConfigError {
@@ -94,6 +102,9 @@ impl std::fmt::Display for ConfigError {
             }
             ConfigError::HostThreads { requested } => {
                 write!(f, "ParallelA threads={requested} unsupported (1..=64 host threads)")
+            }
+            ConfigError::SpanBatch { requested } => {
+                write!(f, "span_batch={requested} unsupported (must be >= 1; 1 disables batching)")
             }
         }
     }
@@ -114,6 +125,11 @@ pub struct EmpaConfig {
     pub max_clocks: u64,
     /// How the scheduler advances time (cycle-identical either way).
     pub step: StepMode,
+    /// Maximum consecutive clocks one `ParallelA` span may batch (the
+    /// multi-clock window length). 1 disables batching — every span
+    /// covers a single clock, the pre-batching behaviour. Ignored by the
+    /// serial modes. Must be >= 1 ([`ConfigError::SpanBatch`]).
+    pub span_batch: usize,
 }
 
 impl Default for EmpaConfig {
@@ -125,6 +141,7 @@ impl Default for EmpaConfig {
             trace: false,
             max_clocks: 10_000_000,
             step: StepMode::EventHorizon,
+            span_batch: 16,
         }
     }
 }
@@ -140,6 +157,9 @@ impl EmpaConfig {
             if !(1..=64).contains(&threads) {
                 return Err(ConfigError::HostThreads { requested: threads });
             }
+        }
+        if self.span_batch == 0 {
+            return Err(ConfigError::SpanBatch { requested: 0 });
         }
         Ok(())
     }
@@ -193,6 +213,15 @@ pub struct RunReport {
     pub span_conflicts: u64,
     /// Span-size histogram: buckets 2, 3, 4, 5–8, 9–16, 17+ cores.
     pub span_hist: [u64; 6],
+    /// Clocks advanced through multi-clock span batches (subset of
+    /// `clocks_skipped`): consecutive clocks committed from chained
+    /// apply→fetch records instead of individual ticks. 0 when
+    /// `span_batch == 1` or in the serial modes. Host-perf observability
+    /// only — modeled clocks are unaffected.
+    pub batched_clocks: u64,
+    /// Batch-length histogram in clocks, same buckets as `span_hist`
+    /// (1–2, 3, 4, 5–8, 9–16, 17+); one entry per batched span.
+    pub span_batch_hist: [u64; 6],
     /// Simulation-level fault (runaway, child halt, invalid meta use).
     pub fault: Option<String>,
     /// Event trace, when enabled.
@@ -222,6 +251,17 @@ impl RunReport {
             0.0
         } else {
             self.parallel_cores as f64 / self.parallel_spans as f64
+        }
+    }
+
+    /// Fraction of all simulated clocks advanced through multi-clock
+    /// span batches (0.0 outside `ParallelA` or with `span_batch == 1`).
+    pub fn batched_share(&self) -> f64 {
+        let total = self.events_processed + self.clocks_skipped;
+        if total == 0 {
+            0.0
+        } else {
+            self.batched_clocks as f64 / total as f64
         }
     }
 }
@@ -279,6 +319,12 @@ pub struct EmpaProcessor {
     span_conflicts: u64,
     /// Span-size histogram (buckets 2, 3, 4, 5–8, 9–16, 17+).
     span_hist: [u64; 6],
+    /// Multi-clock window limit ([`EmpaConfig::span_batch`]; 1 = off).
+    span_batch: usize,
+    /// Clocks advanced through multi-clock batches.
+    batched_clocks: u64,
+    /// Batch-length histogram in clocks (same buckets as `span_hist`).
+    span_batch_hist: [u64; 6],
     /// Reused phase-A pending buffer (hot-loop allocation avoidance).
     span_buf: Vec<(usize, Insn)>,
     /// Reused commit-time write-set buffer.
@@ -344,6 +390,9 @@ impl EmpaProcessor {
             parallel_cores: 0,
             span_conflicts: 0,
             span_hist: [0; 6],
+            span_batch: cfg.span_batch,
+            batched_clocks: 0,
+            span_batch_hist: [0; 6],
             span_buf: Vec::new(),
             span_writes: Vec::new(),
             events_processed: 0,
@@ -408,6 +457,8 @@ impl EmpaProcessor {
             parallel_cores: self.parallel_cores,
             span_conflicts: self.span_conflicts,
             span_hist: self.span_hist,
+            batched_clocks: self.batched_clocks,
+            span_batch_hist: self.span_batch_hist,
             fault: self.fault.clone(),
             trace,
         }
@@ -475,6 +526,8 @@ impl EmpaProcessor {
         self.parallel_cores = 0;
         self.span_conflicts = 0;
         self.span_hist = [0; 6];
+        self.batched_clocks = 0;
+        self.span_batch_hist = [0; 6];
         self.external_wake_at = None;
         self.trace.push(0, 0, Event::Rent { parent: None });
     }
@@ -551,6 +604,7 @@ impl EmpaProcessor {
         if h > self.clock {
             self.advance_to(h);
         }
+        self.try_batch();
     }
 
     /// The next clock (≥ now) at which `tick()` would do *anything*:
@@ -890,6 +944,248 @@ impl EmpaProcessor {
                     Some(format!("core {id}: stopped with {s:?} at {:#x}", self.cores[id].pc));
             }
         }
+    }
+
+    // ------------------------------------------------------------------
+    // multi-clock span batching (StepMode::ParallelA, span_batch >= 2)
+    // ------------------------------------------------------------------
+
+    /// Try to batch the next window of consecutive clocks through the
+    /// worker pool. Called at the end of [`EmpaProcessor::step`], after
+    /// the horizon jump: if the window `[clock, e)` provably contains no
+    /// supervisor sync point, every pending conventional execution is
+    /// chained privately on a worker ([`ChainTask::run`]) and the
+    /// resulting apply+fetch records are committed serially, clock by
+    /// clock in core-index order — exactly the order the lockstep loop
+    /// uses. Cycle-identical by construction; only `events_processed`
+    /// drops (batched clocks count as skipped, like bursts).
+    ///
+    /// The window end is the minimum over every event source the chains
+    /// cannot reproduce: pending metainstruction retirements (supervisor
+    /// applies), pending `halt` retirements (machine stop), the engine
+    /// horizon ([`crate::empa::sv::Supervisor::earliest_due`]) when any mass engine is
+    /// active, the external IRQ wake bound, the runaway guard, and
+    /// `clock + span_batch`. A rented core the serial tick must touch
+    /// *now* — idle (fetch pending) or blocked with its condition
+    /// already clear (unblock pending) — aborts the batch entirely.
+    ///
+    /// Inside the window the chains are speculated against the
+    /// pre-window memory, so the commit loop re-validates every clock:
+    /// a load overlapping any earlier committed store (earlier clock, or
+    /// same clock from a lower core index) and a fetch window `[pc,
+    /// pc+6)` overlapping any store up to and including its clock are
+    /// conflicts — the batch truncates *before* that clock and the
+    /// serial tick redoes it. A committed `%pp` stream truncates *after*
+    /// its clock (it arms the parent Sum engine inside the window).
+    /// Requires an ideal memory bus: batched fetches replay
+    /// `bus.access` at commit, which is only order-independent without a
+    /// reservation table ([`crate::mem::bus::MemoryBus::is_ideal`]).
+    ///
+    /// The decode-cache counters are *not* replayed for batched fetches
+    /// (chains decode the raw bytes) — `icache_hits`/`icache_misses` are
+    /// host observability and excluded from the identity contract.
+    fn try_batch(&mut self) {
+        if self.span_batch < 2 || self.pool.is_none() {
+            return;
+        }
+        if self.halted || self.fault.is_some() || !self.bus.is_ideal() {
+            return;
+        }
+        let h = self.clock;
+        if h >= self.max_clocks {
+            return;
+        }
+        let mut e = self.max_clocks;
+        if let Some(w) = self.external_wake_at {
+            if w <= h {
+                return;
+            }
+            e = e.min(w);
+        }
+        if self.sv.any_active() {
+            match self.sv.earliest_due(h, |p| self.earliest_mass_rent_at(p)) {
+                Some(t) if t <= h => return,
+                Some(t) => e = e.min(t),
+                // No engine action is reachable until some chain-side
+                // event (e.g. a child qterm) — chains stop on those.
+                None => {}
+            }
+        }
+        let mut tasks: Vec<ChainTask> = Vec::new();
+        let mut bits = self.rented_mask;
+        while bits != 0 {
+            let id = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            let c = &self.cores[id];
+            match c.run {
+                RunState::Exec { insn, apply_at } => {
+                    debug_assert!(apply_at >= h, "horizon jump never passes a retirement");
+                    if matches!(insn, Insn::Meta { .. } | Insn::Halt) {
+                        // Supervisor apply / machine stop: window bound.
+                        if apply_at <= h {
+                            return;
+                        }
+                        e = e.min(apply_at);
+                    } else {
+                        tasks.push(ChainTask {
+                            id,
+                            insn,
+                            apply_at,
+                            pc: c.pc,
+                            regs: c.regs.clone(),
+                            latch: c.latch,
+                        });
+                    }
+                }
+                RunState::Blocked(
+                    BlockReason::WaitChildren { .. } | BlockReason::HaltPending,
+                ) => {
+                    // A pending unblock belongs to the next serial tick.
+                    if c.children == 0 && !self.sv.parent_engine_active(id) {
+                        return;
+                    }
+                    // Otherwise frozen: the mask only clears through a
+                    // child qterm or an engine finalise, both of which
+                    // stop/bound the window.
+                }
+                RunState::Blocked(BlockReason::MassEngine) => {} // engine horizon bounds e
+                RunState::Blocked(BlockReason::IrqWait) => {}    // external wake bounds e
+                _ => return, // Idle (fetch pending) or Halted: serial tick owns it
+            }
+        }
+        e = e.min(h + self.span_batch as u64);
+        if e <= h + 1 || tasks.len() < 2 {
+            return; // a 1-clock window is the existing single-clock span path
+        }
+        let ntasks = tasks.len();
+        let results =
+            self.pool.as_ref().expect("checked above").run_batch(&self.mem, &self.timing, tasks, e);
+        // Truncate to the earliest chain stop: records at that clock are
+        // discarded and the serial tick redoes it with full supervisor
+        // semantics (meta/halt fetch, engine intercept, decode fault...).
+        let mut e_trunc = e;
+        for r in &results {
+            if let Some(t) = r.stop_at {
+                e_trunc = e_trunc.min(t);
+            }
+        }
+        // Commit clock by clock in ascending order, core-index order
+        // within a clock — the lockstep order. `writes` accumulates every
+        // committed store for the cross-clock staleness checks.
+        let mut idx = vec![0usize; results.len()];
+        let mut writes = std::mem::take(&mut self.span_writes);
+        writes.clear();
+        let mut prefix: Vec<u32> = Vec::new();
+        let mut all_t: Vec<u32> = Vec::new();
+        'clocks: while e_trunc > h {
+            // next clock with any pending record
+            let mut t = u64::MAX;
+            for (k, r) in results.iter().enumerate() {
+                if let Some(s) = r.steps.get(idx[k]) {
+                    t = t.min(s.t);
+                }
+            }
+            if t >= e_trunc {
+                break;
+            }
+            // Pass 1 — validate every record at `t` before committing
+            // any of them, so a conflict can truncate the whole clock.
+            // `prefix` holds same-clock stores of lower-index cores (the
+            // serial phase-A order); `all_t` holds every store at `t`
+            // (phase A fully precedes phase D, so a fetch at `t` sees
+            // them all — including the fetching core's own).
+            prefix.clear();
+            all_t.clear();
+            let mut streamed = false;
+            for (k, r) in results.iter().enumerate() {
+                if let Some(s) = r.steps.get(idx[k]) {
+                    if s.t == t {
+                        if let Some((addr, _)) = s.eff.write {
+                            all_t.push(addr);
+                        }
+                    }
+                }
+            }
+            for (k, r) in results.iter().enumerate() {
+                let Some(s) = r.steps.get(idx[k]) else { continue };
+                if s.t != t {
+                    continue;
+                }
+                if let Some(rd) = s.eff.read {
+                    if writes.iter().chain(prefix.iter()).any(|&w| words_overlap(rd, w)) {
+                        self.span_conflicts += 1;
+                        e_trunc = t;
+                        break 'clocks;
+                    }
+                }
+                let pc = s.fetch.pc as u64;
+                if writes
+                    .iter()
+                    .chain(all_t.iter())
+                    .any(|&w| (w as u64) + 4 > pc && (w as u64) < pc + 6)
+                {
+                    self.span_conflicts += 1;
+                    e_trunc = t;
+                    break 'clocks;
+                }
+                streamed |= s.eff.streamed.is_some();
+                if let Some((addr, _)) = s.eff.write {
+                    prefix.push(addr);
+                }
+            }
+            if streamed && self.timing.sv_readout == 0 {
+                // A zero-latency readout would finalise in phase B of
+                // this very clock — only the serial tick can replay that.
+                e_trunc = t;
+                break;
+            }
+            // Pass 2 — commit the clock: apply effect, replay the fetch.
+            for (k, r) in results.iter().enumerate() {
+                let Some(s) = r.steps.get(idx[k]) else { continue };
+                if s.t != t {
+                    continue;
+                }
+                idx[k] += 1;
+                if let Some((addr, _)) = s.eff.write {
+                    writes.push(addr);
+                }
+                let id = s.eff.id;
+                self.commit_effect(s.eff.clone(), t);
+                debug_assert!(self.cores[id].run == RunState::Idle && self.fault.is_none());
+                self.cores[id].run =
+                    RunState::Exec { insn: s.fetch.insn, apply_at: s.fetch.apply_at };
+                if s.fetch.bus_access {
+                    self.bus.access(t);
+                }
+            }
+            if streamed {
+                // The stream armed the parent Sum engine (readout due at
+                // `t + sv_readout`): later clocks must be re-planned.
+                e_trunc = t + 1;
+                break;
+            }
+        }
+        self.span_writes = writes;
+        if e_trunc <= h {
+            return; // nothing committed; serial stepping continues at h
+        }
+        // Account the window exactly as `advance_to` + per-tick busy
+        // accounting would have: allocation is frozen inside the window,
+        // so every rented core accrues the whole span.
+        let n = e_trunc - h;
+        let mut bits = self.rented_mask;
+        while bits != 0 {
+            let id = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            self.cores[id].busy_clocks += n;
+        }
+        self.clock = e_trunc;
+        self.clocks_skipped += n;
+        self.batched_clocks += n;
+        self.span_batch_hist[span_bucket(n as usize)] += 1;
+        self.parallel_spans += 1;
+        self.parallel_cores += ntasks as u64;
+        self.span_hist[span_bucket(ntasks)] += 1;
     }
 
     /// A `%pp` write by a SUMUP child streams into the parent adder
@@ -1780,13 +2076,176 @@ buf:
         let (src, want) = sumup::sumup_mode_program(&[1, 2, 3, 4]);
         let image = assemble(&src).unwrap().image;
         let eh = run_in(StepMode::EventHorizon, &image);
-        let p1 = run_in(StepMode::ParallelA { threads: 1 }, &image);
-        assert_eq!(p1.eax(), want);
-        assert_eq!(p1.clocks, eh.clocks);
-        assert_eq!(p1.events_processed, eh.events_processed, "identical scheduler path");
-        assert_eq!(p1.clocks_skipped, eh.clocks_skipped);
-        assert_eq!(p1.parallel_spans, 0, "no pool is built for threads=1");
-        assert_eq!((p1.host_threads, eh.host_threads), (1, 1));
+        // Even with a wide batching window configured, threads=1 must
+        // remain literally the serial path: no pool, no spans, no
+        // batches, identical scheduler iterations.
+        for span_batch in [1usize, 16, 64] {
+            let cfg = EmpaConfig {
+                step: StepMode::ParallelA { threads: 1 },
+                span_batch,
+                ..Default::default()
+            };
+            let p1 = EmpaProcessor::new(&image, &cfg).run();
+            assert_eq!(p1.eax(), want);
+            assert_eq!(p1.clocks, eh.clocks);
+            assert_eq!(p1.events_processed, eh.events_processed, "identical scheduler path");
+            assert_eq!(p1.clocks_skipped, eh.clocks_skipped);
+            assert_eq!(p1.parallel_spans, 0, "no pool is built for threads=1");
+            assert_eq!(p1.batched_clocks, 0, "no batches without a pool");
+            assert_eq!(p1.span_batch_hist, [0; 6]);
+            assert_eq!((p1.host_threads, eh.host_threads), (1, 1));
+        }
+    }
+
+    #[test]
+    fn span_batch_zero_is_a_typed_config_error() {
+        let cfg = EmpaConfig { span_batch: 0, ..Default::default() };
+        assert_eq!(cfg.validate(), Err(ConfigError::SpanBatch { requested: 0 }));
+        assert_eq!(
+            EmpaProcessor::try_new(&[0x00], &cfg).err(),
+            Some(ConfigError::SpanBatch { requested: 0 })
+        );
+        assert!(ConfigError::SpanBatch { requested: 0 }.to_string().contains("span_batch=0"));
+        for good in [1usize, 16, 4096] {
+            let cfg = EmpaConfig { span_batch: good, ..Default::default() };
+            assert!(EmpaProcessor::try_new(&[0x00], &cfg).is_ok());
+        }
+    }
+
+    #[test]
+    fn no_mode_span_batch_sweep_stays_cycle_identical() {
+        // NO-mode at this size is one long conventional stretch per core:
+        // with a window of 64 the batcher should cover most clocks.
+        let (src, want) = sumup::no_mode_program(&sumup::synth_vector(64, 5));
+        let image = assemble(&src).unwrap().image;
+        let lock = run_in(StepMode::Lockstep, &image);
+        for span_batch in [1usize, 4, 64] {
+            let cfg = EmpaConfig {
+                step: StepMode::ParallelA { threads: 2 },
+                span_batch,
+                ..Default::default()
+            };
+            let r = EmpaProcessor::new(&image, &cfg).run();
+            assert_eq!(r.eax(), want, "span_batch={span_batch}");
+            assert_eq!(r.clocks, lock.clocks, "span_batch={span_batch}");
+            assert_eq!(r.regs.file, lock.regs.file, "span_batch={span_batch}");
+            assert_eq!(r.retired, lock.retired, "span_batch={span_batch}");
+            assert_eq!(r.sv_ops, lock.sv_ops, "span_batch={span_batch}");
+            assert_eq!(r.bus, lock.bus, "span_batch={span_batch}");
+            // every span — single-clock or batched — lands in span_hist;
+            // batched ones additionally record their length
+            assert_eq!(r.span_hist.iter().sum::<u64>(), r.parallel_spans);
+            assert!(r.span_batch_hist.iter().sum::<u64>() <= r.parallel_spans);
+            if span_batch == 1 {
+                assert_eq!(r.batched_clocks, 0, "span_batch=1 disables batching");
+                assert_eq!(r.span_batch_hist, [0; 6]);
+            }
+        }
+    }
+
+    #[test]
+    fn mass_mode_span_batch_sweep_stays_cycle_identical() {
+        // SUMUP interleaves engine actions (window bounds), %pp streams
+        // (chain stoppers) and staggered conventional bodies — the
+        // hardest mix for the window rule. Every window length must
+        // replay lockstep bit-for-bit.
+        let (src, want) = sumup::sumup_mode_program(&sumup::synth_vector(128, 9));
+        let image = assemble(&src).unwrap().image;
+        let lock = run_in(StepMode::Lockstep, &image);
+        for span_batch in [1usize, 4, 64] {
+            let cfg = EmpaConfig {
+                step: StepMode::ParallelA { threads: 4 },
+                span_batch,
+                ..Default::default()
+            };
+            let r = EmpaProcessor::new(&image, &cfg).run();
+            assert_eq!(r.eax(), want, "span_batch={span_batch}");
+            assert_eq!(r.clocks, lock.clocks, "span_batch={span_batch}");
+            assert_eq!(r.regs.file, lock.regs.file, "span_batch={span_batch}");
+            assert_eq!(r.retired, lock.retired, "span_batch={span_batch}");
+            assert_eq!(r.sv_ops, lock.sv_ops, "span_batch={span_batch}");
+            assert_eq!(r.max_occupied, lock.max_occupied, "span_batch={span_batch}");
+            if span_batch == 1 {
+                assert_eq!(r.batched_clocks, 0, "span_batch=1 never batches");
+            }
+        }
+    }
+
+    #[test]
+    fn two_conventional_chains_batch_multiple_clocks() {
+        // Root runs a straight ALU line to `halt`; a hand-rented second
+        // core spins a conventional loop. No engine, no metas, no IRQs —
+        // the window rule has nothing to bound it except the root's
+        // eventual halt fetch, so multi-clock batches are structural.
+        let src = "    irmovl $1, %ebx
+    irmovl $0, %eax
+    addl %ebx, %eax
+    addl %ebx, %eax
+    addl %ebx, %eax
+    addl %ebx, %eax
+    addl %ebx, %eax
+    addl %ebx, %eax
+    addl %ebx, %eax
+    addl %ebx, %eax
+    halt
+Side:
+    irmovl $2, %ecx
+Spin:
+    addl %ecx, %edx
+    addl %ecx, %edx
+    addl %ecx, %edx
+    jmp Spin
+";
+        let prog = assemble(src).unwrap();
+        let side = prog.symbol("Side").unwrap();
+        let run = |step, span_batch| {
+            let cfg = EmpaConfig { num_cores: 4, step, span_batch, ..Default::default() };
+            let mut p = EmpaProcessor::new(&prog.image, &cfg);
+            p.cores[1].alloc = AllocState::Rented;
+            p.cores[1].reset_for_qt(side);
+            p.rented_mask |= 0b10;
+            let r = p.run_report();
+            let busy: Vec<u64> = p.cores.iter().map(|c| c.busy_clocks).collect();
+            (r, busy)
+        };
+        let (lock, lock_busy) = run(StepMode::Lockstep, 16);
+        assert_eq!(lock.fault, None, "the root halt ends the run");
+        for span_batch in [1usize, 4, 64] {
+            let (r, busy) = run(StepMode::ParallelA { threads: 2 }, span_batch);
+            assert_eq!(r.clocks, lock.clocks, "span_batch={span_batch}");
+            assert_eq!(r.regs.file, lock.regs.file, "span_batch={span_batch}");
+            assert_eq!(r.retired, lock.retired, "span_batch={span_batch}");
+            assert_eq!(busy, lock_busy, "span_batch={span_batch}: integrated occupancy");
+            if span_batch == 1 {
+                assert_eq!(r.batched_clocks, 0);
+            } else {
+                assert!(
+                    r.batched_clocks > 0,
+                    "span_batch={span_batch}: two unbounded conventional chains must batch"
+                );
+                assert!(r.span_batch_hist.iter().sum::<u64>() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn non_ideal_bus_disables_batching_but_stays_identical() {
+        let (src, _) = sumup::sumup_mode_program(&sumup::synth_vector(64, 11));
+        let image = assemble(&src).unwrap().image;
+        let base = crate::mem::MemConfig::single_bus();
+        let lock_cfg =
+            EmpaConfig { mem: base.clone(), step: StepMode::Lockstep, ..Default::default() };
+        let lock = EmpaProcessor::new(&image, &lock_cfg).run();
+        let par_cfg = EmpaConfig {
+            mem: base,
+            step: StepMode::ParallelA { threads: 4 },
+            span_batch: 64,
+            ..Default::default()
+        };
+        let r = EmpaProcessor::new(&image, &par_cfg).run();
+        assert_eq!(r.batched_clocks, 0, "a reservation-table bus cannot replay batched fetches");
+        assert_eq!(r.clocks, lock.clocks);
+        assert_eq!(r.bus, lock.bus, "the bus ledger stays bit-identical");
     }
 
     #[test]

@@ -1,0 +1,450 @@
+//! Shared f32 mass kernels with a *fixed reduction order*.
+//!
+//! Every mass route in the fabric — the inline lane, the accelerator
+//! batcher (`NativeAccel` over pooled tiles), and the scatter/gather
+//! split lane — computes through these functions, so the same
+//! `MassSum`/`MassDot` job returns the **bit-identical** answer no
+//! matter how it was routed. That only works because the reduction
+//! order is pinned, not left to whatever the implementation finds
+//! convenient:
+//!
+//! - A slice is reduced in *blocks* of [`BLOCK`] = 64 elements.
+//! - A block is reduced into 8 lane accumulators: lane `j` left-folds
+//!   elements `8i + j` (a trailing partial chunk of `r < 8` elements
+//!   adds element `8i + j` into lane `j` scalar-wise, same lanes).
+//! - The 8 lanes collapse with the fixed tree
+//!   `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`.
+//! - Block partials are left-folded scalar, first block first.
+//!
+//! The SIMD paths (AVX2: one 8-lane register; SSE2: two 4-lane
+//! registers pinned to lanes 0–3 / 4–7) perform *exactly* the same
+//! per-lane IEEE-754 additions as the portable 8-float loop, so scalar
+//! and SIMD agree bit-for-bit. Dot products multiply then add as two
+//! rounded operations — never FMA, which would contract the rounding
+//! and break the contract (Rust itself never auto-contracts float
+//! math). `scale` is elementwise (`x*s + c`), so SIMD equality is free.
+//!
+//! The block granularity is also the split contract: shard a slice at
+//! any multiple of `BLOCK`, reduce each shard to block partials with
+//! [`sum_block_partials`], place them by *global block index*, and
+//! [`fold_partials`] over the assembled vector equals [`sum`] of the
+//! whole slice, bit-exact — regardless of shard completion order. The
+//! coordinator's `ShardGather` relies on this.
+
+use std::sync::OnceLock;
+
+/// Reduction block size in elements. Shard boundaries must be
+/// multiples of this for split results to compose bit-exactly.
+pub const BLOCK: usize = 64;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Isa {
+    #[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+    Avx2,
+    #[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+    Sse2,
+    Portable,
+}
+
+/// Runtime-detected widest usable ISA, cached after the first probe.
+fn isa() -> Isa {
+    static ISA: OnceLock<Isa> = OnceLock::new();
+    *ISA.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return Isa::Avx2;
+            }
+            if std::arch::is_x86_feature_detected!("sse2") {
+                return Isa::Sse2;
+            }
+            Isa::Portable
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            Isa::Portable
+        }
+    })
+}
+
+/// The fixed lane-collapse tree shared by every implementation.
+#[inline]
+fn collapse(l: [f32; 8]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+// ---------------------------------------------------------------- portable
+
+/// Canonical block sum: 8 lane accumulators, `x.len() <= BLOCK`.
+#[inline]
+fn block_sum_portable(x: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; 8];
+    let mut chunks = x.chunks_exact(8);
+    for ch in &mut chunks {
+        for j in 0..8 {
+            lanes[j] += ch[j];
+        }
+    }
+    for (j, &v) in chunks.remainder().iter().enumerate() {
+        lanes[j] += v;
+    }
+    collapse(lanes)
+}
+
+#[inline]
+fn block_dot_portable(a: &[f32], b: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; 8];
+    let (mut ca, mut cb) = (a.chunks_exact(8), b.chunks_exact(8));
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for j in 0..8 {
+            lanes[j] += xa[j] * xb[j];
+        }
+    }
+    for (j, (&va, &vb)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+        lanes[j] += va * vb;
+    }
+    collapse(lanes)
+}
+
+#[inline]
+fn scale_portable(x: &[f32], s: f32, c: f32, out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = v * s + c;
+    }
+}
+
+// ---------------------------------------------------------------- x86_64
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::collapse;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller verified AVX2 via `is_x86_feature_detected!`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn block_sum_avx2(x: &[f32]) -> f32 {
+        let mut acc = _mm256_setzero_ps();
+        let mut chunks = x.chunks_exact(8);
+        for ch in &mut chunks {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(ch.as_ptr()));
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (j, &v) in chunks.remainder().iter().enumerate() {
+            lanes[j] += v;
+        }
+        collapse(lanes)
+    }
+
+    /// # Safety
+    /// Caller verified AVX2 via `is_x86_feature_detected!`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn block_dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = _mm256_setzero_ps();
+        let (mut ca, mut cb) = (a.chunks_exact(8), b.chunks_exact(8));
+        for (xa, xb) in (&mut ca).zip(&mut cb) {
+            // Multiply then add as two rounded ops — no FMA, matching scalar.
+            let prod = _mm256_mul_ps(_mm256_loadu_ps(xa.as_ptr()), _mm256_loadu_ps(xb.as_ptr()));
+            acc = _mm256_add_ps(acc, prod);
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for (j, (&va, &vb)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+            lanes[j] += va * vb;
+        }
+        collapse(lanes)
+    }
+
+    /// # Safety
+    /// Caller verified AVX2 via `is_x86_feature_detected!`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_avx2(x: &[f32], s: f32, c: f32, out: &mut [f32]) {
+        let (vs, vc) = (_mm256_set1_ps(s), _mm256_set1_ps(c));
+        let n = x.len() & !7;
+        let mut i = 0;
+        while i < n {
+            let v = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(_mm256_mul_ps(v, vs), vc));
+            i += 8;
+        }
+        for j in n..x.len() {
+            out[j] = x[j] * s + c;
+        }
+    }
+
+    /// # Safety
+    /// Caller verified SSE2 via `is_x86_feature_detected!`.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn block_sum_sse2(x: &[f32]) -> f32 {
+        // Two 4-lane registers pinned to lanes 0–3 and 4–7.
+        let (mut lo, mut hi) = (_mm_setzero_ps(), _mm_setzero_ps());
+        let mut chunks = x.chunks_exact(8);
+        for ch in &mut chunks {
+            lo = _mm_add_ps(lo, _mm_loadu_ps(ch.as_ptr()));
+            hi = _mm_add_ps(hi, _mm_loadu_ps(ch.as_ptr().add(4)));
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm_storeu_ps(lanes.as_mut_ptr(), lo);
+        _mm_storeu_ps(lanes.as_mut_ptr().add(4), hi);
+        for (j, &v) in chunks.remainder().iter().enumerate() {
+            lanes[j] += v;
+        }
+        collapse(lanes)
+    }
+
+    /// # Safety
+    /// Caller verified SSE2 via `is_x86_feature_detected!`.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn block_dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+        let (mut lo, mut hi) = (_mm_setzero_ps(), _mm_setzero_ps());
+        let (mut ca, mut cb) = (a.chunks_exact(8), b.chunks_exact(8));
+        for (xa, xb) in (&mut ca).zip(&mut cb) {
+            lo = _mm_add_ps(lo, _mm_mul_ps(_mm_loadu_ps(xa.as_ptr()), _mm_loadu_ps(xb.as_ptr())));
+            hi = _mm_add_ps(
+                hi,
+                _mm_mul_ps(_mm_loadu_ps(xa.as_ptr().add(4)), _mm_loadu_ps(xb.as_ptr().add(4))),
+            );
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm_storeu_ps(lanes.as_mut_ptr(), lo);
+        _mm_storeu_ps(lanes.as_mut_ptr().add(4), hi);
+        for (j, (&va, &vb)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+            lanes[j] += va * vb;
+        }
+        collapse(lanes)
+    }
+
+    /// # Safety
+    /// Caller verified SSE2 via `is_x86_feature_detected!`.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn scale_sse2(x: &[f32], s: f32, c: f32, out: &mut [f32]) {
+        let (vs, vc) = (_mm_set1_ps(s), _mm_set1_ps(c));
+        let n = x.len() & !3;
+        let mut i = 0;
+        while i < n {
+            let v = _mm_loadu_ps(x.as_ptr().add(i));
+            _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_add_ps(_mm_mul_ps(v, vs), vc));
+            i += 4;
+        }
+        for j in n..x.len() {
+            out[j] = x[j] * s + c;
+        }
+    }
+}
+
+// ---------------------------------------------------------------- dispatch
+
+/// One block (`x.len() <= BLOCK`) reduced in the canonical lane order.
+#[inline]
+fn block_sum(x: &[f32]) -> f32 {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `isa()` returned this variant only after runtime detection.
+        Isa::Avx2 => unsafe { x86::block_sum_avx2(x) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Sse2 => unsafe { x86::block_sum_sse2(x) },
+        _ => block_sum_portable(x),
+    }
+}
+
+#[inline]
+fn block_dot(a: &[f32], b: &[f32]) -> f32 {
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `isa()` returned this variant only after runtime detection.
+        Isa::Avx2 => unsafe { x86::block_dot_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Sse2 => unsafe { x86::block_dot_sse2(a, b) },
+        _ => block_dot_portable(a, b),
+    }
+}
+
+// ---------------------------------------------------------------- public API
+
+/// Deterministic slice sum: left fold of the canonical block partials.
+pub fn sum(x: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for b in x.chunks(BLOCK) {
+        acc += block_sum(b);
+    }
+    acc
+}
+
+/// Deterministic dot product over `min(a.len(), b.len())` elements.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut acc = 0.0f32;
+    for (ba, bb) in a[..n].chunks(BLOCK).zip(b[..n].chunks(BLOCK)) {
+        acc += block_dot(ba, bb);
+    }
+    acc
+}
+
+/// Elementwise `x*s + c`. Order-insensitive, so SIMD equality is exact.
+pub fn scale(x: &[f32], s: f32, c: f32) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    match isa() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `isa()` returned this variant only after runtime detection.
+        Isa::Avx2 => unsafe { x86::scale_avx2(x, s, c, &mut out) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above.
+        Isa::Sse2 => unsafe { x86::scale_sse2(x, s, c, &mut out) },
+        _ => scale_portable(x, s, c, &mut out),
+    }
+    out
+}
+
+/// Append one canonical partial per [`BLOCK`]-sized chunk of `x`.
+///
+/// `fold_partials` over partials assembled by global block index equals
+/// `sum` of the concatenation, provided every producer sliced at
+/// `BLOCK` multiples.
+pub fn sum_block_partials(x: &[f32], out: &mut Vec<f32>) {
+    out.reserve(x.len().div_ceil(BLOCK));
+    for b in x.chunks(BLOCK) {
+        out.push(block_sum(b));
+    }
+}
+
+/// Dot-product analogue of [`sum_block_partials`].
+pub fn dot_block_partials(a: &[f32], b: &[f32], out: &mut Vec<f32>) {
+    let n = a.len().min(b.len());
+    out.reserve(n.div_ceil(BLOCK));
+    for (ba, bb) in a[..n].chunks(BLOCK).zip(b[..n].chunks(BLOCK)) {
+        out.push(block_dot(ba, bb));
+    }
+}
+
+/// The canonical scalar left fold over block partials.
+pub fn fold_partials(partials: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for &p in partials {
+        acc += p;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic value stream with mixed magnitudes so reduction
+    /// order actually matters in f32.
+    fn noisy(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let mant = ((s >> 33) & 0xffff) as f32;
+                let exp = ((s >> 49) % 29) as i32 - 14;
+                mant * 2f32.powi(exp)
+            })
+            .collect()
+    }
+
+    /// Pure-portable whole-slice sum: the executable statement of the
+    /// reduction-order contract the SIMD paths must match bit-for-bit.
+    fn reference_sum(x: &[f32]) -> f32 {
+        x.chunks(BLOCK).fold(0.0f32, |a, b| a + block_sum_portable(b))
+    }
+
+    fn reference_dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        a[..n]
+            .chunks(BLOCK)
+            .zip(b[..n].chunks(BLOCK))
+            .fold(0.0f32, |acc, (ba, bb)| acc + block_dot_portable(ba, bb))
+    }
+
+    #[test]
+    fn dispatched_sum_is_bit_identical_to_portable() {
+        for n in [0, 1, 7, 8, 9, 63, 64, 65, 127, 128, 1000, 4096, 4099] {
+            let x = noisy(n, n as u64 + 3);
+            assert_eq!(
+                sum(&x).to_bits(),
+                reference_sum(&x).to_bits(),
+                "n={n} isa={:?}",
+                isa()
+            );
+        }
+    }
+
+    #[test]
+    fn dispatched_dot_is_bit_identical_to_portable() {
+        for n in [0, 1, 9, 64, 65, 513, 4096] {
+            let a = noisy(n, 11);
+            let b = noisy(n, 77);
+            assert_eq!(dot(&a, &b).to_bits(), reference_dot(&a, &b).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dispatched_scale_is_bit_identical_to_portable() {
+        for n in [0, 1, 5, 64, 131] {
+            let x = noisy(n, 5);
+            let got = scale(&x, 1.25, -3.5);
+            let want: Vec<f32> = x.iter().map(|v| v * 1.25 + -3.5).collect();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_partials_compose_bit_exactly_at_any_block_split() {
+        let x = noisy(4096 + 17, 99);
+        let whole = sum(&x);
+        for cut_blocks in [1, 2, 3, 7, 32, 64] {
+            let cut = (cut_blocks * BLOCK).min(x.len());
+            let mut parts = Vec::new();
+            sum_block_partials(&x[..cut], &mut parts);
+            // Second producer starts at a BLOCK multiple: partials line
+            // up with the whole-slice block grid.
+            sum_block_partials(&x[cut..], &mut parts);
+            assert_eq!(
+                fold_partials(&parts).to_bits(),
+                whole.to_bits(),
+                "split at {cut_blocks} blocks"
+            );
+        }
+    }
+
+    #[test]
+    fn non_block_splits_would_not_compose() {
+        // Sanity check that the contract is load-bearing: splitting off
+        // a non-BLOCK prefix genuinely changes the reduction tree for
+        // this magnitude-diverse input (if it didn't, the alignment
+        // rule would be untestable dead weight).
+        let x = noisy(1000, 123);
+        let mut parts = Vec::new();
+        sum_block_partials(&x[..97], &mut parts);
+        sum_block_partials(&x[97..], &mut parts);
+        assert_ne!(fold_partials(&parts).to_bits(), sum(&x).to_bits());
+    }
+
+    #[test]
+    fn dot_partials_compose_like_sum_partials() {
+        let a = noisy(3000, 1);
+        let b = noisy(3000, 2);
+        let whole = dot(&a, &b);
+        let cut = 8 * BLOCK;
+        let mut parts = Vec::new();
+        dot_block_partials(&a[..cut], &b[..cut], &mut parts);
+        dot_block_partials(&a[cut..], &b[cut..], &mut parts);
+        assert_eq!(fold_partials(&parts).to_bits(), whole.to_bits());
+    }
+
+    #[test]
+    fn exact_integer_sums_match_naive_iteration() {
+        // Integer-valued f32 sums below 2^24 are exact in any order, so
+        // the canonical order must agree with a plain fold.
+        let x: Vec<f32> = (0..1027).map(|i| (i % 97) as f32).collect();
+        let naive: f32 = x.iter().sum();
+        assert_eq!(sum(&x).to_bits(), naive.to_bits());
+    }
+}

@@ -32,6 +32,7 @@ pub mod coordinator;
 pub mod emu;
 pub mod empa;
 pub mod isa;
+pub mod kernels;
 pub mod mem;
 pub mod metrics;
 pub mod os;

@@ -85,6 +85,15 @@ impl MemoryBus {
         delay
     }
 
+    /// True for ideal (contention-free) memory: no reservation table, so
+    /// `access` is pure counting and order-independent. Multi-clock span
+    /// batching requires this — batched fetches replay their accesses at
+    /// commit time in an order that is only guaranteed to match lockstep
+    /// when the bus carries no reservation state.
+    pub fn is_ideal(&self) -> bool {
+        self.ports.is_none()
+    }
+
     pub fn stats(&self) -> BusStats {
         self.stats
     }

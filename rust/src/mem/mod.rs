@@ -148,6 +148,17 @@ impl<'a> MemView<'a> {
             Err(AddrError(addr))
         }
     }
+
+    /// Fetch window at `pc`, clamped to the end of memory — the view-side
+    /// mirror of [`Memory::fetch_window`], used by multi-clock span
+    /// batching to decode a core's *next* instruction on a worker thread.
+    /// The commit loop re-checks the 6-byte window against every store
+    /// committed in the batch, so a decode from pre-span bytes can never
+    /// survive self-modifying code.
+    pub fn fetch_window(&self, pc: u32) -> &'a [u8] {
+        let start = (pc as usize).min(self.bytes.len());
+        &self.bytes[start..]
+    }
 }
 
 impl Memory {

@@ -30,9 +30,10 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Run `image` under `step` and fingerprint the architectural outcome.
-fn fingerprint(image: &[u8], step: StepMode) -> u64 {
-    let cfg = EmpaConfig { step, trace: true, ..Default::default() };
+/// Run `image` under `step` with the given span-batch cap and
+/// fingerprint the architectural outcome.
+fn fingerprint_batched(image: &[u8], step: StepMode, span_batch: usize) -> u64 {
+    let cfg = EmpaConfig { step, span_batch, trace: true, ..Default::default() };
     let mut p = EmpaProcessor::new(image, &cfg);
     let r = p.run_report();
     let mut s = String::new();
@@ -59,6 +60,11 @@ fn fingerprint(image: &[u8], step: StepMode) -> u64 {
     fnv1a(s.as_bytes())
 }
 
+/// Run `image` under `step` at the default span-batch cap.
+fn fingerprint(image: &[u8], step: StepMode) -> u64 {
+    fingerprint_batched(image, step, EmpaConfig::default().span_batch)
+}
+
 #[test]
 fn fingerprints_are_mode_invariant_and_repeatable() {
     for family in ALL_FAMILIES {
@@ -80,6 +86,33 @@ fn fingerprints_are_mode_invariant_and_repeatable() {
                         fingerprint(&image, step),
                         fingerprint(&image, step),
                         "{ctx} [{step:?}]: fingerprint not repeatable"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Multi-clock batching must be invisible to the fingerprint: every
+/// span-batch cap yields the same FNV-1a value as the lockstep run, at
+/// every thread count, on every workload family.
+#[test]
+fn fingerprints_are_span_batch_invariant() {
+    for family in ALL_FAMILIES {
+        let fam = family_impl(family);
+        for &mode in fam.modes() {
+            let params = synth_params(family, 24, 0xBA7C);
+            let src = direct_source(mode, &params).unwrap();
+            let image = assemble(&src).unwrap().image;
+            let ctx = format!("{} {mode:?}", family.name());
+            let base = fingerprint_batched(&image, StepMode::Lockstep, 1);
+            for span_batch in [1usize, 4, 64] {
+                for threads in [1usize, 2, 4] {
+                    let step = StepMode::ParallelA { threads };
+                    assert_eq!(
+                        base,
+                        fingerprint_batched(&image, step, span_batch),
+                        "{ctx} [t={threads} span_batch={span_batch}]: fingerprint drifted"
                     );
                 }
             }

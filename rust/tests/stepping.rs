@@ -228,9 +228,9 @@ fn irq_program() -> (empa::isa::Program, u32, u32) {
 /// Drive the payload with interrupts raised at exact clocks, using
 /// [`EmpaProcessor::set_external_wake`] so the event-horizon scheduler
 /// lands on each raise clock instead of skipping it.
-fn drive_irqs(step: StepMode, raise_at: &[u64]) -> (Vec<(u64, u64)>, u32, u64) {
+fn drive_irqs(step: StepMode, raise_at: &[u64], span_batch: usize) -> (Vec<(u64, u64)>, u32, u64) {
     let (prog, handler, mailbox) = irq_program();
-    let cfg = EmpaConfig { step, ..Default::default() };
+    let cfg = EmpaConfig { step, span_batch, ..Default::default() };
     let mut p = EmpaProcessor::new(&prog.image, &cfg);
     let irq_core = p.reserve_irq_core(handler).expect("reserve");
     p.cores[irq_core].regs.file[Reg::Ebp as usize] = mailbox as i32;
@@ -257,12 +257,13 @@ fn drive_irqs(step: StepMode, raise_at: &[u64]) -> (Vec<(u64, u64)>, u32, u64) {
 
 #[test]
 fn irq_servicing_steps_identically() {
+    let span_batch = EmpaConfig::default().span_batch;
     for raises in [&[5u64, 50][..], &[5, 35, 90, 130][..], &[40, 80, 120][..]] {
-        let (log_l, mbox_l, halt_l) = drive_irqs(StepMode::Lockstep, raises);
+        let (log_l, mbox_l, halt_l) = drive_irqs(StepMode::Lockstep, raises, span_batch);
         assert_eq!(log_l.len(), raises.len(), "{raises:?}: every raise serviced");
         assert_eq!(mbox_l, raises.len() as u32, "{raises:?}: mailbox counted every service");
         for step in CHALLENGERS {
-            let (log_e, mbox_e, halt_e) = drive_irqs(step, raises);
+            let (log_e, mbox_e, halt_e) = drive_irqs(step, raises, span_batch);
             assert_eq!(log_l, log_e, "{raises:?} [{step:?}]: per-interrupt (raised, done) clocks");
             assert_eq!(mbox_l, mbox_e, "{raises:?} [{step:?}]: handler side effects");
             assert_eq!(halt_l, halt_e, "{raises:?} [{step:?}]: payload completion clock");
@@ -358,12 +359,108 @@ fn sv_rent_raised_mid_span_steps_identically() {
 #[test]
 fn irq_raise_inside_a_parallel_span_steps_identically() {
     let raises = &[30u64, 61, 95][..];
-    let (log_l, mbox_l, halt_l) = drive_irqs(StepMode::Lockstep, raises);
+    let span_batch = EmpaConfig::default().span_batch;
+    let (log_l, mbox_l, halt_l) = drive_irqs(StepMode::Lockstep, raises, span_batch);
     for threads in [2usize, 4] {
-        let (log_p, mbox_p, halt_p) = drive_irqs(StepMode::ParallelA { threads }, raises);
+        let (log_p, mbox_p, halt_p) =
+            drive_irqs(StepMode::ParallelA { threads }, raises, span_batch);
         assert_eq!(log_l, log_p, "t={threads}: interrupt clocks");
         assert_eq!(mbox_l, mbox_p, "t={threads}: handler side effects");
         assert_eq!(halt_l, halt_p, "t={threads}: payload completion clock");
+    }
+}
+
+// ----------------------------------------------------------------------
+// multi-clock span batching: the sweep and its truncation scenarios
+// ----------------------------------------------------------------------
+
+/// The span-batch sweep: 1 (batching disabled), 4 (windows truncate on
+/// the cap constantly) and 64 (windows end on sync points long before
+/// the cap) must all replay lockstep bit-for-bit on every workload
+/// shape, and span_batch=1 must never record a batched clock.
+#[test]
+fn span_batch_sweep_steps_identically() {
+    for span_batch in [1usize, 4, 64] {
+        let base = EmpaConfig { span_batch, ..Default::default() };
+        for mode in [Mode::No, Mode::For, Mode::Sumup] {
+            for n in [0usize, 1, 17, 48] {
+                let (src, _) = sumup::program(mode, &sumup::synth_vector(n, 21));
+                let image = assemble(&src).unwrap().image;
+                let ctx = format!("span_batch={span_batch} {mode:?} N={n}");
+                assert_identical(&ctx, &image, &base);
+                for threads in [2usize, 4] {
+                    let (r, _, _) = run_mode(&image, &base, StepMode::ParallelA { threads });
+                    if span_batch == 1 {
+                        assert_eq!(r.batched_clocks, 0, "{ctx} t={threads}: batching disabled");
+                        assert_eq!(r.span_batch_hist, [0u64; 6], "{ctx} t={threads}: no batches");
+                    }
+                    // Every batch lands in exactly one histogram bucket,
+                    // and batches are a subset of the recorded spans.
+                    let batches: u64 = r.span_batch_hist.iter().sum();
+                    assert!(batches <= r.parallel_spans, "{ctx} t={threads}: batch accounting");
+                    assert!(r.batched_clocks >= batches, "{ctx} t={threads}: >=1 clock per batch");
+                }
+            }
+        }
+    }
+}
+
+/// Meta retirements (`qterm`) are uniform stoppers: a child chain ends
+/// its batch segment at the retirement fetch and the pending apply is a
+/// window bound, so starved pools that re-rent mid-run — the densest
+/// mix of engine horizons and retirements — must not bend under any cap.
+#[test]
+fn meta_retirement_truncation_steps_identically() {
+    for span_batch in [4usize, 64] {
+        for cores in [3usize, 9] {
+            let (src, _) = sumup::sumup_mode_program(&sumup::synth_vector(40, 13));
+            let image = assemble(&src).unwrap().image;
+            let base = EmpaConfig { num_cores: cores, span_batch, ..Default::default() };
+            let ctx = format!("sumup rent cores={cores} span_batch={span_batch}");
+            let (lock, _) = assert_identical(&ctx, &image, &base);
+            assert!(lock.sv_ops > 0, "{ctx}: the engine actually rented");
+        }
+    }
+}
+
+/// FOR-mode stores under a batch cap: conflict detection replays the
+/// serial memory image exactly, so the committed output array must be
+/// byte-identical at every cap.
+#[test]
+fn batched_stores_commit_the_serial_image() {
+    let x: Vec<i32> = (0..96).map(|i| i * 3 - 7).collect();
+    let (src, want) = scale::for_mode(&x, 5);
+    let prog = assemble(&src).unwrap();
+    let y_addr = prog.symbol("arrayY").unwrap();
+    for span_batch in [1usize, 4, 64] {
+        let base = EmpaConfig { span_batch, ..Default::default() };
+        assert_identical(&format!("scale FOR span_batch={span_batch}"), &prog.image, &base);
+        let cfg = EmpaConfig { step: StepMode::ParallelA { threads: 4 }, ..base };
+        let mut p = EmpaProcessor::new(&prog.image, &cfg);
+        let r = p.run_report();
+        assert_eq!(r.fault, None, "span_batch={span_batch}");
+        let got: Vec<i32> =
+            (0..x.len()).map(|i| p.mem.read_u32(y_addr + 4 * i as u32).unwrap() as i32).collect();
+        assert_eq!(got, want, "span_batch={span_batch}: output array");
+    }
+}
+
+/// An interrupt raised on a clock a batch would otherwise swallow: the
+/// external wake is a hard window bound, so the handler's (raised, done)
+/// clocks and side effects must not shift at any cap.
+#[test]
+fn irq_raised_on_a_batched_clock_steps_identically() {
+    let raises = &[30u64, 61, 95][..];
+    let (log_l, mbox_l, halt_l) = drive_irqs(StepMode::Lockstep, raises, 1);
+    for span_batch in [1usize, 4, 64] {
+        for threads in [2usize, 4] {
+            let (log_p, mbox_p, halt_p) =
+                drive_irqs(StepMode::ParallelA { threads }, raises, span_batch);
+            let ctx = format!("t={threads} span_batch={span_batch}");
+            assert_eq!(log_l, log_p, "{ctx}: interrupt clocks");
+            assert_eq!(mbox_l, mbox_p, "{ctx}: handler side effects");
+            assert_eq!(halt_l, halt_p, "{ctx}: payload completion clock");
+        }
     }
 }
 
