@@ -17,6 +17,12 @@
 //! more than the payload it fans out — cycle-identity is the contract
 //! here; wall speedup is reported, not asserted.
 //!
+//! The E16 arm reruns the sweep under contended memories (1 and 2
+//! ports); those rows carry the port count in their key (`@pPtT[bB]`)
+//! and additionally assert the replayed `BusStats` ledger bit-identical
+//! to that memory's own lockstep run. Ideal-memory rows report
+//! `ports=0` in the JSON.
+//!
 //! `--compare-baseline FILE [--tolerance PCT]` re-reads a saved
 //! baseline and exits non-zero if any current sweep row's
 //! clocks-per-second falls more than PCT percent (default 20) below
@@ -31,6 +37,7 @@ use empa::api::RequestKind;
 use empa::coordinator::{Fabric, FabricConfig};
 use empa::empa::{EmpaConfig, EmpaProcessor, RunReport, StepMode};
 use empa::isa::assemble;
+use empa::mem::MemConfig;
 use empa::util::json::{num, JsonWriter};
 use empa::workload::family::{direct_source, synth_params, Family};
 use empa::workload::sumup::{self, Mode};
@@ -105,6 +112,8 @@ struct SweepRow {
     key: String,
     label: String,
     n: usize,
+    /// Memory port count for this row; 0 = ideal (contention-free).
+    ports: usize,
     threads: usize,
     span_batch: usize,
     clocks: u64,
@@ -114,6 +123,9 @@ struct SweepRow {
     batched_clocks: u64,
     batched_share: f64,
     clocks_per_batch: f64,
+    stall_cycles: u64,
+    batched_ported_clocks: u64,
+    bus_replay_truncations: u64,
     clocks_per_s: f64,
     vs_one: Option<f64>,
 }
@@ -290,6 +302,7 @@ fn main() {
                     key,
                     label: label.to_string(),
                     n,
+                    ports: 0,
                     threads: t,
                     span_batch: b,
                     clocks: r.clocks,
@@ -299,9 +312,98 @@ fn main() {
                     batched_clocks: r.batched_clocks,
                     batched_share: r.batched_share(),
                     clocks_per_batch,
+                    stall_cycles: r.bus.stall_cycles,
+                    batched_ported_clocks: r.batched_ported_clocks,
+                    bus_replay_truncations: r.bus_replay_truncations,
                     clocks_per_s: rate,
                     vs_one,
                 });
+            }
+        }
+    }
+
+    section("E16: span batching under contended buses (cycle- and bus-identical)");
+    println!(
+        "{:>14} {:>6} {:>6} {:>8} {:>6} {:>9} {:>9} {:>9} {:>6} {:>12} {:>8}",
+        "workload", "N", "ports", "threads", "batch", "clocks", "stalls", "batched%", "trunc", "clk/s", "vs t=1"
+    );
+    for (label, n, image, iters) in [("SUMUP", 4096usize, sumup_image(Mode::Sumup, 4096), 5u32)] {
+        for ports in [1usize, 2] {
+            let mem = if ports == 1 { MemConfig::single_bus() } else { MemConfig::buses(ports) };
+            let lock_cfg = EmpaConfig {
+                step: StepMode::Lockstep,
+                mem: mem.clone(),
+                ..Default::default()
+            };
+            let (lock, _) = measure_cfg(&image, &lock_cfg, 1);
+            let mut one_rate: Option<f64> = None;
+            for &t in &threads {
+                let caps: &[usize] = if t == 1 { &span_batches[..1] } else { &span_batches };
+                for &b in caps {
+                    let cfg = EmpaConfig {
+                        step: StepMode::ParallelA { threads: t },
+                        span_batch: b,
+                        mem: mem.clone(),
+                        ..Default::default()
+                    };
+                    let (r, rate) = measure_cfg(&image, &cfg, iters);
+                    // identity before speed: cycles, registers, retirement,
+                    // AND the bus ledger — the replayed charges must land
+                    // bit-identical to this memory's own lockstep run
+                    assert_eq!(lock.clocks, r.clocks, "{label} p={ports} t={t} b={b}: cycle-identical");
+                    assert_eq!(lock.regs.file, r.regs.file, "{label} p={ports} t={t} b={b}: architectural");
+                    assert_eq!(lock.retired, r.retired, "{label} p={ports} t={t} b={b}");
+                    assert_eq!(lock.bus, r.bus, "{label} p={ports} t={t} b={b}: bus ledger identical");
+                    assert_eq!(
+                        r.batched_ported_clocks, r.batched_clocks,
+                        "{label} p={ports} t={t} b={b}: every batched clock here is ported"
+                    );
+                    if t == 1 {
+                        one_rate = Some(rate);
+                    }
+                    let batches: u64 = r.span_batch_hist.iter().sum();
+                    let clocks_per_batch = r.batched_clocks as f64 / batches.max(1) as f64;
+                    let vs_one = one_rate.map(|base| rate / base.max(1e-12));
+                    let key = if b == 1 {
+                        format!("{label}/{n}@p{ports}t{t}")
+                    } else {
+                        format!("{label}/{n}@p{ports}t{t}b{b}")
+                    };
+                    println!(
+                        "{:>14} {:>6} {:>6} {:>8} {:>6} {:>9} {:>9} {:>8.1}% {:>6} {:>12.3e} {:>8}",
+                        label,
+                        n,
+                        ports,
+                        t,
+                        b,
+                        r.clocks,
+                        r.bus.stall_cycles,
+                        100.0 * r.batched_share(),
+                        r.bus_replay_truncations,
+                        rate,
+                        vs_one.map_or("-".to_string(), |v| format!("{v:.2}x")),
+                    );
+                    sweep.push(SweepRow {
+                        key,
+                        label: label.to_string(),
+                        n,
+                        ports,
+                        threads: t,
+                        span_batch: b,
+                        clocks: r.clocks,
+                        spans: r.parallel_spans,
+                        cores_per_span: r.cores_per_span(),
+                        conflicts: r.span_conflicts,
+                        batched_clocks: r.batched_clocks,
+                        batched_share: r.batched_share(),
+                        clocks_per_batch,
+                        stall_cycles: r.bus.stall_cycles,
+                        batched_ported_clocks: r.batched_ported_clocks,
+                        bus_replay_truncations: r.bus_replay_truncations,
+                        clocks_per_s: rate,
+                        vs_one,
+                    });
+                }
             }
         }
     }
@@ -358,6 +460,7 @@ fn main() {
                     ("key", format!("\"{}\"", r.key)),
                     ("workload", format!("\"{}\"", r.label)),
                     ("n", r.n.to_string()),
+                    ("ports", r.ports.to_string()),
                     ("host_threads", r.threads.to_string()),
                     ("span_batch", r.span_batch.to_string()),
                     ("clocks", r.clocks.to_string()),
@@ -367,6 +470,9 @@ fn main() {
                     ("batched_clocks", r.batched_clocks.to_string()),
                     ("batched_share", num(r.batched_share)),
                     ("clocks_per_batch", num(r.clocks_per_batch)),
+                    ("stall_cycles", r.stall_cycles.to_string()),
+                    ("batched_ported_clocks", r.batched_ported_clocks.to_string()),
+                    ("bus_replay_truncations", r.bus_replay_truncations.to_string()),
                     ("clocks_per_sec", num(r.clocks_per_s)),
                     ("vs_one_thread", r.vs_one.map_or("null".to_string(), num)),
                 ]);

@@ -269,6 +269,13 @@ pub struct PipelineStats {
     /// Clocks advanced through multi-clock span batches across served
     /// jobs (subset of `sim_clocks_skipped`).
     pub batched_clocks: Cell<u64>,
+    /// Batched clocks advanced under a ported (non-ideal) bus — windows
+    /// whose fetch charges were replayed in lockstep grant order.
+    pub batched_ported_clocks: Cell<u64>,
+    /// Batched windows truncated by a stalled replayed bus charge.
+    pub bus_replay_truncations: Cell<u64>,
+    /// Batched clocks advanced while a mass engine was mid-flight.
+    pub engine_batched_clocks: Cell<u64>,
 }
 
 /// One simulated EMPA processor slot, built as a **compile-once
@@ -428,6 +435,21 @@ impl SimBackend {
         self.count_by(&self.stats.parallel_cores, r.parallel_cores, |m| &m.parallel_cores);
         self.count_by(&self.stats.span_conflicts, r.span_conflicts, |m| &m.span_conflicts);
         self.count_by(&self.stats.batched_clocks, r.batched_clocks, |m| &m.batched_clocks);
+        self.count_by(
+            &self.stats.batched_ported_clocks,
+            r.batched_ported_clocks,
+            |m| &m.batched_ported_clocks,
+        );
+        self.count_by(
+            &self.stats.bus_replay_truncations,
+            r.bus_replay_truncations,
+            |m| &m.bus_replay_truncations,
+        );
+        self.count_by(
+            &self.stats.engine_batched_clocks,
+            r.engine_batched_clocks,
+            |m| &m.engine_batched_clocks,
+        );
         if let Some(f) = r.fault {
             return Err(FabricError::GuestFault(f));
         }

@@ -128,6 +128,14 @@ pub struct FabricMetrics {
     /// Simulated clocks advanced through multi-clock span batches
     /// (subset of `sim_clocks_skipped`), summed across program jobs.
     pub batched_clocks: AtomicU64,
+    /// Batched clocks advanced under a ported (non-ideal) bus — windows
+    /// whose fetch charges were replayed in lockstep grant order rather
+    /// than charged serially.
+    pub batched_ported_clocks: AtomicU64,
+    /// Batched windows truncated by a stalled replayed bus charge.
+    pub bus_replay_truncations: AtomicU64,
+    /// Batched clocks advanced while a mass engine was mid-flight.
+    pub engine_batched_clocks: AtomicU64,
     /// Batch-length histogram in clocks: buckets 1–2, 3, 4, 5–8, 9–16,
     /// 17+; one entry per batched span.
     pub span_batch_hist: [AtomicU64; 6],
@@ -317,7 +325,8 @@ impl FabricMetrics {
             out.push_str(&format!(
                 "\n  host parallel: threads={} spans={} cores={} (mean {:.1}/span) conflicts={} \
                  hist [2]={} [3]={} [4]={} [5-8]={} [9-16]={} [17+]={} \
-                 batched_clocks={} batch_hist [1-2]={} [3]={} [4]={} [5-8]={} [9-16]={} [17+]={}",
+                 batched_clocks={} batch_hist [1-2]={} [3]={} [4]={} [5-8]={} [9-16]={} [17+]={} \
+                 batched_ported={} replay_truncs={} engine_batched={}",
                 g(&self.host_threads),
                 g(&self.parallel_spans),
                 g(&self.parallel_cores),
@@ -336,6 +345,9 @@ impl FabricMetrics {
                 g(&b[3]),
                 g(&b[4]),
                 g(&b[5]),
+                g(&self.batched_ported_clocks),
+                g(&self.bus_replay_truncations),
+                g(&self.engine_batched_clocks),
             ));
         }
         {
@@ -495,11 +507,15 @@ mod tests {
         assert!(r.contains("batched_clocks=0"), "{r}");
         m.batched_clocks.store(40, Ordering::Relaxed);
         m.span_batch_hist[4].store(3, Ordering::Relaxed);
+        m.batched_ported_clocks.store(25, Ordering::Relaxed);
+        m.bus_replay_truncations.store(2, Ordering::Relaxed);
+        m.engine_batched_clocks.store(8, Ordering::Relaxed);
         let r = m.render();
         assert!(
             r.contains("batched_clocks=40 batch_hist [1-2]=0 [3]=0 [4]=0 [5-8]=0 [9-16]=3 [17+]=0"),
             "{r}"
         );
+        assert!(r.contains("batched_ported=25 replay_truncs=2 engine_batched=8"), "{r}");
         // a parallel pool that never spanned still shows its thread count
         let m = FabricMetrics::default();
         m.host_threads.store(2, Ordering::Relaxed);

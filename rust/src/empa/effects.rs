@@ -184,10 +184,16 @@ pub(crate) struct FetchRecord {
     /// commit against every store in the batch (self-modifying code).
     pub pc: u32,
     pub insn: Insn,
-    /// Retirement clock of the fetched instruction (`t + insn_cost`; the
-    /// batch runs only on an ideal bus, so the data-access delay is 0).
+    /// Retirement clock of the fetched instruction, speculated as
+    /// `t + insn_cost` — i.e. assuming a contention-free bus. On a
+    /// ported memory the commit loop's grant-order replay corrects this:
+    /// a stalled charge adds its queueing delay to the installed
+    /// `apply_at` and truncates the window after that clock.
     pub apply_at: u64,
-    /// Memory instruction: the commit loop replays `bus.access(t)` so
+    /// Memory instruction: the chain records the bus-access *intent*
+    /// (never touching the shared reservation table) and the commit loop
+    /// replays the charge via `MemoryBus::replay_access(t)` in lockstep's
+    /// phase-D grant order — descending core index within a clock — so
     /// [`crate::mem::BusStats`] stay bit-identical to lockstep.
     pub bus_access: bool,
 }

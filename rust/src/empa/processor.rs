@@ -219,6 +219,20 @@ pub struct RunReport {
     /// `span_batch == 1` or in the serial modes. Host-perf observability
     /// only — modeled clocks are unaffected.
     pub batched_clocks: u64,
+    /// Subset of `batched_clocks` advanced while the memory bus carried
+    /// a port reservation table: the windows whose fetch charges were
+    /// replayed in lockstep grant order instead of charged serially.
+    /// 0 on ideal memory.
+    pub batched_ported_clocks: u64,
+    /// Batched windows truncated because a replayed bus charge came back
+    /// stalled (the queueing delay shifted a chain's apply time, so the
+    /// speculation beyond that clock was discarded and re-planned).
+    pub bus_replay_truncations: u64,
+    /// Subset of `batched_clocks` advanced while a mass engine was
+    /// mid-flight (engine-inclusive windows: non-final `%pp` arrivals
+    /// commit in-window; launches/readouts/finalises still bound the
+    /// window through the engine horizon). 0 without mass engines.
+    pub engine_batched_clocks: u64,
     /// Batch-length histogram in clocks, same buckets as `span_hist`
     /// (1–2, 3, 4, 5–8, 9–16, 17+); one entry per batched span.
     pub span_batch_hist: [u64; 6],
@@ -323,6 +337,12 @@ pub struct EmpaProcessor {
     span_batch: usize,
     /// Clocks advanced through multi-clock batches.
     batched_clocks: u64,
+    /// Batched clocks advanced under a ported (non-ideal) bus.
+    batched_ported_clocks: u64,
+    /// Windows truncated by a stalled replayed bus charge.
+    bus_replay_truncations: u64,
+    /// Batched clocks advanced while a mass engine was mid-flight.
+    engine_batched_clocks: u64,
     /// Batch-length histogram in clocks (same buckets as `span_hist`).
     span_batch_hist: [u64; 6],
     /// Reused phase-A pending buffer (hot-loop allocation avoidance).
@@ -392,6 +412,9 @@ impl EmpaProcessor {
             span_hist: [0; 6],
             span_batch: cfg.span_batch,
             batched_clocks: 0,
+            batched_ported_clocks: 0,
+            bus_replay_truncations: 0,
+            engine_batched_clocks: 0,
             span_batch_hist: [0; 6],
             span_buf: Vec::new(),
             span_writes: Vec::new(),
@@ -458,6 +481,9 @@ impl EmpaProcessor {
             span_conflicts: self.span_conflicts,
             span_hist: self.span_hist,
             batched_clocks: self.batched_clocks,
+            batched_ported_clocks: self.batched_ported_clocks,
+            bus_replay_truncations: self.bus_replay_truncations,
+            engine_batched_clocks: self.engine_batched_clocks,
             span_batch_hist: self.span_batch_hist,
             fault: self.fault.clone(),
             trace,
@@ -527,6 +553,9 @@ impl EmpaProcessor {
         self.span_conflicts = 0;
         self.span_hist = [0; 6];
         self.batched_clocks = 0;
+        self.batched_ported_clocks = 0;
+        self.bus_replay_truncations = 0;
+        self.engine_batched_clocks = 0;
         self.span_batch_hist = [0; 6];
         self.external_wake_at = None;
         self.trace.push(0, 0, Event::Rent { parent: None });
@@ -975,11 +1004,30 @@ impl EmpaProcessor {
     /// same clock from a lower core index) and a fetch window `[pc,
     /// pc+6)` overlapping any store up to and including its clock are
     /// conflicts — the batch truncates *before* that clock and the
-    /// serial tick redoes it. A committed `%pp` stream truncates *after*
-    /// its clock (it arms the parent Sum engine inside the window).
-    /// Requires an ideal memory bus: batched fetches replay
-    /// `bus.access` at commit, which is only order-independent without a
-    /// reservation table ([`crate::mem::bus::MemoryBus::is_ideal`]).
+    /// serial tick redoes it.
+    ///
+    /// `%pp` streams commit in-window as engine events: a non-final
+    /// arrival only mutates the parent Sum engine's accumulator and
+    /// arrival count (plus the streaming core's own latch, which its
+    /// chain carries forward) — state no chain and no window bound
+    /// reads — so batching continues. The *final* arrival arms the
+    /// readout (`done_at`, invisible to the entry-time engine horizon),
+    /// so it truncates *after* its clock (or *before* it when
+    /// `sv_readout == 0`, since the finalise would land in phase B of
+    /// that very clock). [`crate::empa::sv::Supervisor::arrivals_to_final`]
+    /// tells the two apart.
+    ///
+    /// Bus charges under a ported memory are replayed at commit: chains
+    /// record each fetch's bus-access intent (`FetchRecord::bus_access`)
+    /// without touching the shared reservation table, and pass 2 replays the
+    /// charges through [`crate::mem::bus::MemoryBus::replay_access`] in
+    /// lockstep's grant order — ascending clock, *descending core index*
+    /// within a clock (the serial phase-D fetch worklist is drained
+    /// LIFO) — so `BusStats` stays bit-identical. A replayed charge that
+    /// comes back stalled shifts that core's apply time by the delay
+    /// (exactly as the serial fetch would have) and truncates the window
+    /// after its clock: every later speculated record of that chain sits
+    /// at a stale clock.
     ///
     /// The decode-cache counters are *not* replayed for batched fetches
     /// (chains decode the raw bytes) — `icache_hits`/`icache_misses` are
@@ -988,9 +1036,11 @@ impl EmpaProcessor {
         if self.span_batch < 2 || self.pool.is_none() {
             return;
         }
-        if self.halted || self.fault.is_some() || !self.bus.is_ideal() {
+        if self.halted || self.fault.is_some() {
             return;
         }
+        let ported = !self.bus.is_ideal();
+        let engine_active = self.sv.any_active();
         let h = self.clock;
         if h >= self.max_clocks {
             return;
@@ -1002,7 +1052,7 @@ impl EmpaProcessor {
             }
             e = e.min(w);
         }
-        if self.sv.any_active() {
+        if engine_active {
             match self.sv.earliest_due(h, |p| self.earliest_mass_rent_at(p)) {
                 Some(t) if t <= h => return,
                 Some(t) => e = e.min(t),
@@ -1077,6 +1127,8 @@ impl EmpaProcessor {
         writes.clear();
         let mut prefix: Vec<u32> = Vec::new();
         let mut all_t: Vec<u32> = Vec::new();
+        let mut fetches: Vec<usize> = Vec::new();
+        let mut stream_counts: Vec<(usize, u32)> = Vec::new();
         'clocks: while e_trunc > h {
             // next clock with any pending record
             let mut t = u64::MAX;
@@ -1096,7 +1148,8 @@ impl EmpaProcessor {
             // them all — including the fetching core's own).
             prefix.clear();
             all_t.clear();
-            let mut streamed = false;
+            stream_counts.clear();
+            let mut final_stream = false;
             for (k, r) in results.iter().enumerate() {
                 if let Some(s) = r.steps.get(idx[k]) {
                     if s.t == t {
@@ -1128,18 +1181,45 @@ impl EmpaProcessor {
                     e_trunc = t;
                     break 'clocks;
                 }
-                streamed |= s.eff.streamed.is_some();
+                // Engine-inclusive windows: a `%pp` stream is a window
+                // event only when it is the *final* arrival of an
+                // unfinished Sum engine (it arms `done_at`, which the
+                // entry-time horizon could not see). Non-final arrivals
+                // and latch-only streams commit and the window rolls on.
+                if s.eff.streamed.is_some() {
+                    if let Some(parent) = self.cores[s.eff.id].parent {
+                        if let Some(remaining) = self.sv.arrivals_to_final(parent) {
+                            let seen = match stream_counts
+                                .iter_mut()
+                                .find(|(p, _)| *p == parent)
+                            {
+                                Some((_, c)) => {
+                                    *c += 1;
+                                    *c
+                                }
+                                None => {
+                                    stream_counts.push((parent, 1));
+                                    1
+                                }
+                            };
+                            final_stream |= seen >= remaining;
+                        }
+                    }
+                }
                 if let Some((addr, _)) = s.eff.write {
                     prefix.push(addr);
                 }
             }
-            if streamed && self.timing.sv_readout == 0 {
+            if final_stream && self.timing.sv_readout == 0 {
                 // A zero-latency readout would finalise in phase B of
                 // this very clock — only the serial tick can replay that.
                 e_trunc = t;
                 break;
             }
-            // Pass 2 — commit the clock: apply effect, replay the fetch.
+            // Pass 2a — commit the clock in ascending core-index order
+            // (the serial phase-A order): apply effect, install the next
+            // Exec, stage bus-accessing fetches for the replay below.
+            fetches.clear();
             for (k, r) in results.iter().enumerate() {
                 let Some(s) = r.steps.get(idx[k]) else { continue };
                 if s.t != t {
@@ -1155,12 +1235,35 @@ impl EmpaProcessor {
                 self.cores[id].run =
                     RunState::Exec { insn: s.fetch.insn, apply_at: s.fetch.apply_at };
                 if s.fetch.bus_access {
-                    self.bus.access(t);
+                    fetches.push(id);
                 }
             }
-            if streamed {
-                // The stream armed the parent Sum engine (readout due at
-                // `t + sv_readout`): later clocks must be re-planned.
+            // Pass 2b — replay the staged bus charges in lockstep's
+            // phase-D grant order: the serial fetch worklist is pushed
+            // ascending and drained LIFO, so within one clock charges
+            // land in descending core index. `fetches` is ascending, so
+            // iterate it reversed. A stalled charge shifts that core's
+            // apply time by the queueing delay (the serial fetch folds
+            // the delay into `apply_at`) and poisons every later
+            // speculated clock of its chain — truncate after `t`.
+            let mut stalled = false;
+            for &id in fetches.iter().rev() {
+                let delay = self.bus.replay_access(t);
+                if delay > 0 {
+                    stalled = true;
+                    if let RunState::Exec { apply_at, .. } = &mut self.cores[id].run {
+                        *apply_at += delay;
+                    }
+                }
+            }
+            if stalled {
+                self.bus_replay_truncations += 1;
+            }
+            if stalled || final_stream {
+                // Stall-shifted apply times and a freshly armed readout
+                // (`done_at = t + sv_readout`) both invalidate the
+                // speculation beyond this clock: later clocks must be
+                // re-planned from serial state.
                 e_trunc = t + 1;
                 break;
             }
@@ -1182,6 +1285,12 @@ impl EmpaProcessor {
         self.clock = e_trunc;
         self.clocks_skipped += n;
         self.batched_clocks += n;
+        if ported {
+            self.batched_ported_clocks += n;
+        }
+        if engine_active {
+            self.engine_batched_clocks += n;
+        }
         self.span_batch_hist[span_bucket(n as usize)] += 1;
         self.parallel_spans += 1;
         self.parallel_cores += ntasks as u64;
@@ -2229,8 +2338,70 @@ Spin:
     }
 
     #[test]
-    fn non_ideal_bus_disables_batching_but_stays_identical() {
-        let (src, _) = sumup::sumup_mode_program(&sumup::synth_vector(64, 11));
+    fn ported_bus_batches_with_replayed_charges() {
+        // The PR-9 gate lift: two conventional chains — one of them
+        // loading through the single shared bus every loop iteration —
+        // must still form multi-clock batches, with the in-window bus
+        // charges replayed at commit. The accesses are spaced wider than
+        // the 4-cycle port hold, so the ledger must close with zero
+        // stalls and zero replay truncations.
+        let src = "    irmovl $1, %ebx
+    irmovl $0, %eax
+    addl %ebx, %eax
+    addl %ebx, %eax
+    addl %ebx, %eax
+    addl %ebx, %eax
+    addl %ebx, %eax
+    addl %ebx, %eax
+    addl %ebx, %eax
+    addl %ebx, %eax
+    halt
+Side:
+    irmovl $0x80, %ecx
+Spin:
+    mrmovl (%ecx), %edx
+    addl %edx, %esi
+    jmp Spin
+";
+        let prog = assemble(src).unwrap();
+        let side = prog.symbol("Side").unwrap();
+        let run = |step, span_batch| {
+            let cfg = EmpaConfig {
+                num_cores: 4,
+                mem: crate::mem::MemConfig::single_bus(),
+                step,
+                span_batch,
+                ..Default::default()
+            };
+            let mut p = EmpaProcessor::new(&prog.image, &cfg);
+            p.cores[1].alloc = AllocState::Rented;
+            p.cores[1].reset_for_qt(side);
+            p.rented_mask |= 0b10;
+            let r = p.run_report();
+            let busy: Vec<u64> = p.cores.iter().map(|c| c.busy_clocks).collect();
+            (r, busy)
+        };
+        let (lock, lock_busy) = run(StepMode::Lockstep, 64);
+        assert_eq!(lock.fault, None, "the root halt ends the run");
+        assert!(lock.bus.accesses > 0, "the side loop loads through the bus");
+        let (r, busy) = run(StepMode::ParallelA { threads: 2 }, 64);
+        assert_eq!(r.clocks, lock.clocks);
+        assert_eq!(r.regs.file, lock.regs.file);
+        assert_eq!(r.retired, lock.retired);
+        assert_eq!(busy, lock_busy);
+        assert_eq!(r.bus, lock.bus, "replayed charges keep the ledger bit-identical");
+        assert!(r.batched_clocks > 0, "the ported bus no longer gates batching off");
+        assert_eq!(r.batched_ported_clocks, r.batched_clocks, "every window ran ported");
+        assert_eq!(r.bus_replay_truncations, 0, "spaced accesses never stall");
+    }
+
+    #[test]
+    fn sumup_on_single_bus_batches_and_stays_identical() {
+        // The old gate made this configuration fall back to single-clock
+        // spans; now the full SUMUP run — staggered children all loading
+        // their element through one contended port — batches wherever
+        // the window rule allows and must stay cycle-identical anyway.
+        let (src, want) = sumup::sumup_mode_program(&sumup::synth_vector(64, 11));
         let image = assemble(&src).unwrap().image;
         let base = crate::mem::MemConfig::single_bus();
         let lock_cfg =
@@ -2243,9 +2414,13 @@ Spin:
             ..Default::default()
         };
         let r = EmpaProcessor::new(&image, &par_cfg).run();
-        assert_eq!(r.batched_clocks, 0, "a reservation-table bus cannot replay batched fetches");
+        assert_eq!(r.eax(), want);
         assert_eq!(r.clocks, lock.clocks);
+        assert_eq!(r.regs.file, lock.regs.file);
+        assert_eq!(r.retired, lock.retired);
+        assert_eq!(r.sv_ops, lock.sv_ops);
         assert_eq!(r.bus, lock.bus, "the bus ledger stays bit-identical");
+        assert_eq!(r.batched_ported_clocks, r.batched_clocks);
     }
 
     #[test]

@@ -241,6 +241,20 @@ impl Supervisor {
         self.engine_of_parent(parent).is_some()
     }
 
+    /// How many more `%pp` arrivals `parent`'s SUMUP engine needs
+    /// *including* the final one that schedules the readout
+    /// (`Some(1)` = the very next stream is final). `None` when the
+    /// parent drives no unfinished SUM engine — FOR engines consume
+    /// streams without ever finalising, so they never bound a batched
+    /// window through this. Used by the span batcher to let non-final
+    /// arrivals commit in-window: they only mutate the accumulator and
+    /// arrival count, which `earliest_due` never reads, so the window
+    /// bounds computed at entry stay valid.
+    pub fn arrivals_to_final(&self, parent: usize) -> Option<u32> {
+        let e = self.slots[self.engine_of_parent(parent)?].as_ref()?;
+        (e.mode == MassMode::Sum).then(|| e.total.saturating_sub(e.arrived))
+    }
+
     /// (Re)assign the FOR engine's child core, keeping the child index
     /// consistent.
     pub fn set_child(&mut self, slot: usize, child: Option<usize>) {
@@ -409,6 +423,22 @@ mod tests {
         sv.add(MassEngine::new(MassMode::For, 1, 0, 0, 2, 0, 10, 1, 2));
         assert!(sv.sum_stream(1, 9, 12, 2));
         assert_eq!(sv.engine_of_parent_mut(1).unwrap().acc, 0);
+    }
+
+    #[test]
+    fn arrivals_to_final_counts_down_sum_engines_only() {
+        let mut sv = Supervisor::default();
+        assert_eq!(sv.arrivals_to_final(0), None, "no engine");
+        sv.add(MassEngine::new(MassMode::Sum, 0, 0, 0, 3, 0, 10, 1, 2));
+        assert_eq!(sv.arrivals_to_final(0), Some(3));
+        assert!(sv.sum_stream(0, 1, 12, 2));
+        assert!(sv.sum_stream(0, 2, 13, 2));
+        assert_eq!(sv.arrivals_to_final(0), Some(1), "next stream is final");
+        assert!(sv.sum_stream(0, 3, 14, 2));
+        assert_eq!(sv.arrivals_to_final(0), Some(0), "all arrived, readout pending");
+        // FOR engines consume streams but never finalise through them
+        sv.add(MassEngine::new(MassMode::For, 1, 0, 0, 3, 0, 10, 1, 2));
+        assert_eq!(sv.arrivals_to_final(1), None);
     }
 
     #[test]

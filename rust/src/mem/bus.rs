@@ -8,13 +8,15 @@
 //!
 //! **Ordering contract (parallel stepping):** reservation is stateful and
 //! order-dependent — two cores contending for the last free port at the
-//! same clock are served in the order `access` is called, which lockstep
-//! fixes as ascending core index during phase-D fetch. The parallel
-//! phase-A fan-out therefore never touches the bus: data-access delays
-//! are charged at *fetch* (serial, deterministic order) and the
-//! speculated phase-A apply replays only the architectural effect. Any
-//! future parallel fetch must route bus traffic through ordered effect
-//! records to keep [`BusStats`] bit-identical.
+//! same clock are served in the order `access` is called. Lockstep fixes
+//! that grant order during phase-D fetch: the fetch worklist is drained
+//! LIFO, so within one clock accesses land in **descending core index**.
+//! The parallel phase-A fan-out never touches the bus directly: chains
+//! record each fetch's bus-access intent in their ordered effect records
+//! and the serial per-clock commit replays the charges through
+//! [`MemoryBus::replay_access`] in exactly that grant order (ascending
+//! clock, descending core index within a clock), keeping [`BusStats`]
+//! and every added stall latency bit-identical to lockstep.
 
 use super::MemConfig;
 
@@ -85,11 +87,24 @@ impl MemoryBus {
         delay
     }
 
+    /// Replay a bus charge recorded by a batched chain at commit time.
+    ///
+    /// Semantically identical to [`MemoryBus::access`]; the separate name
+    /// marks the call sites bound by the **grant-order replay invariant**:
+    /// callers must issue replayed charges in ascending clock order and,
+    /// within one clock, in *descending core index* — the order lockstep's
+    /// LIFO phase-D fetch worklist produces — or `BusStats` and the added
+    /// stall delays diverge from serial stepping.
+    pub fn replay_access(&mut self, now: u64) -> u64 {
+        self.access(now)
+    }
+
     /// True for ideal (contention-free) memory: no reservation table, so
     /// `access` is pure counting and order-independent. Multi-clock span
-    /// batching requires this — batched fetches replay their accesses at
-    /// commit time in an order that is only guaranteed to match lockstep
-    /// when the bus carries no reservation state.
+    /// batching no longer requires this — under a ported bus the batched
+    /// fetches replay their charges through [`MemoryBus::replay_access`]
+    /// in lockstep's grant order, and a chain whose replayed stall delay
+    /// shifts its apply time truncates the window at that clock.
     pub fn is_ideal(&self) -> bool {
         self.ports.is_none()
     }
@@ -158,6 +173,19 @@ mod tests {
         assert_eq!(bus.access(4), 0);
         assert_eq!(bus.access(10), 0);
         assert_eq!(bus.stats().stall_cycles, 0);
+    }
+
+    #[test]
+    fn replay_access_matches_direct_access() {
+        // A replayed schedule (same clocks, same order) must produce the
+        // same reservations and stats as charging the bus directly.
+        let schedule = [0u64, 0, 3, 9, 9, 9];
+        let mut direct = MemoryBus::new(&MemConfig::single_bus());
+        let mut replayed = MemoryBus::new(&MemConfig::single_bus());
+        for &t in &schedule {
+            assert_eq!(direct.access(t), replayed.replay_access(t));
+        }
+        assert_eq!(direct.stats(), replayed.stats());
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 use empa::empa::{EmpaConfig, EmpaProcessor, StepMode};
 use empa::isa::assemble;
+use empa::mem::MemConfig;
 use empa::workload::family::{direct_source, family_impl, synth_params, ALL_FAMILIES};
 use std::fmt::Write;
 
@@ -30,10 +31,13 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Run `image` under `step` with the given span-batch cap and
-/// fingerprint the architectural outcome.
-fn fingerprint_batched(image: &[u8], step: StepMode, span_batch: usize) -> u64 {
-    let cfg = EmpaConfig { step, span_batch, trace: true, ..Default::default() };
+/// Run `image` under `step` with the given span-batch cap and memory
+/// configuration, and fingerprint the architectural outcome. The bus
+/// ledger is inside the hash (`bus={:?}`), so a ported-bus divergence —
+/// a replayed charge landing out of grant order, a missed stall — flips
+/// the value.
+fn fingerprint_mem(image: &[u8], step: StepMode, span_batch: usize, mem: MemConfig) -> u64 {
+    let cfg = EmpaConfig { step, span_batch, mem, trace: true, ..Default::default() };
     let mut p = EmpaProcessor::new(image, &cfg);
     let r = p.run_report();
     let mut s = String::new();
@@ -58,6 +62,12 @@ fn fingerprint_batched(image: &[u8], step: StepMode, span_batch: usize) -> u64 {
         let _ = write!(s, "|busy={}", c.busy_clocks);
     }
     fnv1a(s.as_bytes())
+}
+
+/// Run `image` under `step` with the given span-batch cap on ideal
+/// memory.
+fn fingerprint_batched(image: &[u8], step: StepMode, span_batch: usize) -> u64 {
+    fingerprint_mem(image, step, span_batch, MemConfig::ideal())
 }
 
 /// Run `image` under `step` at the default span-batch cap.
@@ -114,6 +124,36 @@ fn fingerprints_are_span_batch_invariant() {
                         fingerprint_batched(&image, step, span_batch),
                         "{ctx} [t={threads} span_batch={span_batch}]: fingerprint drifted"
                     );
+                }
+            }
+        }
+    }
+}
+
+/// Batching under a ported bus (PR 9) must be just as invisible: for
+/// 1- and 2-port memories, every span-batch cap × thread count yields
+/// the same fingerprint as that memory's own lockstep run — including
+/// the replayed `BusStats` inside the hash.
+#[test]
+fn fingerprints_are_ported_bus_span_batch_invariant() {
+    for family in ALL_FAMILIES {
+        let fam = family_impl(family);
+        for &mode in fam.modes() {
+            let params = synth_params(family, 24, 0x9047);
+            let src = direct_source(mode, &params).unwrap();
+            let image = assemble(&src).unwrap().image;
+            for mem in [MemConfig::single_bus(), MemConfig::buses(2)] {
+                let ctx = format!("{} {mode:?} ports={:?}", family.name(), mem.ports);
+                let base = fingerprint_mem(&image, StepMode::Lockstep, 1, mem.clone());
+                for span_batch in [1usize, 4, 64] {
+                    for threads in [1usize, 2, 4] {
+                        let step = StepMode::ParallelA { threads };
+                        assert_eq!(
+                            base,
+                            fingerprint_mem(&image, step, span_batch, mem.clone()),
+                            "{ctx} [t={threads} span_batch={span_batch}]: fingerprint drifted"
+                        );
+                    }
                 }
             }
         }

@@ -465,6 +465,157 @@ fn irq_raised_on_a_batched_clock_steps_identically() {
 }
 
 // ----------------------------------------------------------------------
+// span batching under contended buses + engine-inclusive windows (PR 9)
+// ----------------------------------------------------------------------
+
+/// The full ported-bus batching sweep: ports {1, 2} × span_batch
+/// {1, 4, 64} × every challenger mode (threads 1, 2, 4 inside
+/// `assert_identical`). The bus ledger — accesses, stalled accesses,
+/// stall cycles — must close bit-identically whether the charges were
+/// made serially at fetch or replayed at batch commit. (SUMUP's dense
+/// `qterm` retirements bound most windows here, so batching>0 is pinned
+/// by the named stall-shift scenario below, not by this sweep.)
+#[test]
+fn ported_bus_span_batch_sweep_steps_identically() {
+    for mem in [MemConfig::single_bus(), MemConfig::buses(2)] {
+        for span_batch in [1usize, 4, 64] {
+            for mode in [Mode::No, Mode::Sumup] {
+                for n in [1usize, 17, 48] {
+                    let (src, _) = sumup::program(mode, &sumup::synth_vector(n, 29));
+                    let image = assemble(&src).unwrap().image;
+                    let base =
+                        EmpaConfig { mem: mem.clone(), span_batch, ..Default::default() };
+                    let ctx = format!(
+                        "ports={:?} span_batch={span_batch} {mode:?} N={n}",
+                        mem.ports
+                    );
+                    assert_identical(&ctx, &image, &base);
+                    for threads in [2usize, 4] {
+                        let (r, _, _) = run_mode(&image, &base, StepMode::ParallelA { threads });
+                        if span_batch == 1 {
+                            assert_eq!(r.batched_clocks, 0, "{ctx} t={threads}: cap 1");
+                        }
+                        assert_eq!(
+                            r.batched_ported_clocks, r.batched_clocks,
+                            "{ctx} t={threads}: every batched clock here ran ported"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Stall-shifted truncation: two children with different fetch periods
+/// (pure mrmovl line vs mrmovl+addl) hammer one shared port, so their
+/// access phases drift through every residue and some replayed charges
+/// come back stalled *inside* batched windows. The stall must shift the
+/// chain's apply time exactly as the serial fetch would and truncate the
+/// window — observable as `bus_replay_truncations` — while clocks,
+/// occupancy and the bus ledger stay bit-identical.
+#[test]
+fn ported_bus_stall_shift_truncates_span_batches() {
+    let mut src = String::new();
+    let _ = writeln!(src, "    qcall ChildA");
+    let _ = writeln!(src, "    qcall ChildB");
+    let _ = writeln!(src, "    qwait");
+    let _ = writeln!(src, "    halt");
+    let _ = writeln!(src, "ChildA:");
+    let _ = writeln!(src, "    irmovl $0x400, %ecx");
+    for _ in 0..24 {
+        let _ = writeln!(src, "    mrmovl (%ecx), %esi");
+    }
+    let _ = writeln!(src, "    qterm");
+    let _ = writeln!(src, "ChildB:");
+    let _ = writeln!(src, "    irmovl $0x440, %edx");
+    for _ in 0..24 {
+        let _ = writeln!(src, "    mrmovl (%edx), %edi");
+        let _ = writeln!(src, "    addl %edi, %ebx");
+    }
+    let _ = writeln!(src, "    qterm");
+    let image = assemble(&src).unwrap().image;
+    for span_batch in [1usize, 4, 64] {
+        let base = EmpaConfig {
+            mem: MemConfig::single_bus(),
+            span_batch,
+            ..Default::default()
+        };
+        let ctx = format!("stall-shift span_batch={span_batch}");
+        let (lock, _) = assert_identical(&ctx, &image, &base);
+        assert_eq!(lock.fault, None, "{ctx}");
+        assert!(lock.bus.stall_cycles > 0, "{ctx}: the periods actually collide");
+        if span_batch >= 4 {
+            for threads in [2usize, 4] {
+                let (r, _, _) = run_mode(&image, &base, StepMode::ParallelA { threads });
+                assert!(r.batched_clocks > 0, "{ctx} t={threads}: windows formed");
+                assert_eq!(r.batched_ported_clocks, r.batched_clocks, "{ctx} t={threads}");
+                assert!(
+                    r.bus_replay_truncations > 0,
+                    "{ctx} t={threads}: some stall landed inside a window"
+                );
+            }
+        }
+    }
+}
+
+/// Engine-inclusive windows: a SUMUP engine stays mid-flight (two
+/// streamed arrivals, then a long 32-clock readout) while two unrelated
+/// compute children chain freely. Windows must keep forming with the
+/// engine active — non-final `%pp` arrivals commit in-window, the final
+/// arrival and the readout bound their windows — and the whole run must
+/// stay cycle-identical at every cap.
+#[test]
+fn engine_inclusive_span_batch_windows_steps_identically() {
+    let mut src = String::new();
+    let _ = writeln!(src, "    qcall CompA");
+    let _ = writeln!(src, "    qcall CompB");
+    let _ = writeln!(src, "    irmovl $2, %edx");
+    let _ = writeln!(src, "    irmovl array, %ecx");
+    let _ = writeln!(src, "    qprealloc $2");
+    let _ = writeln!(src, "    qmasssum Body");
+    let _ = writeln!(src, "    halt");
+    for (label, reg) in [("CompA", "%ecx"), ("CompB", "%edx")] {
+        let _ = writeln!(src, "{label}:");
+        let _ = writeln!(src, "    irmovl $3, %ebx");
+        for _ in 0..40 {
+            let _ = writeln!(src, "    addl %ebx, {reg}");
+        }
+        let _ = writeln!(src, "    qterm");
+    }
+    let _ = writeln!(src, "Body:");
+    let _ = writeln!(src, "    mrmovl (%ecx), %esi");
+    let _ = writeln!(src, "    addl %esi, %pp");
+    let _ = writeln!(src, "    qterm");
+    let _ = writeln!(src, "    .align 4");
+    let _ = writeln!(src, "array:");
+    let _ = writeln!(src, "    .long 21");
+    let _ = writeln!(src, "    .long 34");
+    let image = assemble(&src).unwrap().image;
+    let mut timing = TimingConfig::paper();
+    // A long adder readout keeps the engine mid-flight for 32 clocks
+    // after the final arrival — prime window space for the compute
+    // chains to batch across.
+    timing.sv_readout = 32;
+    for span_batch in [1usize, 4, 64] {
+        let base = EmpaConfig { timing: timing.clone(), span_batch, ..Default::default() };
+        let ctx = format!("engine-inclusive span_batch={span_batch}");
+        let (lock, _) = assert_identical(&ctx, &image, &base);
+        assert_eq!(lock.fault, None, "{ctx}");
+        assert!(lock.sv_ops > 0, "{ctx}: the engine actually ran");
+        if span_batch >= 4 {
+            for threads in [2usize, 4] {
+                let (r, _, _) = run_mode(&image, &base, StepMode::ParallelA { threads });
+                assert!(
+                    r.engine_batched_clocks > 0,
+                    "{ctx} t={threads}: windows formed while the engine was mid-flight"
+                );
+                assert!(r.batched_clocks >= r.engine_batched_clocks, "{ctx} t={threads}");
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
 // the acceptance bar for the scheduler's economics
 // ----------------------------------------------------------------------
 
