@@ -225,6 +225,34 @@ pub enum FabricError {
     /// tripped (`rule` names it — see `serve::slo`). Unlike `QueueFull`
     /// this is a *policy* decision taken before the ingress queue.
     Overloaded { rule: String },
+    /// The serve plane requires a shared-secret auth token and this
+    /// submit carried a missing or wrong one. Terminal: retrying with
+    /// the same credentials cannot succeed.
+    Unauthorized { tenant: String },
+}
+
+impl FabricError {
+    /// Whether a retry of the same request can plausibly succeed.
+    ///
+    /// Retryable errors are the *transient capacity* class: admission
+    /// pushback ([`FabricError::QueueFull`], [`FabricError::QuotaExceeded`],
+    /// [`FabricError::Overloaded`]) clears as load drains or buckets
+    /// refill, and [`FabricError::Backend`] covers crashed/flaky
+    /// substrates where the failover chain or a clean re-execution can
+    /// serve the retry. Everything else is terminal: malformed requests
+    /// (shape/mode/family/config) will fail identically every time,
+    /// [`FabricError::GuestFault`] is deterministic (the same program on
+    /// the same data faults again), and deadline/cancel/shutdown/auth
+    /// states don't improve by resubmission.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            FabricError::QueueFull
+                | FabricError::Backend { .. }
+                | FabricError::QuotaExceeded { .. }
+                | FabricError::Overloaded { .. }
+        )
+    }
 }
 
 impl std::fmt::Display for FabricError {
@@ -255,11 +283,82 @@ impl std::fmt::Display for FabricError {
             FabricError::Overloaded { rule } => {
                 write!(f, "shed by SLO rule `{rule}` (fabric overloaded)")
             }
+            FabricError::Unauthorized { tenant } => {
+                write!(f, "tenant `{tenant}` presented a missing or invalid auth token")
+            }
         }
     }
 }
 
 impl std::error::Error for FabricError {}
+
+// ----------------------------------------------------------------------
+// retries
+// ----------------------------------------------------------------------
+
+/// How a client retries [`FabricError::retryable`] failures: capped
+/// exponential backoff with deterministic jitter, plus optional hedged
+/// re-submission. Shared by `FabricClient::call_with_retry` (in-process)
+/// and `WireClient::call_with_retry` (over TCP, where connection drops
+/// also count as retryable).
+///
+/// Determinism: the jitter for attempt `k` is drawn from
+/// `Rng::seed_from_u64(jitter_seed ^ k)`, so a fixed policy produces a
+/// fixed backoff schedule — chaos runs replay with identical timing
+/// decisions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retries).
+    pub max_attempts: u32,
+    /// Backoff before retry `k` (1-based) starts from `base · 2^(k-1)`.
+    pub base: Duration,
+    /// Ceiling on the exponential term.
+    pub cap: Duration,
+    /// Seed for the per-attempt jitter stream.
+    pub jitter_seed: u64,
+    /// When set, a second copy of a still-unresolved job is submitted
+    /// after this long (bounded by the job's remaining deadline); the
+    /// first resolution wins and the loser is cancelled.
+    pub hedge_after: Option<Duration>,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            base: Duration::from_millis(2),
+            cap: Duration::from_millis(200),
+            jitter_seed: 0x5eed_5eed,
+            hedge_after: None,
+        }
+    }
+}
+
+impl RetryPolicy {
+    pub fn with_attempts(mut self, n: u32) -> Self {
+        self.max_attempts = n.max(1);
+        self
+    }
+
+    pub fn with_hedge(mut self, after: Duration) -> Self {
+        self.hedge_after = Some(after);
+        self
+    }
+
+    /// Backoff to sleep before attempt `attempt` (1-based retry index):
+    /// `min(base · 2^(attempt-1), cap)` scaled by a deterministic jitter
+    /// factor in `[0.5, 1.0)` (decorrelates fleets of retrying clients
+    /// without losing replayability).
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let shift = attempt.saturating_sub(1).min(20);
+        let exp = self
+            .base
+            .checked_mul(1u32 << shift)
+            .map_or(self.cap, |d| d.min(self.cap));
+        let mut rng = crate::util::rng::Rng::seed_from_u64(self.jitter_seed ^ attempt as u64);
+        exp.mul_f64(0.5 + 0.5 * rng.f64())
+    }
+}
 
 // ----------------------------------------------------------------------
 // completions
@@ -504,6 +603,55 @@ mod tests {
         assert!(e.to_string().contains("tenant-b"), "{e}");
         let e = FabricError::Overloaded { rule: "inflight-ceiling".into() };
         assert!(e.to_string().contains("inflight-ceiling"), "{e}");
+        let e = FabricError::Unauthorized { tenant: "mallory".into() };
+        assert!(e.to_string().contains("mallory"), "{e}");
+    }
+
+    #[test]
+    fn retryable_covers_exactly_the_transient_capacity_class() {
+        let retryable = [
+            FabricError::QueueFull,
+            FabricError::Backend { name: "xla".into(), msg: "crashed".into() },
+            FabricError::QuotaExceeded { tenant: "t".into() },
+            FabricError::Overloaded { rule: "staged-backlog".into() },
+        ];
+        for e in retryable {
+            assert!(e.retryable(), "{e} should be retryable");
+        }
+        let terminal = [
+            FabricError::DeadlineExceeded,
+            FabricError::Cancelled,
+            FabricError::ShapeMismatch { a: 1, b: 2 },
+            FabricError::UnsupportedMode { family: Family::Scale, mode: Mode::Sumup },
+            FabricError::FamilyMismatch { family: Family::Sumup, params: Family::Traces },
+            FabricError::InvalidConfig("bad".into()),
+            FabricError::GuestFault("halted".into()),
+            FabricError::Shutdown,
+            FabricError::Unauthorized { tenant: "t".into() },
+        ];
+        for e in terminal {
+            assert!(!e.retryable(), "{e} should be terminal");
+        }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_grows() {
+        let p = RetryPolicy::default();
+        let schedule: Vec<Duration> = (1..=6).map(|k| p.backoff(k)).collect();
+        assert_eq!(
+            schedule,
+            (1..=6).map(|k| p.backoff(k)).collect::<Vec<_>>(),
+            "same policy, same schedule"
+        );
+        for (k, d) in schedule.iter().enumerate() {
+            // jittered into [0.5, 1.0) of the capped exponential term
+            let exp = p.base * (1u32 << k.min(20) as u32);
+            let ceil = exp.min(p.cap);
+            assert!(*d <= ceil, "attempt {}: {d:?} > {ceil:?}", k + 1);
+            assert!(*d >= ceil / 2, "attempt {}: {d:?} < {:?}", k + 1, ceil / 2);
+        }
+        assert!(p.backoff(40) <= p.cap, "deep attempts stay capped");
+        assert!(schedule[3] > schedule[0], "backoff grows");
     }
 
     #[test]

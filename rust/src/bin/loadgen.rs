@@ -16,6 +16,7 @@
 //! loadgen [--addr HOST:PORT] [--tenants N] [--rate R] [--hot-factor F]
 //!         [--secs S] [--seed SEED] [--workers N] [--queue-cap N]
 //!         [--quota RATE[:BURST]] [--quick]
+//!         [--chaos SEED [--fault-rate P]]
 //! ```
 //!
 //! Without `--addr` an in-process [`ServePlane`] is spawned on an
@@ -23,8 +24,18 @@
 //! applies a small CI preset and asserts the accounting invariants
 //! (every submit answered; hot tenant denied; in-SLO tenants complete),
 //! exiting nonzero on violation.
+//!
+//! `--chaos SEED` switches to **chaosgen**: a loopback server is armed
+//! with deterministic fault injection at every site (`--fault-rate P`,
+//! default 0.1) and each tenant drives a closed loop through the typed
+//! retry machinery ([`WireClient::call_with_retry`]). The run asserts
+//! the accounting identity closes — every submitted job ends in exactly
+//! one of {completed first try, retried-then-completed, typed error} —
+//! with zero hangs and zero escaped panics, and prints the server's
+//! [`FaultPlan`](empa::chaos::FaultPlan) summary for replay.
 
-use empa::api::FabricError;
+use empa::api::{FabricError, RetryPolicy};
+use empa::chaos::ChaosConfig;
 use empa::coordinator::FabricConfig;
 use empa::serve::{QuotaConfig, ServeConfig, ServePlane, SloConfig, WireClient, WireReply};
 use empa::util::Summary;
@@ -56,6 +67,8 @@ struct Opts {
     queue_cap: usize,
     quota: Option<(f64, f64)>,
     quick: bool,
+    chaos: Option<u64>,
+    fault_rate: f64,
 }
 
 impl Default for Opts {
@@ -71,6 +84,8 @@ impl Default for Opts {
             queue_cap: 256,
             quota: None,
             quick: false,
+            chaos: None,
+            fault_rate: 0.1,
         }
     }
 }
@@ -104,6 +119,8 @@ fn parse(args: Vec<String>) -> anyhow::Result<Option<Opts>> {
             "--workers" => o.workers = val()?.parse()?,
             "--queue-cap" => o.queue_cap = val()?.parse()?,
             "--quota" => o.quota = Some(parse_shape(&val()?)?),
+            "--chaos" => o.chaos = Some(val()?.parse()?),
+            "--fault-rate" => o.fault_rate = val()?.parse()?,
             "--quick" => {
                 // CI smoke preset: ~1 s window, small payloads, a quota
                 // that admits the base rate but not the hot tenant.
@@ -117,7 +134,8 @@ fn parse(args: Vec<String>) -> anyhow::Result<Option<Opts>> {
                 println!(
                     "loadgen [--addr HOST:PORT] [--tenants N] [--rate R] \
                      [--hot-factor F] [--secs S] [--seed SEED] [--workers N] \
-                     [--queue-cap N] [--quota RATE[:BURST]] [--quick]"
+                     [--queue-cap N] [--quota RATE[:BURST]] [--quick] \
+                     [--chaos SEED [--fault-rate P]]"
                 );
                 return Ok(None);
             }
@@ -126,6 +144,7 @@ fn parse(args: Vec<String>) -> anyhow::Result<Option<Opts>> {
     }
     anyhow::ensure!(o.tenants >= 1, "--tenants must be at least 1");
     anyhow::ensure!(o.rate > 0.0 && o.secs > 0.0, "--rate and --secs must be positive");
+    anyhow::ensure!((0.0..=1.0).contains(&o.fault_rate), "--fault-rate must be in [0, 1]");
     Ok(Some(o))
 }
 
@@ -235,8 +254,161 @@ fn drive_tenant(
     Ok(TenantReport { name, hot, sent, counts, wall: start.elapsed() })
 }
 
+/// Chaosgen per-tenant outcome counters. The accounting identity is
+/// `sent == ok_first + ok_retried + typed_err` — every submitted job
+/// ends in exactly one bucket, no hangs, no escaped panics.
+#[derive(Default)]
+struct ChaosCounts {
+    sent: usize,
+    ok_first: usize,
+    ok_retried: usize,
+    typed_err: usize,
+}
+
+/// One chaosgen tenant: a closed loop (submit, settle, next) through
+/// the typed retry machinery against a fault-injecting server.
+fn drive_chaos_tenant(
+    addr: &str,
+    name: &'static str,
+    trace: Vec<Request>,
+) -> anyhow::Result<ChaosCounts> {
+    let mut client = WireClient::connect(addr)?;
+    let policy = RetryPolicy::default().with_attempts(4);
+    let mut c = ChaosCounts::default();
+    for req in &trace {
+        c.sent += 1;
+        // First attempt by hand so first-try and retried completions
+        // land in different buckets; the retry ladder takes over on any
+        // retryable typed error or transport fault.
+        match client.call(&req.job) {
+            Ok(Ok(_)) => c.ok_first += 1,
+            Ok(Err(e)) if !e.retryable() => c.typed_err += 1,
+            first => {
+                if first.is_err() {
+                    client.reconnect()?;
+                }
+                match client.call_with_retry(&req.job, &policy) {
+                    Ok(Ok(_)) => c.ok_retried += 1,
+                    Ok(Err(_)) => c.typed_err += 1,
+                    Err(_) => {
+                        // Transport attempts exhausted: a typed outcome
+                        // for the identity, and a fresh socket for the
+                        // next request.
+                        c.typed_err += 1;
+                        client.reconnect()?;
+                    }
+                }
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// The chaosgen mode: loopback server with every fault site armed,
+/// closed-loop tenants driving the retry ladder, and a hard assertion
+/// that the accounting identity closes.
+fn run_chaos(o: &Opts, chaos_seed: u64) -> anyhow::Result<bool> {
+    anyhow::ensure!(
+        o.addr.is_none(),
+        "--chaos drives an in-process loopback server; drop --addr"
+    );
+    let mut fabric =
+        FabricConfig { sim_workers: o.workers, queue_cap: o.queue_cap, ..Default::default() };
+    fabric.chaos = ChaosConfig::uniform(chaos_seed, o.fault_rate);
+    let slo = SloConfig::for_queue_cap(o.queue_cap);
+    let plane = ServePlane::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        fabric,
+        quota: QuotaConfig::default(),
+        slo,
+        ..Default::default()
+    })?;
+    let addr = plane.local_addr().to_string();
+
+    let per_tenant = if o.quick { 40 } else { (o.rate * o.secs).round().max(1.0) as usize };
+    println!(
+        "chaosgen: {} tenants x {per_tenant} jobs over {addr}, \
+         chaos seed {chaos_seed}, fault rate {}",
+        o.tenants, o.fault_rate
+    );
+
+    let handles: Vec<_> = (0..o.tenants)
+        .map(|i| {
+            let name: &'static str = Box::leak(format!("t{i}").into_boxed_str());
+            let cfg = TraceConfig {
+                seed: o.seed.wrapping_add(i as u64),
+                num_requests: per_tenant,
+                mean_gap_us: 100,
+                mass_fraction: 0.5,
+                mass_len: (16, 64),
+                program_len: (1, 8),
+                high_priority_fraction: 0.1,
+                deadline: Some(Duration::from_secs(5)),
+                client: Some(name),
+            };
+            let trace = TraceGen::new(cfg).generate();
+            let addr = addr.clone();
+            std::thread::spawn(move || (name, drive_chaos_tenant(&addr, name, trace)))
+        })
+        .collect();
+
+    let mut pass = true;
+    let mut check = |ok: bool, msg: String| {
+        if !ok {
+            pass = false;
+            eprintln!("chaosgen: FAIL: {msg}");
+        }
+    };
+    for h in handles {
+        // A panicked tenant thread is itself an identity violation.
+        let Ok((name, result)) = h.join() else {
+            check(false, "tenant thread panicked".to_string());
+            continue;
+        };
+        match result {
+            Ok(c) => {
+                println!(
+                    "tenant {name}: sent={} ok_first={} ok_retried={} typed_err={}",
+                    c.sent, c.ok_first, c.ok_retried, c.typed_err
+                );
+                check(
+                    c.sent == per_tenant && c.sent == c.ok_first + c.ok_retried + c.typed_err,
+                    format!(
+                        "tenant {name}: identity open: sent={} != {}+{}+{}",
+                        c.sent, c.ok_first, c.ok_retried, c.typed_err
+                    ),
+                );
+            }
+            Err(e) => check(false, format!("tenant {name}: driver error: {e:#}")),
+        }
+    }
+
+    // Server-side view: the chaos/retry metric lines plus the fault
+    // plan the seed produced (rerunning the same seed replays it).
+    let metrics = WireClient::connect(&addr).and_then(|mut c| c.metrics());
+    match metrics {
+        Ok(text) => println!("server metrics:\n{text}"),
+        Err(e) => eprintln!("chaosgen: metrics fetch failed: {e:#}"),
+    }
+    if let Some(engine) = plane.fabric().chaos() {
+        println!(
+            "chaos plan: {} ({} faults injected)",
+            engine.plan().summary(),
+            engine.total_injected()
+        );
+    }
+    plane.shutdown();
+    if pass {
+        println!("chaosgen: PASS (accounting identity closed)");
+    }
+    Ok(pass)
+}
+
 fn run(args: Vec<String>) -> anyhow::Result<bool> {
     let Some(o) = parse(args)? else { return Ok(true) };
+    if let Some(chaos_seed) = o.chaos {
+        return run_chaos(&o, chaos_seed);
+    }
 
     // Server-side quota default: between the base rate and the hot rate,
     // so plain tenants fit and the hot one visibly does not.

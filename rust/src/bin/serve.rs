@@ -11,6 +11,7 @@
 //!       [--sim-span-batch N] [--queue-cap N]
 //!       [--quota RATE[:BURST]] [--tenant TAG=RATE[:BURST]]...
 //!       [--max-frame BYTES] [--secs S]
+//!       [--auth-token TOKEN] [--chaos SEED] [--fault-rate P]
 //! ```
 //!
 //! `--quota` sets the default token-bucket shape for every tenant;
@@ -20,7 +21,9 @@
 //! 1 (the default) keeps the serial event-horizon scheduler.
 //! `--sim-span-batch N` caps how many consecutive clocks a parallel
 //! span may batch (1 disables batching; only meaningful with
-//! `--sim-threads >= 2`).
+//! `--sim-threads >= 2`). `--auth-token` requires every submit to carry
+//! the same shared secret. `--chaos SEED` arms deterministic fault
+//! injection across every site at `--fault-rate` (default 0.1).
 
 use empa::coordinator::FabricConfig;
 use empa::serve::{QuotaConfig, ServeConfig, ServePlane, SloConfig, MAX_FRAME};
@@ -59,6 +62,9 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
     let mut quota = QuotaConfig::default();
     let mut max_frame = MAX_FRAME;
     let mut secs = 0u64;
+    let mut auth_token: Option<String> = None;
+    let mut chaos_seed: Option<u64> = None;
+    let mut fault_rate = 0.1f64;
 
     let mut it = args.into_iter();
     while let Some(flag) = it.next() {
@@ -86,12 +92,16 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
             }
             "--max-frame" => max_frame = val()?.parse()?,
             "--secs" => secs = val()?.parse()?,
+            "--auth-token" => auth_token = Some(val()?),
+            "--chaos" => chaos_seed = Some(val()?.parse()?),
+            "--fault-rate" => fault_rate = val()?.parse()?,
             "--help" | "-h" => {
                 println!(
                     "serve [--addr HOST:PORT] [--workers N] [--sim-threads N] \
                      [--sim-span-batch N] [--queue-cap N] \
                      [--quota RATE[:BURST]] [--tenant TAG=RATE[:BURST]]... \
-                     [--max-frame BYTES] [--secs S (0 = forever)]"
+                     [--max-frame BYTES] [--secs S (0 = forever)] \
+                     [--auth-token TOKEN] [--chaos SEED] [--fault-rate P]"
                 );
                 return Ok(());
             }
@@ -107,8 +117,13 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         anyhow::ensure!(batch >= 1, "--sim-span-batch must be >= 1 (1 disables batching)");
         fabric.empa.span_batch = batch;
     }
+    if let Some(seed) = chaos_seed {
+        anyhow::ensure!((0.0..=1.0).contains(&fault_rate), "--fault-rate must be in [0, 1]");
+        fabric.chaos = empa::chaos::ChaosConfig::uniform(seed, fault_rate);
+        println!("serve: chaos armed (seed {seed}, fault rate {fault_rate})");
+    }
     let slo = SloConfig::for_queue_cap(queue_cap);
-    let plane = ServePlane::start(ServeConfig { addr, fabric, quota, slo, max_frame })?;
+    let plane = ServePlane::start(ServeConfig { addr, fabric, quota, slo, max_frame, auth_token })?;
     println!("serve: listening on {}", plane.local_addr());
 
     if secs == 0 {
@@ -120,6 +135,9 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
     std::thread::sleep(Duration::from_secs(secs));
     println!("{}", plane.metrics().render());
     println!("{}", plane.governor().render());
+    if let Some(engine) = plane.fabric().chaos() {
+        println!("chaos plan: {} ({} faults)", engine.plan().summary(), engine.total_injected());
+    }
     plane.shutdown();
     Ok(())
 }

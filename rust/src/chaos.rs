@@ -1,0 +1,525 @@
+//! `empa::chaos` — deterministic, seed-driven fault injection.
+//!
+//! The paper's robustness story (§3 real-time behaviour; the companion
+//! programming-model paper's supervisor re-coordination when a core
+//! cannot finish its slice) is only credible if the fabric demonstrably
+//! degrades gracefully when parts of it misbehave. This module is the
+//! harness for proving that: a [`ChaosConfig`] names *where* faults may
+//! strike (per-[`Site`] specs: probability + fault kinds) and a seeded
+//! [`ChaosEngine`] decides *when*, drawing from [`crate::util::rng`]
+//! streams so every run is fully reproducible — the engine logs every
+//! injected fault into a [`FaultPlan`] that two runs of the same seed
+//! and workload reproduce identically.
+//!
+//! Injection sites span the whole stack:
+//!
+//! | site               | where it bites                                | kinds |
+//! |--------------------|-----------------------------------------------|-------|
+//! | [`Site::Backend`]  | [`ChaosBackend`] wrapped around registry entries | error, latency, panic, wrong-result |
+//! | [`Site::Dispatch`] | the sim-pool worker loop, between tasks       | worker stall |
+//! | [`Site::Guest`]    | `SimBackend::run_program`, after a clean run  | guest fault |
+//! | [`Site::Wire`]     | serve-plane reply/read paths and `WireClient` | conn drop, partial write, delayed read |
+//!
+//! Everything is zero-cost when chaos is off: the fabric and serve plane
+//! carry an `Option<Arc<ChaosEngine>>` that stays `None` unless a
+//! non-empty config was supplied, so the hot paths pay one pointer test
+//! and take exactly the code paths they took before this module existed.
+
+use crate::api::FabricError;
+use crate::coordinator::backend::{Backend, BackendJob, BackendReply};
+use crate::coordinator::metrics::FabricMetrics;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+/// Where a fault is injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Site {
+    /// Backend execution (`ChaosBackend` wrapping a registry entry).
+    Backend,
+    /// Dispatch-plane worker loop (stalls between tasks).
+    Dispatch,
+    /// Guest programs on the simulated EMPA pool.
+    Guest,
+    /// The serve-plane wire: connections, frames, reads.
+    Wire,
+}
+
+impl Site {
+    pub const ALL: [Site; 4] = [Site::Backend, Site::Dispatch, Site::Guest, Site::Wire];
+
+    fn index(self) -> usize {
+        match self {
+            Site::Backend => 0,
+            Site::Dispatch => 1,
+            Site::Guest => 2,
+            Site::Wire => 3,
+        }
+    }
+
+    /// Per-site salt XORed into the config seed, so each site draws from
+    /// an independent deterministic stream.
+    fn salt(self) -> u64 {
+        // arbitrary odd constants, fixed forever for replayability
+        [0x9e37_79b9_7f4a_7c15, 0xbf58_476d_1ce4_e5b9, 0x94d0_49bb_1331_11eb, 0xd6e8_feb8_6659_fd93]
+            [self.index()]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::Backend => "backend",
+            Site::Dispatch => "dispatch",
+            Site::Guest => "guest",
+            Site::Wire => "wire",
+        }
+    }
+}
+
+/// What kind of fault to inject. Parameters (latency, stall durations)
+/// are fixed in the spec, not drawn at decision time, so a plan replays
+/// with identical magnitudes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Backend returns a typed `FabricError::Backend` instead of running.
+    BackendError,
+    /// Backend sleeps before executing (exercises deadline paths).
+    BackendLatency { ms: u64 },
+    /// Backend panics mid-execute (exercises worker `catch_unwind`).
+    BackendPanic,
+    /// Backend executes, then the reply is perturbed into a
+    /// wrong-but-plausible result (for differential detection).
+    WrongResult,
+    /// A dispatch worker parks before serving its next task (exercises
+    /// work-stealing and deadline paths).
+    WorkerStall { ms: u64 },
+    /// The guest run is flipped into a fault outcome.
+    GuestFault,
+    /// The connection is shut down instead of carrying the frame.
+    ConnDrop,
+    /// Only a prefix of the frame is written before the connection drops.
+    PartialWrite,
+    /// The read side sleeps before consuming the next frame.
+    DelayedRead { ms: u64 },
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::BackendError => "backend-error",
+            FaultKind::BackendLatency { .. } => "backend-latency",
+            FaultKind::BackendPanic => "backend-panic",
+            FaultKind::WrongResult => "wrong-result",
+            FaultKind::WorkerStall { .. } => "worker-stall",
+            FaultKind::GuestFault => "guest-fault",
+            FaultKind::ConnDrop => "conn-drop",
+            FaultKind::PartialWrite => "partial-write",
+            FaultKind::DelayedRead { .. } => "delayed-read",
+        }
+    }
+}
+
+/// Fault behaviour at one site: with probability `rate` per decision
+/// point, inject one of `kinds` (chosen uniformly from the site's
+/// stream).
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    pub site: Site,
+    pub rate: f64,
+    pub kinds: Vec<FaultKind>,
+}
+
+/// The full chaos configuration: a seed plus per-site specs. An empty
+/// spec list means chaos is off — [`ChaosConfig::engine`] returns `None`
+/// and no injection code runs anywhere.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosConfig {
+    pub seed: u64,
+    pub specs: Vec<FaultSpec>,
+}
+
+impl ChaosConfig {
+    /// No chaos (the default).
+    pub fn off() -> Self {
+        ChaosConfig::default()
+    }
+
+    pub fn is_off(&self) -> bool {
+        self.specs.is_empty() || self.specs.iter().all(|s| s.rate <= 0.0)
+    }
+
+    /// Every site armed at the same rate with its full default kind set
+    /// (what `loadgen --chaos SEED --fault-rate P` runs).
+    pub fn uniform(seed: u64, rate: f64) -> Self {
+        ChaosConfig { seed, specs: Site::ALL.iter().map(|&s| default_spec(s, rate)).collect() }
+    }
+
+    /// One armed site (scenario tests target a single layer).
+    pub fn site(seed: u64, site: Site, rate: f64, kinds: Vec<FaultKind>) -> Self {
+        ChaosConfig { seed, specs: vec![FaultSpec { site, rate, kinds }] }
+    }
+
+    /// Build the runtime engine; `None` when chaos is off, which is what
+    /// keeps the disabled configuration code-path-neutral.
+    pub fn engine(&self) -> Option<Arc<ChaosEngine>> {
+        if self.is_off() {
+            None
+        } else {
+            Some(Arc::new(ChaosEngine::new(self.clone())))
+        }
+    }
+}
+
+fn default_spec(site: Site, rate: f64) -> FaultSpec {
+    let kinds = match site {
+        Site::Backend => vec![
+            FaultKind::BackendError,
+            FaultKind::BackendLatency { ms: 2 },
+            FaultKind::BackendPanic,
+            FaultKind::WrongResult,
+        ],
+        Site::Dispatch => vec![FaultKind::WorkerStall { ms: 2 }],
+        Site::Guest => vec![FaultKind::GuestFault],
+        Site::Wire => vec![
+            FaultKind::ConnDrop,
+            FaultKind::PartialWrite,
+            FaultKind::DelayedRead { ms: 2 },
+        ],
+    };
+    FaultSpec { site, rate, kinds }
+}
+
+/// One injected fault, as logged in the [`FaultPlan`]: the site, the
+/// site-local decision sequence number, and the kind drawn.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultRecord {
+    pub site: Site,
+    /// Which decision (0-based, per site) this injection happened on.
+    pub seq: u64,
+    pub kind: FaultKind,
+}
+
+/// The replay log: every fault the engine injected, in injection order
+/// per site. Two runs with the same seed and the same per-site decision
+/// counts produce identical plans, regardless of thread interleaving —
+/// each site's `(seq, draw)` pairs are taken atomically under the
+/// site's lock.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    pub records: Vec<FaultRecord>,
+}
+
+impl FaultPlan {
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Compact per-site summary for logs: `backend=3 dispatch=1 …`.
+    pub fn summary(&self) -> String {
+        let mut counts = [0u64; 4];
+        for r in &self.records {
+            counts[r.site.index()] += 1;
+        }
+        Site::ALL
+            .iter()
+            .map(|s| format!("{}={}", s.name(), counts[s.index()]))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+struct SiteState {
+    rng: Rng,
+    seq: u64,
+    rate: f64,
+    kinds: Vec<FaultKind>,
+}
+
+/// The runtime decision-maker, shared (`Arc`) by every injection site.
+/// Each site owns an independent seeded stream plus a decision counter;
+/// both live under one mutex so the `(seq, kind)` pairing is exact.
+pub struct ChaosEngine {
+    sites: [Mutex<SiteState>; 4],
+    injected: [AtomicU64; 4],
+    plan: Mutex<Vec<FaultRecord>>,
+}
+
+impl std::fmt::Debug for ChaosEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ChaosEngine").field("plan_len", &self.plan().len()).finish()
+    }
+}
+
+impl ChaosEngine {
+    pub fn new(cfg: ChaosConfig) -> Self {
+        let state = |site: Site| {
+            let spec = cfg.specs.iter().find(|s| s.site == site);
+            Mutex::new(SiteState {
+                rng: Rng::seed_from_u64(cfg.seed ^ site.salt()),
+                seq: 0,
+                rate: spec.map_or(0.0, |s| s.rate),
+                kinds: spec.map_or_else(Vec::new, |s| s.kinds.clone()),
+            })
+        };
+        ChaosEngine {
+            sites: [
+                state(Site::Backend),
+                state(Site::Dispatch),
+                state(Site::Guest),
+                state(Site::Wire),
+            ],
+            injected: Default::default(),
+            plan: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// One decision point at `site`: `Some(kind)` means inject. Callers
+    /// act on the kind; the engine has already logged it.
+    pub fn decide(&self, site: Site) -> Option<FaultKind> {
+        let record = {
+            let mut st = self.sites[site.index()].lock().unwrap();
+            let seq = st.seq;
+            st.seq += 1;
+            if st.kinds.is_empty() || !st.rng.bool(st.rate) {
+                return None;
+            }
+            let pick = st.rng.below(st.kinds.len() as u64) as usize;
+            FaultRecord { site, seq, kind: st.kinds[pick] }
+        };
+        self.injected[site.index()].fetch_add(1, Relaxed);
+        self.plan.lock().unwrap().push(record);
+        Some(record.kind)
+    }
+
+    /// Faults injected at one site so far.
+    pub fn injected(&self, site: Site) -> u64 {
+        self.injected[site.index()].load(Relaxed)
+    }
+
+    pub fn total_injected(&self) -> u64 {
+        Site::ALL.iter().map(|&s| self.injected(s)).sum()
+    }
+
+    /// Decisions taken at one site so far (injected or not).
+    pub fn decisions(&self, site: Site) -> u64 {
+        self.sites[site.index()].lock().unwrap().seq
+    }
+
+    /// Snapshot of the replay log.
+    pub fn plan(&self) -> FaultPlan {
+        FaultPlan { records: self.plan.lock().unwrap().clone() }
+    }
+}
+
+// ----------------------------------------------------------------------
+// the backend-site injector
+// ----------------------------------------------------------------------
+
+/// A [`Backend`] decorator that consults the engine before every
+/// `execute`. Reports the *inner* backend's name so metrics attribution
+/// (per-backend jobs/errors) stays stable whether chaos is on or off.
+pub struct ChaosBackend {
+    inner: Box<dyn Backend>,
+    engine: Arc<ChaosEngine>,
+    metrics: Option<Arc<FabricMetrics>>,
+}
+
+impl ChaosBackend {
+    pub fn new(inner: Box<dyn Backend>, engine: Arc<ChaosEngine>) -> Self {
+        ChaosBackend { inner, engine, metrics: None }
+    }
+
+    fn count_injection(&self) {
+        if let Some(m) = &self.metrics {
+            m.chaos_backend_faults.fetch_add(1, Relaxed);
+        }
+    }
+}
+
+/// Perturb a reply into a wrong-but-plausible one: same shape, off-by-a
+/// visible-delta values. Differential harnesses compare against a clean
+/// run to prove detection; the serving path treats it as a completion.
+fn perturb(reply: BackendReply) -> BackendReply {
+    match reply {
+        BackendReply::Program { eax, clocks, cores, data } => {
+            BackendReply::Program { eax: eax.wrapping_add(1), clocks, cores, data }
+        }
+        BackendReply::Mass(mut r) => {
+            use crate::accel::MassResult;
+            match &mut r {
+                MassResult::Scalars(v) => {
+                    if let Some(x) = v.first_mut() {
+                        *x += 1.0;
+                    }
+                }
+                MassResult::Rows(rows) => {
+                    if let Some(x) = rows.first_mut().and_then(|row| row.first_mut()) {
+                        *x += 1.0;
+                    }
+                }
+                MassResult::Stats { sum, .. } => {
+                    if let Some(x) = sum.first_mut() {
+                        *x += 1.0;
+                    }
+                }
+            }
+            BackendReply::Mass(r)
+        }
+    }
+}
+
+impl Backend for ChaosBackend {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn execute(&self, job: BackendJob) -> Result<BackendReply, FabricError> {
+        match self.engine.decide(Site::Backend) {
+            None => self.inner.execute(job),
+            Some(FaultKind::BackendError) => {
+                self.count_injection();
+                Err(FabricError::Backend {
+                    name: self.inner.name().to_string(),
+                    msg: "chaos: injected backend error".into(),
+                })
+            }
+            Some(FaultKind::BackendLatency { ms }) => {
+                self.count_injection();
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                self.inner.execute(job)
+            }
+            Some(FaultKind::BackendPanic) => {
+                self.count_injection();
+                panic!("chaos: injected backend panic");
+            }
+            Some(FaultKind::WrongResult) => {
+                self.count_injection();
+                self.inner.execute(job).map(perturb)
+            }
+            // Kinds belonging to other sites never come out of the
+            // Backend stream under a well-formed spec; pass through.
+            Some(_) => self.inner.execute(job),
+        }
+    }
+
+    fn attach_metrics(&mut self, metrics: Arc<FabricMetrics>) {
+        self.metrics = Some(Arc::clone(&metrics));
+        self.inner.attach_metrics(metrics);
+    }
+
+    fn attach_chaos(&mut self, engine: Arc<ChaosEngine>) {
+        self.inner.attach_chaos(engine);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drive(engine: &ChaosEngine, per_site: u64) -> FaultPlan {
+        for _ in 0..per_site {
+            for s in Site::ALL {
+                engine.decide(s);
+            }
+        }
+        engine.plan()
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_identical_fault_plan() {
+        let cfg = ChaosConfig::uniform(42, 0.3);
+        let a = drive(&ChaosEngine::new(cfg.clone()), 200);
+        let b = drive(&ChaosEngine::new(cfg), 200);
+        assert!(!a.is_empty(), "rate 0.3 over 200 decisions injects");
+        assert_eq!(a, b);
+        let c = drive(&ChaosEngine::new(ChaosConfig::uniform(43, 0.3)), 200);
+        assert_ne!(a, c, "different seed, different plan");
+    }
+
+    #[test]
+    fn site_streams_are_independent() {
+        // Arming one extra site must not shift another site's stream.
+        let backend_only =
+            ChaosConfig::site(7, Site::Backend, 0.5, vec![FaultKind::BackendError]);
+        let mut both = backend_only.clone();
+        both.specs.push(FaultSpec {
+            site: Site::Wire,
+            rate: 0.5,
+            kinds: vec![FaultKind::ConnDrop],
+        });
+        let a = ChaosEngine::new(backend_only);
+        let b = ChaosEngine::new(both);
+        for _ in 0..100 {
+            a.decide(Site::Backend);
+            b.decide(Site::Backend);
+            b.decide(Site::Wire);
+        }
+        let backend_records = |p: FaultPlan| -> Vec<FaultRecord> {
+            p.records.into_iter().filter(|r| r.site == Site::Backend).collect()
+        };
+        assert_eq!(backend_records(a.plan()), backend_records(b.plan()));
+    }
+
+    #[test]
+    fn plan_is_interleaving_invariant_across_threads() {
+        // N threads hammering one site: the (seq, kind) log is a
+        // deterministic function of the decision count alone.
+        let cfg = ChaosConfig::site(9, Site::Dispatch, 0.4, vec![FaultKind::WorkerStall { ms: 0 }]);
+        let serial = drive(&ChaosEngine::new(cfg.clone()), 400);
+        let engine = Arc::new(ChaosEngine::new(cfg));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let e = Arc::clone(&engine);
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        e.decide(Site::Dispatch);
+                    }
+                });
+            }
+        });
+        let mut threaded = engine.plan();
+        // per-site seq order may interleave into the shared log out of
+        // order; sort by seq to compare the per-decision outcomes
+        threaded.records.sort_by_key(|r| r.seq);
+        assert_eq!(threaded, serial);
+        assert_eq!(engine.decisions(Site::Dispatch), 400);
+    }
+
+    #[test]
+    fn off_config_builds_no_engine() {
+        assert!(ChaosConfig::off().engine().is_none());
+        assert!(ChaosConfig::uniform(1, 0.0).engine().is_none());
+        assert!(ChaosConfig::uniform(1, 0.5).engine().is_some());
+    }
+
+    #[test]
+    fn rate_one_always_injects_and_unarmed_sites_never_do() {
+        let hot = ChaosEngine::new(ChaosConfig::site(
+            3,
+            Site::Guest,
+            1.0,
+            vec![FaultKind::GuestFault],
+        ));
+        for i in 0..50 {
+            assert_eq!(hot.decide(Site::Guest), Some(FaultKind::GuestFault));
+            assert_eq!(hot.decide(Site::Backend), None, "unarmed site {i}");
+        }
+        assert_eq!(hot.injected(Site::Guest), 50);
+        assert_eq!(hot.total_injected(), 50);
+        assert_eq!(hot.plan().summary(), "backend=0 dispatch=0 guest=50 wire=0");
+    }
+
+    #[test]
+    fn wrong_result_perturbs_but_keeps_shape() {
+        let r = perturb(BackendReply::Program { eax: 10, clocks: 5, cores: 2, data: vec![1] });
+        assert_eq!(r, BackendReply::Program { eax: 11, clocks: 5, cores: 2, data: vec![1] });
+        let r = perturb(BackendReply::Mass(crate::accel::MassResult::Scalars(vec![2.0, 3.0])));
+        let BackendReply::Mass(crate::accel::MassResult::Scalars(v)) = r else {
+            panic!("shape preserved")
+        };
+        assert_eq!(v, vec![3.0, 3.0]);
+    }
+}

@@ -58,6 +58,11 @@ pub trait Backend {
     /// backend can publish its internal counters (the sim pipeline's
     /// template-cache and processor-reuse stats). Default: no-op.
     fn attach_metrics(&mut self, _metrics: Arc<FabricMetrics>) {}
+    /// Attach the fabric's chaos engine after instantiation, so a
+    /// backend can host injection sites deeper than its `execute`
+    /// boundary (the sim pool's guest-fault hook). Default: no-op —
+    /// backends without internal sites ignore it.
+    fn attach_chaos(&mut self, _chaos: Arc<crate::chaos::ChaosEngine>) {}
 }
 
 /// Constructs a backend on the owning worker thread. Invoked once per
@@ -72,6 +77,13 @@ pub struct BackendEntry {
 }
 
 impl BackendEntry {
+    /// Build an entry from parts. Used by the chaos plane to rebuild a
+    /// chain with wrapped factories; normal registration goes through
+    /// [`BackendRegistry::register`].
+    pub fn new(name: impl Into<String>, class: BackendClass, factory: BackendFactory) -> Self {
+        BackendEntry { name: name.into(), class, factory }
+    }
+
     /// Run the factory (on the calling thread).
     pub fn instantiate(&self) -> anyhow::Result<Box<dyn Backend>> {
         (self.factory)()
@@ -297,6 +309,9 @@ pub struct SimBackend {
     live: RefCell<Option<Arc<Program>>>,
     stats: PipelineStats,
     metrics: Option<Arc<FabricMetrics>>,
+    /// Guest-site injection (`Site::Guest`): when armed, selected clean
+    /// runs are flipped into fault outcomes. `None` in normal service.
+    chaos: Option<Arc<crate::chaos::ChaosEngine>>,
 }
 
 impl SimBackend {
@@ -308,6 +323,7 @@ impl SimBackend {
             live: RefCell::new(None),
             stats: PipelineStats::default(),
             metrics: None,
+            chaos: None,
         }
     }
 
@@ -453,6 +469,22 @@ impl SimBackend {
         if let Some(f) = r.fault {
             return Err(FabricError::GuestFault(f));
         }
+        // Guest-site chaos: flip a cleanly finished run into the fault
+        // outcome the supervisor would report had the guest trapped —
+        // real faults above take precedence so injected ones never mask
+        // them. Same typed error, same caller-visible path.
+        if let Some(engine) = &self.chaos {
+            if engine.decide(crate::chaos::Site::Guest)
+                == Some(crate::chaos::FaultKind::GuestFault)
+            {
+                if let Some(m) = &self.metrics {
+                    m.chaos_guest_faults.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+                return Err(FabricError::GuestFault(
+                    "chaos: injected guest fault (clean run flipped)".into(),
+                ));
+            }
+        }
         // Memory-resident results (scale's output array) are read back
         // before the processor is reset by the next job.
         let data = match fam.readback(params) {
@@ -488,6 +520,10 @@ impl Backend for SimBackend {
 
     fn attach_metrics(&mut self, metrics: Arc<FabricMetrics>) {
         self.metrics = Some(metrics);
+    }
+
+    fn attach_chaos(&mut self, chaos: Arc<crate::chaos::ChaosEngine>) {
+        self.chaos = Some(chaos);
     }
 }
 

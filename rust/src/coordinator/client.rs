@@ -7,12 +7,12 @@
 //! can hold its own.
 
 use super::{JobCtx, Msg};
-use crate::api::{FabricError, Job, JobRequest, RequestKind};
+use crate::api::{Completion, FabricError, Job, JobRequest, RequestKind, RetryPolicy};
 use crate::coordinator::FabricMetrics;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, SyncSender, TrySendError};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Cloneable submission handle onto a running fabric.
 #[derive(Clone)]
@@ -75,6 +75,82 @@ impl FabricClient {
                 Err(FabricError::QueueFull)
             }
             Err(TrySendError::Disconnected(_)) => Err(FabricError::Shutdown),
+        }
+    }
+
+    /// Submit-and-wait with typed retry/backoff — the first rung of the
+    /// degradation ladder (retry → backend failover → shed). Only errors
+    /// whose [`FabricError::retryable`] says the capacity picture may
+    /// have changed are retried, with the policy's capped exponential
+    /// backoff between attempts; terminal errors (validation, guest
+    /// faults, cancellation) surface immediately. With
+    /// [`RetryPolicy::hedge_after`] set, a submission left unresolved
+    /// that long gets a duplicate in flight and the first resolution
+    /// wins (the loser is cancelled). Retries, exhaustions, and hedges
+    /// are all published through [`FabricMetrics`], globally and on the
+    /// tenant's ledger row.
+    pub fn call_with_retry(
+        &self,
+        req: impl Into<JobRequest>,
+        policy: &RetryPolicy,
+    ) -> Result<Completion, FabricError> {
+        let template = req.into();
+        let tag = template.client.clone().or_else(|| self.tag.clone());
+        let mut attempt = 1u32;
+        loop {
+            let outcome = match self.try_submit(template.clone()) {
+                Ok(job) => self.settle(job, &template, policy),
+                Err(e) => Err(e),
+            };
+            match outcome {
+                Ok(c) => return Ok(c),
+                Err(e) if e.retryable() && attempt < policy.max_attempts => {
+                    self.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                    if let Some(t) = tag.as_deref() {
+                        self.metrics.client(t).retries.fetch_add(1, Ordering::Relaxed);
+                    }
+                    std::thread::sleep(policy.backoff(attempt));
+                    attempt += 1;
+                }
+                Err(e) => {
+                    if e.retryable() {
+                        self.metrics.retry_exhausted.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    /// Wait for a submitted job; once `hedge_after` elapses unresolved,
+    /// put a duplicate in flight and take whichever resolves first.
+    fn settle(
+        &self,
+        job: Job,
+        template: &JobRequest,
+        policy: &RetryPolicy,
+    ) -> Result<Completion, FabricError> {
+        let Some(after) = policy.hedge_after else { return job.wait() };
+        let mut primary = job;
+        if let Some(r) = primary.wait_timeout(after) {
+            return r;
+        }
+        // The hedge is best-effort: if admission refuses it (queue full,
+        // quota), just keep waiting on the primary.
+        let Ok(mut hedge) = self.try_submit(template.clone()) else {
+            return primary.wait();
+        };
+        self.metrics.hedges.fetch_add(1, Ordering::Relaxed);
+        loop {
+            if let Some(r) = primary.try_wait() {
+                hedge.cancel();
+                return r;
+            }
+            if let Some(r) = hedge.try_wait() {
+                primary.cancel();
+                return r;
+            }
+            std::thread::sleep(Duration::from_micros(200));
         }
     }
 

@@ -34,6 +34,12 @@ pub struct ClientStats {
     pub shed: AtomicU64,
     /// Requests denied by this tenant's token-bucket quota.
     pub quota_denied: AtomicU64,
+    /// Retry attempts made on this tenant's behalf (each resubmission of
+    /// a retryable failure counts once; the original attempt does not).
+    pub retries: AtomicU64,
+    /// Submits refused because the tenant's auth token was missing or
+    /// wrong (serve plane with `--auth-token`).
+    pub unauthorized: AtomicU64,
 }
 
 /// Counters for one named backend (`sim`, `native`, `xla`, ...).
@@ -145,6 +151,26 @@ pub struct FabricMetrics {
     /// Serve plane: requests shed by a tripped SLO rule (per-rule split
     /// in the SLO governor's own render).
     pub slo_shed: AtomicU64,
+    /// Serve plane: submits refused for a missing/invalid auth token
+    /// (summed over tenants; per-tenant split in `client(tag)`).
+    pub unauthorized: AtomicU64,
+    /// Backend `execute` panics caught by a sim-pool worker and
+    /// converted into typed `FabricError::Backend` completions — the
+    /// lane survives, the job resolves, and this counter is the audit
+    /// trail. Nonzero outside chaos runs means a real backend bug.
+    pub worker_panics: AtomicU64,
+    /// Chaos plane: faults injected per site (`empa::chaos`). All zero
+    /// — and the `chaos:` render line absent — unless a seeded
+    /// `ChaosConfig` armed the fabric.
+    pub chaos_backend_faults: AtomicU64,
+    pub chaos_worker_stalls: AtomicU64,
+    pub chaos_guest_faults: AtomicU64,
+    pub chaos_wire_faults: AtomicU64,
+    /// Retry layer: resubmissions of retryable failures, policies that
+    /// ran out of attempts, and hedged duplicate submissions.
+    pub retries: AtomicU64,
+    pub retry_exhausted: AtomicU64,
+    pub hedges: AtomicU64,
     backends: Mutex<HashMap<String, Arc<BackendStats>>>,
     clients: Mutex<HashMap<String, Arc<ClientStats>>>,
     workers: Mutex<Vec<Arc<WorkerStats>>>,
@@ -297,6 +323,9 @@ impl FabricMetrics {
             g(&self.priority_flushes),
             g(&self.failovers),
         );
+        if g(&self.worker_panics) > 0 {
+            out.push_str(&format!(" worker_panics={}", g(&self.worker_panics)));
+        }
         if g(&self.template_hits) + g(&self.template_misses) > 0 {
             out.push_str(&format!(
                 "\n  program pipeline: template hits={} misses={} ({:.0}% hit) proc reuses={} rebuilds={} image reuses={}",
@@ -377,11 +406,36 @@ impl FabricMetrics {
                 g(&b.errors),
             ));
         }
-        if g(&self.quota_denied) + g(&self.slo_shed) > 0 {
+        if g(&self.quota_denied) + g(&self.slo_shed) + g(&self.unauthorized) > 0 {
             out.push_str(&format!(
                 "\n  serve plane: quota_denied={} slo_shed={}",
                 g(&self.quota_denied),
                 g(&self.slo_shed),
+            ));
+            if g(&self.unauthorized) > 0 {
+                out.push_str(&format!(" unauthorized={}", g(&self.unauthorized)));
+            }
+        }
+        let chaos_total = g(&self.chaos_backend_faults)
+            + g(&self.chaos_worker_stalls)
+            + g(&self.chaos_guest_faults)
+            + g(&self.chaos_wire_faults);
+        if chaos_total > 0 {
+            out.push_str(&format!(
+                "\n  chaos: backend={} stalls={} guest={} wire={} (total {})",
+                g(&self.chaos_backend_faults),
+                g(&self.chaos_worker_stalls),
+                g(&self.chaos_guest_faults),
+                g(&self.chaos_wire_faults),
+                chaos_total,
+            ));
+        }
+        if g(&self.retries) + g(&self.retry_exhausted) + g(&self.hedges) > 0 {
+            out.push_str(&format!(
+                "\n  retry: retries={} exhausted={} hedges={}",
+                g(&self.retries),
+                g(&self.retry_exhausted),
+                g(&self.hedges),
             ));
         }
         let clients = self.clients.lock().unwrap();
@@ -392,12 +446,22 @@ impl FabricMetrics {
             for t in tags {
                 let c = &clients[t];
                 out.push_str(&format!(
-                    " {t}[submitted={} accepted={} shed={} quota_denied={}]",
+                    " {t}[submitted={} accepted={} shed={} quota_denied={}",
                     g(&c.submitted),
                     g(&c.accepted),
                     g(&c.shed),
                     g(&c.quota_denied),
                 ));
+                // Newer per-tenant counters render only when nonzero, so
+                // the long-standing bracket format (asserted verbatim in
+                // the serve-plane tests) is unchanged for quiet tenants.
+                if g(&c.retries) > 0 {
+                    out.push_str(&format!(" retries={}", g(&c.retries)));
+                }
+                if g(&c.unauthorized) > 0 {
+                    out.push_str(&format!(" unauthorized={}", g(&c.unauthorized)));
+                }
+                out.push(']');
             }
         }
         out
@@ -565,5 +629,45 @@ mod tests {
         m.slo_shed.fetch_add(1, Ordering::Relaxed);
         let r = m.render();
         assert!(r.contains("serve plane: quota_denied=3 slo_shed=1"), "{r}");
+        assert!(!r.contains("unauthorized"), "hidden until an auth refusal");
+        m.unauthorized.fetch_add(2, Ordering::Relaxed);
+        let r = m.render();
+        assert!(r.contains("serve plane: quota_denied=3 slo_shed=1 unauthorized=2"), "{r}");
+    }
+
+    #[test]
+    fn chaos_and_retry_lines_are_hidden_until_nonzero() {
+        let m = FabricMetrics::default();
+        let r = m.render();
+        assert!(!r.contains("chaos:"), "{r}");
+        assert!(!r.contains("retry:"), "{r}");
+        assert!(!r.contains("worker_panics"), "{r}");
+        m.chaos_backend_faults.fetch_add(2, Ordering::Relaxed);
+        m.chaos_wire_faults.fetch_add(1, Ordering::Relaxed);
+        m.retries.fetch_add(4, Ordering::Relaxed);
+        m.hedges.fetch_add(1, Ordering::Relaxed);
+        m.worker_panics.fetch_add(1, Ordering::Relaxed);
+        let r = m.render();
+        assert!(r.contains("chaos: backend=2 stalls=0 guest=0 wire=1 (total 3)"), "{r}");
+        assert!(r.contains("retry: retries=4 exhausted=0 hedges=1"), "{r}");
+        assert!(r.contains("worker_panics=1"), "{r}");
+    }
+
+    #[test]
+    fn per_tenant_retry_and_unauthorized_render_only_when_nonzero() {
+        let m = FabricMetrics::default();
+        m.client("quiet").submitted.fetch_add(1, Ordering::Relaxed);
+        m.client("noisy").submitted.fetch_add(2, Ordering::Relaxed);
+        m.client("noisy").retries.fetch_add(3, Ordering::Relaxed);
+        m.client("noisy").unauthorized.fetch_add(1, Ordering::Relaxed);
+        let r = m.render();
+        assert!(
+            r.contains("quiet[submitted=1 accepted=0 shed=0 quota_denied=0]"),
+            "quiet tenants keep the original bracket format: {r}"
+        );
+        assert!(
+            r.contains("noisy[submitted=2 accepted=0 shed=0 quota_denied=0 retries=3 unauthorized=1]"),
+            "{r}"
+        );
     }
 }

@@ -83,6 +83,10 @@ pub struct FabricConfig {
     /// Bounded queue depth — ingress, the dispatch plane's summed lane
     /// caps, and the supervisor's overflow heap each get this much.
     pub queue_cap: usize,
+    /// Seeded fault injection (`empa::chaos`). Off by default; when
+    /// armed, registry backends are wrapped in `ChaosBackend`, sim
+    /// workers may stall between tasks, and the guest hook is attached.
+    pub chaos: crate::chaos::ChaosConfig,
 }
 
 impl Default for FabricConfig {
@@ -93,6 +97,7 @@ impl Default for FabricConfig {
             batcher: BatcherConfig::default(),
             route: RoutePolicy::default(),
             queue_cap: 256,
+            chaos: crate::chaos::ChaosConfig::off(),
         }
     }
 }
@@ -354,6 +359,9 @@ pub struct Fabric {
     client: FabricClient,
     pub metrics: Arc<FabricMetrics>,
     threads: Mutex<Vec<JoinHandle<()>>>,
+    /// `Some` only when `FabricConfig::chaos` armed fault injection; the
+    /// serve plane shares this engine for its wire-site decisions.
+    chaos: Option<Arc<crate::chaos::ChaosEngine>>,
 }
 
 impl Fabric {
@@ -366,8 +374,12 @@ impl Fabric {
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = sync_channel::<Msg>(cfg.queue_cap);
         let mut threads = Vec::new();
-        let program_chain = registry.chain(BackendClass::Program);
-        let mass_chain = registry.chain(BackendClass::Mass);
+        // Chaos is an engine only when armed; a `None` here means every
+        // path below is byte-for-byte the pre-chaos fabric (no wrapper
+        // backends, no per-task decision points).
+        let chaos = cfg.chaos.engine();
+        let program_chain = chaos_wrap_chain(registry.chain(BackendClass::Program), chaos.as_ref());
+        let mass_chain = chaos_wrap_chain(registry.chain(BackendClass::Mass), chaos.as_ref());
 
         // --- sim worker pool over the dispatch plane -------------------
         // Each worker owns a bounded deque; the supervisor places on the
@@ -378,10 +390,11 @@ impl Fabric {
             let plane = Arc::clone(&plane);
             let chain = program_chain.clone();
             let m = Arc::clone(&metrics);
+            let ch = chaos.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name(format!("empa-sim-{w}"))
-                    .spawn(move || sim_worker(w, plane, chain, m))
+                    .spawn(move || sim_worker(w, plane, chain, m, ch))
                     .expect("spawn sim worker"),
             );
         }
@@ -413,7 +426,14 @@ impl Fabric {
         }
 
         let client = FabricClient::new(tx, Arc::clone(&metrics), stop);
-        Arc::new(Fabric { client, metrics, threads: Mutex::new(threads) })
+        Arc::new(Fabric { client, metrics, threads: Mutex::new(threads), chaos })
+    }
+
+    /// The shared chaos engine, when `FabricConfig::chaos` armed one —
+    /// the serve plane draws its wire-site decisions (and its fault-plan
+    /// rendering) from the same engine the backends use.
+    pub fn chaos(&self) -> Option<Arc<crate::chaos::ChaosEngine>> {
+        self.chaos.clone()
     }
 
     /// Start with the default local registry (`sim` + `native`).
@@ -813,6 +833,45 @@ fn inline_mass(kind: &RequestKind) -> Result<Output, FabricError> {
     }
 }
 
+/// Rebuild a registry chain with every entry's backend wrapped in a
+/// [`crate::chaos::ChaosBackend`] (and handed the engine for deeper
+/// sites via `attach_chaos`). Identity when chaos is off: the original
+/// entries pass through untouched, so the disabled configuration keeps
+/// the exact pre-chaos factories.
+fn chaos_wrap_chain(
+    chain: Vec<Arc<BackendEntry>>,
+    engine: Option<&Arc<crate::chaos::ChaosEngine>>,
+) -> Vec<Arc<BackendEntry>> {
+    let Some(engine) = engine else { return chain };
+    chain
+        .into_iter()
+        .map(|entry| {
+            let eng = Arc::clone(engine);
+            let inner = Arc::clone(&entry);
+            Arc::new(BackendEntry::new(
+                entry.name.clone(),
+                entry.class,
+                Box::new(move || {
+                    let mut b = inner.instantiate()?;
+                    b.attach_chaos(Arc::clone(&eng));
+                    Ok(Box::new(crate::chaos::ChaosBackend::new(b, Arc::clone(&eng)))
+                        as Box<dyn Backend>)
+                }),
+            ))
+        })
+        .collect()
+}
+
+/// Human-readable payload of a caught panic (`panic!` carries `&str` or
+/// `String`; anything else renders opaquely).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("opaque panic payload")
+}
+
 /// Instantiate the first healthy backend of a chain on this thread,
 /// recording init successes/failures per backend. A failover is counted
 /// only when a later entry actually takes over — if every entry fails,
@@ -862,11 +921,23 @@ fn sim_worker(
     plane: Arc<DispatchPlane<SimTask>>,
     chain: Vec<Arc<BackendEntry>>,
     metrics: Arc<FabricMetrics>,
+    chaos: Option<Arc<crate::chaos::ChaosEngine>>,
 ) {
     let active = instantiate_chain(&chain, &metrics);
     let stats = active.as_ref().ok().map(|b| metrics.backend(b.name()));
     let wstats = metrics.worker(w);
     while let Some(task) = plane.next(w) {
+        // Dispatch-site chaos: stall this worker before it serves the
+        // task. The job still completes (late) — stalls exercise the
+        // work-stealing and deadline paths, not the error paths.
+        if let Some(engine) = &chaos {
+            if let Some(crate::chaos::FaultKind::WorkerStall { ms }) =
+                engine.decide(crate::chaos::Site::Dispatch)
+            {
+                metrics.chaos_worker_stalls.fetch_add(1, Relaxed);
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        }
         let served = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             serve_sim_task(task, &active, stats.as_deref(), &wstats, &metrics)
         }));
@@ -923,7 +994,27 @@ fn serve_sim_task(
             let stats = stats.expect("stats exist when backend does");
             let reply = match &kind {
                 RequestKind::RunProgram { family, mode, params } => {
-                    backend.execute(BackendJob::Program { family: *family, mode: *mode, params })
+                    // Catch panics at the execute boundary, not just the
+                    // outer task loop: here the JobCtx is still in hand,
+                    // so the caller gets a typed `Backend` error instead
+                    // of watching its reply sender vanish (`Shutdown`).
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        backend.execute(BackendJob::Program {
+                            family: *family,
+                            mode: *mode,
+                            params,
+                        })
+                    }));
+                    match run {
+                        Ok(r) => r,
+                        Err(payload) => {
+                            metrics.worker_panics.fetch_add(1, Relaxed);
+                            Err(FabricError::Backend {
+                                name: backend.name().to_string(),
+                                msg: format!("panicked: {}", panic_message(payload.as_ref())),
+                            })
+                        }
+                    }
                 }
                 RequestKind::MassSum { .. } | RequestKind::MassDot { .. } => {
                     unreachable!("mass ops served above")
@@ -1046,7 +1137,21 @@ impl MassChain {
                 }
             }
             let Slot::Ready(backend, stats) = &self.slots[i] else { continue };
-            match backend.execute(BackendJob::Mass(req)) {
+            // Same panic boundary as the sim workers: a backend that
+            // panics mid-batch must not unwind through the single
+            // `fabric-mass` thread — treat it as a per-batch failure and
+            // let the rest of the chain take the batch.
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                backend.execute(BackendJob::Mass(req))
+            }))
+            .unwrap_or_else(|payload| {
+                metrics.worker_panics.fetch_add(1, Relaxed);
+                Err(FabricError::Backend {
+                    name: backend.name().to_string(),
+                    msg: format!("panicked: {}", panic_message(payload.as_ref())),
+                })
+            });
+            match run {
                 Ok(BackendReply::Mass(res)) => {
                     stats.jobs.fetch_add(rows, Relaxed);
                     stats.batches.fetch_add(1, Relaxed);

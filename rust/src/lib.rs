@@ -28,6 +28,7 @@
 
 pub mod accel;
 pub mod api;
+pub mod chaos;
 pub mod coordinator;
 pub mod emu;
 pub mod empa;

@@ -11,15 +11,20 @@
 use super::wire::{
     decode_reply, encode_request, read_frame, write_frame, WireReply, WireRequest, MAX_FRAME,
 };
-use crate::api::{JobRequest, JobResult};
+use crate::api::{JobRequest, JobResult, RetryPolicy};
 use anyhow::{bail, Context};
 use std::net::TcpStream;
 
 /// Blocking wire-protocol client over one TCP connection.
 pub struct WireClient {
     stream: TcpStream,
+    /// Resolved peer address, kept so [`WireClient::call_with_retry`]
+    /// can reconnect after a dropped connection.
+    addr: std::net::SocketAddr,
     next_id: u64,
     max_frame: usize,
+    /// Shared-secret auth token stamped onto every submit.
+    token: Option<String>,
 }
 
 impl WireClient {
@@ -27,12 +32,20 @@ impl WireClient {
     pub fn connect(addr: impl std::net::ToSocketAddrs + std::fmt::Debug) -> anyhow::Result<WireClient> {
         let stream =
             TcpStream::connect(&addr).with_context(|| format!("connect to serve plane {addr:?}"))?;
-        Ok(WireClient { stream, next_id: 0, max_frame: MAX_FRAME })
+        let addr = stream.peer_addr().context("serve plane peer addr")?;
+        Ok(WireClient { stream, addr, next_id: 0, max_frame: MAX_FRAME, token: None })
     }
 
     /// Override the frame cap (must match the server's to be useful).
     pub fn with_max_frame(mut self, cap: usize) -> WireClient {
         self.max_frame = cap;
+        self
+    }
+
+    /// Present a shared-secret auth token on every submit (required when
+    /// the server was started with one).
+    pub fn with_token(mut self, token: impl Into<String>) -> WireClient {
+        self.token = Some(token.into());
         self
     }
 
@@ -42,8 +55,10 @@ impl WireClient {
     pub fn try_clone(&self) -> anyhow::Result<WireClient> {
         Ok(WireClient {
             stream: self.stream.try_clone().context("clone wire stream")?,
+            addr: self.addr,
             next_id: self.next_id,
             max_frame: self.max_frame,
+            token: self.token.clone(),
         })
     }
 
@@ -51,7 +66,8 @@ impl WireClient {
     pub fn submit(&mut self, req: &JobRequest) -> anyhow::Result<u64> {
         self.next_id += 1;
         let id = self.next_id;
-        let payload = encode_request(&WireRequest::submit(id, req));
+        let payload =
+            encode_request(&WireRequest::submit_with_token(id, req, self.token.as_deref()));
         write_frame(&mut self.stream, &payload, self.max_frame).context("write submit frame")?;
         Ok(id)
     }
@@ -83,6 +99,59 @@ impl WireClient {
                 other => bail!("reply for id {} while waiting for {id}", other.id()),
             }
         }
+    }
+
+    /// [`WireClient::call`] with typed retry/backoff and transparent
+    /// reconnection — the client half of the chaos story. Two failure
+    /// classes are retried, up to the policy's attempt budget and with
+    /// its capped exponential backoff between attempts:
+    ///
+    /// - **transport faults** (connection dropped mid-frame, partial
+    ///   frame, refused write): the client reconnects to the same peer
+    ///   and resubmits — a job orphaned on the old connection still runs
+    ///   to completion server-side (the pump reaps its reply into a dead
+    ///   socket);
+    /// - **typed retryable errors** ([`FabricError::retryable`]:
+    ///   queue-full, backend, quota, overloaded) carried in a `Failed`
+    ///   reply.
+    ///
+    /// Terminal typed errors return immediately; transport faults with
+    /// no attempts left surface as the underlying `anyhow` error.
+    ///
+    /// [`FabricError::retryable`]: crate::api::FabricError::retryable
+    pub fn call_with_retry(
+        &mut self,
+        req: &JobRequest,
+        policy: &RetryPolicy,
+    ) -> anyhow::Result<JobResult> {
+        let mut attempt = 1u32;
+        loop {
+            match self.call(req) {
+                Ok(Ok(completion)) => return Ok(Ok(completion)),
+                Ok(Err(e)) if e.retryable() && attempt < policy.max_attempts => {
+                    std::thread::sleep(policy.backoff(attempt));
+                    attempt += 1;
+                }
+                Ok(Err(e)) => return Ok(Err(e)),
+                Err(transport) if attempt < policy.max_attempts => {
+                    std::thread::sleep(policy.backoff(attempt));
+                    attempt += 1;
+                    self.reconnect().with_context(|| {
+                        format!("reconnect after transport fault: {transport:#}")
+                    })?;
+                }
+                Err(transport) => return Err(transport),
+            }
+        }
+    }
+
+    /// Replace the connection with a fresh one to the same peer. Request
+    /// ids stay monotonic across reconnects, so late replies from an old
+    /// connection can never be confused with new ones.
+    pub fn reconnect(&mut self) -> anyhow::Result<()> {
+        self.stream = TcpStream::connect(self.addr)
+            .with_context(|| format!("reconnect to serve plane {}", self.addr))?;
+        Ok(())
     }
 
     /// Fetch the server's rendered metrics + SLO playbook.

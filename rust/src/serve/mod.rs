@@ -63,6 +63,13 @@ pub struct ServeConfig {
     pub slo: SloConfig,
     /// Frame-size cap enforced on both directions.
     pub max_frame: usize,
+    /// Optional shared-secret auth token. When set, every `Submit` must
+    /// carry the same token or it is refused with a typed
+    /// `Unauthorized { tenant }` before any policy layer runs. (Closes
+    /// the "tenant tag is client-asserted" gap — the tag still names the
+    /// ledger row, but an unauthenticated peer can no longer submit at
+    /// all.)
+    pub auth_token: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -75,6 +82,7 @@ impl Default for ServeConfig {
             quota: QuotaConfig::default(),
             slo,
             max_frame: MAX_FRAME,
+            auth_token: None,
         }
     }
 }
@@ -88,6 +96,17 @@ const PUMP_WORKERS: usize = 2;
 /// to poll (also its drain-poll interval during shutdown).
 const PUMP_POLL: Duration = Duration::from_millis(1);
 
+/// Wire-site chaos context threaded to every reply writer: the fabric's
+/// shared engine (so wire decisions land in the same [`FaultPlan`] as
+/// backend/dispatch/guest ones) plus the metrics to count injections.
+///
+/// [`FaultPlan`]: crate::chaos::FaultPlan
+#[derive(Clone)]
+struct WireChaos {
+    engine: Arc<crate::chaos::ChaosEngine>,
+    metrics: Arc<FabricMetrics>,
+}
+
 /// One accepted job parked in the completion pump until the fabric
 /// resolves it.
 struct PumpEntry {
@@ -95,6 +114,7 @@ struct PumpEntry {
     job: Job,
     out: Arc<Mutex<TcpStream>>,
     max_frame: usize,
+    chaos: Option<WireChaos>,
 }
 
 /// Bounded pool of reply writers: accepted jobs are parked here and
@@ -191,7 +211,7 @@ fn pump_loop(rx: mpsc::Receiver<PumpEntry>) {
                         Ok(completion) => WireReply::Completed { id: e.id, completion },
                         Err(error) => WireReply::Failed { id: e.id, error },
                     };
-                    send_reply(&e.out, &reply, e.max_frame);
+                    send_reply(&e.out, &reply, e.max_frame, e.chaos.as_ref());
                 }
                 None => i += 1,
             }
@@ -235,6 +255,8 @@ impl ServePlane {
         let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::default();
         let pump = Arc::new(CompletionPump::new(PUMP_WORKERS));
 
+        let auth = Arc::new(cfg.auth_token);
+
         let acceptor = {
             let fabric = Arc::clone(&fabric);
             let governor = Arc::clone(&governor);
@@ -242,12 +264,14 @@ impl ServePlane {
             let conns = Arc::clone(&conns);
             let handlers = Arc::clone(&handlers);
             let pump = Arc::clone(&pump);
+            let auth = Arc::clone(&auth);
             let max_frame = cfg.max_frame;
             std::thread::Builder::new()
                 .name("empa-serve-accept".into())
                 .spawn(move || {
                     accept_loop(
-                        listener, fabric, governor, quota, stop, conns, handlers, pump, max_frame,
+                        listener, fabric, governor, quota, stop, conns, handlers, pump, auth,
+                        max_frame,
                     )
                 })
                 .context("spawn serve acceptor")?
@@ -322,6 +346,7 @@ fn accept_loop(
     conns: Arc<Mutex<Vec<TcpStream>>>,
     handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
     pump: Arc<CompletionPump>,
+    auth: Arc<Option<String>>,
     max_frame: usize,
 ) {
     while !stop.load(Ordering::Acquire) {
@@ -338,9 +363,12 @@ fn accept_loop(
                 let governor = Arc::clone(&governor);
                 let quota = Arc::clone(&quota);
                 let pump = Arc::clone(&pump);
+                let auth = Arc::clone(&auth);
                 let spawned = std::thread::Builder::new()
                     .name("empa-serve-conn".into())
-                    .spawn(move || handle_conn(stream, fabric, governor, quota, pump, max_frame));
+                    .spawn(move || {
+                        handle_conn(stream, fabric, governor, quota, pump, auth, max_frame)
+                    });
                 if let Ok(h) = spawned {
                     handlers.lock().unwrap().push(h);
                 }
@@ -355,24 +383,65 @@ fn accept_loop(
 
 /// Write one reply frame under the connection's write lock (completions
 /// from different waiter threads interleave frame-atomically).
-fn send_reply(out: &Mutex<TcpStream>, reply: &WireReply, max_frame: usize) {
+///
+/// This is the serve plane's wire-site chaos injection point: every
+/// reply is one `Site::Wire` decision. `ConnDrop` tears the connection
+/// down instead of carrying the frame, `PartialWrite` emits the length
+/// prefix plus half the payload and then drops (the peer sees a typed
+/// `Truncated`, never a panic), `DelayedRead` stalls the write so the
+/// peer's read arrives late (exercising client read timeouts/retries).
+fn send_reply(
+    out: &Mutex<TcpStream>,
+    reply: &WireReply,
+    max_frame: usize,
+    chaos: Option<&WireChaos>,
+) {
+    use std::io::Write;
     let payload = wire::encode_reply(reply);
     let mut g = out.lock().unwrap();
+    if let Some(cx) = chaos {
+        match cx.engine.decide(crate::chaos::Site::Wire) {
+            Some(crate::chaos::FaultKind::ConnDrop) => {
+                cx.metrics.chaos_wire_faults.fetch_add(1, Ordering::Relaxed);
+                let _ = g.shutdown(Shutdown::Both);
+                return;
+            }
+            Some(crate::chaos::FaultKind::PartialWrite) => {
+                cx.metrics.chaos_wire_faults.fetch_add(1, Ordering::Relaxed);
+                let _ = g.write_all(&(payload.len() as u32).to_le_bytes());
+                let _ = g.write_all(&payload[..payload.len() / 2]);
+                let _ = g.flush();
+                let _ = g.shutdown(Shutdown::Both);
+                return;
+            }
+            Some(crate::chaos::FaultKind::DelayedRead { ms }) => {
+                cx.metrics.chaos_wire_faults.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            _ => {}
+        }
+    }
     let _ = wire::write_frame(&mut *g, &payload, max_frame);
 }
 
 /// One connection: read frames until EOF/error, run each request through
-/// the admission stack, park accepted jobs in the completion pump.
+/// the admission stack, park accepted jobs in the completion pump. When
+/// the serve plane requires an auth token, unauthenticated submits are
+/// refused with a typed `Unauthorized` before any policy layer runs.
 fn handle_conn(
     mut stream: TcpStream,
     fabric: Arc<Fabric>,
     governor: Arc<SloGovernor>,
     quota: Arc<QuotaTable>,
     pump: Arc<CompletionPump>,
+    auth: Arc<Option<String>>,
     max_frame: usize,
 ) {
     let Ok(write_half) = stream.try_clone() else { return };
     let out = Arc::new(Mutex::new(write_half));
+    let chaos = fabric
+        .chaos()
+        .map(|engine| WireChaos { engine, metrics: Arc::clone(&fabric.metrics) });
     loop {
         let payload = match wire::read_frame(&mut stream, max_frame) {
             Ok(Some(p)) => p,
@@ -390,22 +459,43 @@ fn handle_conn(
                     id: 0,
                     error: FabricError::InvalidConfig(format!("bad request frame: {e}")),
                 };
-                send_reply(&out, &reply, max_frame);
+                send_reply(&out, &reply, max_frame, chaos.as_ref());
                 return;
             }
         };
         match req {
             WireRequest::Metrics { id } => {
                 let text = format!("{}\n{}", fabric.metrics.render(), governor.render());
-                send_reply(&out, &WireReply::MetricsText { id, text }, max_frame);
+                send_reply(&out, &WireReply::MetricsText { id, text }, max_frame, chaos.as_ref());
             }
             submit @ WireRequest::Submit { .. } => {
                 let id = submit.id();
+                let token = match &submit {
+                    WireRequest::Submit { token, .. } => token.clone(),
+                    _ => None,
+                };
                 let job_req = submit.into_job().expect("Submit carries a job");
                 let tenant = job_req.client.clone();
                 let metrics = &fabric.metrics;
                 let tenant_stats = tenant.as_deref().map(|t| metrics.client(t));
                 let now = Instant::now();
+
+                // 0) Auth gate: a server started with a token refuses
+                //    everything that doesn't present it, before policy.
+                if let Some(expected) = &*auth {
+                    if token.as_deref() != Some(expected.as_str()) {
+                        metrics.unauthorized.fetch_add(1, Ordering::Relaxed);
+                        if let Some(s) = &tenant_stats {
+                            s.submitted.fetch_add(1, Ordering::Relaxed);
+                            s.unauthorized.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let error = FabricError::Unauthorized {
+                            tenant: tenant.as_deref().unwrap_or("").to_string(),
+                        };
+                        send_reply(&out, &WireReply::Failed { id, error }, max_frame, chaos.as_ref());
+                        continue;
+                    }
+                }
 
                 // 1) SLO governor: policy shed before any queue.
                 if let Some((rule, action)) = governor.decide(metrics, now) {
@@ -417,7 +507,7 @@ fn handle_conn(
                         }
                         governor.note_shed(rule);
                         let error = FabricError::Overloaded { rule: rule.to_string() };
-                        send_reply(&out, &WireReply::Failed { id, error }, max_frame);
+                        send_reply(&out, &WireReply::Failed { id, error }, max_frame, chaos.as_ref());
                         continue;
                     }
                 }
@@ -432,7 +522,7 @@ fn handle_conn(
                     let error = FabricError::QuotaExceeded {
                         tenant: tenant.as_deref().unwrap_or("").to_string(),
                     };
-                    send_reply(&out, &WireReply::Failed { id, error }, max_frame);
+                    send_reply(&out, &WireReply::Failed { id, error }, max_frame, chaos.as_ref());
                     continue;
                 }
 
@@ -443,13 +533,19 @@ fn handle_conn(
                     Ok(job) => {
                         // Park in the pump: it replies whenever the
                         // fabric resolves; the write lock orders frames.
-                        pump.submit(PumpEntry { id, job, out: Arc::clone(&out), max_frame });
+                        pump.submit(PumpEntry {
+                            id,
+                            job,
+                            out: Arc::clone(&out),
+                            max_frame,
+                            chaos: chaos.clone(),
+                        });
                     }
                     Err(error) => {
                         if let Some(s) = &tenant_stats {
                             s.submitted.fetch_add(1, Ordering::Relaxed);
                         }
-                        send_reply(&out, &WireReply::Failed { id, error }, max_frame);
+                        send_reply(&out, &WireReply::Failed { id, error }, max_frame, chaos.as_ref());
                     }
                 }
             }

@@ -32,7 +32,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 /// Protocol version stamped on (and checked in) every payload.
-pub const WIRE_VERSION: u8 = 1;
+/// Version 2 added the optional shared-secret auth token on `Submit`
+/// and the `Unauthorized` error code.
+pub const WIRE_VERSION: u8 = 2;
 
 /// Default hard cap on a frame's payload length (16 MiB).
 pub const MAX_FRAME: usize = 16 << 20;
@@ -105,9 +107,13 @@ impl From<std::io::Error> for CodecError {
 pub enum WireRequest {
     /// Submit one job. `id` is chosen by the client and echoed on the
     /// reply; `deadline_us` is the relative deadline in microseconds.
+    /// `token` is the optional shared-secret auth token: when the server
+    /// was started with one, submits that don't present it come back as
+    /// [`FabricError::Unauthorized`].
     Submit {
         id: u64,
         tenant: Option<String>,
+        token: Option<String>,
         priority: Priority,
         deadline_us: Option<u64>,
         kind: RequestKind,
@@ -121,9 +127,15 @@ impl WireRequest {
     /// Build a `Submit` from a typed [`JobRequest`] (the loadgen path:
     /// `TraceGen` emits `JobRequest`s, the wire carries them).
     pub fn submit(id: u64, req: &JobRequest) -> WireRequest {
+        WireRequest::submit_with_token(id, req, None)
+    }
+
+    /// Build a `Submit` carrying a shared-secret auth token.
+    pub fn submit_with_token(id: u64, req: &JobRequest, token: Option<&str>) -> WireRequest {
         WireRequest::Submit {
             id,
             tenant: req.client.as_deref().map(str::to_string),
+            token: token.map(str::to_string),
             priority: req.priority,
             deadline_us: req.deadline.map(|d| d.as_micros() as u64),
             kind: req.kind.clone(),
@@ -395,6 +407,7 @@ const ERR_BACKEND: u8 = 9;
 const ERR_SHUTDOWN: u8 = 10;
 const ERR_QUOTA: u8 = 11;
 const ERR_OVERLOADED: u8 = 12;
+const ERR_UNAUTHORIZED: u8 = 13;
 
 fn encode_error(e: &mut Enc, err: &FabricError) {
     match err {
@@ -438,6 +451,10 @@ fn encode_error(e: &mut Enc, err: &FabricError) {
             e.u8(ERR_OVERLOADED);
             e.str(rule);
         }
+        FabricError::Unauthorized { tenant } => {
+            e.u8(ERR_UNAUTHORIZED);
+            e.str(tenant);
+        }
     }
 }
 
@@ -468,10 +485,11 @@ fn encode_output(e: &mut Enc, out: &Output) {
 /// [`write_frame`]).
 pub fn encode_request(req: &WireRequest) -> Vec<u8> {
     match req {
-        WireRequest::Submit { id, tenant, priority, deadline_us, kind } => {
+        WireRequest::Submit { id, tenant, token, priority, deadline_us, kind } => {
             let mut e = Enc::new(TAG_SUBMIT);
             e.u64(*id);
             e.opt_str(tenant.as_deref());
+            e.opt_str(token.as_deref());
             e.u8(priority_tag(*priority));
             match deadline_us {
                 None => e.u8(0),
@@ -731,6 +749,7 @@ fn decode_error(c: &mut Cur) -> Result<FabricError, CodecError> {
         ERR_SHUTDOWN => Ok(FabricError::Shutdown),
         ERR_QUOTA => Ok(FabricError::QuotaExceeded { tenant: c.str("quota tenant")? }),
         ERR_OVERLOADED => Ok(FabricError::Overloaded { rule: c.str("slo rule")? }),
+        ERR_UNAUTHORIZED => Ok(FabricError::Unauthorized { tenant: c.str("auth tenant")? }),
         got => Err(CodecError::BadTag { what: "error code", got }),
     }
 }
@@ -773,6 +792,7 @@ pub fn decode_request(payload: &[u8]) -> Result<WireRequest, CodecError> {
         TAG_SUBMIT => {
             let id = c.u64()?;
             let tenant = c.opt_str("tenant")?;
+            let token = c.opt_str("token")?;
             let priority = decode_priority(&mut c)?;
             let deadline_us = match c.u8()? {
                 0 => None,
@@ -780,7 +800,7 @@ pub fn decode_request(payload: &[u8]) -> Result<WireRequest, CodecError> {
                 got => return Err(CodecError::BadTag { what: "deadline option", got }),
             };
             let kind = decode_kind(&mut c)?;
-            WireRequest::Submit { id, tenant, priority, deadline_us, kind }
+            WireRequest::Submit { id, tenant, token, priority, deadline_us, kind }
         }
         TAG_METRICS => WireRequest::Metrics { id: c.u64()? },
         got => return Err(CodecError::BadTag { what: "request message", got }),
@@ -848,6 +868,16 @@ mod tests {
     }
 
     #[test]
+    fn submit_token_survives_the_round_trip() {
+        let req = JobRequest::new(RequestKind::mass_sum(vec![1.0])).with_client("tenant-a");
+        let wire = WireRequest::submit_with_token(3, &req, Some("s3cret"));
+        let decoded = decode_request(&encode_request(&wire)).unwrap();
+        assert_eq!(decoded, wire);
+        let WireRequest::Submit { token, .. } = decoded else { panic!("not a submit") };
+        assert_eq!(token.as_deref(), Some("s3cret"));
+    }
+
+    #[test]
     fn frame_cap_is_enforced_on_both_sides() {
         let mut out = Vec::new();
         let err = write_frame(&mut out, &[0u8; 64], 16).unwrap_err();
@@ -886,6 +916,7 @@ mod tests {
         let mut e = Enc::new(TAG_SUBMIT);
         e.u64(1);
         e.u8(0); // no tenant
+        e.u8(0); // no token
         e.u8(1); // Normal
         e.u8(0); // no deadline
         e.u8(KIND_MASS_SUM);

@@ -1,0 +1,330 @@
+//! Chaos-plane integration tests: deterministic fault plans, typed
+//! outcomes for every injected fault kind, worker panic safety, the
+//! retry ladder, and the registry's failover accounting under injected
+//! init faults. Everything runs against a real fabric; nothing here
+//! touches the network (the wire-site tests live in `serve_tcp.rs`).
+
+use empa::accel::{Accelerator, NativeAccel};
+use empa::api::{FabricError, JobRequest, Output, RequestKind, RetryPolicy};
+use empa::chaos::{ChaosConfig, FaultKind, Site};
+use empa::coordinator::{
+    Backend, BackendClass, BackendJob, BackendRegistry, BackendReply, Fabric, FabricConfig,
+    SimBackend,
+};
+use empa::workload::sumup::Mode;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+fn sumup(i: i32) -> JobRequest {
+    JobRequest::new(RequestKind::sumup(Mode::Sumup, vec![i, i + 1, i + 2])).with_client("chaos")
+}
+
+/// Run `n` program jobs sequentially (single worker, closed loop) on a
+/// chaos-armed fabric and return (fault plan, outcome transcript).
+fn run_once(chaos: ChaosConfig, n: i32) -> (empa::chaos::FaultPlan, Vec<String>) {
+    let cfg = FabricConfig { sim_workers: 1, chaos, ..Default::default() };
+    let fabric = Fabric::start_local(cfg);
+    let mut outcomes = Vec::new();
+    for i in 0..n {
+        let r = fabric.submit(sumup(i)).expect("submit").wait();
+        outcomes.push(match r {
+            Ok(c) => match c.output {
+                Output::Program { eax, .. } => format!("ok:{eax}"),
+                other => format!("ok:?{other:?}"),
+            },
+            Err(e) => format!("err:{e}"),
+        });
+    }
+    let plan = fabric.chaos().expect("chaos armed").plan();
+    fabric.shutdown();
+    (plan, outcomes)
+}
+
+#[test]
+fn same_seed_replays_the_identical_plan_and_outcomes() {
+    // Sequential closed loop => the per-site decision counts are
+    // deterministic, so the whole run — which jobs fault, with what
+    // kind, and every job's outcome — must replay bit-for-bit.
+    let (plan_a, out_a) = run_once(ChaosConfig::uniform(11, 0.6), 12);
+    let (plan_b, out_b) = run_once(ChaosConfig::uniform(11, 0.6), 12);
+    assert!(!plan_a.is_empty(), "rate 0.6 over 12 jobs must inject something");
+    assert_eq!(plan_a, plan_b, "fault plan is not seed-deterministic");
+    assert_eq!(out_a, out_b, "job outcomes diverged under the same plan");
+
+    // A different seed draws a different plan (overwhelmingly likely;
+    // equal plans here would mean the seed is ignored).
+    let (plan_c, _) = run_once(ChaosConfig::uniform(12, 0.6), 12);
+    assert_ne!(plan_a, plan_c, "seed does not influence the plan");
+}
+
+#[test]
+fn chaos_off_fabric_has_no_engine_and_serves_normally() {
+    let fabric = Fabric::start_local(FabricConfig { sim_workers: 1, ..Default::default() });
+    assert!(fabric.chaos().is_none(), "default config must not build an engine");
+    let c = fabric.submit(sumup(1)).unwrap().wait().expect("clean run completes");
+    match c.output {
+        Output::Program { eax, .. } => assert_eq!(eax, 6),
+        other => panic!("expected program output, got {other:?}"),
+    }
+    fabric.shutdown();
+}
+
+#[test]
+fn injected_backend_error_is_typed_and_counted() {
+    let chaos = ChaosConfig::site(3, Site::Backend, 1.0, vec![FaultKind::BackendError]);
+    let fabric = Fabric::start_local(FabricConfig { sim_workers: 1, chaos, ..Default::default() });
+    match fabric.submit(sumup(1)).unwrap().wait() {
+        Err(FabricError::Backend { msg, .. }) => {
+            assert!(msg.contains("chaos"), "fault should self-identify: {msg}")
+        }
+        other => panic!("expected injected Backend error, got {other:?}"),
+    }
+    assert!(fabric.metrics.chaos_backend_faults.load(Ordering::Relaxed) >= 1);
+    fabric.shutdown();
+}
+
+#[test]
+fn injected_backend_panic_is_caught_and_the_lane_stays_alive() {
+    let chaos = ChaosConfig::site(4, Site::Backend, 0.5, vec![FaultKind::BackendPanic]);
+    let fabric = Fabric::start_local(FabricConfig { sim_workers: 1, chaos, ..Default::default() });
+    let mut panicked = 0;
+    let mut completed = 0;
+    for i in 0..12 {
+        match fabric.submit(sumup(i)).unwrap().wait() {
+            Err(FabricError::Backend { msg, .. }) if msg.contains("panicked") => panicked += 1,
+            Ok(_) => completed += 1,
+            other => panic!("expected completion or caught panic, got {other:?}"),
+        }
+    }
+    assert!(panicked >= 1, "rate 0.5 over 12 jobs should panic at least once");
+    assert!(completed >= 1, "the worker must keep serving after a caught panic");
+    assert_eq!(fabric.metrics.worker_panics.load(Ordering::Relaxed), panicked as u64);
+    fabric.shutdown();
+}
+
+#[test]
+fn wrong_result_fault_perturbs_but_completes() {
+    let chaos = ChaosConfig::site(5, Site::Backend, 1.0, vec![FaultKind::WrongResult]);
+    let fabric = Fabric::start_local(FabricConfig { sim_workers: 1, chaos, ..Default::default() });
+    let c = fabric.submit(sumup(1)).unwrap().wait().expect("wrong-result still completes");
+    match c.output {
+        // 1+2+3 = 6; the perturbation bumps eax by one.
+        Output::Program { eax, .. } => assert_eq!(eax, 7, "expected a perturbed sum"),
+        other => panic!("expected program output, got {other:?}"),
+    }
+    fabric.shutdown();
+}
+
+#[test]
+fn worker_stall_delays_but_completes_the_job() {
+    let chaos = ChaosConfig::site(6, Site::Dispatch, 1.0, vec![FaultKind::WorkerStall { ms: 1 }]);
+    let fabric = Fabric::start_local(FabricConfig { sim_workers: 1, chaos, ..Default::default() });
+    let c = fabric.submit(sumup(1)).unwrap().wait().expect("stalled job still completes");
+    match c.output {
+        Output::Program { eax, .. } => assert_eq!(eax, 6),
+        other => panic!("expected program output, got {other:?}"),
+    }
+    assert!(fabric.metrics.chaos_worker_stalls.load(Ordering::Relaxed) >= 1);
+    fabric.shutdown();
+}
+
+#[test]
+fn injected_guest_fault_is_typed_and_terminal() {
+    let chaos = ChaosConfig::site(7, Site::Guest, 1.0, vec![FaultKind::GuestFault]);
+    let fabric = Fabric::start_local(FabricConfig { sim_workers: 1, chaos, ..Default::default() });
+    match fabric.submit(sumup(1)).unwrap().wait() {
+        Err(e @ FabricError::GuestFault(_)) => {
+            assert!(!e.retryable(), "a guest fault re-fails deterministically; never retry it");
+            assert!(format!("{e}").contains("chaos"), "fault should self-identify: {e}");
+        }
+        other => panic!("expected injected GuestFault, got {other:?}"),
+    }
+    assert!(fabric.metrics.chaos_guest_faults.load(Ordering::Relaxed) >= 1);
+    fabric.shutdown();
+}
+
+/// Fails its first `fail_first` executes with a retryable Backend error,
+/// then serves normally — the retry ladder's happy customer.
+struct FlakyBackend {
+    calls: AtomicU64,
+    fail_first: u64,
+}
+
+impl Backend for FlakyBackend {
+    fn name(&self) -> &str {
+        "flaky"
+    }
+    fn execute(&self, _job: BackendJob) -> Result<BackendReply, FabricError> {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst);
+        if n < self.fail_first {
+            return Err(FabricError::Backend {
+                name: "flaky".into(),
+                msg: format!("transient failure {n}"),
+            });
+        }
+        Ok(BackendReply::Program { eax: 99, clocks: 1, cores: 1, data: vec![] })
+    }
+}
+
+#[test]
+fn call_with_retry_rides_out_transient_backend_faults() {
+    let registry = BackendRegistry::new().register(
+        "flaky",
+        BackendClass::Program,
+        Box::new(|| {
+            Ok(Box::new(FlakyBackend { calls: AtomicU64::new(0), fail_first: 2 })
+                as Box<dyn Backend>)
+        }),
+    );
+    let fabric =
+        Fabric::start(FabricConfig { sim_workers: 1, ..Default::default() }, registry);
+    let client = fabric.client();
+    let policy = RetryPolicy::default().with_attempts(5);
+    let c = client.call_with_retry(sumup(1), &policy).expect("retries reach the good call");
+    match c.output {
+        Output::Program { eax, .. } => assert_eq!(eax, 99),
+        other => panic!("expected program output, got {other:?}"),
+    }
+    assert_eq!(fabric.metrics.retries.load(Ordering::Relaxed), 2);
+    assert_eq!(fabric.metrics.client("chaos").retries.load(Ordering::Relaxed), 2);
+    assert_eq!(fabric.metrics.retry_exhausted.load(Ordering::Relaxed), 0);
+    fabric.shutdown();
+}
+
+#[test]
+fn retry_exhaustion_surfaces_the_last_typed_error() {
+    let registry = BackendRegistry::new().register(
+        "flaky",
+        BackendClass::Program,
+        Box::new(|| {
+            Ok(Box::new(FlakyBackend { calls: AtomicU64::new(0), fail_first: u64::MAX })
+                as Box<dyn Backend>)
+        }),
+    );
+    let fabric =
+        Fabric::start(FabricConfig { sim_workers: 1, ..Default::default() }, registry);
+    let client = fabric.client();
+    let policy = RetryPolicy::default().with_attempts(3);
+    match client.call_with_retry(sumup(1), &policy) {
+        Err(FabricError::Backend { name, .. }) => assert_eq!(name, "flaky"),
+        other => panic!("expected exhausted Backend error, got {other:?}"),
+    }
+    assert_eq!(fabric.metrics.retries.load(Ordering::Relaxed), 2, "attempts 2 and 3");
+    assert_eq!(fabric.metrics.retry_exhausted.load(Ordering::Relaxed), 1);
+    fabric.shutdown();
+}
+
+/// Panics on every execute — the satellite regression for worker panic
+/// safety: the job must resolve with a typed error (not `Shutdown` from
+/// a vanished reply sender), the panic must be counted, and the lane
+/// must survive to serve the next job.
+struct AlwaysPanics;
+
+impl Backend for AlwaysPanics {
+    fn name(&self) -> &str {
+        "grenade"
+    }
+    fn execute(&self, _job: BackendJob) -> Result<BackendReply, FabricError> {
+        panic!("deliberate test panic");
+    }
+}
+
+#[test]
+fn panicking_registry_backend_yields_typed_errors_not_dead_lanes() {
+    let registry = BackendRegistry::new().register(
+        "grenade",
+        BackendClass::Program,
+        Box::new(|| Ok(Box::new(AlwaysPanics) as Box<dyn Backend>)),
+    );
+    let fabric =
+        Fabric::start(FabricConfig { sim_workers: 1, ..Default::default() }, registry);
+    for i in 0..3 {
+        match fabric.submit(sumup(i)).unwrap().wait() {
+            Err(FabricError::Backend { name, msg }) => {
+                assert_eq!(name, "grenade");
+                assert!(
+                    msg.contains("panicked") && msg.contains("deliberate test panic"),
+                    "payload should surface: {msg}"
+                );
+            }
+            other => panic!("job {i}: expected typed Backend error, got {other:?}"),
+        }
+    }
+    assert_eq!(fabric.metrics.worker_panics.load(Ordering::Relaxed), 3);
+    fabric.shutdown();
+}
+
+// ----------------------------------------------------------------------
+// registry failover accounting under injected init faults (satellite)
+// ----------------------------------------------------------------------
+
+fn failing_init_factory() -> empa::coordinator::BackendFactory {
+    Box::new(|| anyhow::bail!("injected init fault"))
+}
+
+#[test]
+fn fail_then_succeed_chain_counts_exactly_one_init_failover() {
+    let empa_cfg = FabricConfig::default().empa;
+    let registry = BackendRegistry::new()
+        .register("bad", BackendClass::Program, failing_init_factory())
+        .register(
+            "sim",
+            BackendClass::Program,
+            Box::new(move || Ok(Box::new(SimBackend::new(empa_cfg.clone())) as Box<dyn Backend>)),
+        );
+    let fabric =
+        Fabric::start(FabricConfig { sim_workers: 1, ..Default::default() }, registry);
+    let c = fabric.submit(sumup(1)).unwrap().wait().expect("failover serves the job");
+    match c.output {
+        Output::Program { eax, .. } => assert_eq!(eax, 6),
+        other => panic!("expected program output, got {other:?}"),
+    }
+    let m = &fabric.metrics;
+    assert_eq!(m.backend("bad").init_failures.load(Ordering::Relaxed), 1);
+    assert_eq!(m.backend("sim").init_ok.load(Ordering::Relaxed), 1);
+    assert_eq!(m.failovers.load(Ordering::Relaxed), 1, "one entry failed over, once");
+    fabric.shutdown();
+}
+
+#[test]
+fn all_fail_chain_is_a_typed_error_not_a_failover() {
+    let registry = BackendRegistry::new()
+        .register("bad-a", BackendClass::Program, failing_init_factory())
+        .register("bad-b", BackendClass::Program, failing_init_factory());
+    let fabric =
+        Fabric::start(FabricConfig { sim_workers: 1, ..Default::default() }, registry);
+    match fabric.submit(sumup(1)).unwrap().wait() {
+        Err(FabricError::Backend { msg, .. }) => {
+            assert!(msg.contains("init"), "init failure should say so: {msg}")
+        }
+        other => panic!("expected typed Backend error, got {other:?}"),
+    }
+    let m = &fabric.metrics;
+    assert_eq!(m.backend("bad-a").init_failures.load(Ordering::Relaxed), 1);
+    assert_eq!(m.backend("bad-b").init_failures.load(Ordering::Relaxed), 1);
+    assert_eq!(m.failovers.load(Ordering::Relaxed), 0, "nothing failed *over*");
+    fabric.shutdown();
+}
+
+#[test]
+fn mass_chain_failover_counts_once_per_failed_batch() {
+    // Mass class: a dead-on-init entry ahead of the native accelerator.
+    let registry = BackendRegistry::new()
+        .register("bad-mass", BackendClass::Mass, failing_init_factory())
+        .register_accel("native", || Ok(Box::new(NativeAccel) as Box<dyn Accelerator>));
+    let fabric =
+        Fabric::start(FabricConfig { sim_workers: 1, ..Default::default() }, registry);
+    let c = fabric
+        .submit(JobRequest::new(RequestKind::mass_sum(vec![2.0f32; 64])).with_client("chaos"))
+        .unwrap()
+        .wait()
+        .expect("mass failover serves the batch");
+    match &c.output {
+        Output::Scalars(v) => assert!((v[0] - 128.0).abs() < 1e-3),
+        other => panic!("expected scalars, got {other:?}"),
+    }
+    let m = &fabric.metrics;
+    assert_eq!(m.backend("bad-mass").init_failures.load(Ordering::Relaxed), 1);
+    assert!(m.failovers.load(Ordering::Relaxed) >= 1, "the failed entry must be counted");
+    fabric.shutdown();
+}

@@ -20,6 +20,7 @@ fn plane_with(quota: QuotaConfig, slo: SloConfig) -> ServePlane {
         quota,
         slo,
         max_frame: MAX_FRAME,
+        auth_token: None,
     })
     .expect("serve plane binds loopback")
 }
@@ -202,6 +203,82 @@ fn pipelined_submits_all_get_replies() {
         }
     }
     assert_eq!(seen.len(), n as usize);
+    plane.shutdown();
+}
+
+#[test]
+fn auth_token_gates_submits_per_tenant() {
+    let plane = ServePlane::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        fabric: FabricConfig { sim_workers: 2, ..Default::default() },
+        quota: QuotaConfig::default(),
+        slo: quiet_slo(),
+        max_frame: MAX_FRAME,
+        auth_token: Some("hunter2".to_string()),
+    })
+    .expect("serve plane binds loopback");
+    let addr = plane.local_addr();
+
+    let job = |tag: &str| JobRequest::new(RequestKind::sumup(Mode::No, vec![1, 2])).with_client(tag);
+
+    // The right token is admitted and served.
+    let mut good = WireClient::connect(addr).unwrap().with_token("hunter2");
+    assert!(good.call(&job("good")).unwrap().is_ok(), "token holder gets served");
+
+    // No token and a wrong token both get the typed refusal, naming the
+    // tenant that asserted itself.
+    let mut naked = WireClient::connect(addr).unwrap();
+    let mut wrong = WireClient::connect(addr).unwrap().with_token("hunter3");
+    for c in [&mut naked, &mut wrong] {
+        match c.call(&job("sneaky")).unwrap() {
+            Err(FabricError::Unauthorized { tenant }) => assert_eq!(tenant, "sneaky"),
+            other => panic!("expected Unauthorized, got {other:?}"),
+        }
+    }
+
+    // Refusals are ledgered globally and on the tenant's row; the
+    // admitted tenant's bracket stays in the original format.
+    let text = plane.metrics().render();
+    assert!(text.contains("unauthorized=2"), "global counter in:\n{text}");
+    assert!(
+        text.contains("sneaky[submitted=2 accepted=0 shed=0 quota_denied=0 unauthorized=2]"),
+        "sneaky ledger in:\n{text}"
+    );
+    assert!(
+        text.contains("good[submitted=1 accepted=1 shed=0 quota_denied=0]"),
+        "good ledger in:\n{text}"
+    );
+    plane.shutdown();
+}
+
+#[test]
+fn mid_job_connection_drop_is_reaped_not_leaked() {
+    // Submit and immediately drop the socket: the job is orphaned — its
+    // reply has nowhere to go — but the fabric must still run it to
+    // completion and the pump must reap it (write into the dead socket,
+    // shrug, move on) rather than leak the in-flight entry or hang.
+    let plane = plane_with(QuotaConfig::default(), quiet_slo());
+    {
+        let mut c = WireClient::connect(plane.local_addr()).unwrap();
+        let req = JobRequest::new(RequestKind::sumup(Mode::Sumup, (0..64).collect()))
+            .with_client("ghost");
+        c.submit(&req).unwrap();
+        // `c` drops here; the TCP connection closes under the job.
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let done = plane.metrics().completed.load(std::sync::atomic::Ordering::Relaxed);
+        if done >= 1 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "orphaned job never completed; the pump leaked it"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // A clean shutdown proves the pump thread didn't die on the dead
+    // socket either.
     plane.shutdown();
 }
 

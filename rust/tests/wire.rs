@@ -58,7 +58,7 @@ fn every_request_variant_round_trips() {
     assert_eq!(decode_request(&encode_request(&m)).unwrap(), m);
 }
 
-/// Every error variant the wire can carry (all twelve codes).
+/// Every error variant the wire can carry (all thirteen codes).
 fn all_errors() -> Vec<FabricError> {
     vec![
         FabricError::QueueFull,
@@ -73,6 +73,7 @@ fn all_errors() -> Vec<FabricError> {
         FabricError::Shutdown,
         FabricError::QuotaExceeded { tenant: "mallory".to_string() },
         FabricError::Overloaded { rule: "staged-backlog".to_string() },
+        FabricError::Unauthorized { tenant: "mallory".to_string() },
     ]
 }
 
@@ -229,4 +230,72 @@ fn mutation_sweep_never_panics() {
             let _ = decode_reply(&base[..end]);
         }
     }
+}
+
+/// A reader that hands out its bytes in fixed chunks (never more than
+/// `chunk` per `read` call) — a TCP stream under a hostile scheduler.
+struct Chunked<'a> {
+    data: &'a [u8],
+    chunk: usize,
+}
+
+impl std::io::Read for Chunked<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.data.len().min(self.chunk).min(buf.len());
+        buf[..n].copy_from_slice(&self.data[..n]);
+        self.data = &self.data[n..];
+        Ok(n)
+    }
+}
+
+/// The partial-write/short-read sweep: split a valid framed message at
+/// every byte boundary. The head alone must produce a clean `None` (cut
+/// at offset 0), or a typed `Truncated` — never a panic; the head
+/// followed by the tail across separate `read` calls must reassemble
+/// into the original payload (`read_full` keeps reading through short
+/// returns).
+#[test]
+fn every_byte_boundary_split_is_typed_or_reassembled() {
+    let payload = encode_request(&WireRequest::submit(
+        9,
+        &JobRequest::new(RequestKind::sumup(Mode::For, vec![4, 5, 6])).with_client("splitter"),
+    ));
+    let mut framed = Vec::new();
+    write_frame(&mut framed, &payload, MAX_FRAME).unwrap();
+
+    for cut in 0..=framed.len() {
+        // The head alone: a short read the peer never finishes.
+        let mut head = &framed[..cut];
+        match read_frame(&mut head, MAX_FRAME) {
+            Ok(None) => assert_eq!(cut, 0, "clean EOF only at the frame boundary"),
+            Ok(Some(p)) => {
+                assert_eq!(cut, framed.len());
+                assert_eq!(p, payload);
+            }
+            Err(CodecError::Truncated { .. }) => assert!(cut > 0 && cut < framed.len()),
+            Err(other) => panic!("cut {cut}: unexpected {other:?}"),
+        }
+
+        // Head + tail delivered across separate reads: must reassemble.
+        let mut both = Chunked { data: &framed, chunk: cut.max(1) };
+        let got = read_frame(&mut both, MAX_FRAME)
+            .unwrap_or_else(|e| panic!("chunk {cut}: {e:?}"))
+            .expect("full frame present");
+        assert_eq!(got, payload);
+    }
+}
+
+/// One byte per `read` call — the pathological drip-feed. The frame
+/// still decodes, proving the length prefix and payload reads both loop
+/// instead of trusting one `read` to fill the buffer.
+#[test]
+fn drip_fed_frame_decodes_byte_by_byte() {
+    let payload = encode_request(&WireRequest::Metrics { id: 3 });
+    let mut framed = Vec::new();
+    write_frame(&mut framed, &payload, MAX_FRAME).unwrap();
+
+    let mut drip = Chunked { data: &framed, chunk: 1 };
+    let got = read_frame(&mut drip, MAX_FRAME).unwrap().expect("frame present");
+    assert_eq!(got, payload);
+    assert_eq!(decode_request(&got).unwrap(), WireRequest::Metrics { id: 3 });
 }
